@@ -1,0 +1,54 @@
+//! Traffic explorer: every Fig. 8–12 scenario on every topology (mesh,
+//! AMP, torus, flattened butterfly), with the analytical channel-load
+//! model cross-checked against the cycle-level queueing simulator.
+//!
+//! Run: `cargo run --release --example traffic_explorer [rows cols]`
+
+use pipeorgan::config::TopologyKind;
+use pipeorgan::energy::EnergyModel;
+use pipeorgan::noc::Topology;
+use pipeorgan::sim::{analyze, simulate_interval};
+use pipeorgan::traffic::{derive_flows, scenarios, Flow};
+use pipeorgan::util::table::{fnum, Table};
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let rows: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let cols: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(16);
+    let em = EnergyModel::default();
+    let mut table = Table::new(
+        &format!("traffic explorer — {rows}x{cols} array"),
+        &["scenario", "topology", "worst load", "word-hops", "NoC energy", "sim makespan", "sim/analytic"],
+    );
+    for scen in scenarios::all(rows, cols) {
+        for kind in [
+            TopologyKind::Mesh,
+            TopologyKind::Amp,
+            TopologyKind::Torus,
+            TopologyKind::FlattenedButterfly,
+        ] {
+            let topo = Topology::new(kind, rows, cols);
+            let flows: Vec<Flow> = derive_flows(&topo, &scen.placement, &scen.handoffs)
+                .into_iter()
+                .map(|f| Flow { words_per_interval: f.words_per_interval.ceil(), ..f })
+                .collect();
+            let a = analyze(&topo, &flows);
+            let sim = simulate_interval(&topo, &flows, 1);
+            let ratio = if a.worst_channel_load > 0.0 {
+                sim.makespan as f64 / a.worst_channel_load
+            } else {
+                1.0
+            };
+            table.row(&[
+                scen.name.to_string(),
+                kind.name().to_string(),
+                fnum(a.worst_channel_load),
+                fnum(a.total_word_hops),
+                fnum(em.noc_interval_energy(&a)),
+                sim.makespan.to_string(),
+                fnum(ratio),
+            ]);
+        }
+    }
+    print!("{}", table.to_markdown());
+}

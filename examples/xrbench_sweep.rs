@@ -1,0 +1,25 @@
+//! Full XR-bench-like evaluation sweep — regenerates the paper's headline
+//! results (Fig. 13 performance, Fig. 14 DRAM accesses) plus the stage-1
+//! outputs (Fig. 16 depths, Fig. 17 granularities), in parallel across
+//! worker threads.
+//!
+//! Run: `cargo run --release --example xrbench_sweep [reports_dir]`
+
+use pipeorgan::config::ArchConfig;
+
+fn main() -> anyhow::Result<()> {
+    let out = std::env::args().nth(1).unwrap_or_else(|| "reports".into());
+    let cfg = ArchConfig::default();
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    for r in [
+        pipeorgan::report::fig13_performance(&cfg, workers),
+        pipeorgan::report::fig14_dram(&cfg, workers),
+        pipeorgan::report::fig16_depth(&cfg),
+        pipeorgan::report::fig17_granularity(&cfg),
+    ] {
+        r.emit(&out)?;
+        println!();
+    }
+    println!("reports written to {out}/");
+    Ok(())
+}

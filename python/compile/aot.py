@@ -1,0 +1,135 @@
+"""AOT lowering: JAX/Pallas programs → HLO **text** artifacts + manifest.
+
+HLO text (not `.serialize()` / serialized HloModuleProto) is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+which the `xla` crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation (return_tuple=True) → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *args):
+    return jax.jit(fn).lower(*args)
+
+
+def spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    x, w1, w2 = model.example_inputs()
+    s = jax.ShapeDtypeStruct
+    f32 = jnp.float32
+
+    programs = {}
+
+    # --- pipelined (fused) segment: intermediate band stays in VMEM -------
+    programs["segment_fused"] = {
+        "lowered": lower(
+            model.segment_fused, s(x.shape, f32), s(w1.shape, f32), s(w2.shape, f32)
+        ),
+        "inputs": [spec(x.shape), spec(w1.shape), spec(w2.shape)],
+        "output": spec((model.H, model.W, model.C_OUT)),
+        "role": "pipelined depth-2 segment (fused, VMEM intermediate)",
+    }
+
+    # --- op-by-op per-layer programs ---------------------------------------
+    programs["layer0"] = {
+        "lowered": lower(model.layer0, s(x.shape, f32), s(w1.shape, f32)),
+        "inputs": [spec(x.shape), spec(w1.shape)],
+        "output": spec((model.H, model.W, model.C_MID)),
+        "role": "op-by-op layer 1 (HBM round trip after)",
+    }
+    programs["layer1"] = {
+        "lowered": lower(
+            model.layer1, s((model.H, model.W, model.C_MID), f32), s(w2.shape, f32)
+        ),
+        "inputs": [spec((model.H, model.W, model.C_MID)), spec(w2.shape)],
+        "output": spec((model.H, model.W, model.C_OUT)),
+        "role": "op-by-op layer 2",
+    }
+
+    # --- per-interval tile programs for the Rust pipelined executor --------
+    slab0 = (model.BAND + model.R - 1, model.W + model.S - 1, model.C_IN)
+    slab1 = (model.BAND + model.R - 1, model.W + model.S - 1, model.C_MID)
+    programs["tile_layer0"] = {
+        "lowered": lower(model.conv_band_tile, s(slab0, f32), s(w1.shape, f32)),
+        "inputs": [spec(slab0), spec(w1.shape)],
+        "output": spec((model.BAND, model.W, model.C_MID)),
+        "role": "stage-0 pipeline-interval tile",
+    }
+    programs["tile_layer1"] = {
+        "lowered": lower(model.conv_band_tile, s(slab1, f32), s(w2.shape, f32)),
+        "inputs": [spec(slab1), spec(w2.shape)],
+        "output": spec((model.BAND, model.W, model.C_OUT)),
+        "role": "stage-1 pipeline-interval tile",
+    }
+
+    # --- quickstart GEMM -----------------------------------------------------
+    m = k = n = 64
+    programs["gemm"] = {
+        "lowered": lower(model.gemm_program, s((m, k), f32), s((k, n), f32)),
+        "inputs": [spec((m, k)), spec((k, n))],
+        "output": spec((m, n)),
+        "role": "quickstart tiled GEMM (Eq. 1)",
+    }
+
+    manifest = {
+        "segment": {
+            "h": model.H,
+            "w": model.W,
+            "c_in": model.C_IN,
+            "c_mid": model.C_MID,
+            "c_out": model.C_OUT,
+            "band": model.BAND,
+            "r": model.R,
+            "s": model.S,
+        },
+        "programs": {},
+    }
+    for name, info in programs.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(info["lowered"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["programs"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": info["inputs"],
+            "output": info["output"],
+            "role": info["role"],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels (build-time only; interpret=True on CPU).
+
+- gemm_tile:     tiled GEMM with a VMEM accumulator (Eq. 1)
+- conv_tile:     row-band conv2d / depthwise conv2d (the fine-grained
+                 pipelining granularity of Fig. 3)
+- fused_segment: fused producer→consumer conv pair — the paper's
+                 inter-operation pipelining re-expressed as a VMEM-resident
+                 intermediate band (DESIGN.md §Hardware-Adaptation)
+- ref:           pure-jnp oracle for all of the above
+"""
+
+from . import conv_tile, fused_segment, gemm_tile, ref
+
+__all__ = ["conv_tile", "fused_segment", "gemm_tile", "ref"]

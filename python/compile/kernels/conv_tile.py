@@ -1,0 +1,108 @@
+"""L1 Pallas kernels: row-tiled conv2d and depthwise conv2d.
+
+The conv kernel computes a *row band* of the output per grid step — exactly
+the paper's fine-grained pipelining granularity (one H-row band of the
+intermediate tensor, Fig. 3). Each step reads its band plus the (R−1)-row
+halo from the padded input with a dynamic slice; on a real TPU the same
+schedule is a double-buffered HBM→VMEM row stream (overlapping halo windows
+cannot be expressed as disjoint BlockSpec blocks, so the slab is indexed
+inside the kernel).
+
+Weight layout RSCK; activations HWC; stride 1; SAME padding applied here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_band_kernel(x_ref, w_ref, o_ref, *, r, s, band):
+    """One output row-band.
+
+    x_ref: [H + r - 1, W + s - 1, C] (whole padded input)
+    w_ref: [r, s, C, K]
+    o_ref: [band, W, K]
+    """
+    i = pl.program_id(0)
+    _, wd, _ = o_ref.shape
+    slab = x_ref[pl.ds(i * band, band + r - 1), :, :]  # band + halo rows
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for dr in range(r):
+        for ds in range(s):
+            patch = slab[dr : dr + band, ds : ds + wd, :].astype(jnp.float32)
+            wk = w_ref[dr, ds].astype(jnp.float32)  # [C, K]
+            acc = acc + jax.lax.dot_general(
+                patch,
+                wk,
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[...] = acc
+
+
+def conv2d(x, w, *, band=8):
+    """x: [H, W, C], w: [R, S, C, K] → [H, W, K] (stride 1, SAME)."""
+    h, wd, _ = x.shape
+    r, s, _, k = w.shape
+    band = min(band, h)
+    assert h % band == 0, f"band {band} must divide H={h}"
+    pr, ps = r // 2, s // 2
+    xp = jnp.pad(x, ((pr, pr), (ps, ps), (0, 0)))
+    hp, wp, c = xp.shape
+    return pl.pallas_call(
+        functools.partial(_conv_band_kernel, r=r, s=s, band=band),
+        grid=(h // band,),
+        in_specs=[
+            pl.BlockSpec((hp, wp, c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((r, s, c, k), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((band, wd, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, wd, k), jnp.float32),
+        interpret=True,
+    )(xp, w)
+
+
+def _dw_band_kernel(x_ref, w_ref, o_ref, *, r, s, band):
+    """Depthwise band: x [H+r-1, W+s-1, C] whole, w [r,s,C], o [band,W,C]."""
+    i = pl.program_id(0)
+    _, wd, _ = o_ref.shape
+    slab = x_ref[pl.ds(i * band, band + r - 1), :, :]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for dr in range(r):
+        for ds in range(s):
+            acc = acc + slab[dr : dr + band, ds : ds + wd, :].astype(
+                jnp.float32
+            ) * w_ref[dr, ds].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+def dwconv2d(x, w, *, band=8):
+    """x: [H, W, C], w: [R, S, C] → [H, W, C] (stride 1, SAME)."""
+    h, wd, _ = x.shape
+    r, s, _ = w.shape
+    band = min(band, h)
+    assert h % band == 0, f"band {band} must divide H={h}"
+    pr, ps = r // 2, s // 2
+    xp = jnp.pad(x, ((pr, pr), (ps, ps), (0, 0)))
+    hp, wp, c = xp.shape
+    return pl.pallas_call(
+        functools.partial(_dw_band_kernel, r=r, s=s, band=band),
+        grid=(h // band,),
+        in_specs=[
+            pl.BlockSpec((hp, wp, c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((r, s, c), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((band, wd, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, wd, c), jnp.float32),
+        interpret=True,
+    )(xp, w)
+
+
+def conv_vmem_footprint_bytes(h, w, c, k, r, *, band=8, dtype_bytes=4):
+    """Modelled VMEM residency of one grid step: input slab + weights +
+    output band (perf-model input; see DESIGN.md §Perf)."""
+    return dtype_bytes * (
+        (band + r - 1) * (w + r - 1) * c + r * r * c * k + band * w * k
+    )

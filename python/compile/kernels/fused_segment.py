@@ -1,0 +1,192 @@
+"""L1 Pallas kernel: FUSED producer→consumer conv pair.
+
+This is the paper's core insight re-expressed for TPU (DESIGN.md
+§Hardware-Adaptation): instead of writing layer 1's output feature map to
+HBM and reading it back for layer 2 (the op-by-op global-buffer round trip
+of Fig. 1), one grid step produces an intermediate row band *in VMEM* and
+immediately consumes it into layer 2's output band — the intermediate
+tensor never exists in HBM. The grid step is the pipeline interval; the
+VMEM band is the pipelining granularity.
+
+Halo handling: to emit `band` valid rows of layer 2, the step computes
+`band + r2 - 1` intermediate rows from `band + r1 + r2 - 2` input rows.
+Adjacent steps recompute the halo rows — the classic fused-layer trade of
+a little redundant compute for eliminated traffic (Alwani et al., 2016),
+which is also how the paper's checkerboard PEs avoid waiting on neighbors.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(x_ref, w1_ref, w2_ref, o_ref, *, r1, s1, r2, s2, band, h, w):
+    """x_ref: whole padded input [H + r1 + r2 - 2, W + s1 + s2 - 2, C].
+
+    w1_ref: [r1, s1, C, K1]; w2_ref: [r2, s2, K1, K2];
+    o_ref: [band, W, K2]. `h`/`w` are the true feature-map dims, needed to
+    zero the intermediate halo (layer 2's SAME padding must see zeros, not
+    values convolved from layer 1's padding region).
+    """
+    i = pl.program_id(0)
+    _, wd, _ = o_ref.shape
+    mid_rows = band + r2 - 1
+    in_rows = mid_rows + r1 - 1
+    mid_cols = wd + s2 - 1
+    slab = x_ref[pl.ds(i * band, in_rows), :, :]
+
+    # ---- producer: layer-1 conv + ReLU, intermediate band stays in VMEM.
+    k1 = w1_ref.shape[3]
+    mid = jnp.zeros((mid_rows, mid_cols, k1), jnp.float32)
+    for dr in range(r1):
+        for ds in range(s1):
+            patch = slab[dr : dr + mid_rows, ds : ds + mid_cols, :].astype(jnp.float32)
+            mid = mid + jax.lax.dot_general(
+                patch,
+                w1_ref[dr, ds].astype(jnp.float32),
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    mid = jnp.maximum(mid, 0.0)
+    # Zero the intermediate positions outside the real feature map: the
+    # band's halo rows at the top/bottom edges and the side columns belong
+    # to layer 2's padding, which op-by-op execution sees as zeros.
+    grow = i * band - (r2 // 2) + jax.lax.broadcasted_iota(jnp.int32, (mid_rows, 1, 1), 0)
+    gcol = -(s2 // 2) + jax.lax.broadcasted_iota(jnp.int32, (1, mid_cols, 1), 1)
+    mask = ((grow >= 0) & (grow < h)) & ((gcol >= 0) & (gcol < w))
+    mid = jnp.where(mask, mid, 0.0)
+
+    # ---- consumer: layer-2 conv reads the VMEM-resident band directly.
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for dr in range(r2):
+        for ds in range(s2):
+            patch = mid[dr : dr + band, ds : ds + wd, :]
+            acc = acc + jax.lax.dot_general(
+                patch,
+                w2_ref[dr, ds].astype(jnp.float32),
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[...] = jnp.maximum(acc, 0.0)
+
+
+def fused_conv_pair(x, w1, w2, *, band=8):
+    """relu(conv(relu(conv(x, w1)), w2)) with the intermediate in VMEM.
+
+    x: [H, W, C]; w1: [R1, S1, C, K1]; w2: [R2, S2, K1, K2] → [H, W, K2].
+    Stride 1, SAME padding for both layers.
+    """
+    h, wd, _ = x.shape
+    r1, s1, _, _ = w1.shape
+    r2, s2, _, k2 = w2.shape
+    band = min(band, h)
+    assert h % band == 0, f"band {band} must divide H={h}"
+    # Pad once for both layers.
+    pr = (r1 // 2) + (r2 // 2)
+    ps = (s1 // 2) + (s2 // 2)
+    xp = jnp.pad(x, ((pr, pr), (ps, ps), (0, 0)))
+    hp, wp, c = xp.shape
+    k1 = w1.shape[3]
+    return pl.pallas_call(
+        functools.partial(
+            _fused_kernel, r1=r1, s1=s1, r2=r2, s2=s2, band=band, h=h, w=wd
+        ),
+        grid=(h // band,),
+        in_specs=[
+            pl.BlockSpec((hp, wp, c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((r1, s1, c, k1), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((r2, s2, k1, k2), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((band, wd, k2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, wd, k2), jnp.float32),
+        interpret=True,
+    )(xp, w1, w2)
+
+
+def _fused_chain_kernel(x_ref, *rest, rs, band, h, w):
+    """Variable-depth fused chain (the paper's flexible pipeline depth at
+    L1): weight refs `rest[:-1]`, output ref `rest[-1]`. `rs[i]` is the
+    (square) filter size of layer i."""
+    w_refs = rest[:-1]
+    o_ref = rest[-1]
+    i = pl.program_id(0)
+    depth = len(w_refs)
+    _, wd, _ = o_ref.shape
+    # Rows/cols of intermediate needed at each level, innermost (output)
+    # first: level d needs band + sum of halo of deeper levels.
+    halos = [r // 2 for r in rs]
+    # Level 0 = first conv's output; deeper levels need more halo.
+    def rows_at(level):
+        return band + 2 * sum(halos[level + 1 :])
+
+    def cols_at(level):
+        return wd + 2 * sum(halos[level + 1 :])
+
+    in_rows = rows_at(0) + rs[0] - 1
+    cur = x_ref[pl.ds(i * band, in_rows), :, :]
+    for level, (w_ref, r) in enumerate(zip(w_refs, rs)):
+        out_rows = rows_at(level)
+        out_cols = cols_at(level)
+        k = w_ref.shape[3]
+        acc = jnp.zeros((out_rows, out_cols, k), jnp.float32)
+        for dr in range(r):
+            for ds in range(r):
+                patch = cur[dr : dr + out_rows, ds : ds + out_cols, :].astype(
+                    jnp.float32
+                )
+                acc = acc + jax.lax.dot_general(
+                    patch,
+                    w_ref[dr, ds].astype(jnp.float32),
+                    (((2,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+        acc = jnp.maximum(acc, 0.0)
+        # Zero this level's halo that falls outside the real feature map
+        # (SAME padding of the *next* layer must see zeros).
+        pad_r = sum(halos[level + 1 :])
+        pad_c = sum(halos[level + 1 :])
+        grow = i * band - pad_r + jax.lax.broadcasted_iota(
+            jnp.int32, (out_rows, 1, 1), 0
+        )
+        gcol = -pad_c + jax.lax.broadcasted_iota(jnp.int32, (1, out_cols, 1), 1)
+        mask = ((grow >= 0) & (grow < h)) & ((gcol >= 0) & (gcol < w))
+        cur = jnp.where(mask, acc, 0.0)
+    o_ref[...] = cur
+
+
+def fused_conv_chain(x, weights, *, band=8):
+    """Fuse an arbitrary-depth conv+ReLU chain with all intermediates in
+    VMEM. `weights[i]`: [R_i, R_i, C_i, C_{i+1}] (square filters, stride 1,
+    SAME). Returns [H, W, C_last]."""
+    import functools as _ft
+
+    h, wd, _ = x.shape
+    rs = tuple(wt.shape[0] for wt in weights)
+    band = min(band, h)
+    assert h % band == 0, f"band {band} must divide H={h}"
+    pr = sum(r // 2 for r in rs)
+    xp = jnp.pad(x, ((pr, pr), (pr, pr), (0, 0)))
+    hp, wp, c = xp.shape
+    k_last = weights[-1].shape[3]
+    in_specs = [pl.BlockSpec((hp, wp, c), lambda i: (0, 0, 0))]
+    for wt in weights:
+        shape = wt.shape
+        in_specs.append(pl.BlockSpec(shape, lambda i, _s=shape: (0,) * len(_s)))
+    return pl.pallas_call(
+        _ft.partial(_fused_chain_kernel, rs=rs, band=band, h=h, w=wd),
+        grid=(h // band,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((band, wd, k_last), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, wd, k_last), jnp.float32),
+        interpret=True,
+    )(xp, *weights)
+
+
+def fused_hbm_traffic_words(h, w, c, k1, k2):
+    """Modelled HBM words for the fused pair vs op-by-op: the saving is the
+    intermediate tensor's round trip (written + read), h·w·k1 each way."""
+    fused = h * w * c + h * w * k2  # in + out (weights negligible here)
+    op_by_op = fused + 2 * h * w * k1
+    return fused, op_by_op

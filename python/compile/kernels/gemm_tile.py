@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: tiled GEMM (Eq. 1 of the paper).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each grid step owns a
+(bm × bn) output tile resident in VMEM and marches over the contracted
+dimension in bk-sized slabs — the BlockSpec index maps express the
+HBM↔VMEM schedule the paper expresses with PE tiles, and the (bm × bn)
+accumulator is the "register file" the pipeline granularity is compared
+against. interpret=True everywhere: this is the CPU correctness path; a
+real-TPU lowering would emit a Mosaic custom-call the CPU PJRT client
+cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps):
+    """One (bm, bn) output tile; grid dim 2 walks the contraction slabs."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kk == k_steps - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+def gemm(a, b, *, bm=32, bn=32, bk=32):
+    """`[m,k] × [k,n] → [m,n]` (f32 accumulation) with a VMEM accumulator.
+
+    Tile sizes are clamped to the problem and must divide it exactly —
+    shapes are padded by the caller (model.py) when needed.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"tile sizes must divide the problem: {(m, n, k)} vs {(bm, bn, bk)}"
+    )
+    k_steps = k // bk
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=k_steps),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pl.MemorySpace.ANY(shape=(bm, bn), dtype=jnp.float32)],
+        interpret=True,
+    )(a, b)
+
+
+def vmem_footprint_bytes(m, n, k, *, bm=32, bn=32, bk=32, dtype_bytes=4):
+    """Modelled VMEM residency of one grid step (perf-model input for
+    DESIGN.md §Perf — interpret=True wallclock is not a TPU proxy)."""
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    return dtype_bytes * (bm * bk + bk * bn + 2 * bm * bn)  # A, B, acc+out

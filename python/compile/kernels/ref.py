@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracle for every Pallas kernel (build-time only).
+
+All activations are NHWC (batch folded out — the paper's Table III runs
+batch 1), weights are RSCK; convolutions are stride-1 with symmetric zero
+padding ("SAME" for odd filters).
+"""
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b):
+    """[m,k] x [k,n] -> [m,n] in f32 accumulation."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def conv2d_ref(x, w):
+    """x: [H,W,C], w: [R,S,C,K] -> [H,W,K], stride 1, SAME padding."""
+    h, wd, _ = x.shape
+    r, s, _, k = w.shape
+    pr, ps = r // 2, s // 2
+    xp = jnp.pad(x, ((pr, pr), (ps, ps), (0, 0)))
+    out = jnp.zeros((h, wd, k), jnp.float32)
+    for dr in range(r):
+        for ds in range(s):
+            patch = xp[dr : dr + h, ds : ds + wd, :].astype(jnp.float32)
+            out = out + jnp.einsum("hwc,ck->hwk", patch, w[dr, ds].astype(jnp.float32))
+    return out
+
+
+def dwconv2d_ref(x, w):
+    """Depthwise: x: [H,W,C], w: [R,S,C] -> [H,W,C], stride 1, SAME."""
+    h, wd, _ = x.shape
+    r, s, _ = w.shape
+    pr, ps = r // 2, s // 2
+    xp = jnp.pad(x, ((pr, pr), (ps, ps), (0, 0)))
+    out = jnp.zeros(x.shape, jnp.float32)
+    for dr in range(r):
+        for ds in range(s):
+            out = out + xp[dr : dr + h, ds : ds + wd, :].astype(jnp.float32) * w[
+                dr, ds
+            ].astype(jnp.float32)
+    return out
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def segment_ref(x, weights, skip_from=None):
+    """A pipeline segment: conv→relu chain with an optional skip add.
+
+    weights: list of [R,S,C,K] tensors. skip_from: index of the layer whose
+    *output* is added into the final layer's input (None = no skip), i.e. a
+    reuse-distance-(depth-skip_from) residual.
+    """
+    acts = []
+    cur = x
+    for i, w in enumerate(weights):
+        if skip_from is not None and i == len(weights) - 1:
+            cur = cur + acts[skip_from]
+        cur = relu(conv2d_ref(cur, w))
+        acts.append(cur)
+    return cur

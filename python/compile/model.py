@@ -1,0 +1,82 @@
+"""L2: the pipeline-segment compute graph in JAX, calling the L1 kernels.
+
+A *segment* here is the functional realization of what the Rust coordinator
+schedules: a chain of conv+ReLU layers (optionally with a residual skip)
+that the paper pipelines across the PE array. Three build targets:
+
+- `segment_fused`   — depth-2 fused pair (L1 `fused_segment` kernel):
+                      intermediate band lives in VMEM, the pipelined path.
+- `segment_layers`  — the same segment as separate per-layer programs:
+                      the op-by-op baseline the coordinator compares against.
+- `conv_band_tile`  — one halo'd conv *tile* program used by the Rust
+                      functional pipelined executor to stream row bands
+                      through PJRT stage by stage.
+
+All are jitted pure functions of (activations, weights), lowered once by
+aot.py. Python never runs at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_tile, fused_segment, gemm_tile
+
+# Canonical small segment (fits CPU interpret mode comfortably):
+# conv3x3 C_IN→C_MID, relu, conv3x3 C_MID→C_OUT, relu.
+H, W = 32, 32
+C_IN, C_MID, C_OUT = 8, 16, 8
+BAND = 8
+R = S = 3
+
+
+def segment_fused(x, w1, w2):
+    """Pipelined (fused) segment: one pallas_call, VMEM intermediate."""
+    return fused_segment.fused_conv_pair(x, w1, w2, band=BAND)
+
+
+def layer0(x, w1):
+    """Op-by-op layer 1: HBM round trip after this program returns."""
+    return jnp.maximum(conv_tile.conv2d(x, w1, band=BAND), 0.0)
+
+
+def layer1(mid, w2):
+    """Op-by-op layer 2."""
+    return jnp.maximum(conv_tile.conv2d(mid, w2, band=BAND), 0.0)
+
+
+def conv_band_tile(x_slab, w):
+    """One pipeline-interval tile for the Rust executor.
+
+    x_slab: [BAND + R - 1, W + S - 1, C] pre-padded input band (the halo
+    rows come from the previous/next band or zero padding — the Rust side
+    assembles them, playing the role of the NoC).
+    Returns [BAND, W, K] — one granularity unit of the intermediate tensor.
+    """
+    band, wd = BAND, W
+    r, s = R, S
+    acc = jnp.zeros((band, wd, w.shape[3]), jnp.float32)
+    for dr in range(r):
+        for ds in range(s):
+            patch = x_slab[dr : dr + band, ds : ds + wd, :].astype(jnp.float32)
+            acc = acc + jax.lax.dot_general(
+                patch,
+                w[dr, ds].astype(jnp.float32),
+                (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    return jnp.maximum(acc, 0.0)
+
+
+def gemm_program(a, b):
+    """Quickstart GEMM (Eq. 1) through the L1 tiled kernel."""
+    return gemm_tile.gemm(a, b)
+
+
+def example_inputs(seed=0):
+    """Deterministic example tensors for lowering and for tests."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    x = jax.random.normal(k1, (H, W, C_IN), jnp.float32)
+    w1 = jax.random.normal(k2, (R, S, C_IN, C_MID), jnp.float32) * 0.1
+    w2 = jax.random.normal(k3, (R, S, C_MID, C_OUT), jnp.float32) * 0.1
+    return x, w1, w2

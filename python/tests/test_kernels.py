@@ -1,0 +1,190 @@
+"""Kernel-vs-oracle correctness — the CORE L1 signal.
+
+hypothesis sweeps shapes and dtypes; every Pallas kernel (interpret=True)
+must match the pure-jnp reference to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_tile, fused_segment, gemm_tile, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- GEMM ----
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([16, 32, 64]),
+    k=st.sampled_from([16, 32, 64]),
+    n=st.sampled_from([16, 32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_gemm_matches_ref(m, k, n, dtype, seed):
+    a = rand(seed, (m, k), dtype)
+    b = rand(seed + 1, (k, n), dtype)
+    got = gemm_tile.gemm(a, b, bm=16, bn=16, bk=16)
+    want = ref.gemm_ref(a, b)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else TOL
+    np.testing.assert_allclose(got, want, **tol)
+
+
+def test_gemm_rejects_indivisible_tiles():
+    a = jnp.ones((30, 16), jnp.float32)
+    b = jnp.ones((16, 16), jnp.float32)
+    with pytest.raises(AssertionError):
+        gemm_tile.gemm(a, b, bm=16, bn=16, bk=16)
+
+
+def test_gemm_identity():
+    a = jnp.eye(32, dtype=jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(0), (32, 32), jnp.float32)
+    np.testing.assert_allclose(gemm_tile.gemm(a, b, bm=16, bn=16, bk=16), b, **TOL)
+
+
+# ---------------------------------------------------------------- conv ----
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([8, 16, 32]),
+    w=st.sampled_from([8, 16]),
+    c=st.sampled_from([1, 3, 8]),
+    k=st.sampled_from([1, 4, 16]),
+    r=st.sampled_from([1, 3, 5]),
+    band=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_matches_ref(h, w, c, k, r, band, seed):
+    if h % band != 0:
+        band = h
+    x = rand(seed, (h, w, c), jnp.float32)
+    wt = rand(seed + 1, (r, r, c, k), jnp.float32)
+    got = conv_tile.conv2d(x, wt, band=band)
+    want = ref.conv2d_ref(x, wt)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_conv2d_band_independence():
+    # The row-band tiling must be invisible in the result.
+    x = rand(7, (32, 16, 4), jnp.float32)
+    wt = rand(8, (3, 3, 4, 8), jnp.float32)
+    a = conv_tile.conv2d(x, wt, band=4)
+    b = conv_tile.conv2d(x, wt, band=16)
+    np.testing.assert_allclose(a, b, **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.sampled_from([8, 16]),
+    w=st.sampled_from([8, 16]),
+    c=st.sampled_from([1, 4, 16]),
+    r=st.sampled_from([3, 5]),
+    seed=st.integers(0, 2**16),
+)
+def test_dwconv2d_matches_ref(h, w, c, r, seed):
+    x = rand(seed, (h, w, c), jnp.float32)
+    wt = rand(seed + 1, (r, r, c), jnp.float32)
+    got = conv_tile.dwconv2d(x, wt, band=8)
+    want = ref.dwconv2d_ref(x, wt)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ------------------------------------------------------------- fused -------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.sampled_from([8, 16, 32]),
+    w=st.sampled_from([8, 16]),
+    c=st.sampled_from([2, 8]),
+    k1=st.sampled_from([4, 8]),
+    k2=st.sampled_from([2, 8]),
+    band=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_pair_matches_op_by_op(h, w, c, k1, k2, band, seed):
+    """THE paper claim, functionally: fusing the producer/consumer pair
+    (intermediate in VMEM) is bit-compatible with op-by-op execution."""
+    if h % band != 0:
+        band = h
+    x = rand(seed, (h, w, c), jnp.float32)
+    w1 = rand(seed + 1, (3, 3, c, k1), jnp.float32) * 0.2
+    w2 = rand(seed + 2, (3, 3, k1, k2), jnp.float32) * 0.2
+    got = fused_segment.fused_conv_pair(x, w1, w2, band=band)
+    want = ref.relu(ref.conv2d_ref(ref.relu(ref.conv2d_ref(x, w1)), w2))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_fused_pair_1x1_filters():
+    x = rand(3, (16, 16, 8), jnp.float32)
+    w1 = rand(4, (1, 1, 8, 4), jnp.float32)
+    w2 = rand(5, (1, 1, 4, 8), jnp.float32)
+    got = fused_segment.fused_conv_pair(x, w1, w2, band=8)
+    want = ref.relu(ref.conv2d_ref(ref.relu(ref.conv2d_ref(x, w1)), w2))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_fused_traffic_model_saves_intermediate():
+    fused, op = fused_segment.fused_hbm_traffic_words(32, 32, 8, 16, 8)
+    assert op - fused == 2 * 32 * 32 * 16
+
+
+# ----------------------------------------------------- fused chain -------
+
+@settings(max_examples=8, deadline=None)
+@given(
+    depth=st.sampled_from([2, 3, 4]),
+    h=st.sampled_from([8, 16]),
+    c=st.sampled_from([2, 4]),
+    band=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_chain_matches_op_by_op(depth, h, c, band, seed):
+    """Variable pipeline depth at L1: an N-deep fused conv chain (all
+    intermediates in VMEM) matches layer-by-layer execution."""
+    if h % band != 0:
+        band = h
+    x = rand(seed, (h, h, c), jnp.float32)
+    ks = [c, 4, 2, 4, 2][: depth + 1]
+    weights = [
+        rand(seed + 1 + i, (3, 3, ks[i], ks[i + 1]), jnp.float32) * 0.3
+        for i in range(depth)
+    ]
+    got = fused_segment.fused_conv_chain(x, weights, band=band)
+    want = x
+    for w_ in weights:
+        want = ref.relu(ref.conv2d_ref(want, w_))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_fused_chain_depth1_is_plain_conv():
+    x = rand(11, (8, 8, 4), jnp.float32)
+    w = rand(12, (3, 3, 4, 4), jnp.float32)
+    got = fused_segment.fused_conv_chain(x, [w], band=4)
+    want = ref.relu(ref.conv2d_ref(x, w))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_fused_chain_mixed_filter_sizes():
+    x = rand(13, (16, 16, 4), jnp.float32)
+    ws = [
+        rand(14, (1, 1, 4, 8), jnp.float32),
+        rand(15, (3, 3, 8, 4), jnp.float32),
+        rand(16, (5, 5, 4, 2), jnp.float32) * 0.1,
+    ]
+    got = fused_segment.fused_conv_chain(x, ws, band=8)
+    want = x
+    for w_ in ws:
+        want = ref.relu(ref.conv2d_ref(want, w_))
+    np.testing.assert_allclose(got, want, **TOL)

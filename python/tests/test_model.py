@@ -1,0 +1,58 @@
+"""L2 model shape/semantics tests: the lowered programs compose."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def test_example_inputs_are_deterministic():
+    a = model.example_inputs(0)
+    b = model.example_inputs(0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_fused_equals_layered():
+    """segment_fused(x) == layer1(layer0(x)) — the artifact pair the Rust
+    coordinator compares must agree at build time too."""
+    x, w1, w2 = model.example_inputs()
+    fused = model.segment_fused(x, w1, w2)
+    layered = model.layer1(model.layer0(x, w1), w2)
+    np.testing.assert_allclose(fused, layered, **TOL)
+
+
+def test_layers_match_oracle():
+    x, w1, w2 = model.example_inputs()
+    np.testing.assert_allclose(
+        model.layer0(x, w1), ref.relu(ref.conv2d_ref(x, w1)), **TOL
+    )
+
+
+def test_tile_program_reconstructs_layer():
+    """Streaming conv_band_tile over halo'd slabs == whole-layer conv.
+    This is exactly the schedule the Rust pipelined executor runs."""
+    x, w1, _ = model.example_inputs()
+    pr, ps = model.R // 2, model.S // 2
+    xp = jnp.pad(x, ((pr, pr), (ps, ps), (0, 0)))
+    bands = []
+    for t in range(model.H // model.BAND):
+        slab = jax.lax.dynamic_slice_in_dim(
+            xp, t * model.BAND, model.BAND + model.R - 1, axis=0
+        )
+        bands.append(model.conv_band_tile(slab, w1))
+    got = jnp.concatenate(bands, axis=0)
+    want = model.layer0(x, w1)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_gemm_program_matches_ref():
+    a = jax.random.normal(jax.random.PRNGKey(1), (64, 64), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (64, 64), jnp.float32)
+    np.testing.assert_allclose(model.gemm_program(a, b), ref.gemm_ref(a, b), **TOL)

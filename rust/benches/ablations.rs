@@ -1,0 +1,17 @@
+//! Ablation benches: regenerate the design-choice studies DESIGN.md calls
+//! out (organization heuristic vs oracle, topology, flexible vs fixed
+//! depth).
+mod common;
+
+use pipeorgan::config::ArchConfig;
+
+fn main() {
+    let cfg = ArchConfig::default();
+    let out = common::out_dir();
+    pipeorgan::report::ablation_organization(&cfg).emit(&out).unwrap();
+    pipeorgan::report::ablation_topology(&cfg).emit(&out).unwrap();
+    pipeorgan::report::ablation_depth(&cfg).emit(&out).unwrap();
+    common::bench("ablation_depth_sweep", 1, 3, || {
+        pipeorgan::report::ablation_depth(&cfg).table.rows.len()
+    });
+}

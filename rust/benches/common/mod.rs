@@ -1,0 +1,31 @@
+//! Shared harness for the custom benches (criterion substitute — no
+//! network in this environment, see DESIGN.md §2).
+//!
+//! Each bench is a `harness = false` binary that (a) regenerates its paper
+//! artifact via the report module and (b) times the generation kernel with
+//! warmup + repeated samples, printing a [`Summary`].
+
+use std::time::Instant;
+
+use pipeorgan::util::stats::Summary;
+
+/// Time `f` with `warmup` discarded runs and `samples` measured runs.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut ns = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    let s = Summary::from_ns(&ns);
+    println!("bench {name}: {s}");
+    s
+}
+
+/// Standard output directory for bench-generated reports.
+pub fn out_dir() -> String {
+    std::env::var("PIPEORGAN_REPORTS").unwrap_or_else(|_| "reports".to_string())
+}

@@ -1,0 +1,20 @@
+//! Bench E9: regenerate Fig. 13 (end-to-end performance vs TANGRAM-like
+//! and SIMBA-like across the zoo; paper geomean 1.95x) and time one full
+//! mapper+evaluate pass.
+mod common;
+
+use pipeorgan::config::ArchConfig;
+use pipeorgan::cost::{evaluate, Mapper};
+use pipeorgan::mapper::PipeOrgan;
+
+fn main() {
+    let cfg = ArchConfig::default();
+    let out = common::out_dir();
+    pipeorgan::report::fig13_performance(&cfg, 8).emit(&out).unwrap();
+
+    let g = pipeorgan::workloads::eye_segmentation();
+    common::bench("pipeorgan_plan_eval_eye_seg", 2, 10, || {
+        let plan = PipeOrgan::default().plan(&g, &cfg);
+        evaluate(&g, &plan, &cfg).cycles
+    });
+}

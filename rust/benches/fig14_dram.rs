@@ -1,0 +1,20 @@
+//! Bench E10: regenerate Fig. 14 (normalized DRAM accesses; paper: 31%
+//! geomean reduction) and time the memory model.
+mod common;
+
+use pipeorgan::config::ArchConfig;
+use pipeorgan::memory::op_by_op_dram_traffic;
+
+fn main() {
+    let cfg = ArchConfig::default();
+    let out = common::out_dir();
+    pipeorgan::report::fig14_dram(&cfg, 8).emit(&out).unwrap();
+
+    let tasks = pipeorgan::workloads::all_tasks();
+    common::bench("dram_accounting_zoo", 2, 20, || {
+        tasks
+            .iter()
+            .map(|g| op_by_op_dram_traffic(g, &cfg).total())
+            .sum::<u64>()
+    });
+}

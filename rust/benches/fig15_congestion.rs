@@ -1,0 +1,14 @@
+//! Bench E11: regenerate Fig. 15 (worst-case channel load vs compute
+//! interval for blocked/fine-1D/AMP).
+mod common;
+
+use pipeorgan::config::ArchConfig;
+
+fn main() {
+    let cfg = ArchConfig::default();
+    let out = common::out_dir();
+    pipeorgan::report::fig15_congestion(&cfg).emit(&out).unwrap();
+    common::bench("fig15_sweep", 1, 5, || {
+        pipeorgan::report::fig15_congestion(&cfg).table.rows.len()
+    });
+}

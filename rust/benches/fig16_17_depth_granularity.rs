@@ -1,0 +1,18 @@
+//! Bench E12/E13: regenerate Fig. 16 (depths) and Fig. 17 (finest
+//! granularities) and time stage 1 over the zoo.
+mod common;
+
+use pipeorgan::config::ArchConfig;
+use pipeorgan::pipeline::partition;
+
+fn main() {
+    let cfg = ArchConfig::default();
+    let out = common::out_dir();
+    pipeorgan::report::fig16_depth(&cfg).emit(&out).unwrap();
+    pipeorgan::report::fig17_granularity(&cfg).emit(&out).unwrap();
+
+    let tasks = pipeorgan::workloads::all_tasks();
+    common::bench("depth_heuristic_zoo", 3, 30, || {
+        tasks.iter().map(|g| partition(g, &cfg).len()).sum::<usize>()
+    });
+}

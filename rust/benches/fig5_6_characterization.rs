@@ -1,0 +1,20 @@
+//! Bench E1/E2: regenerate Fig. 5 (A/W ratios) and Fig. 6 (skip
+//! structures) and time the characterization pass.
+mod common;
+
+fn main() {
+    let out = common::out_dir();
+    pipeorgan::report::fig5_aw_ratios().emit(&out).unwrap();
+    pipeorgan::report::fig6_skips().emit(&out).unwrap();
+    common::bench("characterize_zoo", 2, 10, || {
+        let tasks = pipeorgan::workloads::all_tasks();
+        let n: usize = tasks
+            .iter()
+            .map(|g| {
+                g.layers().iter().filter(|l| l.aw_ratio() > 1.0).count()
+                    + pipeorgan::ir::skips::SkipProfile::of(g).num_skips()
+            })
+            .sum();
+        n
+    });
+}

@@ -1,0 +1,24 @@
+//! Bench E3–E7: regenerate the Fig. 8–12 traffic analyses (mesh + AMP,
+//! analytic + cycle-level) and time both analysis paths.
+mod common;
+
+use pipeorgan::config::{ArchConfig, TopologyKind};
+use pipeorgan::noc::Topology;
+use pipeorgan::sim::{analyze, simulate_interval};
+use pipeorgan::traffic::{derive_flows, scenarios};
+
+fn main() {
+    let cfg = ArchConfig::default();
+    let out = common::out_dir();
+    pipeorgan::report::fig8_12_traffic(&cfg).emit(&out).unwrap();
+
+    let topo = Topology::new(TopologyKind::Mesh, cfg.pe_rows, cfg.pe_cols);
+    let scen = scenarios::fig8_depth2_blocked(cfg.pe_rows, cfg.pe_cols);
+    let flows = derive_flows(&topo, &scen.placement, &scen.handoffs);
+    common::bench("channel_load_analysis_32x32", 3, 30, || {
+        analyze(&topo, &flows).worst_channel_load
+    });
+    common::bench("cycle_sim_32x32", 1, 5, || {
+        simulate_interval(&topo, &flows, 1).makespan
+    });
+}

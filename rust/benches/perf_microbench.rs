@@ -1,0 +1,83 @@
+//! §Perf microbenchmarks: the simulator hot paths the optimization pass
+//! (EXPERIMENTS.md §Perf) tracks — routing, channel-load accumulation,
+//! cycle-level simulation, full mapper plan+evaluate, and the parallel
+//! zoo sweep.
+mod common;
+
+use std::sync::Arc;
+
+use pipeorgan::config::{ArchConfig, TopologyKind};
+use pipeorgan::coordinator::{run_jobs, EvalJob, MapperKind};
+use pipeorgan::cost::{evaluate, Mapper};
+use pipeorgan::mapper::PipeOrgan;
+use pipeorgan::noc::{route, Topology};
+use pipeorgan::sim::{analyze, simulate_interval};
+use pipeorgan::traffic::{derive_flows, scenarios};
+
+fn main() {
+    let cfg = ArchConfig::default();
+
+    // --- routing throughput ------------------------------------------------
+    for kind in [TopologyKind::Mesh, TopologyKind::Amp] {
+        let topo = Topology::new(kind, 32, 32);
+        common::bench(&format!("route_1k_pairs_{}", kind.name()), 3, 30, || {
+            let mut hops = 0usize;
+            for i in 0..1024u32 {
+                let src = i % 1024;
+                let dst = (i * 37 + 11) % 1024;
+                hops += route(&topo, src, dst).len();
+            }
+            hops
+        });
+    }
+
+    // --- channel-load analysis ----------------------------------------------
+    let topo = Topology::new(TopologyKind::Mesh, 32, 32);
+    let scen = scenarios::fig8_depth4_blocked(32, 32);
+    let flows = derive_flows(&topo, &scen.placement, &scen.handoffs);
+    println!("flows in fig8_depth4 scenario: {}", flows.len());
+    common::bench("analyze_fig8_depth4", 3, 50, || {
+        analyze(&topo, &flows).total_word_hops
+    });
+
+    // --- cycle-level sim ----------------------------------------------------
+    common::bench("cycle_sim_fig8_depth4", 1, 5, || {
+        simulate_interval(&topo, &flows, 1).makespan
+    });
+
+    // --- full mapper + cost evaluation ---------------------------------------
+    for g in [
+        pipeorgan::workloads::eye_segmentation(),
+        pipeorgan::workloads::hand_tracking(),
+    ] {
+        common::bench(&format!("plan_eval_{}", g.name), 2, 10, || {
+            let plan = PipeOrgan::default().plan(&g, &cfg);
+            evaluate(&g, &plan, &cfg).cycles
+        });
+    }
+
+    // --- parallel zoo sweep (the Fig. 13 inner loop) --------------------------
+    let tasks: Vec<Arc<pipeorgan::ir::ModelGraph>> = pipeorgan::workloads::all_tasks()
+        .into_iter()
+        .map(Arc::new)
+        .collect();
+    common::bench("zoo_sweep_parallel", 1, 5, || {
+        let jobs: Vec<EvalJob> = tasks
+            .iter()
+            .flat_map(|g| {
+                [
+                    MapperKind::PipeOrgan,
+                    MapperKind::TangramLike,
+                    MapperKind::SimbaLike,
+                ]
+                .into_iter()
+                .map(|mapper| EvalJob {
+                    graph: Arc::clone(g),
+                    mapper,
+                    cfg: cfg.clone(),
+                })
+            })
+            .collect();
+        run_jobs(jobs, 8).len()
+    });
+}

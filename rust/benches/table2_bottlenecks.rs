@@ -1,0 +1,15 @@
+//! Bench E8: regenerate Table II (mesh bottleneck summary) and the
+//! Sec. IV-A dataflow-heuristic validation.
+mod common;
+
+use pipeorgan::config::ArchConfig;
+
+fn main() {
+    let cfg = ArchConfig::default();
+    let out = common::out_dir();
+    pipeorgan::report::table2_bottlenecks(&cfg).emit(&out).unwrap();
+    pipeorgan::report::validate_dataflow().emit(&out).unwrap();
+    common::bench("table2", 1, 5, || {
+        pipeorgan::report::table2_bottlenecks(&cfg).table.rows.len()
+    });
+}

@@ -1,0 +1,39 @@
+//! Baseline dataflows (Sec. V-C): TANGRAM-like and SIMBA-like mappers.
+
+mod simba;
+mod tangram;
+
+pub use simba::SimbaLike;
+pub use tangram::TangramLike;
+
+/// Clamp a handoff so each producer PE emits at least one word per
+/// interval: finer steps cannot leave the PE's MAC pipeline. Returns
+/// (words_per_interval, intervals).
+pub(crate) fn clamp_handoff(total_words: u64, raw_intervals: u64, producer_pes: usize) -> (u64, u64) {
+    let min_words = producer_pes.max(1) as u64;
+    let raw_words = crate::util::ceil_div(total_words.max(1), raw_intervals.max(1));
+    let words = raw_words.max(min_words).min(total_words.max(1));
+    let intervals = crate::util::ceil_div(total_words.max(1), words).max(1);
+    (words, intervals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_respects_floor_and_total() {
+        // element-grain request on 512 producers → clamped to 512 words.
+        let (w, t) = clamp_handoff(16384, 16384, 512);
+        assert_eq!(w, 512);
+        assert_eq!(t, 32);
+        // coarse request passes through
+        let (w, t) = clamp_handoff(16384, 16, 512);
+        assert_eq!(w, 1024);
+        assert_eq!(t, 16);
+        // granularity can never exceed the tensor
+        let (w, t) = clamp_handoff(100, 1, 512);
+        assert_eq!(w, 100);
+        assert_eq!(t, 1);
+    }
+}

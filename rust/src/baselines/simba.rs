@@ -1,0 +1,166 @@
+//! SIMBA-like dataflow (Sec. V-C): "parallelizes input and output channels
+//! and does pipelining only when these two dimensions cannot utilize the
+//! substrate". Suffers when C×K parallelism is insufficient and from load
+//! imbalance with mixed filter sizes (Sec. VI-A). Runs on a plain mesh.
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::cost::{Mapper, MappingPlan, PlannedHandoff, PlannedSegment};
+use crate::dataflow::{rank_extent, DataflowStyle, Rank};
+use crate::ir::{Layer, ModelGraph};
+use crate::pipeline::Segment;
+use crate::spatial::Organization;
+
+use super::clamp_handoff;
+
+/// The SIMBA-like baseline mapper.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SimbaLike;
+
+/// PEs a layer can occupy when parallelism is restricted to the C and K
+/// ranks (each PE consumes `dot` channels of C per cycle).
+pub fn ck_parallel_pes(layer: &Layer, cfg: &ArchConfig) -> usize {
+    let c = rank_extent(&layer.op, Rank::C).max(1);
+    let k = rank_extent(&layer.op, Rank::K).max(1);
+    let units = crate::util::ceil_div(c, cfg.pe_dot_product as u64) * k;
+    (units as usize).min(cfg.num_pes()).max(1)
+}
+
+impl SimbaLike {
+    /// Substrate utilization under C/K-only parallelization.
+    pub fn utilization(layer: &Layer, cfg: &ArchConfig) -> f64 {
+        ck_parallel_pes(layer, cfg) as f64 / cfg.num_pes() as f64
+    }
+}
+
+impl Mapper for SimbaLike {
+    fn name(&self) -> &'static str {
+        "simba_like"
+    }
+
+    fn topology(&self) -> TopologyKind {
+        TopologyKind::Mesh
+    }
+
+    fn plan(&self, graph: &ModelGraph, cfg: &ArchConfig) -> MappingPlan {
+        let n = graph.num_layers();
+        let mut segments = Vec::new();
+        let mut l = 0usize;
+        while l < n {
+            let a = graph.layer(l);
+            let util_a = Self::utilization(a, cfg);
+            // Pipeline only when one layer cannot utilize the substrate and
+            // a pairable neighbor exists.
+            let pairable = util_a < 0.5
+                && l + 1 < n
+                && a.is_einsum()
+                && !a.is_complex()
+                && graph.layer(l + 1).is_einsum()
+                && !graph.layer(l + 1).is_complex();
+            if pairable {
+                let b = graph.layer(l + 1);
+                let pes_a = ck_parallel_pes(a, cfg);
+                let pes_b = ck_parallel_pes(b, cfg).min(cfg.num_pes() - pes_a.min(cfg.num_pes() - 1));
+                // Blocked chunks, coarse granularity: SIMBA moves tiles
+                // through the global buffer between chunks.
+                let total = a.output_act_words();
+                let raw_intervals = a.op.output_rows().max(1);
+                let (words, intervals) = clamp_handoff(total, raw_intervals, pes_a);
+                segments.push(PlannedSegment {
+                    segment: Segment::new(l, 2),
+                    organization: Organization::Blocked1D,
+                    pe_alloc: vec![pes_a.max(1), pes_b.max(1)],
+                    styles: vec![DataflowStyle::MixedActivation; 2],
+                    handoffs: vec![PlannedHandoff {
+                        from_stage: 0,
+                        to_stage: 1,
+                        words_per_interval: words,
+                        intervals,
+                        via_gb: true,
+                        is_skip: false,
+                    }],
+                });
+                l += 2;
+            } else {
+                // Op-by-op on the C/K-limited allocation.
+                segments.push(PlannedSegment {
+                    segment: Segment::new(l, 1),
+                    organization: Organization::Sequential,
+                    pe_alloc: vec![ck_parallel_pes(a, cfg)],
+                    styles: vec![DataflowStyle::MixedActivation],
+                    handoffs: vec![],
+                });
+                l += 1;
+            }
+        }
+        MappingPlan {
+            mapper_name: self.name().into(),
+            topology: self.topology(),
+            segments,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+    use crate::workloads;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    #[test]
+    fn wide_layers_fully_utilize() {
+        // C=256, K=512: ceil(256/8)*512 = 16384 units ≫ 1024 PEs.
+        let l = Layer::new("big", Op::conv2d(1, 16, 16, 256, 512, 3, 3, 1, 1));
+        assert_eq!(ck_parallel_pes(&l, &cfg()), 1024);
+        assert_eq!(SimbaLike::utilization(&l, &cfg()), 1.0);
+    }
+
+    #[test]
+    fn narrow_layers_underutilize() {
+        // RITNet-class layer: C=K=32 → ceil(32/8)*32 = 128 of 1024 PEs.
+        let l = Layer::new("narrow", Op::conv2d(1, 192, 320, 32, 32, 3, 3, 1, 1));
+        assert_eq!(ck_parallel_pes(&l, &cfg()), 128);
+        assert!(SimbaLike::utilization(&l, &cfg()) < 0.5);
+    }
+
+    #[test]
+    fn pipelines_only_underutilized_layers() {
+        let g = workloads::eye_segmentation(); // narrow channels
+        let plan = SimbaLike.plan(&g, &cfg());
+        plan.validate(&g, &cfg()).unwrap();
+        assert!(
+            plan.segments.iter().any(|s| s.depth() == 2),
+            "narrow model should trigger pipelining"
+        );
+        let g2 = workloads::hand_tracking(); // wide channels
+        let plan2 = SimbaLike.plan(&g2, &cfg());
+        let paired = plan2.segments.iter().filter(|s| s.depth() == 2).count();
+        let total = plan2.segments.len();
+        assert!(
+            (paired as f64) < total as f64 * 0.4,
+            "wide model should mostly run op-by-op ({paired}/{total})"
+        );
+    }
+
+    #[test]
+    fn plans_validate_on_whole_zoo() {
+        for g in workloads::all_tasks() {
+            let plan = SimbaLike.plan(&g, &cfg());
+            plan.validate(&g, &cfg()).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+
+    #[test]
+    fn handoffs_go_via_gb() {
+        let g = workloads::eye_segmentation();
+        let plan = SimbaLike.plan(&g, &cfg());
+        for s in &plan.segments {
+            for h in &s.handoffs {
+                assert!(h.via_gb, "SIMBA-like moves tiles through the GB");
+            }
+        }
+    }
+}

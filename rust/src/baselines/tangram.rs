@@ -1,0 +1,137 @@
+//! TANGRAM-like dataflow (Sec. V-C): fixed depth-2 fine-grained pipelining,
+//! "alternating between output stationary and input stationary", with the
+//! prior-work blocked spatial allocation. Runs on a plain mesh.
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::cost::{Mapper, MappingPlan, PlannedHandoff, PlannedSegment};
+use crate::dataflow::{DataflowStyle, LoopNest};
+use crate::ir::ModelGraph;
+use crate::pipeline::{pair_granularity, Segment};
+use crate::spatial::{allocate_pes, Organization};
+
+use super::clamp_handoff;
+
+/// The TANGRAM-like baseline mapper.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TangramLike;
+
+impl Mapper for TangramLike {
+    fn name(&self) -> &'static str {
+        "tangram_like"
+    }
+
+    fn topology(&self) -> TopologyKind {
+        TopologyKind::Mesh
+    }
+
+    fn plan(&self, graph: &ModelGraph, cfg: &ArchConfig) -> MappingPlan {
+        let n = graph.num_layers();
+        let mut segments = Vec::new();
+        let mut l = 0usize;
+        while l < n {
+            let a = graph.layer(l);
+            let can_pair = l + 1 < n
+                && !a.is_complex()
+                && !graph.layer(l + 1).is_complex()
+                && a.is_einsum()
+                && graph.layer(l + 1).is_einsum();
+            if can_pair {
+                let b = graph.layer(l + 1);
+                // Alternating OS (producer) / IS (consumer).
+                let styles = vec![
+                    DataflowStyle::OutputStationary,
+                    DataflowStyle::InputStationary,
+                ];
+                let np = LoopNest::for_op(&a.op, styles[0]);
+                let nc = LoopNest::for_op(&b.op, styles[1]);
+                let g = pair_granularity(&np, &nc, a.output_act_words());
+                let pe_alloc = allocate_pes(&[a.macs(), b.macs()], cfg.num_pes());
+                let (words, intervals) =
+                    clamp_handoff(a.output_act_words(), g.intervals, pe_alloc[0]);
+                segments.push(PlannedSegment {
+                    segment: Segment::new(l, 2),
+                    organization: Organization::Blocked1D,
+                    pe_alloc,
+                    styles,
+                    handoffs: vec![PlannedHandoff {
+                        from_stage: 0,
+                        to_stage: 1,
+                        words_per_interval: words,
+                        intervals,
+                        // fine-grained: PE-to-PE over the NoC
+                        via_gb: false,
+                        is_skip: false,
+                    }],
+                });
+                l += 2;
+            } else {
+                segments.push(PlannedSegment {
+                    segment: Segment::new(l, 1),
+                    organization: Organization::Sequential,
+                    pe_alloc: vec![cfg.num_pes()],
+                    styles: vec![DataflowStyle::OutputStationary],
+                    handoffs: vec![],
+                });
+                l += 1;
+            }
+        }
+        MappingPlan {
+            mapper_name: self.name().into(),
+            topology: self.topology(),
+            segments,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn pairs_consecutive_einsum_layers() {
+        let g = workloads::synthetic::equal_conv_segment(4);
+        let plan = TangramLike.plan(&g, &ArchConfig::default());
+        plan.validate(&g, &ArchConfig::default()).unwrap();
+        assert_eq!(plan.segments.len(), 2);
+        assert!(plan.segments.iter().all(|s| s.depth() == 2));
+        assert!(plan
+            .segments
+            .iter()
+            .all(|s| s.organization == Organization::Blocked1D));
+    }
+
+    #[test]
+    fn complex_layers_run_alone() {
+        let g = workloads::object_detection();
+        let plan = TangramLike.plan(&g, &ArchConfig::default());
+        plan.validate(&g, &ArchConfig::default()).unwrap();
+        for s in &plan.segments {
+            for id in s.segment.layers() {
+                if graph_is_complex(&g, id) {
+                    assert_eq!(s.depth(), 1, "complex layer pipelined");
+                }
+            }
+        }
+    }
+
+    fn graph_is_complex(g: &ModelGraph, id: usize) -> bool {
+        g.layer(id).is_complex()
+    }
+
+    #[test]
+    fn plans_validate_on_whole_zoo() {
+        let cfg = ArchConfig::default();
+        for g in workloads::all_tasks() {
+            let plan = TangramLike.plan(&g, &cfg);
+            plan.validate(&g, &cfg).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+
+    #[test]
+    fn depth_never_exceeds_two() {
+        let g = workloads::eye_segmentation();
+        let plan = TangramLike.plan(&g, &ArchConfig::default());
+        assert!(plan.segments.iter().all(|s| s.depth() <= 2));
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny subcommand/flag parser (clap substitute — see DESIGN.md §2).
+//!
+//! Grammar: `pipeorgan <subcommand> [--key value]... [--switch]...`.
+//! Flags may appear in any order; unknown flags are an error so typos
+//! surface instead of silently using defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `known_flags` lists accepted
+    /// `--key` names; each either takes a value or is a boolean switch.
+    pub fn parse(
+        raw: &[String],
+        known_flags: &[(&str, bool)], // (name, takes_value)
+    ) -> Result<Args, String> {
+        let mut it = raw.iter().peekable();
+        let subcommand = it
+            .next()
+            .cloned()
+            .ok_or_else(|| "missing subcommand".to_string())?;
+        if subcommand.starts_with("--") {
+            return Err(format!("expected subcommand, got flag `{subcommand}`"));
+        }
+        let mut flags = BTreeMap::new();
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                return Err(format!("unexpected positional `{arg}`"));
+            };
+            let Some(&(_, takes_value)) =
+                known_flags.iter().find(|(k, _)| *k == name)
+            else {
+                return Err(format!("unknown flag `--{name}`"));
+            };
+            let value = if takes_value {
+                it.next()
+                    .cloned()
+                    .ok_or_else(|| format!("flag `--{name}` needs a value"))?
+            } else {
+                "true".to_string()
+            };
+            if flags.insert(name.to_string(), value).is_some() {
+                return Err(format!("duplicate flag `--{name}`"));
+            }
+        }
+        Ok(Args { subcommand, flags })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("flag `--{name}` expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    const FLAGS: &[(&str, bool)] = &[("out", true), ("workers", true), ("verbose", false)];
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&s(&["e2e", "--out", "reports", "--verbose"]), FLAGS).unwrap();
+        assert_eq!(a.subcommand, "e2e");
+        assert_eq!(a.get("out"), Some("reports"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("workers", 4).unwrap(), 4);
+    }
+
+    #[test]
+    fn rejects_unknown_flag() {
+        assert!(Args::parse(&s(&["e2e", "--nope"]), FLAGS).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(Args::parse(&s(&["e2e", "--out"]), FLAGS).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate() {
+        assert!(Args::parse(&s(&["e2e", "--out", "a", "--out", "b"]), FLAGS).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_subcommand() {
+        assert!(Args::parse(&s(&[]), FLAGS).is_err());
+        assert!(Args::parse(&s(&["--out", "x"]), FLAGS).is_err());
+    }
+
+    #[test]
+    fn bad_integer_flag() {
+        let a = Args::parse(&s(&["e2e", "--workers", "many"]), FLAGS).unwrap();
+        assert!(a.get_usize("workers", 1).is_err());
+    }
+}

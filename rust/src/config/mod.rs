@@ -1,0 +1,262 @@
+//! Architecture + run configuration (the paper's Table III), plus a small
+//! `key = value` config-file parser so experiments are reproducible from
+//! checked-in config files rather than CLI flags alone.
+
+mod parse;
+
+pub use parse::{parse_kv, ConfigError};
+
+use crate::util::json::Json;
+
+/// NoC topology selector (Sec. IV-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TopologyKind {
+    /// Conventional 2-D mesh.
+    Mesh,
+    /// Augmented Mesh for Pipelining: mesh + express links of length
+    /// `round(sqrt(rows/2))` in each direction at every PE.
+    Amp,
+    /// Flattened butterfly (all-to-all per row/column) — the "overkill"
+    /// comparison point with O(N log N) links.
+    FlattenedButterfly,
+    /// Torus (wraparound mesh) — ablation topology.
+    Torus,
+}
+
+impl TopologyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TopologyKind::Mesh => "mesh",
+            TopologyKind::Amp => "amp",
+            TopologyKind::FlattenedButterfly => "flattened_butterfly",
+            TopologyKind::Torus => "torus",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "mesh" => Some(TopologyKind::Mesh),
+            "amp" => Some(TopologyKind::Amp),
+            "flattened_butterfly" | "fb" => Some(TopologyKind::FlattenedButterfly),
+            "torus" => Some(TopologyKind::Torus),
+            _ => None,
+        }
+    }
+}
+
+/// Accelerator architecture parameters. Defaults reproduce Table III.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// PE array rows (Table III: 32).
+    pub pe_rows: usize,
+    /// PE array columns (Table III: 32).
+    pub pe_cols: usize,
+    /// Multiply-accumulate lanes per PE per cycle (Table III: dot product 8).
+    pub pe_dot_product: usize,
+    /// Bytes per tensor word (Table III: 1 B / 8-bit).
+    pub bytes_per_word: usize,
+    /// On-chip global buffer (SRAM) capacity in bytes (Table III: 1 MB).
+    pub sram_bytes: u64,
+    /// Per-PE register file capacity in bytes. The paper compares granularity
+    /// against "total register file size"; Eyeriss-class PEs carry ~0.5 KB.
+    pub rf_bytes_per_pe: u64,
+    /// Off-chip memory bandwidth in bytes/cycle. Table III gives 256 GB/s;
+    /// at a nominal 1 GHz clock that is 256 B/cycle.
+    pub dram_bytes_per_cycle: f64,
+    /// NoC link bandwidth in words per cycle per link.
+    pub link_words_per_cycle: f64,
+    /// NoC topology.
+    pub topology: TopologyKind,
+    /// Clock frequency (Hz), used only to convert Table III GB/s → B/cycle
+    /// and to report absolute times.
+    pub clock_hz: f64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self {
+            pe_rows: 32,
+            pe_cols: 32,
+            pe_dot_product: 8,
+            bytes_per_word: 1,
+            sram_bytes: 1 << 20,       // 1 MB
+            rf_bytes_per_pe: 512,      // 0.5 KB/PE → 512 KB array-total RF
+            dram_bytes_per_cycle: 256.0, // 256 GB/s @ 1 GHz
+            link_words_per_cycle: 1.0,
+            topology: TopologyKind::Mesh,
+            clock_hz: 1.0e9,
+        }
+    }
+}
+
+impl ArchConfig {
+    /// Table III defaults on the AMP topology.
+    pub fn amp() -> Self {
+        Self {
+            topology: TopologyKind::Amp,
+            ..Self::default()
+        }
+    }
+
+    pub fn num_pes(&self) -> usize {
+        self.pe_rows * self.pe_cols
+    }
+
+    /// Maximum pipeline depth considered by stage 1 (Sec. IV-A):
+    /// `sqrt(numPEs)`.
+    pub fn max_pipeline_depth(&self) -> usize {
+        (self.num_pes() as f64).sqrt().floor() as usize
+    }
+
+    /// Peak MACs per cycle over the whole array.
+    pub fn peak_macs_per_cycle(&self) -> u64 {
+        (self.num_pes() * self.pe_dot_product) as u64
+    }
+
+    /// Array-total register file bytes (granularity threshold, Sec. IV-B).
+    pub fn rf_total_bytes(&self) -> u64 {
+        self.rf_bytes_per_pe * self.num_pes() as u64
+    }
+
+    /// Build from `key = value` text (see [`parse_kv`]); unknown keys error.
+    pub fn from_kv_text(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = Self::default();
+        for (k, v, line) in parse_kv(text)? {
+            let bad = |why: &str| ConfigError::BadValue {
+                line,
+                key: k.clone(),
+                why: why.to_string(),
+            };
+            match k.as_str() {
+                "pe_rows" => cfg.pe_rows = v.parse().map_err(|_| bad("expected usize"))?,
+                "pe_cols" => cfg.pe_cols = v.parse().map_err(|_| bad("expected usize"))?,
+                "pe_dot_product" => {
+                    cfg.pe_dot_product = v.parse().map_err(|_| bad("expected usize"))?
+                }
+                "bytes_per_word" => {
+                    cfg.bytes_per_word = v.parse().map_err(|_| bad("expected usize"))?
+                }
+                "sram_bytes" => cfg.sram_bytes = v.parse().map_err(|_| bad("expected u64"))?,
+                "rf_bytes_per_pe" => {
+                    cfg.rf_bytes_per_pe = v.parse().map_err(|_| bad("expected u64"))?
+                }
+                "dram_bytes_per_cycle" => {
+                    cfg.dram_bytes_per_cycle = v.parse().map_err(|_| bad("expected f64"))?
+                }
+                "link_words_per_cycle" => {
+                    cfg.link_words_per_cycle = v.parse().map_err(|_| bad("expected f64"))?
+                }
+                "clock_hz" => cfg.clock_hz = v.parse().map_err(|_| bad("expected f64"))?,
+                "topology" => {
+                    cfg.topology =
+                        TopologyKind::from_name(&v).ok_or_else(|| bad("unknown topology"))?
+                }
+                _ => {
+                    return Err(ConfigError::UnknownKey { line, key: k });
+                }
+            }
+        }
+        cfg.validate().map_err(|why| ConfigError::BadValue {
+            line: 0,
+            key: "<config>".into(),
+            why,
+        })?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pe_rows == 0 || self.pe_cols == 0 {
+            return Err("PE array must be non-empty".into());
+        }
+        if self.pe_dot_product == 0 {
+            return Err("pe_dot_product must be > 0".into());
+        }
+        if self.bytes_per_word == 0 {
+            return Err("bytes_per_word must be > 0".into());
+        }
+        if self.dram_bytes_per_cycle <= 0.0 {
+            return Err("dram_bytes_per_cycle must be > 0".into());
+        }
+        if self.link_words_per_cycle <= 0.0 {
+            return Err("link_words_per_cycle must be > 0".into());
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("pe_rows", self.pe_rows)
+            .set("pe_cols", self.pe_cols)
+            .set("pe_dot_product", self.pe_dot_product)
+            .set("bytes_per_word", self.bytes_per_word)
+            .set("sram_bytes", self.sram_bytes)
+            .set("rf_bytes_per_pe", self.rf_bytes_per_pe)
+            .set("dram_bytes_per_cycle", self.dram_bytes_per_cycle)
+            .set("link_words_per_cycle", self.link_words_per_cycle)
+            .set("topology", self.topology.name())
+            .set("clock_hz", self.clock_hz);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_defaults() {
+        let c = ArchConfig::default();
+        assert_eq!(c.pe_rows, 32);
+        assert_eq!(c.pe_cols, 32);
+        assert_eq!(c.num_pes(), 1024);
+        assert_eq!(c.pe_dot_product, 8);
+        assert_eq!(c.sram_bytes, 1 << 20);
+        assert_eq!(c.bytes_per_word, 1);
+        assert_eq!(c.max_pipeline_depth(), 32);
+        assert_eq!(c.peak_macs_per_cycle(), 8192);
+    }
+
+    #[test]
+    fn kv_roundtrip_overrides() {
+        let cfg = ArchConfig::from_kv_text(
+            "# comment\npe_rows = 16\npe_cols=16\ntopology = amp\n\nsram_bytes = 524288\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.pe_rows, 16);
+        assert_eq!(cfg.topology, TopologyKind::Amp);
+        assert_eq!(cfg.sram_bytes, 524288);
+        // untouched defaults survive
+        assert_eq!(cfg.pe_dot_product, 8);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let e = ArchConfig::from_kv_text("nope = 3").unwrap_err();
+        assert!(matches!(e, ConfigError::UnknownKey { .. }));
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let e = ArchConfig::from_kv_text("pe_rows = banana").unwrap_err();
+        assert!(matches!(e, ConfigError::BadValue { .. }));
+    }
+
+    #[test]
+    fn zero_rows_invalid() {
+        assert!(ArchConfig::from_kv_text("pe_rows = 0").is_err());
+    }
+
+    #[test]
+    fn topology_names_roundtrip() {
+        for t in [
+            TopologyKind::Mesh,
+            TopologyKind::Amp,
+            TopologyKind::FlattenedButterfly,
+            TopologyKind::Torus,
+        ] {
+            assert_eq!(TopologyKind::from_name(t.name()), Some(t));
+        }
+        assert_eq!(TopologyKind::from_name("bogus"), None);
+    }
+}

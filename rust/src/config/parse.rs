@@ -1,0 +1,79 @@
+//! `key = value` config-file syntax: one assignment per line, `#` comments,
+//! blank lines ignored. (serde/toml substitute — see DESIGN.md §2.)
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum ConfigError {
+    #[error("line {line}: expected `key = value`, got `{text}`")]
+    Syntax { line: usize, text: String },
+    #[error("line {line}: unknown key `{key}`")]
+    UnknownKey { line: usize, key: String },
+    #[error("line {line}: bad value for `{key}`: {why}")]
+    BadValue {
+        line: usize,
+        key: String,
+        why: String,
+    },
+}
+
+/// Parse to `(key, value, line_number)` triples; values keep inner spaces
+/// but are trimmed at the ends. Inline `#` comments are stripped.
+pub fn parse_kv(text: &str) -> Result<Vec<(String, String, usize)>, ConfigError> {
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = match raw.find('#') {
+            Some(pos) => &raw[..pos],
+            None => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(ConfigError::Syntax {
+                line: line_no,
+                text: raw.to_string(),
+            });
+        };
+        let key = line[..eq].trim();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() || val.is_empty() {
+            return Err(ConfigError::Syntax {
+                line: line_no,
+                text: raw.to_string(),
+            });
+        }
+        out.push((key.to_string(), val.to_string(), line_no));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_and_blanks() {
+        let kv = parse_kv("# header\n\na = 1\nb = two words # trailing\n").unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("a".into(), "1".into(), 3),
+                ("b".into(), "two words".into(), 4)
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_missing_equals() {
+        assert!(parse_kv("just text").is_err());
+    }
+
+    #[test]
+    fn rejects_empty_value() {
+        assert!(parse_kv("a =").is_err());
+        assert!(parse_kv("= 3").is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Parallel evaluation coordinator: fan a set of (task × mapper) simulation
+//! jobs over worker threads. Used by the CLI `e2e` path and the Fig. 13/14
+//! benches to sweep the whole zoo quickly.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::cost::{evaluate, Mapper, ModelCost};
+use crate::ir::ModelGraph;
+
+/// Which mapper to run (the trait objects themselves are not `Send`-bound
+/// cheaply, so jobs carry an enum).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapperKind {
+    PipeOrgan,
+    PipeOrganMesh,
+    TangramLike,
+    SimbaLike,
+    PipeOrganOn(TopologyKind),
+}
+
+impl MapperKind {
+    pub fn instantiate(self) -> Box<dyn Mapper> {
+        match self {
+            MapperKind::PipeOrgan => Box::new(crate::mapper::PipeOrgan::default()),
+            MapperKind::PipeOrganMesh => Box::new(crate::mapper::PipeOrgan::on_mesh()),
+            MapperKind::TangramLike => Box::new(crate::baselines::TangramLike),
+            MapperKind::SimbaLike => Box::new(crate::baselines::SimbaLike),
+            MapperKind::PipeOrganOn(t) => Box::new(crate::mapper::PipeOrgan::on(t)),
+        }
+    }
+}
+
+/// One evaluation job.
+#[derive(Clone)]
+pub struct EvalJob {
+    pub graph: Arc<ModelGraph>,
+    pub mapper: MapperKind,
+    pub cfg: ArchConfig,
+}
+
+/// Its outcome.
+pub struct EvalOutcome {
+    pub task: String,
+    pub mapper_name: String,
+    pub cost: ModelCost,
+    pub mean_depth: f64,
+}
+
+/// Run all jobs over `workers` threads (order of results matches jobs).
+pub fn run_jobs(jobs: Vec<EvalJob>, workers: usize) -> Vec<EvalOutcome> {
+    let n = jobs.len();
+    let queue = Arc::new(Mutex::new(
+        jobs.into_iter().enumerate().collect::<Vec<_>>(),
+    ));
+    let (tx, rx) = mpsc::channel::<(usize, EvalOutcome)>();
+    let workers = workers.max(1).min(n.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                let job = { queue.lock().unwrap().pop() };
+                let Some((idx, job)) = job else { break };
+                let mapper = job.mapper.instantiate();
+                let plan = mapper.plan(&job.graph, &job.cfg);
+                let cost = evaluate(&job.graph, &plan, &job.cfg);
+                let _ = tx.send((
+                    idx,
+                    EvalOutcome {
+                        task: job.graph.name.clone(),
+                        mapper_name: plan.mapper_name.clone(),
+                        cost,
+                        mean_depth: plan.mean_depth(),
+                    },
+                ));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<EvalOutcome>> = (0..n).map(|_| None).collect();
+        for (idx, outcome) in rx {
+            out[idx] = Some(outcome);
+        }
+        out.into_iter().map(|o| o.expect("job lost")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn parallel_matches_serial() {
+        let cfg = ArchConfig::default();
+        let g = Arc::new(workloads::keyword_detection());
+        let jobs: Vec<EvalJob> = [MapperKind::PipeOrgan, MapperKind::TangramLike, MapperKind::SimbaLike]
+            .into_iter()
+            .map(|mapper| EvalJob {
+                graph: Arc::clone(&g),
+                mapper,
+                cfg: cfg.clone(),
+            })
+            .collect();
+        let par = run_jobs(jobs.clone(), 3);
+        let ser = run_jobs(jobs, 1);
+        assert_eq!(par.len(), 3);
+        for (p, s) in par.iter().zip(&ser) {
+            assert_eq!(p.mapper_name, s.mapper_name);
+            assert_eq!(p.cost.cycles, s.cost.cycles);
+            assert_eq!(p.cost.dram_words, s.cost.dram_words);
+        }
+    }
+
+    #[test]
+    fn results_keep_job_order() {
+        let cfg = ArchConfig::default();
+        let tasks = [
+            workloads::keyword_detection(),
+            workloads::gaze_estimation(),
+        ];
+        let jobs: Vec<EvalJob> = tasks
+            .iter()
+            .map(|g| EvalJob {
+                graph: Arc::new(g.clone()),
+                mapper: MapperKind::PipeOrgan,
+                cfg: cfg.clone(),
+            })
+            .collect();
+        let out = run_jobs(jobs, 4);
+        assert_eq!(out[0].task, "keyword_detection");
+        assert_eq!(out[1].task, "gaze_estimation");
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordination: the multi-threaded evaluation job system and the
+//! functional pipelined executor that drives AOT tile programs through
+//! PJRT in producer/consumer pipeline order (E15 in DESIGN.md).
+
+mod executor;
+pub mod jobs;
+
+pub use executor::{
+    compare_outputs, run_fused, run_op_by_op, run_pipelined, ExecReport, FusedSession,
+    OpByOpSession, PipelinedSession, SegmentData,
+};
+pub use jobs::{run_jobs, EvalJob, EvalOutcome, MapperKind};

@@ -1,0 +1,325 @@
+//! Plan evaluation: latency, DRAM traffic and energy of a mapping.
+//!
+//! A segment's wall clock is the max of four bounds:
+//! 1. the Fig. 3 compute waterfall (init + steady state of the bottleneck
+//!    stage),
+//! 2. NoC serialization — the busiest link must carry its whole-segment
+//!    traffic at `link_words_per_cycle`,
+//! 3. global-buffer serialization for via-GB handoffs,
+//! 4. DRAM bandwidth for the segment's off-chip traffic.
+
+use crate::config::ArchConfig;
+use crate::energy::EnergyModel;
+use crate::ir::ModelGraph;
+use crate::memory::{bandwidth_cycles, segment_dram_traffic};
+use crate::noc::Topology;
+use crate::pipeline::{pipeline_latency, StageInterval};
+use crate::sim::analyze;
+use crate::spatial::Placement;
+use crate::traffic::{derive_flows, StageHandoff};
+
+use super::plan::{MappingPlan, PlannedSegment};
+
+/// Global-buffer bandwidth for coarse-grained (via-GB) handoffs, in words
+/// per cycle: a wide SRAM port at Table III sizes.
+pub const GB_WORDS_PER_CYCLE: f64 = 32.0;
+
+/// Cost of one planned segment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentCost {
+    /// Fig. 3 compute-waterfall latency in cycles.
+    pub pipeline_cycles: f64,
+    /// NoC serialization bound in cycles.
+    pub noc_cycles: f64,
+    /// Global-buffer serialization bound in cycles.
+    pub gb_cycles: f64,
+    /// DRAM-bandwidth bound in cycles.
+    pub dram_cycles: f64,
+    /// max of the four bounds — the segment's wall clock.
+    pub cycles: f64,
+    pub dram_words: u64,
+    /// Worst-case channel load *per bottleneck interval* (words) — the
+    /// Fig. 15 metric.
+    pub worst_channel_load_per_interval: f64,
+    /// Compute interval of the bottleneck stage (cycles).
+    pub bottleneck_compute_interval: f64,
+    pub energy: f64,
+    /// NoC share of the energy.
+    pub noc_energy: f64,
+}
+
+impl SegmentCost {
+    /// Is the segment NoC-bound ("congested" in the paper's sense)?
+    pub fn noc_bound(&self) -> bool {
+        self.noc_cycles > self.pipeline_cycles
+    }
+}
+
+/// Whole-model cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCost {
+    pub per_segment: Vec<SegmentCost>,
+    pub cycles: f64,
+    pub dram_words: u64,
+    pub energy: f64,
+}
+
+/// Evaluate a full mapping plan.
+pub fn evaluate(graph: &ModelGraph, plan: &MappingPlan, cfg: &ArchConfig) -> ModelCost {
+    let topo = Topology::cached(plan.topology, cfg.pe_rows, cfg.pe_cols);
+    let energy = EnergyModel::default();
+    let per_segment: Vec<SegmentCost> = plan
+        .segments
+        .iter()
+        .map(|s| evaluate_segment(graph, s, cfg, &topo, &energy))
+        .collect();
+    ModelCost {
+        cycles: per_segment.iter().map(|s| s.cycles).sum(),
+        dram_words: per_segment.iter().map(|s| s.dram_words).sum(),
+        energy: per_segment.iter().map(|s| s.energy).sum(),
+        per_segment,
+    }
+}
+
+/// Evaluate one planned segment on a topology.
+pub fn evaluate_segment(
+    graph: &ModelGraph,
+    seg: &PlannedSegment,
+    cfg: &ArchConfig,
+    topo: &Topology,
+    em: &EnergyModel,
+) -> SegmentCost {
+    let depth = seg.depth();
+    let macs: Vec<u64> = seg.segment.layers().map(|i| graph.layer(i).macs()).collect();
+
+    // ---- bound 1: Fig. 3 compute waterfall -------------------------------
+    let dot = cfg.pe_dot_product as f64;
+    let intervals_of = |stage: usize| -> u64 {
+        seg.handoffs
+            .iter()
+            .find(|h| !h.is_skip && h.from_stage == stage)
+            .or_else(|| {
+                seg.handoffs
+                    .iter()
+                    .find(|h| !h.is_skip && h.to_stage == stage)
+            })
+            .map(|h| h.intervals.max(1))
+            .unwrap_or(1)
+    };
+    let mut stage_intervals = Vec::with_capacity(depth);
+    let mut bottleneck_compute = 0f64;
+    let mut bottleneck_t = 1u64;
+    for s in 0..depth {
+        let pes = seg.pe_alloc[s].max(1) as f64;
+        let total_compute = macs[s] as f64 / (pes * dot);
+        let t = intervals_of(s);
+        let compute_interval = total_compute / t as f64;
+        if compute_interval > bottleneck_compute {
+            bottleneck_compute = compute_interval;
+            bottleneck_t = t;
+        }
+        stage_intervals.push(StageInterval {
+            compute_delay: compute_interval,
+            comm_delay: 0.0,
+            intervals: t,
+        });
+    }
+    let lat = pipeline_latency(&stage_intervals);
+
+    // ---- bound 2: NoC serialization --------------------------------------
+    // Route each NoC handoff's *whole-segment* volume; the busiest link
+    // sets the serialization bound.
+    let placement = Placement::build(cfg.pe_rows, cfg.pe_cols, seg.organization, &seg.pe_alloc);
+    let noc_handoffs: Vec<StageHandoff> = seg
+        .handoffs
+        .iter()
+        .filter(|h| !h.via_gb)
+        .map(|h| StageHandoff {
+            from_stage: h.from_stage,
+            to_stage: h.to_stage,
+            words_per_interval: (h.words_per_interval * h.intervals) as f64,
+            is_skip: h.is_skip,
+        })
+        .collect();
+    let flows = derive_flows(topo, &placement, &noc_handoffs);
+    let load = analyze(topo, &flows);
+    let noc_cycles = load.worst_channel_load / cfg.link_words_per_cycle;
+
+    // ---- bound 3: global-buffer serialization -----------------------------
+    let gb_words: u64 = seg
+        .handoffs
+        .iter()
+        .filter(|h| h.via_gb)
+        .map(|h| 2 * h.words_per_interval * h.intervals)
+        .sum();
+    let gb_cycles = gb_words as f64 / GB_WORDS_PER_CYCLE;
+
+    // ---- bound 4: DRAM bandwidth ------------------------------------------
+    let handoff_words: Vec<u64> = seg
+        .handoffs
+        .iter()
+        .filter(|h| !h.is_skip)
+        .map(|h| h.words_per_interval)
+        .collect();
+    let dram = segment_dram_traffic(graph, &seg.segment, &handoff_words, cfg);
+    let dram_cycles = bandwidth_cycles(dram.total(), cfg);
+
+    let cycles = lat
+        .total
+        .max(noc_cycles)
+        .max(gb_cycles)
+        .max(dram_cycles);
+
+    // ---- energy ------------------------------------------------------------
+    let noc_energy = em.noc_interval_energy(&load); // totals, not per interval
+    let total_energy = em.compute_energy(macs.iter().sum())
+        + noc_energy
+        + em.sram_energy(gb_words)
+        + em.dram_energy(dram.total());
+
+    SegmentCost {
+        pipeline_cycles: lat.total,
+        noc_cycles,
+        gb_cycles,
+        dram_cycles,
+        cycles,
+        dram_words: dram.total(),
+        worst_channel_load_per_interval: load.worst_channel_load / bottleneck_t.max(1) as f64,
+        bottleneck_compute_interval: bottleneck_compute,
+        energy: total_energy,
+        noc_energy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::cost::plan::{PlannedHandoff, PlannedSegment};
+    use crate::dataflow::DataflowStyle;
+    use crate::pipeline::Segment;
+    use crate::spatial::Organization;
+    use crate::workloads::synthetic;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    /// Hand-built depth-2 fine-grained plan over a memory-bound segment.
+    fn depth2_plan(org: Organization, via_gb: bool) -> (crate::ir::ModelGraph, MappingPlan) {
+        let g = synthetic::pointwise_conv_segment(2);
+        let rows = g.layer(0).op.output_rows();
+        let words = g.layer(0).output_act_words() / rows;
+        let plan = MappingPlan {
+            mapper_name: "hand".into(),
+            topology: TopologyKind::Mesh,
+            segments: vec![PlannedSegment {
+                segment: Segment::new(0, 2),
+                organization: org,
+                pe_alloc: vec![512, 512],
+                styles: vec![DataflowStyle::OutputStationary; 2],
+                handoffs: vec![PlannedHandoff {
+                    from_stage: 0,
+                    to_stage: 1,
+                    words_per_interval: words,
+                    intervals: rows,
+                    via_gb,
+                    is_skip: false,
+                }],
+            }],
+        };
+        (g, plan)
+    }
+
+    fn op_by_op_plan(g: &crate::ir::ModelGraph) -> MappingPlan {
+        MappingPlan {
+            mapper_name: "opbyop".into(),
+            topology: TopologyKind::Mesh,
+            segments: (0..g.num_layers())
+                .map(|i| PlannedSegment {
+                    segment: Segment::new(i, 1),
+                    organization: Organization::Sequential,
+                    pe_alloc: vec![1024],
+                    styles: vec![DataflowStyle::OutputStationary],
+                    handoffs: vec![],
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn pipelined_beats_op_by_op_on_activation_heavy() {
+        let (g, plan) = depth2_plan(Organization::FineStriped1D, false);
+        let pipe = evaluate(&g, &plan, &cfg());
+        let op = evaluate(&g, &op_by_op_plan(&g), &cfg());
+        assert!(pipe.dram_words < op.dram_words);
+        assert!(
+            pipe.cycles < op.cycles,
+            "pipe {} op {}",
+            pipe.cycles,
+            op.cycles
+        );
+    }
+
+    #[test]
+    fn striped_outruns_blocked_when_congested() {
+        let (g, blocked) = depth2_plan(Organization::Blocked1D, false);
+        let (_, striped) = depth2_plan(Organization::FineStriped1D, false);
+        let cb = evaluate(&g, &blocked, &cfg());
+        let cs = evaluate(&g, &striped, &cfg());
+        assert!(cb.per_segment[0].noc_cycles > cs.per_segment[0].noc_cycles);
+        assert!(cs.cycles <= cb.cycles);
+    }
+
+    #[test]
+    fn amp_relieves_blocked_congestion() {
+        let (g, mut plan) = depth2_plan(Organization::Blocked1D, false);
+        let mesh = evaluate(&g, &plan, &cfg());
+        plan.topology = TopologyKind::Amp;
+        let amp = evaluate(&g, &plan, &cfg());
+        assert!(amp.per_segment[0].noc_cycles < mesh.per_segment[0].noc_cycles);
+        assert!(amp.cycles <= mesh.cycles);
+    }
+
+    #[test]
+    fn gb_handoff_serializes_and_costs_sram_energy() {
+        let (g, noc_plan) = depth2_plan(Organization::Blocked1D, false);
+        let (_, gb_plan) = depth2_plan(Organization::Blocked1D, true);
+        let n = evaluate(&g, &noc_plan, &cfg());
+        let b = evaluate(&g, &gb_plan, &cfg());
+        assert_eq!(b.per_segment[0].noc_cycles, 0.0);
+        assert!(b.per_segment[0].gb_cycles > 0.0);
+        assert!(b.energy > n.energy - n.per_segment[0].noc_energy);
+    }
+
+    #[test]
+    fn dram_bound_segment_reports_bandwidth_limit() {
+        // Depth-1 giant GEMM: bandwidth dominates.
+        let mut g = crate::ir::ModelGraph::new("fc");
+        g.add_root(crate::ir::Layer::new("fc", crate::ir::Op::gemm(8, 4096, 4096)));
+        let c = evaluate(&g, &op_by_op_plan(&g), &cfg());
+        assert!(c.per_segment[0].dram_cycles > c.per_segment[0].pipeline_cycles);
+        assert_eq!(c.cycles, c.per_segment[0].dram_cycles);
+    }
+
+    #[test]
+    fn congestion_flag_matches_bounds() {
+        let (g, blocked) = depth2_plan(Organization::Blocked1D, false);
+        let cb = evaluate(&g, &blocked, &cfg());
+        // Blocked fine-grained at compute interval ~2 cycles congests
+        // (Fig. 8): the NoC bound exceeds the compute waterfall.
+        assert!(cb.per_segment[0].noc_bound());
+        let (_, striped) = depth2_plan(Organization::FineStriped1D, false);
+        let cs = evaluate(&g, &striped, &cfg());
+        assert!(!cs.per_segment[0].noc_bound());
+    }
+
+    #[test]
+    fn costs_are_positive_and_additive() {
+        let (g, plan) = depth2_plan(Organization::FineStriped1D, false);
+        let c = evaluate(&g, &plan, &cfg());
+        assert!(c.cycles > 0.0 && c.energy > 0.0 && c.dram_words > 0);
+        let sum: f64 = c.per_segment.iter().map(|s| s.cycles).sum();
+        assert_eq!(c.cycles, sum);
+    }
+}

@@ -1,0 +1,9 @@
+//! End-to-end cost model: composes the compute-interval model (Fig. 3),
+//! the NoC channel-load analysis, and the memory/bandwidth model into
+//! per-segment and per-model latency, DRAM traffic and energy.
+
+mod eval;
+mod plan;
+
+pub use eval::{evaluate, evaluate_segment, ModelCost, SegmentCost};
+pub use plan::{Mapper, MappingPlan, PlannedHandoff, PlannedSegment};

@@ -1,0 +1,160 @@
+//! Mapping plans: the common output format of the PipeOrgan mapper and the
+//! TANGRAM-like / SIMBA-like baselines, consumed by the evaluator.
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::dataflow::DataflowStyle;
+use crate::ir::ModelGraph;
+use crate::pipeline::Segment;
+use crate::spatial::Organization;
+
+/// One stage-to-stage data handoff inside a planned segment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedHandoff {
+    pub from_stage: usize,
+    pub to_stage: usize,
+    /// Words exchanged per pipeline interval.
+    pub words_per_interval: u64,
+    /// Number of pipeline intervals for this handoff.
+    pub intervals: u64,
+    /// True when the handoff exceeds the register files and must round-trip
+    /// the global buffer.
+    pub via_gb: bool,
+    /// True for skip-connection handoffs.
+    pub is_skip: bool,
+}
+
+/// A segment with all stage-2 decisions attached.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedSegment {
+    pub segment: Segment,
+    pub organization: Organization,
+    /// PEs allocated per stage (sums to ≤ the array size; Sequential uses
+    /// the whole array per stage).
+    pub pe_alloc: Vec<usize>,
+    /// Dataflow style per stage.
+    pub styles: Vec<DataflowStyle>,
+    pub handoffs: Vec<PlannedHandoff>,
+}
+
+impl PlannedSegment {
+    pub fn depth(&self) -> usize {
+        self.segment.depth
+    }
+
+    /// Structural validation against the model and the array size.
+    pub fn validate(&self, graph: &ModelGraph, cfg: &ArchConfig) -> Result<(), String> {
+        let d = self.depth();
+        if self.pe_alloc.len() != d || self.styles.len() != d {
+            return Err(format!(
+                "segment at {}: alloc/styles arity mismatch (depth {d})",
+                self.segment.start
+            ));
+        }
+        if self.segment.end() > graph.num_layers() {
+            return Err("segment exceeds model".into());
+        }
+        let total: usize = self.pe_alloc.iter().sum();
+        if self.organization != Organization::Sequential && total > cfg.num_pes() {
+            return Err(format!("allocated {total} PEs > array {}", cfg.num_pes()));
+        }
+        for h in &self.handoffs {
+            if h.from_stage >= d || h.to_stage >= d || h.from_stage >= h.to_stage {
+                return Err(format!(
+                    "bad handoff {}→{} in depth-{d} segment",
+                    h.from_stage, h.to_stage
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A whole-model mapping: the unit both mappers produce and Fig. 13/14
+/// evaluate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MappingPlan {
+    pub mapper_name: String,
+    pub topology: TopologyKind,
+    pub segments: Vec<PlannedSegment>,
+}
+
+impl MappingPlan {
+    pub fn validate(&self, graph: &ModelGraph, cfg: &ArchConfig) -> Result<(), String> {
+        let segs: Vec<Segment> = self.segments.iter().map(|s| s.segment.clone()).collect();
+        crate::pipeline::segment::segments_cover(&segs, graph.num_layers())?;
+        for s in &self.segments {
+            s.validate(graph, cfg)?;
+        }
+        Ok(())
+    }
+
+    pub fn mean_depth(&self) -> f64 {
+        if self.segments.is_empty() {
+            return 0.0;
+        }
+        self.segments.iter().map(|s| s.depth() as f64).sum::<f64>() / self.segments.len() as f64
+    }
+}
+
+/// A mapping strategy: PipeOrgan or one of the baselines.
+pub trait Mapper {
+    fn name(&self) -> &'static str;
+    /// The NoC this mapper assumes.
+    fn topology(&self) -> TopologyKind;
+    fn plan(&self, graph: &ModelGraph, cfg: &ArchConfig) -> MappingPlan;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::synthetic;
+
+    fn trivial_plan(graph: &ModelGraph) -> MappingPlan {
+        MappingPlan {
+            mapper_name: "trivial".into(),
+            topology: TopologyKind::Mesh,
+            segments: (0..graph.num_layers())
+                .map(|i| PlannedSegment {
+                    segment: Segment::new(i, 1),
+                    organization: Organization::Sequential,
+                    pe_alloc: vec![1024],
+                    styles: vec![DataflowStyle::ActivationStationary],
+                    handoffs: vec![],
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn trivial_plan_validates() {
+        let g = synthetic::equal_conv_segment(4);
+        let p = trivial_plan(&g);
+        p.validate(&g, &ArchConfig::default()).unwrap();
+        assert_eq!(p.mean_depth(), 1.0);
+    }
+
+    #[test]
+    fn coverage_gap_fails() {
+        let g = synthetic::equal_conv_segment(4);
+        let mut p = trivial_plan(&g);
+        p.segments.remove(1);
+        assert!(p.validate(&g, &ArchConfig::default()).is_err());
+    }
+
+    #[test]
+    fn arity_mismatch_fails() {
+        let g = synthetic::equal_conv_segment(4);
+        let mut p = trivial_plan(&g);
+        p.segments[0].styles.clear();
+        assert!(p.validate(&g, &ArchConfig::default()).is_err());
+    }
+
+    #[test]
+    fn over_allocation_fails() {
+        let g = synthetic::equal_conv_segment(2);
+        let mut p = trivial_plan(&g);
+        p.segments[0].organization = Organization::Blocked1D;
+        p.segments[0].pe_alloc = vec![2048];
+        assert!(p.validate(&g, &ArchConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! The paper's intra-operator dataflow heuristic (Sec. IV-A, "Determining
+//! Intra-operation Dataflows"): choose the loop order from the A/W ratio.
+//!
+//! - weight-heavy (A/W < 1): weight-stationary — weight ranks (K, C)
+//!   outermost, maximizing weight reuse; *not* pipeline-friendly (the
+//!   contracted rank C sits outside the output ranks).
+//! - strongly activation-heavy (A/W ≥ `AS_THRESHOLD`): fully activation
+//!   stationary, NHWKCRS.
+//! - moderately activation-heavy (1 ≤ A/W < `AS_THRESHOLD`): allow some
+//!   weight reuse, NHKCWRS (the paper's example).
+
+use crate::ir::{Layer, OpKind};
+
+use super::nest::Rank;
+
+/// Ratio above which the heuristic goes fully activation-stationary.
+pub const AS_THRESHOLD: f64 = 64.0;
+
+/// Dataflow families used by stage 1 and the baselines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataflowStyle {
+    /// Weight ranks outermost (KCNHWRS for conv, KC H for gemm).
+    WeightStationary,
+    /// Fully activation-stationary: NHWKCRS / H K C.
+    ActivationStationary,
+    /// Activation-stationary with some weight reuse: NHKCWRS.
+    MixedActivation,
+    /// Output-stationary: output ranks outer, contracted inner (TANGRAM
+    /// producer side). Same rank order as ActivationStationary for conv but
+    /// kept distinct for reporting.
+    OutputStationary,
+    /// Input-stationary: input ranks outer, K innermost of the outer group
+    /// (TANGRAM consumer side): NHWCKRS.
+    InputStationary,
+}
+
+impl DataflowStyle {
+    pub fn name(self) -> &'static str {
+        match self {
+            DataflowStyle::WeightStationary => "weight_stationary",
+            DataflowStyle::ActivationStationary => "activation_stationary",
+            DataflowStyle::MixedActivation => "mixed_activation",
+            DataflowStyle::OutputStationary => "output_stationary",
+            DataflowStyle::InputStationary => "input_stationary",
+        }
+    }
+
+    /// Temporal rank order (outermost first) for an operator kind.
+    pub fn rank_order(self, kind: OpKind) -> Vec<Rank> {
+        use Rank::*;
+        match kind {
+            OpKind::Gemm => match self {
+                // Unified: H=M, K=cols, C=contracted.
+                DataflowStyle::WeightStationary => vec![K, C, H],
+                DataflowStyle::ActivationStationary | DataflowStyle::OutputStationary => {
+                    vec![H, K, C] // MNK
+                }
+                DataflowStyle::MixedActivation => vec![H, K, C],
+                DataflowStyle::InputStationary => vec![H, C, K], // MKN
+            },
+            // Depthwise conv has no K rank; C is both output and contracted.
+            OpKind::DwConv2d => match self {
+                DataflowStyle::WeightStationary => vec![C, N, H, W, R, S],
+                _ => vec![N, H, W, C, R, S],
+            },
+            _ => match self {
+                DataflowStyle::WeightStationary => vec![K, C, N, H, W, R, S],
+                DataflowStyle::ActivationStationary | DataflowStyle::OutputStationary => {
+                    vec![N, H, W, K, C, R, S]
+                }
+                DataflowStyle::MixedActivation => vec![N, H, K, C, W, R, S],
+                DataflowStyle::InputStationary => vec![N, H, W, C, K, R, S],
+            },
+        }
+    }
+
+    /// Pipeline-friendliness: a producer can stage output to a consumer only
+    /// if its outermost loop is an output rank (Fig. 4 condition 2) that is
+    /// *not* also a weight rank — staging must advance along batch/spatial
+    /// dims so the consumer sees complete rows. Weight-stationary orders
+    /// (K or C outermost) produce K-major and are "not friendly to
+    /// pipelining" (Sec. IV-A).
+    pub fn producer_pipeline_friendly(self, kind: OpKind) -> bool {
+        let order = self.rank_order(kind);
+        let out = super::nest::output_ranks(kind);
+        order
+            .first()
+            .map(|r| out.contains(r) && !matches!(r, Rank::K | Rank::C))
+            .unwrap_or(false)
+    }
+}
+
+/// The stage-1 heuristic: pick a dataflow style for a layer from its A/W
+/// ratio (Sec. IV-A).
+pub fn choose_dataflow(layer: &Layer) -> DataflowStyle {
+    let ratio = layer.aw_ratio();
+    if ratio < 1.0 {
+        DataflowStyle::WeightStationary
+    } else if ratio >= AS_THRESHOLD {
+        DataflowStyle::ActivationStationary
+    } else {
+        DataflowStyle::MixedActivation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Layer, Op};
+
+    #[test]
+    fn rank_orders_match_paper_strings() {
+        use crate::dataflow::LoopNest;
+        let conv = Op::conv2d(1, 8, 8, 4, 4, 3, 3, 1, 1);
+        let s = |st: DataflowStyle| LoopNest::for_op(&conv, st).order_string();
+        assert_eq!(s(DataflowStyle::ActivationStationary), "NHWKCRS");
+        assert_eq!(s(DataflowStyle::MixedActivation), "NHKCWRS");
+        assert_eq!(s(DataflowStyle::InputStationary), "NHWCKRS");
+        assert_eq!(s(DataflowStyle::WeightStationary), "KCNHWRS");
+    }
+
+    #[test]
+    fn weight_stationary_is_not_pipeline_friendly() {
+        assert!(!DataflowStyle::WeightStationary.producer_pipeline_friendly(OpKind::Conv2d));
+        assert!(DataflowStyle::ActivationStationary.producer_pipeline_friendly(OpKind::Conv2d));
+        assert!(DataflowStyle::InputStationary.producer_pipeline_friendly(OpKind::Conv2d));
+        assert!(!DataflowStyle::WeightStationary.producer_pipeline_friendly(OpKind::Gemm));
+        assert!(DataflowStyle::ActivationStationary.producer_pipeline_friendly(OpKind::Gemm));
+    }
+
+    #[test]
+    fn heuristic_by_ratio() {
+        // weight heavy FC
+        let fc = Layer::new("fc", Op::gemm(1, 2048, 1000));
+        assert_eq!(choose_dataflow(&fc), DataflowStyle::WeightStationary);
+        // huge feature map conv
+        let big = Layer::new("big", Op::conv2d(1, 256, 256, 8, 8, 3, 3, 1, 1));
+        assert_eq!(choose_dataflow(&big), DataflowStyle::ActivationStationary);
+        // moderate conv
+        let mid = Layer::new("mid", Op::conv2d(1, 28, 28, 96, 96, 3, 3, 1, 1));
+        let r = mid.aw_ratio();
+        assert!(r >= 1.0 && r < AS_THRESHOLD, "r={r}");
+        assert_eq!(choose_dataflow(&mid), DataflowStyle::MixedActivation);
+    }
+
+    #[test]
+    fn dwconv_orders_skip_k() {
+        let dw = Op::dwconv2d(1, 16, 16, 32, 3, 1);
+        let order = DataflowStyle::ActivationStationary.rank_order(dw.kind());
+        assert!(!order.contains(&Rank::K));
+        assert_eq!(order[0], Rank::N);
+    }
+}

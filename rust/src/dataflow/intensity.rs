@@ -1,0 +1,180 @@
+//! Arithmetic intensity and buffer-fit analysis.
+//!
+//! The paper validates its dataflow heuristic by checking that the chosen
+//! dataflow reaches *best-case arithmetic intensity* (only cold misses) for
+//! 99.94 % of XR-bench layers with a 512 KB buffer and 97.2 % with 256 KB
+//! (Sec. IV-A, footnote 3). This module reproduces that experiment (E14).
+
+use crate::ir::Layer;
+
+use super::heuristic::DataflowStyle;
+
+/// Best-case arithmetic intensity (MACs per word of off-chip traffic),
+/// counting each tensor exactly once (cold misses only).
+pub fn best_case_intensity(layer: &Layer) -> f64 {
+    let traffic =
+        layer.input_act_words() + layer.output_act_words() + layer.weight_words();
+    if traffic == 0 {
+        return 0.0;
+    }
+    layer.macs() as f64 / traffic as f64
+}
+
+/// Minimum on-chip buffer (in words) for a layer to achieve best-case
+/// (cold-miss-only) intensity.
+///
+/// Cold-miss-only traffic is achievable iff *one* operand tensor can stay
+/// resident while the others stream through double-buffered slices:
+///
+/// - weights resident + activations streamed row-by-row, or
+/// - input activations resident + weights streamed one output-channel
+///   filter-set at a time (output rows drain as produced).
+///
+/// The achievable requirement is the smaller of the two. Note "stationary"
+/// in the style names describes the *reuse order* (which tensor the loop
+/// nest keeps hot), not DRAM residency — e.g. a weight-stationary FC layer
+/// with huge weights pins its small input activations on-chip and streams
+/// the weights exactly once, which is still cold-miss-only. Hence all loop
+/// orders share the same requirement and `style` only matters for the
+/// (rare) explicitly-constrained InputStationary case.
+pub fn required_buffer_words(layer: &Layer, style: DataflowStyle) -> u64 {
+    let w = layer.weight_words();
+    let a_in = layer.input_act_words();
+    let a_out = layer.output_act_words();
+    let rows = layer.op.output_rows().max(1);
+    let in_slice = crate::util::ceil_div(a_in, rows);
+    let out_slice = crate::util::ceil_div(a_out, rows);
+    // One output-channel filter set (K-slice of the weights).
+    let k_extent = super::rank_extent(&layer.op, super::Rank::K).max(1);
+    let w_kslice = crate::util::ceil_div(w, k_extent);
+    let weights_resident = w + 2 * (in_slice + out_slice);
+    let input_resident = a_in + 2 * (w_kslice + out_slice);
+    match style {
+        DataflowStyle::InputStationary => input_resident,
+        // Every other loop order can keep whichever operand is cheaper
+        // resident without extra misses.
+        _ => weights_resident.min(input_resident),
+    }
+}
+
+/// Does `layer` under `style` achieve best-case intensity with
+/// `buffer_words` of on-chip storage?
+pub fn buffer_fit(layer: &Layer, style: DataflowStyle, buffer_words: u64) -> bool {
+    required_buffer_words(layer, style) <= buffer_words
+}
+
+/// Achieved intensity: best-case when the buffer fits; otherwise degraded by
+/// re-fetching the streamed large tensor once per tile pass of the
+/// stationary one (a standard tiling lower bound).
+pub fn achieved_intensity(layer: &Layer, style: DataflowStyle, buffer_words: u64) -> f64 {
+    if buffer_fit(layer, style, buffer_words) {
+        return best_case_intensity(layer);
+    }
+    let w = layer.weight_words().max(1);
+    let a = layer.input_act_words() + layer.output_act_words();
+    // Number of passes over the streamed tensor ≈ stationary / buffer.
+    let stationary = match style {
+        DataflowStyle::WeightStationary => w,
+        _ => a.max(1),
+    };
+    let passes = crate::util::ceil_div(stationary, buffer_words.max(1)).max(1);
+    let traffic = match style {
+        DataflowStyle::WeightStationary => w + passes * a,
+        _ => a + passes * w,
+    };
+    layer.macs() as f64 / traffic as f64
+}
+
+/// Result of the E14 heuristic-validation sweep over a set of layers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntensityReport {
+    pub total_layers: usize,
+    pub achieving_best_case: usize,
+    pub buffer_words: u64,
+}
+
+impl IntensityReport {
+    /// Fraction of einsum layers whose *heuristically chosen* dataflow
+    /// reaches best-case intensity at this buffer size.
+    pub fn sweep<'a>(
+        layers: impl IntoIterator<Item = &'a Layer>,
+        buffer_words: u64,
+    ) -> IntensityReport {
+        let mut total = 0;
+        let mut ok = 0;
+        for layer in layers {
+            if !layer.is_einsum() {
+                continue;
+            }
+            total += 1;
+            let style = super::choose_dataflow(layer);
+            if buffer_fit(layer, style, buffer_words) {
+                ok += 1;
+            }
+        }
+        IntensityReport {
+            total_layers: total,
+            achieving_best_case: ok,
+            buffer_words,
+        }
+    }
+
+    pub fn fraction(&self) -> f64 {
+        if self.total_layers == 0 {
+            0.0
+        } else {
+            self.achieving_best_case as f64 / self.total_layers as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::choose_dataflow;
+    use crate::ir::{Layer, Op};
+
+    #[test]
+    fn best_case_intensity_conv() {
+        let l = Layer::new("c", Op::conv2d(1, 32, 32, 16, 32, 3, 3, 1, 1));
+        let ai = best_case_intensity(&l);
+        let traffic = (32 * 32 * 16 + 32 * 32 * 32 + 32 * 16 * 9) as f64;
+        assert!((ai - l.macs() as f64 / traffic).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fits_when_buffer_large() {
+        let l = Layer::new("c", Op::conv2d(1, 16, 16, 8, 8, 3, 3, 1, 1));
+        let style = choose_dataflow(&l);
+        assert!(buffer_fit(&l, style, 1 << 20));
+        assert!(!buffer_fit(&l, style, 16));
+    }
+
+    #[test]
+    fn achieved_degrades_when_too_small() {
+        let l = Layer::new("fc", Op::gemm(4, 4096, 4096));
+        let style = choose_dataflow(&l);
+        let best = best_case_intensity(&l);
+        let small = achieved_intensity(&l, style, 1024);
+        assert!(small < best, "small={small} best={best}");
+        let big = achieved_intensity(&l, style, 1 << 26);
+        assert!((big - best).abs() < 1e-12);
+    }
+
+    #[test]
+    fn e14_validation_shape_on_zoo() {
+        // Reproduce the Sec. IV-A validation: ≳95 % of zoo einsum layers hit
+        // best-case AI at 512 KB, and the fraction is monotone in buffer
+        // size. (Paper: 99.94 % @512 KB, 97.2 % @256 KB.)
+        let tasks = crate::workloads::all_tasks();
+        let layers: Vec<_> = tasks.iter().flat_map(|g| g.layers().iter()).collect();
+        let at = |kb: u64| {
+            IntensityReport::sweep(layers.iter().copied(), kb * 1024).fraction()
+        };
+        let f512 = at(512);
+        let f256 = at(256);
+        assert!(f512 >= 0.9, "512KB fraction {f512}");
+        assert!(f256 <= f512 + 1e-12);
+        assert!(f256 >= 0.75, "256KB fraction {f256}");
+    }
+}

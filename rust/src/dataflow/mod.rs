@@ -1,0 +1,44 @@
+//! Intra-operator dataflows (Sec. II-A, III-B): loop orders over the einsum
+//! ranks, the A/W-driven selection heuristic, and arithmetic-intensity /
+//! buffer-fit analysis.
+//!
+//! Rank vocabulary is unified across operator types so producer/consumer
+//! loop nests can be compared rank-by-rank in Algorithm 1:
+//!
+//! | rank | conv meaning                | GEMM meaning (Eq. 1) |
+//! |------|-----------------------------|----------------------|
+//! | N    | batch                       | —                    |
+//! | H    | output rows                 | M (output rows)      |
+//! | W    | output cols                 | —                    |
+//! | K    | output channels             | N (output cols)      |
+//! | C    | input channels (contracted) | K (contracted)       |
+//! | R,S  | filter window (contracted)  | —                    |
+//!
+//! With this mapping the paper's examples read directly: NHWKCRS–NHWCKRS is
+//! the finest-grained conv pair, MNK–MKN (= HKC–HCK here) the finest GEMM
+//! pair.
+
+mod heuristic;
+mod intensity;
+mod nest;
+
+pub use heuristic::{choose_dataflow, DataflowStyle};
+pub use intensity::{achieved_intensity, best_case_intensity, buffer_fit, IntensityReport};
+pub use nest::{
+    input_ranks, output_ranks, producer_to_consumer_rank, rank_extent, LoopDim, LoopNest, Rank,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    #[test]
+    fn module_level_example_from_paper() {
+        // NHWKCRS for a conv lowers to a nest whose outermost rank is N.
+        let op = Op::conv2d(1, 16, 16, 8, 8, 3, 3, 1, 1);
+        let nest = LoopNest::for_op(&op, DataflowStyle::ActivationStationary);
+        assert_eq!(nest.dims[0].rank, Rank::N);
+        assert_eq!(nest.dims[1].rank, Rank::H);
+    }
+}

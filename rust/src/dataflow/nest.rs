@@ -1,0 +1,304 @@
+//! Loop-nest representation: ordered ranks with extents and tile sizes.
+
+use crate::ir::{Op, OpKind};
+
+use super::DataflowStyle;
+
+/// Einsum rank in the unified vocabulary (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Rank {
+    N,
+    H,
+    W,
+    K,
+    C,
+    R,
+    S,
+}
+
+impl Rank {
+    pub fn letter(self) -> char {
+        match self {
+            Rank::N => 'N',
+            Rank::H => 'H',
+            Rank::W => 'W',
+            Rank::K => 'K',
+            Rank::C => 'C',
+            Rank::R => 'R',
+            Rank::S => 'S',
+        }
+    }
+
+    /// Contracted (reduction) ranks of a standard einsum.
+    pub fn is_contracted(self) -> bool {
+        matches!(self, Rank::C | Rank::R | Rank::S)
+    }
+}
+
+/// One temporal loop level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoopDim {
+    pub rank: Rank,
+    /// Full trip count of this rank.
+    pub extent: u64,
+    /// Tile size: the loop advances in steps of `tile` (1 = untiled).
+    pub tile: u64,
+}
+
+impl LoopDim {
+    pub fn new(rank: Rank, extent: u64) -> Self {
+        Self {
+            rank,
+            extent,
+            tile: 1,
+        }
+    }
+
+    /// Number of iterations of this loop level.
+    pub fn trips(&self) -> u64 {
+        crate::util::ceil_div(self.extent, self.tile)
+    }
+}
+
+/// An ordered temporal loop nest (outermost first) for one operator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopNest {
+    pub dims: Vec<LoopDim>,
+    /// Kind of the operator this nest was derived from.
+    pub op_kind: OpKind,
+}
+
+impl LoopNest {
+    /// Build the loop nest of `op` under a dataflow style. Ranks with unit
+    /// extent are kept (they matter for order comparisons but contribute
+    /// trip count 1).
+    pub fn for_op(op: &Op, style: DataflowStyle) -> LoopNest {
+        let order = style.rank_order(op.kind());
+        let dims = order
+            .into_iter()
+            .map(|rank| LoopDim::new(rank, rank_extent(op, rank)))
+            .collect();
+        LoopNest {
+            dims,
+            op_kind: op.kind(),
+        }
+    }
+
+    /// The rank order as a compact string, e.g. `"NHWKCRS"`.
+    pub fn order_string(&self) -> String {
+        self.dims.iter().map(|d| d.rank.letter()).collect()
+    }
+
+    /// Position of `rank` in the nest, if present.
+    pub fn position(&self, rank: Rank) -> Option<usize> {
+        self.dims.iter().position(|d| d.rank == rank)
+    }
+
+    /// Set the tile size of `rank` (no-op if absent).
+    pub fn set_tile(&mut self, rank: Rank, tile: u64) {
+        if let Some(d) = self.dims.iter_mut().find(|d| d.rank == rank) {
+            d.tile = tile.max(1).min(d.extent.max(1));
+        }
+    }
+
+    /// Ranks indexing the operator's *output* tensor.
+    pub fn output_ranks(&self) -> Vec<Rank> {
+        output_ranks(self.op_kind)
+    }
+
+    /// Ranks indexing the operator's *input activation* tensor.
+    pub fn input_ranks(&self) -> Vec<Rank> {
+        input_ranks(self.op_kind)
+    }
+
+    /// Total MAC-loop trip count (product of all trips × tiles ≈ extents).
+    pub fn total_iterations(&self) -> u64 {
+        self.dims.iter().map(|d| d.extent.max(1)).product()
+    }
+}
+
+/// Extent of `rank` for operator `op` (1 when the rank does not apply).
+pub fn rank_extent(op: &Op, rank: Rank) -> u64 {
+    match *op {
+        Op::Conv2d(p) | Op::DwConv2d(p) => match rank {
+            Rank::N => p.n as u64,
+            Rank::H => p.oh() as u64,
+            Rank::W => p.ow() as u64,
+            Rank::K => {
+                if matches!(op.kind(), OpKind::DwConv2d) {
+                    1
+                } else {
+                    p.k as u64
+                }
+            }
+            Rank::C => p.c as u64,
+            Rank::R => p.r as u64,
+            Rank::S => p.s as u64,
+        },
+        Op::Gemm { m, k, n } => match rank {
+            Rank::H => m as u64,
+            Rank::K => n as u64,
+            Rank::C => k as u64,
+            _ => 1,
+        },
+        Op::Pool {
+            n,
+            h,
+            w,
+            c,
+            window,
+            stride,
+        } => match rank {
+            Rank::N => n as u64,
+            Rank::H => (h.saturating_sub(window) / stride + 1) as u64,
+            Rank::W => (w.saturating_sub(window) / stride + 1) as u64,
+            Rank::C => c as u64,
+            Rank::R | Rank::S => window as u64,
+            Rank::K => 1,
+        },
+        Op::EltwiseAdd { n, h, w, c, .. } | Op::Upsample { n, h, w, c, .. } => match rank {
+            Rank::N => n as u64,
+            Rank::H => h as u64,
+            Rank::W => w as u64,
+            Rank::C => c as u64,
+            _ => 1,
+        },
+        Op::Concat {
+            n, h, w, c_each, ..
+        } => match rank {
+            Rank::N => n as u64,
+            Rank::H => h as u64,
+            Rank::W => w as u64,
+            Rank::C => c_each as u64,
+            _ => 1,
+        },
+        Op::RoiAlign { rois, out, c } => match rank {
+            Rank::N => rois as u64,
+            Rank::H | Rank::W => out as u64,
+            Rank::C => c as u64,
+            _ => 1,
+        },
+        Op::Rpn { h, w, c, anchors } => match rank {
+            Rank::H => h as u64,
+            Rank::W => w as u64,
+            Rank::C => c as u64,
+            Rank::K => anchors as u64,
+            _ => 1,
+        },
+    }
+}
+
+/// Ranks of the output tensor per operator kind.
+pub fn output_ranks(kind: OpKind) -> Vec<Rank> {
+    match kind {
+        OpKind::Conv2d => vec![Rank::N, Rank::H, Rank::W, Rank::K],
+        OpKind::DwConv2d => vec![Rank::N, Rank::H, Rank::W, Rank::C],
+        OpKind::Gemm => vec![Rank::H, Rank::K],
+        _ => vec![Rank::N, Rank::H, Rank::W, Rank::C],
+    }
+}
+
+/// Ranks of the input activation tensor per operator kind.
+pub fn input_ranks(kind: OpKind) -> Vec<Rank> {
+    match kind {
+        OpKind::Conv2d | OpKind::DwConv2d => vec![Rank::N, Rank::H, Rank::W, Rank::C],
+        OpKind::Gemm => vec![Rank::H, Rank::C],
+        _ => vec![Rank::N, Rank::H, Rank::W, Rank::C],
+    }
+}
+
+/// Map a rank of the producer's *output* tensor to the rank under which the
+/// consumer reads the same tensor as *input*. Standard chains:
+/// conv→conv: K→C, N/H/W identity (spatial dims align row-for-row for
+/// stride-1; staging still works per-row otherwise). GEMM→GEMM: K→C, H→H.
+pub fn producer_to_consumer_rank(
+    producer_kind: OpKind,
+    consumer_kind: OpKind,
+    rank: Rank,
+) -> Option<Rank> {
+    // Producer output ranks in the unified vocabulary.
+    let out = output_ranks(producer_kind);
+    if !out.contains(&rank) {
+        return None;
+    }
+    let mapped = match rank {
+        // Output channels become the consumer's contracted input channels.
+        Rank::K => Rank::C,
+        // DWConv producers already emit under C.
+        r => r,
+    };
+    if input_ranks(consumer_kind).contains(&mapped) {
+        Some(mapped)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    #[test]
+    fn conv_rank_extents() {
+        let op = Op::conv2d(2, 32, 32, 16, 64, 3, 3, 1, 1);
+        assert_eq!(rank_extent(&op, Rank::N), 2);
+        assert_eq!(rank_extent(&op, Rank::H), 32);
+        assert_eq!(rank_extent(&op, Rank::K), 64);
+        assert_eq!(rank_extent(&op, Rank::C), 16);
+        assert_eq!(rank_extent(&op, Rank::R), 3);
+    }
+
+    #[test]
+    fn gemm_maps_to_unified_ranks() {
+        let op = Op::gemm(64, 256, 512);
+        assert_eq!(rank_extent(&op, Rank::H), 64); // M
+        assert_eq!(rank_extent(&op, Rank::K), 512); // N
+        assert_eq!(rank_extent(&op, Rank::C), 256); // contracted K
+        assert_eq!(rank_extent(&op, Rank::W), 1);
+    }
+
+    #[test]
+    fn dwconv_has_no_k_rank() {
+        let op = Op::dwconv2d(1, 16, 16, 32, 3, 1);
+        assert_eq!(rank_extent(&op, Rank::K), 1);
+        assert_eq!(rank_extent(&op, Rank::C), 32);
+        assert_eq!(output_ranks(op.kind()), vec![Rank::N, Rank::H, Rank::W, Rank::C]);
+    }
+
+    #[test]
+    fn producer_consumer_rank_mapping() {
+        use OpKind::*;
+        // conv K → conv C
+        assert_eq!(producer_to_consumer_rank(Conv2d, Conv2d, Rank::K), Some(Rank::C));
+        // conv H → conv H
+        assert_eq!(producer_to_consumer_rank(Conv2d, Conv2d, Rank::H), Some(Rank::H));
+        // contracted producer rank is not in its output
+        assert_eq!(producer_to_consumer_rank(Conv2d, Conv2d, Rank::C), None);
+        // gemm H (M) → gemm H
+        assert_eq!(producer_to_consumer_rank(Gemm, Gemm, Rank::H), Some(Rank::H));
+        // gemm K (cols) → gemm C (contracted)
+        assert_eq!(producer_to_consumer_rank(Gemm, Gemm, Rank::K), Some(Rank::C));
+        // conv W does not exist in a gemm consumer
+        assert_eq!(producer_to_consumer_rank(Conv2d, Gemm, Rank::W), None);
+    }
+
+    #[test]
+    fn tile_clamping_and_trips() {
+        let op = Op::conv2d(1, 32, 32, 8, 8, 3, 3, 1, 1);
+        let mut nest = LoopNest::for_op(&op, DataflowStyle::ActivationStationary);
+        nest.set_tile(Rank::H, 5);
+        let h = nest.dims[nest.position(Rank::H).unwrap()];
+        assert_eq!(h.tile, 5);
+        assert_eq!(h.trips(), 7); // ceil(32/5)
+        nest.set_tile(Rank::H, 1000); // clamps to extent
+        assert_eq!(nest.dims[nest.position(Rank::H).unwrap()].tile, 32);
+    }
+
+    #[test]
+    fn order_string_smoke() {
+        let op = Op::conv2d(1, 8, 8, 4, 4, 3, 3, 1, 1);
+        let nest = LoopNest::for_op(&op, DataflowStyle::ActivationStationary);
+        assert_eq!(nest.order_string(), "NHWKCRS");
+    }
+}

@@ -1,0 +1,112 @@
+//! Relative energy model (Eyeriss-style cost ratios, per word / per MAC).
+//!
+//! The paper reports only *normalized* energy and performance, so what
+//! matters is the ratio structure: register-file accesses are cheap, NoC
+//! hops cost a router traversal plus wire length, SRAM is several times a
+//! hop, DRAM is two orders of magnitude above everything. AMP's long links
+//! pay one router + `L` wire units instead of `L` routers + `L` wire units,
+//! which is exactly the hop-energy argument of Sec. IV-D.
+
+use crate::sim::LoadAnalysis;
+
+/// Energy cost constants in normalized units (1.0 = one MAC).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyModel {
+    /// One multiply-accumulate.
+    pub mac: f64,
+    /// One register-file word access.
+    pub rf_word: f64,
+    /// One router traversal (per word per hop).
+    pub router_word: f64,
+    /// Wire energy per word per PE-pitch of distance.
+    pub wire_word_per_pe: f64,
+    /// One global-buffer (SRAM) word access.
+    pub sram_word: f64,
+    /// One DRAM word access.
+    pub dram_word: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // Eyeriss (ISCA'16) normalized hierarchy: RF 1, NoC ~2, SRAM ~6,
+        // DRAM ~200 (per 16-bit word, relative to one MAC).
+        Self {
+            mac: 1.0,
+            rf_word: 1.0,
+            router_word: 1.5,
+            wire_word_per_pe: 0.5,
+            sram_word: 6.0,
+            dram_word: 200.0,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Energy of one word traversing one link of physical length `len`.
+    pub fn link_energy(&self, len: u32) -> f64 {
+        self.router_word + self.wire_word_per_pe * len as f64
+    }
+
+    /// NoC energy of one interval's traffic, from a load analysis:
+    /// `Σ words×hops × router + Σ words×wire × wire_cost`.
+    pub fn noc_interval_energy(&self, analysis: &LoadAnalysis) -> f64 {
+        analysis.total_word_hops * self.router_word
+            + analysis.total_word_wire * self.wire_word_per_pe
+    }
+
+    /// Compute energy for `macs` multiply-accumulates (plus one RF access
+    /// per operand pair, folded into the constant).
+    pub fn compute_energy(&self, macs: u64) -> f64 {
+        macs as f64 * (self.mac + self.rf_word)
+    }
+
+    pub fn sram_energy(&self, words: u64) -> f64 {
+        words as f64 * self.sram_word
+    }
+
+    pub fn dram_energy(&self, words: u64) -> f64 {
+        words as f64 * self.dram_word
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::noc::Topology;
+    use crate::sim::analyze;
+    use crate::traffic::{derive_flows, scenarios};
+
+    #[test]
+    fn hierarchy_ordering() {
+        let e = EnergyModel::default();
+        assert!(e.rf_word < e.sram_word);
+        assert!(e.sram_word < e.dram_word);
+        assert!(e.link_energy(1) < e.sram_word);
+    }
+
+    #[test]
+    fn express_link_cheaper_than_equivalent_hops() {
+        // One length-4 express hop vs four single hops (Sec. IV-D).
+        let e = EnergyModel::default();
+        assert!(e.link_energy(4) < 4.0 * e.link_energy(1));
+    }
+
+    #[test]
+    fn amp_saves_noc_energy_on_blocked_traffic() {
+        let e = EnergyModel::default();
+        let s = scenarios::fig8_depth2_blocked(32, 32);
+        let mesh = Topology::new(TopologyKind::Mesh, 32, 32);
+        let amp = Topology::new(TopologyKind::Amp, 32, 32);
+        let em = e.noc_interval_energy(&analyze(&mesh, &derive_flows(&mesh, &s.placement, &s.handoffs)));
+        let ea = e.noc_interval_energy(&analyze(&amp, &derive_flows(&amp, &s.placement, &s.handoffs)));
+        assert!(ea < em, "amp {ea} mesh {em}");
+    }
+
+    #[test]
+    fn dram_dominates() {
+        let e = EnergyModel::default();
+        // moving 1 word from DRAM ≈ 100 hops of NoC
+        assert!(e.dram_energy(1) > 50.0 * e.link_energy(1));
+    }
+}

@@ -1,0 +1,259 @@
+//! The model DAG. Layers are stored in construction order, which the
+//! builders keep topological (the "chain order" of the network); any edge
+//! that jumps more than one position in that order is a *skip connection*
+//! (Sec. II-D, Fig. 6).
+
+use super::Layer;
+use std::collections::VecDeque;
+
+/// Index of a layer within its [`ModelGraph`].
+pub type LayerId = usize;
+
+/// A directed producer→consumer dependency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Edge {
+    pub src: LayerId,
+    pub dst: LayerId,
+}
+
+/// A DNN model as a DAG of layers.
+#[derive(Debug, Clone, Default)]
+pub struct ModelGraph {
+    pub name: String,
+    layers: Vec<Layer>,
+    edges: Vec<Edge>,
+}
+
+impl ModelGraph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            layers: Vec::new(),
+            edges: Vec::new(),
+        }
+    }
+
+    /// Append a layer with no incoming edge (a model input stem).
+    pub fn add_root(&mut self, layer: Layer) -> LayerId {
+        self.layers.push(layer);
+        self.layers.len() - 1
+    }
+
+    /// Append a layer consuming `preds` (first listed predecessor is the
+    /// "chain" input; extras are typically skip inputs).
+    pub fn add_layer(&mut self, layer: Layer, preds: &[LayerId]) -> LayerId {
+        let id = self.layers.len();
+        for &p in preds {
+            assert!(p < id, "predecessor {p} must precede layer {id}");
+            self.edges.push(Edge { src: p, dst: id });
+        }
+        self.layers.push(layer);
+        id
+    }
+
+    /// Convenience: append consuming the previous layer.
+    pub fn push(&mut self, layer: Layer) -> LayerId {
+        if self.layers.is_empty() {
+            self.add_root(layer)
+        } else {
+            let prev = self.layers.len() - 1;
+            self.add_layer(layer, &[prev])
+        }
+    }
+
+    /// Add an extra (skip) edge between existing layers.
+    pub fn add_edge(&mut self, src: LayerId, dst: LayerId) {
+        assert!(src < dst, "edges must go forward in layer order");
+        assert!(dst < self.layers.len(), "dst out of range");
+        let e = Edge { src, dst };
+        if !self.edges.contains(&e) {
+            self.edges.push(e);
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layer(&self, id: LayerId) -> &Layer {
+        &self.layers[id]
+    }
+
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    pub fn predecessors(&self, id: LayerId) -> Vec<LayerId> {
+        self.edges
+            .iter()
+            .filter(|e| e.dst == id)
+            .map(|e| e.src)
+            .collect()
+    }
+
+    pub fn successors(&self, id: LayerId) -> Vec<LayerId> {
+        self.edges
+            .iter()
+            .filter(|e| e.src == id)
+            .map(|e| e.dst)
+            .collect()
+    }
+
+    /// Edges whose endpoints are not adjacent in layer order — the paper's
+    /// skip connections.
+    pub fn skip_edges(&self) -> Vec<Edge> {
+        self.edges
+            .iter()
+            .copied()
+            .filter(|e| e.dst - e.src > 1)
+            .collect()
+    }
+
+    /// Kahn topological order. Layer order is kept topological by the
+    /// builders, but this validates it and is what analyses iterate over.
+    pub fn topo_order(&self) -> Result<Vec<LayerId>, String> {
+        let n = self.layers.len();
+        let mut indeg = vec![0usize; n];
+        let mut succ: Vec<Vec<LayerId>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            indeg[e.dst] += 1;
+            succ[e.src].push(e.dst);
+        }
+        let mut q: VecDeque<LayerId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = q.pop_front() {
+            order.push(u);
+            for &v in &succ[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    q.push_back(v);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(format!(
+                "model '{}' contains a cycle ({} of {} layers ordered)",
+                self.name,
+                order.len(),
+                n
+            ));
+        }
+        Ok(order)
+    }
+
+    /// Structural validation: acyclic, connected-forward, and construction
+    /// order already topological (builders guarantee this; analyses rely on
+    /// it for reuse-distance arithmetic).
+    pub fn validate(&self) -> Result<(), String> {
+        let order = self.topo_order()?;
+        // Construction order must itself be topological: every edge forward.
+        for e in &self.edges {
+            if e.src >= e.dst {
+                return Err(format!(
+                    "edge {}→{} is not forward in construction order",
+                    e.src, e.dst
+                ));
+            }
+        }
+        // All non-root layers reachable (have at least one predecessor).
+        for id in 1..self.layers.len() {
+            if self.predecessors(id).is_empty() {
+                // multiple roots are allowed only for explicit multi-input
+                // models; treat orphan mid-graph layers as an error.
+                return Err(format!(
+                    "layer {id} ('{}') has no predecessor",
+                    self.layers[id].name
+                ));
+            }
+        }
+        let _ = order;
+        Ok(())
+    }
+
+    // ---- whole-model aggregates ----------------------------------------
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weight_words(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_words()).sum()
+    }
+
+    pub fn total_output_act_words(&self) -> u64 {
+        self.layers.iter().map(|l| l.output_act_words()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    fn tiny_chain() -> ModelGraph {
+        let mut g = ModelGraph::new("tiny");
+        g.push(Layer::new("c0", Op::conv2d(1, 16, 16, 3, 8, 3, 3, 1, 1)));
+        g.push(Layer::new("c1", Op::conv2d(1, 16, 16, 8, 8, 3, 3, 1, 1)));
+        g.push(Layer::new("c2", Op::conv2d(1, 16, 16, 8, 8, 3, 3, 1, 1)));
+        g
+    }
+
+    #[test]
+    fn chain_has_no_skips() {
+        let g = tiny_chain();
+        assert!(g.validate().is_ok());
+        assert!(g.skip_edges().is_empty());
+        assert_eq!(g.topo_order().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn skip_edge_detected_with_distance() {
+        let mut g = tiny_chain();
+        g.add_edge(0, 2); // residual
+        let skips = g.skip_edges();
+        assert_eq!(skips.len(), 1);
+        assert_eq!(skips[0], Edge { src: 0, dst: 2 });
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut g = tiny_chain();
+        g.add_edge(0, 2);
+        g.add_edge(0, 2);
+        assert_eq!(g.skip_edges().len(), 1);
+    }
+
+    #[test]
+    fn predecessors_successors() {
+        let mut g = tiny_chain();
+        g.add_edge(0, 2);
+        assert_eq!(g.predecessors(2), vec![1, 0]);
+        assert_eq!(g.successors(0), vec![1, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn backward_edge_panics() {
+        let mut g = tiny_chain();
+        g.add_edge(2, 2);
+    }
+
+    #[test]
+    fn orphan_layer_fails_validation() {
+        let mut g = tiny_chain();
+        g.add_root(Layer::new("orphan", Op::conv2d(1, 8, 8, 3, 3, 1, 1, 1, 0)));
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn aggregates_sum_layers() {
+        let g = tiny_chain();
+        let macs: u64 = g.layers().iter().map(|l| l.macs()).sum();
+        assert_eq!(g.total_macs(), macs);
+        assert!(g.total_weight_words() > 0);
+    }
+}

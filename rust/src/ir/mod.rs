@@ -1,0 +1,103 @@
+//! Model intermediate representation: einsum-style operators, layers, and
+//! the model DAG (with first-class skip connections — Sec. II-D / Fig. 6).
+
+mod graph;
+mod op;
+pub mod skips;
+
+pub use graph::{Edge, LayerId, ModelGraph};
+pub use op::{ConvParams, Op, OpKind};
+
+/// One layer of a model: a named operator instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub op: Op,
+}
+
+impl Layer {
+    pub fn new(name: impl Into<String>, op: Op) -> Self {
+        Self {
+            name: name.into(),
+            op,
+        }
+    }
+
+    /// Input activation volume in words (sum over all inputs).
+    pub fn input_act_words(&self) -> u64 {
+        self.op.input_act_words()
+    }
+
+    /// Output activation volume in words.
+    pub fn output_act_words(&self) -> u64 {
+        self.op.output_act_words()
+    }
+
+    /// Weight (parameter) volume in words.
+    pub fn weight_words(&self) -> u64 {
+        self.op.weight_words()
+    }
+
+    /// Multiply-accumulate count (or op count for non-MAC layers).
+    pub fn macs(&self) -> u64 {
+        self.op.macs()
+    }
+
+    /// Activation/weight ratio — the key metric of Fig. 5. Activation volume
+    /// is input + output; weight-free ops map to +inf.
+    pub fn aw_ratio(&self) -> f64 {
+        let act = (self.input_act_words() + self.output_act_words()) as f64;
+        let w = self.weight_words() as f64;
+        if w == 0.0 {
+            f64::INFINITY
+        } else {
+            act / w
+        }
+    }
+
+    /// "Complex" layers (ROIAlign, RPN, …) cut pipeline segments (Sec. IV-A).
+    pub fn is_complex(&self) -> bool {
+        matches!(self.op.kind(), OpKind::RoiAlign | OpKind::Rpn)
+    }
+
+    /// True for einsum-based (MAC-dominated) operators that the mapper
+    /// treats as pipeline-stage candidates.
+    pub fn is_einsum(&self) -> bool {
+        matches!(
+            self.op.kind(),
+            OpKind::Conv2d | OpKind::DwConv2d | OpKind::Gemm
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(h: usize, c: usize, k: usize, r: usize) -> Op {
+        Op::conv2d(1, h, h, c, k, r, r, 1, r / 2)
+    }
+
+    #[test]
+    fn aw_ratio_activation_vs_weight_heavy() {
+        // Large feature map, few weights → activation heavy.
+        let act_heavy = Layer::new("a", conv(128, 8, 8, 3));
+        assert!(act_heavy.aw_ratio() > 100.0);
+        // Tiny feature map, many channels → weight heavy.
+        let w_heavy = Layer::new("w", conv(4, 512, 512, 3));
+        assert!(w_heavy.aw_ratio() < 0.1);
+    }
+
+    #[test]
+    fn weight_free_ops_have_infinite_ratio() {
+        let l = Layer::new("add", Op::eltwise_add(1, 16, 16, 32));
+        assert!(l.aw_ratio().is_infinite());
+        assert_eq!(l.weight_words(), 0);
+    }
+
+    #[test]
+    fn complex_layer_detection() {
+        assert!(Layer::new("roi", Op::roi_align(64, 7, 256)).is_complex());
+        assert!(!Layer::new("c", conv(8, 8, 8, 1)).is_complex());
+    }
+}

@@ -1,0 +1,432 @@
+//! Operator definitions and their volume/MAC accounting.
+//!
+//! All volumes are in *words*; `ArchConfig::bytes_per_word` converts to
+//! bytes where needed. Shapes follow the paper's einsum conventions
+//! (Eq. 1–2): GEMM is `O[m,n] = Σ_k A[m,k] B[k,n]`; convolution is NHWC
+//! activations with RSCK weights.
+
+/// Convolution shape parameters (shared by Conv2d / DwConv2d / Pool-like).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvParams {
+    /// Batch.
+    pub n: usize,
+    /// Input feature-map height.
+    pub h: usize,
+    /// Input feature-map width.
+    pub w: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Output channels (ignored / equal to `c` for depthwise).
+    pub k: usize,
+    /// Filter height.
+    pub r: usize,
+    /// Filter width.
+    pub s: usize,
+    /// Stride (same in both dims).
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+}
+
+impl ConvParams {
+    /// Output spatial height.
+    pub fn oh(&self) -> usize {
+        (self.h + 2 * self.pad).saturating_sub(self.r) / self.stride + 1
+    }
+
+    /// Output spatial width.
+    pub fn ow(&self) -> usize {
+        (self.w + 2 * self.pad).saturating_sub(self.s) / self.stride + 1
+    }
+}
+
+/// Coarse operator class, used for dispatch without matching full payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Conv2d,
+    DwConv2d,
+    Gemm,
+    Pool,
+    EltwiseAdd,
+    Upsample,
+    Concat,
+    RoiAlign,
+    Rpn,
+}
+
+impl OpKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Conv2d => "conv2d",
+            OpKind::DwConv2d => "dwconv2d",
+            OpKind::Gemm => "gemm",
+            OpKind::Pool => "pool",
+            OpKind::EltwiseAdd => "eltwise_add",
+            OpKind::Upsample => "upsample",
+            OpKind::Concat => "concat",
+            OpKind::RoiAlign => "roi_align",
+            OpKind::Rpn => "rpn",
+        }
+    }
+}
+
+/// A tensor operator with concrete shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Standard convolution (Eq. 2).
+    Conv2d(ConvParams),
+    /// Depthwise convolution: one filter per channel (`k` unused).
+    DwConv2d(ConvParams),
+    /// General matrix multiply (Eq. 1): `[m,k] × [k,n] → [m,n]`.
+    Gemm { m: usize, k: usize, n: usize },
+    /// Max/avg pooling over `window × window`, stride `stride`.
+    Pool {
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        window: usize,
+        stride: usize,
+    },
+    /// Elementwise addition of `arity` same-shaped activations (skip joins).
+    EltwiseAdd {
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        arity: usize,
+    },
+    /// Nearest/bilinear upsample by `factor` (decoder paths, RITNet UpBlock).
+    Upsample {
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        factor: usize,
+    },
+    /// Channel concatenation of dense-block inputs.
+    Concat {
+        n: usize,
+        h: usize,
+        w: usize,
+        c_each: usize,
+        arity: usize,
+    },
+    /// ROIAlign over `rois` regions, `out` output resolution, `c` channels —
+    /// a "complex layer" that cuts pipelining (Sec. IV-A).
+    RoiAlign { rois: usize, out: usize, c: usize },
+    /// Region proposal network head (complex layer).
+    Rpn {
+        h: usize,
+        w: usize,
+        c: usize,
+        anchors: usize,
+    },
+}
+
+impl Op {
+    // ---- constructors -------------------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d(
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        k: usize,
+        r: usize,
+        s: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Op {
+        Op::Conv2d(ConvParams {
+            n,
+            h,
+            w,
+            c,
+            k,
+            r,
+            s,
+            stride,
+            pad,
+        })
+    }
+
+    pub fn dwconv2d(n: usize, h: usize, w: usize, c: usize, r: usize, stride: usize) -> Op {
+        Op::DwConv2d(ConvParams {
+            n,
+            h,
+            w,
+            c,
+            k: c,
+            r,
+            s: r,
+            stride,
+            pad: r / 2,
+        })
+    }
+
+    pub fn gemm(m: usize, k: usize, n: usize) -> Op {
+        Op::Gemm { m, k, n }
+    }
+
+    pub fn pool(n: usize, h: usize, w: usize, c: usize, window: usize, stride: usize) -> Op {
+        Op::Pool {
+            n,
+            h,
+            w,
+            c,
+            window,
+            stride,
+        }
+    }
+
+    pub fn eltwise_add(n: usize, h: usize, w: usize, c: usize) -> Op {
+        Op::EltwiseAdd {
+            n,
+            h,
+            w,
+            c,
+            arity: 2,
+        }
+    }
+
+    pub fn eltwise_add_n(n: usize, h: usize, w: usize, c: usize, arity: usize) -> Op {
+        Op::EltwiseAdd { n, h, w, c, arity }
+    }
+
+    pub fn upsample(n: usize, h: usize, w: usize, c: usize, factor: usize) -> Op {
+        Op::Upsample { n, h, w, c, factor }
+    }
+
+    pub fn concat(n: usize, h: usize, w: usize, c_each: usize, arity: usize) -> Op {
+        Op::Concat {
+            n,
+            h,
+            w,
+            c_each,
+            arity,
+        }
+    }
+
+    pub fn roi_align(rois: usize, out: usize, c: usize) -> Op {
+        Op::RoiAlign { rois, out, c }
+    }
+
+    pub fn rpn(h: usize, w: usize, c: usize, anchors: usize) -> Op {
+        Op::Rpn { h, w, c, anchors }
+    }
+
+    // ---- classification ------------------------------------------------
+
+    pub fn kind(&self) -> OpKind {
+        match self {
+            Op::Conv2d(_) => OpKind::Conv2d,
+            Op::DwConv2d(_) => OpKind::DwConv2d,
+            Op::Gemm { .. } => OpKind::Gemm,
+            Op::Pool { .. } => OpKind::Pool,
+            Op::EltwiseAdd { .. } => OpKind::EltwiseAdd,
+            Op::Upsample { .. } => OpKind::Upsample,
+            Op::Concat { .. } => OpKind::Concat,
+            Op::RoiAlign { .. } => OpKind::RoiAlign,
+            Op::Rpn { .. } => OpKind::Rpn,
+        }
+    }
+
+    // ---- volumes -------------------------------------------------------
+
+    /// Total input activation words (all operands).
+    pub fn input_act_words(&self) -> u64 {
+        match *self {
+            Op::Conv2d(p) | Op::DwConv2d(p) => (p.n * p.h * p.w * p.c) as u64,
+            Op::Gemm { m, k, .. } => (m * k) as u64,
+            Op::Pool { n, h, w, c, .. } => (n * h * w * c) as u64,
+            Op::EltwiseAdd { n, h, w, c, arity } => (n * h * w * c * arity) as u64,
+            Op::Upsample { n, h, w, c, .. } => (n * h * w * c) as u64,
+            Op::Concat {
+                n,
+                h,
+                w,
+                c_each,
+                arity,
+            } => (n * h * w * c_each * arity) as u64,
+            Op::RoiAlign { rois, out, c } => (rois * out * out * c * 4) as u64,
+            Op::Rpn { h, w, c, .. } => (h * w * c) as u64,
+        }
+    }
+
+    /// Output activation words.
+    pub fn output_act_words(&self) -> u64 {
+        match *self {
+            Op::Conv2d(p) => (p.n * p.oh() * p.ow() * p.k) as u64,
+            Op::DwConv2d(p) => (p.n * p.oh() * p.ow() * p.c) as u64,
+            Op::Gemm { m, n, .. } => (m * n) as u64,
+            Op::Pool {
+                n,
+                h,
+                w,
+                c,
+                window,
+                stride,
+            } => {
+                let oh = h.saturating_sub(window) / stride + 1;
+                let ow = w.saturating_sub(window) / stride + 1;
+                (n * oh * ow * c) as u64
+            }
+            Op::EltwiseAdd { n, h, w, c, .. } => (n * h * w * c) as u64,
+            Op::Upsample { n, h, w, c, factor } => (n * h * factor * w * factor * c) as u64,
+            Op::Concat {
+                n,
+                h,
+                w,
+                c_each,
+                arity,
+            } => (n * h * w * c_each * arity) as u64,
+            Op::RoiAlign { rois, out, c } => (rois * out * out * c) as u64,
+            Op::Rpn { h, w, anchors, .. } => (h * w * anchors * 5) as u64,
+        }
+    }
+
+    /// Weight (parameter) words.
+    pub fn weight_words(&self) -> u64 {
+        match *self {
+            Op::Conv2d(p) => (p.k * p.c * p.r * p.s) as u64,
+            // Depthwise: one r×s filter per channel.
+            Op::DwConv2d(p) => (p.c * p.r * p.s) as u64,
+            Op::Gemm { k, n, .. } => (k * n) as u64,
+            Op::Rpn { c, anchors, .. } => (c * anchors * 5 * 9) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Multiply-accumulates (op count for non-MAC layers).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            Op::Conv2d(p) => (p.n * p.oh() * p.ow() * p.k) as u64 * (p.c * p.r * p.s) as u64,
+            Op::DwConv2d(p) => (p.n * p.oh() * p.ow() * p.c) as u64 * (p.r * p.s) as u64,
+            Op::Gemm { m, k, n } => (m * k) as u64 * n as u64,
+            Op::Pool {
+                n,
+                h,
+                w,
+                c,
+                window,
+                stride,
+            } => {
+                let oh = h.saturating_sub(window) / stride + 1;
+                let ow = w.saturating_sub(window) / stride + 1;
+                (n * oh * ow * c * window * window) as u64
+            }
+            Op::EltwiseAdd { n, h, w, c, arity } => (n * h * w * c * (arity - 1)) as u64,
+            Op::Upsample { n, h, w, c, factor } => (n * h * factor * w * factor * c) as u64,
+            Op::Concat {
+                n,
+                h,
+                w,
+                c_each,
+                arity,
+            } => (n * h * w * c_each * arity) as u64,
+            Op::RoiAlign { rois, out, c } => (rois * out * out * c * 4) as u64,
+            Op::Rpn { h, w, c, anchors } => (h * w * c * anchors * 5 * 9) as u64,
+        }
+    }
+
+    /// Output feature-map "rows" — the natural unit of fine-grained
+    /// pipelining granularity for spatial ops (one H-row of the output).
+    pub fn output_rows(&self) -> u64 {
+        match *self {
+            Op::Conv2d(p) => (p.n * p.oh()) as u64,
+            Op::DwConv2d(p) => (p.n * p.oh()) as u64,
+            Op::Gemm { m, .. } => m as u64,
+            Op::Pool {
+                n, h, window, stride, ..
+            } => (n * (h.saturating_sub(window) / stride + 1)) as u64,
+            Op::EltwiseAdd { n, h, .. } => (n * h) as u64,
+            Op::Upsample { n, h, factor, .. } => (n * h * factor) as u64,
+            Op::Concat { n, h, .. } => (n * h) as u64,
+            Op::RoiAlign { rois, out, .. } => (rois * out) as u64,
+            Op::Rpn { h, .. } => h as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_dims_with_padding() {
+        // 3x3 stride-1 same-pad keeps spatial dims.
+        let p = ConvParams {
+            n: 1,
+            h: 32,
+            w: 32,
+            c: 16,
+            k: 32,
+            r: 3,
+            s: 3,
+            stride: 1,
+            pad: 1,
+        };
+        assert_eq!(p.oh(), 32);
+        assert_eq!(p.ow(), 32);
+        // stride 2 halves.
+        let p2 = ConvParams { stride: 2, ..p };
+        assert_eq!(p2.oh(), 16);
+    }
+
+    #[test]
+    fn conv_volume_accounting() {
+        let op = Op::conv2d(1, 32, 32, 16, 32, 3, 3, 1, 1);
+        assert_eq!(op.input_act_words(), 32 * 32 * 16);
+        assert_eq!(op.output_act_words(), 32 * 32 * 32);
+        assert_eq!(op.weight_words(), 32 * 16 * 3 * 3);
+        assert_eq!(op.macs(), (32 * 32 * 32) as u64 * (16 * 3 * 3) as u64);
+    }
+
+    #[test]
+    fn dwconv_is_activation_heavy_by_construction() {
+        let dw = Op::dwconv2d(1, 56, 56, 128, 3, 1);
+        let cv = Op::conv2d(1, 56, 56, 128, 128, 3, 3, 1, 1);
+        // Same spatial shape: depthwise has 128x fewer weights and macs.
+        assert_eq!(cv.weight_words() / dw.weight_words(), 128);
+        assert_eq!(cv.macs() / dw.macs(), 128);
+        assert_eq!(dw.output_act_words(), cv.output_act_words());
+    }
+
+    #[test]
+    fn gemm_volumes() {
+        let g = Op::gemm(64, 256, 512);
+        assert_eq!(g.input_act_words(), 64 * 256);
+        assert_eq!(g.weight_words(), 256 * 512);
+        assert_eq!(g.output_act_words(), 64 * 512);
+        assert_eq!(g.macs(), 64 * 256 * 512);
+    }
+
+    #[test]
+    fn eltwise_add_arity() {
+        // DenseNet-style 4-way combine (RITNet block).
+        let add = Op::eltwise_add_n(1, 16, 16, 32, 4);
+        assert_eq!(add.input_act_words(), 4 * 16 * 16 * 32);
+        assert_eq!(add.output_act_words(), 16 * 16 * 32);
+    }
+
+    #[test]
+    fn pool_halves_spatial() {
+        let p = Op::pool(1, 32, 32, 8, 2, 2);
+        assert_eq!(p.output_act_words(), 16 * 16 * 8);
+        assert_eq!(p.weight_words(), 0);
+    }
+
+    #[test]
+    fn upsample_scales_output() {
+        let u = Op::upsample(1, 8, 8, 4, 2);
+        assert_eq!(u.output_act_words(), 16 * 16 * 4);
+    }
+
+    #[test]
+    fn output_rows_unit() {
+        assert_eq!(Op::conv2d(1, 32, 32, 8, 8, 3, 3, 1, 1).output_rows(), 32);
+        assert_eq!(Op::gemm(64, 8, 8).output_rows(), 64);
+    }
+}

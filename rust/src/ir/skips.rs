@@ -1,0 +1,152 @@
+//! Skip-connection characterization (Fig. 6): reuse distance and density.
+//!
+//! *Reuse distance* of a skip edge (i → j) is `j - i` in topological chain
+//! order — how long the producer's activation must stay alive. *Density* is
+//! skip edges per layer. Both vary widely across XR-bench models (RITNet:
+//! dense multi-distance skips; MiDaS: one long skip per block) and both push
+//! the depth heuristic toward deeper pipelines (Sec. III-A).
+
+use super::{LayerId, ModelGraph};
+
+/// Summary of a model's skip structure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkipProfile {
+    /// (src, dst, distance) per skip edge, in edge order.
+    pub edges: Vec<(LayerId, LayerId, usize)>,
+    /// Skip edges per layer.
+    pub density: f64,
+    /// Mean reuse distance (0 when there are no skips).
+    pub mean_distance: f64,
+    /// Maximum reuse distance.
+    pub max_distance: usize,
+}
+
+impl SkipProfile {
+    pub fn of(graph: &ModelGraph) -> Self {
+        let edges: Vec<(LayerId, LayerId, usize)> = graph
+            .skip_edges()
+            .iter()
+            .map(|e| (e.src, e.dst, e.dst - e.src))
+            .collect();
+        let n_layers = graph.num_layers().max(1);
+        let density = edges.len() as f64 / n_layers as f64;
+        let mean_distance = if edges.is_empty() {
+            0.0
+        } else {
+            edges.iter().map(|&(_, _, d)| d as f64).sum::<f64>() / edges.len() as f64
+        };
+        let max_distance = edges.iter().map(|&(_, _, d)| d).max().unwrap_or(0);
+        Self {
+            edges,
+            density,
+            mean_distance,
+            max_distance,
+        }
+    }
+
+    pub fn num_skips(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+/// Extra activation words a pipeline segment `[l, l+depth)` must hold (or
+/// re-fetch) because of skip connections crossing the segment boundary —
+/// the `Σ A_i, i ∉ (l, l+D)` term of Sec. III-A. Counts both:
+///  - incoming: source outside the segment, destination inside;
+///  - outgoing: source inside, destination outside (output must be kept).
+pub fn boundary_skip_act_words(graph: &ModelGraph, start: LayerId, depth: usize) -> u64 {
+    let end = start + depth; // exclusive
+    let mut words = 0u64;
+    for e in graph.skip_edges() {
+        let src_in = e.src >= start && e.src < end;
+        let dst_in = e.dst >= start && e.dst < end;
+        if src_in != dst_in {
+            // the tensor crossing the boundary is the producer's output
+            words += graph.layer(e.src).output_act_words();
+        }
+    }
+    words
+}
+
+/// Skip edges fully absorbed inside a segment `[l, l+depth)` — these are the
+/// wins of deeper pipelining (their activations never round-trip to DRAM).
+pub fn absorbed_skips(graph: &ModelGraph, start: LayerId, depth: usize) -> usize {
+    let end = start + depth;
+    graph
+        .skip_edges()
+        .iter()
+        .filter(|e| e.src >= start && e.src < end && e.dst >= start && e.dst < end)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Layer, Op};
+
+    /// 6-layer chain with skips 0→2 (dist 2) and 1→4 (dist 3).
+    fn skippy() -> ModelGraph {
+        let mut g = ModelGraph::new("skippy");
+        for i in 0..6 {
+            g.push(Layer::new(
+                format!("c{i}"),
+                Op::conv2d(1, 16, 16, 8, 8, 3, 3, 1, 1),
+            ));
+        }
+        g.add_edge(0, 2);
+        g.add_edge(1, 4);
+        g
+    }
+
+    #[test]
+    fn profile_counts_and_distances() {
+        let p = SkipProfile::of(&skippy());
+        assert_eq!(p.num_skips(), 2);
+        assert_eq!(p.max_distance, 3);
+        assert!((p.mean_distance - 2.5).abs() < 1e-12);
+        assert!((p.density - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_skips_profile_is_zero() {
+        let mut g = ModelGraph::new("chain");
+        for i in 0..3 {
+            g.push(Layer::new(
+                format!("c{i}"),
+                Op::conv2d(1, 8, 8, 4, 4, 3, 3, 1, 1),
+            ));
+        }
+        let p = SkipProfile::of(&g);
+        assert_eq!(p.num_skips(), 0);
+        assert_eq!(p.mean_distance, 0.0);
+        assert_eq!(p.max_distance, 0);
+    }
+
+    #[test]
+    fn boundary_crossing_accounting() {
+        let g = skippy();
+        let out_words = g.layer(1).output_act_words();
+        // Segment [0,2): edge 0→2 crosses out, edge 1→4 crosses out.
+        assert_eq!(
+            boundary_skip_act_words(&g, 0, 2),
+            g.layer(0).output_act_words() + out_words
+        );
+        // Segment [0,3): 0→2 absorbed, 1→4 crosses.
+        assert_eq!(boundary_skip_act_words(&g, 0, 3), out_words);
+        assert_eq!(absorbed_skips(&g, 0, 3), 1);
+        // Segment [0,5): everything absorbed.
+        assert_eq!(boundary_skip_act_words(&g, 0, 5), 0);
+        assert_eq!(absorbed_skips(&g, 0, 5), 2);
+    }
+
+    #[test]
+    fn deeper_segments_absorb_monotonically() {
+        let g = skippy();
+        let mut prev = 0;
+        for d in 1..=6 {
+            let a = absorbed_skips(&g, 0, d);
+            assert!(a >= prev);
+            prev = a;
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! # PipeOrgan — inter-operation pipelining with flexible spatial
+//! organization and interconnects
+//!
+//! Full-system reproduction of *PipeOrgan* (Garg et al., 2024). The crate
+//! implements, end to end:
+//!
+//! - a model IR with first-class skip connections ([`ir`]) and an
+//!   XR-bench-like workload zoo ([`workloads`]);
+//! - stage 1 of the paper's flow: intra-operator dataflow selection
+//!   ([`dataflow`]), pipeline-depth heuristic and granularity Algorithm 1
+//!   ([`pipeline`]);
+//! - stage 2: spatial organization strategies ([`spatial`]), NoC topologies
+//!   including the proposed AMP ([`noc`]), traffic derivation ([`traffic`])
+//!   and congestion analysis / cycle-level simulation ([`sim`]);
+//! - memory, energy and end-to-end cost models ([`memory`], [`energy`],
+//!   [`cost`]) plus TANGRAM-like and SIMBA-like baselines ([`baselines`])
+//!   and the full PipeOrgan mapper ([`mapper`]);
+//! - a multi-threaded evaluation coordinator and a functional pipelined
+//!   executor driving AOT-compiled JAX/Pallas artifacts through PJRT
+//!   ([`coordinator`], [`runtime`]);
+//! - per-figure report emitters ([`report`]).
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
+//! measured-vs-paper results.
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod dataflow;
+pub mod energy;
+pub mod ir;
+pub mod mapper;
+pub mod memory;
+pub mod noc;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod spatial;
+pub mod traffic;
+pub mod util;
+pub mod workloads;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,136 @@
+//! `pipeorgan` — CLI front end for the PipeOrgan reproduction.
+//!
+//! Subcommands (each regenerates the matching paper artifact; see
+//! DESIGN.md §5):
+//!
+//! ```text
+//! pipeorgan characterize        # Fig. 5 + Fig. 6
+//! pipeorgan traffic             # Fig. 8–12 scenario analysis + Table II
+//! pipeorgan e2e                 # Fig. 13 + Fig. 14 (full zoo sweep)
+//! pipeorgan congestion          # Fig. 15
+//! pipeorgan depth               # Fig. 16
+//! pipeorgan granularity         # Fig. 17
+//! pipeorgan validate-dataflow   # Sec. IV-A heuristic validation
+//! pipeorgan run-segment         # E15: functional pipelined execution (PJRT)
+//! pipeorgan all                 # everything above except run-segment
+//! ```
+//!
+//! Common flags: `--out <dir>` (reports directory, default `reports`),
+//! `--workers <n>`, `--config <file>` (key=value ArchConfig overrides),
+//! `--artifacts <dir>` (default `artifacts`), `--seed <n>`.
+
+use pipeorgan::cli::Args;
+use pipeorgan::config::ArchConfig;
+use pipeorgan::coordinator as coord;
+use pipeorgan::report;
+
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N]";
+
+const FLAGS: &[(&str, bool)] = &[
+    ("out", true),
+    ("workers", true),
+    ("config", true),
+    ("artifacts", true),
+    ("seed", true),
+];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        println!("{USAGE}");
+        return;
+    }
+    if let Err(e) = run(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(raw, FLAGS).map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+    let cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            ArchConfig::from_kv_text(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?
+        }
+        None => ArchConfig::default(),
+    };
+    let out = args.get_or("out", "reports").to_string();
+    let workers = args
+        .get_usize(
+            "workers",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        )
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    let seed = args.get_usize("seed", 42).map_err(|e| anyhow::anyhow!(e))? as u64;
+
+    let emit = |reports: Vec<report::Report>| -> anyhow::Result<()> {
+        for r in reports {
+            r.emit(&out)?;
+            println!();
+        }
+        println!("reports written to {out}/");
+        Ok(())
+    };
+
+    match args.subcommand.as_str() {
+        "characterize" => emit(vec![report::fig5_aw_ratios(), report::fig6_skips()]),
+        "traffic" => emit(vec![
+            report::fig8_12_traffic(&cfg),
+            report::table2_bottlenecks(&cfg),
+        ]),
+        "e2e" => emit(vec![
+            report::fig13_performance(&cfg, workers),
+            report::fig14_dram(&cfg, workers),
+        ]),
+        "congestion" => emit(vec![report::fig15_congestion(&cfg)]),
+        "depth" => emit(vec![report::fig16_depth(&cfg)]),
+        "granularity" => emit(vec![report::fig17_granularity(&cfg)]),
+        "validate-dataflow" => emit(vec![report::validate_dataflow()]),
+        "ablate" => emit(vec![
+            report::ablation_organization(&cfg),
+            report::ablation_topology(&cfg),
+            report::ablation_depth(&cfg),
+        ]),
+        "all" => emit(report::all_reports(&cfg, workers)),
+        "run-segment" => run_segment(&artifacts, seed),
+        other => anyhow::bail!("unknown subcommand `{other}`\n{USAGE}"),
+    }
+}
+
+/// E15: execute the AOT segment three ways through PJRT and check numerics.
+fn run_segment(artifacts: &str, seed: u64) -> anyhow::Result<()> {
+    let rt = pipeorgan::runtime::Runtime::new(artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = rt.manifest()?;
+    let data = coord::SegmentData::random(manifest.segment, seed);
+    println!(
+        "segment: {}x{}x{} -> {} -> {} (band {})",
+        manifest.segment.h,
+        manifest.segment.w,
+        manifest.segment.c_in,
+        manifest.segment.c_mid,
+        manifest.segment.c_out,
+        manifest.segment.band
+    );
+    let op = coord::run_op_by_op(artifacts, &data)?;
+    let fused = coord::run_fused(artifacts, &data)?;
+    let piped = coord::run_pipelined(artifacts, &data)?;
+    for r in [&op, &fused, &piped] {
+        println!(
+            "{:10} {:>4} tile(s)  {:>10.3} ms",
+            r.mode,
+            r.tiles,
+            r.elapsed.as_secs_f64() * 1e3
+        );
+    }
+    let d_fused = coord::compare_outputs(&op, &fused)?;
+    let d_piped = coord::compare_outputs(&op, &piped)?;
+    println!("max |op_by_op - fused|     = {d_fused:.3e}");
+    println!("max |op_by_op - pipelined| = {d_piped:.3e}");
+    anyhow::ensure!(d_fused < 1e-3, "fused output diverges: {d_fused}");
+    anyhow::ensure!(d_piped < 1e-3, "pipelined output diverges: {d_piped}");
+    println!("numerics OK: pipelined == fused == op-by-op");
+    Ok(())
+}

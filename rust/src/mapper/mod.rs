@@ -1,0 +1,342 @@
+//! The full PipeOrgan mapper (Fig. 7): stage 1 — flexible-depth
+//! partitioning, intra-operator dataflow selection and granularity — then
+//! stage 2 — MAC-ratio PE allocation and spatial-organization selection.
+//! Runs on AMP by default (the paper's proposed configuration); a
+//! mesh-constrained variant is provided for ablations.
+
+mod oracle;
+
+pub use oracle::{candidates as organization_candidates, OracleOrganization};
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::cost::{Mapper, MappingPlan, PlannedHandoff, PlannedSegment};
+use crate::dataflow::{choose_dataflow, DataflowStyle, LoopNest};
+use crate::ir::ModelGraph;
+use crate::pipeline::{pair_granularity, partition, Granularity, Segment};
+use crate::spatial::{allocate_pes, choose_organization, Organization};
+
+/// The PipeOrgan mapper.
+#[derive(Debug, Clone, Copy)]
+pub struct PipeOrgan {
+    pub topology: TopologyKind,
+    /// Optional hard cap on segment depth (ablation: flexible vs fixed
+    /// depth — `Some(1)` degenerates to op-by-op, `Some(2)` to
+    /// TANGRAM-style pairing with PipeOrgan's organizations).
+    pub depth_cap: Option<usize>,
+}
+
+impl Default for PipeOrgan {
+    fn default() -> Self {
+        Self {
+            topology: TopologyKind::Amp,
+            depth_cap: None,
+        }
+    }
+}
+
+impl PipeOrgan {
+    /// PipeOrgan restricted to a plain mesh (ablation: spatial organization
+    /// without the AMP links).
+    pub fn on_mesh() -> Self {
+        Self {
+            topology: TopologyKind::Mesh,
+            ..Self::default()
+        }
+    }
+
+    pub fn on(topology: TopologyKind) -> Self {
+        Self {
+            topology,
+            ..Self::default()
+        }
+    }
+
+    /// Ablation variant with a fixed maximum depth.
+    pub fn with_depth_cap(cap: usize) -> Self {
+        Self {
+            depth_cap: Some(cap.max(1)),
+            ..Self::default()
+        }
+    }
+}
+
+/// Clamp to ≥1 word per producer PE per interval (same floor the baselines
+/// use — finer steps cannot leave the MAC pipeline).
+fn clamp(total: u64, g: &Granularity, producer_pes: usize) -> (u64, u64) {
+    let min_words = producer_pes.max(1) as u64;
+    let words = g.words.max(min_words).min(total.max(1));
+    let intervals = crate::util::ceil_div(total.max(1), words).max(1);
+    (words, intervals)
+}
+
+impl Mapper for PipeOrgan {
+    fn name(&self) -> &'static str {
+        match self.topology {
+            TopologyKind::Amp => "pipeorgan",
+            TopologyKind::Mesh => "pipeorgan_mesh",
+            TopologyKind::FlattenedButterfly => "pipeorgan_fb",
+            TopologyKind::Torus => "pipeorgan_torus",
+        }
+    }
+
+    fn topology(&self) -> TopologyKind {
+        self.topology
+    }
+
+    fn plan(&self, graph: &ModelGraph, cfg: &ArchConfig) -> MappingPlan {
+        let decisions = partition(graph, cfg);
+        let mut segments = Vec::with_capacity(decisions.len());
+        for dec in &decisions {
+            // Stage-2 feedback (Sec. IV-B): a handoff whose granularity
+            // exceeds the producer's register files would round-trip the
+            // global buffer and ramp the waterfall at coarse tiles — cut
+            // the segment there instead and let each side pipeline at its
+            // own fine granularity.
+            for sub in split_at_gb_boundaries(graph, cfg, &dec.segment) {
+                for capped in cap_depth(&sub, self.depth_cap) {
+                    segments.push(plan_segment(graph, cfg, &capped));
+                }
+            }
+        }
+        MappingPlan {
+            mapper_name: self.name().into(),
+            topology: self.topology,
+            segments,
+        }
+    }
+}
+
+/// Chop a segment into chunks of at most `cap` layers (no-op for `None`).
+fn cap_depth(seg: &Segment, cap: Option<usize>) -> Vec<Segment> {
+    let Some(cap) = cap else {
+        return vec![seg.clone()];
+    };
+    let mut out = Vec::new();
+    let mut start = seg.start;
+    while start < seg.end() {
+        let d = cap.min(seg.end() - start);
+        out.push(Segment::new(start, d));
+        start += d;
+    }
+    out
+}
+
+/// Split a stage-1 segment wherever the pair granularity cannot stay in the
+/// producer-side register files.
+fn split_at_gb_boundaries(graph: &ModelGraph, cfg: &ArchConfig, seg: &Segment) -> Vec<Segment> {
+    if seg.depth == 1 {
+        return vec![seg.clone()];
+    }
+    let styles: Vec<DataflowStyle> = seg
+        .layers()
+        .map(|i| choose_dataflow(graph.layer(i)))
+        .collect();
+    let nests: Vec<LoopNest> = seg
+        .layers()
+        .zip(styles.iter())
+        .map(|(i, &st)| LoopNest::for_op(&graph.layer(i).op, st))
+        .collect();
+    let macs: Vec<u64> = seg.layers().map(|i| graph.layer(i).macs()).collect();
+    let pe_alloc = allocate_pes(&macs, cfg.num_pes());
+    let rf_words = cfg.rf_total_bytes() / cfg.bytes_per_word as u64;
+    let mut out = Vec::new();
+    let mut start = seg.start;
+    for s in 0..seg.depth - 1 {
+        let producer = graph.layer(seg.start + s);
+        let total = producer.output_act_words();
+        let g = pair_granularity(&nests[s], &nests[s + 1], total);
+        let (words, _) = clamp(total, &g, pe_alloc[s]);
+        let producer_rf =
+            (rf_words * pe_alloc[s] as u64 / cfg.num_pes() as u64).max(1);
+        if words > producer_rf {
+            let abs = seg.start + s;
+            out.push(Segment::new(start, abs - start + 1));
+            start = abs + 1;
+        }
+    }
+    out.push(Segment::new(start, seg.end() - start));
+    out
+}
+
+/// Plan one (already final) segment: styles, allocation, granularities,
+/// organization.
+fn plan_segment(graph: &ModelGraph, cfg: &ArchConfig, seg: &Segment) -> PlannedSegment {
+    let depth = seg.depth;
+    let styles: Vec<DataflowStyle> = seg
+        .layers()
+        .map(|i| choose_dataflow(graph.layer(i)))
+        .collect();
+    if depth == 1 {
+        return PlannedSegment {
+            segment: seg.clone(),
+            organization: Organization::Sequential,
+            pe_alloc: vec![cfg.num_pes()],
+            styles,
+            handoffs: vec![],
+        };
+    }
+    let macs: Vec<u64> = seg.layers().map(|i| graph.layer(i).macs()).collect();
+    let pe_alloc = allocate_pes(&macs, cfg.num_pes());
+
+    // Granularity per adjacent pair (Alg. 1 on the chosen styles).
+    let nests: Vec<LoopNest> = seg
+        .layers()
+        .zip(styles.iter())
+        .map(|(i, &st)| LoopNest::for_op(&graph.layer(i).op, st))
+        .collect();
+    let mut handoffs = Vec::new();
+    let mut finest_words = u64::MAX;
+    for s in 0..depth - 1 {
+        let producer = graph.layer(seg.start + s);
+        let total = producer.output_act_words();
+        let g = pair_granularity(&nests[s], &nests[s + 1], total);
+        let (words, intervals) = clamp(total, &g, pe_alloc[s]);
+        finest_words = finest_words.min(words);
+        handoffs.push(PlannedHandoff {
+            from_stage: s,
+            to_stage: s + 1,
+            words_per_interval: words,
+            intervals,
+            via_gb: false, // refined below
+            is_skip: false,
+        });
+    }
+    // Skip connections absorbed inside the segment become NoC handoffs at
+    // the producer's granularity.
+    for e in graph.skip_edges() {
+        if seg.contains(e.src) && seg.contains(e.dst) {
+            let s_from = e.src - seg.start;
+            let s_to = e.dst - seg.start;
+            let adj = &handoffs[s_from.min(handoffs.len() - 1)];
+            let (words, intervals) = (adj.words_per_interval, adj.intervals);
+            handoffs.push(PlannedHandoff {
+                from_stage: s_from,
+                to_stage: s_to,
+                words_per_interval: words,
+                intervals,
+                via_gb: false,
+                is_skip: true,
+            });
+        }
+    }
+
+    // Organization from depth + finest granularity (Sec. IV-B).
+    let max_producer_pes = *pe_alloc.iter().max().unwrap_or(&1);
+    let choice = choose_organization(cfg, depth, finest_words.max(1), max_producer_pes);
+    // Any handoff still larger than its producer RF goes through the GB
+    // (rare after splitting — only skip handoffs can trip this).
+    let rf_words = cfg.rf_total_bytes() / cfg.bytes_per_word as u64;
+    for h in handoffs.iter_mut() {
+        let producer_rf = rf_words * pe_alloc[h.from_stage] as u64 / cfg.num_pes() as u64;
+        h.via_gb = h.words_per_interval > producer_rf.max(1);
+    }
+    PlannedSegment {
+        segment: seg.clone(),
+        organization: choice.organization,
+        pe_alloc,
+        styles,
+        handoffs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{SimbaLike, TangramLike};
+    use crate::cost::evaluate;
+    use crate::workloads;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    #[test]
+    fn plans_validate_on_whole_zoo() {
+        for g in workloads::all_tasks() {
+            let plan = PipeOrgan::default().plan(&g, &cfg());
+            plan.validate(&g, &cfg())
+                .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+
+    #[test]
+    fn interleaved_organizations_appear_on_fine_grained_segments() {
+        let g = workloads::eye_segmentation();
+        let plan = PipeOrgan::default().plan(&g, &cfg());
+        assert!(
+            plan.segments
+                .iter()
+                .any(|s| s.organization.is_interleaved()),
+            "expected fine-grained interleaving somewhere in RITNet"
+        );
+    }
+
+    #[test]
+    fn weight_heavy_models_stay_mostly_sequential() {
+        let g = workloads::world_locking();
+        let plan = PipeOrgan::default().plan(&g, &cfg());
+        let seq = plan
+            .segments
+            .iter()
+            .filter(|s| s.organization == Organization::Sequential)
+            .count();
+        assert!(
+            seq as f64 >= plan.segments.len() as f64 * 0.5,
+            "{seq}/{} sequential",
+            plan.segments.len()
+        );
+    }
+
+    #[test]
+    fn pipeorgan_beats_baselines_on_activation_heavy_tasks() {
+        // The Fig. 13 headline shape on the most favorable task.
+        let g = workloads::eye_segmentation();
+        let c = cfg();
+        let po = evaluate(&g, &PipeOrgan::default().plan(&g, &c), &c);
+        let tg = evaluate(&g, &TangramLike.plan(&g, &c), &c);
+        let sb = evaluate(&g, &SimbaLike.plan(&g, &c), &c);
+        assert!(
+            po.cycles < tg.cycles,
+            "pipeorgan {} vs tangram {}",
+            po.cycles,
+            tg.cycles
+        );
+        assert!(
+            po.cycles < sb.cycles,
+            "pipeorgan {} vs simba {}",
+            po.cycles,
+            sb.cycles
+        );
+        assert!(po.dram_words <= tg.dram_words);
+    }
+
+    #[test]
+    fn amp_does_not_hurt_vs_mesh_variant() {
+        let g = workloads::gaze_estimation();
+        let c = cfg();
+        let amp = evaluate(&g, &PipeOrgan::default().plan(&g, &c), &c);
+        let mesh = evaluate(&g, &PipeOrgan::on_mesh().plan(&g, &c), &c);
+        assert!(amp.cycles <= mesh.cycles * 1.0001);
+    }
+
+    #[test]
+    fn depth_respects_sqrt_pe_cap() {
+        for g in workloads::all_tasks() {
+            let plan = PipeOrgan::default().plan(&g, &cfg());
+            let cap = cfg().max_pipeline_depth();
+            assert!(plan.segments.iter().all(|s| s.depth() <= cap));
+        }
+    }
+
+    #[test]
+    fn absorbed_skips_become_skip_handoffs() {
+        let g = workloads::synthetic::skip_conv_segment();
+        let plan = PipeOrgan::default().plan(&g, &cfg());
+        // the depth heuristic should absorb the 1→3 skip in one segment
+        let has_skip_handoff = plan
+            .segments
+            .iter()
+            .any(|s| s.handoffs.iter().any(|h| h.is_skip));
+        assert!(has_skip_handoff, "{plan:?}");
+    }
+}

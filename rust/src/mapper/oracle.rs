@@ -1,0 +1,156 @@
+//! Oracle (exhaustive) spatial-organization search — the ablation
+//! comparator for the Sec. IV-B selection heuristic.
+//!
+//! The PipeOrgan mapper picks one organization per segment from the
+//! RF-vs-granularity rules; the oracle instead *evaluates* every candidate
+//! organization with the full cost model and keeps the cheapest. The gap
+//! between the two measures how much the closed-form heuristic leaves on
+//! the table (reported by `report::ablation_organization`).
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::cost::{evaluate_segment, Mapper, MappingPlan, PlannedSegment};
+use crate::energy::EnergyModel;
+use crate::ir::ModelGraph;
+use crate::noc::Topology;
+use crate::spatial::Organization;
+
+use super::PipeOrgan;
+
+/// Exhaustive-organization variant of the PipeOrgan mapper.
+#[derive(Debug, Clone, Copy)]
+pub struct OracleOrganization {
+    pub topology: TopologyKind,
+}
+
+impl Default for OracleOrganization {
+    fn default() -> Self {
+        Self {
+            topology: TopologyKind::Amp,
+        }
+    }
+}
+
+/// Candidate organizations for a segment of `depth`.
+pub fn candidates(depth: usize) -> Vec<Organization> {
+    if depth <= 1 {
+        return vec![Organization::Sequential];
+    }
+    let mut v = vec![
+        Organization::Blocked1D,
+        Organization::FineStriped1D,
+    ];
+    if depth >= 4 {
+        v.push(Organization::Blocked2D);
+        v.push(Organization::Checkerboard2D);
+    }
+    v
+}
+
+impl Mapper for OracleOrganization {
+    fn name(&self) -> &'static str {
+        "oracle_organization"
+    }
+
+    fn topology(&self) -> TopologyKind {
+        self.topology
+    }
+
+    fn plan(&self, graph: &ModelGraph, cfg: &ArchConfig) -> MappingPlan {
+        // Start from the heuristic plan (depth, styles, allocation and
+        // granularities are shared — only the organization is searched).
+        let base = PipeOrgan::on(self.topology).plan(graph, cfg);
+        let topo = Topology::new(self.topology, cfg.pe_rows, cfg.pe_cols);
+        let em = EnergyModel::default();
+        let segments = base
+            .segments
+            .into_iter()
+            .map(|seg| best_organization(graph, cfg, &topo, &em, seg))
+            .collect();
+        MappingPlan {
+            mapper_name: self.name().into(),
+            topology: self.topology,
+            segments,
+        }
+    }
+}
+
+fn best_organization(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    topo: &Topology,
+    em: &EnergyModel,
+    mut seg: PlannedSegment,
+) -> PlannedSegment {
+    let mut best = seg.organization;
+    let mut best_cost = f64::INFINITY;
+    for org in candidates(seg.depth()) {
+        seg.organization = org;
+        let c = evaluate_segment(graph, &seg, cfg, topo, em);
+        if c.cycles < best_cost {
+            best_cost = c.cycles;
+            best = org;
+        }
+    }
+    seg.organization = best;
+    seg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::evaluate;
+    use crate::workloads;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    #[test]
+    fn oracle_never_loses_to_heuristic() {
+        // By construction the oracle explores a superset including the
+        // heuristic's choice for pipelined segments.
+        let c = cfg();
+        for g in workloads::all_tasks() {
+            let heur = evaluate(&g, &PipeOrgan::default().plan(&g, &c), &c).cycles;
+            let orac = evaluate(&g, &OracleOrganization::default().plan(&g, &c), &c).cycles;
+            assert!(
+                orac <= heur * 1.0001,
+                "{}: oracle {orac} worse than heuristic {heur}",
+                g.name
+            );
+        }
+    }
+
+    #[test]
+    fn heuristic_is_close_to_oracle() {
+        // The Sec. IV-B rules should capture most of the benefit: within
+        // 15% of the exhaustive search in geomean.
+        let c = cfg();
+        let mut ratios = Vec::new();
+        for g in workloads::all_tasks() {
+            let heur = evaluate(&g, &PipeOrgan::default().plan(&g, &c), &c).cycles;
+            let orac = evaluate(&g, &OracleOrganization::default().plan(&g, &c), &c).cycles;
+            ratios.push(heur / orac);
+        }
+        let gap = crate::util::stats::geomean(&ratios);
+        assert!(gap < 1.15, "heuristic/oracle geomean gap = {gap}");
+    }
+
+    #[test]
+    fn candidates_shape() {
+        assert_eq!(candidates(1), vec![Organization::Sequential]);
+        assert_eq!(candidates(2).len(), 2);
+        assert_eq!(candidates(4).len(), 4);
+    }
+
+    #[test]
+    fn oracle_plans_validate() {
+        let c = cfg();
+        for g in workloads::all_tasks() {
+            OracleOrganization::default()
+                .plan(&g, &c)
+                .validate(&g, &c)
+                .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Memory-hierarchy model: global-buffer occupancy, DRAM access counting
+//! (the quantity Fig. 14 reports) and bandwidth stalls.
+//!
+//! DRAM traffic accounting per execution style:
+//! - *op-by-op*: every layer reads its inputs and weights and writes its
+//!   output; each skip consumer re-reads the skipped activation.
+//! - *pipelined segment `[l, l+D)`*: the segment input is read once, all D
+//!   layers' weights are read, the segment output is written once, and skip
+//!   activations crossing the boundary round-trip (write at the producer,
+//!   read at the consumer); fully-absorbed intermediates and skips never
+//!   touch DRAM. If the segment working set exceeds the global buffer the
+//!   overflow spills (write + read back).
+
+use crate::config::ArchConfig;
+use crate::ir::skips::boundary_skip_act_words;
+use crate::ir::{LayerId, ModelGraph};
+use crate::pipeline::Segment;
+
+/// DRAM words moved by a segment (read + write).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DramTraffic {
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl DramTraffic {
+    pub fn total(&self) -> u64 {
+        self.reads + self.writes
+    }
+}
+
+/// Words of global buffer a pipelined segment needs resident: the weights
+/// of all stages, the in-flight granularity buffers, and the boundary
+/// activations (segment input/output slices are streamed — charge two
+/// row-slices each).
+pub fn segment_working_set_words(
+    graph: &ModelGraph,
+    seg: &Segment,
+    handoff_words: &[u64],
+) -> u64 {
+    let weights: u64 = seg.layers().map(|i| graph.layer(i).weight_words()).sum();
+    let handoffs: u64 = handoff_words.iter().map(|&w| 2 * w).sum(); // double-buffered
+    let first = graph.layer(seg.start);
+    let last = graph.layer(seg.end() - 1);
+    let in_slice = 2 * crate::util::ceil_div(
+        first.input_act_words(),
+        first.op.output_rows().max(1),
+    );
+    let out_slice = 2 * crate::util::ceil_div(
+        last.output_act_words(),
+        last.op.output_rows().max(1),
+    );
+    weights + handoffs + in_slice + out_slice
+}
+
+/// DRAM traffic of one pipelined segment (depth ≥ 1; depth 1 = op-by-op
+/// for that layer).
+pub fn segment_dram_traffic(
+    graph: &ModelGraph,
+    seg: &Segment,
+    handoff_words: &[u64],
+    cfg: &ArchConfig,
+) -> DramTraffic {
+    let mut t = DramTraffic::default();
+    let first = graph.layer(seg.start);
+    let last = graph.layer(seg.end() - 1);
+    // Segment boundary activations.
+    t.reads += first.input_act_words();
+    t.writes += last.output_act_words();
+    // All weights stream in once.
+    for i in seg.layers() {
+        t.reads += graph.layer(i).weight_words();
+    }
+    // Skip activations crossing the segment boundary: the producer's output
+    // is written when produced and re-read when consumed.
+    let crossing = boundary_skip_act_words(graph, seg.start, seg.depth);
+    t.reads += crossing;
+    t.writes += crossing;
+    // Working-set overflow spills once per overflow word.
+    let ws = segment_working_set_words(graph, seg, handoff_words);
+    let sram_words = cfg.sram_bytes / cfg.bytes_per_word as u64;
+    if ws > sram_words {
+        let spill = ws - sram_words;
+        t.writes += spill;
+        t.reads += spill;
+    }
+    t
+}
+
+/// Op-by-op DRAM traffic of a single layer (including re-reads of skip
+/// inputs, which arrive as part of `input_act_words` for multi-input ops).
+pub fn layer_dram_traffic(graph: &ModelGraph, id: LayerId, cfg: &ArchConfig) -> DramTraffic {
+    let seg = Segment::new(id, 1);
+    segment_dram_traffic(graph, &seg, &[], cfg)
+}
+
+/// Whole-model op-by-op traffic — the reference DRAM count.
+pub fn op_by_op_dram_traffic(graph: &ModelGraph, cfg: &ArchConfig) -> DramTraffic {
+    let mut t = DramTraffic::default();
+    for i in 0..graph.num_layers() {
+        let lt = layer_dram_traffic(graph, i, cfg);
+        t.reads += lt.reads;
+        t.writes += lt.writes;
+    }
+    t
+}
+
+/// Cycles stalled on DRAM bandwidth for `words` of traffic (Table III
+/// bandwidth), assuming perfect overlap within the segment otherwise.
+pub fn bandwidth_cycles(words: u64, cfg: &ArchConfig) -> f64 {
+    (words * cfg.bytes_per_word as u64) as f64 / cfg.dram_bytes_per_cycle
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Layer, Op};
+    use crate::workloads::synthetic;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    #[test]
+    fn pipelining_saves_intermediate_traffic() {
+        let g = synthetic::equal_conv_segment(4);
+        let op_by_op = op_by_op_dram_traffic(&g, &cfg());
+        let seg = Segment::new(0, 4);
+        let pipe = segment_dram_traffic(&g, &seg, &[64, 64, 64], &cfg());
+        assert!(
+            pipe.total() < op_by_op.total(),
+            "pipe {} >= op-by-op {}",
+            pipe.total(),
+            op_by_op.total()
+        );
+        // The savings are exactly the three intermediate tensors' round
+        // trips (each written once + read once op-by-op).
+        let inter: u64 = (0..3).map(|i| g.layer(i).output_act_words()).sum();
+        assert_eq!(op_by_op.total() - pipe.total(), 2 * inter);
+    }
+
+    #[test]
+    fn crossing_skip_roundtrips() {
+        let g = synthetic::skip_conv_segment(); // skip 1→3 inside depth 4
+        // Depth 2 segment [0,2): the 1→3 skip crosses out.
+        let seg = Segment::new(0, 2);
+        let t = segment_dram_traffic(&g, &seg, &[64], &cfg());
+        let base_writes = g.layer(1).output_act_words();
+        // output write includes the crossing skip's write
+        assert_eq!(t.writes, base_writes + g.layer(1).output_act_words());
+        // Depth 4 absorbs the skip: writes = only final output.
+        let seg4 = Segment::new(0, 4);
+        let t4 = segment_dram_traffic(&g, &seg4, &[64, 64, 64], &cfg());
+        assert_eq!(t4.writes, g.layer(3).output_act_words());
+    }
+
+    #[test]
+    fn overflow_spills() {
+        // Huge weights force the working set past 1 MB.
+        let mut g = crate::ir::ModelGraph::new("big");
+        g.add_root(Layer::new("a", Op::gemm(8, 2048, 2048)));
+        g.push(Layer::new("b", Op::gemm(8, 2048, 2048)));
+        let seg = Segment::new(0, 2);
+        let t = segment_dram_traffic(&g, &seg, &[8 * 2048], &cfg());
+        let no_spill_reads = g.layer(0).input_act_words()
+            + g.layer(0).weight_words()
+            + g.layer(1).weight_words();
+        assert!(t.reads > no_spill_reads, "expected spill traffic");
+    }
+
+    #[test]
+    fn bandwidth_cycles_match_table3() {
+        // 256 B/cycle: 1 MB takes 4096 cycles.
+        assert_eq!(bandwidth_cycles(1 << 20, &cfg()), 4096.0);
+    }
+
+    #[test]
+    fn op_by_op_equals_sum_of_depth1_segments() {
+        let g = synthetic::skip_conv_segment();
+        let total = op_by_op_dram_traffic(&g, &cfg());
+        let sum: u64 = (0..g.num_layers())
+            .map(|i| layer_dram_traffic(&g, i, &cfg()).total())
+            .sum();
+        assert_eq!(total.total(), sum);
+    }
+
+    #[test]
+    fn working_set_scales_with_depth() {
+        let g = synthetic::equal_conv_segment(4);
+        let w2 = segment_working_set_words(&g, &Segment::new(0, 2), &[64]);
+        let w4 = segment_working_set_words(&g, &Segment::new(0, 4), &[64, 64, 64]);
+        assert!(w4 > w2);
+    }
+}

@@ -1,0 +1,32 @@
+//! On-chip network model (Sec. IV-C/D): topologies (mesh, torus, flattened
+//! butterfly, and the proposed AMP), link enumeration and routing.
+//!
+//! Links are directed and indexed densely so traffic analysis can
+//! accumulate per-link channel load in a flat array.
+
+mod routing;
+mod topology;
+
+pub use routing::{route, route_into, route_wire_length};
+pub use topology::{amp_express_len, Link, LinkId, NodeId, Topology};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+
+    #[test]
+    fn link_count_complexities() {
+        // Paper: AMP increases links < 2× over mesh; flattened butterfly is
+        // O(N log N)-ish and much larger.
+        let mesh = Topology::new(TopologyKind::Mesh, 32, 32);
+        let amp = Topology::new(TopologyKind::Amp, 32, 32);
+        let fb = Topology::new(TopologyKind::FlattenedButterfly, 32, 32);
+        let m = mesh.num_links() as f64;
+        let a = amp.num_links() as f64;
+        let f = fb.num_links() as f64;
+        assert!(a / m < 2.0, "AMP/mesh = {}", a / m);
+        assert!(a / m > 1.5, "AMP should add many express links: {}", a / m);
+        assert!(f / m > 10.0, "FB should be an overkill: {}", f / m);
+    }
+}

@@ -1,0 +1,250 @@
+//! Deterministic routing per topology.
+//!
+//! - Mesh: dimension-ordered XY (X first, then Y) — the standard
+//!   congestion-analyzable baseline the paper's figures assume.
+//! - Torus: XY with wraparound, taking the shorter direction per dimension.
+//! - AMP: greedy express-first XY — take length-`L` express hops while the
+//!   remaining distance in the dimension is ≥ `L`, finish with single hops.
+//! - Flattened butterfly: at most one row hop plus one column hop.
+
+use crate::config::TopologyKind;
+
+use super::topology::{LinkId, NodeId, Topology};
+
+/// Compute the link sequence from `src` to `dst`. Returns an empty route
+/// when `src == dst`.
+pub fn route(topo: &Topology, src: NodeId, dst: NodeId) -> Vec<LinkId> {
+    let mut out = Vec::new();
+    route_into(topo, src, dst, &mut out);
+    out
+}
+
+/// Like [`route`] but appends into a caller-provided buffer (hot path —
+/// avoids an allocation per flow).
+pub fn route_into(topo: &Topology, src: NodeId, dst: NodeId, out: &mut Vec<LinkId>) {
+    if src == dst {
+        return;
+    }
+    match topo.kind {
+        TopologyKind::Mesh => xy_route(topo, src, dst, 1, out),
+        TopologyKind::Amp => xy_route(topo, src, dst, topo.express_len.max(1), out),
+        TopologyKind::Torus => torus_route(topo, src, dst, out),
+        TopologyKind::FlattenedButterfly => fb_route(topo, src, dst, out),
+    }
+}
+
+#[inline]
+fn push_link(topo: &Topology, from: NodeId, to: NodeId, out: &mut Vec<LinkId>) {
+    let id = topo
+        .link_between(from, to)
+        .unwrap_or_else(|| panic!("missing link {from}→{to} on {:?}", topo.kind));
+    out.push(id);
+}
+
+/// Dimension-ordered X-then-Y routing with greedy express hops of length
+/// `l` (l = 1 degrades to plain mesh XY).
+fn xy_route(topo: &Topology, src: NodeId, dst: NodeId, l: usize, out: &mut Vec<LinkId>) {
+    let (mut r, mut c) = topo.coords(src);
+    let (dr, dc) = topo.coords(dst);
+    // X dimension (columns) first.
+    while c != dc {
+        let dist = c.abs_diff(dc);
+        let step = if l > 1 && dist >= l { l } else { 1 };
+        let next_c = if dc > c { c + step } else { c - step };
+        push_link(topo, topo.node(r, c), topo.node(r, next_c), out);
+        c = next_c;
+    }
+    // Then Y (rows).
+    while r != dr {
+        let dist = r.abs_diff(dr);
+        let step = if l > 1 && dist >= l { l } else { 1 };
+        let next_r = if dr > r { r + step } else { r - step };
+        push_link(topo, topo.node(r, c), topo.node(next_r, c), out);
+        r = next_r;
+    }
+}
+
+/// Torus XY: per dimension choose the direction with fewer hops, using the
+/// wraparound link when that is shorter.
+fn torus_route(topo: &Topology, src: NodeId, dst: NodeId, out: &mut Vec<LinkId>) {
+    let (mut r, mut c) = topo.coords(src);
+    let (dr, dc) = topo.coords(dst);
+    let (rows, cols) = (topo.rows, topo.cols);
+    while c != dc {
+        let fwd = (dc + cols - c) % cols; // hops going +1 with wraparound
+        let next_c = if fwd <= cols - fwd {
+            (c + 1) % cols
+        } else {
+            (c + cols - 1) % cols
+        };
+        push_link(topo, topo.node(r, c), topo.node(r, next_c), out);
+        c = next_c;
+    }
+    while r != dr {
+        let fwd = (dr + rows - r) % rows;
+        let next_r = if fwd <= rows - fwd {
+            (r + 1) % rows
+        } else {
+            (r + rows - 1) % rows
+        };
+        push_link(topo, topo.node(r, c), topo.node(next_r, c), out);
+        r = next_r;
+    }
+}
+
+/// Flattened butterfly: one direct row link then one direct column link.
+fn fb_route(topo: &Topology, src: NodeId, dst: NodeId, out: &mut Vec<LinkId>) {
+    let (r, c) = topo.coords(src);
+    let (dr, dc) = topo.coords(dst);
+    let mut cur = src;
+    if c != dc {
+        let mid = topo.node(r, dc);
+        push_link(topo, cur, mid, out);
+        cur = mid;
+    }
+    if r != dr {
+        push_link(topo, cur, topo.node(dr, dc), out);
+    }
+}
+
+/// Total Manhattan-equivalent wire length of a route (Σ link lengths).
+pub fn route_wire_length(topo: &Topology, links: &[LinkId]) -> u64 {
+    links.iter().map(|&l| topo.link(l).length as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::util::rng::SplitMix64;
+
+    fn check_route_valid(topo: &Topology, src: NodeId, dst: NodeId) {
+        let r = route(topo, src, dst);
+        // Route is connected and ends at dst.
+        let mut cur = src;
+        for lid in &r {
+            let link = topo.link(*lid);
+            assert_eq!(link.from, cur, "route not connected");
+            cur = link.to;
+        }
+        assert_eq!(cur, dst, "route does not reach destination");
+    }
+
+    #[test]
+    fn mesh_xy_hop_count_is_manhattan() {
+        let t = Topology::new(TopologyKind::Mesh, 8, 8);
+        let r = route(&t, t.node(1, 1), t.node(5, 6));
+        assert_eq!(r.len(), 4 + 5);
+        check_route_valid(&t, t.node(1, 1), t.node(5, 6));
+    }
+
+    #[test]
+    fn amp_uses_express_links() {
+        let t = Topology::new(TopologyKind::Amp, 32, 32);
+        assert_eq!(t.express_len, 4);
+        // 0 → 16 along a row: 4 express hops instead of 16 singles.
+        let r = route(&t, t.node(0, 0), t.node(0, 16));
+        assert_eq!(r.len(), 4);
+        assert!(r.iter().all(|&l| t.link(l).length == 4));
+        // Distance 6: one express (4) + 2 singles.
+        let r = route(&t, t.node(0, 0), t.node(0, 6));
+        assert_eq!(r.len(), 3);
+        check_route_valid(&t, t.node(0, 0), t.node(0, 6));
+    }
+
+    #[test]
+    fn amp_hop_reduction_vs_mesh() {
+        // Paper Fig. 12b: AMP reduces both hops and congestion for blocked
+        // organizations. Mean hop count over row-crossing pairs must drop.
+        let mesh = Topology::new(TopologyKind::Mesh, 32, 32);
+        let amp = Topology::new(TopologyKind::Amp, 32, 32);
+        let mut mesh_hops = 0usize;
+        let mut amp_hops = 0usize;
+        for c in 0..16 {
+            let (s, d) = (mesh.node(7, c), mesh.node(7, c + 16));
+            mesh_hops += route(&mesh, s, d).len();
+            amp_hops += route(&amp, s, d).len();
+        }
+        assert!(
+            (amp_hops as f64) < mesh_hops as f64 / 2.5,
+            "amp {amp_hops} mesh {mesh_hops}"
+        );
+    }
+
+    #[test]
+    fn torus_wraps_shorter_way() {
+        let t = Topology::new(TopologyKind::Torus, 8, 8);
+        let r = route(&t, t.node(0, 0), t.node(0, 7));
+        assert_eq!(r.len(), 1); // wraparound
+        let r = route(&t, t.node(0, 0), t.node(0, 3));
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn fb_routes_in_two_hops() {
+        let t = Topology::new(TopologyKind::FlattenedButterfly, 8, 8);
+        let r = route(&t, t.node(1, 2), t.node(6, 7));
+        assert_eq!(r.len(), 2);
+        let r = route(&t, t.node(1, 2), t.node(1, 7));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn self_route_is_empty() {
+        for kind in [
+            TopologyKind::Mesh,
+            TopologyKind::Amp,
+            TopologyKind::Torus,
+            TopologyKind::FlattenedButterfly,
+        ] {
+            let t = Topology::new(kind, 8, 8);
+            assert!(route(&t, t.node(3, 3), t.node(3, 3)).is_empty());
+        }
+    }
+
+    #[test]
+    fn property_routes_always_reach_destination() {
+        // proptest-lite invariant: routing terminates at dst on every
+        // topology for random pairs.
+        crate::util::proptest_lite::run(300, |rng: &mut SplitMix64| {
+            let kind = *rng.choose(&[
+                TopologyKind::Mesh,
+                TopologyKind::Amp,
+                TopologyKind::Torus,
+                TopologyKind::FlattenedButterfly,
+            ]);
+            let rows = rng.gen_usize(2, 33);
+            let cols = rng.gen_usize(2, 33);
+            let t = Topology::new(kind, rows, cols);
+            let src = rng.gen_usize(0, rows * cols) as NodeId;
+            let dst = rng.gen_usize(0, rows * cols) as NodeId;
+            let r = route(&t, src, dst);
+            let mut cur = src;
+            for lid in &r {
+                let link = t.link(*lid);
+                crate::prop_assert!(link.from == cur, "disconnected at {cur}");
+                cur = link.to;
+            }
+            crate::prop_assert!(cur == dst, "ended at {cur}, wanted {dst}");
+            // mesh-family routes are minimal in wire length
+            if kind == TopologyKind::Mesh {
+                let (sr, sc) = t.coords(src);
+                let (dr, dc) = t.coords(dst);
+                crate::prop_assert!(
+                    r.len() == sr.abs_diff(dr) + sc.abs_diff(dc),
+                    "mesh route not minimal"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn amp_route_wire_length_matches_manhattan() {
+        // Express hops cover distance L: total wire length equals the
+        // Manhattan distance even when hop count shrinks.
+        let t = Topology::new(TopologyKind::Amp, 32, 32);
+        let r = route(&t, t.node(2, 3), t.node(20, 29));
+        assert_eq!(route_wire_length(&t, &r), 18 + 26);
+    }
+}

@@ -1,0 +1,288 @@
+//! Topology construction: nodes, directed links, adjacency.
+//!
+//! Perf note (§Perf in EXPERIMENTS.md): link lookup is a linear scan of the
+//! per-node outgoing adjacency list instead of a hash map — out-degree is
+//! ≤ 8 for mesh/AMP (≤ 2·(rows+cols) for flattened butterfly), and the scan
+//! is both faster per lookup and much faster to construct.
+
+use crate::config::TopologyKind;
+
+/// Node id: `r * cols + c`.
+pub type NodeId = u32;
+/// Dense link index into [`Topology::links`].
+pub type LinkId = u32;
+
+/// A directed physical link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Link {
+    pub from: NodeId,
+    pub to: NodeId,
+    /// Manhattan length in PE pitches (1 for mesh neighbors, `L` for AMP
+    /// express links, arbitrary for flattened butterfly).
+    pub length: u32,
+}
+
+/// AMP express-link length for an array with `rows` rows (Sec. IV-D):
+/// `round(√(rows/2))` — the geometric mean of the 1-hop and rows/2-hop
+/// cases — rounded up to the next power of two so links tile the array
+/// evenly (4 for 32×32, 8 for 64×64, matching the paper's examples).
+pub fn amp_express_len(rows: usize) -> usize {
+    let raw = ((rows as f64) / 2.0).sqrt();
+    let mut l = 1usize;
+    while (l as f64) < raw {
+        l *= 2;
+    }
+    l.max(2)
+}
+
+/// A concrete NoC instance.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub kind: TopologyKind,
+    pub rows: usize,
+    pub cols: usize,
+    links: Vec<Link>,
+    /// Outgoing (to, link id) per node — linear-scanned for lookups.
+    out: Vec<Vec<(NodeId, LinkId)>>,
+    /// AMP express-link length (0 for other topologies).
+    pub express_len: usize,
+}
+
+impl Topology {
+    /// Shared, memoized instance — plan evaluation builds the same handful
+    /// of topologies thousands of times during sweeps (§Perf opt. 2).
+    pub fn cached(kind: TopologyKind, rows: usize, cols: usize) -> std::sync::Arc<Topology> {
+        use once_cell::sync::Lazy;
+        use std::collections::HashMap;
+        use std::sync::{Arc, Mutex};
+        static CACHE: Lazy<Mutex<HashMap<(TopologyKind, usize, usize), Arc<Topology>>>> =
+            Lazy::new(|| Mutex::new(HashMap::new()));
+        let mut cache = CACHE.lock().unwrap();
+        Arc::clone(
+            cache
+                .entry((kind, rows, cols))
+                .or_insert_with(|| Arc::new(Topology::new(kind, rows, cols))),
+        )
+    }
+
+    pub fn new(kind: TopologyKind, rows: usize, cols: usize) -> Topology {
+        let mut t = Topology {
+            kind,
+            rows,
+            cols,
+            links: Vec::new(),
+            out: vec![Vec::new(); rows * cols],
+            express_len: if kind == TopologyKind::Amp {
+                amp_express_len(rows)
+            } else {
+                0
+            },
+        };
+        t.build();
+        t
+    }
+
+    #[inline]
+    pub fn node(&self, r: usize, c: usize) -> NodeId {
+        (r * self.cols + c) as NodeId
+    }
+
+    #[inline]
+    pub fn coords(&self, n: NodeId) -> (usize, usize) {
+        let n = n as usize;
+        (n / self.cols, n % self.cols)
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    pub fn link(&self, id: LinkId) -> Link {
+        self.links[id as usize]
+    }
+
+    /// Link id between adjacent endpoints, if a physical link exists.
+    #[inline]
+    pub fn link_between(&self, from: NodeId, to: NodeId) -> Option<LinkId> {
+        self.out[from as usize]
+            .iter()
+            .find(|&&(t, _)| t == to)
+            .map(|&(_, id)| id)
+    }
+
+    /// Outgoing (neighbor, link id) pairs of a node.
+    pub fn outgoing(&self, n: NodeId) -> &[(NodeId, LinkId)] {
+        &self.out[n as usize]
+    }
+
+    fn add_link(&mut self, from: NodeId, to: NodeId, length: u32) {
+        if self.link_between(from, to).is_some() {
+            return;
+        }
+        let id = self.links.len() as LinkId;
+        self.links.push(Link { from, to, length });
+        self.out[from as usize].push((to, id));
+    }
+
+    fn build(&mut self) {
+        let (rows, cols) = (self.rows, self.cols);
+        // Base mesh neighbors (all kinds except FB use them; FB links rows
+        // and columns all-to-all which subsumes neighbors).
+        let mesh_base = !matches!(self.kind, TopologyKind::FlattenedButterfly);
+        if mesh_base {
+            for r in 0..rows {
+                for c in 0..cols {
+                    let n = self.node(r, c);
+                    if c + 1 < cols {
+                        let e = self.node(r, c + 1);
+                        self.add_link(n, e, 1);
+                        self.add_link(e, n, 1);
+                    }
+                    if r + 1 < rows {
+                        let s = self.node(r + 1, c);
+                        self.add_link(n, s, 1);
+                        self.add_link(s, n, 1);
+                    }
+                }
+            }
+        }
+        match self.kind {
+            TopologyKind::Mesh => {}
+            TopologyKind::Torus => {
+                for r in 0..rows {
+                    let a = self.node(r, 0);
+                    let b = self.node(r, cols - 1);
+                    self.add_link(a, b, 1);
+                    self.add_link(b, a, 1);
+                }
+                for c in 0..cols {
+                    let a = self.node(0, c);
+                    let b = self.node(rows - 1, c);
+                    self.add_link(a, b, 1);
+                    self.add_link(b, a, 1);
+                }
+            }
+            TopologyKind::Amp => {
+                // Express links of length L in each direction at every PE
+                // where they fit (Sec. IV-D, Fig. 12a).
+                let l = self.express_len;
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let n = self.node(r, c);
+                        if c + l < cols {
+                            let e = self.node(r, c + l);
+                            self.add_link(n, e, l as u32);
+                            self.add_link(e, n, l as u32);
+                        }
+                        if r + l < rows {
+                            let s = self.node(r + l, c);
+                            self.add_link(n, s, l as u32);
+                            self.add_link(s, n, l as u32);
+                        }
+                    }
+                }
+            }
+            TopologyKind::FlattenedButterfly => {
+                // All-to-all within each row and each column.
+                for r in 0..rows {
+                    for c1 in 0..cols {
+                        for c2 in 0..cols {
+                            if c1 != c2 {
+                                let a = self.node(r, c1);
+                                let b = self.node(r, c2);
+                                self.add_link(a, b, c1.abs_diff(c2) as u32);
+                            }
+                        }
+                    }
+                }
+                for c in 0..cols {
+                    for r1 in 0..rows {
+                        for r2 in 0..rows {
+                            if r1 != r2 {
+                                let a = self.node(r1, c);
+                                let b = self.node(r2, c);
+                                self.add_link(a, b, r1.abs_diff(r2) as u32);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn amp_express_lengths_match_paper() {
+        assert_eq!(amp_express_len(32), 4); // "spans 4 PEs for 32×32"
+        assert_eq!(amp_express_len(64), 8); // "8 PEs for a 64×64"
+        assert_eq!(amp_express_len(8), 2);
+        assert_eq!(amp_express_len(16), 4);
+    }
+
+    #[test]
+    fn mesh_link_count() {
+        // Directed: 2 * (rows*(cols-1) + cols*(rows-1))
+        let t = Topology::new(crate::config::TopologyKind::Mesh, 4, 4);
+        assert_eq!(t.num_links(), 2 * (4 * 3 + 4 * 3));
+    }
+
+    #[test]
+    fn torus_adds_wraparound() {
+        let t = Topology::new(crate::config::TopologyKind::Torus, 4, 4);
+        let mesh = Topology::new(crate::config::TopologyKind::Mesh, 4, 4);
+        assert_eq!(t.num_links(), mesh.num_links() + 2 * (4 + 4));
+        assert!(t.link_between(t.node(0, 0), t.node(0, 3)).is_some());
+    }
+
+    #[test]
+    fn amp_links_exist_and_have_length() {
+        let t = Topology::new(crate::config::TopologyKind::Amp, 8, 8);
+        assert_eq!(t.express_len, 2);
+        let id = t.link_between(t.node(0, 0), t.node(0, 2)).unwrap();
+        assert_eq!(t.link(id).length, 2);
+        // no express link off the edge
+        assert!(t.link_between(t.node(0, 7), t.node(0, 9)).is_none());
+    }
+
+    #[test]
+    fn fb_has_direct_row_links() {
+        let t = Topology::new(crate::config::TopologyKind::FlattenedButterfly, 4, 4);
+        assert!(t
+            .link_between(t.node(2, 0), t.node(2, 3))
+            .is_some());
+        assert!(t
+            .link_between(t.node(0, 1), t.node(3, 1))
+            .is_some());
+        // but no diagonal shortcut
+        assert!(t.link_between(t.node(0, 0), t.node(1, 1)).is_none());
+    }
+
+    #[test]
+    fn outgoing_degree_mesh_interior() {
+        let t = Topology::new(crate::config::TopologyKind::Mesh, 4, 4);
+        assert_eq!(t.outgoing(t.node(1, 1)).len(), 4);
+        assert_eq!(t.outgoing(t.node(0, 0)).len(), 2);
+    }
+
+    #[test]
+    fn coords_roundtrip() {
+        let t = Topology::new(crate::config::TopologyKind::Mesh, 5, 7);
+        for r in 0..5 {
+            for c in 0..7 {
+                assert_eq!(t.coords(t.node(r, c)), (r, c));
+            }
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! The pipeline-depth heuristic (Sec. IV-A, "Determining Depth").
+//!
+//! Starting at layer `l`, grow the candidate depth `D` while the activation
+//! footprint saved by pipelining — `A_l(in) + A_{l+D}(out)` plus activations
+//! crossing the segment boundary through skip connections — stays at least
+//! as large as the accumulated weight footprint `Σ W_i`. Stop the moment
+//! weights win; cut unconditionally at complex layers (ROIAlign/RPN); cap
+//! at `√numPEs`.
+
+use crate::config::ArchConfig;
+use crate::ir::skips::boundary_skip_act_words;
+use crate::ir::{LayerId, ModelGraph};
+
+use super::segment::{segments_cover, Segment};
+
+/// Why a segment stopped growing — recorded for Fig. 16 reporting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// `Σ W_i` exceeded the activation footprint at the next depth.
+    FootprintRule,
+    /// The next layer is a complex layer (ROIAlign, RPN).
+    ComplexLayer,
+    /// Hit the `√numPEs` cap.
+    MaxDepth,
+    /// Ran out of layers.
+    ModelEnd,
+}
+
+/// A segment plus the heuristic's bookkeeping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DepthDecision {
+    pub segment: Segment,
+    /// Activation footprint at the chosen depth (words).
+    pub act_words: u64,
+    /// Weight footprint at the chosen depth (words).
+    pub weight_words: u64,
+    /// Skip edges fully absorbed inside the segment.
+    pub absorbed_skips: usize,
+    pub stop: StopReason,
+}
+
+/// Activation footprint of candidate segment `[l, l+d)` (Sec. III-A): the
+/// segment input, the segment output, and everything crossing the boundary
+/// via skip connections. Intermediate activations are assumed forwarded
+/// PE-to-PE (their granularity term vanishes — fine-grained case).
+fn act_footprint(graph: &ModelGraph, l: LayerId, d: usize) -> u64 {
+    let first = graph.layer(l);
+    let last = graph.layer(l + d - 1);
+    first.input_act_words() + last.output_act_words() + boundary_skip_act_words(graph, l, d)
+}
+
+fn weight_footprint(graph: &ModelGraph, l: LayerId, d: usize) -> u64 {
+    (l..l + d).map(|i| graph.layer(i).weight_words()).sum()
+}
+
+/// Partition a whole model into pipeline segments.
+pub fn partition(graph: &ModelGraph, cfg: &ArchConfig) -> Vec<DepthDecision> {
+    let n = graph.num_layers();
+    let max_depth = cfg.max_pipeline_depth().max(1);
+    let mut out = Vec::new();
+    let mut l = 0usize;
+    while l < n {
+        // Complex layers always run alone.
+        if graph.layer(l).is_complex() {
+            out.push(DepthDecision {
+                segment: Segment::new(l, 1),
+                act_words: act_footprint(graph, l, 1),
+                weight_words: weight_footprint(graph, l, 1),
+                absorbed_skips: 0,
+                stop: StopReason::ComplexLayer,
+            });
+            l += 1;
+            continue;
+        }
+        let mut d = 1usize;
+        let stop;
+        loop {
+            if l + d >= n {
+                stop = StopReason::ModelEnd;
+                break;
+            }
+            if d + 1 > max_depth {
+                stop = StopReason::MaxDepth;
+                break;
+            }
+            if graph.layer(l + d).is_complex() {
+                stop = StopReason::ComplexLayer;
+                break;
+            }
+            let cand = d + 1;
+            let act = act_footprint(graph, l, cand);
+            let w = weight_footprint(graph, l, cand);
+            if w > act {
+                stop = StopReason::FootprintRule;
+                break;
+            }
+            d = cand;
+        }
+        out.push(DepthDecision {
+            segment: Segment::new(l, d),
+            act_words: act_footprint(graph, l, d),
+            weight_words: weight_footprint(graph, l, d),
+            absorbed_skips: crate::ir::skips::absorbed_skips(graph, l, d),
+            stop,
+        });
+        l += d;
+    }
+    debug_assert!(segments_cover(
+        &out.iter().map(|x| x.segment.clone()).collect::<Vec<_>>(),
+        n
+    )
+    .is_ok());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Layer, Op};
+    use crate::workloads;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    #[test]
+    fn activation_heavy_chain_goes_deep() {
+        // Huge maps, tiny weights → footprint rule never trips; depth is
+        // bounded by the model length or the sqrt(numPEs) cap.
+        let g = workloads::synthetic::aw_chain(3.0, 8);
+        let parts = partition(&g, &cfg());
+        assert_eq!(parts.len(), 1, "{parts:?}");
+        assert_eq!(parts[0].segment.depth, 8);
+    }
+
+    #[test]
+    fn weight_heavy_chain_stays_op_by_op() {
+        let g = workloads::synthetic::aw_chain(-2.0, 8);
+        let parts = partition(&g, &cfg());
+        assert!(parts.iter().all(|p| p.segment.depth == 1), "{parts:?}");
+        assert!(parts
+            .iter()
+            .take(parts.len() - 1)
+            .all(|p| p.stop == StopReason::FootprintRule));
+    }
+
+    #[test]
+    fn depth_capped_at_sqrt_num_pes() {
+        let g = workloads::synthetic::aw_chain(3.0, 64);
+        let parts = partition(&g, &cfg());
+        let max = cfg().max_pipeline_depth();
+        assert!(parts.iter().all(|p| p.segment.depth <= max));
+        assert!(parts.iter().any(|p| p.stop == StopReason::MaxDepth));
+    }
+
+    #[test]
+    fn complex_layer_cuts_segment() {
+        let mut g = workloads::synthetic::aw_chain(2.0, 4);
+        let roi = g.push(Layer::new("roi", Op::roi_align(32, 7, 64)));
+        g.push(Layer::new(
+            "after",
+            Op::conv2d(1, 64, 64, 16, 16, 3, 3, 1, 1),
+        ));
+        let _ = roi;
+        let parts = partition(&g, &cfg());
+        // chain(4) | roi(1) | after(1)
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].segment.depth, 4);
+        assert_eq!(parts[0].stop, StopReason::ComplexLayer);
+        assert_eq!(parts[1].segment.depth, 1);
+        assert_eq!(parts[1].stop, StopReason::ComplexLayer);
+    }
+
+    #[test]
+    fn skip_connections_skew_deeper() {
+        // Two identical chains; one gains a skip edge that crosses what
+        // would otherwise be the segment boundary. Crossing skips inflate
+        // the activation side, so the skipped version pipelines deeper or
+        // equal at every segment start.
+        let plain = workloads::synthetic::aw_chain(0.05, 8);
+        let mut skipped = workloads::synthetic::aw_chain(0.05, 8);
+        skipped.add_edge(0, 4);
+        let d_plain = partition(&plain, &cfg())[0].segment.depth;
+        let d_skip = partition(&skipped, &cfg())[0].segment.depth;
+        assert!(
+            d_skip >= d_plain,
+            "skip should not reduce depth: {d_skip} vs {d_plain}"
+        );
+    }
+
+    #[test]
+    fn segments_tile_every_zoo_model() {
+        for g in workloads::all_tasks() {
+            let parts = partition(&g, &cfg());
+            let segs: Vec<_> = parts.iter().map(|p| p.segment.clone()).collect();
+            segments_cover(&segs, g.num_layers()).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+
+    #[test]
+    fn eye_segmentation_pipelines_deeper_than_action_segmentation() {
+        // Fig. 16 shape: RITNet-like eye segmentation has the most deep
+        // regions; TCN action segmentation stays shallow.
+        let mean_depth = |g: &ModelGraph| {
+            let parts = partition(g, &cfg());
+            parts.iter().map(|p| p.segment.depth as f64).sum::<f64>() / parts.len() as f64
+        };
+        let eye = mean_depth(&workloads::eye_segmentation());
+        let act = mean_depth(&workloads::action_segmentation());
+        assert!(eye > act, "eye {eye} vs action {act}");
+        assert!(eye >= 2.0, "eye should pipeline, mean depth {eye}");
+    }
+}

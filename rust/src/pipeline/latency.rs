@@ -1,0 +1,180 @@
+//! The pipeline latency equations of Fig. 3.
+//!
+//! A pipelined segment is a waterfall of stages. Each stage `s` processes
+//! the intermediate tensor in intervals; the delay of one interval at stage
+//! `s` is the max of its own work (compute/communication) and the
+//! producer-side delay — the previous stage's interval delay *normalized by
+//! the ratio of work covered by the current vs previous interval* (variable
+//! granularity / load imbalance): one consumer interval consumes
+//! `T_prev / T_cur` producer intervals' worth of data, so it cannot start
+//! faster than `d_prev · T_prev / T_cur`. Overall latency = every interval
+//! delay summed once (this covers init/ramp-up) + steady-state of the last
+//! stage.
+
+/// Per-stage interval characterization.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageInterval {
+    /// Cycles of compute per interval at this stage (temporal reduction
+    /// inside the PEs to produce one granularity unit).
+    pub compute_delay: f64,
+    /// Cycles of NoC/global-buffer communication per interval.
+    pub comm_delay: f64,
+    /// Number of intervals this stage runs (its granularity count).
+    pub intervals: u64,
+}
+
+impl StageInterval {
+    /// The stage's own per-interval delay, before producer coupling.
+    pub fn own_delay(&self) -> f64 {
+        self.compute_delay.max(self.comm_delay)
+    }
+}
+
+/// Result of the Fig. 3 composition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineLatency {
+    /// Effective (producer-coupled) interval delay per stage.
+    pub stage_delays: Vec<f64>,
+    /// Σ stage delays — the init / ramp-up term.
+    pub init: f64,
+    /// Steady-state term: (intervals_last − 1) × last stage delay.
+    pub steady: f64,
+    /// init + steady.
+    pub total: f64,
+}
+
+/// Compose per-stage interval delays per Fig. 3.
+pub fn pipeline_latency(stages: &[StageInterval]) -> PipelineLatency {
+    assert!(!stages.is_empty(), "empty pipeline");
+    let mut delays = Vec::with_capacity(stages.len());
+    let mut prev_delay = 0.0f64;
+    let mut prev_t = 0u64;
+    for (i, s) in stages.iter().enumerate() {
+        let own = s.own_delay();
+        let producer_side = if i == 0 {
+            0.0
+        } else {
+            // One interval here consumes T_prev/T_cur producer intervals.
+            prev_delay * (prev_t.max(1) as f64 / s.intervals.max(1) as f64)
+        };
+        let d = own.max(producer_side);
+        delays.push(d);
+        prev_delay = d;
+        prev_t = s.intervals;
+    }
+    let init: f64 = delays.iter().sum();
+    let last = *delays.last().unwrap();
+    let last_intervals = stages.last().unwrap().intervals.max(1);
+    let steady = (last_intervals - 1) as f64 * last;
+    PipelineLatency {
+        stage_delays: delays,
+        init,
+        steady,
+        total: init + steady,
+    }
+}
+
+/// Latency of running a single stage alone (op-by-op): intervals × delay.
+pub fn solo_latency(stage: &StageInterval) -> f64 {
+    stage.intervals.max(1) as f64 * stage.own_delay()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st(compute: f64, comm: f64, intervals: u64) -> StageInterval {
+        StageInterval {
+            compute_delay: compute,
+            comm_delay: comm,
+            intervals,
+        }
+    }
+
+    #[test]
+    fn single_stage_is_solo() {
+        let s = st(10.0, 2.0, 100);
+        let l = pipeline_latency(&[s]);
+        assert_eq!(l.total, 10.0 + 99.0 * 10.0);
+        assert_eq!(l.total, solo_latency(&s));
+    }
+
+    #[test]
+    fn balanced_two_stage_overlaps() {
+        // Two balanced stages, T intervals each: total = d + d + (T-1)d
+        // = (T+1)d, vs op-by-op 2*T*d → speedup → 2 as T grows.
+        let s = st(8.0, 0.0, 64);
+        let l = pipeline_latency(&[s, s]);
+        assert_eq!(l.total, 8.0 * (64.0 + 1.0));
+        let op_by_op = 2.0 * solo_latency(&s);
+        assert!(op_by_op / l.total > 1.9);
+    }
+
+    #[test]
+    fn bottleneck_stage_dominates() {
+        let fast = st(2.0, 0.0, 32);
+        let slow = st(10.0, 0.0, 32);
+        let l = pipeline_latency(&[fast, slow, fast]);
+        // Stage 2's producer side = 10 × (32/32) = 10 > own 2 → inherits 10.
+        assert_eq!(l.stage_delays, vec![2.0, 10.0, 10.0]);
+        assert_eq!(l.total, 22.0 + 31.0 * 10.0);
+    }
+
+    #[test]
+    fn granularity_mismatch_scales_producer_delay() {
+        // Consumer runs half as many intervals as the producer → each
+        // consumer interval waits for 2 producer intervals.
+        let p = st(5.0, 0.0, 64);
+        let c = st(3.0, 0.0, 32);
+        let l = pipeline_latency(&[p, c]);
+        assert_eq!(l.stage_delays[1], 10.0);
+        // Totals stay O(max stage work) regardless of interval mismatch:
+        // producer work 320, pipeline total = 5 + 10 + 31*10 = 325.
+        assert_eq!(l.total, 325.0);
+    }
+
+    #[test]
+    fn finer_consumer_does_not_stall() {
+        // Consumer with 2× the intervals of the producer: each interval
+        // needs half a producer interval → producer side 2.5 < own 3.
+        let p = st(5.0, 0.0, 32);
+        let c = st(3.0, 0.0, 64);
+        let l = pipeline_latency(&[p, c]);
+        assert_eq!(l.stage_delays[1], 3.0);
+    }
+
+    #[test]
+    fn comm_bound_interval_uses_comm_delay() {
+        // Congested NoC: hop/congestion delay exceeds compute interval —
+        // the Fig. 8 "interval becomes hop-count-bound" case.
+        let s = st(2.0, 16.0, 10);
+        let l = pipeline_latency(&[s, s]);
+        assert_eq!(l.stage_delays[0], 16.0);
+        assert_eq!(l.total, 32.0 + 9.0 * 16.0);
+    }
+
+    #[test]
+    fn mixed_interval_chain_is_stable() {
+        // A long chain with wildly differing interval counts must stay
+        // O(max stage work), not blow up multiplicatively.
+        let stages = vec![
+            st(1.0, 0.0, 61440),
+            st(2560.0, 0.0, 24),
+            st(1.0, 0.0, 61440),
+            st(2560.0, 0.0, 24),
+        ];
+        let l = pipeline_latency(&stages);
+        let max_work = 2560.0 * 24.0;
+        assert!(
+            l.total < 4.0 * max_work,
+            "total {} ≫ max stage work {max_work}",
+            l.total
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_pipeline_panics() {
+        pipeline_latency(&[]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Stage 1 of the PipeOrgan flow (Sec. IV-A): partitioning the model into
+//! pipeline segments of flexible depth, and deriving the finest possible
+//! pipelining granularity from the intra-operator loop orders (Alg. 1).
+//! Also the interval/latency equations of Fig. 3.
+
+mod depth;
+mod granularity;
+mod latency;
+pub(crate) mod segment;
+
+pub use depth::{partition, DepthDecision, StopReason};
+pub use granularity::{finest_granularity, pair_granularity, Granularity};
+pub use latency::{pipeline_latency, solo_latency, PipelineLatency, StageInterval};
+pub use segment::{segments_cover, Segment, SegmentPlan, StagePlan};

@@ -1,0 +1,131 @@
+//! Pipeline segments: a contiguous run of layers executed concurrently on
+//! the PE array, plus the per-stage dataflow decisions stage 1 attaches.
+
+use crate::dataflow::{DataflowStyle, LoopNest};
+use crate::ir::{LayerId, ModelGraph};
+
+use super::granularity::Granularity;
+
+/// A contiguous run `[start, start+depth)` of layers pipelined together.
+/// `depth == 1` means the layer runs op-by-op (no pipelining).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    pub start: LayerId,
+    pub depth: usize,
+}
+
+impl Segment {
+    pub fn new(start: LayerId, depth: usize) -> Self {
+        assert!(depth >= 1);
+        Self { start, depth }
+    }
+
+    pub fn end(&self) -> LayerId {
+        self.start + self.depth
+    }
+
+    pub fn layers(&self) -> impl Iterator<Item = LayerId> {
+        self.start..self.end()
+    }
+
+    pub fn contains(&self, id: LayerId) -> bool {
+        id >= self.start && id < self.end()
+    }
+
+    pub fn is_pipelined(&self) -> bool {
+        self.depth > 1
+    }
+}
+
+/// Stage-level plan: one pipelined layer with its chosen dataflow.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub layer: LayerId,
+    pub style: DataflowStyle,
+    pub nest: LoopNest,
+    /// Granularity of the handoff *to the next stage* (None for the last
+    /// stage of a segment or for op-by-op execution).
+    pub handoff: Option<Granularity>,
+}
+
+/// A fully planned segment: stages in order plus aggregate properties.
+#[derive(Debug, Clone)]
+pub struct SegmentPlan {
+    pub segment: Segment,
+    pub stages: Vec<StagePlan>,
+}
+
+impl SegmentPlan {
+    /// Sum of weights resident during this segment (the `Σ W_i` of the
+    /// depth heuristic).
+    pub fn weight_footprint_words(&self, graph: &ModelGraph) -> u64 {
+        self.segment
+            .layers()
+            .map(|id| graph.layer(id).weight_words())
+            .sum()
+    }
+
+    /// MACs per stage — the load-balancing input for PE allocation.
+    pub fn stage_macs(&self, graph: &ModelGraph) -> Vec<u64> {
+        self.segment
+            .layers()
+            .map(|id| graph.layer(id).macs())
+            .collect()
+    }
+
+    /// Finest handoff granularity across stage pairs (words), if pipelined.
+    pub fn min_handoff_words(&self) -> Option<u64> {
+        self.stages
+            .iter()
+            .filter_map(|s| s.handoff.as_ref().map(|g| g.words))
+            .min()
+    }
+}
+
+/// Check that a list of segments exactly tiles `0..n_layers` in order.
+pub fn segments_cover(segments: &[Segment], n_layers: usize) -> Result<(), String> {
+    let mut next = 0;
+    for s in segments {
+        if s.start != next {
+            return Err(format!(
+                "segment at {} does not start where previous ended ({next})",
+                s.start
+            ));
+        }
+        next = s.end();
+    }
+    if next != n_layers {
+        return Err(format!("segments cover {next} of {n_layers} layers"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_basics() {
+        let s = Segment::new(3, 4);
+        assert_eq!(s.end(), 7);
+        assert!(s.contains(3) && s.contains(6) && !s.contains(7));
+        assert!(s.is_pipelined());
+        assert!(!Segment::new(0, 1).is_pipelined());
+        assert_eq!(s.layers().collect::<Vec<_>>(), vec![3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn coverage_check() {
+        let segs = vec![Segment::new(0, 2), Segment::new(2, 3), Segment::new(5, 1)];
+        assert!(segments_cover(&segs, 6).is_ok());
+        assert!(segments_cover(&segs, 7).is_err());
+        let gap = vec![Segment::new(0, 2), Segment::new(3, 3)];
+        assert!(segments_cover(&gap, 6).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_depth_rejected() {
+        Segment::new(0, 0);
+    }
+}

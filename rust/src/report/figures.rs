@@ -1,0 +1,533 @@
+//! The per-figure generators. Each reproduces one paper artifact's rows
+//! (see DESIGN.md §5 for the experiment index).
+
+use std::sync::Arc;
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::coordinator::{run_jobs, EvalJob};
+use crate::dataflow::IntensityReport;
+use crate::ir::skips::SkipProfile;
+use crate::noc::Topology;
+use crate::pipeline::partition;
+use crate::sim::{analyze, simulate_interval};
+use crate::spatial::{Organization, Placement};
+use crate::traffic::{derive_flows, scenarios, StageHandoff};
+use crate::util::json::Json;
+use crate::util::stats::geomean;
+use crate::util::table::{fnum, Table};
+use crate::workloads;
+
+use super::Report;
+
+/// E1 / Fig. 5: per-layer A/W ratios across the zoo (min/geomean/max per
+/// task plus the global spread).
+pub fn fig5_aw_ratios() -> Report {
+    let mut table = Table::new(
+        "Fig. 5 — activation/weight ratios across XR-bench-like tasks",
+        &["task", "layers", "min A/W", "geomean A/W", "max A/W"],
+    );
+    let mut json = Json::obj();
+    let mut tasks_json = Json::Arr(vec![]);
+    let (mut glo, mut ghi) = (f64::INFINITY, 0f64);
+    for g in workloads::all_tasks() {
+        let ratios: Vec<f64> = g
+            .layers()
+            .iter()
+            .filter(|l| l.weight_words() > 0 && l.is_einsum())
+            .map(|l| l.aw_ratio())
+            .collect();
+        let (lo, hi) = (
+            ratios.iter().cloned().fold(f64::INFINITY, f64::min),
+            ratios.iter().cloned().fold(0.0, f64::max),
+        );
+        glo = glo.min(lo);
+        ghi = ghi.max(hi);
+        table.row(&[
+            g.name.clone(),
+            ratios.len().to_string(),
+            fnum(lo),
+            fnum(geomean(&ratios)),
+            fnum(hi),
+        ]);
+        let mut t = Json::obj();
+        t.set("task", g.name.clone())
+            .set("ratios", ratios.clone());
+        tasks_json.push(t);
+    }
+    table.row(&[
+        "ALL (spread)".into(),
+        "".into(),
+        fnum(glo),
+        format!("{:.1} orders", (ghi / glo).log10()),
+        fnum(ghi),
+    ]);
+    json.set("tasks", tasks_json)
+        .set("global_min", glo)
+        .set("global_max", ghi);
+    Report {
+        name: "fig5_aw_ratios",
+        table,
+        json,
+    }
+}
+
+/// E2 / Fig. 6: skip-connection structure per task.
+pub fn fig6_skips() -> Report {
+    let mut table = Table::new(
+        "Fig. 6 — skip connections across XR-bench-like tasks",
+        &["task", "skips", "density", "mean dist", "max dist"],
+    );
+    let mut json = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    for g in workloads::all_tasks() {
+        let p = SkipProfile::of(&g);
+        table.row(&[
+            g.name.clone(),
+            p.num_skips().to_string(),
+            fnum(p.density),
+            fnum(p.mean_distance),
+            p.max_distance.to_string(),
+        ]);
+        let mut t = Json::obj();
+        t.set("task", g.name.clone())
+            .set("num_skips", p.num_skips())
+            .set("density", p.density)
+            .set("mean_distance", p.mean_distance)
+            .set("max_distance", p.max_distance);
+        arr.push(t);
+    }
+    json.set("tasks", arr);
+    Report {
+        name: "fig6_skips",
+        table,
+        json,
+    }
+}
+
+/// E3–E7 / Fig. 8–12: traffic analysis of the scenario library on mesh and
+/// AMP, analytic + cycle-level cross-check.
+pub fn fig8_12_traffic(cfg: &ArchConfig) -> Report {
+    let mut table = Table::new(
+        "Fig. 8-12 — traffic analysis (worst channel load per interval, hops, congestion)",
+        &[
+            "scenario",
+            "topology",
+            "worst load",
+            "total word-hops",
+            "max hops",
+            "congestion@I=2",
+            "cycle-sim makespan",
+        ],
+    );
+    let mut json = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    for scen in scenarios::all(cfg.pe_rows, cfg.pe_cols) {
+        for kind in [TopologyKind::Mesh, TopologyKind::Amp] {
+            let topo = Topology::new(kind, cfg.pe_rows, cfg.pe_cols);
+            let flows = derive_flows(&topo, &scen.placement, &scen.handoffs);
+            let a = analyze(&topo, &flows);
+            // cycle-level validation on integer-rounded volumes
+            let int_flows: Vec<_> = flows
+                .iter()
+                .map(|f| crate::traffic::Flow {
+                    words_per_interval: f.words_per_interval.ceil(),
+                    ..*f
+                })
+                .collect();
+            let sim = simulate_interval(&topo, &int_flows, 1);
+            table.row(&[
+                scen.name.to_string(),
+                kind.name().to_string(),
+                fnum(a.worst_channel_load),
+                fnum(a.total_word_hops),
+                a.max_route_hops.to_string(),
+                fnum(a.congestion_factor(scen.compute_interval, cfg.link_words_per_cycle)),
+                sim.makespan.to_string(),
+            ]);
+            let mut t = Json::obj();
+            t.set("scenario", scen.name)
+                .set("topology", kind.name())
+                .set("worst_channel_load", a.worst_channel_load)
+                .set("total_word_hops", a.total_word_hops)
+                .set("max_route_hops", a.max_route_hops)
+                .set("cycle_sim_makespan", sim.makespan);
+            arr.push(t);
+        }
+    }
+    json.set("rows", arr);
+    Report {
+        name: "fig8_12_traffic",
+        table,
+        json,
+    }
+}
+
+/// E8 / Table II: mesh bottleneck summary derived from scenario deltas.
+pub fn table2_bottlenecks(cfg: &ArchConfig) -> Report {
+    let mesh = Topology::new(TopologyKind::Mesh, cfg.pe_rows, cfg.pe_cols);
+    let load = |s: &scenarios::Scenario| {
+        let flows = derive_flows(&mesh, &s.placement, &s.handoffs);
+        analyze(&mesh, &flows)
+    };
+    let blocked = load(&scenarios::fig8_depth2_blocked(cfg.pe_rows, cfg.pe_cols));
+    let striped = load(&scenarios::fig10_striped(cfg.pe_rows, cfg.pe_cols));
+    let skip = load(&scenarios::fig9a_skip_blocked(cfg.pe_rows, cfg.pe_cols));
+    let b2d = load(&scenarios::fig11_blocked2d(cfg.pe_rows, cfg.pe_cols, false));
+    let b2d_skip = load(&scenarios::fig11_blocked2d(cfg.pe_rows, cfg.pe_cols, true));
+
+    let mut table = Table::new(
+        "Table II — mesh bottlenecks (measured)",
+        &["cause", "effect (measured)", "prevalent in"],
+    );
+    table.row(&[
+        "many long overlapping paths".into(),
+        format!(
+            "worst load {}x vs interleaved ({} vs {})",
+            fnum(blocked.worst_channel_load / striped.worst_channel_load.max(1e-9)),
+            fnum(blocked.worst_channel_load),
+            fnum(striped.worst_channel_load)
+        ),
+        "blocked 1D and 2D".into(),
+    ]);
+    table.row(&[
+        "many long overlapping paths".into(),
+        format!(
+            "hop energy {}x vs interleaved ({} vs {} word-hops)",
+            fnum(blocked.total_word_hops / striped.total_word_hops.max(1e-9)),
+            fnum(blocked.total_word_hops),
+            fnum(striped.total_word_hops)
+        ),
+        "blocked 1D and 2D".into(),
+    ]);
+    table.row(&[
+        "extra BW for skip connections".into(),
+        format!(
+            "worst load +{}%",
+            fnum(100.0 * (skip.worst_channel_load / blocked.worst_channel_load - 1.0))
+        ),
+        "all organizations".into(),
+    ]);
+    table.row(&[
+        "extra hops with skip connections".into(),
+        format!(
+            "word-hops +{}%",
+            fnum(100.0 * (b2d_skip.total_word_hops / b2d.total_word_hops - 1.0))
+        ),
+        "all configurations".into(),
+    ]);
+    table.row(&[
+        "routing in multiple directions".into(),
+        format!(
+            "2D blocked word-hops {} vs 1D {}",
+            fnum(b2d.total_word_hops),
+            fnum(blocked.total_word_hops)
+        ),
+        "2D organizations".into(),
+    ]);
+    let mut json = Json::obj();
+    json.set("blocked_worst_load", blocked.worst_channel_load)
+        .set("striped_worst_load", striped.worst_channel_load)
+        .set("skip_worst_load", skip.worst_channel_load)
+        .set("blocked2d_word_hops", b2d.total_word_hops)
+        .set("blocked2d_skip_word_hops", b2d_skip.total_word_hops);
+    Report {
+        name: "table2_bottlenecks",
+        table,
+        json,
+    }
+}
+
+fn e2e_outcomes(cfg: &ArchConfig, workers: usize) -> Vec<(String, [crate::cost::ModelCost; 3], f64)> {
+    use crate::coordinator::jobs::MapperKind;
+    let tasks = workloads::all_tasks();
+    let mut jobs = Vec::new();
+    for g in &tasks {
+        let graph = Arc::new(g.clone());
+        for mapper in [
+            MapperKind::PipeOrgan,
+            MapperKind::TangramLike,
+            MapperKind::SimbaLike,
+        ] {
+            jobs.push(EvalJob {
+                graph: Arc::clone(&graph),
+                mapper,
+                cfg: cfg.clone(),
+            });
+        }
+    }
+    let outcomes = run_jobs(jobs, workers);
+    outcomes
+        .chunks(3)
+        .map(|c| {
+            (
+                c[0].task.clone(),
+                [c[0].cost.clone(), c[1].cost.clone(), c[2].cost.clone()],
+                c[0].mean_depth,
+            )
+        })
+        .collect()
+}
+
+/// E9 / Fig. 13: end-to-end performance normalized to TANGRAM-like.
+pub fn fig13_performance(cfg: &ArchConfig, workers: usize) -> Report {
+    let rows = e2e_outcomes(cfg, workers);
+    let mut table = Table::new(
+        "Fig. 13 — end-to-end performance (normalized to TANGRAM-like; higher is better)",
+        &["task", "PipeOrgan", "TANGRAM-like", "SIMBA-like"],
+    );
+    let mut sp_po = Vec::new();
+    let mut sp_sb = Vec::new();
+    let mut json = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    for (task, [po, tg, sb], _) in &rows {
+        let norm_po = tg.cycles / po.cycles;
+        let norm_sb = tg.cycles / sb.cycles;
+        sp_po.push(norm_po);
+        sp_sb.push(norm_sb);
+        table.row(&[
+            task.clone(),
+            fnum(norm_po),
+            "1.000".into(),
+            fnum(norm_sb),
+        ]);
+        let mut t = Json::obj();
+        t.set("task", task.clone())
+            .set("pipeorgan", norm_po)
+            .set("tangram_like", 1.0)
+            .set("simba_like", norm_sb)
+            .set("pipeorgan_cycles", po.cycles)
+            .set("tangram_cycles", tg.cycles)
+            .set("simba_cycles", sb.cycles);
+        arr.push(t);
+    }
+    table.row(&[
+        "GEOMEAN".into(),
+        fnum(geomean(&sp_po)),
+        "1.000".into(),
+        fnum(geomean(&sp_sb)),
+    ]);
+    json.set("rows", arr)
+        .set("geomean_pipeorgan_vs_tangram", geomean(&sp_po))
+        .set("paper_geomean", 1.95);
+    Report {
+        name: "fig13_performance",
+        table,
+        json,
+    }
+}
+
+/// E10 / Fig. 14: normalized DRAM accesses (lower is better).
+pub fn fig14_dram(cfg: &ArchConfig, workers: usize) -> Report {
+    let rows = e2e_outcomes(cfg, workers);
+    let mut table = Table::new(
+        "Fig. 14 — end-to-end DRAM accesses (normalized to TANGRAM-like; lower is better)",
+        &["task", "PipeOrgan", "TANGRAM-like", "SIMBA-like"],
+    );
+    let mut ratios = Vec::new();
+    let mut json = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    for (task, [po, tg, sb], _) in &rows {
+        let r_po = po.dram_words as f64 / tg.dram_words as f64;
+        let r_sb = sb.dram_words as f64 / tg.dram_words as f64;
+        ratios.push(r_po);
+        table.row(&[task.clone(), fnum(r_po), "1.000".into(), fnum(r_sb)]);
+        let mut t = Json::obj();
+        t.set("task", task.clone())
+            .set("pipeorgan", r_po)
+            .set("simba_like", r_sb)
+            .set("pipeorgan_dram_words", po.dram_words)
+            .set("tangram_dram_words", tg.dram_words);
+        arr.push(t);
+    }
+    table.row(&[
+        "GEOMEAN".into(),
+        fnum(geomean(&ratios)),
+        "1.000".into(),
+        "".into(),
+    ]);
+    json.set("rows", arr)
+        .set("geomean_reduction", 1.0 - geomean(&ratios))
+        .set("paper_reduction", 0.31);
+    Report {
+        name: "fig14_dram",
+        table,
+        json,
+    }
+}
+
+/// E11 / Fig. 15: worst-case channel load (delay factor) vs compute
+/// interval for blocked / fine-striped / AMP, depth-2 1-D, equal and 1×1
+/// vs 3×3 unequal allocation.
+pub fn fig15_congestion(cfg: &ArchConfig) -> Report {
+    let mut table = Table::new(
+        "Fig. 15 — interval delay factor vs compute interval (depth-2, 1-D)",
+        &[
+            "compute interval",
+            "alloc",
+            "blocked/mesh",
+            "fine-1D/mesh",
+            "blocked/AMP",
+        ],
+    );
+    let mesh = Topology::new(TopologyKind::Mesh, cfg.pe_rows, cfg.pe_cols);
+    let amp = Topology::new(TopologyKind::Amp, cfg.pe_rows, cfg.pe_cols);
+    let delay_factor = |topo: &Topology, placement: &Placement, interval: f64| -> f64 {
+        let w = placement.stage_size(0) as f64;
+        let flows = derive_flows(
+            topo,
+            placement,
+            &[StageHandoff::pipeline(0, 1, w)],
+        );
+        let a = analyze(topo, &flows);
+        let comm = a.worst_channel_load / cfg.link_words_per_cycle;
+        (comm / interval).max(1.0)
+    };
+    let mut json = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    for &(alloc_name, shares) in &[("equal", [1usize, 1]), ("1x1-vs-3x3", [1, 9])] {
+        let blocked = Placement::build(cfg.pe_rows, cfg.pe_cols, Organization::Blocked1D, &shares);
+        let striped =
+            Placement::build(cfg.pe_rows, cfg.pe_cols, Organization::FineStriped1D, &shares);
+        for interval in [1.0f64, 2.0, 4.0, 8.0, 16.0, 32.0] {
+            let b_mesh = delay_factor(&mesh, &blocked, interval);
+            let s_mesh = delay_factor(&mesh, &striped, interval);
+            let b_amp = delay_factor(&amp, &blocked, interval);
+            table.row(&[
+                fnum(interval),
+                alloc_name.into(),
+                fnum(b_mesh),
+                fnum(s_mesh),
+                fnum(b_amp),
+            ]);
+            let mut t = Json::obj();
+            t.set("compute_interval", interval)
+                .set("alloc", alloc_name)
+                .set("blocked_mesh", b_mesh)
+                .set("fine1d_mesh", s_mesh)
+                .set("blocked_amp", b_amp);
+            arr.push(t);
+        }
+    }
+    json.set("rows", arr);
+    Report {
+        name: "fig15_congestion",
+        table,
+        json,
+    }
+}
+
+/// E12 / Fig. 16: pipeline depths chosen per task.
+pub fn fig16_depth(cfg: &ArchConfig) -> Report {
+    let mut table = Table::new(
+        "Fig. 16 — pipeline depths per task (stage-1 heuristic)",
+        &["task", "segments", "mean depth", "max depth", "depths"],
+    );
+    let mut json = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    for g in workloads::all_tasks() {
+        let parts = partition(&g, cfg);
+        let depths: Vec<usize> = parts.iter().map(|p| p.segment.depth).collect();
+        let mean = depths.iter().sum::<usize>() as f64 / depths.len() as f64;
+        let shown: Vec<String> = depths.iter().map(|d| d.to_string()).collect();
+        table.row(&[
+            g.name.clone(),
+            depths.len().to_string(),
+            fnum(mean),
+            depths.iter().max().unwrap().to_string(),
+            shown.join(","),
+        ]);
+        let mut t = Json::obj();
+        t.set(
+            "depths",
+            depths.iter().map(|&d| d as u64).collect::<Vec<u64>>(),
+        )
+        .set("task", g.name.clone());
+        arr.push(t);
+    }
+    json.set("tasks", arr);
+    Report {
+        name: "fig16_depth",
+        table,
+        json,
+    }
+}
+
+/// E13 / Fig. 17: finest pipelining granularity per task (fraction of the
+/// intermediate tensor exchanged per interval).
+pub fn fig17_granularity(cfg: &ArchConfig) -> Report {
+    use crate::dataflow::{choose_dataflow, LoopNest};
+    use crate::pipeline::pair_granularity;
+    let mut table = Table::new(
+        "Fig. 17 — finest granularity per task (median fraction of intermediate tensor)",
+        &["task", "pairs", "median fraction", "finest", "coarsest"],
+    );
+    let mut json = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    for g in workloads::all_tasks() {
+        let parts = partition(&g, cfg);
+        let mut fracs = Vec::new();
+        for p in &parts {
+            let seg = &p.segment;
+            for s in 0..seg.depth.saturating_sub(1) {
+                let a = g.layer(seg.start + s);
+                let b = g.layer(seg.start + s + 1);
+                let na = LoopNest::for_op(&a.op, choose_dataflow(a));
+                let nb = LoopNest::for_op(&b.op, choose_dataflow(b));
+                let gr = pair_granularity(&na, &nb, a.output_act_words());
+                fracs.push(gr.fraction(a.output_act_words()));
+            }
+        }
+        if fracs.is_empty() {
+            table.row(&[g.name.clone(), "0".into(), "-".into(), "-".into(), "-".into()]);
+            continue;
+        }
+        let med = crate::util::stats::percentile(&fracs, 50.0);
+        let lo = fracs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = fracs.iter().cloned().fold(0.0, f64::max);
+        table.row(&[
+            g.name.clone(),
+            fracs.len().to_string(),
+            fnum(med),
+            fnum(lo),
+            fnum(hi),
+        ]);
+        let mut t = Json::obj();
+        t.set("task", g.name.clone()).set("fractions", fracs.clone());
+        arr.push(t);
+    }
+    json.set("tasks", arr);
+    Report {
+        name: "fig17_granularity",
+        table,
+        json,
+    }
+}
+
+/// E14 / Sec. IV-A validation: fraction of zoo layers achieving best-case
+/// arithmetic intensity vs buffer size (paper: 99.94 % @512 KB, 97.2 %
+/// @256 KB).
+pub fn validate_dataflow() -> Report {
+    let tasks = workloads::all_tasks();
+    let layers: Vec<_> = tasks.iter().flat_map(|g| g.layers().iter()).collect();
+    let mut table = Table::new(
+        "Sec. IV-A — dataflow heuristic validation (best-case AI achieved)",
+        &["buffer", "layers", "achieving best-case", "fraction", "paper"],
+    );
+    let mut json = Json::obj();
+    for (kb, paper) in [(512u64, "99.94%"), (256, "97.2%")] {
+        let rep = IntensityReport::sweep(layers.iter().copied(), kb * 1024);
+        table.row(&[
+            format!("{kb} KB"),
+            rep.total_layers.to_string(),
+            rep.achieving_best_case.to_string(),
+            format!("{:.2}%", 100.0 * rep.fraction()),
+            paper.into(),
+        ]);
+        json.set(&format!("fraction_{kb}kb"), rep.fraction());
+    }
+    Report {
+        name: "validate_dataflow",
+        table,
+        json,
+    }
+}

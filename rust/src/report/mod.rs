@@ -1,0 +1,75 @@
+//! Figure/table emitters: every reproduced paper artifact (E1–E14 in
+//! DESIGN.md) as an aligned markdown table on stdout plus CSV + JSON files
+//! under a reports directory, so external tooling can re-plot them.
+
+mod ablations;
+mod figures;
+
+pub use ablations::{ablation_depth, ablation_organization, ablation_topology};
+pub use figures::{
+    fig13_performance, fig14_dram, fig15_congestion, fig16_depth, fig17_granularity,
+    fig5_aw_ratios, fig6_skips, fig8_12_traffic, table2_bottlenecks, validate_dataflow,
+};
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// One emitted artifact: a table for humans, JSON for tooling.
+pub struct Report {
+    pub name: &'static str,
+    pub table: Table,
+    pub json: Json,
+}
+
+impl Report {
+    /// Print to stdout and persist CSV + JSON under `out_dir`.
+    pub fn emit(&self, out_dir: impl AsRef<Path>) -> std::io::Result<()> {
+        let dir = out_dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        print!("{}", self.table.to_markdown());
+        std::fs::write(dir.join(format!("{}.csv", self.name)), self.table.to_csv())?;
+        std::fs::write(
+            dir.join(format!("{}.json", self.name)),
+            self.json.to_pretty(),
+        )?;
+        Ok(())
+    }
+}
+
+/// All report generators in paper order, for `pipeorgan all`.
+pub fn all_reports(cfg: &crate::config::ArchConfig, workers: usize) -> Vec<Report> {
+    vec![
+        fig5_aw_ratios(),
+        fig6_skips(),
+        fig8_12_traffic(cfg),
+        table2_bottlenecks(cfg),
+        fig13_performance(cfg, workers),
+        fig14_dram(cfg, workers),
+        fig15_congestion(cfg),
+        fig16_depth(cfg),
+        fig17_granularity(cfg),
+        validate_dataflow(),
+        ablation_organization(cfg),
+        ablation_topology(cfg),
+        ablation_depth(cfg),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_emit_to_disk() {
+        let dir = std::env::temp_dir().join("pipeorgan_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = fig5_aw_ratios();
+        r.emit(&dir).unwrap();
+        assert!(dir.join("fig5_aw_ratios.csv").exists());
+        assert!(dir.join("fig5_aw_ratios.json").exists());
+        let text = std::fs::read_to_string(dir.join("fig5_aw_ratios.json")).unwrap();
+        crate::util::json::Json::parse(&text).unwrap();
+    }
+}

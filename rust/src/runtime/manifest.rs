@@ -1,0 +1,179 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProgramSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+    pub role: String,
+}
+
+/// The canonical segment dimensions the artifacts were built for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentSpec {
+    pub h: usize,
+    pub w: usize,
+    pub c_in: usize,
+    pub c_mid: usize,
+    pub c_out: usize,
+    pub band: usize,
+    pub r: usize,
+    pub s: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub segment: SegmentSpec,
+    programs: Vec<(String, ProgramSpec)>,
+}
+
+fn tensor(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("tensor missing shape")?
+        .iter()
+        .map(|x| x.as_usize().context("non-numeric dim"))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .unwrap_or("f32")
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let seg = root.get("segment").context("manifest missing `segment`")?;
+        let d = |k: &str| -> Result<usize> {
+            seg.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("segment missing `{k}`"))
+        };
+        let segment = SegmentSpec {
+            h: d("h")?,
+            w: d("w")?,
+            c_in: d("c_in")?,
+            c_mid: d("c_mid")?,
+            c_out: d("c_out")?,
+            band: d("band")?,
+            r: d("r")?,
+            s: d("s")?,
+        };
+        let progs = root
+            .get("programs")
+            .context("manifest missing `programs`")?;
+        let Json::Obj(map) = progs else {
+            anyhow::bail!("`programs` must be an object");
+        };
+        let mut programs = Vec::new();
+        for (name, p) in map {
+            let inputs = p
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("program missing inputs")?
+                .iter()
+                .map(tensor)
+                .collect::<Result<Vec<_>>>()?;
+            programs.push((
+                name.clone(),
+                ProgramSpec {
+                    file: p
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .context("program missing file")?
+                        .to_string(),
+                    inputs,
+                    output: tensor(p.get("output").context("program missing output")?)?,
+                    role: p
+                        .get("role")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                },
+            ));
+        }
+        Ok(Manifest { segment, programs })
+    }
+
+    pub fn program(&self, name: &str) -> Option<&ProgramSpec> {
+        self.programs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p)
+    }
+
+    pub fn program_names(&self) -> Vec<&str> {
+        self.programs.iter().map(|(n, _)| n.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "segment": {"h": 32, "w": 32, "c_in": 8, "c_mid": 16, "c_out": 8,
+                   "band": 8, "r": 3, "s": 3},
+      "programs": {
+        "gemm": {
+          "file": "gemm.hlo.txt",
+          "inputs": [{"shape": [64, 64], "dtype": "f32"},
+                      {"shape": [64, 64], "dtype": "f32"}],
+          "output": {"shape": [64, 64], "dtype": "f32"},
+          "role": "quickstart"
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.segment.h, 32);
+        assert_eq!(m.segment.band, 8);
+        let g = m.program("gemm").unwrap();
+        assert_eq!(g.file, "gemm.hlo.txt");
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.output.shape, vec![64, 64]);
+        assert!(m.program("nope").is_none());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"segment": {}}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            for name in ["segment_fused", "layer0", "layer1", "tile_layer0", "tile_layer1", "gemm"] {
+                assert!(m.program(name).is_some(), "missing {name}");
+            }
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the request path. Python never runs here — the Rust binary is
+//! self-contained once `make artifacts` has produced `artifacts/*.hlo.txt`.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: text (not serialized proto)
+//! is the interchange format because xla_extension 0.5.1 rejects the
+//! 64-bit instruction ids jax ≥ 0.5 emits.
+
+mod manifest;
+
+pub use manifest::{Manifest, ProgramSpec, SegmentSpec, TensorSpec};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU runtime owning its client. NOT `Send`: each coordinator
+/// worker thread builds its own `Runtime` and compiles its own programs
+/// (compilation is cached per thread, not shared).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+/// A compiled program ready to execute.
+pub struct Program {
+    exe: xla::PjRtLoadedExecutable,
+    /// Declared input shapes (row-major dims), from the manifest.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Declared output shape.
+    pub output_shape: Vec<usize>,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load the manifest describing all artifacts.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(self.artifacts_dir.join("manifest.json"))
+    }
+
+    /// Load + compile one program by manifest name.
+    pub fn load_program(&self, name: &str) -> Result<Program> {
+        let manifest = self.manifest()?;
+        let spec = manifest
+            .program(name)
+            .with_context(|| format!("program `{name}` not in manifest"))?;
+        let path = self.artifacts_dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Program {
+            exe,
+            input_shapes: spec.inputs.iter().map(|t| t.shape.clone()).collect(),
+            output_shape: spec.output.shape.clone(),
+            name: name.to_string(),
+        })
+    }
+}
+
+impl Program {
+    /// Execute on f32 buffers. Inputs must match the declared shapes; the
+    /// output is the flattened f32 result.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            inputs.len() == self.input_shapes.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.input_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&self.input_shapes) {
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(
+                buf.len() == n,
+                "{}: input has {} elements, shape {:?} needs {n}",
+                self.name,
+                buf.len(),
+                shape
+            );
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .context("reshaping input literal")?,
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let v = out.to_vec::<f32>().context("reading f32 result")?;
+        let n: usize = self.output_shape.iter().product();
+        anyhow::ensure!(
+            v.len() == n,
+            "{}: output has {} elements, expected {n}",
+            self.name,
+            v.len()
+        );
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT round-trip tests live in rust/tests/runtime_roundtrip.rs (they
+    // need artifacts/ built); manifest parsing is tested in manifest.rs.
+}

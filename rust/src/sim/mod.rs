@@ -1,0 +1,9 @@
+//! NoC simulation: analytical channel-load / congestion analysis (the
+//! quantity Fig. 15 plots) and a cycle-level queueing simulator used to
+//! validate the analytical model.
+
+mod channel_load;
+mod cycle_sim;
+
+pub use channel_load::{analyze, interval_comm_delay, LoadAnalysis};
+pub use cycle_sim::{simulate_interval, CycleSimResult};

@@ -1,0 +1,138 @@
+//! PE allocation by MAC ratio (Sec. IV-B: "PEs could be allocated to the
+//! layers in ratios that ensure load balancing and maximum utilization").
+
+/// Largest-remainder proportional allocation of `total` units across
+/// `weights`, guaranteeing every nonzero weight at least one unit and the
+/// sum exactly `total`.
+pub fn proportional(weights: &[usize], total: usize) -> Vec<usize> {
+    assert!(!weights.is_empty());
+    assert!(
+        total >= weights.iter().filter(|&&w| w > 0).count(),
+        "not enough units ({total}) for {} stages",
+        weights.len()
+    );
+    let sum: f64 = weights.iter().map(|&w| w as f64).sum();
+    if sum == 0.0 {
+        // Degenerate: spread evenly.
+        let base = total / weights.len();
+        let mut out = vec![base; weights.len()];
+        let mut rem = total - base * weights.len();
+        for o in out.iter_mut() {
+            if rem == 0 {
+                break;
+            }
+            *o += 1;
+            rem -= 1;
+        }
+        return out;
+    }
+    let exact: Vec<f64> = weights.iter().map(|&w| w as f64 * total as f64 / sum).collect();
+    let mut out: Vec<usize> = exact
+        .iter()
+        .zip(weights)
+        .map(|(&e, &w)| {
+            if w == 0 {
+                0
+            } else {
+                (e.floor() as usize).max(1)
+            }
+        })
+        .collect();
+    let mut assigned: usize = out.iter().sum();
+    // Distribute remaining units by largest fractional remainder.
+    let mut order: Vec<usize> = (0..weights.len()).filter(|&i| weights[i] > 0).collect();
+    order.sort_by(|&a, &b| {
+        let fa = exact[a] - exact[a].floor();
+        let fb = exact[b] - exact[b].floor();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    let mut i = 0;
+    while assigned < total {
+        out[order[i % order.len()]] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    // If floors+min-1 overshot, trim from the largest allocations.
+    while assigned > total {
+        let max_i = (0..out.len())
+            .filter(|&i| out[i] > 1)
+            .max_by_key(|&i| out[i])
+            .expect("cannot trim allocation below 1 per stage");
+        out[max_i] -= 1;
+        assigned -= 1;
+    }
+    out
+}
+
+/// Allocate PEs to segment stages by MAC ratio.
+pub fn allocate_pes(stage_macs: &[u64], total_pes: usize) -> Vec<usize> {
+    // Rescale into a ~2^20 range without destroying the MAC ordering
+    // (dividing by the min would collapse distinct ratios onto the same
+    // integer weight and let rounding invert dominance).
+    let max = stage_macs.iter().copied().max().unwrap_or(1).max(1);
+    let weights: Vec<usize> = stage_macs
+        .iter()
+        .map(|&m| ((m as u128 * (1 << 20) / max as u128) as usize).max(1))
+        .collect();
+    proportional(&weights, total_pes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_weights_split_evenly() {
+        assert_eq!(proportional(&[1, 1], 8), vec![4, 4]);
+        assert_eq!(proportional(&[1, 1, 1, 1], 32), vec![8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn ratio_1_to_9() {
+        // Fig. 9b: 1×1 vs 3×3 conv MACs.
+        let a = proportional(&[1, 9], 32);
+        assert_eq!(a.iter().sum::<usize>(), 32);
+        assert_eq!(a[0], 3); // 3.2 floored, remainder to larger
+        assert_eq!(a[1], 29);
+    }
+
+    #[test]
+    fn every_stage_gets_at_least_one() {
+        let a = proportional(&[1, 1000], 8);
+        assert!(a[0] >= 1);
+        assert_eq!(a.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn sums_are_exact_over_random_inputs() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(77);
+        for _ in 0..500 {
+            let n = rng.gen_usize(1, 8);
+            let weights: Vec<usize> = (0..n).map(|_| rng.gen_usize(1, 1000)).collect();
+            let total = rng.gen_usize(n, 1024);
+            let a = proportional(&weights, total);
+            assert_eq!(a.iter().sum::<usize>(), total, "{weights:?} {total}");
+            assert!(a.iter().all(|&x| x >= 1));
+        }
+    }
+
+    #[test]
+    fn allocate_pes_by_macs() {
+        let a = allocate_pes(&[100, 900], 10);
+        assert_eq!(a, vec![1, 9]);
+    }
+
+    #[test]
+    fn allocation_tracks_weight_ordering() {
+        let a = proportional(&[5, 3, 2], 100);
+        assert!(a[0] > a[1] && a[1] > a[2]);
+        assert_eq!(a.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_few_units_panics() {
+        proportional(&[1, 1, 1], 2);
+    }
+}

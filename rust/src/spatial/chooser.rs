@@ -1,0 +1,175 @@
+//! Compile-time spatial-organization selection (Sec. IV-B).
+//!
+//! Rules, in order:
+//! 1. Depth 1 → Sequential (whole array, op-by-op).
+//! 2. `RF_total < granularity` → data moves through the Global Buffer; the
+//!    organization is always Blocked (1-D for shallow, 2-D for deep
+//!    pipelines).
+//! 3. Granularity fits the RF:
+//!    - finest granularities (≲ one PE's register file per producer-PE
+//!      handoff) → fully interleaved (checkerboard for 2-D depths,
+//!      fine-striped for shallow);
+//!    - granularity near the total producer RF → blocked;
+//!    - in between → fine-striped 1-D.
+//! 1-D vs 2-D is decided by depth (a near-square stage grid needs 2-D once
+//! depth exceeds what columns alone can host).
+
+use crate::config::ArchConfig;
+
+use super::placement::Organization;
+
+/// The decision plus the quantities that drove it (for reports/tests).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OrganizationChoice {
+    pub organization: Organization,
+    /// Words exchanged per interval between adjacent stages.
+    pub granularity_words: u64,
+    /// Words of register file across the producer's PEs.
+    pub producer_rf_words: u64,
+    /// True when the handoff must go through the global buffer.
+    pub via_global_buffer: bool,
+}
+
+/// Pick an organization for a segment.
+///
+/// * `depth` — number of stages resident together (≥1).
+/// * `granularity_words` — finest handoff granularity of the segment.
+/// * `producer_pes` — PEs allocated to the (largest) producer stage.
+pub fn choose_organization(
+    cfg: &ArchConfig,
+    depth: usize,
+    granularity_words: u64,
+    producer_pes: usize,
+) -> OrganizationChoice {
+    let rf_word = |bytes: u64| bytes / cfg.bytes_per_word as u64;
+    let rf_per_pe = rf_word(cfg.rf_bytes_per_pe).max(1);
+    let producer_rf = rf_per_pe * producer_pes.max(1) as u64;
+    let deep = depth > 2; // needs a 2-D stage grid beyond 2 stages? paper
+                          // uses 2-D from depth 4; depth 3 still fits 1-D.
+    let two_d = depth >= 4;
+
+    if depth <= 1 {
+        return OrganizationChoice {
+            organization: Organization::Sequential,
+            granularity_words,
+            producer_rf_words: producer_rf,
+            via_global_buffer: true,
+        };
+    }
+
+    // Rule 2: RF_total < granularity → GB handoff, blocked organization.
+    if producer_rf < granularity_words {
+        return OrganizationChoice {
+            organization: if two_d {
+                Organization::Blocked2D
+            } else {
+                Organization::Blocked1D
+            },
+            granularity_words,
+            producer_rf_words: producer_rf,
+            via_global_buffer: true,
+        };
+    }
+
+    // Rule 3: granularity relative to the producer register file.
+    // "Number of PEs involved on the producer side is Granularity/RF_per_PE"
+    let pes_involved = crate::util::ceil_div(granularity_words, rf_per_pe);
+    let organization = if pes_involved <= (producer_pes as u64).div_ceil(4) {
+        // Fine granularity: a small fraction of producer PEs hands off each
+        // interval → interleave.
+        if two_d {
+            Organization::Checkerboard2D
+        } else {
+            Organization::FineStriped1D
+        }
+    } else if pes_involved >= (producer_pes as u64).saturating_mul(3) / 4 {
+        // Granularity ≈ total producer RF → blocked.
+        if two_d {
+            Organization::Blocked2D
+        } else {
+            Organization::Blocked1D
+        }
+    } else {
+        // Middle ground: striped keeps locality without constraining tiles
+        // as hard as checkerboard.
+        Organization::FineStriped1D
+    };
+    let _ = deep;
+    OrganizationChoice {
+        organization,
+        granularity_words,
+        producer_rf_words: producer_rf,
+        via_global_buffer: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::default() // 512 B RF per PE, 1 B words
+    }
+
+    #[test]
+    fn depth_one_is_sequential() {
+        let c = choose_organization(&cfg(), 1, 1 << 20, 1024);
+        assert_eq!(c.organization, Organization::Sequential);
+        assert!(c.via_global_buffer);
+    }
+
+    #[test]
+    fn oversized_granularity_goes_blocked_via_gb() {
+        // granularity larger than all producer RF → GB + blocked
+        let c = choose_organization(&cfg(), 2, 1 << 22, 512);
+        assert_eq!(c.organization, Organization::Blocked1D);
+        assert!(c.via_global_buffer);
+        let c4 = choose_organization(&cfg(), 4, 1 << 22, 256);
+        assert_eq!(c4.organization, Organization::Blocked2D);
+    }
+
+    #[test]
+    fn fine_granularity_interleaves() {
+        // one row of 64 words vs 512 PEs × 512 B RF → very fine
+        let c = choose_organization(&cfg(), 2, 64, 512);
+        assert_eq!(c.organization, Organization::FineStriped1D);
+        assert!(!c.via_global_buffer);
+        let c4 = choose_organization(&cfg(), 4, 64, 256);
+        assert_eq!(c4.organization, Organization::Checkerboard2D);
+    }
+
+    #[test]
+    fn near_rf_granularity_blocks() {
+        // granularity ≈ total producer RF (512 PEs × 512 words = 262144)
+        let c = choose_organization(&cfg(), 2, 250_000, 512);
+        assert_eq!(c.organization, Organization::Blocked1D);
+        assert!(!c.via_global_buffer);
+    }
+
+    #[test]
+    fn middle_granularity_stripes() {
+        // pes_involved ≈ half the producer
+        let c = choose_organization(&cfg(), 2, 512 * 256, 512);
+        assert_eq!(c.organization, Organization::FineStriped1D);
+    }
+
+    #[test]
+    fn monotone_in_granularity() {
+        // Coarser granularity must never pick a *finer* organization.
+        fn rank(o: Organization) -> u8 {
+            match o {
+                Organization::Checkerboard2D => 0,
+                Organization::FineStriped1D => 1,
+                Organization::Blocked1D | Organization::Blocked2D => 2,
+                Organization::Sequential => 3,
+            }
+        }
+        let mut prev = 0u8;
+        for g in [16u64, 1024, 65536, 262144, 1 << 21] {
+            let c = choose_organization(&cfg(), 2, g, 512);
+            let r = rank(c.organization);
+            assert!(r >= prev, "granularity {g} got finer org");
+            prev = r;
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! PIPEORGAN's contribution: flexible spatial organization of pipelined
+//! layers on the PE array (Sec. IV, Fig. 2).
+//!
+//! An [`Organization`] names a strategy (blocked 1-D/2-D, fine-striped 1-D,
+//! checkerboard 2-D, sequential); [`Placement`] is a concrete PE→stage
+//! assignment; [`allocate_pes`] load-balances PEs across stages by MAC
+//! ratio; [`choose_organization`] is the compile-time selection rule of
+//! Sec. IV-B (register file vs granularity).
+
+mod alloc;
+mod chooser;
+mod placement;
+
+pub use alloc::allocate_pes;
+pub use chooser::{choose_organization, OrganizationChoice};
+pub use placement::{Organization, Placement};

@@ -1,0 +1,383 @@
+//! PE→stage placements for each spatial organization strategy (Fig. 2).
+
+/// The spatial organization strategies of Fig. 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Organization {
+    /// Contiguous vertical bands, one per stage (prior-work default).
+    Blocked1D,
+    /// Contiguous rectangular blocks in a 2-D grid (depth 4 → quadrants).
+    Blocked2D,
+    /// Column stripes interleaving the stages at single-column pitch,
+    /// repeated in proportion to each stage's allocation ("Fine-grained-1D"
+    /// / fine-striped).
+    FineStriped1D,
+    /// 2-D interleave: every supertile of the stage grid contains all
+    /// stages ("Fine-grained-2D" / checkerboard).
+    Checkerboard2D,
+    /// Whole array time-multiplexed per stage (no co-residency; the
+    /// op-by-op fallback).
+    Sequential,
+}
+
+impl Organization {
+    pub fn name(self) -> &'static str {
+        match self {
+            Organization::Blocked1D => "blocked_1d",
+            Organization::Blocked2D => "blocked_2d",
+            Organization::FineStriped1D => "fine_striped_1d",
+            Organization::Checkerboard2D => "checkerboard_2d",
+            Organization::Sequential => "sequential",
+        }
+    }
+
+    pub fn is_interleaved(self) -> bool {
+        matches!(
+            self,
+            Organization::FineStriped1D | Organization::Checkerboard2D
+        )
+    }
+
+    pub fn is_2d(self) -> bool {
+        matches!(
+            self,
+            Organization::Blocked2D | Organization::Checkerboard2D
+        )
+    }
+}
+
+/// A concrete assignment of every PE to a pipeline stage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub rows: usize,
+    pub cols: usize,
+    pub organization: Organization,
+    /// Stage index per PE, row-major; `u16::MAX` = idle PE.
+    assign: Vec<u16>,
+    /// Number of stages.
+    pub stages: usize,
+}
+
+pub const IDLE: u16 = u16::MAX;
+
+impl Placement {
+    /// Build a placement for `shares` PEs per stage (`shares.len()` stages)
+    /// under the given organization. `shares` need not sum exactly to the
+    /// array size for interleaved strategies (stripes repeat by ratio); for
+    /// blocked strategies leftover PEs idle.
+    pub fn build(
+        rows: usize,
+        cols: usize,
+        organization: Organization,
+        shares: &[usize],
+    ) -> Placement {
+        assert!(!shares.is_empty());
+        let stages = shares.len();
+        let mut assign = vec![IDLE; rows * cols];
+        match organization {
+            Organization::Sequential => {
+                // All PEs belong to stage 0's timeslice; stage identity is
+                // temporal, so mark everything stage 0.
+                assign.fill(0);
+            }
+            Organization::Blocked1D => {
+                // Vertical bands: columns proportional to shares.
+                let col_counts = super::alloc::proportional(shares, cols);
+                let mut c0 = 0usize;
+                for (s, &w) in col_counts.iter().enumerate() {
+                    for c in c0..c0 + w {
+                        for r in 0..rows {
+                            assign[r * cols + c] = s as u16;
+                        }
+                    }
+                    c0 += w;
+                }
+            }
+            Organization::FineStriped1D => {
+                // Smooth weighted interleave (error diffusion): every stage
+                // receives its proportional column count, spread as evenly
+                // as possible — shares 1:3 → s0 s1 s1 s1 s0 s1 s1 s1, and a
+                // 5-stage split of 17 columns still gives every stage ≥ 1
+                // column (a plain repeating ratio pattern would not fit).
+                let counts = super::alloc::proportional(shares, cols);
+                let mut assigned = vec![0usize; stages];
+                for c in 0..cols {
+                    // stage with the largest deficit vs its quota
+                    let mut best = 0usize;
+                    let mut best_deficit = f64::NEG_INFINITY;
+                    for (s, &count) in counts.iter().enumerate() {
+                        let quota = count as f64 * (c + 1) as f64 / cols as f64;
+                        let deficit = quota - assigned[s] as f64;
+                        if deficit > best_deficit && assigned[s] < count {
+                            best_deficit = deficit;
+                            best = s;
+                        }
+                    }
+                    assigned[best] += 1;
+                    for r in 0..rows {
+                        assign[r * cols + c] = best as u16;
+                    }
+                }
+            }
+            Organization::Blocked2D => {
+                // Stage grid: gr × gc cells (near-square), each stage one
+                // cell, cell sizes proportional to shares along the snake.
+                let (gr, gc) = stage_grid(stages);
+                let cell_h = rows / gr;
+                let cell_w = cols / gc;
+                for s in 0..stages {
+                    let (br, bc) = (s / gc, s % gc);
+                    let r1 = if br == gr - 1 { rows } else { (br + 1) * cell_h };
+                    let c1 = if bc == gc - 1 { cols } else { (bc + 1) * cell_w };
+                    for r in br * cell_h..r1 {
+                        for c in bc * cell_w..c1 {
+                            assign[r * cols + c] = s as u16;
+                        }
+                    }
+                }
+            }
+            Organization::Checkerboard2D => {
+                // Supertile of the stage grid repeated across the array:
+                // every gr×gc window contains all stages.
+                let (gr, gc) = stage_grid(stages);
+                for r in 0..rows {
+                    for c in 0..cols {
+                        let s = (r % gr) * gc + (c % gc);
+                        assign[r * cols + c] = if s < stages { s as u16 } else { IDLE };
+                    }
+                }
+            }
+        }
+        Placement {
+            rows,
+            cols,
+            organization,
+            assign,
+            stages,
+        }
+    }
+
+    #[inline]
+    pub fn stage_at(&self, r: usize, c: usize) -> Option<usize> {
+        let v = self.assign[r * self.cols + c];
+        (v != IDLE).then_some(v as usize)
+    }
+
+    /// PEs (row, col) of one stage, row-major order — the canonical tile
+    /// order used by traffic derivation.
+    pub fn stage_pes(&self, stage: usize) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.assign[r * self.cols + c] == stage as u16 {
+                    v.push((r, c));
+                }
+            }
+        }
+        v
+    }
+
+    pub fn stage_size(&self, stage: usize) -> usize {
+        self.assign
+            .iter()
+            .filter(|&&s| s == stage as u16)
+            .count()
+    }
+
+    pub fn idle_pes(&self) -> usize {
+        self.assign.iter().filter(|&&s| s == IDLE).count()
+    }
+
+    /// Every PE is assigned at most one stage; all stages non-empty.
+    pub fn validate(&self) -> Result<(), String> {
+        for s in 0..self.stages {
+            if self.organization == Organization::Sequential && s > 0 {
+                continue; // temporal stages share the array
+            }
+            if self.stage_size(s) == 0 {
+                return Err(format!("stage {s} has no PEs"));
+            }
+        }
+        Ok(())
+    }
+
+    /// ASCII rendering: one digit (stage index mod 10) per PE, `.` for
+    /// idle — the visualization the traffic explorer prints, mirroring the
+    /// colored grids of Fig. 2 / Fig. 8–11.
+    pub fn render(&self) -> String {
+        let mut s = String::with_capacity((self.cols + 1) * self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                match self.stage_at(r, c) {
+                    Some(st) => s.push(char::from_digit((st % 10) as u32, 10).unwrap()),
+                    None => s.push('.'),
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Mean Manhattan distance from each PE of `from_stage` to the nearest
+    /// PE of `to_stage` — the locality metric that favors interleaving.
+    pub fn mean_nearest_distance(&self, from_stage: usize, to_stage: usize) -> f64 {
+        let from = self.stage_pes(from_stage);
+        let to = self.stage_pes(to_stage);
+        if from.is_empty() || to.is_empty() {
+            return f64::INFINITY;
+        }
+        let mut total = 0f64;
+        for &(r, c) in &from {
+            let d = to
+                .iter()
+                .map(|&(tr, tc)| r.abs_diff(tr) + c.abs_diff(tc))
+                .min()
+                .unwrap();
+            total += d as f64;
+        }
+        total / from.len() as f64
+    }
+}
+
+/// Near-square grid for `stages` blocks: (rows, cols) with rows*cols >=
+/// stages, rows <= cols.
+pub fn stage_grid(stages: usize) -> (usize, usize) {
+    let gr = (stages as f64).sqrt().floor().max(1.0) as usize;
+    let gc = stages.div_ceil(gr);
+    (gr, gc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocked_1d_bands() {
+        let p = Placement::build(8, 8, Organization::Blocked1D, &[1, 1]);
+        p.validate().unwrap();
+        assert_eq!(p.stage_size(0), 32);
+        assert_eq!(p.stage_size(1), 32);
+        // contiguous: stage 0 owns cols 0..4
+        for r in 0..8 {
+            for c in 0..4 {
+                assert_eq!(p.stage_at(r, c), Some(0));
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_1d_unequal_shares() {
+        // Fig. 9b: 1×1 vs 3×3 conv → 1:9 MACs. On 8 columns ratios round to
+        // 1:7 columns.
+        let p = Placement::build(8, 8, Organization::Blocked1D, &[1, 9]);
+        p.validate().unwrap();
+        assert_eq!(p.stage_size(0), 8); // one column
+        assert_eq!(p.stage_size(1), 56);
+    }
+
+    #[test]
+    fn fine_striped_interleaves_columns() {
+        let p = Placement::build(4, 8, Organization::FineStriped1D, &[1, 1]);
+        p.validate().unwrap();
+        for c in 0..8 {
+            let want = (c % 2) as usize;
+            assert_eq!(p.stage_at(0, c), Some(want));
+        }
+        // Interleaving brings the consumer adjacent: mean nearest distance 1.
+        assert_eq!(p.mean_nearest_distance(0, 1), 1.0);
+    }
+
+    #[test]
+    fn fine_striped_ratio_pattern() {
+        let p = Placement::build(4, 8, Organization::FineStriped1D, &[2, 6]);
+        // 2:6 columns spread evenly: stage 0 appears twice, never adjacent
+        // to itself, stage 1 fills the rest.
+        let got: Vec<_> = (0..8).map(|c| p.stage_at(0, c).unwrap()).collect();
+        assert_eq!(got.iter().filter(|&&s| s == 0).count(), 2);
+        assert_eq!(got.iter().filter(|&&s| s == 1).count(), 6);
+        // interleaved: the two stage-0 stripes are not adjacent
+        let pos: Vec<_> = (0..8).filter(|&c| got[c] == 0).collect();
+        assert!(pos[1] - pos[0] >= 3, "{got:?}");
+    }
+
+    #[test]
+    fn fine_striped_many_stages_narrow_array() {
+        // Regression (property-test find): 5 stages on 17 columns must
+        // still give every stage at least one column.
+        let p = Placement::build(23, 17, Organization::FineStriped1D, &[5, 7, 3, 9, 3]);
+        p.validate().unwrap();
+        for s in 0..5 {
+            assert!(p.stage_size(s) >= 23, "stage {s} starved");
+        }
+    }
+
+    #[test]
+    fn blocked_2d_quadrants_depth4() {
+        let p = Placement::build(8, 8, Organization::Blocked2D, &[1, 1, 1, 1]);
+        p.validate().unwrap();
+        assert_eq!(p.stage_at(0, 0), Some(0));
+        assert_eq!(p.stage_at(0, 7), Some(1));
+        assert_eq!(p.stage_at(7, 0), Some(2));
+        assert_eq!(p.stage_at(7, 7), Some(3));
+        for s in 0..4 {
+            assert_eq!(p.stage_size(s), 16);
+        }
+    }
+
+    #[test]
+    fn checkerboard_supertile_contains_all_stages() {
+        let p = Placement::build(8, 8, Organization::Checkerboard2D, &[1, 1, 1, 1]);
+        p.validate().unwrap();
+        // 2×2 supertile: stages 0,1 / 2,3
+        assert_eq!(p.stage_at(0, 0), Some(0));
+        assert_eq!(p.stage_at(0, 1), Some(1));
+        assert_eq!(p.stage_at(1, 0), Some(2));
+        assert_eq!(p.stage_at(1, 1), Some(3));
+        // perfect locality: consumer of stage 0 is adjacent
+        assert_eq!(p.mean_nearest_distance(0, 1), 1.0);
+        assert_eq!(p.mean_nearest_distance(0, 3), 2.0);
+    }
+
+    #[test]
+    fn interleaving_beats_blocked_locality() {
+        // The Fig. 2 argument: fine-grained organization places consumers
+        // near producers.
+        let blocked = Placement::build(16, 16, Organization::Blocked1D, &[1, 1]);
+        let striped = Placement::build(16, 16, Organization::FineStriped1D, &[1, 1]);
+        assert!(
+            striped.mean_nearest_distance(0, 1) < blocked.mean_nearest_distance(0, 1)
+        );
+    }
+
+    #[test]
+    fn sequential_occupies_whole_array() {
+        let p = Placement::build(4, 4, Organization::Sequential, &[1, 1, 1]);
+        p.validate().unwrap();
+        assert_eq!(p.stage_size(0), 16);
+        assert_eq!(p.idle_pes(), 0);
+    }
+
+    #[test]
+    fn render_shows_fig2_patterns() {
+        let p = Placement::build(4, 4, Organization::Checkerboard2D, &[1, 1, 1, 1]);
+        assert_eq!(p.render(), "0101\n2323\n0101\n2323\n");
+        let b = Placement::build(2, 4, Organization::Blocked1D, &[1, 1]);
+        assert_eq!(b.render(), "0011\n0011\n");
+    }
+
+    #[test]
+    fn stage_grid_shapes() {
+        assert_eq!(stage_grid(1), (1, 1));
+        assert_eq!(stage_grid(2), (1, 2));
+        assert_eq!(stage_grid(3), (1, 3));
+        assert_eq!(stage_grid(4), (2, 2));
+        assert_eq!(stage_grid(6), (2, 3));
+        assert_eq!(stage_grid(9), (3, 3));
+    }
+
+    #[test]
+    fn blocked_2d_odd_depth_non_empty() {
+        let p = Placement::build(8, 9, Organization::Blocked2D, &[1, 1, 1]);
+        p.validate().unwrap();
+        assert_eq!(p.idle_pes(), 0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Flow derivation from placements.
+
+use crate::noc::{NodeId, Topology};
+use crate::spatial::Placement;
+
+/// Why a flow exists — used by reports and the Table II bottleneck rollup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlowClass {
+    /// Adjacent-stage pipeline handoff.
+    Pipeline { from_stage: usize, to_stage: usize },
+    /// Skip-connection handoff (non-adjacent stages).
+    Skip { from_stage: usize, to_stage: usize },
+}
+
+/// One producer-PE → consumer-PE flow with its per-interval volume.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Flow {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub words_per_interval: f64,
+    pub class: FlowClass,
+}
+
+/// A stage-to-stage handoff of the segment (pipeline or skip edge) with the
+/// words exchanged per pipeline interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageHandoff {
+    pub from_stage: usize,
+    pub to_stage: usize,
+    pub words_per_interval: f64,
+    pub is_skip: bool,
+}
+
+impl StageHandoff {
+    pub fn pipeline(from: usize, to: usize, words: f64) -> Self {
+        Self {
+            from_stage: from,
+            to_stage: to,
+            words_per_interval: words,
+            is_skip: false,
+        }
+    }
+
+    pub fn skip(from: usize, to: usize, words: f64) -> Self {
+        Self {
+            from_stage: from,
+            to_stage: to,
+            words_per_interval: words,
+            is_skip: true,
+        }
+    }
+}
+
+/// Derive per-PE flows for every handoff.
+///
+/// Producer and consumer PEs are ordered canonically (row-major within the
+/// stage region — the tile order of the intermediate tensor). Producer `i`
+/// sends its slice to the consumer holding the matching tile:
+/// `j = ⌊i · |C| / |P|⌋`. Every producer emits `words/|P|` per interval;
+/// with `|C| < |P|` several producers converge on one consumer (the Fig. 9b
+/// hotspot), with `|C| > |P|` each producer fans out to the consumers of its
+/// tile range.
+pub fn derive_flows(
+    topo: &Topology,
+    placement: &Placement,
+    handoffs: &[StageHandoff],
+) -> Vec<Flow> {
+    let mut out = Vec::new();
+    for h in handoffs {
+        let producers = placement.stage_pes(h.from_stage);
+        let consumers = placement.stage_pes(h.to_stage);
+        if producers.is_empty() || consumers.is_empty() || h.words_per_interval <= 0.0 {
+            continue;
+        }
+        let np = producers.len();
+        let nc = consumers.len();
+        let class = if h.is_skip {
+            FlowClass::Skip {
+                from_stage: h.from_stage,
+                to_stage: h.to_stage,
+            }
+        } else {
+            FlowClass::Pipeline {
+                from_stage: h.from_stage,
+                to_stage: h.to_stage,
+            }
+        };
+        if nc >= np {
+            // Fan-out: producer i feeds consumers [i*nc/np, (i+1)*nc/np).
+            for (i, &(pr, pc)) in producers.iter().enumerate() {
+                let j0 = i * nc / np;
+                let j1 = ((i + 1) * nc / np).max(j0 + 1);
+                let w = h.words_per_interval / np as f64 / (j1 - j0) as f64;
+                for &(cr, cc) in &consumers[j0..j1.min(nc)] {
+                    push_flow(topo, &mut out, (pr, pc), (cr, cc), w, class);
+                }
+            }
+        } else {
+            // Fan-in: producer i sends to consumer ⌊i·nc/np⌋.
+            let w = h.words_per_interval / np as f64;
+            for (i, &(pr, pc)) in producers.iter().enumerate() {
+                let j = i * nc / np;
+                let (cr, cc) = consumers[j];
+                push_flow(topo, &mut out, (pr, pc), (cr, cc), w, class);
+            }
+        }
+    }
+    out
+}
+
+fn push_flow(
+    topo: &Topology,
+    out: &mut Vec<Flow>,
+    src: (usize, usize),
+    dst: (usize, usize),
+    words: f64,
+    class: FlowClass,
+) {
+    let s = topo.node(src.0, src.1);
+    let d = topo.node(dst.0, dst.1);
+    if s == d {
+        return; // same-PE handoff: stays in the register file
+    }
+    out.push(Flow {
+        src: s,
+        dst: d,
+        words_per_interval: words,
+        class,
+    });
+}
+
+/// Total words per interval carried by a flow set (excludes same-PE
+/// handoffs, which never enter the NoC).
+pub fn total_words(flows: &[Flow]) -> f64 {
+    flows.iter().map(|f| f.words_per_interval).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::spatial::{Organization, Placement};
+
+    fn mesh8() -> Topology {
+        Topology::new(TopologyKind::Mesh, 8, 8)
+    }
+
+    #[test]
+    fn equal_blocked_pairs_producers_to_consumers() {
+        let topo = mesh8();
+        let p = Placement::build(8, 8, Organization::Blocked1D, &[1, 1]);
+        let flows = derive_flows(&topo, &p, &[StageHandoff::pipeline(0, 1, 32.0)]);
+        // 32 producers → 32 consumers, 1:1
+        assert_eq!(flows.len(), 32);
+        assert!((total_words(&flows) - 32.0).abs() < 1e-9);
+        // every flow crosses the band boundary eastward
+        for f in &flows {
+            let (_, sc) = topo.coords(f.src);
+            let (_, dc) = topo.coords(f.dst);
+            assert!(sc < 4 && dc >= 4);
+        }
+    }
+
+    #[test]
+    fn striped_flows_are_single_hop() {
+        let topo = mesh8();
+        let p = Placement::build(8, 8, Organization::FineStriped1D, &[1, 1]);
+        let flows = derive_flows(&topo, &p, &[StageHandoff::pipeline(0, 1, 32.0)]);
+        for f in &flows {
+            let (sr, sc) = topo.coords(f.src);
+            let (dr, dc) = topo.coords(f.dst);
+            let hops = sr.abs_diff(dr) + sc.abs_diff(dc);
+            assert!(hops <= 2, "striped flow spans {hops} hops");
+        }
+    }
+
+    #[test]
+    fn unequal_allocation_fans_in() {
+        let topo = mesh8();
+        // 56 producers, 8 consumers (7:1) — Fig. 9b inverted direction.
+        let p = Placement::build(8, 8, Organization::Blocked1D, &[7, 1]);
+        let flows = derive_flows(&topo, &p, &[StageHandoff::pipeline(0, 1, 56.0)]);
+        assert_eq!(flows.len(), 56);
+        // each consumer receives 7 flows
+        let mut per_dst = std::collections::HashMap::new();
+        for f in &flows {
+            *per_dst.entry(f.dst).or_insert(0usize) += 1;
+        }
+        assert!(per_dst.values().all(|&n| n == 7));
+    }
+
+    #[test]
+    fn fan_out_conserves_words() {
+        let topo = mesh8();
+        let p = Placement::build(8, 8, Organization::Blocked1D, &[1, 7]);
+        let flows = derive_flows(&topo, &p, &[StageHandoff::pipeline(0, 1, 10.0)]);
+        assert!((total_words(&flows) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skip_flows_are_classified() {
+        let topo = mesh8();
+        let p = Placement::build(8, 8, Organization::Blocked1D, &[1, 1, 1, 1]);
+        let flows = derive_flows(
+            &topo,
+            &p,
+            &[
+                StageHandoff::pipeline(0, 1, 8.0),
+                StageHandoff::skip(1, 3, 8.0),
+            ],
+        );
+        let skips: Vec<_> = flows
+            .iter()
+            .filter(|f| matches!(f.class, FlowClass::Skip { .. }))
+            .collect();
+        assert!(!skips.is_empty());
+        for f in skips {
+            let (_, sc) = topo.coords(f.src);
+            let (_, dc) = topo.coords(f.dst);
+            assert!(sc < 4 && dc >= 6); // stage 1 band → stage 3 band
+        }
+    }
+
+    #[test]
+    fn same_pe_handoffs_do_not_enter_noc() {
+        let topo = mesh8();
+        let p = Placement::build(8, 8, Organization::Sequential, &[1, 1]);
+        // Sequential: both "stages" own the same PEs → all handoffs are
+        // same-PE... stage_pes(1) is empty under Sequential (all marked 0),
+        // so no flows at all.
+        let flows = derive_flows(&topo, &p, &[StageHandoff::pipeline(0, 1, 8.0)]);
+        assert!(flows.is_empty());
+    }
+
+    #[test]
+    fn property_words_conserved_across_shapes() {
+        crate::util::proptest_lite::run(100, |rng| {
+            let topo = mesh8();
+            let a = rng.gen_usize(1, 7);
+            let b = rng.gen_usize(1, 9 - a);
+            let p = Placement::build(8, 8, Organization::Blocked1D, &[a, b]);
+            let words = rng.gen_usize(1, 1000) as f64;
+            let flows = derive_flows(&topo, &p, &[StageHandoff::pipeline(0, 1, words)]);
+            let tot = total_words(&flows);
+            crate::prop_assert!(
+                (tot - words).abs() < 1e-6 * words.max(1.0),
+                "words {words} != {tot}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,8 @@
+//! Traffic derivation (Sec. IV-C): turn a spatial placement plus the
+//! segment's pipelined handoffs into per-interval NoC flows, including skip
+//! connection traffic and the hotspots caused by unequal PE allocation.
+
+mod flows;
+pub mod scenarios;
+
+pub use flows::{derive_flows, total_words, Flow, FlowClass, StageHandoff};

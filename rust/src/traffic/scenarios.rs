@@ -1,0 +1,213 @@
+//! The design-time traffic-analysis scenario library: the exact cases the
+//! paper draws in Fig. 8–12, expressed as (placement, handoffs,
+//! compute-interval) triples ready for channel-load analysis.
+
+use crate::spatial::{Organization, Placement};
+
+use super::flows::StageHandoff;
+
+/// A named traffic scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub placement: Placement,
+    pub handoffs: Vec<StageHandoff>,
+    /// Compute cycles per pipeline interval (the temporal-reduction time
+    /// Fig. 8 compares the hop time against).
+    pub compute_interval: f64,
+}
+
+/// Words exchanged per interval in the canonical scenarios: one output
+/// element per producer PE per interval (fine-grained row pipelining on an
+/// array whose row holds the tile).
+fn words_per_interval(producer_pes: usize) -> f64 {
+    producer_pes as f64
+}
+
+/// Fig. 8 left: depth-2, equal allocation, blocked 1-D, fine-grained
+/// pipelining.
+pub fn fig8_depth2_blocked(rows: usize, cols: usize) -> Scenario {
+    let placement = Placement::build(rows, cols, Organization::Blocked1D, &[1, 1]);
+    let w = words_per_interval(placement.stage_size(0));
+    Scenario {
+        name: "fig8_depth2_blocked1d",
+        placement,
+        handoffs: vec![StageHandoff::pipeline(0, 1, w)],
+        compute_interval: 2.0,
+    }
+}
+
+/// Fig. 8 right: depth-4, equal allocation, blocked 1-D.
+pub fn fig8_depth4_blocked(rows: usize, cols: usize) -> Scenario {
+    let placement = Placement::build(rows, cols, Organization::Blocked1D, &[1, 1, 1, 1]);
+    let w = words_per_interval(placement.stage_size(0));
+    Scenario {
+        name: "fig8_depth4_blocked1d",
+        placement,
+        handoffs: vec![
+            StageHandoff::pipeline(0, 1, w),
+            StageHandoff::pipeline(1, 2, w),
+            StageHandoff::pipeline(2, 3, w),
+        ],
+        compute_interval: 2.0,
+    }
+}
+
+/// Fig. 9a: depth-2 blocked with a residual skip adding traffic on the same
+/// boundary (ResNet residual block: the skip source is the segment input
+/// forwarded alongside).
+pub fn fig9a_skip_blocked(rows: usize, cols: usize) -> Scenario {
+    let placement = Placement::build(rows, cols, Organization::Blocked1D, &[1, 1]);
+    let w = words_per_interval(placement.stage_size(0));
+    Scenario {
+        name: "fig9a_skip_blocked1d",
+        placement,
+        handoffs: vec![
+            StageHandoff::pipeline(0, 1, w),
+            // skip connection doubles the boundary traffic
+            StageHandoff::skip(0, 1, w),
+        ],
+        compute_interval: 2.0,
+    }
+}
+
+/// Fig. 9b: unequal PE allocation (1×1 vs 3×3 conv → 1:9 MACs) on blocked
+/// 1-D — the boundary hotspot case.
+pub fn fig9b_unequal_blocked(rows: usize, cols: usize) -> Scenario {
+    let placement = Placement::build(rows, cols, Organization::Blocked1D, &[1, 9]);
+    let w = words_per_interval(placement.stage_size(0));
+    Scenario {
+        name: "fig9b_unequal_blocked1d",
+        placement,
+        handoffs: vec![StageHandoff::pipeline(0, 1, w)],
+        compute_interval: 2.0,
+    }
+}
+
+/// Fig. 10: the same three cases on fine-striped 1-D interleaving
+/// (congestion-free counterparts).
+pub fn fig10_striped(rows: usize, cols: usize) -> Scenario {
+    let placement = Placement::build(rows, cols, Organization::FineStriped1D, &[1, 1]);
+    let w = words_per_interval(placement.stage_size(0));
+    Scenario {
+        name: "fig10_depth2_striped",
+        placement,
+        handoffs: vec![StageHandoff::pipeline(0, 1, w)],
+        compute_interval: 2.0,
+    }
+}
+
+pub fn fig10_striped_skip(rows: usize, cols: usize) -> Scenario {
+    let placement = Placement::build(rows, cols, Organization::FineStriped1D, &[1, 1]);
+    let w = words_per_interval(placement.stage_size(0));
+    Scenario {
+        name: "fig10_skip_striped",
+        placement,
+        handoffs: vec![
+            StageHandoff::pipeline(0, 1, w),
+            StageHandoff::skip(0, 1, w),
+        ],
+        compute_interval: 2.0,
+    }
+}
+
+pub fn fig10_striped_unequal(rows: usize, cols: usize) -> Scenario {
+    let placement = Placement::build(rows, cols, Organization::FineStriped1D, &[1, 9]);
+    let w = words_per_interval(placement.stage_size(0));
+    Scenario {
+        name: "fig10_unequal_striped",
+        placement,
+        handoffs: vec![StageHandoff::pipeline(0, 1, w)],
+        compute_interval: 2.0,
+    }
+}
+
+/// Fig. 11 left: depth-4 blocked 2-D (quadrants), pipeline snake
+/// east→south→west, with the L2→L4 skip (stage 1→3) traversing two path
+/// sets.
+pub fn fig11_blocked2d(rows: usize, cols: usize, with_skip: bool) -> Scenario {
+    let placement = Placement::build(rows, cols, Organization::Blocked2D, &[1, 1, 1, 1]);
+    let w = words_per_interval(placement.stage_size(0));
+    let mut handoffs = vec![
+        StageHandoff::pipeline(0, 1, w),
+        StageHandoff::pipeline(1, 2, w),
+        StageHandoff::pipeline(2, 3, w),
+    ];
+    if with_skip {
+        handoffs.push(StageHandoff::skip(1, 3, w));
+    }
+    Scenario {
+        name: if with_skip {
+            "fig11_blocked2d_skip"
+        } else {
+            "fig11_blocked2d"
+        },
+        placement,
+        handoffs,
+        compute_interval: 2.0,
+    }
+}
+
+/// Fig. 11 right: depth-4 checkerboard 2-D interleaving.
+pub fn fig11_checkerboard(rows: usize, cols: usize, with_skip: bool) -> Scenario {
+    let placement = Placement::build(rows, cols, Organization::Checkerboard2D, &[1, 1, 1, 1]);
+    let w = words_per_interval(placement.stage_size(0));
+    let mut handoffs = vec![
+        StageHandoff::pipeline(0, 1, w),
+        StageHandoff::pipeline(1, 2, w),
+        StageHandoff::pipeline(2, 3, w),
+    ];
+    if with_skip {
+        handoffs.push(StageHandoff::skip(1, 3, w));
+    }
+    Scenario {
+        name: if with_skip {
+            "fig11_checkerboard_skip"
+        } else {
+            "fig11_checkerboard"
+        },
+        placement,
+        handoffs,
+        compute_interval: 2.0,
+    }
+}
+
+/// All scenarios at the paper's array size, for sweeps and Table II.
+pub fn all(rows: usize, cols: usize) -> Vec<Scenario> {
+    vec![
+        fig8_depth2_blocked(rows, cols),
+        fig8_depth4_blocked(rows, cols),
+        fig9a_skip_blocked(rows, cols),
+        fig9b_unequal_blocked(rows, cols),
+        fig10_striped(rows, cols),
+        fig10_striped_skip(rows, cols),
+        fig10_striped_unequal(rows, cols),
+        fig11_blocked2d(rows, cols, false),
+        fig11_blocked2d(rows, cols, true),
+        fig11_checkerboard(rows, cols, false),
+        fig11_checkerboard(rows, cols, true),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenarios_build_at_paper_size() {
+        let all = all(32, 32);
+        assert_eq!(all.len(), 11);
+        for s in &all {
+            s.placement.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert!(!s.handoffs.is_empty());
+            assert!(s.compute_interval > 0.0);
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let names: Vec<_> = all(16, 16).iter().map(|s| s.name).collect();
+        let set: std::collections::BTreeSet<_> = names.iter().collect();
+        assert_eq!(set.len(), names.len());
+    }
+}

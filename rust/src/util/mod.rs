@@ -1,0 +1,63 @@
+//! Small self-contained utilities.
+//!
+//! This environment has no network access, so several crates a production
+//! codebase would normally pull in (rand, serde, criterion, proptest) are
+//! replaced by the minimal local implementations in this module. See
+//! DESIGN.md §2 for the substitution table.
+
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Integer ceiling division for positive operands.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+/// Least common multiple (u64, panics on zero operands).
+pub fn lcm(a: u64, b: u64) -> u64 {
+    assert!(a > 0 && b > 0, "lcm of zero");
+    a / gcd(a, b) * b
+}
+
+/// Greatest common divisor (Euclid).
+pub fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_rounds_up() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 100), 1);
+        assert_eq!(ceil_div(0, 7), 0);
+    }
+
+    #[test]
+    fn gcd_lcm_basics() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(7, 13), 1);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(5, 7), 35);
+        assert_eq!(lcm(8, 8), 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn lcm_zero_panics() {
+        lcm(0, 3);
+    }
+}

@@ -1,0 +1,111 @@
+//! Tiny property-based testing harness (proptest substitute — no network,
+//! so the real crate is unavailable; see DESIGN.md §2).
+//!
+//! Usage:
+//! ```ignore
+//! proptest_lite::run(256, |rng| {
+//!     let n = rng.gen_usize(1, 64);
+//!     // ... generate a case, assert invariants; return Err(msg) to fail.
+//!     Ok(())
+//! });
+//! ```
+//! Failures report the seed of the failing case so it can be replayed with
+//! [`replay`]. No shrinking — generators are kept small enough that the raw
+//! failing case is readable.
+
+use super::rng::SplitMix64;
+
+/// Run `cases` random test cases. Each case gets an independent RNG seeded
+/// from a fixed master seed, so the whole suite is deterministic.
+pub fn run<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    run_seeded(0xC0FFEE, cases, &mut prop)
+}
+
+/// Like [`run`] with an explicit master seed.
+pub fn run_seeded<F>(master_seed: u64, cases: u64, prop: &mut F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    let mut master = SplitMix64::new(master_seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut rng = SplitMix64::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn replay<F>(case_seed: u64, prop: &mut F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    let mut rng = SplitMix64::new(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed property failure (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assertion helper returning `Err` instead of panicking, for use inside
+/// properties so the harness can attach the replay seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        run(64, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        run(16, |rng| {
+            let x = rng.gen_range(10);
+            if x >= 5 {
+                return Err(format!("x too big: {x}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut trace_a = Vec::new();
+        run(8, |rng| {
+            trace_a.push(rng.next_u64());
+            Ok(())
+        });
+        let mut trace_b = Vec::new();
+        run(8, |rng| {
+            trace_b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(trace_a, trace_b);
+    }
+}

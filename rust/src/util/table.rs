@@ -1,0 +1,154 @@
+//! Plain-text / markdown / CSV table formatting for figure and table
+//! emitters. Every reproduced paper artifact is printed as an aligned
+//! markdown table on stdout and written as CSV next to it.
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: row from `Display` items.
+    pub fn row_disp(&mut self, cells: &[&dyn std::fmt::Display]) -> &mut Self {
+        let v: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&v)
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Aligned markdown rendering.
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let mut s = String::new();
+        if !self.title.is_empty() {
+            s.push_str(&format!("### {}\n\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            line.push('\n');
+            line
+        };
+        s.push_str(&fmt_row(&self.headers));
+        let mut sep = String::from("|");
+        for wi in &w {
+            sep.push_str(&format!("{}|", "-".repeat(wi + 2)));
+        }
+        sep.push('\n');
+        s.push_str(&sep);
+        for r in &self.rows {
+            s.push_str(&fmt_row(r));
+        }
+        s
+    }
+
+    /// CSV rendering (RFC-4180-ish quoting).
+    pub fn to_csv(&self) -> String {
+        fn esc(c: &str) -> String {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        }
+        let mut s = String::new();
+        s.push_str(
+            &self
+                .headers
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Format a f64 with a sensible number of significant digits for tables.
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 10.0 {
+        format!("{x:.1}")
+    } else if x.abs() >= 0.01 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_alignment() {
+        let mut t = Table::new("T", &["a", "long_header"]);
+        t.row(&["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | long_header |"), "{md}");
+        assert!(md.contains("| 1 | 2           |"), "{md}");
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let mut t = Table::new("", &["x"]);
+        t.row(&["a,b".into()]);
+        assert_eq!(t.to_csv(), "x\n\"a,b\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(1234.6), "1235");
+        assert_eq!(fnum(12.34), "12.3");
+        assert_eq!(fnum(1.2345), "1.234");
+        assert!(fnum(0.0001).contains('e'));
+    }
+}

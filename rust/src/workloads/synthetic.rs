@@ -1,0 +1,209 @@
+//! Synthetic workload generators for controlled sweeps (traffic-analysis
+//! figures and ablations): chains with a target A/W ratio, chains with
+//! parametric skip density/distance, and the exact scenario segments of
+//! Fig. 8–11.
+
+use crate::ir::{Layer, ModelGraph, Op};
+use crate::util::rng::SplitMix64;
+
+/// A conv chain whose layers hit approximately the requested A/W ratio by
+/// trading feature-map size against channel count. `aw_log10` in [-3, 4].
+pub fn aw_chain(aw_log10: f64, len: usize) -> ModelGraph {
+    assert!(len >= 1);
+    let mut g = ModelGraph::new(format!("synthetic_aw_{aw_log10:+.1}"));
+    // For an HxW map with C=K channels and 3x3 filters:
+    //   A/W = (2*H*W*C) / (9*C^2) = 2*H*W / (9*C)
+    // Pick H=W and C to hit the target.
+    let target = 10f64.powf(aw_log10);
+    // Start from a plausible channel count and solve H.
+    let c = if target >= 1.0 { 16.0 } else { 256.0 };
+    let hw = (target * 9.0 * c / 2.0).sqrt().round().max(2.0) as usize;
+    let c = c as usize;
+    for i in 0..len {
+        let op = Op::conv2d(1, hw, hw, c, c, 3, 3, 1, 1);
+        if i == 0 {
+            g.add_root(Layer::new(format!("c{i}"), op));
+        } else {
+            g.push(Layer::new(format!("c{i}"), op));
+        }
+    }
+    g
+}
+
+/// A uniform conv chain of `len` layers with residual skips of a fixed
+/// `distance` inserted every `period` layers.
+pub fn skip_chain(len: usize, distance: usize, period: usize) -> ModelGraph {
+    assert!(distance >= 2 && period >= 1);
+    let mut g = ModelGraph::new(format!("synthetic_skip_d{distance}_p{period}"));
+    for i in 0..len {
+        let op = Op::conv2d(1, 32, 32, 32, 32, 3, 3, 1, 1);
+        if i == 0 {
+            g.add_root(Layer::new(format!("c{i}"), op));
+        } else {
+            g.push(Layer::new(format!("c{i}"), op));
+        }
+    }
+    let mut src = 0;
+    while src + distance < len {
+        g.add_edge(src, src + distance);
+        src += period;
+    }
+    g
+}
+
+/// The Fig. 8 scenario: a pair (or quad) of equally sized conv layers that
+/// pipeline at one-row granularity. Used by the traffic benches.
+pub fn equal_conv_segment(depth: usize) -> ModelGraph {
+    let mut g = ModelGraph::new(format!("equal_conv_d{depth}"));
+    for i in 0..depth {
+        let op = Op::conv2d(1, 64, 64, 64, 64, 3, 3, 1, 1);
+        if i == 0 {
+            g.add_root(Layer::new(format!("l{i}"), op));
+        } else {
+            g.push(Layer::new(format!("l{i}"), op));
+        }
+    }
+    g
+}
+
+/// A memory-bound segment: 1×1 convs whose arithmetic intensity
+/// (C MACs/word = 16) sits far below the compute/bandwidth balance point
+/// (32 MACs/word at Table III rates), so op-by-op execution is DRAM-bound
+/// and pipelining pays — the premise of the whole paper.
+pub fn pointwise_conv_segment(depth: usize) -> ModelGraph {
+    let mut g = ModelGraph::new(format!("pointwise_conv_d{depth}"));
+    for i in 0..depth {
+        let op = Op::conv2d(1, 128, 128, 16, 16, 1, 1, 1, 0);
+        if i == 0 {
+            g.add_root(Layer::new(format!("l{i}"), op));
+        } else {
+            g.push(Layer::new(format!("l{i}"), op));
+        }
+    }
+    g
+}
+
+/// The Fig. 9b scenario: ResNet residual pair with 1×1 and 3×3 filters —
+/// unequal MACs force unequal PE allocation.
+pub fn unequal_conv_segment() -> ModelGraph {
+    let mut g = ModelGraph::new("unequal_conv_1x1_3x3");
+    g.add_root(Layer::new("l0", Op::conv2d(1, 56, 56, 64, 64, 1, 1, 1, 0)));
+    g.push(Layer::new("l1", Op::conv2d(1, 56, 56, 64, 64, 3, 3, 1, 1)));
+    g
+}
+
+/// The Fig. 9a / Fig. 11 scenario: depth-4 segment with a skip from layer 2
+/// to layer 4 (RITNet-UpBlock-like traffic with a skip that must traverse
+/// multiple 1-D paths on a 2-D organization).
+pub fn skip_conv_segment() -> ModelGraph {
+    let mut g = ModelGraph::new("skip_conv_d4");
+    for i in 0..4 {
+        let op = Op::conv2d(1, 64, 64, 32, 32, 3, 3, 1, 1);
+        if i == 0 {
+            g.add_root(Layer::new(format!("l{i}"), op));
+        } else {
+            g.push(Layer::new(format!("l{i}"), op));
+        }
+    }
+    g.add_edge(1, 3); // the paper's "L2-4" skip
+    g
+}
+
+/// Random conv/gemm DAG for property tests: valid by construction, varying
+/// shapes, occasional skip edges.
+pub fn random_model(rng: &mut SplitMix64, max_layers: usize) -> ModelGraph {
+    let n_layers = rng.gen_usize(2, max_layers.max(3));
+    let mut g = ModelGraph::new(format!("random_{n_layers}"));
+    let mut hw = *rng.choose(&[16usize, 32, 64, 128]);
+    let mut c = *rng.choose(&[8usize, 16, 32, 64]);
+    for i in 0..n_layers {
+        let kind = rng.gen_range(10);
+        let op = match kind {
+            0..=5 => {
+                let k = *rng.choose(&[c, c * 2, c.max(8) / 2]);
+                let r = *rng.choose(&[1usize, 3]);
+                let op = Op::conv2d(1, hw, hw, c, k, r, r, 1, r / 2);
+                c = k;
+                op
+            }
+            6 => Op::dwconv2d(1, hw, hw, c, 3, 1),
+            7 => {
+                let op = Op::pool(1, hw, hw, c, 2, 2);
+                hw = (hw / 2).max(2);
+                op
+            }
+            8 => Op::eltwise_add(1, hw, hw, c),
+            _ => {
+                let m = hw * hw;
+                let n = *rng.choose(&[32usize, 64, 128]);
+                let op = Op::gemm(m, c, n);
+                c = n;
+                op
+            }
+        };
+        if i == 0 {
+            g.add_root(Layer::new(format!("r{i}"), op));
+        } else {
+            g.push(Layer::new(format!("r{i}"), op));
+        }
+    }
+    // Sprinkle skip edges.
+    for dst in 2..n_layers {
+        if rng.gen_bool(0.2) {
+            let src = rng.gen_usize(0, dst - 1);
+            g.add_edge(src, dst);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aw_chain_hits_target_order_of_magnitude() {
+        for target in [-2.0f64, -1.0, 0.0, 1.0, 2.0, 3.0] {
+            let g = aw_chain(target, 3);
+            let r = g.layer(1).aw_ratio().log10();
+            assert!(
+                (r - target).abs() < 0.7,
+                "target 1e{target}, got 1e{r:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn skip_chain_density() {
+        let g = skip_chain(12, 3, 2);
+        g.validate().unwrap();
+        // src = 0,2,4,6,8 with src+3 < 12 → 0,2,4,6,8 all valid
+        assert_eq!(g.skip_edges().len(), 5);
+        assert!(g.skip_edges().iter().all(|e| e.dst - e.src == 3));
+    }
+
+    #[test]
+    fn scenario_segments_validate() {
+        equal_conv_segment(2).validate().unwrap();
+        equal_conv_segment(4).validate().unwrap();
+        unequal_conv_segment().validate().unwrap();
+        skip_conv_segment().validate().unwrap();
+    }
+
+    #[test]
+    fn unequal_segment_has_9x_mac_imbalance() {
+        let g = unequal_conv_segment();
+        let m0 = g.layer(0).macs();
+        let m1 = g.layer(1).macs();
+        assert_eq!(m1 / m0, 9); // 3x3 vs 1x1
+    }
+
+    #[test]
+    fn random_models_always_validate() {
+        let mut rng = SplitMix64::new(0xABCD);
+        for _ in 0..200 {
+            let g = random_model(&mut rng, 12);
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+}

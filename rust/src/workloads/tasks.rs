@@ -1,0 +1,452 @@
+//! The nine XR-bench-like task models (Sec. V-B). Layer dimensions follow
+//! the cited public architectures; see DESIGN.md §2 for the substitution
+//! rationale.
+
+use super::blocks::*;
+use crate::ir::{Layer, ModelGraph, Op};
+
+/// Eye segmentation — RITNet [Chaudhary et al. 2019]: DenseNet-style
+/// encoder/decoder on a 320×200 eye crop with very small channel counts
+/// (high A/W ratios ~1e2..1e4) and the densest skip pattern in the suite.
+pub fn eye_segmentation() -> ModelGraph {
+    let mut g = ModelGraph::new("eye_segmentation");
+    let (mut h, mut w) = (192usize, 320usize);
+    let c = 32usize;
+    let stem = g.add_root(Layer::new("stem", Op::conv2d(1, h, w, 1, c, 3, 3, 1, 1)));
+    // Down path: 4 dense blocks with avg-pool between.
+    let mut cur = stem;
+    let mut skips = Vec::new(); // encoder outputs for U-net style long skips
+    for b in 0..4 {
+        cur = dense_block(&mut g, cur, &format!("down{b}"), 1, h, w, c, 4);
+        skips.push((cur, h, w));
+        let pool = g.add_layer(
+            Layer::new(format!("down{b}.pool"), Op::pool(1, h, w, c, 2, 2)),
+            &[cur],
+        );
+        h /= 2;
+        w /= 2;
+        cur = pool;
+    }
+    // Bottleneck dense block.
+    cur = dense_block(&mut g, cur, "bottleneck", 1, h, w, c, 4);
+    // Up path: 4 up blocks, each receiving the matching encoder skip.
+    for b in 0..4 {
+        cur = up_block(&mut g, cur, &format!("up{b}"), 1, h, w, c);
+        h *= 2;
+        w *= 2;
+        let (enc, eh, ew) = skips[3 - b];
+        debug_assert_eq!((eh, ew), (h, w));
+        let fuse = g.add_layer(
+            Layer::new(format!("up{b}.fuse"), Op::eltwise_add(1, h, w, c)),
+            &[cur],
+        );
+        g.add_edge(enc, fuse);
+        cur = dense_block(&mut g, fuse, &format!("up{b}.dense"), 1, h, w, c, 3);
+    }
+    // Per-pixel segmentation head.
+    g.add_layer(
+        Layer::new("head", Op::conv2d(1, h, w, c, 4, 1, 1, 1, 0)),
+        &[cur],
+    );
+    g
+}
+
+/// Gaze estimation — appearance-based CNN on 128×128 eye images (EyeCoD-style
+/// [You et al. 2022]): small conv stack, moderate A/W, FC head. Fig. 13:
+/// "gaze estimation does better with deeper pipelining in the activation
+/// heavy regions".
+pub fn gaze_estimation() -> ModelGraph {
+    let mut g = ModelGraph::new("gaze_estimation");
+    let stem = g.add_root(Layer::new("stem", Op::conv2d(1, 128, 128, 3, 24, 3, 3, 1, 1)));
+    let mut cur = residual_block(&mut g, stem, "b0", 1, 128, 128, 24, 24, 1);
+    cur = g.add_layer(
+        Layer::new("pool0", Op::pool(1, 128, 128, 24, 2, 2)),
+        &[cur],
+    );
+    cur = residual_block(&mut g, cur, "b1", 1, 64, 64, 24, 48, 2);
+    cur = residual_block(&mut g, cur, "b2", 1, 32, 32, 48, 48, 1);
+    cur = residual_block(&mut g, cur, "b3", 1, 32, 32, 48, 96, 2);
+    cur = residual_block(&mut g, cur, "b4", 1, 16, 16, 96, 96, 1);
+    cur = g.add_layer(
+        Layer::new("gap", Op::pool(1, 16, 16, 96, 16, 16)),
+        &[cur],
+    );
+    // FC regression head → weight-heavy GEMMs.
+    let fc0 = g.add_layer(Layer::new("fc0", Op::gemm(1, 96, 128)), &[cur]);
+    g.add_layer(Layer::new("fc_gaze", Op::gemm(1, 128, 2)), &[fc0]);
+    g
+}
+
+/// Depth estimation — MiDaS-small-style [Ranftl et al. 2022]: ResNet-ish
+/// encoder, DWCONV-heavy (FBNet-like) decoder with one long skip per block
+/// ("midas: one skip connection per block with varying reuse distance").
+/// DWCONV layers are memory-bound and drive deep pipelining (Fig. 16).
+pub fn depth_estimation() -> ModelGraph {
+    let mut g = ModelGraph::new("depth_estimation");
+    let stem = g.add_root(Layer::new("stem", Op::conv2d(1, 256, 256, 3, 32, 3, 3, 2, 1)));
+    // Encoder: 4 stages of inverted residual blocks.
+    let mut cur = stem;
+    let mut stage_outs = Vec::new();
+    let dims = [
+        (128usize, 32usize, 48usize),
+        (64, 48, 96),
+        (32, 96, 160),
+        (16, 160, 256),
+    ];
+    for (i, &(hw, c_in, c_out)) in dims.iter().enumerate() {
+        cur = inverted_residual_block(&mut g, cur, &format!("enc{i}.0"), 1, hw, hw, c_in, 4, c_out, 2);
+        cur = inverted_residual_block(
+            &mut g,
+            cur,
+            &format!("enc{i}.1"),
+            1,
+            hw / 2,
+            hw / 2,
+            c_out,
+            4,
+            c_out,
+            1,
+        );
+        stage_outs.push((cur, hw / 2, c_out));
+    }
+    // Decoder: upsample + fuse the matching encoder stage (long skips of
+    // increasing reuse distance), DWCONV refinement.
+    for d in 0..3 {
+        let (_, h, c) = stage_outs[3 - d];
+        let (enc, eh, ec) = stage_outs[2 - d];
+        let up = g.add_layer(
+            Layer::new(format!("dec{d}.up"), Op::upsample(1, h, h, c, 2)),
+            &[cur],
+        );
+        debug_assert_eq!(eh, h * 2);
+        let align = g.add_layer(
+            Layer::new(
+                format!("dec{d}.align"),
+                Op::conv2d(1, eh, eh, c, ec, 1, 1, 1, 0),
+            ),
+            &[up],
+        );
+        let fuse = g.add_layer(
+            Layer::new(format!("dec{d}.fuse"), Op::eltwise_add(1, eh, eh, ec)),
+            &[align],
+        );
+        g.add_edge(enc, fuse);
+        let dw = g.add_layer(
+            Layer::new(format!("dec{d}.dw"), Op::dwconv2d(1, eh, eh, ec, 3, 1)),
+            &[fuse],
+        );
+        cur = g.add_layer(
+            Layer::new(
+                format!("dec{d}.pw"),
+                Op::conv2d(1, eh, eh, ec, ec, 1, 1, 1, 0),
+            ),
+            &[dw],
+        );
+    }
+    // Full-resolution depth head.
+    let up = g.add_layer(
+        Layer::new("head.up", Op::upsample(1, 64, 64, 48, 2)),
+        &[cur],
+    );
+    let dw = g.add_layer(
+        Layer::new("head.dw", Op::dwconv2d(1, 128, 128, 48, 3, 1)),
+        &[up],
+    );
+    g.add_layer(
+        Layer::new("head.depth", Op::conv2d(1, 128, 128, 48, 1, 1, 1, 1, 0)),
+        &[dw],
+    );
+    g
+}
+
+/// Hand tracking — 3-D hand shape/pose backbone [Ge et al. 2019]: ResNet-50
+/// style bottleneck stack on 256×256, deep weight-heavy stages, GEMM heads.
+pub fn hand_tracking() -> ModelGraph {
+    let mut g = ModelGraph::new("hand_tracking");
+    let stem = g.add_root(Layer::new("stem", Op::conv2d(1, 256, 256, 3, 64, 7, 7, 2, 3)));
+    let mut cur = g.add_layer(
+        Layer::new("pool0", Op::pool(1, 128, 128, 64, 2, 2)),
+        &[stem],
+    );
+    // (h, c_in, c_mid, c_out, blocks, first_stride)
+    let stages = [
+        (64usize, 64usize, 64usize, 256usize, 2usize, 1usize),
+        (64, 256, 128, 512, 2, 2),
+        (32, 512, 256, 1024, 3, 2),
+        (16, 1024, 512, 2048, 2, 2),
+    ];
+    for (s, &(h, c_in, c_mid, c_out, blocks, stride0)) in stages.iter().enumerate() {
+        let mut h_cur = h;
+        for b in 0..blocks {
+            let stride = if b == 0 { stride0 } else { 1 };
+            let ci = if b == 0 { c_in } else { c_out };
+            cur = bottleneck_block(
+                &mut g,
+                cur,
+                &format!("s{s}b{b}"),
+                1,
+                h_cur,
+                h_cur,
+                ci,
+                c_mid,
+                c_out,
+                stride,
+            );
+            h_cur /= stride;
+        }
+    }
+    let gap = g.add_layer(Layer::new("gap", Op::pool(1, 8, 8, 2048, 8, 8)), &[cur]);
+    // Pose + shape heads (weight-dominant GEMMs, A/W ~ 1e-3).
+    let fc0 = g.add_layer(Layer::new("fc0", Op::gemm(1, 2048, 1024)), &[gap]);
+    g.add_layer(Layer::new("fc_pose", Op::gemm(1, 1024, 63)), &[fc0]);
+    g
+}
+
+/// Keyword detection — res8 [Tang & Lin 2018]: 6 convs with 45 channels on
+/// a 101×40 MFCC map, residual (distance-2) skips throughout. "Keyword
+/// detection prefers pipelining despite nominal A/W ratios because of skip
+/// connections" (Sec. VI-D).
+pub fn keyword_detection() -> ModelGraph {
+    let mut g = ModelGraph::new("keyword_detection");
+    let c = 45usize;
+    let stem = g.add_root(Layer::new("stem", Op::conv2d(1, 101, 40, 1, c, 3, 3, 1, 1)));
+    let pool = g.add_layer(
+        Layer::new("pool0", Op::pool(1, 101, 40, c, 2, 2)),
+        &[stem],
+    );
+    let (h, w) = (50usize, 20usize);
+    let mut cur = pool;
+    for b in 0..3 {
+        // res8 pairs convs with an identity skip around each pair.
+        let c1 = g.add_layer(
+            Layer::new(
+                format!("b{b}.conv0"),
+                Op::conv2d(1, h, w, c, c, 3, 3, 1, 1),
+            ),
+            &[cur],
+        );
+        let c2 = g.add_layer(
+            Layer::new(
+                format!("b{b}.conv1"),
+                Op::conv2d(1, h, w, c, c, 3, 3, 1, 1),
+            ),
+            &[c1],
+        );
+        let add = g.add_layer(
+            Layer::new(format!("b{b}.add"), Op::eltwise_add(1, h, w, c)),
+            &[c2],
+        );
+        g.add_edge(cur, add);
+        cur = add;
+    }
+    let gap = g.add_layer(Layer::new("gap", Op::pool(1, h, w, c, h, w)), &[cur]);
+    g.add_layer(Layer::new("fc", Op::gemm(1, c, 12)), &[gap]);
+    g
+}
+
+/// Action segmentation — TCN [Lea et al. 2017]: dilated temporal convs over
+/// long frame windows with large channel counts → weight-heavy, does not
+/// favor pipelining (Fig. 13 discussion).
+pub fn action_segmentation() -> ModelGraph {
+    let mut g = ModelGraph::new("action_segmentation");
+    let frames = 128usize;
+    // Input features per frame come from a (precomputed) visual backbone.
+    let stem = g.add_root(Layer::new(
+        "stem",
+        Op::conv2d(1, frames, 1, 2048, 256, 1, 1, 1, 0),
+    ));
+    let mut cur = stem;
+    let mut c_in = 256usize;
+    for b in 0..4 {
+        let c_out = 256 + 128 * (b / 2);
+        cur = tcn_block(&mut g, cur, &format!("tcn{b}"), frames, c_in, c_out, 9);
+        c_in = c_out;
+    }
+    g.add_layer(
+        Layer::new("head", Op::conv2d(1, frames, 1, c_in, 48, 1, 1, 1, 0)),
+        &[cur],
+    );
+    g
+}
+
+/// Object detection — Faster-R-CNN style [Ren et al. 2015]: conv backbone +
+/// RPN + ROIAlign (complex layers that cut pipeline segments) + GEMM heads.
+pub fn object_detection() -> ModelGraph {
+    let mut g = ModelGraph::new("object_detection");
+    let stem = g.add_root(Layer::new("stem", Op::conv2d(1, 320, 320, 3, 32, 3, 3, 2, 1)));
+    let mut cur = residual_block(&mut g, stem, "b0", 1, 160, 160, 32, 64, 2);
+    cur = residual_block(&mut g, cur, "b1", 1, 80, 80, 64, 128, 2);
+    cur = residual_block(&mut g, cur, "b2", 1, 40, 40, 128, 256, 2);
+    let feat = residual_block(&mut g, cur, "b3", 1, 20, 20, 256, 256, 1);
+    // RPN — complex layer, cuts pipelining.
+    let rpn = g.add_layer(Layer::new("rpn", Op::rpn(20, 20, 256, 9)), &[feat]);
+    // ROIAlign over proposals.
+    let roi = g.add_layer(Layer::new("roi_align", Op::roi_align(64, 7, 256)), &[rpn]);
+    g.add_edge(feat, roi); // ROIAlign also reads the feature map
+    // Per-ROI head: two FC layers (batched as GEMM over 64 ROIs).
+    let fc0 = g.add_layer(Layer::new("head.fc0", Op::gemm(64, 7 * 7 * 256, 1024)), &[roi]);
+    let fc1 = g.add_layer(Layer::new("head.fc1", Op::gemm(64, 1024, 1024)), &[fc0]);
+    g.add_layer(Layer::new("head.cls", Op::gemm(64, 1024, 91)), &[fc1]);
+    g
+}
+
+/// Plane detection — PlaneRCNN-style [Liu et al. 2019]: detection backbone +
+/// complex layers + a segmentation-ish decoder with long skips.
+pub fn plane_detection() -> ModelGraph {
+    let mut g = ModelGraph::new("plane_detection");
+    let stem = g.add_root(Layer::new("stem", Op::conv2d(1, 256, 256, 3, 32, 3, 3, 2, 1)));
+    let e0 = residual_block(&mut g, stem, "e0", 1, 128, 128, 32, 64, 2);
+    let e1 = residual_block(&mut g, e0, "e1", 1, 64, 64, 64, 128, 2);
+    let e2 = residual_block(&mut g, e1, "e2", 1, 32, 32, 128, 256, 2);
+    // RPN + ROIAlign for plane proposals.
+    let rpn = g.add_layer(Layer::new("rpn", Op::rpn(16, 16, 256, 9)), &[e2]);
+    let roi = g.add_layer(Layer::new("roi_align", Op::roi_align(32, 7, 256)), &[rpn]);
+    g.add_edge(e2, roi);
+    // Plane-mask decoder: upsample with skips back to encoder stages.
+    let up0 = g.add_layer(
+        Layer::new("d0.up", Op::upsample(1, 16, 16, 256, 2)),
+        &[roi],
+    );
+    let d0 = g.add_layer(
+        Layer::new("d0.conv", Op::conv2d(1, 32, 32, 256, 128, 3, 3, 1, 1)),
+        &[up0],
+    );
+    let f0 = g.add_layer(
+        Layer::new("d0.fuse", Op::eltwise_add(1, 32, 32, 128)),
+        &[d0],
+    );
+    g.add_edge(e1, f0);
+    let up1 = g.add_layer(Layer::new("d1.up", Op::upsample(1, 32, 32, 128, 2)), &[f0]);
+    let d1 = g.add_layer(
+        Layer::new("d1.conv", Op::conv2d(1, 64, 64, 128, 64, 3, 3, 1, 1)),
+        &[up1],
+    );
+    let f1 = g.add_layer(
+        Layer::new("d1.fuse", Op::eltwise_add(1, 64, 64, 64)),
+        &[d1],
+    );
+    g.add_edge(e0, f1);
+    g.add_layer(
+        Layer::new("mask_head", Op::conv2d(1, 64, 64, 64, 1, 1, 1, 1, 0)),
+        &[f1],
+    );
+    g
+}
+
+/// World locking / speech — Emformer-style streaming acoustic model
+/// [Shi et al. 2021]: GEMM-dominated transformer blocks at small chunk
+/// length → strongly weight-heavy (A/W down to ~1e-3).
+pub fn world_locking() -> ModelGraph {
+    let mut g = ModelGraph::new("world_locking");
+    let seq = 32usize; // streaming chunk
+    let d = 512usize;
+    let stem = g.add_root(Layer::new("embed", Op::gemm(seq, 80, d)));
+    let mut cur = stem;
+    for b in 0..4 {
+        // Self-attention projections (Q,K,V fused) + output proj.
+        let qkv = g.add_layer(
+            Layer::new(format!("l{b}.qkv"), Op::gemm(seq, d, 3 * d)),
+            &[cur],
+        );
+        // Attention score + context as batched GEMMs over 8 heads.
+        let score = g.add_layer(
+            Layer::new(format!("l{b}.score"), Op::gemm(8 * seq, d / 8, seq)),
+            &[qkv],
+        );
+        let ctx = g.add_layer(
+            Layer::new(format!("l{b}.ctx"), Op::gemm(8 * seq, seq, d / 8)),
+            &[score],
+        );
+        let proj = g.add_layer(
+            Layer::new(format!("l{b}.proj"), Op::gemm(seq, d, d)),
+            &[ctx],
+        );
+        let add = g.add_layer(
+            Layer::new(format!("l{b}.attn_add"), Op::eltwise_add(1, seq, 1, d)),
+            &[proj],
+        );
+        g.add_edge(cur, add);
+        cur = ffn_block(&mut g, add, &format!("l{b}"), seq, d);
+    }
+    g.add_layer(Layer::new("ctc_head", Op::gemm(seq, d, 4096)), &[cur]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::skips::SkipProfile;
+
+    #[test]
+    fn eye_segmentation_structure() {
+        let g = eye_segmentation();
+        g.validate().unwrap();
+        assert!(g.num_layers() > 40, "{}", g.num_layers());
+        let p = SkipProfile::of(&g);
+        assert!(p.num_skips() > 20, "dense skips expected, got {}", p.num_skips());
+        // distances vary (dense block internal 2..4 plus long U-net skips)
+        let dists: std::collections::BTreeSet<usize> =
+            p.edges.iter().map(|&(_, _, d)| d).collect();
+        assert!(dists.len() >= 3, "distances {dists:?}");
+    }
+
+    #[test]
+    fn depth_estimation_has_dwconv_and_long_skips() {
+        let g = depth_estimation();
+        g.validate().unwrap();
+        assert!(g
+            .layers()
+            .iter()
+            .any(|l| l.op.kind() == crate::ir::OpKind::DwConv2d));
+        let p = SkipProfile::of(&g);
+        assert!(p.max_distance >= 8, "max dist {}", p.max_distance);
+    }
+
+    #[test]
+    fn hand_tracking_is_deep_and_weight_heavy_late() {
+        let g = hand_tracking();
+        g.validate().unwrap();
+        let last_gemm = g
+            .layers()
+            .iter()
+            .find(|l| l.name == "fc0")
+            .expect("fc0 present");
+        assert!(last_gemm.aw_ratio() < 0.01);
+    }
+
+    #[test]
+    fn keyword_detection_residual_distance_two() {
+        let g = keyword_detection();
+        g.validate().unwrap();
+        let p = SkipProfile::of(&g);
+        assert_eq!(p.num_skips(), 3);
+        // skip wraps conv0→conv1→add, i.e. reuse distance 3 in layer order
+        assert!(p.edges.iter().all(|&(_, _, d)| d == 3));
+    }
+
+    #[test]
+    fn object_detection_pipeline_cutters() {
+        let g = object_detection();
+        g.validate().unwrap();
+        let complex: Vec<_> = g.layers().iter().filter(|l| l.is_complex()).collect();
+        assert_eq!(complex.len(), 2); // RPN + ROIAlign
+    }
+
+    #[test]
+    fn world_locking_gemm_only_compute() {
+        let g = world_locking();
+        g.validate().unwrap();
+        assert!(g
+            .layers()
+            .iter()
+            .filter(|l| l.is_einsum())
+            .all(|l| l.op.kind() == crate::ir::OpKind::Gemm));
+    }
+
+    #[test]
+    fn models_have_distinct_names() {
+        let names = super::super::task_names();
+        let set: std::collections::BTreeSet<_> = names.iter().collect();
+        assert_eq!(set.len(), names.len());
+    }
+}

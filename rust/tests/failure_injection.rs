@@ -1,0 +1,135 @@
+//! Failure injection: the runtime and config layers must fail *cleanly*
+//! (typed errors, no panics) on corrupt artifacts, truncated manifests,
+//! bad configs, and malformed plans.
+
+use pipeorgan::config::ArchConfig;
+use pipeorgan::runtime::{Manifest, Runtime};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("pipeorgan_fail_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_a_clean_error() {
+    let d = tmpdir("nomanifest");
+    let rt = Runtime::new(&d).unwrap();
+    let err = rt.manifest().unwrap_err();
+    assert!(format!("{err:#}").contains("manifest.json"), "{err:#}");
+}
+
+#[test]
+fn truncated_manifest_is_a_clean_error() {
+    let d = tmpdir("truncated");
+    std::fs::write(d.join("manifest.json"), r#"{"segment": {"h": 32"#).unwrap();
+    let rt = Runtime::new(&d).unwrap();
+    assert!(rt.manifest().is_err());
+}
+
+#[test]
+fn manifest_missing_programs_key() {
+    let d = tmpdir("noprog");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"segment": {"h":8,"w":8,"c_in":1,"c_mid":1,"c_out":1,"band":4,"r":3,"s":3}}"#,
+    )
+    .unwrap();
+    let rt = Runtime::new(&d).unwrap();
+    let err = rt.manifest().unwrap_err();
+    assert!(format!("{err:#}").contains("programs"));
+}
+
+#[test]
+fn unknown_program_name_is_a_clean_error() {
+    let d = tmpdir("unknownprog");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"segment": {"h":8,"w":8,"c_in":1,"c_mid":1,"c_out":1,"band":4,"r":3,"s":3},
+            "programs": {}}"#,
+    )
+    .unwrap();
+    let rt = Runtime::new(&d).unwrap();
+    let err = match rt.load_program("nope") {
+        Err(e) => e,
+        Ok(_) => panic!("unknown program should not load"),
+    };
+    assert!(format!("{err:#}").contains("nope"));
+}
+
+#[test]
+fn corrupt_hlo_text_is_a_clean_error() {
+    let d = tmpdir("corrupt");
+    std::fs::write(
+        d.join("manifest.json"),
+        r#"{"segment": {"h":8,"w":8,"c_in":1,"c_mid":1,"c_out":1,"band":4,"r":3,"s":3},
+            "programs": {"bad": {"file": "bad.hlo.txt",
+                                  "inputs": [{"shape": [2,2], "dtype": "f32"}],
+                                  "output": {"shape": [2,2], "dtype": "f32"},
+                                  "role": "corrupt"}}}"#,
+    )
+    .unwrap();
+    std::fs::write(d.join("bad.hlo.txt"), "this is not an HLO module").unwrap();
+    let rt = Runtime::new(&d).unwrap();
+    assert!(rt.load_program("bad").is_err());
+}
+
+#[test]
+fn manifest_parse_rejects_nonsense_shapes() {
+    let text = r#"{"segment": {"h":8,"w":8,"c_in":1,"c_mid":1,"c_out":1,"band":4,"r":3,"s":3},
+        "programs": {"p": {"file": "p.hlo.txt",
+                            "inputs": [{"shape": "wat", "dtype": "f32"}],
+                            "output": {"shape": [1], "dtype": "f32"},
+                            "role": ""}}}"#;
+    assert!(Manifest::parse(text).is_err());
+}
+
+#[test]
+fn config_failures_are_typed() {
+    for bad in [
+        "pe_rows = 0",
+        "pe_rows = -3",
+        "topology = ring",
+        "dram_bytes_per_cycle = 0",
+        "mystery_knob = 7",
+        "pe_rows",
+    ] {
+        assert!(
+            ArchConfig::from_kv_text(bad).is_err(),
+            "accepted bad config: {bad}"
+        );
+    }
+}
+
+#[test]
+fn plan_validation_catches_malformed_plans() {
+    use pipeorgan::config::TopologyKind;
+    use pipeorgan::cost::{MappingPlan, PlannedHandoff, PlannedSegment};
+    use pipeorgan::dataflow::DataflowStyle;
+    use pipeorgan::pipeline::Segment;
+    use pipeorgan::spatial::Organization;
+
+    let g = pipeorgan::workloads::synthetic::equal_conv_segment(2);
+    let cfg = ArchConfig::default();
+    // handoff pointing backwards
+    let plan = MappingPlan {
+        mapper_name: "bad".into(),
+        topology: TopologyKind::Mesh,
+        segments: vec![PlannedSegment {
+            segment: Segment::new(0, 2),
+            organization: Organization::Blocked1D,
+            pe_alloc: vec![512, 512],
+            styles: vec![DataflowStyle::OutputStationary; 2],
+            handoffs: vec![PlannedHandoff {
+                from_stage: 1,
+                to_stage: 0,
+                words_per_interval: 1,
+                intervals: 1,
+                via_gb: false,
+                is_skip: false,
+            }],
+        }],
+    };
+    assert!(plan.validate(&g, &cfg).is_err());
+}

@@ -1,0 +1,210 @@
+//! Cross-module property tests (proptest-lite): invariants of the full
+//! mapping→evaluation stack over randomly generated models, placements and
+//! configurations.
+
+use pipeorgan::baselines::{SimbaLike, TangramLike};
+use pipeorgan::config::{ArchConfig, TopologyKind};
+use pipeorgan::cost::{evaluate, Mapper};
+use pipeorgan::mapper::PipeOrgan;
+use pipeorgan::prop_assert;
+use pipeorgan::spatial::{allocate_pes, Organization, Placement};
+use pipeorgan::util::proptest_lite;
+use pipeorgan::workloads::synthetic::random_model;
+
+#[test]
+fn mappers_produce_valid_costed_plans_on_random_models() {
+    proptest_lite::run(60, |rng| {
+        let g = random_model(rng, 16);
+        let cfg = ArchConfig::default();
+        for mapper in [0, 1, 2] {
+            let plan = match mapper {
+                0 => PipeOrgan::default().plan(&g, &cfg),
+                1 => TangramLike.plan(&g, &cfg),
+                _ => SimbaLike.plan(&g, &cfg),
+            };
+            if let Err(e) = plan.validate(&g, &cfg) {
+                return Err(format!("{} on {}: {e}", plan.mapper_name, g.name));
+            }
+            let cost = evaluate(&g, &plan, &cfg);
+            prop_assert!(
+                cost.cycles.is_finite() && cost.cycles > 0.0,
+                "{}: bad cycles {}",
+                plan.mapper_name,
+                cost.cycles
+            );
+            prop_assert!(cost.energy.is_finite() && cost.energy > 0.0);
+            // A mapped model can never beat its pure-compute lower bound.
+            let lower = g.total_macs() as f64 / cfg.peak_macs_per_cycle() as f64;
+            prop_assert!(
+                cost.cycles >= lower * 0.999,
+                "{}: {} below compute bound {lower}",
+                plan.mapper_name,
+                cost.cycles
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn placements_partition_the_array() {
+    proptest_lite::run(200, |rng| {
+        let rows = rng.gen_usize(2, 33);
+        let cols = rng.gen_usize(2, 33);
+        let stages = rng.gen_usize(1, 6.min(cols + 1));
+        let shares: Vec<usize> = (0..stages).map(|_| rng.gen_usize(1, 10)).collect();
+        let org = *rng.choose(&[
+            Organization::Blocked1D,
+            Organization::FineStriped1D,
+            Organization::Blocked2D,
+            Organization::Checkerboard2D,
+        ]);
+        if org == Organization::Blocked1D && cols < stages {
+            return Ok(()); // cannot band fewer columns than stages
+        }
+        let p = Placement::build(rows, cols, org, &shares);
+        if let Err(e) = p.validate() {
+            return Err(format!("{org:?} {rows}x{cols} {shares:?}: {e}"));
+        }
+        // every PE belongs to at most one stage; totals sum to array size
+        let total: usize = (0..stages).map(|s| p.stage_size(s)).sum();
+        prop_assert!(
+            total + p.idle_pes() == rows * cols,
+            "{org:?}: coverage {total} + idle {} != {}",
+            p.idle_pes(),
+            rows * cols
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn allocation_is_exact_and_monotone() {
+    proptest_lite::run(300, |rng| {
+        let n = rng.gen_usize(1, 8);
+        let mut macs: Vec<u64> = (0..n).map(|_| rng.gen_range(1_000_000) + 1).collect();
+        let total = rng.gen_usize(n, 1024);
+        let alloc = allocate_pes(&macs, total);
+        prop_assert!(alloc.iter().sum::<usize>() == total);
+        prop_assert!(alloc.iter().all(|&a| a >= 1));
+        // a strictly dominant stage gets (within rounding) the largest
+        // allocation
+        let max_mac_idx = (0..n).max_by_key(|&i| macs[i]).unwrap();
+        let max_alloc = *alloc.iter().max().unwrap();
+        prop_assert!(
+            alloc[max_mac_idx] + 1 >= max_alloc,
+            "dominant stage under-allocated: {macs:?} -> {alloc:?}"
+        );
+        macs.sort_unstable();
+        Ok(())
+    });
+}
+
+#[test]
+fn granularity_covers_tensor_for_random_nests() {
+    use pipeorgan::dataflow::{DataflowStyle, LoopNest, Rank};
+    use pipeorgan::ir::Op;
+    use pipeorgan::pipeline::pair_granularity;
+    proptest_lite::run(300, |rng| {
+        let h = rng.gen_usize(2, 64);
+        let c = rng.gen_usize(1, 64);
+        let k = rng.gen_usize(1, 64);
+        let op_p = Op::conv2d(1, h, h, c, k, 3, 3, 1, 1);
+        let op_c = Op::conv2d(1, h, h, k, c, 3, 3, 1, 1);
+        let styles = [
+            DataflowStyle::ActivationStationary,
+            DataflowStyle::MixedActivation,
+            DataflowStyle::InputStationary,
+            DataflowStyle::OutputStationary,
+            DataflowStyle::WeightStationary,
+        ];
+        let mut np = LoopNest::for_op(&op_p, *rng.choose(&styles));
+        let mut nc = LoopNest::for_op(&op_c, *rng.choose(&styles));
+        if rng.gen_bool(0.5) {
+            np.set_tile(Rank::H, rng.gen_range(8) + 1);
+            nc.set_tile(Rank::H, rng.gen_range(8) + 1);
+        }
+        let total = op_p.output_act_words();
+        let g = pair_granularity(&np, &nc, total);
+        prop_assert!(g.words >= 1 && g.words <= total);
+        prop_assert!(
+            g.words * g.intervals >= total,
+            "granularity {}x{} misses tensor {total}",
+            g.words,
+            g.intervals
+        );
+        prop_assert!(
+            g.words.saturating_sub(1) * g.intervals < total,
+            "granularity not tight: {}x{} vs {total}",
+            g.words,
+            g.intervals
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn channel_load_invariants_on_random_traffic() {
+    use pipeorgan::noc::Topology;
+    use pipeorgan::sim::analyze;
+    use pipeorgan::traffic::{Flow, FlowClass};
+    proptest_lite::run(100, |rng| {
+        let kind = *rng.choose(&[
+            TopologyKind::Mesh,
+            TopologyKind::Amp,
+            TopologyKind::Torus,
+            TopologyKind::FlattenedButterfly,
+        ]);
+        let rows = rng.gen_usize(2, 17);
+        let cols = rng.gen_usize(2, 17);
+        let topo = Topology::new(kind, rows, cols);
+        let n_flows = rng.gen_usize(1, 64);
+        let mut flows = Vec::new();
+        let mut total_words = 0.0;
+        for _ in 0..n_flows {
+            let src = rng.gen_usize(0, rows * cols) as u32;
+            let dst = rng.gen_usize(0, rows * cols) as u32;
+            if src == dst {
+                continue;
+            }
+            let words = (rng.gen_range(100) + 1) as f64;
+            total_words += words;
+            flows.push(Flow {
+                src,
+                dst,
+                words_per_interval: words,
+                class: FlowClass::Pipeline {
+                    from_stage: 0,
+                    to_stage: 1,
+                },
+            });
+        }
+        let a = analyze(&topo, &flows);
+        // worst link carries at most all traffic, at least the mean
+        prop_assert!(a.worst_channel_load <= total_words + 1e-6);
+        let per_link_sum: f64 = a.per_link_words.iter().sum();
+        prop_assert!(
+            (per_link_sum - a.total_word_hops).abs() < 1e-6 * per_link_sum.max(1.0),
+            "per-link sum {per_link_sum} != word-hops {}",
+            a.total_word_hops
+        );
+        // wire length ≥ hops on mesh (unit links), ≥ hops on AMP too
+        prop_assert!(a.total_word_wire + 1e-6 >= a.total_word_hops || flows.is_empty());
+        Ok(())
+    });
+}
+
+#[test]
+fn depth_cap_caps_and_flexible_dominates() {
+    proptest_lite::run(40, |rng| {
+        let g = random_model(rng, 14);
+        let cfg = ArchConfig::default();
+        let cap = rng.gen_usize(1, 6);
+        let capped = PipeOrgan::with_depth_cap(cap).plan(&g, &cfg);
+        prop_assert!(
+            capped.segments.iter().all(|s| s.depth() <= cap),
+            "segment exceeds cap {cap}"
+        );
+        Ok(())
+    });
+}

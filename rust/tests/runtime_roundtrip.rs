@@ -1,0 +1,89 @@
+//! Integration tests over the PJRT runtime + functional pipelined executor.
+//! These need `artifacts/` (built by `make artifacts`); they are skipped
+//! with a notice when the artifacts are absent so `cargo test` stays green
+//! on a fresh checkout.
+
+use pipeorgan::coordinator as coord;
+use pipeorgan::runtime::Runtime;
+
+fn artifacts() -> Option<&'static str> {
+    const DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(DIR).join("manifest.json").exists() {
+        Some(DIR)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_describes_all_programs() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let m = rt.manifest().unwrap();
+    for name in [
+        "segment_fused",
+        "layer0",
+        "layer1",
+        "tile_layer0",
+        "tile_layer1",
+        "gemm",
+    ] {
+        assert!(m.program(name).is_some(), "missing {name}");
+    }
+    assert_eq!(m.segment.h % m.segment.band, 0);
+}
+
+#[test]
+fn gemm_artifact_matches_host_matmul() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let prog = rt.load_program("gemm").unwrap();
+    let n = 64usize;
+    let a: Vec<f32> = (0..n * n).map(|i| ((i * 13 + 7) % 11) as f32 * 0.1).collect();
+    let b: Vec<f32> = (0..n * n).map(|i| ((i * 5 + 3) % 9) as f32 * 0.1).collect();
+    let got = prog.run_f32(&[&a, &b]).unwrap();
+    for &(r, c) in &[(0usize, 0usize), (5, 9), (31, 63), (63, 1)] {
+        let want: f32 = (0..n).map(|k| a[r * n + k] * b[k * n + c]).sum();
+        assert!(
+            (got[r * n + c] - want).abs() < 1e-3,
+            "({r},{c}): got {} want {want}",
+            got[r * n + c]
+        );
+    }
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let prog = rt.load_program("gemm").unwrap();
+    let too_small = vec![0f32; 16];
+    assert!(prog.run_f32(&[&too_small, &too_small]).is_err());
+    let ok = vec![0f32; 64 * 64];
+    assert!(prog.run_f32(&[&ok]).is_err(), "arity check");
+}
+
+#[test]
+fn pipelined_equals_fused_equals_op_by_op() {
+    // E15 acceptance: the three execution modes agree numerically.
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let data = coord::SegmentData::random(rt.manifest().unwrap().segment, 7);
+    let op = coord::run_op_by_op(dir, &data).unwrap();
+    let fused = coord::run_fused(dir, &data).unwrap();
+    let piped = coord::run_pipelined(dir, &data).unwrap();
+    assert!(coord::compare_outputs(&op, &fused).unwrap() < 1e-3);
+    assert!(coord::compare_outputs(&op, &piped).unwrap() < 1e-3);
+    assert_eq!(piped.tiles, data.spec.h / data.spec.band);
+}
+
+#[test]
+fn pipelined_is_deterministic_across_runs() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let data = coord::SegmentData::random(rt.manifest().unwrap().segment, 99);
+    let a = coord::run_pipelined(dir, &data).unwrap();
+    let b = coord::run_pipelined(dir, &data).unwrap();
+    assert_eq!(a.output, b.output);
+}

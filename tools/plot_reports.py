@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Plot the reproduced paper figures from reports/*.json.
+
+Usage: python tools/plot_reports.py [reports_dir] [out_dir]
+
+Produces PNG counterparts of the paper's evaluation figures:
+  fig13_performance.png  — grouped bars, normalized performance per task
+  fig14_dram.png         — grouped bars, normalized DRAM accesses
+  fig15_congestion.png   — delay factor vs compute interval (log-x)
+  fig16_depth.png        — depth profile per task
+  fig5_aw_ratios.png     — per-task A/W ratio ranges (log-y)
+"""
+
+import json
+import os
+import sys
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+import numpy as np
+
+
+def load(reports, name):
+    path = os.path.join(reports, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def short(task):
+    return task.replace("_", "\n")
+
+
+def plot_fig13(reports, out):
+    data = load(reports, "fig13_performance")
+    if not data:
+        return
+    rows = data["rows"]
+    tasks = [r["task"] for r in rows]
+    x = np.arange(len(tasks))
+    w = 0.27
+    fig, ax = plt.subplots(figsize=(11, 4))
+    ax.bar(x - w, [r["pipeorgan"] for r in rows], w, label="PipeOrgan")
+    ax.bar(x, [1.0] * len(rows), w, label="TANGRAM-like")
+    ax.bar(x + w, [r["simba_like"] for r in rows], w, label="SIMBA-like")
+    ax.axhline(1.0, color="gray", lw=0.5)
+    ax.set_xticks(x)
+    ax.set_xticklabels([short(t) for t in tasks], fontsize=7)
+    ax.set_ylabel("normalized performance (higher = better)")
+    ax.set_title(
+        f"Fig. 13 — end-to-end performance "
+        f"(geomean PipeOrgan {data['geomean_pipeorgan_vs_tangram']:.2f}x; paper 1.95x)"
+    )
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig13_performance.png"), dpi=150)
+    plt.close(fig)
+
+
+def plot_fig14(reports, out):
+    data = load(reports, "fig14_dram")
+    if not data:
+        return
+    rows = data["rows"]
+    tasks = [r["task"] for r in rows]
+    x = np.arange(len(tasks))
+    w = 0.27
+    fig, ax = plt.subplots(figsize=(11, 4))
+    ax.bar(x - w, [r["pipeorgan"] for r in rows], w, label="PipeOrgan")
+    ax.bar(x, [1.0] * len(rows), w, label="TANGRAM-like")
+    ax.bar(x + w, [r["simba_like"] for r in rows], w, label="SIMBA-like")
+    ax.set_xticks(x)
+    ax.set_xticklabels([short(t) for t in tasks], fontsize=7)
+    ax.set_ylabel("normalized DRAM accesses (lower = better)")
+    ax.set_title(
+        f"Fig. 14 — DRAM accesses "
+        f"(geomean reduction {100 * data['geomean_reduction']:.0f}%; paper 31%)"
+    )
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig14_dram.png"), dpi=150)
+    plt.close(fig)
+
+
+def plot_fig15(reports, out):
+    data = load(reports, "fig15_congestion")
+    if not data:
+        return
+    rows = [r for r in data["rows"] if r["alloc"] == "equal"]
+    xs = [r["compute_interval"] for r in rows]
+    fig, ax = plt.subplots(figsize=(6, 4))
+    for key, label in [
+        ("blocked_mesh", "blocked / mesh"),
+        ("fine1d_mesh", "fine-striped 1-D / mesh"),
+        ("blocked_amp", "blocked / AMP"),
+    ]:
+        ax.plot(xs, [r[key] for r in rows], marker="o", label=label)
+    ax.set_xscale("log", base=2)
+    ax.set_xlabel("compute interval (cycles)")
+    ax.set_ylabel("interval delay factor")
+    ax.set_title("Fig. 15 — congestion vs compute interval (depth-2, 1-D, 32x32)")
+    ax.legend()
+    ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig15_congestion.png"), dpi=150)
+    plt.close(fig)
+
+
+def plot_fig16(reports, out):
+    data = load(reports, "fig16_depth")
+    if not data:
+        return
+    fig, ax = plt.subplots(figsize=(10, 4))
+    for i, t in enumerate(data["tasks"]):
+        depths = t["depths"]
+        # expand segment depths to per-layer positions
+        layers = []
+        for d in depths:
+            layers.extend([d] * int(d))
+        ax.step(range(len(layers)), layers, where="post", label=t["task"], alpha=0.8)
+    ax.set_xlabel("layer index")
+    ax.set_ylabel("segment depth")
+    ax.set_title("Fig. 16 — pipeline depths across tasks")
+    ax.legend(fontsize=6, ncol=3)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig16_depth.png"), dpi=150)
+    plt.close(fig)
+
+
+def plot_fig5(reports, out):
+    data = load(reports, "fig5_aw_ratios")
+    if not data:
+        return
+    fig, ax = plt.subplots(figsize=(10, 4))
+    for i, t in enumerate(data["tasks"]):
+        ratios = np.array(t["ratios"])
+        ax.scatter([i] * len(ratios), ratios, s=8, alpha=0.5)
+    ax.set_yscale("log")
+    ax.axhline(1.0, color="gray", lw=0.5)
+    ax.set_xticks(range(len(data["tasks"])))
+    ax.set_xticklabels([short(t["task"]) for t in data["tasks"]], fontsize=7)
+    ax.set_ylabel("activation / weight ratio (log)")
+    ax.set_title("Fig. 5 — A/W ratios across XR-bench-like tasks")
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig5_aw_ratios.png"), dpi=150)
+    plt.close(fig)
+
+
+def main():
+    reports = sys.argv[1] if len(sys.argv) > 1 else "reports"
+    out = sys.argv[2] if len(sys.argv) > 2 else reports
+    os.makedirs(out, exist_ok=True)
+    for fn in (plot_fig13, plot_fig14, plot_fig15, plot_fig16, plot_fig5):
+        fn(reports, out)
+        print(f"{fn.__name__} done")
+
+
+if __name__ == "__main__":
+    main()
