@@ -1,5 +1,5 @@
 //! §Perf microbenchmarks: the simulator hot paths the optimization pass
-//! (EXPERIMENTS.md §Perf) tracks — routing, channel-load accumulation,
+//! (DESIGN.md §Perf) tracks — routing, channel-load accumulation,
 //! cycle-level simulation, full mapper plan+evaluate, and the parallel
 //! zoo sweep.
 mod common;

@@ -1,21 +1,34 @@
 //! `key = value` config-file syntax: one assignment per line, `#` comments,
 //! blank lines ignored. (serde/toml substitute — see DESIGN.md §2.)
 
-use thiserror::Error;
-
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {line}: expected `key = value`, got `{text}`")]
     Syntax { line: usize, text: String },
-    #[error("line {line}: unknown key `{key}`")]
     UnknownKey { line: usize, key: String },
-    #[error("line {line}: bad value for `{key}`: {why}")]
     BadValue {
         line: usize,
         key: String,
         why: String,
     },
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Syntax { line, text } => {
+                write!(f, "line {line}: expected `key = value`, got `{text}`")
+            }
+            ConfigError::UnknownKey { line, key } => {
+                write!(f, "line {line}: unknown key `{key}`")
+            }
+            ConfigError::BadValue { line, key, why } => {
+                write!(f, "line {line}: bad value for `{key}`: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Parse to `(key, value, line_number)` triples; values keep inner spaces
 /// but are trimmed at the ends. Inline `#` comments are stripped.

@@ -48,41 +48,59 @@ pub struct EvalOutcome {
     pub mean_depth: f64,
 }
 
-/// Run all jobs over `workers` threads (order of results matches jobs).
-pub fn run_jobs(jobs: Vec<EvalJob>, workers: usize) -> Vec<EvalOutcome> {
-    let n = jobs.len();
-    let queue = Arc::new(Mutex::new(
-        jobs.into_iter().enumerate().collect::<Vec<_>>(),
-    ));
-    let (tx, rx) = mpsc::channel::<(usize, EvalOutcome)>();
-    let workers = workers.max(1).min(n.max(1));
+/// Generic order-preserving worker pool: run every task through `f` on up
+/// to `workers` scoped threads and return the results in task order.
+///
+/// This is the one thread-fanout primitive of the crate — the (task ×
+/// mapper) sweep of [`run_jobs`] and the per-topology searches of
+/// `dse::explore` both ride on it, so parallel behavior (work stealing off
+/// a shared queue, result reordering, panic propagation at scope exit)
+/// stays identical everywhere.
+pub fn run_queue<T, R, F>(tasks: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let queue = Mutex::new(tasks.into_iter().enumerate().collect::<Vec<_>>());
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let workers = workers.max(1).min(n);
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            let queue = Arc::clone(&queue);
             let tx = tx.clone();
+            let queue = &queue;
+            let f = &f;
             scope.spawn(move || loop {
-                let job = { queue.lock().unwrap().pop() };
-                let Some((idx, job)) = job else { break };
-                let mapper = job.mapper.instantiate();
-                let plan = mapper.plan(&job.graph, &job.cfg);
-                let cost = evaluate(&job.graph, &plan, &job.cfg);
-                let _ = tx.send((
-                    idx,
-                    EvalOutcome {
-                        task: job.graph.name.clone(),
-                        mapper_name: plan.mapper_name.clone(),
-                        cost,
-                        mean_depth: plan.mean_depth(),
-                    },
-                ));
+                let task = { queue.lock().unwrap().pop() };
+                let Some((idx, task)) = task else { break };
+                let _ = tx.send((idx, f(task)));
             });
         }
         drop(tx);
-        let mut out: Vec<Option<EvalOutcome>> = (0..n).map(|_| None).collect();
-        for (idx, outcome) in rx {
-            out[idx] = Some(outcome);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (idx, r) in rx {
+            out[idx] = Some(r);
         }
-        out.into_iter().map(|o| o.expect("job lost")).collect()
+        out.into_iter().map(|o| o.expect("task lost")).collect()
+    })
+}
+
+/// Run all jobs over `workers` threads (order of results matches jobs).
+pub fn run_jobs(jobs: Vec<EvalJob>, workers: usize) -> Vec<EvalOutcome> {
+    run_queue(jobs, workers, |job: EvalJob| {
+        let mapper = job.mapper.instantiate();
+        let plan = mapper.plan(&job.graph, &job.cfg);
+        let cost = evaluate(&job.graph, &plan, &job.cfg);
+        EvalOutcome {
+            task: job.graph.name.clone(),
+            mapper_name: plan.mapper_name.clone(),
+            cost,
+            mean_depth: plan.mean_depth(),
+        }
     })
 }
 
@@ -111,6 +129,28 @@ mod tests {
             assert_eq!(p.cost.cycles, s.cost.cycles);
             assert_eq!(p.cost.dram_words, s.cost.dram_words);
         }
+    }
+
+    #[test]
+    fn run_queue_preserves_order_and_runs_everything() {
+        let tasks: Vec<usize> = (0..37).collect();
+        let out = run_queue(tasks, 5, |x| x * 2);
+        assert_eq!(out, (0..37).map(|x| x * 2).collect::<Vec<_>>());
+        assert!(run_queue(Vec::<usize>::new(), 4, |x| x).is_empty());
+        // degenerate worker counts clamp instead of hanging
+        assert_eq!(run_queue(vec![1, 2], 0, |x| x + 1), vec![2, 3]);
+    }
+
+    #[test]
+    fn run_queue_shares_state_through_sync_closures() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        let out = run_queue((0..100).collect::<Vec<usize>>(), 8, |x| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(out.len(), 100);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! Memoized segment-cost cache.
+//!
+//! Candidate partitions overlap heavily: the segment `[i, i+d)` under a
+//! given organization, granularity scale and topology appears in every
+//! partition that cuts at `i` and `i+d`. Costing it once and sharing the
+//! result across the whole search (and across searches — the cache is
+//! caller-owned) is what makes exhaustive enumeration tractable; the
+//! `benches/dse_search.rs` microbench tracks the warm-vs-cold win.
+//!
+//! The map is sharded 16 ways so parallel per-topology searches rarely
+//! contend, and hit/miss counters double as the search-budget meter.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::cost::SegmentCost;
+use crate::ir::ModelGraph;
+use crate::spatial::Organization;
+
+/// Cache coordinates of one evaluated segment:
+/// `(workload/config fingerprint, start, depth, organization, granularity
+/// scale, topology)`. The leading fingerprint ([`context_fingerprint`])
+/// makes it safe to share one caller-owned cache across workloads and
+/// architecture configs — without it, segment `(0, 1, Sequential, 1, Amp)`
+/// of two different models would collide silently.
+pub type SegmentKey = (u64, usize, usize, Organization, u64, TopologyKind);
+
+/// Fingerprint of the (workload, architecture) evaluation context a
+/// [`SegmentKey`] is scoped to. Hashes the full per-layer structure (order
+/// matters — segment coordinates are positional) and the edge list, not
+/// just aggregates, so structurally different graphs never share keys.
+pub fn context_fingerprint(graph: &ModelGraph, cfg: &ArchConfig) -> u64 {
+    let mut h = DefaultHasher::new();
+    graph.name.hash(&mut h);
+    graph.num_layers().hash(&mut h);
+    for layer in graph.layers() {
+        layer.name.hash(&mut h);
+        layer.macs().hash(&mut h);
+        layer.weight_words().hash(&mut h);
+        layer.input_act_words().hash(&mut h);
+        layer.output_act_words().hash(&mut h);
+        layer.is_complex().hash(&mut h);
+    }
+    for edge in graph.edges() {
+        edge.src.hash(&mut h);
+        edge.dst.hash(&mut h);
+    }
+    // ArchConfig holds f64s, so hash its canonical JSON rendering.
+    cfg.to_json().to_string().hash(&mut h);
+    h.finish()
+}
+
+const SHARDS: usize = 16;
+
+/// Hit/miss counters of an [`EvalCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// Sharded memoization table for segment evaluations.
+pub struct EvalCache {
+    shards: Vec<Mutex<HashMap<SegmentKey, SegmentCost>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &SegmentKey) -> &Mutex<HashMap<SegmentKey, SegmentCost>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// Return the cached cost for `key`, or compute it with `eval`, insert,
+    /// and return it. `eval` runs *outside* the shard lock so parallel
+    /// searches never serialize on shard collisions; the miss counter
+    /// counts distinct inserted keys (exact in sequential runs — budgeted
+    /// searches are sequential, so the budget meter stays precise; a rare
+    /// concurrent duplicate evaluation under contention is benign and
+    /// counted as a hit).
+    pub fn get_or_eval(
+        &self,
+        key: SegmentKey,
+        eval: impl FnOnce() -> SegmentCost,
+    ) -> SegmentCost {
+        let shard = self.shard(&key);
+        if let Some(cost) = shard.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return cost.clone();
+        }
+        let cost = eval();
+        let mut map = shard.lock().unwrap();
+        if let Some(existing) = map.get(&key) {
+            // Another thread won the race; its value is identical.
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return existing.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        map.insert(key, cost.clone());
+        cost
+    }
+
+    /// Peek without evaluating (used by tests).
+    pub fn get(&self, key: &SegmentKey) -> Option<SegmentCost> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of distinct evaluated keys.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(start: usize, scale: u64) -> SegmentKey {
+        (
+            0xC0FFEE,
+            start,
+            2,
+            Organization::FineStriped1D,
+            scale,
+            TopologyKind::Mesh,
+        )
+    }
+
+    fn cost(cycles: f64) -> SegmentCost {
+        SegmentCost {
+            pipeline_cycles: cycles,
+            noc_cycles: 0.0,
+            gb_cycles: 0.0,
+            dram_cycles: 0.0,
+            cycles,
+            dram_words: 1,
+            worst_channel_load_per_interval: 0.0,
+            bottleneck_compute_interval: 1.0,
+            energy: 1.0,
+            noc_energy: 0.0,
+        }
+    }
+
+    #[test]
+    fn misses_then_hits() {
+        let c = EvalCache::new();
+        let a = c.get_or_eval(key(0, 1), || cost(10.0));
+        assert_eq!(a.cycles, 10.0);
+        // Second lookup must not re-evaluate.
+        let b = c.get_or_eval(key(0, 1), || panic!("re-evaluated"));
+        assert_eq!(b.cycles, 10.0);
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_are_distinct_entries() {
+        let c = EvalCache::new();
+        for i in 0..100 {
+            c.get_or_eval(key(i, 1), || cost(i as f64));
+            c.get_or_eval(key(i, 4), || cost(i as f64 + 0.5));
+        }
+        assert_eq!(c.len(), 200);
+        assert_eq!(c.stats().misses, 200);
+        assert_eq!(c.get(&key(7, 4)).unwrap().cycles, 7.5);
+        assert!(c.get(&key(7, 16)).is_none());
+    }
+
+    #[test]
+    fn different_contexts_never_collide() {
+        let c = EvalCache::new();
+        let (ctx_a, rest) = (1u64, key(0, 1));
+        let a = (ctx_a, rest.1, rest.2, rest.3, rest.4, rest.5);
+        let b = (2u64, rest.1, rest.2, rest.3, rest.4, rest.5);
+        c.get_or_eval(a, || cost(1.0));
+        let got = c.get_or_eval(b, || cost(2.0));
+        assert_eq!(got.cycles, 2.0, "same coordinates, different context");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn context_fingerprint_separates_workloads_and_configs() {
+        use crate::workloads::synthetic;
+        let cfg = ArchConfig::default();
+        let g1 = synthetic::equal_conv_segment(3);
+        let g2 = synthetic::pointwise_conv_segment(3);
+        assert_ne!(
+            context_fingerprint(&g1, &cfg),
+            context_fingerprint(&g2, &cfg)
+        );
+        let small = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        assert_ne!(
+            context_fingerprint(&g1, &cfg),
+            context_fingerprint(&g1, &small)
+        );
+        // Deterministic for the same inputs.
+        assert_eq!(
+            context_fingerprint(&g1, &cfg),
+            context_fingerprint(&g1, &cfg)
+        );
+    }
+
+    #[test]
+    fn context_fingerprint_is_layer_order_sensitive() {
+        // Same name, same layer multiset, same aggregates — different
+        // order must still get distinct keys (coordinates are positional).
+        use crate::ir::{Layer, ModelGraph, Op};
+        let small = Op::conv2d(1, 8, 8, 4, 4, 3, 3, 1, 1);
+        let big = Op::conv2d(1, 8, 8, 4, 16, 3, 3, 1, 1);
+        let mut ab = ModelGraph::new("twin");
+        ab.add_root(Layer::new("a", small.clone()));
+        ab.push(Layer::new("b", big.clone()));
+        let mut ba = ModelGraph::new("twin");
+        ba.add_root(Layer::new("b", big));
+        ba.push(Layer::new("a", small));
+        let cfg = ArchConfig::default();
+        assert_ne!(
+            context_fingerprint(&ab, &cfg),
+            context_fingerprint(&ba, &cfg)
+        );
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let s = CacheStats { hits: 3, misses: 1 };
+        assert_eq!(s.lookups(), 4);
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let c = EvalCache::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for i in 0..50 {
+                        c.get_or_eval(key(i, 1), || cost(i as f64));
+                    }
+                });
+            }
+        });
+        // 50 distinct keys, 200 lookups: every key evaluated exactly once.
+        assert_eq!(c.len(), 50);
+        let s = c.stats();
+        assert_eq!(s.misses, 50);
+        assert_eq!(s.lookups(), 200);
+    }
+}

@@ -1,0 +1,235 @@
+//! Design-space exploration (DSE) over the inter-operator pipelining
+//! mapping space (see DESIGN.md §6).
+//!
+//! The paper's observation is that the pipelining design space — depth ×
+//! granularity × spatial organization × interconnect — is huge and shape-
+//! dependent, and the closed-form heuristics of Sec. IV only cover a slice
+//! of it. This subsystem searches the space directly so the heuristic can
+//! be measured against a true optimum:
+//!
+//! - [`space`]: enumerate candidate segments — every contiguous layer
+//!   partition up to a depth cap, crossed with a granularity ladder
+//!   (powers of 4 over the Algorithm-1 finest granularity) and the oracle
+//!   organization candidates, on each NoC topology;
+//! - [`cache`]: a sharded, memoized evaluation cache so a sub-plan shared
+//!   by many candidate partitions is costed through `cost::evaluate_segment`
+//!   exactly once;
+//! - [`search`]: exhaustive and beam-width-bounded multi-objective dynamic
+//!   programming over segment boundaries (per-segment costs are additive,
+//!   so Pareto-optimal plans have Pareto-optimal prefixes);
+//! - [`pareto`]: extraction of the latency/energy/DRAM-traffic frontier.
+//!
+//! The searched frontier is seeded with the heuristic mapper's plan
+//! whenever its topology is inside the searched set (always true for the
+//! default configuration), so the reported best is never costlier than the
+//! heuristic — the gap between the two is exactly what `report::dse_gap`
+//! tabulates. Restricting `--topologies` to exclude the heuristic's NoC
+//! keeps the frontier inside the restriction; the gap may then honestly
+//! drop below 1.
+
+mod cache;
+mod pareto;
+mod search;
+mod space;
+
+pub use cache::{context_fingerprint, CacheStats, EvalCache, SegmentKey};
+pub use pareto::{dominates, pareto_filter, ParetoPoint};
+pub use search::{explore, DseResult, PlanPoint};
+pub use space::{legal_depths, segment_candidates, CandidateSegment};
+
+use crate::config::TopologyKind;
+
+/// Search strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchStrategy {
+    /// Exact multi-objective DP (Pareto sets bounded only by
+    /// [`DseConfig::max_labels`]).
+    Exhaustive,
+    /// DP with each boundary's label set truncated to
+    /// [`DseConfig::beam_width`] labels (kept in ascending latency, so the
+    /// latency-optimal prefix always survives).
+    Beam,
+}
+
+impl SearchStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchStrategy::Exhaustive => "exhaustive",
+            SearchStrategy::Beam => "beam",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SearchStrategy> {
+        match s {
+            "exhaustive" => Some(SearchStrategy::Exhaustive),
+            "beam" => Some(SearchStrategy::Beam),
+            _ => None,
+        }
+    }
+}
+
+/// Knobs of one DSE run. CLI flags map 1:1 onto these (see [`DSE_FLAGS`]).
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    pub strategy: SearchStrategy,
+    /// Labels kept per segment boundary under [`SearchStrategy::Beam`].
+    pub beam_width: usize,
+    /// Maximum segment depth enumerated (further capped by
+    /// `ArchConfig::max_pipeline_depth`).
+    pub depth_cap: usize,
+    /// Granularity-ladder rungs per handoff (rung r scales the finest
+    /// granularity by `4^r`; the ladder stops early once handoffs
+    /// saturate at whole-tensor).
+    pub ladder_rungs: usize,
+    /// NoC topologies searched (the plan-level axis of the space).
+    pub topologies: Vec<TopologyKind>,
+    /// Optional cap on cost-model evaluations (cache misses). Once
+    /// exhausted, enumeration narrows to the heuristic variant per segment
+    /// so the search still completes with valid plans.
+    pub budget: Option<u64>,
+    /// Safety cap on per-boundary Pareto sets under
+    /// [`SearchStrategy::Exhaustive`].
+    pub max_labels: usize,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        Self {
+            strategy: SearchStrategy::Beam,
+            beam_width: 8,
+            depth_cap: 8,
+            ladder_rungs: 4,
+            topologies: vec![
+                TopologyKind::Amp,
+                TopologyKind::Mesh,
+                TopologyKind::FlattenedButterfly,
+                TopologyKind::Torus,
+            ],
+            budget: None,
+            max_labels: 256,
+        }
+    }
+}
+
+impl DseConfig {
+    /// A reduced configuration for tests and smoke runs: beam search over
+    /// the two headline topologies with a shallow depth cap.
+    pub fn quick() -> Self {
+        Self {
+            strategy: SearchStrategy::Beam,
+            beam_width: 6,
+            depth_cap: 4,
+            ladder_rungs: 2,
+            topologies: vec![TopologyKind::Amp, TopologyKind::Mesh],
+            budget: None,
+            max_labels: 64,
+        }
+    }
+
+    /// Build from parsed CLI flags (the `dse` subcommand).
+    pub fn from_cli(args: &crate::cli::Args) -> Result<DseConfig, String> {
+        let mut dse = DseConfig::default();
+        if let Some(s) = args.get("strategy") {
+            dse.strategy = SearchStrategy::from_name(s)
+                .ok_or_else(|| format!("unknown strategy `{s}` (expected `beam` or `exhaustive`)"))?;
+        }
+        dse.beam_width = args.get_usize("beam", dse.beam_width)?.max(1);
+        dse.depth_cap = args.get_usize("depth-cap", dse.depth_cap)?.max(1);
+        dse.ladder_rungs = args.get_usize("rungs", dse.ladder_rungs)?.max(1);
+        if args.has("budget") {
+            dse.budget = Some(args.get_usize("budget", 0)? as u64);
+        }
+        if let Some(list) = args.get("topologies") {
+            let mut topos = Vec::new();
+            for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                topos.push(
+                    TopologyKind::from_name(name)
+                        .ok_or_else(|| format!("unknown topology `{name}`"))?,
+                );
+            }
+            if topos.is_empty() {
+                return Err("flag `--topologies` lists no topologies".into());
+            }
+            dse.topologies = topos;
+        }
+        Ok(dse)
+    }
+}
+
+/// Flags accepted by the `dse` subcommand on top of the global ones
+/// (`(name, takes_value)` — the `cli::Args` strict-flag table format).
+pub const DSE_FLAGS: &[(&str, bool)] = &[
+    ("workload", true),
+    ("strategy", true),
+    ("beam", true),
+    ("depth-cap", true),
+    ("rungs", true),
+    ("budget", true),
+    ("topologies", true),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Args;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn parse_dse(v: &[&str]) -> Result<DseConfig, String> {
+        let mut flags: Vec<(&str, bool)> = vec![("out", true), ("workers", true)];
+        flags.extend_from_slice(DSE_FLAGS);
+        let args = Args::parse(&s(v), &flags)?;
+        DseConfig::from_cli(&args)
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let d = DseConfig::default();
+        assert!(d.beam_width >= 1 && d.depth_cap >= 1 && d.ladder_rungs >= 1);
+        assert!(!d.topologies.is_empty());
+        assert_eq!(d.strategy, SearchStrategy::Beam);
+    }
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for st in [SearchStrategy::Exhaustive, SearchStrategy::Beam] {
+            assert_eq!(SearchStrategy::from_name(st.name()), Some(st));
+        }
+        assert_eq!(SearchStrategy::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn cli_flags_parse_into_config() {
+        let d = parse_dse(&[
+            "dse",
+            "--strategy",
+            "exhaustive",
+            "--beam",
+            "12",
+            "--depth-cap",
+            "6",
+            "--budget",
+            "500",
+            "--topologies",
+            "amp,mesh",
+        ])
+        .unwrap();
+        assert_eq!(d.strategy, SearchStrategy::Exhaustive);
+        assert_eq!(d.beam_width, 12);
+        assert_eq!(d.depth_cap, 6);
+        assert_eq!(d.budget, Some(500));
+        assert_eq!(
+            d.topologies,
+            vec![TopologyKind::Amp, TopologyKind::Mesh]
+        );
+    }
+
+    #[test]
+    fn bad_strategy_and_topology_rejected() {
+        assert!(parse_dse(&["dse", "--strategy", "dfs"]).is_err());
+        assert!(parse_dse(&["dse", "--topologies", "ring"]).is_err());
+        assert!(parse_dse(&["dse", "--topologies", ""]).is_err());
+    }
+}

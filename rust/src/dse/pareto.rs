@@ -1,0 +1,114 @@
+//! Pareto-frontier extraction over the three reported objectives:
+//! latency (cycles), energy, and DRAM traffic — all minimized.
+
+/// Anything with a fixed objective vector (smaller is better on every
+/// axis).
+pub trait ParetoPoint {
+    fn objectives(&self) -> [f64; 3];
+}
+
+/// `a` dominates `b`: no worse everywhere, strictly better somewhere.
+pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b.iter()) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Keep the non-dominated subset of `points` (exact duplicates collapse to
+/// one), returned in ascending order of the first objective.
+pub fn pareto_filter<T: ParetoPoint>(points: Vec<T>) -> Vec<T> {
+    let mut points = points;
+    points.sort_by(|a, b| {
+        a.objectives()
+            .partial_cmp(&b.objectives())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut kept: Vec<T> = Vec::new();
+    'next: for p in points {
+        let po = p.objectives();
+        for k in &kept {
+            let ko = k.objectives();
+            if ko == po || dominates(&ko, &po) {
+                continue 'next;
+            }
+        }
+        kept.retain(|k| !dominates(&po, &k.objectives()));
+        kept.push(p);
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone, PartialEq)]
+    struct P([f64; 3]);
+
+    impl ParetoPoint for P {
+        fn objectives(&self) -> [f64; 3] {
+            self.0
+        }
+    }
+
+    #[test]
+    fn dominance_rules() {
+        assert!(dominates(&[1.0, 1.0, 1.0], &[2.0, 1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0])); // equal
+        assert!(!dominates(&[1.0, 3.0, 1.0], &[2.0, 1.0, 1.0])); // trade-off
+    }
+
+    #[test]
+    fn filter_keeps_tradeoffs_drops_dominated() {
+        let pts = vec![
+            P([3.0, 1.0, 2.0]),
+            P([1.0, 3.0, 2.0]),
+            P([2.0, 2.0, 2.0]),
+            P([3.0, 3.0, 3.0]), // dominated by all three above
+        ];
+        let f = pareto_filter(pts);
+        assert_eq!(f.len(), 3);
+        // ascending by first objective
+        assert!(f.windows(2).all(|w| w[0].0[0] <= w[1].0[0]));
+        assert!(!f.contains(&P([3.0, 3.0, 3.0])));
+    }
+
+    #[test]
+    fn duplicates_collapse() {
+        let f = pareto_filter(vec![P([1.0, 1.0, 1.0]), P([1.0, 1.0, 1.0])]);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn single_and_empty() {
+        assert!(pareto_filter(Vec::<P>::new()).is_empty());
+        assert_eq!(pareto_filter(vec![P([5.0, 5.0, 5.0])]).len(), 1);
+    }
+
+    #[test]
+    fn no_point_dominates_another_in_output() {
+        let pts: Vec<P> = (0..50)
+            .map(|i| {
+                let x = (i * 7 % 13) as f64;
+                let y = (i * 11 % 17) as f64;
+                P([x, y, (x + y) % 5.0])
+            })
+            .collect();
+        let f = pareto_filter(pts);
+        for a in &f {
+            for b in &f {
+                assert!(
+                    std::ptr::eq(a, b) || !dominates(&a.objectives(), &b.objectives()),
+                    "{a:?} dominates {b:?}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,473 @@
+//! The search engines: exhaustive and beam multi-objective dynamic
+//! programming over segment boundaries.
+//!
+//! Per-segment costs are additive across a plan (`cost::evaluate` sums
+//! them), so the principle of optimality holds per objective *and* for the
+//! Pareto set: a plan with a dominated prefix is itself dominated. The DP
+//! therefore keeps, at every layer boundary, the Pareto set of prefix
+//! labels (truncated to the beam width under `SearchStrategy::Beam`; the
+//! minimum-latency prefix always survives truncation, so beam search is
+//! exact for the latency objective whenever the depth cap covers the
+//! optimum).
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::coordinator::run_queue;
+use crate::cost::{evaluate, evaluate_segment, MappingPlan};
+use crate::energy::EnergyModel;
+use crate::ir::ModelGraph;
+use crate::mapper::PipeOrgan;
+use crate::noc::Topology;
+use crate::pipeline::Segment;
+use crate::spatial::Organization;
+
+use super::cache::EvalCache;
+use super::pareto::{pareto_filter, ParetoPoint};
+use super::space;
+use super::{DseConfig, SearchStrategy};
+
+/// A full plan with its objective vector, as returned by the search.
+#[derive(Debug, Clone)]
+pub struct PlanPoint {
+    pub plan: MappingPlan,
+    pub cycles: f64,
+    pub energy: f64,
+    pub dram_words: u64,
+    /// `"search"` for explored points, `"heuristic"` for the seeded
+    /// heuristic-mapper plan.
+    pub source: &'static str,
+}
+
+impl ParetoPoint for PlanPoint {
+    fn objectives(&self) -> [f64; 3] {
+        [self.cycles, self.energy, self.dram_words as f64]
+    }
+}
+
+/// Outcome of one workload's exploration.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub workload: String,
+    pub strategy: SearchStrategy,
+    /// The heuristic mapper's plan — always evaluated (it is the gap
+    /// baseline), and seeded into the frontier candidates whenever its
+    /// topology is inside the searched set.
+    pub heuristic: PlanPoint,
+    /// Pareto frontier over (cycles, energy, DRAM words), ascending by
+    /// cycles. Non-empty, and restricted to the searched topologies (plus
+    /// the heuristic seed when its topology is searched).
+    pub frontier: Vec<PlanPoint>,
+    /// Cost-model evaluations this run added to the cache (cache misses).
+    pub evaluations: u64,
+    /// Lookups served from the cache during this run.
+    pub cache_hits: u64,
+}
+
+impl DseResult {
+    /// The latency-optimal explored point. Whenever the heuristic's
+    /// topology is inside the searched set (true for the default
+    /// configuration), the heuristic plan is one of the frontier
+    /// candidates, so this is never costlier than
+    /// [`DseResult::heuristic`]. Under a topology restriction that
+    /// excludes it, [`DseResult::gap`] may honestly drop below 1.
+    pub fn best(&self) -> &PlanPoint {
+        self.frontier
+            .iter()
+            .min_by(|a, b| a.cycles.partial_cmp(&b.cycles).unwrap())
+            .expect("frontier is never empty")
+    }
+
+    /// Heuristic-over-best latency ratio (≥ 1: how much the heuristic
+    /// leaves on the table).
+    pub fn gap(&self) -> f64 {
+        self.heuristic.cycles / self.best().cycles
+    }
+}
+
+/// A DP prefix label: objective sums plus the segment coordinates needed to
+/// rebuild the plan.
+#[derive(Debug, Clone)]
+struct Label {
+    cycles: f64,
+    energy: f64,
+    dram: u64,
+    segs: Vec<(usize, usize, Organization, u64)>,
+}
+
+impl ParetoPoint for Label {
+    fn objectives(&self) -> [f64; 3] {
+        [self.cycles, self.energy, self.dram as f64]
+    }
+}
+
+fn budget_exhausted(dse: &DseConfig, cache: &EvalCache) -> bool {
+    dse.budget
+        .map(|b| cache.stats().misses >= b)
+        .unwrap_or(false)
+}
+
+/// Prune a label set: Pareto filter, then truncate to `cap` keeping the
+/// lowest-latency labels (`pareto_filter` returns ascending cycles).
+fn prune(labels: &mut Vec<Label>, cap: usize) {
+    if labels.len() <= 1 {
+        return;
+    }
+    let mut kept = pareto_filter(std::mem::take(labels));
+    kept.truncate(cap.max(1));
+    *labels = kept;
+}
+
+/// DP over one topology. Returns the Pareto labels of complete plans.
+fn search_topology(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    dse: &DseConfig,
+    cache: &EvalCache,
+    topology: TopologyKind,
+) -> Vec<Label> {
+    let n = graph.num_layers();
+    if n == 0 {
+        return Vec::new();
+    }
+    let ctx = super::cache::context_fingerprint(graph, cfg);
+    let topo = Topology::cached(topology, cfg.pe_rows, cfg.pe_cols);
+    let em = EnergyModel::default();
+    let cap = match dse.strategy {
+        SearchStrategy::Exhaustive => dse.max_labels.max(1),
+        SearchStrategy::Beam => dse.beam_width.max(1),
+    };
+    let mut frontiers: Vec<Vec<Label>> = (0..=n).map(|_| Vec::new()).collect();
+    frontiers[0].push(Label {
+        cycles: 0.0,
+        energy: 0.0,
+        dram: 0,
+        segs: Vec::new(),
+    });
+    for i in 0..n {
+        prune(&mut frontiers[i], cap);
+        if frontiers[i].is_empty() {
+            continue;
+        }
+        for d in space::legal_depths(graph, cfg, i, dse.depth_cap) {
+            let seg = Segment::new(i, d);
+            let candidates = if budget_exhausted(dse, cache) {
+                vec![space::heuristic_candidate(graph, cfg, &seg)]
+            } else {
+                space::segment_candidates(graph, cfg, &seg, dse.ladder_rungs)
+            };
+            for cand in candidates {
+                let key = (ctx, i, d, cand.organization, cand.gran_scale, topology);
+                let cost = cache.get_or_eval(key, || {
+                    evaluate_segment(graph, &cand.planned, cfg, &topo, &em)
+                });
+                let fresh: Vec<Label> = frontiers[i]
+                    .iter()
+                    .map(|lab| {
+                        let mut segs = lab.segs.clone();
+                        segs.push((i, d, cand.organization, cand.gran_scale));
+                        Label {
+                            cycles: lab.cycles + cost.cycles,
+                            energy: lab.energy + cost.energy,
+                            dram: lab.dram + cost.dram_words,
+                            segs,
+                        }
+                    })
+                    .collect();
+                let dst = &mut frontiers[i + d];
+                dst.extend(fresh);
+                // Keep intermediate sets bounded so exhaustive pruning
+                // stays O(labels²) on small sets.
+                if dst.len() > cap.saturating_mul(8).max(64) {
+                    prune(dst, cap);
+                }
+            }
+        }
+    }
+    let mut last = std::mem::take(&mut frontiers[n]);
+    prune(&mut last, cap);
+    last
+}
+
+fn rebuild(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    dse: &DseConfig,
+    topology: TopologyKind,
+    label: &Label,
+) -> PlanPoint {
+    let segments = label
+        .segs
+        .iter()
+        .map(|&(start, depth, org, scale)| {
+            space::build_planned(graph, cfg, &Segment::new(start, depth), org, scale)
+        })
+        .collect();
+    PlanPoint {
+        plan: MappingPlan {
+            mapper_name: format!("dse_{}", dse.strategy.name()),
+            topology,
+            segments,
+        },
+        cycles: label.cycles,
+        energy: label.energy,
+        dram_words: label.dram,
+        source: "search",
+    }
+}
+
+/// Explore one workload's design space.
+///
+/// The cache is caller-owned so repeated sweeps (and the warm half of
+/// `benches/dse_search.rs`) share evaluations; keys are scoped by a
+/// workload/config fingerprint, so one cache can safely serve many
+/// workloads and architecture configs. `workers > 1` searches the
+/// configured topologies in parallel (the cache is shared and sharded),
+/// except when an evaluation budget is set — budgeted runs stay sequential
+/// so the budget cutoff is deterministic.
+pub fn explore(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    dse: &DseConfig,
+    cache: &EvalCache,
+    workers: usize,
+) -> DseResult {
+    let before = cache.stats();
+    let heur_plan = PipeOrgan::default().plan(graph, cfg);
+    let heur_cost = evaluate(graph, &heur_plan, cfg);
+    let heuristic = PlanPoint {
+        plan: heur_plan,
+        cycles: heur_cost.cycles,
+        energy: heur_cost.energy,
+        dram_words: heur_cost.dram_words,
+        source: "heuristic",
+    };
+
+    let topologies: Vec<TopologyKind> = if dse.topologies.is_empty() {
+        vec![cfg.topology]
+    } else {
+        dse.topologies.clone()
+    };
+    let heuristic_in_space = topologies.contains(&heuristic.plan.topology);
+    let parallel = workers > 1 && topologies.len() > 1 && dse.budget.is_none();
+    let per_topology: Vec<(TopologyKind, Vec<Label>)> = if parallel {
+        run_queue(topologies, workers, |t| {
+            (t, search_topology(graph, cfg, dse, cache, t))
+        })
+    } else {
+        topologies
+            .into_iter()
+            .map(|t| (t, search_topology(graph, cfg, dse, cache, t)))
+            .collect()
+    };
+
+    // Seed the heuristic plan into the frontier candidates — but only when
+    // its topology is inside the searched set, so a `--topologies`
+    // restriction is never violated by the reported frontier/oracle.
+    let mut points = Vec::new();
+    if heuristic_in_space {
+        points.push(heuristic.clone());
+    }
+    for (topology, labels) in per_topology {
+        for label in labels {
+            points.push(rebuild(graph, cfg, dse, topology, &label));
+        }
+    }
+    if points.is_empty() {
+        // Degenerate case (e.g. an empty model with the heuristic topology
+        // excluded): fall back to the heuristic so `best()` is total.
+        points.push(heuristic.clone());
+    }
+    let frontier = pareto_filter(points);
+    let after = cache.stats();
+    DseResult {
+        workload: graph.name.clone(),
+        strategy: dse.strategy,
+        heuristic,
+        frontier,
+        evaluations: after.misses - before.misses,
+        cache_hits: after.hits - before.hits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::dominates;
+    use crate::workloads::synthetic;
+
+    fn small_cfg() -> ArchConfig {
+        ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        }
+    }
+
+    fn tiny_dse(strategy: SearchStrategy) -> DseConfig {
+        DseConfig {
+            strategy,
+            beam_width: 6,
+            depth_cap: 4,
+            ladder_rungs: 2,
+            topologies: vec![TopologyKind::Amp, TopologyKind::Mesh],
+            budget: None,
+            max_labels: 64,
+        }
+    }
+
+    #[test]
+    fn exhaustive_never_loses_to_heuristic_on_synthetic_chain() {
+        let g = synthetic::aw_chain(3.0, 6);
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let r = explore(&g, &cfg, &tiny_dse(SearchStrategy::Exhaustive), &cache, 1);
+        assert!(
+            r.best().cycles <= r.heuristic.cycles * 1.0001,
+            "best {} vs heuristic {}",
+            r.best().cycles,
+            r.heuristic.cycles
+        );
+        assert!(r.gap() >= 0.9999);
+        assert!(r.evaluations > 0);
+    }
+
+    #[test]
+    fn frontier_plans_validate_and_match_their_objectives() {
+        let g = synthetic::pointwise_conv_segment(4);
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let r = explore(&g, &cfg, &tiny_dse(SearchStrategy::Exhaustive), &cache, 1);
+        assert!(!r.frontier.is_empty());
+        for p in &r.frontier {
+            p.plan
+                .validate(&g, &cfg)
+                .unwrap_or_else(|e| panic!("{}: {e}", p.plan.mapper_name));
+            if p.source == "search" {
+                let re = evaluate(&g, &p.plan, &cfg);
+                assert!(
+                    (re.cycles - p.cycles).abs() <= 1e-6 * p.cycles.max(1.0),
+                    "label {} vs re-evaluated {}",
+                    p.cycles,
+                    re.cycles
+                );
+                assert_eq!(re.dram_words, p.dram_words);
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_is_mutually_non_dominating() {
+        let g = synthetic::aw_chain(1.0, 8);
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let r = explore(&g, &cfg, &tiny_dse(SearchStrategy::Beam), &cache, 1);
+        for (i, a) in r.frontier.iter().enumerate() {
+            for (j, b) in r.frontier.iter().enumerate() {
+                assert!(
+                    i == j || !dominates(&a.objectives(), &b.objectives()),
+                    "frontier point {i} dominates {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn beam_matches_exhaustive_on_latency_for_small_chain() {
+        // Beam keeps the min-latency prefix at every boundary, so its best
+        // latency equals the exhaustive optimum.
+        let g = synthetic::aw_chain(2.0, 5);
+        let cfg = small_cfg();
+        let ex = explore(
+            &g,
+            &cfg,
+            &tiny_dse(SearchStrategy::Exhaustive),
+            &EvalCache::new(),
+            1,
+        );
+        let beam = explore(
+            &g,
+            &cfg,
+            &tiny_dse(SearchStrategy::Beam),
+            &EvalCache::new(),
+            1,
+        );
+        let rel = (ex.best().cycles - beam.best().cycles).abs() / ex.best().cycles;
+        assert!(
+            rel < 1e-9,
+            "beam {} vs exhaustive {}",
+            beam.best().cycles,
+            ex.best().cycles
+        );
+    }
+
+    #[test]
+    fn warm_cache_run_is_all_hits_and_identical() {
+        let g = synthetic::pointwise_conv_segment(3);
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let dse = tiny_dse(SearchStrategy::Beam);
+        let cold = explore(&g, &cfg, &dse, &cache, 1);
+        assert!(cold.evaluations > 0);
+        let warm = explore(&g, &cfg, &dse, &cache, 1);
+        assert_eq!(warm.evaluations, 0, "warm run must be fully memoized");
+        assert!(warm.cache_hits > 0);
+        assert_eq!(warm.best().cycles, cold.best().cycles);
+        assert_eq!(warm.frontier.len(), cold.frontier.len());
+    }
+
+    #[test]
+    fn budget_caps_evaluations() {
+        let g = synthetic::aw_chain(1.5, 8);
+        let cfg = small_cfg();
+        let unbounded = explore(
+            &g,
+            &cfg,
+            &tiny_dse(SearchStrategy::Exhaustive),
+            &EvalCache::new(),
+            1,
+        );
+        let mut capped_cfg = tiny_dse(SearchStrategy::Exhaustive);
+        capped_cfg.budget = Some(10);
+        let capped = explore(&g, &cfg, &capped_cfg, &EvalCache::new(), 1);
+        assert!(
+            capped.evaluations < unbounded.evaluations,
+            "budget {} vs unbounded {}",
+            capped.evaluations,
+            unbounded.evaluations
+        );
+        // Budgeted search still completes with a full, valid frontier.
+        assert!(!capped.frontier.is_empty());
+        capped.best().plan.validate(&g, &cfg).unwrap();
+        assert!(capped.best().cycles <= capped.heuristic.cycles * 1.0001);
+    }
+
+    #[test]
+    fn topology_restriction_keeps_frontier_inside_it() {
+        // The heuristic defaults to AMP; restricting the search to Mesh
+        // must keep AMP out of the reported frontier and oracle.
+        let g = synthetic::pointwise_conv_segment(3);
+        let cfg = small_cfg();
+        let mut dse = tiny_dse(SearchStrategy::Beam);
+        dse.topologies = vec![TopologyKind::Mesh];
+        let r = explore(&g, &cfg, &dse, &EvalCache::new(), 1);
+        assert_eq!(r.heuristic.plan.topology, TopologyKind::Amp);
+        assert!(!r.frontier.is_empty());
+        for p in &r.frontier {
+            assert_eq!(
+                p.plan.topology,
+                TopologyKind::Mesh,
+                "excluded topology leaked into the frontier"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_topology_search_matches_sequential() {
+        let g = synthetic::pointwise_conv_segment(3);
+        let cfg = small_cfg();
+        let dse = tiny_dse(SearchStrategy::Beam);
+        let seq = explore(&g, &cfg, &dse, &EvalCache::new(), 1);
+        let par = explore(&g, &cfg, &dse, &EvalCache::new(), 4);
+        assert_eq!(seq.best().cycles, par.best().cycles);
+        assert_eq!(seq.frontier.len(), par.frontier.len());
+    }
+}

@@ -1,0 +1,243 @@
+//! Candidate enumeration: the concrete points of the pipelining design
+//! space the search walks.
+//!
+//! A candidate segment is identified by four coordinates — `(start, depth,
+//! organization, granularity scale)` — which together with the topology
+//! form the memoization key (`dse::cache`). Candidates are *built* here by
+//! reusing the heuristic mapper's own planning path
+//! (`mapper::plan_segment_scaled`), so the heuristic's exact segment is
+//! always one of the enumerated points (organization from the Sec. IV-B
+//! chooser, granularity scale 1).
+
+use crate::config::ArchConfig;
+use crate::ir::ModelGraph;
+use crate::mapper::{organization_candidates, plan_segment_scaled};
+use crate::pipeline::Segment;
+use crate::spatial::Organization;
+
+use crate::cost::PlannedSegment;
+
+/// One enumerated point: a fully planned segment plus its cache
+/// coordinates.
+#[derive(Debug, Clone)]
+pub struct CandidateSegment {
+    pub segment: Segment,
+    pub organization: Organization,
+    /// Granularity-ladder scale: the finest Algorithm-1 granularity times
+    /// this factor (always a power of 4; 1 = the heuristic's granularity).
+    pub gran_scale: u64,
+    pub planned: PlannedSegment,
+}
+
+/// Segment depths legal at `start`: bounded by the depth cap, the
+/// architecture's `√numPEs` pipeline-depth cap, the end of the model, and
+/// the rule that complex layers (ROIAlign/RPN) never pipeline with
+/// neighbors (Sec. IV-A).
+pub fn legal_depths(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    start: usize,
+    depth_cap: usize,
+) -> Vec<usize> {
+    let n = graph.num_layers();
+    debug_assert!(start < n);
+    if graph.layer(start).is_complex() {
+        return vec![1];
+    }
+    let max_d = depth_cap
+        .max(1)
+        .min(cfg.max_pipeline_depth().max(1))
+        .min(n - start);
+    let mut out = Vec::with_capacity(max_d);
+    for d in 1..=max_d {
+        if d > 1 && graph.layer(start + d - 1).is_complex() {
+            break;
+        }
+        out.push(d);
+    }
+    out
+}
+
+/// The granularity ladder for one segment: scale 1 (finest, the heuristic's
+/// choice) then powers of 4, stopping early once every handoff has
+/// saturated (scaling further changes nothing) or after `rungs` rungs.
+fn ladder(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    seg: &Segment,
+    rungs: usize,
+) -> Vec<(u64, PlannedSegment)> {
+    let mut out: Vec<(u64, PlannedSegment)> = Vec::new();
+    let mut scale = 1u64;
+    for _ in 0..rungs.max(1) {
+        let planned = plan_segment_scaled(graph, cfg, seg, scale);
+        if let Some((_, prev)) = out.last() {
+            if prev.handoffs == planned.handoffs {
+                break; // saturated: coarser rungs are identical
+            }
+        }
+        out.push((scale, planned));
+        if seg.depth == 1 {
+            break; // no handoffs to scale
+        }
+        scale = scale.saturating_mul(4);
+    }
+    out
+}
+
+/// All candidates for one segment: granularity ladder × oracle organization
+/// candidates. The heuristic's own (organization, scale 1) point is always
+/// included even if the chooser picked an organization outside the oracle
+/// candidate list (defensive — it never does today).
+pub fn segment_candidates(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    seg: &Segment,
+    rungs: usize,
+) -> Vec<CandidateSegment> {
+    let mut out = Vec::new();
+    for (scale, base) in ladder(graph, cfg, seg, rungs) {
+        let orgs = organization_candidates(seg.depth);
+        if !orgs.contains(&base.organization) {
+            out.push(CandidateSegment {
+                segment: seg.clone(),
+                organization: base.organization,
+                gran_scale: scale,
+                planned: base.clone(),
+            });
+        }
+        for org in orgs {
+            let mut planned = base.clone();
+            planned.organization = org;
+            out.push(CandidateSegment {
+                segment: seg.clone(),
+                organization: org,
+                gran_scale: scale,
+                planned,
+            });
+        }
+    }
+    out
+}
+
+/// The single heuristic point for a segment — the fallback once the search
+/// budget is exhausted (cheap, usually already cached, always valid).
+pub fn heuristic_candidate(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    seg: &Segment,
+) -> CandidateSegment {
+    let planned = plan_segment_scaled(graph, cfg, seg, 1);
+    CandidateSegment {
+        segment: seg.clone(),
+        organization: planned.organization,
+        gran_scale: 1,
+        planned,
+    }
+}
+
+/// Rebuild the planned segment for a cache coordinate (used when turning a
+/// winning search label back into a full `MappingPlan`).
+pub fn build_planned(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    seg: &Segment,
+    organization: Organization,
+    gran_scale: u64,
+) -> PlannedSegment {
+    let mut planned = plan_segment_scaled(graph, cfg, seg, gran_scale);
+    planned.organization = organization;
+    planned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Layer, Op};
+    use crate::workloads::synthetic;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::default()
+    }
+
+    #[test]
+    fn depth_one_has_single_sequential_candidate() {
+        let g = synthetic::equal_conv_segment(4);
+        let cands = segment_candidates(&g, &cfg(), &Segment::new(0, 1), 4);
+        assert_eq!(cands.len(), 1);
+        assert_eq!(cands[0].organization, Organization::Sequential);
+        assert_eq!(cands[0].gran_scale, 1);
+        assert!(cands[0].planned.handoffs.is_empty());
+    }
+
+    #[test]
+    fn ladder_scales_are_powers_of_four_and_saturate() {
+        let g = synthetic::pointwise_conv_segment(2);
+        let cands = segment_candidates(&g, &cfg(), &Segment::new(0, 2), 8);
+        let mut scales: Vec<u64> = cands.iter().map(|c| c.gran_scale).collect();
+        scales.sort_unstable();
+        scales.dedup();
+        for w in scales.windows(2) {
+            assert_eq!(w[1], w[0] * 4, "{scales:?}");
+        }
+        // Saturation: coarsest rung's handoffs stop growing before u64 blows.
+        let total = g.layer(0).output_act_words();
+        for c in &cands {
+            for h in &c.planned.handoffs {
+                assert!(h.words_per_interval <= total);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_one_matches_heuristic_segment() {
+        let g = synthetic::pointwise_conv_segment(3);
+        let seg = Segment::new(0, 3);
+        let heur = heuristic_candidate(&g, &cfg(), &seg);
+        let cands = segment_candidates(&g, &cfg(), &seg, 3);
+        assert!(
+            cands.iter().any(|c| c.gran_scale == 1
+                && c.organization == heur.organization
+                && c.planned == heur.planned),
+            "heuristic point must be enumerated"
+        );
+    }
+
+    #[test]
+    fn legal_depths_stop_at_complex_layers() {
+        let mut g = synthetic::aw_chain(2.0, 3);
+        g.push(Layer::new("roi", Op::roi_align(32, 7, 64)));
+        g.push(Layer::new(
+            "after",
+            Op::conv2d(1, 64, 64, 16, 16, 3, 3, 1, 1),
+        ));
+        let c = cfg();
+        // From layer 0 we can grow up to the ROI layer but not across it.
+        assert_eq!(legal_depths(&g, &c, 0, 8), vec![1, 2, 3]);
+        // The complex layer itself only runs alone.
+        assert_eq!(legal_depths(&g, &c, 3, 8), vec![1]);
+        // The tail layer is bounded by the model end.
+        assert_eq!(legal_depths(&g, &c, 4, 8), vec![1]);
+    }
+
+    #[test]
+    fn legal_depths_respect_caps() {
+        let g = synthetic::aw_chain(3.0, 12);
+        let c = cfg();
+        let d = legal_depths(&g, &c, 0, 5);
+        assert_eq!(d, vec![1, 2, 3, 4, 5]);
+        let deep = legal_depths(&g, &c, 0, 1_000);
+        assert!(*deep.last().unwrap() <= c.max_pipeline_depth().min(12));
+    }
+
+    #[test]
+    fn rebuilt_planned_matches_candidate() {
+        let g = synthetic::pointwise_conv_segment(2);
+        let c = cfg();
+        let seg = Segment::new(0, 2);
+        for cand in segment_candidates(&g, &c, &seg, 2) {
+            let rebuilt = build_planned(&g, &c, &seg, cand.organization, cand.gran_scale);
+            assert_eq!(rebuilt, cand.planned);
+        }
+    }
+}

@@ -18,10 +18,14 @@
 //! - a multi-threaded evaluation coordinator and a functional pipelined
 //!   executor driving AOT-compiled JAX/Pallas artifacts through PJRT
 //!   ([`coordinator`], [`runtime`]);
+//! - a parallel design-space exploration engine with memoized cost
+//!   evaluation and Pareto reporting ([`dse`]);
 //! - per-figure report emitters ([`report`]).
 //!
-//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
-//! measured-vs-paper results.
+//! See `rust/DESIGN.md` for the paper-to-module map, the no-network
+//! dependency substitution table (§2), the experiment index (§5) and the
+//! DSE engine design (§6). Generated measured-vs-paper artifacts land
+//! under `reports/` when the CLI runs.
 
 pub mod baselines;
 pub mod cli;
@@ -29,6 +33,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cost;
 pub mod dataflow;
+pub mod dse;
 pub mod energy;
 pub mod ir;
 pub mod mapper;

@@ -11,20 +11,28 @@
 //! pipeorgan depth               # Fig. 16
 //! pipeorgan granularity         # Fig. 17
 //! pipeorgan validate-dataflow   # Sec. IV-A heuristic validation
+//! pipeorgan dse                 # E16: design-space exploration (frontier + gap)
 //! pipeorgan run-segment         # E15: functional pipelined execution (PJRT)
-//! pipeorgan all                 # everything above except run-segment
+//! pipeorgan all                 # everything above except dse/run-segment
 //! ```
 //!
 //! Common flags: `--out <dir>` (reports directory, default `reports`),
 //! `--workers <n>`, `--config <file>` (key=value ArchConfig overrides),
 //! `--artifacts <dir>` (default `artifacts`), `--seed <n>`.
+//!
+//! `dse`-only flags (rejected on every other subcommand): `--workload
+//! <name|all>` (comma lists allowed), `--strategy <beam|exhaustive>`,
+//! `--beam <n>`, `--depth-cap <n>`, `--rungs <n>`, `--budget <n>`,
+//! `--topologies <a,b,..>`.
 
 use pipeorgan::cli::Args;
 use pipeorgan::config::ArchConfig;
 use pipeorgan::coordinator as coord;
+use pipeorgan::dse::{DseConfig, DSE_FLAGS};
 use pipeorgan::report;
+use pipeorgan::workloads;
 
-const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N]";
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST]";
 
 const FLAGS: &[(&str, bool)] = &[
     ("out", true),
@@ -33,6 +41,16 @@ const FLAGS: &[(&str, bool)] = &[
     ("artifacts", true),
     ("seed", true),
 ];
+
+/// Strict known-flag table for a subcommand: the `dse` extras are only
+/// legal on `dse` (typos and misplaced flags stay hard errors).
+fn known_flags(subcommand: &str) -> Vec<(&'static str, bool)> {
+    let mut flags: Vec<(&'static str, bool)> = FLAGS.to_vec();
+    if subcommand == "dse" {
+        flags.extend_from_slice(DSE_FLAGS);
+    }
+    flags
+}
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -47,7 +65,8 @@ fn main() {
 }
 
 fn run(raw: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(raw, FLAGS).map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+    let flags = known_flags(&raw[0]);
+    let args = Args::parse(raw, &flags).map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
     let cfg = match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
@@ -94,9 +113,32 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
             report::ablation_depth(&cfg),
         ]),
         "all" => emit(report::all_reports(&cfg, workers)),
+        "dse" => {
+            let dse_cfg = DseConfig::from_cli(&args).map_err(|e| anyhow::anyhow!(e))?;
+            let tasks = resolve_workloads(args.get_or("workload", "all"))?;
+            emit(report::run_dse_reports(&cfg, tasks, &dse_cfg, workers))
+        }
         "run-segment" => run_segment(&artifacts, seed),
         other => anyhow::bail!("unknown subcommand `{other}`\n{USAGE}"),
     }
+}
+
+/// Resolve `--workload`: `all`, one task name, or a comma-separated list.
+fn resolve_workloads(spec: &str) -> anyhow::Result<Vec<pipeorgan::ir::ModelGraph>> {
+    if spec == "all" {
+        return Ok(workloads::all_tasks());
+    }
+    let mut tasks = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        tasks.push(workloads::task_by_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown workload `{name}` (known: {})",
+                workloads::task_names().join(", ")
+            )
+        })?);
+    }
+    anyhow::ensure!(!tasks.is_empty(), "flag `--workload` lists no workloads");
+    Ok(tasks)
 }
 
 /// E15: execute the AOT segment three ways through PJRT and check numerics.

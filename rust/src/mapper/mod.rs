@@ -60,11 +60,14 @@ impl PipeOrgan {
     }
 }
 
-/// Clamp to ≥1 word per producer PE per interval (same floor the baselines
-/// use — finer steps cannot leave the MAC pipeline).
-fn clamp(total: u64, g: &Granularity, producer_pes: usize) -> (u64, u64) {
+/// Clamp a handoff granularity to the legal range: at least one word per
+/// producer PE per interval (finer steps cannot leave the MAC pipeline —
+/// the same floor the baselines use), at most the whole tensor. Returns
+/// `(words_per_interval, intervals)`. Public because the DSE enumerator
+/// scales granularities through the same floor (see `dse::space`).
+pub fn clamp_granularity(total: u64, words: u64, producer_pes: usize) -> (u64, u64) {
     let min_words = producer_pes.max(1) as u64;
-    let words = g.words.max(min_words).min(total.max(1));
+    let words = words.max(min_words).min(total.max(1));
     let intervals = crate::util::ceil_div(total.max(1), words).max(1);
     (words, intervals)
 }
@@ -145,7 +148,7 @@ fn split_at_gb_boundaries(graph: &ModelGraph, cfg: &ArchConfig, seg: &Segment) -
         let producer = graph.layer(seg.start + s);
         let total = producer.output_act_words();
         let g = pair_granularity(&nests[s], &nests[s + 1], total);
-        let (words, _) = clamp(total, &g, pe_alloc[s]);
+        let (words, _) = clamp_granularity(total, g.words, pe_alloc[s]);
         let producer_rf =
             (rf_words * pe_alloc[s] as u64 / cfg.num_pes() as u64).max(1);
         if words > producer_rf {
@@ -161,6 +164,23 @@ fn split_at_gb_boundaries(graph: &ModelGraph, cfg: &ArchConfig, seg: &Segment) -
 /// Plan one (already final) segment: styles, allocation, granularities,
 /// organization.
 fn plan_segment(graph: &ModelGraph, cfg: &ArchConfig, seg: &Segment) -> PlannedSegment {
+    plan_segment_scaled(graph, cfg, seg, 1)
+}
+
+/// [`plan_segment`] generalized over a granularity-ladder rung: every
+/// handoff's Algorithm-1 finest granularity is multiplied by `gran_scale`
+/// before clamping, so `gran_scale == 1` reproduces the heuristic mapper's
+/// segment exactly and powers of 4 walk toward whole-tensor handoffs. The
+/// DSE enumerator (`dse::space`) uses this to cost the granularity axis of
+/// the design space; the organization is still the Sec. IV-B heuristic
+/// choice and may be overridden by the caller afterwards.
+pub fn plan_segment_scaled(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    seg: &Segment,
+    gran_scale: u64,
+) -> PlannedSegment {
+    let gran_scale = gran_scale.max(1);
     let depth = seg.depth;
     let styles: Vec<DataflowStyle> = seg
         .layers()
@@ -190,7 +210,8 @@ fn plan_segment(graph: &ModelGraph, cfg: &ArchConfig, seg: &Segment) -> PlannedS
         let producer = graph.layer(seg.start + s);
         let total = producer.output_act_words();
         let g = pair_granularity(&nests[s], &nests[s + 1], total);
-        let (words, intervals) = clamp(total, &g, pe_alloc[s]);
+        let (words, intervals) =
+            clamp_granularity(total, g.words.saturating_mul(gran_scale), pe_alloc[s]);
         finest_words = finest_words.min(words);
         handoffs.push(PlannedHandoff {
             from_stage: s,

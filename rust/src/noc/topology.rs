@@ -1,6 +1,6 @@
 //! Topology construction: nodes, directed links, adjacency.
 //!
-//! Perf note (§Perf in EXPERIMENTS.md): link lookup is a linear scan of the
+//! Perf note (DESIGN.md §Perf): link lookup is a linear scan of the
 //! per-node outgoing adjacency list instead of a hash map — out-degree is
 //! ≤ 8 for mesh/AMP (≤ 2·(rows+cols) for flattened butterfly), and the scan
 //! is both faster per lookup and much faster to construct.

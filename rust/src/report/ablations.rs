@@ -168,7 +168,7 @@ mod tests {
         // Flexible depth must beat the shallow caps (1, 2, 4) in geomean —
         // the core "variable depth matters" claim. Very deep segments pay
         // ramp-up, so cap-8 can land within a whisker of flexible; allow
-        // 2 % there (the finding is recorded in EXPERIMENTS.md).
+        // 2 % there (the finding is recorded in DESIGN.md §Perf).
         let cfg = ArchConfig::default();
         let r = ablation_depth(&cfg);
         let last = r.table.rows.last().unwrap().clone();

@@ -1,0 +1,249 @@
+//! DSE report emitters: the Pareto frontier per workload and the
+//! heuristic-vs-oracle gap table (the `pipeorgan dse` artifacts; see
+//! DESIGN.md §6).
+
+use crate::config::ArchConfig;
+use crate::coordinator::run_queue;
+use crate::dse::{explore, DseConfig, DseResult, EvalCache};
+use crate::ir::ModelGraph;
+use crate::util::json::Json;
+use crate::util::stats::geomean;
+use crate::util::table::{fnum, Table};
+
+use super::Report;
+
+/// Explore every task (parallel across tasks; a single task parallelizes
+/// across its topologies instead) and return the per-task results.
+pub fn explore_all(
+    cfg: &ArchConfig,
+    tasks: Vec<ModelGraph>,
+    dse: &DseConfig,
+    workers: usize,
+) -> Vec<DseResult> {
+    // Split the worker budget: tasks fan out over the queue, and each task
+    // spends its share on per-topology parallelism inside `explore`.
+    let inner_workers = (workers / tasks.len().max(1)).max(1);
+    run_queue(tasks, workers, |g| {
+        let cache = EvalCache::new();
+        explore(&g, cfg, dse, &cache, inner_workers)
+    })
+}
+
+/// Run the exploration and emit both reports (`pipeorgan dse`).
+pub fn run_dse_reports(
+    cfg: &ArchConfig,
+    tasks: Vec<ModelGraph>,
+    dse: &DseConfig,
+    workers: usize,
+) -> Vec<Report> {
+    let results = explore_all(cfg, tasks, dse, workers);
+    vec![dse_frontier(cfg, dse, &results), dse_gap(dse, &results)]
+}
+
+fn plan_point_json(p: &crate::dse::PlanPoint) -> Json {
+    let mut o = Json::obj();
+    let mut segs = Json::Arr(vec![]);
+    for s in &p.plan.segments {
+        let mut so = Json::obj();
+        so.set("start", s.segment.start)
+            .set("depth", s.depth())
+            .set("organization", s.organization.name());
+        segs.push(so);
+    }
+    o.set("cycles", p.cycles)
+        .set("energy", p.energy)
+        .set("dram_words", p.dram_words)
+        .set("topology", p.plan.topology.name())
+        .set("mean_depth", p.plan.mean_depth())
+        .set("source", p.source)
+        .set("segments", segs);
+    o
+}
+
+/// The latency/energy/DRAM Pareto frontier, one row per frontier point.
+pub fn dse_frontier(cfg: &ArchConfig, dse: &DseConfig, results: &[DseResult]) -> Report {
+    let mut table = Table::new(
+        "DSE — latency/energy/DRAM Pareto frontier per workload",
+        &[
+            "task",
+            "source",
+            "topology",
+            "cycles",
+            "energy",
+            "DRAM words",
+            "mean depth",
+            "segments",
+        ],
+    );
+    let mut json = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    for r in results {
+        for p in &r.frontier {
+            table.row(&[
+                r.workload.clone(),
+                p.source.to_string(),
+                p.plan.topology.name().to_string(),
+                fnum(p.cycles),
+                fnum(p.energy),
+                p.dram_words.to_string(),
+                fnum(p.plan.mean_depth()),
+                p.plan.segments.len().to_string(),
+            ]);
+        }
+        let mut t = Json::obj();
+        let mut frontier = Json::Arr(vec![]);
+        for p in &r.frontier {
+            frontier.push(plan_point_json(p));
+        }
+        t.set("task", r.workload.clone())
+            .set("strategy", r.strategy.name())
+            .set("evaluations", r.evaluations)
+            .set("cache_hits", r.cache_hits)
+            .set("heuristic", plan_point_json(&r.heuristic))
+            .set("best", plan_point_json(r.best()))
+            .set("frontier", frontier);
+        arr.push(t);
+    }
+    json.set("strategy", dse.strategy.name())
+        .set("depth_cap", dse.depth_cap)
+        .set("ladder_rungs", dse.ladder_rungs)
+        .set("beam_width", dse.beam_width)
+        .set("config", cfg.to_json())
+        .set("workloads", arr);
+    Report {
+        name: "dse_frontier",
+        table,
+        json,
+    }
+}
+
+/// Heuristic-vs-oracle gap table: how much latency/DRAM the closed-form
+/// mapper leaves on the table versus the searched optimum.
+pub fn dse_gap(dse: &DseConfig, results: &[DseResult]) -> Report {
+    let mut table = Table::new(
+        "DSE — heuristic mapper vs searched oracle",
+        &[
+            "task",
+            "heuristic cycles",
+            "oracle cycles",
+            "gap (heur/oracle)",
+            "heuristic DRAM",
+            "oracle DRAM",
+            "oracle topology",
+            "evals",
+            "hit rate",
+        ],
+    );
+    let mut json = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    let mut gaps = Vec::new();
+    for r in results {
+        let best = r.best();
+        gaps.push(r.gap());
+        table.row(&[
+            r.workload.clone(),
+            fnum(r.heuristic.cycles),
+            fnum(best.cycles),
+            fnum(r.gap()),
+            r.heuristic.dram_words.to_string(),
+            best.dram_words.to_string(),
+            best.plan.topology.name().to_string(),
+            r.evaluations.to_string(),
+            fnum(if r.evaluations + r.cache_hits == 0 {
+                0.0
+            } else {
+                r.cache_hits as f64 / (r.evaluations + r.cache_hits) as f64
+            }),
+        ]);
+        let mut t = Json::obj();
+        t.set("task", r.workload.clone())
+            .set("heuristic_cycles", r.heuristic.cycles)
+            .set("oracle_cycles", best.cycles)
+            .set("gap", r.gap())
+            .set("heuristic_dram_words", r.heuristic.dram_words)
+            .set("oracle_dram_words", best.dram_words)
+            .set("oracle_topology", best.plan.topology.name())
+            .set("evaluations", r.evaluations)
+            .set("cache_hits", r.cache_hits);
+        arr.push(t);
+    }
+    if !gaps.is_empty() {
+        table.row(&[
+            "GEOMEAN".into(),
+            "".into(),
+            "".into(),
+            fnum(geomean(&gaps)),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+            "".into(),
+        ]);
+        json.set("geomean_gap", geomean(&gaps));
+    }
+    json.set("strategy", dse.strategy.name()).set("workloads", arr);
+    Report {
+        name: "dse_gap",
+        table,
+        json,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::dse::SearchStrategy;
+    use crate::workloads::synthetic;
+
+    fn small() -> (ArchConfig, DseConfig) {
+        let cfg = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        let dse = DseConfig {
+            strategy: SearchStrategy::Beam,
+            beam_width: 4,
+            depth_cap: 3,
+            ladder_rungs: 2,
+            topologies: vec![TopologyKind::Amp],
+            budget: None,
+            max_labels: 32,
+        };
+        (cfg, dse)
+    }
+
+    #[test]
+    fn reports_cover_all_requested_workloads() {
+        let (cfg, dse) = small();
+        let tasks = vec![
+            synthetic::aw_chain(2.0, 4),
+            synthetic::pointwise_conv_segment(3),
+        ];
+        let reports = run_dse_reports(&cfg, tasks, &dse, 2);
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].name, "dse_frontier");
+        assert_eq!(reports[1].name, "dse_gap");
+        let frontier_json = reports[0].json.to_pretty();
+        // Both tasks appear, and the JSON round-trips through the parser.
+        assert!(frontier_json.contains("pointwise"), "{frontier_json}");
+        crate::util::json::Json::parse(&frontier_json).unwrap();
+        crate::util::json::Json::parse(&reports[1].json.to_pretty()).unwrap();
+        // Gap table carries the geomean rollup row.
+        assert!(reports[1].table.to_markdown().contains("GEOMEAN"));
+    }
+
+    #[test]
+    fn explore_all_keeps_task_order() {
+        let (cfg, dse) = small();
+        let tasks = vec![
+            synthetic::aw_chain(2.0, 4),
+            synthetic::equal_conv_segment(3),
+        ];
+        let names: Vec<String> = tasks.iter().map(|g| g.name.clone()).collect();
+        let results = explore_all(&cfg, tasks, &dse, 4);
+        let got: Vec<String> = results.iter().map(|r| r.workload.clone()).collect();
+        assert_eq!(got, names);
+    }
+}

@@ -1,0 +1,317 @@
+//! Integration tests for the DSE engine: end-to-end exploration over real
+//! zoo workloads, the heuristic-vs-oracle guarantee, the strict CLI flag
+//! policy for the `dse` subcommand, and the enumeration invariants the
+//! search relies on (granularity floor, organization coverage).
+
+use pipeorgan::cli::Args;
+use pipeorgan::config::{ArchConfig, TopologyKind};
+use pipeorgan::dataflow::{choose_dataflow, LoopNest};
+use pipeorgan::dse::{
+    dominates, explore, legal_depths, segment_candidates, DseConfig, EvalCache, ParetoPoint,
+    SearchStrategy, DSE_FLAGS,
+};
+use pipeorgan::mapper::{clamp_granularity, organization_candidates};
+use pipeorgan::pipeline::{pair_granularity, Segment};
+use pipeorgan::report::run_dse_reports;
+use pipeorgan::spatial::{choose_organization, Organization, Placement};
+use pipeorgan::workloads;
+
+/// A smaller array than Table III keeps debug-build evaluation fast; every
+/// asserted property is architecture-independent.
+fn small_cfg() -> ArchConfig {
+    ArchConfig {
+        pe_rows: 16,
+        pe_cols: 16,
+        ..ArchConfig::default()
+    }
+}
+
+fn quick_dse() -> DseConfig {
+    DseConfig {
+        strategy: SearchStrategy::Beam,
+        beam_width: 6,
+        depth_cap: 4,
+        ladder_rungs: 2,
+        topologies: vec![TopologyKind::Amp],
+        budget: None,
+        max_labels: 64,
+    }
+}
+
+/// ≥3 zoo workloads for the end-to-end assertions (acceptance criterion).
+fn zoo_tasks() -> Vec<pipeorgan::ir::ModelGraph> {
+    vec![
+        workloads::keyword_detection(),
+        workloads::gaze_estimation(),
+        workloads::action_segmentation(),
+    ]
+}
+
+#[test]
+fn oracle_best_never_costlier_than_heuristic_on_zoo() {
+    let cfg = small_cfg();
+    let dse = quick_dse();
+    for g in zoo_tasks() {
+        let cache = EvalCache::new();
+        let r = explore(&g, &cfg, &dse, &cache, 1);
+        assert!(
+            r.best().cycles <= r.heuristic.cycles * 1.0001,
+            "{}: oracle {} worse than heuristic {}",
+            g.name,
+            r.best().cycles,
+            r.heuristic.cycles
+        );
+        r.best()
+            .plan
+            .validate(&g, &cfg)
+            .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+    }
+}
+
+#[test]
+fn frontier_points_are_valid_and_mutually_non_dominating() {
+    let cfg = small_cfg();
+    let dse = quick_dse();
+    for g in zoo_tasks() {
+        let cache = EvalCache::new();
+        let r = explore(&g, &cfg, &dse, &cache, 1);
+        assert!(!r.frontier.is_empty(), "{}", g.name);
+        for p in &r.frontier {
+            p.plan
+                .validate(&g, &cfg)
+                .unwrap_or_else(|e| panic!("{} / {}: {e}", g.name, p.plan.mapper_name));
+        }
+        for (i, a) in r.frontier.iter().enumerate() {
+            for (j, b) in r.frontier.iter().enumerate() {
+                assert!(
+                    i == j || !dominates(&a.objectives(), &b.objectives()),
+                    "{}: frontier point {i} dominates {j}",
+                    g.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dse_reports_emit_frontier_json_and_gap_table() {
+    let cfg = small_cfg();
+    let dse = quick_dse();
+    let reports = run_dse_reports(&cfg, zoo_tasks(), &dse, 2);
+    assert_eq!(reports.len(), 2);
+
+    let dir = std::env::temp_dir().join(format!("pipeorgan_dse_test_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    for r in &reports {
+        r.emit(&dir).unwrap();
+    }
+    let frontier_text = std::fs::read_to_string(dir.join("dse_frontier.json")).unwrap();
+    let frontier = pipeorgan::util::json::Json::parse(&frontier_text).unwrap();
+    let tasks = frontier.get("workloads").and_then(|w| w.as_arr()).unwrap();
+    assert_eq!(tasks.len(), 3, "one frontier entry per workload");
+    for t in tasks {
+        assert!(t.get("frontier").and_then(|f| f.as_arr()).is_some());
+        assert!(t.get("best").is_some() && t.get("heuristic").is_some());
+    }
+    let gap_text = std::fs::read_to_string(dir.join("dse_gap.json")).unwrap();
+    let gap = pipeorgan::util::json::Json::parse(&gap_text).unwrap();
+    for t in gap.get("workloads").and_then(|w| w.as_arr()).unwrap() {
+        let heur = t.get("heuristic_cycles").and_then(|x| x.as_f64()).unwrap();
+        let orac = t.get("oracle_cycles").and_then(|x| x.as_f64()).unwrap();
+        assert!(
+            orac <= heur * 1.0001,
+            "gap table must never show the oracle losing: {orac} vs {heur}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn memoization_makes_repeat_search_free() {
+    let cfg = small_cfg();
+    let dse = quick_dse();
+    let g = workloads::keyword_detection();
+    let cache = EvalCache::new();
+    let cold = explore(&g, &cfg, &dse, &cache, 1);
+    assert!(cold.evaluations > 0);
+    let warm = explore(&g, &cfg, &dse, &cache, 1);
+    assert_eq!(warm.evaluations, 0, "second identical sweep must be all hits");
+    assert!(warm.cache_hits >= cold.evaluations);
+    assert_eq!(warm.best().cycles, cold.best().cycles);
+}
+
+// ---- strict CLI flag policy for `dse` --------------------------------------
+
+fn dse_flag_table() -> Vec<(&'static str, bool)> {
+    let mut flags: Vec<(&'static str, bool)> = vec![
+        ("out", true),
+        ("workers", true),
+        ("config", true),
+        ("artifacts", true),
+        ("seed", true),
+    ];
+    flags.extend_from_slice(DSE_FLAGS);
+    flags
+}
+
+fn s(v: &[&str]) -> Vec<String> {
+    v.iter().map(|x| x.to_string()).collect()
+}
+
+#[test]
+fn dse_subcommand_accepts_its_flags() {
+    let a = Args::parse(
+        &s(&[
+            "dse",
+            "--workload",
+            "keyword_detection",
+            "--strategy",
+            "beam",
+            "--beam",
+            "4",
+            "--depth-cap",
+            "3",
+            "--workers",
+            "2",
+            "--out",
+            "reports",
+        ]),
+        &dse_flag_table(),
+    )
+    .unwrap();
+    assert_eq!(a.subcommand, "dse");
+    assert_eq!(a.get("workload"), Some("keyword_detection"));
+    let d = DseConfig::from_cli(&a).unwrap();
+    assert_eq!(d.beam_width, 4);
+    assert_eq!(d.depth_cap, 3);
+}
+
+#[test]
+fn unknown_dse_flags_are_rejected() {
+    // Typos on dse stay hard errors (the repo's strict-flag policy).
+    for bad in [
+        ["dse", "--bogus", "1"],
+        ["dse", "--beamwidth", "4"],
+        ["dse", "--workloads", "all"], // the flag is singular
+    ] {
+        assert!(
+            Args::parse(&s(&bad), &dse_flag_table()).is_err(),
+            "{bad:?} should be rejected"
+        );
+    }
+    // And dse-only flags stay rejected on other subcommands, which use the
+    // base table without DSE_FLAGS.
+    let base: &[(&str, bool)] = &[("out", true), ("workers", true)];
+    assert!(Args::parse(&s(&["e2e", "--beam", "4"]), base).is_err());
+    assert!(Args::parse(&s(&["e2e", "--workload", "x"]), base).is_err());
+}
+
+// ---- enumeration invariants the DSE relies on ------------------------------
+
+#[test]
+fn granularity_clamp_never_drops_below_per_pe_floor() {
+    // Every handoff the enumerator builds routes at least one word per
+    // producer PE per interval, and words × intervals always covers the
+    // tensor.
+    pipeorgan::util::proptest_lite::run(200, |rng| {
+        let total = rng.gen_usize(1, 1 << 20) as u64;
+        let base_words = rng.gen_usize(1, (total as usize) * 2) as u64;
+        let producer_pes = rng.gen_usize(1, 1025);
+        let (words, intervals) = clamp_granularity(total, base_words, producer_pes);
+        let floor = (producer_pes as u64).min(total);
+        if words < floor {
+            return Err(format!(
+                "words {words} below floor {floor} (total {total}, pes {producer_pes})"
+            ));
+        }
+        if words > total {
+            return Err(format!("words {words} exceeds tensor {total}"));
+        }
+        if words * intervals < total {
+            return Err(format!(
+                "coverage hole: {words} × {intervals} < {total}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn enumerated_candidates_respect_granularity_floor() {
+    let cfg = small_cfg();
+    let g = workloads::gaze_estimation();
+    for start in 0..g.num_layers() {
+        for d in legal_depths(&g, &cfg, start, 4) {
+            let seg = Segment::new(start, d);
+            for cand in segment_candidates(&g, &cfg, &seg, 3) {
+                for h in &cand.planned.handoffs {
+                    let total = g.layer(seg.start + h.from_stage).output_act_words();
+                    let floor =
+                        (cand.planned.pe_alloc[h.from_stage].max(1) as u64).min(total.max(1));
+                    assert!(
+                        h.words_per_interval >= floor,
+                        "segment [{start},{d}) handoff below per-PE floor"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn organization_candidates_cover_every_legal_depth() {
+    let cfg = small_cfg();
+    for depth in 1..=cfg.max_pipeline_depth() {
+        let orgs = organization_candidates(depth);
+        assert!(!orgs.is_empty(), "no candidates at depth {depth}");
+        if depth == 1 {
+            assert_eq!(orgs, vec![Organization::Sequential]);
+            continue;
+        }
+        // Whatever granularity the chooser sees, its pick must be inside
+        // the oracle candidate list the DSE enumerates.
+        for gran in [1u64, 64, 4096, 262_144, 1 << 22] {
+            let choice = choose_organization(&cfg, depth, gran, cfg.num_pes() / depth.max(1));
+            assert!(
+                orgs.contains(&choice.organization),
+                "depth {depth} gran {gran}: chooser picked {:?} outside candidates {orgs:?}",
+                choice.organization
+            );
+        }
+        // Every candidate builds a valid placement at this depth.
+        let shares = vec![cfg.num_pes() / depth.max(1); depth];
+        for org in orgs {
+            Placement::build(cfg.pe_rows, cfg.pe_cols, org, &shares)
+                .validate()
+                .unwrap_or_else(|e| panic!("depth {depth} org {org:?}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn ladder_matches_algorithm1_finest_at_scale_one() {
+    // Scale-1 candidates carry exactly the Algorithm-1 finest granularity
+    // after the per-PE clamp — the heuristic mapper's own choice.
+    let cfg = small_cfg();
+    let g = workloads::keyword_detection();
+    let seg = Segment::new(0, 2);
+    let styles: Vec<_> = (0..2).map(|i| choose_dataflow(g.layer(i))).collect();
+    let nests: Vec<LoopNest> = (0..2)
+        .map(|i| LoopNest::for_op(&g.layer(i).op, styles[i]))
+        .collect();
+    let total = g.layer(0).output_act_words();
+    let finest = pair_granularity(&nests[0], &nests[1], total);
+    for cand in segment_candidates(&g, &cfg, &seg, 1) {
+        assert_eq!(cand.gran_scale, 1);
+        let adj = cand
+            .planned
+            .handoffs
+            .iter()
+            .find(|h| !h.is_skip && h.from_stage == 0)
+            .expect("depth-2 segment has a 0→1 handoff");
+        let (words, intervals) =
+            clamp_granularity(total, finest.words, cand.planned.pe_alloc[0]);
+        assert_eq!(adj.words_per_interval, words);
+        assert_eq!(adj.intervals, intervals);
+    }
+}

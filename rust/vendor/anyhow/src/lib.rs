@@ -1,0 +1,286 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This environment has no network access, so the real crate cannot be
+//! fetched from crates.io; this vendored implementation provides the small
+//! API surface the workspace actually uses:
+//!
+//! - [`Error`] / [`Result`] with `?`-conversion from any
+//!   `std::error::Error + Send + Sync + 'static`,
+//! - the [`anyhow!`], [`bail!`] and [`ensure!`] macros,
+//! - the [`Context`] extension trait on `Result` and `Option`,
+//! - chain-aware alternate formatting: `{e:#}` prints `outer: inner: root`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error with an optional chain of sources.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            inner: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Create an error from an existing `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error {
+            inner: Box::new(error),
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            inner: Box::new(ContextError {
+                msg: context.to_string(),
+                source: self.inner,
+            }),
+        }
+    }
+
+    /// Iterate the chain from the outermost error to the root cause.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain {
+            next: Some(&*self.inner),
+        }
+    }
+
+    /// The innermost (root) cause.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        self.chain().last().expect("chain is never empty")
+    }
+}
+
+/// Iterator over an error chain (see [`Error::chain`]).
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let current = self.next?;
+        self.next = current.source();
+        Some(current)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        if f.alternate() {
+            for cause in self.chain().skip(1) {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut causes = self.chain().skip(1).peekable();
+        if causes.peek().is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Message-only error (no source).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// A context message layered over an underlying error.
+struct ContextError {
+    msg: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.msg, self.source)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        Some(&*self.source)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: `{}`", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn alternate_display_prints_chain() {
+        let e: Result<()> = std::result::Result::<(), _>::Err(io_err())
+            .context("reading manifest.json");
+        let e = e.unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.contains("reading manifest.json"), "{s}");
+        assert!(s.contains("missing thing"), "{s}");
+        // non-alternate shows only the outermost message
+        assert_eq!(format!("{e}"), "reading manifest.json");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("value absent").unwrap_err();
+        assert_eq!(format!("{e}"), "value absent");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{:#}", f(12).unwrap_err()).contains("x too big: 12"));
+        assert!(format!("{:#}", f(5).unwrap_err()).contains("five"));
+        let msg = "boom".to_string();
+        let e = anyhow!(msg);
+        assert_eq!(format!("{e}"), "boom");
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e = Error::new(io_err()).context("layer 1").context("layer 2");
+        assert_eq!(e.chain().count(), 3);
+        assert_eq!(format!("{}", e.root_cause()), "missing thing");
+    }
+}

@@ -1,0 +1,85 @@
+//! Minimal offline stand-in for the `log` facade.
+//!
+//! No pluggable logger registry — records above the compile-time threshold
+//! go straight to stderr with a level prefix, which is all the workspace
+//! needs (background worker threads reporting failures).
+
+use std::fmt;
+
+/// Log verbosity levels, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        })
+    }
+}
+
+/// Everything at or above this level is printed.
+pub const MAX_LEVEL: Level = Level::Info;
+
+/// Emit one record (used by the level macros; not called directly).
+pub fn __emit(level: Level, args: fmt::Arguments<'_>) {
+    if level <= MAX_LEVEL {
+        eprintln!("[{level}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Error, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Warn, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Info, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Trace, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Trace);
+    }
+
+    #[test]
+    fn macros_expand() {
+        // Just exercise the expansion paths; output goes to stderr.
+        error!("e {}", 1);
+        warn!("w");
+        info!("i {x}", x = 2);
+        debug!("suppressed");
+        trace!("suppressed");
+    }
+}

@@ -1,0 +1,65 @@
+//! Minimal offline stand-in for the `once_cell` crate, backed by
+//! `std::sync::OnceLock`. Only the `sync::Lazy` surface the workspace uses
+//! is provided.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access. Usable in `static` items:
+    /// the default initializer type is a plain fn pointer, so capture-free
+    /// closures coerce to it.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy {
+                cell: OnceLock::new(),
+                init,
+            }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        /// Force initialization and return the value.
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(&this.init)
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        static VALUE: Lazy<usize> = Lazy::new(|| {
+            CALLS.fetch_add(1, Ordering::SeqCst);
+            41 + 1
+        });
+
+        #[test]
+        fn initializes_once_in_static() {
+            assert_eq!(*VALUE, 42);
+            assert_eq!(*VALUE, 42);
+            assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+        }
+
+        #[test]
+        fn works_with_local_closures() {
+            let lazy = Lazy::new(|| vec![1, 2, 3]);
+            assert_eq!(lazy.len(), 3);
+        }
+    }
+}
