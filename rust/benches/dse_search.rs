@@ -2,12 +2,18 @@
 //! cold (fresh memoization cache per run) and warm (shared cache), for both
 //! strategies. The warm run must beat the cold run — that is the memoized
 //! evaluation cache doing its job (every candidate segment shared between
-//! partitions is costed once).
+//! partitions is costed once). Also times the plan-time tuned mapper cold
+//! vs warm, and the persistent-cache save/load roundtrip that carries the
+//! warmth across processes.
 
 mod common;
 
+use std::sync::Arc;
+
 use pipeorgan::config::{ArchConfig, TopologyKind};
+use pipeorgan::cost::Mapper;
 use pipeorgan::dse::{explore, DseConfig, EvalCache, SearchStrategy};
+use pipeorgan::mapper::TunedPipeOrgan;
 
 fn bench_strategy(strategy: SearchStrategy, task: &pipeorgan::ir::ModelGraph) {
     let cfg = ArchConfig::default();
@@ -50,6 +56,53 @@ fn bench_strategy(strategy: SearchStrategy, task: &pipeorgan::ir::ModelGraph) {
     );
 }
 
+/// Plan-time cost of the tuned mapper, cold vs warm, plus the persistent
+/// save/load roundtrip that makes the warm case reachable across
+/// processes.
+fn bench_tuned(task: &pipeorgan::ir::ModelGraph) {
+    let cfg = ArchConfig::default();
+    let name = format!("tuned_plan_{}", task.name);
+
+    let cold = common::bench(&format!("{name}_cold"), 0, 3, || {
+        TunedPipeOrgan::new(Arc::new(EvalCache::new()))
+            .plan(task, &cfg)
+            .segments
+            .len()
+    });
+
+    let cache = Arc::new(EvalCache::new());
+    TunedPipeOrgan::new(Arc::clone(&cache)).plan(task, &cfg);
+    let warm = common::bench(&format!("{name}_warm"), 1, 5, || {
+        TunedPipeOrgan::new(Arc::clone(&cache))
+            .plan(task, &cfg)
+            .segments
+            .len()
+    });
+    println!(
+        "{name}: warm vs cold mean speedup = {:.2}x",
+        cold.mean_ns / warm.mean_ns
+    );
+
+    let path = std::env::temp_dir().join(format!(
+        "pipeorgan_bench_cache_{}_{}.json",
+        std::process::id(),
+        task.name
+    ));
+    common::bench(&format!("{name}_save"), 0, 3, || {
+        cache.save_file(&path).unwrap();
+    });
+    let load = common::bench(&format!("{name}_load"), 0, 3, || {
+        let (loaded, _) = EvalCache::load_file(&path);
+        loaded.len()
+    });
+    println!(
+        "{name}: persisted {} entries (load mean {:.2} ms)",
+        cache.len(),
+        load.mean_ns / 1e6
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
 fn main() {
     let tasks = [
         pipeorgan::workloads::keyword_detection(),
@@ -59,4 +112,7 @@ fn main() {
         bench_strategy(SearchStrategy::Beam, task);
     }
     bench_strategy(SearchStrategy::Exhaustive, &tasks[0]);
+    for task in &tasks {
+        bench_tuned(task);
+    }
 }

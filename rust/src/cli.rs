@@ -60,13 +60,24 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+    /// Shared parse-or-default for integer-valued flags.
+    fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
         match self.get(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
                 .map_err(|_| format!("flag `--{name}` expects an integer, got `{v}`")),
         }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.get_parsed(name, default)
+    }
+
+    /// Like [`Args::get_usize`] for u64-valued flags (evaluation budgets,
+    /// cache sizes) where a platform-width integer would be wrong.
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        self.get_parsed(name, default)
     }
 
     pub fn has(&self, name: &str) -> bool {
@@ -118,5 +129,13 @@ mod tests {
     fn bad_integer_flag() {
         let a = Args::parse(&s(&["e2e", "--workers", "many"]), FLAGS).unwrap();
         assert!(a.get_usize("workers", 1).is_err());
+        assert!(a.get_u64("workers", 1).is_err());
+    }
+
+    #[test]
+    fn u64_flag_parses_and_defaults() {
+        let a = Args::parse(&s(&["e2e", "--workers", "4096"]), FLAGS).unwrap();
+        assert_eq!(a.get_u64("workers", 7).unwrap(), 4096);
+        assert_eq!(a.get_u64("out", 7).unwrap(), 7);
     }
 }

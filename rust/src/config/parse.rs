@@ -5,6 +5,9 @@
 pub enum ConfigError {
     Syntax { line: usize, text: String },
     UnknownKey { line: usize, key: String },
+    /// The same key assigned twice — silently keeping the last value hides
+    /// config mistakes, so it is rejected like the CLI's duplicate flags.
+    DuplicateKey { line: usize, key: String },
     BadValue {
         line: usize,
         key: String,
@@ -20,6 +23,9 @@ impl std::fmt::Display for ConfigError {
             }
             ConfigError::UnknownKey { line, key } => {
                 write!(f, "line {line}: unknown key `{key}`")
+            }
+            ConfigError::DuplicateKey { line, key } => {
+                write!(f, "line {line}: duplicate key `{key}`")
             }
             ConfigError::BadValue { line, key, why } => {
                 write!(f, "line {line}: bad value for `{key}`: {why}")
@@ -58,6 +64,12 @@ pub fn parse_kv(text: &str) -> Result<Vec<(String, String, usize)>, ConfigError>
                 text: raw.to_string(),
             });
         }
+        if out.iter().any(|(k, _, _)| k == key) {
+            return Err(ConfigError::DuplicateKey {
+                line: line_no,
+                key: key.to_string(),
+            });
+        }
         out.push((key.to_string(), val.to_string(), line_no));
     }
     Ok(out)
@@ -88,5 +100,14 @@ mod tests {
     fn rejects_empty_value() {
         assert!(parse_kv("a =").is_err());
         assert!(parse_kv("= 3").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_key() {
+        let err = parse_kv("a = 1\nb = 2\na = 3\n").unwrap_err();
+        assert!(
+            matches!(err, ConfigError::DuplicateKey { line: 3, ref key } if key == "a"),
+            "{err:?}"
+        );
     }
 }

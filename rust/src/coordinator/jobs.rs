@@ -7,6 +7,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::{ArchConfig, TopologyKind};
 use crate::cost::{evaluate, Mapper, ModelCost};
+use crate::dse::EvalCache;
 use crate::ir::ModelGraph;
 
 /// Which mapper to run (the trait objects themselves are not `Send`-bound
@@ -15,6 +16,11 @@ use crate::ir::ModelGraph;
 pub enum MapperKind {
     PipeOrgan,
     PipeOrganMesh,
+    /// Search-guided `mapper::TunedPipeOrgan` (the `--tuned` e2e path).
+    /// Hand [`run_jobs_with_cache`] a shared — ideally file-persistent —
+    /// `EvalCache` so the whole sweep plans warm; without one, each job
+    /// searches against a private cold cache.
+    PipeOrganTuned,
     TangramLike,
     SimbaLike,
     PipeOrganOn(TopologyKind),
@@ -22,9 +28,18 @@ pub enum MapperKind {
 
 impl MapperKind {
     pub fn instantiate(self) -> Box<dyn Mapper> {
+        self.instantiate_with(None)
+    }
+
+    /// Like [`MapperKind::instantiate`], with a shared evaluation cache for
+    /// the tuned mapper (the closed-form mappers ignore it).
+    pub fn instantiate_with(self, cache: Option<Arc<EvalCache>>) -> Box<dyn Mapper> {
         match self {
             MapperKind::PipeOrgan => Box::new(crate::mapper::PipeOrgan::default()),
             MapperKind::PipeOrganMesh => Box::new(crate::mapper::PipeOrgan::on_mesh()),
+            MapperKind::PipeOrganTuned => {
+                Box::new(crate::mapper::TunedPipeOrgan::new(cache.unwrap_or_default()))
+            }
             MapperKind::TangramLike => Box::new(crate::baselines::TangramLike),
             MapperKind::SimbaLike => Box::new(crate::baselines::SimbaLike),
             MapperKind::PipeOrganOn(t) => Box::new(crate::mapper::PipeOrgan::on(t)),
@@ -91,8 +106,20 @@ where
 
 /// Run all jobs over `workers` threads (order of results matches jobs).
 pub fn run_jobs(jobs: Vec<EvalJob>, workers: usize) -> Vec<EvalOutcome> {
-    run_queue(jobs, workers, |job: EvalJob| {
-        let mapper = job.mapper.instantiate();
+    run_jobs_with_cache(jobs, workers, None)
+}
+
+/// [`run_jobs`] with a shared segment-evaluation cache for
+/// [`MapperKind::PipeOrganTuned`] jobs: every tuned plan in the sweep memo-
+/// shares (and, when the cache was hydrated via `EvalCache::load_file`,
+/// inherits) segment costs instead of re-searching cold.
+pub fn run_jobs_with_cache(
+    jobs: Vec<EvalJob>,
+    workers: usize,
+    cache: Option<Arc<EvalCache>>,
+) -> Vec<EvalOutcome> {
+    run_queue(jobs, workers, move |job: EvalJob| {
+        let mapper = job.mapper.instantiate_with(cache.clone());
         let plan = mapper.plan(&job.graph, &job.cfg);
         let cost = evaluate(&job.graph, &plan, &job.cfg);
         EvalOutcome {
@@ -151,6 +178,29 @@ mod tests {
         });
         assert_eq!(out.len(), 100);
         assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn tuned_jobs_share_the_cache_and_agree() {
+        let cfg = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        let g = Arc::new(workloads::keyword_detection());
+        let jobs: Vec<EvalJob> = (0..2)
+            .map(|_| EvalJob {
+                graph: Arc::clone(&g),
+                mapper: MapperKind::PipeOrganTuned,
+                cfg: cfg.clone(),
+            })
+            .collect();
+        let cache = Arc::new(EvalCache::new());
+        let out = run_jobs_with_cache(jobs, 2, Some(Arc::clone(&cache)));
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|o| o.mapper_name == crate::mapper::TUNED_MAPPER_NAME));
+        assert_eq!(out[0].cost.cycles, out[1].cost.cycles);
+        assert!(!cache.is_empty(), "tuned jobs must populate the shared cache");
     }
 
     #[test]

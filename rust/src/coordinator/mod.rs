@@ -9,4 +9,4 @@ pub use executor::{
     compare_outputs, run_fused, run_op_by_op, run_pipelined, ExecReport, FusedSession,
     OpByOpSession, PipelinedSession, SegmentData,
 };
-pub use jobs::{run_jobs, run_queue, EvalJob, EvalOutcome, MapperKind};
+pub use jobs::{run_jobs, run_jobs_with_cache, run_queue, EvalJob, EvalOutcome, MapperKind};

@@ -53,6 +53,50 @@ impl SegmentCost {
     pub fn noc_bound(&self) -> bool {
         self.noc_cycles > self.pipeline_cycles
     }
+
+    /// Serialize for the persistent DSE cache (`dse::EvalCache::save_file`).
+    /// Field-for-field; [`SegmentCost::from_json`] is the exact inverse
+    /// (f64 values survive because the JSON writer emits shortest-roundtrip
+    /// representations).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("pipeline_cycles", self.pipeline_cycles)
+            .set("noc_cycles", self.noc_cycles)
+            .set("gb_cycles", self.gb_cycles)
+            .set("dram_cycles", self.dram_cycles)
+            .set("cycles", self.cycles)
+            .set("dram_words", self.dram_words)
+            .set(
+                "worst_channel_load_per_interval",
+                self.worst_channel_load_per_interval,
+            )
+            .set(
+                "bottleneck_compute_interval",
+                self.bottleneck_compute_interval,
+            )
+            .set("energy", self.energy)
+            .set("noc_energy", self.noc_energy);
+        o
+    }
+
+    /// Inverse of [`SegmentCost::to_json`]. `None` on any missing or
+    /// mistyped field — persistent-cache readers treat that as a skippable
+    /// corrupt entry, never an error.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<SegmentCost> {
+        let f = |key: &str| v.get(key).and_then(|x| x.as_f64());
+        Some(SegmentCost {
+            pipeline_cycles: f("pipeline_cycles")?,
+            noc_cycles: f("noc_cycles")?,
+            gb_cycles: f("gb_cycles")?,
+            dram_cycles: f("dram_cycles")?,
+            cycles: f("cycles")?,
+            dram_words: f("dram_words")? as u64,
+            worst_channel_load_per_interval: f("worst_channel_load_per_interval")?,
+            bottleneck_compute_interval: f("bottleneck_compute_interval")?,
+            energy: f("energy")?,
+            noc_energy: f("noc_energy")?,
+        })
+    }
 }
 
 /// Whole-model cost.
@@ -321,5 +365,30 @@ mod tests {
         assert!(c.cycles > 0.0 && c.energy > 0.0 && c.dram_words > 0);
         let sum: f64 = c.per_segment.iter().map(|s| s.cycles).sum();
         assert_eq!(c.cycles, sum);
+    }
+
+    #[test]
+    fn segment_cost_json_roundtrip_is_exact() {
+        let (g, plan) = depth2_plan(Organization::FineStriped1D, false);
+        let c = evaluate(&g, &plan, &cfg());
+        for s in &c.per_segment {
+            let text = s.to_json().to_pretty();
+            let parsed = crate::util::json::Json::parse(&text).unwrap();
+            let back = SegmentCost::from_json(&parsed).unwrap();
+            assert_eq!(&back, s, "roundtrip changed a field:\n{text}");
+        }
+    }
+
+    #[test]
+    fn segment_cost_from_json_rejects_missing_fields() {
+        let (g, plan) = depth2_plan(Organization::FineStriped1D, false);
+        let full = evaluate(&g, &plan, &cfg()).per_segment[0].to_json();
+        assert!(SegmentCost::from_json(&full).is_some());
+        let mut truncated = full.clone();
+        if let crate::util::json::Json::Obj(m) = &mut truncated {
+            m.remove("energy");
+        }
+        assert!(SegmentCost::from_json(&truncated).is_none());
+        assert!(SegmentCost::from_json(&crate::util::json::Json::Null).is_none());
     }
 }

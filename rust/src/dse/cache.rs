@@ -9,10 +9,19 @@
 //!
 //! The map is sharded 16 ways so parallel per-topology searches rarely
 //! contend, and hit/miss counters double as the search-budget meter.
+//!
+//! The cache is also *persistent*: [`EvalCache::save_file`] /
+//! [`EvalCache::load_file`] serialize it through `util::json` (versioned,
+//! fingerprint-keyed) so repeated CLI sweeps and CI runs start warm across
+//! processes. Loading is corruption-tolerant by design — a missing,
+//! truncated, version-skewed, or garbage file degrades to a cold start,
+//! and individually malformed entries are skipped: the cache is an
+//! optimization, never a correctness dependency.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -20,6 +29,13 @@ use crate::config::{ArchConfig, TopologyKind};
 use crate::cost::SegmentCost;
 use crate::ir::ModelGraph;
 use crate::spatial::Organization;
+use crate::util::json::Json;
+
+/// On-disk cache format version. Bump on any change to the entry layout or
+/// to the [`context_fingerprint`] recipe (old fingerprints would silently
+/// alias new ones otherwise); loaders reject any other version and fall
+/// back to a cold start.
+pub const CACHE_FILE_VERSION: u64 = 1;
 
 /// Cache coordinates of one evaluated segment:
 /// `(workload/config fingerprint, start, depth, organization, granularity
@@ -77,6 +93,31 @@ impl CacheStats {
     }
 }
 
+/// Per-run hit/miss accumulator for lookups made through
+/// [`EvalCache::get_or_eval_in`]. The cache's own counters are global to
+/// its lifetime (and shared by every concurrent user), so budget metering
+/// and per-run evaluation reporting go through one of these instead: a
+/// fresh `RunCounters` sees exactly its own run's lookups, no matter how
+/// many other searches hammer the same cache concurrently.
+#[derive(Debug, Default)]
+pub struct RunCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl RunCounters {
+    pub fn new() -> RunCounters {
+        RunCounters::default()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// Sharded memoization table for segment evaluations.
 pub struct EvalCache {
     shards: Vec<Mutex<HashMap<SegmentKey, SegmentCost>>>,
@@ -108,18 +149,31 @@ impl EvalCache {
     /// Return the cached cost for `key`, or compute it with `eval`, insert,
     /// and return it. `eval` runs *outside* the shard lock so parallel
     /// searches never serialize on shard collisions; the miss counter
-    /// counts distinct inserted keys (exact in sequential runs — budgeted
-    /// searches are sequential, so the budget meter stays precise; a rare
-    /// concurrent duplicate evaluation under contention is benign and
-    /// counted as a hit).
+    /// counts distinct inserted keys (a rare concurrent duplicate
+    /// evaluation under contention is benign and counted as a hit).
     pub fn get_or_eval(
         &self,
         key: SegmentKey,
         eval: impl FnOnce() -> SegmentCost,
     ) -> SegmentCost {
+        self.get_or_eval_in(key, eval, &RunCounters::default())
+    }
+
+    /// [`EvalCache::get_or_eval`] that additionally charges the lookup to a
+    /// caller-owned [`RunCounters`]. Search budgets and per-run evaluation
+    /// reports meter on `run`, not on the cache's global counters, so one
+    /// run's accounting stays exact even when other tasks/plans miss into
+    /// the same shared cache concurrently.
+    pub fn get_or_eval_in(
+        &self,
+        key: SegmentKey,
+        eval: impl FnOnce() -> SegmentCost,
+        run: &RunCounters,
+    ) -> SegmentCost {
         let shard = self.shard(&key);
         if let Some(cost) = shard.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            run.hits.fetch_add(1, Ordering::Relaxed);
             return cost.clone();
         }
         let cost = eval();
@@ -127,9 +181,11 @@ impl EvalCache {
         if let Some(existing) = map.get(&key) {
             // Another thread won the race; its value is identical.
             self.hits.fetch_add(1, Ordering::Relaxed);
+            run.hits.fetch_add(1, Ordering::Relaxed);
             return existing.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        run.misses.fetch_add(1, Ordering::Relaxed);
         map.insert(key, cost.clone());
         cost
     }
@@ -154,6 +210,132 @@ impl EvalCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Insert an already-known cost without touching the hit/miss counters:
+    /// hydrated entries are neither hits nor misses of this process's
+    /// searches, so the budget meter and the warm-vs-cold evaluation counts
+    /// stay exact.
+    pub fn preload(&self, key: SegmentKey, cost: SegmentCost) {
+        self.shard(&key).lock().unwrap().insert(key, cost);
+    }
+
+    /// Every `(key, cost)` entry, sorted by key coordinates so serialized
+    /// caches are byte-stable across runs (shard/HashMap order is not).
+    fn entries(&self) -> Vec<(SegmentKey, SegmentCost)> {
+        let mut out: Vec<(SegmentKey, SegmentCost)> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let map = shard.lock().unwrap();
+            out.extend(map.iter().map(|(k, c)| (*k, c.clone())));
+        }
+        out.sort_by_key(|((ctx, start, depth, org, scale, topo), _)| {
+            (*ctx, *start, *depth, org.name(), *scale, topo.name())
+        });
+        out
+    }
+
+    /// Serialize to the versioned on-disk format. Context fingerprints are
+    /// hex strings (they are full u64 hashes, which `Json::Num`'s f64 would
+    /// truncate); everything else is numeric or a stable enum name.
+    pub fn to_json(&self) -> Json {
+        let mut entries = Json::Arr(Vec::new());
+        for ((ctx, start, depth, org, scale, topo), cost) in self.entries() {
+            let mut e = Json::obj();
+            e.set("ctx", format!("{ctx:016x}"))
+                .set("start", start)
+                .set("depth", depth)
+                .set("org", org.name())
+                .set("scale", scale)
+                .set("topology", topo.name())
+                .set("cost", cost.to_json());
+            entries.push(e);
+        }
+        let mut o = Json::obj();
+        o.set("version", CACHE_FILE_VERSION).set("entries", entries);
+        o
+    }
+
+    /// Rebuild from a parsed cache document. A missing/unsupported version
+    /// or a malformed top level is an error (the caller degrades it to a
+    /// cold start); individually malformed *entries* are skipped so one
+    /// corrupt line never throws away the rest of a warm cache.
+    pub fn from_json(v: &Json) -> Result<EvalCache, String> {
+        let version = v
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or("cache file has no version field")? as u64;
+        if version != CACHE_FILE_VERSION {
+            return Err(format!(
+                "unsupported cache version {version} (expected {CACHE_FILE_VERSION})"
+            ));
+        }
+        let entries = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("cache file has no entries array")?;
+        let cache = EvalCache::new();
+        for e in entries {
+            if let Some((key, cost)) = parse_entry(e) {
+                cache.preload(key, cost);
+            }
+        }
+        Ok(cache)
+    }
+
+    /// Persist to `path` (pretty JSON, written via a sibling temp file +
+    /// rename so a crash mid-write never leaves a truncated cache behind).
+    pub fn save_file(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_pretty())?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Load from `path`, degrading to an empty (cold) cache on *any*
+    /// failure — missing file, unreadable file, truncated/garbage JSON, or
+    /// version skew. The outcome reports which of those happened so the
+    /// CLI can tell the user, but no failure mode is fatal.
+    pub fn load_file(path: &Path) -> (EvalCache, CacheLoadOutcome) {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => return (EvalCache::new(), CacheLoadOutcome::Cold),
+        };
+        match Json::parse(&text).and_then(|v| EvalCache::from_json(&v)) {
+            Ok(cache) => {
+                let entries = cache.len();
+                (cache, CacheLoadOutcome::Warm { entries })
+            }
+            Err(reason) => (EvalCache::new(), CacheLoadOutcome::Rejected { reason }),
+        }
+    }
+}
+
+/// One serialized cache entry back into `(key, cost)`; `None` (skip) on any
+/// malformed field.
+fn parse_entry(e: &Json) -> Option<(SegmentKey, SegmentCost)> {
+    let ctx = u64::from_str_radix(e.get("ctx")?.as_str()?, 16).ok()?;
+    let start = e.get("start")?.as_usize()?;
+    let depth = e.get("depth")?.as_usize()?;
+    let org = Organization::from_name(e.get("org")?.as_str()?)?;
+    let scale = e.get("scale")?.as_f64()? as u64;
+    let topo = TopologyKind::from_name(e.get("topology")?.as_str()?)?;
+    let cost = SegmentCost::from_json(e.get("cost")?)?;
+    Some(((ctx, start, depth, org, scale, topo), cost))
+}
+
+/// What [`EvalCache::load_file`] found at the path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheLoadOutcome {
+    /// No readable file — a normal cold start.
+    Cold,
+    /// Hydrated `entries` prior evaluations.
+    Warm { entries: usize },
+    /// A file existed but was rejected (corrupt or version-skewed); the
+    /// run proceeds from a cold cache.
+    Rejected { reason: String },
 }
 
 #[cfg(test)]
@@ -275,6 +457,126 @@ mod tests {
         assert_eq!(s.lookups(), 4);
         assert!((s.hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn run_counters_isolate_runs_sharing_one_cache() {
+        let c = EvalCache::new();
+        let run_a = RunCounters::new();
+        let run_b = RunCounters::new();
+        for i in 0..10 {
+            c.get_or_eval_in(key(i, 1), || cost(i as f64), &run_a);
+        }
+        for i in 0..10 {
+            c.get_or_eval_in(key(i, 1), || panic!("cached"), &run_b);
+        }
+        assert_eq!(run_a.stats(), CacheStats { hits: 0, misses: 10 });
+        assert_eq!(run_b.stats(), CacheStats { hits: 10, misses: 0 });
+        // The cache's own counters stay global across both runs.
+        assert_eq!(c.stats().lookups(), 20);
+    }
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "pipeorgan_cache_test_{}_{tag}.json",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_every_entry() {
+        let c = EvalCache::new();
+        for i in 0..25 {
+            c.get_or_eval(key(i, 1), || cost(i as f64 + 0.125));
+            c.get_or_eval(key(i, 4), || cost(i as f64 * 3.5));
+        }
+        let path = tmp_path("roundtrip");
+        c.save_file(&path).unwrap();
+        let (loaded, outcome) = EvalCache::load_file(&path);
+        assert_eq!(outcome, CacheLoadOutcome::Warm { entries: 50 });
+        assert_eq!(loaded.len(), c.len());
+        // Hydration counts as neither hits nor misses...
+        assert_eq!(loaded.stats(), CacheStats::default());
+        // ...and every lookup on the hydrated cache is a hit with the
+        // exact original value (no re-evaluation).
+        for i in 0..25 {
+            let got = loaded.get_or_eval(key(i, 1), || panic!("re-evaluated"));
+            assert_eq!(got, cost(i as f64 + 0.125));
+        }
+        assert_eq!(loaded.stats().hits, 25);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_file_is_a_cold_start() {
+        let (c, outcome) = EvalCache::load_file(&tmp_path("never_written"));
+        assert_eq!(outcome, CacheLoadOutcome::Cold);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn garbage_and_truncated_files_degrade_to_cold_start() {
+        for (tag, text) in [
+            ("garbage", "not json at all"),
+            ("truncated", "{\"version\": 1, \"entries\": [{\"ctx\""),
+            ("wrong_shape", "[1, 2, 3]"),
+            ("no_version", "{\"entries\": []}"),
+        ] {
+            let path = tmp_path(tag);
+            std::fs::write(&path, text).unwrap();
+            let (c, outcome) = EvalCache::load_file(&path);
+            assert!(
+                matches!(outcome, CacheLoadOutcome::Rejected { .. }),
+                "{tag}: expected rejection, got {outcome:?}"
+            );
+            assert!(c.is_empty(), "{tag}: rejected file must yield a cold cache");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn version_skew_is_rejected() {
+        let c = EvalCache::new();
+        c.get_or_eval(key(0, 1), || cost(1.0));
+        let mut doc = c.to_json();
+        doc.set("version", CACHE_FILE_VERSION + 1);
+        let path = tmp_path("version_skew");
+        std::fs::write(&path, doc.to_pretty()).unwrap();
+        let (loaded, outcome) = EvalCache::load_file(&path);
+        assert!(matches!(outcome, CacheLoadOutcome::Rejected { .. }));
+        assert!(loaded.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn malformed_entries_are_skipped_not_fatal() {
+        let c = EvalCache::new();
+        c.get_or_eval(key(0, 1), || cost(1.0));
+        c.get_or_eval(key(1, 1), || cost(2.0));
+        let mut doc = c.to_json();
+        if let Json::Obj(m) = &mut doc {
+            if let Some(Json::Arr(entries)) = m.get_mut("entries") {
+                // One bogus organization, one non-object entry.
+                let mut bad = entries[0].clone();
+                bad.set("org", "hexagonal");
+                entries.push(bad);
+                entries.push(Json::from("noise"));
+            }
+        }
+        let good = EvalCache::from_json(&doc).unwrap();
+        assert_eq!(good.len(), 2, "both well-formed entries survive");
+    }
+
+    #[test]
+    fn serialized_form_is_stable_and_parseable() {
+        let c = EvalCache::new();
+        for i in 0..10 {
+            c.get_or_eval(key(i, 1), || cost(i as f64));
+        }
+        let a = c.to_json().to_pretty();
+        let b = c.to_json().to_pretty();
+        assert_eq!(a, b, "serialization must be deterministic");
+        Json::parse(&a).unwrap();
     }
 
     #[test]

@@ -32,12 +32,22 @@ mod pareto;
 mod search;
 mod space;
 
-pub use cache::{context_fingerprint, CacheStats, EvalCache, SegmentKey};
+pub use cache::{
+    context_fingerprint, CacheLoadOutcome, CacheStats, EvalCache, RunCounters, SegmentKey,
+    CACHE_FILE_VERSION,
+};
 pub use pareto::{dominates, pareto_filter, ParetoPoint};
-pub use search::{explore, DseResult, PlanPoint};
+pub use search::{explore, tuned_plan, DseResult, PlanPoint};
 pub use space::{legal_depths, segment_candidates, CandidateSegment};
 
 use crate::config::TopologyKind;
+
+/// Default plan-time evaluation budget (cost-model calls, i.e. cache
+/// misses) of the tuned mapper. Sized so a cold plan of the largest zoo
+/// task stays interactive while still covering the shallow-depth slice of
+/// the space where the paper's Fig. 16–17 optima live; warm caches make it
+/// mostly irrelevant.
+pub const TUNED_DEFAULT_BUDGET: u64 = 4096;
 
 /// Search strategy selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -126,6 +136,19 @@ impl DseConfig {
         }
     }
 
+    /// Plan-time knobs of the tuned mapper: beam search over the mapper's
+    /// own `topology` under the default evaluation budget. Depth cap and
+    /// ladder are the full defaults — the budget, not the enumeration, is
+    /// what keeps plan-time search cheap.
+    pub fn tuned(topology: TopologyKind) -> Self {
+        Self {
+            strategy: SearchStrategy::Beam,
+            topologies: vec![topology],
+            budget: Some(TUNED_DEFAULT_BUDGET),
+            ..Self::default()
+        }
+    }
+
     /// Build from parsed CLI flags (the `dse` subcommand).
     pub fn from_cli(args: &crate::cli::Args) -> Result<DseConfig, String> {
         let mut dse = DseConfig::default();
@@ -137,7 +160,7 @@ impl DseConfig {
         dse.depth_cap = args.get_usize("depth-cap", dse.depth_cap)?.max(1);
         dse.ladder_rungs = args.get_usize("rungs", dse.ladder_rungs)?.max(1);
         if args.has("budget") {
-            dse.budget = Some(args.get_usize("budget", 0)? as u64);
+            dse.budget = Some(args.get_u64("budget", 0)?);
         }
         if let Some(list) = args.get("topologies") {
             let mut topos = Vec::new();
@@ -158,6 +181,8 @@ impl DseConfig {
 
 /// Flags accepted by the `dse` subcommand on top of the global ones
 /// (`(name, takes_value)` — the `cli::Args` strict-flag table format).
+/// `--cache-file` names the persistent [`EvalCache`] file: loaded (warm
+/// start) before the sweep, saved back after it.
 pub const DSE_FLAGS: &[(&str, bool)] = &[
     ("workload", true),
     ("strategy", true),
@@ -166,6 +191,7 @@ pub const DSE_FLAGS: &[(&str, bool)] = &[
     ("rungs", true),
     ("budget", true),
     ("topologies", true),
+    ("cache-file", true),
 ];
 
 #[cfg(test)]
@@ -224,6 +250,14 @@ mod tests {
             d.topologies,
             vec![TopologyKind::Amp, TopologyKind::Mesh]
         );
+    }
+
+    #[test]
+    fn tuned_config_is_budgeted_and_single_topology() {
+        let t = DseConfig::tuned(TopologyKind::Mesh);
+        assert_eq!(t.topologies, vec![TopologyKind::Mesh]);
+        assert_eq!(t.budget, Some(TUNED_DEFAULT_BUDGET));
+        assert_eq!(t.strategy, SearchStrategy::Beam);
     }
 
     #[test]

@@ -93,6 +93,55 @@ mod tests {
     }
 
     #[test]
+    fn ties_on_some_axes_are_kept_as_tradeoffs() {
+        // Equal on two axes, trading off on the third: neither dominates,
+        // both must survive.
+        let f = pareto_filter(vec![P([1.0, 5.0, 2.0]), P([1.0, 4.0, 3.0])]);
+        assert_eq!(f.len(), 2);
+        // Equal on two axes and strictly better on the third: dominated.
+        let f = pareto_filter(vec![P([1.0, 5.0, 2.0]), P([1.0, 5.0, 3.0])]);
+        assert_eq!(f, vec![P([1.0, 5.0, 2.0])]);
+    }
+
+    #[test]
+    fn many_equal_points_collapse_to_one() {
+        let f = pareto_filter(vec![P([2.0, 2.0, 2.0]); 7]);
+        assert_eq!(f, vec![P([2.0, 2.0, 2.0])]);
+    }
+
+    #[test]
+    fn degenerate_single_objective_front_keeps_only_the_minimum() {
+        // All points identical on two axes — the frontier degenerates to
+        // the single best point of the remaining objective, regardless of
+        // which axis varies.
+        for axis in 0..3 {
+            let pts: Vec<P> = [5.0, 3.0, 9.0, 3.5]
+                .iter()
+                .map(|&v| {
+                    let mut o = [1.0, 1.0, 1.0];
+                    o[axis] = v;
+                    P(o)
+                })
+                .collect();
+            let f = pareto_filter(pts);
+            assert_eq!(f.len(), 1, "axis {axis}");
+            assert_eq!(f[0].0[axis], 3.0, "axis {axis}");
+        }
+    }
+
+    #[test]
+    fn dominance_is_irreflexive_and_antisymmetric_on_ties() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.0, 2.0, 4.0];
+        assert!(!dominates(&a, &a), "irreflexive");
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a), "antisymmetric");
+        // Ties on every axis dominate in neither direction.
+        let c = [1.0, 2.0, 3.0];
+        assert!(!dominates(&a, &c) && !dominates(&c, &a));
+    }
+
+    #[test]
     fn no_point_dominates_another_in_output() {
         let pts: Vec<P> = (0..50)
             .map(|i| {

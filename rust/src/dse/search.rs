@@ -12,7 +12,7 @@
 
 use crate::config::{ArchConfig, TopologyKind};
 use crate::coordinator::run_queue;
-use crate::cost::{evaluate, evaluate_segment, MappingPlan};
+use crate::cost::{evaluate, evaluate_segment, Mapper, MappingPlan};
 use crate::energy::EnergyModel;
 use crate::ir::ModelGraph;
 use crate::mapper::PipeOrgan;
@@ -20,7 +20,7 @@ use crate::noc::Topology;
 use crate::pipeline::Segment;
 use crate::spatial::Organization;
 
-use super::cache::EvalCache;
+use super::cache::{EvalCache, RunCounters};
 use super::pareto::{pareto_filter, ParetoPoint};
 use super::space;
 use super::{DseConfig, SearchStrategy};
@@ -33,7 +33,8 @@ pub struct PlanPoint {
     pub energy: f64,
     pub dram_words: u64,
     /// `"search"` for explored points, `"heuristic"` for the seeded
-    /// heuristic-mapper plan.
+    /// heuristic-mapper plan, `"tuned"` for the budgeted plan-time search
+    /// behind `mapper::TunedPipeOrgan`.
     pub source: &'static str,
 }
 
@@ -52,9 +53,18 @@ pub struct DseResult {
     /// baseline), and seeded into the frontier candidates whenever its
     /// topology is inside the searched set.
     pub heuristic: PlanPoint,
+    /// The plan `mapper::TunedPipeOrgan` would ship at plan time: a
+    /// budgeted beam search on the heuristic mapper's own topology (or the
+    /// first searched topology when a `--topologies` restriction excludes
+    /// it), seeded with that topology's heuristic plan. Always on a
+    /// searched topology and always a frontier candidate, so
+    /// [`DseResult::best`] is never costlier than it; never costlier than
+    /// [`DseResult::heuristic`] whenever the heuristic's topology is
+    /// searched (always true for the defaults).
+    pub tuned: PlanPoint,
     /// Pareto frontier over (cycles, energy, DRAM words), ascending by
     /// cycles. Non-empty, and restricted to the searched topologies (plus
-    /// the heuristic seed when its topology is searched).
+    /// the heuristic and tuned seeds when their topology is searched).
     pub frontier: Vec<PlanPoint>,
     /// Cost-model evaluations this run added to the cache (cache misses).
     pub evaluations: u64,
@@ -81,6 +91,16 @@ impl DseResult {
     pub fn gap(&self) -> f64 {
         self.heuristic.cycles / self.best().cycles
     }
+
+    /// Heuristic-over-tuned latency ratio: the share of [`DseResult::gap`]
+    /// the production tuned mapper actually recovers. ≥ 1 by the tuned
+    /// mapper's never-lose fallback whenever the heuristic's topology is
+    /// searched; under a `--topologies` restriction excluding it, tuned is
+    /// confined to the restriction and the ratio may honestly drop below 1
+    /// (mirroring [`DseResult::gap`]).
+    pub fn tuned_gap(&self) -> f64 {
+        self.heuristic.cycles / self.tuned.cycles
+    }
 }
 
 /// A DP prefix label: objective sums plus the segment coordinates needed to
@@ -99,9 +119,13 @@ impl ParetoPoint for Label {
     }
 }
 
-fn budget_exhausted(dse: &DseConfig, cache: &EvalCache) -> bool {
+/// Has this *run* spent its evaluation budget? Metered on the run's own
+/// [`RunCounters`], not the cache's global counters, so neither a warm
+/// (possibly file-hydrated) cache nor other tasks missing into the same
+/// shared cache concurrently can spend this run's budget.
+fn budget_exhausted(dse: &DseConfig, run: &RunCounters) -> bool {
     dse.budget
-        .map(|b| cache.stats().misses >= b)
+        .map(|b| run.stats().misses >= b)
         .unwrap_or(false)
 }
 
@@ -117,12 +141,20 @@ fn prune(labels: &mut Vec<Label>, cap: usize) {
 }
 
 /// DP over one topology. Returns the Pareto labels of complete plans.
+///
+/// `seed` (the heuristic mapper's plan, when its topology matches) is
+/// injected as prefix labels at each of its segment boundaries before the
+/// DP runs: the search explores *around* the heuristic's cuts from the
+/// start instead of rediscovering them, and the complete seeded label makes
+/// the heuristic plan itself a member of the final label set.
 fn search_topology(
     graph: &ModelGraph,
     cfg: &ArchConfig,
     dse: &DseConfig,
     cache: &EvalCache,
     topology: TopologyKind,
+    run: &RunCounters,
+    seed: Option<&MappingPlan>,
 ) -> Vec<Label> {
     let n = graph.num_layers();
     if n == 0 {
@@ -142,6 +174,36 @@ fn search_topology(
         dram: 0,
         segs: Vec::new(),
     });
+    if let Some(plan) = seed.filter(|p| p.topology == topology) {
+        let mut acc = Label {
+            cycles: 0.0,
+            energy: 0.0,
+            dram: 0,
+            segs: Vec::new(),
+        };
+        for ps in &plan.segments {
+            // The heuristic always plans at granularity scale 1, so its
+            // segments live at the same cache coordinates the enumerator
+            // would use (`space::build_planned(.., org, 1)` rebuilds them
+            // bit-identically).
+            let key = (
+                ctx,
+                ps.segment.start,
+                ps.segment.depth,
+                ps.organization,
+                1u64,
+                topology,
+            );
+            let cost =
+                cache.get_or_eval_in(key, || evaluate_segment(graph, ps, cfg, &topo, &em), run);
+            acc.cycles += cost.cycles;
+            acc.energy += cost.energy;
+            acc.dram += cost.dram_words;
+            acc.segs
+                .push((ps.segment.start, ps.segment.depth, ps.organization, 1u64));
+            frontiers[ps.segment.end()].push(acc.clone());
+        }
+    }
     for i in 0..n {
         prune(&mut frontiers[i], cap);
         if frontiers[i].is_empty() {
@@ -149,16 +211,18 @@ fn search_topology(
         }
         for d in space::legal_depths(graph, cfg, i, dse.depth_cap) {
             let seg = Segment::new(i, d);
-            let candidates = if budget_exhausted(dse, cache) {
+            let candidates = if budget_exhausted(dse, run) {
                 vec![space::heuristic_candidate(graph, cfg, &seg)]
             } else {
                 space::segment_candidates(graph, cfg, &seg, dse.ladder_rungs)
             };
             for cand in candidates {
                 let key = (ctx, i, d, cand.organization, cand.gran_scale, topology);
-                let cost = cache.get_or_eval(key, || {
-                    evaluate_segment(graph, &cand.planned, cfg, &topo, &em)
-                });
+                let cost = cache.get_or_eval_in(
+                    key,
+                    || evaluate_segment(graph, &cand.planned, cfg, &topo, &em),
+                    run,
+                );
                 let fresh: Vec<Label> = frontiers[i]
                     .iter()
                     .map(|lab| {
@@ -230,7 +294,10 @@ pub fn explore(
     cache: &EvalCache,
     workers: usize,
 ) -> DseResult {
-    let before = cache.stats();
+    // All of this run's lookups are metered here, so the reported
+    // evaluations/hit counts (and the budget) stay exact even when other
+    // tasks share the cache concurrently.
+    let run = RunCounters::new();
     let heur_plan = PipeOrgan::default().plan(graph, cfg);
     let heur_cost = evaluate(graph, &heur_plan, cfg);
     let heuristic = PlanPoint {
@@ -247,22 +314,43 @@ pub fn explore(
         dse.topologies.clone()
     };
     let heuristic_in_space = topologies.contains(&heuristic.plan.topology);
+    // The tuned mapper searches the heuristic's own topology when it is
+    // inside the searched set; under a `--topologies` restriction that
+    // excludes it, tuned searches the first *searched* topology instead so
+    // the reported tuned plan never violates the restriction.
+    let tuned_base = if heuristic_in_space {
+        PipeOrgan::default()
+    } else {
+        PipeOrgan::on(topologies[0])
+    };
     let parallel = workers > 1 && topologies.len() > 1 && dse.budget.is_none();
     let per_topology: Vec<(TopologyKind, Vec<Label>)> = if parallel {
         run_queue(topologies, workers, |t| {
-            (t, search_topology(graph, cfg, dse, cache, t))
+            (t, search_topology(graph, cfg, dse, cache, t, &run, None))
         })
     } else {
         topologies
             .into_iter()
-            .map(|t| (t, search_topology(graph, cfg, dse, cache, t)))
+            .map(|t| (t, search_topology(graph, cfg, dse, cache, t, &run, None)))
             .collect()
     };
 
-    // Seed the heuristic plan into the frontier candidates — but only when
-    // its topology is inside the searched set, so a `--topologies`
-    // restriction is never violated by the reported frontier/oracle.
-    let mut points = Vec::new();
+    // The production tuned-mapper plan, for the heuristic-vs-tuned-vs-
+    // oracle gap report. It shares this run's cache, so when its topology
+    // was just searched this costs (almost) no extra evaluations; its
+    // budget is its own plan-time window either way.
+    let mut tuned_cfg = dse.clone();
+    if tuned_cfg.budget.is_none() {
+        tuned_cfg.budget = Some(super::TUNED_DEFAULT_BUDGET);
+    }
+    let tuned_run = RunCounters::new();
+    let tuned = tuned_plan(graph, cfg, &tuned_base, &tuned_cfg, cache, &tuned_run);
+
+    // The tuned plan always lives on a searched topology (see above), so
+    // it is always a frontier candidate — the reported oracle can never
+    // lose to it. The heuristic seed joins only when its topology is
+    // searched, so a `--topologies` restriction is never violated.
+    let mut points = vec![tuned.clone()];
     if heuristic_in_space {
         points.push(heuristic.clone());
     }
@@ -271,20 +359,65 @@ pub fn explore(
             points.push(rebuild(graph, cfg, dse, topology, &label));
         }
     }
-    if points.is_empty() {
-        // Degenerate case (e.g. an empty model with the heuristic topology
-        // excluded): fall back to the heuristic so `best()` is total.
-        points.push(heuristic.clone());
-    }
     let frontier = pareto_filter(points);
-    let after = cache.stats();
+    let run_stats = run.stats();
+    let tuned_stats = tuned_run.stats();
     DseResult {
         workload: graph.name.clone(),
         strategy: dse.strategy,
         heuristic,
+        tuned,
         frontier,
-        evaluations: after.misses - before.misses,
-        cache_hits: after.hits - before.hits,
+        evaluations: run_stats.misses + tuned_stats.misses,
+        cache_hits: run_stats.hits + tuned_stats.hits,
+    }
+}
+
+/// The plan-time budgeted search behind `mapper::TunedPipeOrgan` (and the
+/// `tuned` column of `report::dse_gap`): beam-search `base`'s own topology
+/// under `dse`'s knobs and evaluation budget, seeded with `base`'s
+/// heuristic plan, and return the latency-best result. The heuristic plan
+/// is the fallback whenever the search cannot strictly improve on it, so
+/// **tuned never loses to the heuristic** — the only question is how much
+/// of the oracle gap the budget recovers.
+///
+/// The cache is caller-owned and usually persistent
+/// (`EvalCache::load_file`), which is what makes a plan-time search
+/// affordable: across CLI sweeps and CI runs, repeated shapes hit the
+/// memoized segment costs instead of the cost model. `run` meters this
+/// search's evaluations (pass a fresh [`RunCounters`] per plan call so the
+/// budget is an exact per-plan window, even when many plans share one
+/// cache concurrently).
+pub fn tuned_plan(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    base: &PipeOrgan,
+    dse: &DseConfig,
+    cache: &EvalCache,
+    run: &RunCounters,
+) -> PlanPoint {
+    let heur_plan = base.plan(graph, cfg);
+    let heur_cost = evaluate(graph, &heur_plan, cfg);
+    let labels = search_topology(graph, cfg, dse, cache, base.topology, run, Some(&heur_plan));
+    let best = labels
+        .into_iter()
+        .min_by(|a, b| a.cycles.partial_cmp(&b.cycles).unwrap());
+    if let Some(label) = best {
+        if label.cycles < heur_cost.cycles {
+            let mut point = rebuild(graph, cfg, dse, base.topology, &label);
+            point.plan.mapper_name = crate::mapper::TUNED_MAPPER_NAME.into();
+            point.source = "tuned";
+            return point;
+        }
+    }
+    let mut plan = heur_plan;
+    plan.mapper_name = crate::mapper::TUNED_MAPPER_NAME.into();
+    PlanPoint {
+        plan,
+        cycles: heur_cost.cycles,
+        energy: heur_cost.energy,
+        dram_words: heur_cost.dram_words,
+        source: "tuned",
     }
 }
 
@@ -441,6 +574,66 @@ mod tests {
     }
 
     #[test]
+    fn tuned_point_sits_between_heuristic_and_oracle() {
+        let g = synthetic::aw_chain(2.0, 6);
+        let cfg = small_cfg();
+        let r = explore(
+            &g,
+            &cfg,
+            &tiny_dse(SearchStrategy::Beam),
+            &EvalCache::new(),
+            1,
+        );
+        assert_eq!(r.tuned.source, "tuned");
+        assert_eq!(r.tuned.plan.mapper_name, crate::mapper::TUNED_MAPPER_NAME);
+        r.tuned.plan.validate(&g, &cfg).unwrap();
+        assert!(
+            r.tuned.cycles <= r.heuristic.cycles * 1.0001,
+            "tuned {} must never lose to heuristic {}",
+            r.tuned.cycles,
+            r.heuristic.cycles
+        );
+        assert!(
+            r.best().cycles <= r.tuned.cycles * 1.0001,
+            "oracle {} must never lose to tuned {}",
+            r.best().cycles,
+            r.tuned.cycles
+        );
+        assert!(r.tuned_gap() >= 0.9999);
+    }
+
+    #[test]
+    fn tuned_plan_under_zero_budget_is_valid_and_never_loses() {
+        let g = synthetic::pointwise_conv_segment(3);
+        let cfg = small_cfg();
+        let mut dse = tiny_dse(SearchStrategy::Beam);
+        dse.budget = Some(0);
+        let cache = EvalCache::new();
+        let point = tuned_plan(&g, &cfg, &PipeOrgan::default(), &dse, &cache, &RunCounters::new());
+        point.plan.validate(&g, &cfg).unwrap();
+        assert_eq!(point.plan.mapper_name, crate::mapper::TUNED_MAPPER_NAME);
+        let heur = evaluate(&g, &PipeOrgan::default().plan(&g, &cfg), &cfg);
+        assert!(point.cycles <= heur.cycles * 1.0001);
+    }
+
+    #[test]
+    fn budget_is_relative_to_run_not_cache_lifetime() {
+        let g = synthetic::pointwise_conv_segment(3);
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let mut dse = tiny_dse(SearchStrategy::Beam);
+        dse.budget = Some(100_000);
+        let cold = explore(&g, &cfg, &dse, &cache, 1);
+        assert!(cold.evaluations > 0);
+        // A second budgeted run over the warm cache must not mistake past
+        // misses for spent budget: it completes fully memoized with the
+        // same optimum instead of degrading to heuristic-only enumeration.
+        let warm = explore(&g, &cfg, &dse, &cache, 1);
+        assert_eq!(warm.evaluations, 0);
+        assert_eq!(warm.best().cycles, cold.best().cycles);
+    }
+
+    #[test]
     fn topology_restriction_keeps_frontier_inside_it() {
         // The heuristic defaults to AMP; restricting the search to Mesh
         // must keep AMP out of the reported frontier and oracle.
@@ -458,6 +651,10 @@ mod tests {
                 "excluded topology leaked into the frontier"
             );
         }
+        // The tuned plan is confined to the restriction too, and the
+        // reported oracle never loses to it.
+        assert_eq!(r.tuned.plan.topology, TopologyKind::Mesh);
+        assert!(r.best().cycles <= r.tuned.cycles * 1.0001);
     }
 
     #[test]

@@ -23,16 +23,24 @@
 //! `dse`-only flags (rejected on every other subcommand): `--workload
 //! <name|all>` (comma lists allowed), `--strategy <beam|exhaustive>`,
 //! `--beam <n>`, `--depth-cap <n>`, `--rungs <n>`, `--budget <n>`,
-//! `--topologies <a,b,..>`.
+//! `--topologies <a,b,..>`, `--cache-file <file>` (persistent evaluation
+//! cache: loaded before the sweep, saved back after it).
+//!
+//! `e2e`-only flags: `--tuned` (run the search-guided `PipeOrgan::tuned`
+//! mapper in the PipeOrgan column) and `--cache-file <file>` (shared
+//! persistent cache for the tuned sweep).
+
+use std::sync::Arc;
 
 use pipeorgan::cli::Args;
 use pipeorgan::config::ArchConfig;
 use pipeorgan::coordinator as coord;
-use pipeorgan::dse::{DseConfig, DSE_FLAGS};
+use pipeorgan::coordinator::MapperKind;
+use pipeorgan::dse::{CacheLoadOutcome, DseConfig, EvalCache, DSE_FLAGS};
 use pipeorgan::report;
 use pipeorgan::workloads;
 
-const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST]";
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --cache-file FILE]";
 
 const FLAGS: &[(&str, bool)] = &[
     ("out", true),
@@ -42,14 +50,55 @@ const FLAGS: &[(&str, bool)] = &[
     ("seed", true),
 ];
 
-/// Strict known-flag table for a subcommand: the `dse` extras are only
-/// legal on `dse` (typos and misplaced flags stay hard errors).
+/// Strict known-flag table for a subcommand: the `dse` and `e2e` extras
+/// are only legal on their own subcommand (typos and misplaced flags stay
+/// hard errors).
 fn known_flags(subcommand: &str) -> Vec<(&'static str, bool)> {
     let mut flags: Vec<(&'static str, bool)> = FLAGS.to_vec();
     if subcommand == "dse" {
         flags.extend_from_slice(DSE_FLAGS);
     }
+    if subcommand == "e2e" {
+        flags.push(("tuned", false));
+        flags.push(("cache-file", true));
+    }
     flags
+}
+
+/// Load the persistent evaluation cache named by `--cache-file` (cold and
+/// silent when the flag is absent), reporting what happened — a rejected
+/// file degrades to a cold start by design, never an error.
+fn load_cache(args: &Args) -> (Option<std::path::PathBuf>, EvalCache) {
+    let Some(path) = args.get("cache-file").map(std::path::PathBuf::from) else {
+        return (None, EvalCache::new());
+    };
+    let (cache, outcome) = EvalCache::load_file(&path);
+    match outcome {
+        CacheLoadOutcome::Cold => {
+            println!("cache: cold start ({} not found)", path.display())
+        }
+        CacheLoadOutcome::Warm { entries } => {
+            println!("cache: warm start ({entries} entries from {})", path.display())
+        }
+        CacheLoadOutcome::Rejected { reason } => {
+            eprintln!(
+                "cache: ignoring {} ({reason}); continuing cold",
+                path.display()
+            )
+        }
+    }
+    (Some(path), cache)
+}
+
+/// Save the cache back when `--cache-file` was given.
+fn save_cache(path: &Option<std::path::PathBuf>, cache: &EvalCache) -> anyhow::Result<()> {
+    if let Some(p) = path {
+        cache
+            .save_file(p)
+            .map_err(|e| anyhow::anyhow!("saving cache to {}: {e}", p.display()))?;
+        println!("cache: saved {} entries to {}", cache.len(), p.display());
+    }
+    Ok(())
 }
 
 fn main() {
@@ -99,10 +148,37 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
             report::fig8_12_traffic(&cfg),
             report::table2_bottlenecks(&cfg),
         ]),
-        "e2e" => emit(vec![
-            report::fig13_performance(&cfg, workers),
-            report::fig14_dram(&cfg, workers),
-        ]),
+        "e2e" => {
+            if args.has("cache-file") && !args.has("tuned") {
+                anyhow::bail!(
+                    "flag `--cache-file` on e2e requires `--tuned` (only the tuned mapper uses the evaluation cache)"
+                );
+            }
+            if args.has("tuned") {
+                let (cache_file, cache) = load_cache(&args);
+                let cache = Arc::new(cache);
+                emit(vec![
+                    report::fig13_with(
+                        &cfg,
+                        workers,
+                        MapperKind::PipeOrganTuned,
+                        Some(Arc::clone(&cache)),
+                    ),
+                    report::fig14_with(
+                        &cfg,
+                        workers,
+                        MapperKind::PipeOrganTuned,
+                        Some(Arc::clone(&cache)),
+                    ),
+                ])?;
+                save_cache(&cache_file, &cache)
+            } else {
+                emit(vec![
+                    report::fig13_performance(&cfg, workers),
+                    report::fig14_dram(&cfg, workers),
+                ])
+            }
+        }
         "congestion" => emit(vec![report::fig15_congestion(&cfg)]),
         "depth" => emit(vec![report::fig16_depth(&cfg)]),
         "granularity" => emit(vec![report::fig17_granularity(&cfg)]),
@@ -116,7 +192,9 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
         "dse" => {
             let dse_cfg = DseConfig::from_cli(&args).map_err(|e| anyhow::anyhow!(e))?;
             let tasks = resolve_workloads(args.get_or("workload", "all"))?;
-            emit(report::run_dse_reports(&cfg, tasks, &dse_cfg, workers))
+            let (cache_file, cache) = load_cache(&args);
+            emit(report::run_dse_reports(&cfg, tasks, &dse_cfg, workers, &cache))?;
+            save_cache(&cache_file, &cache)
         }
         "run-segment" => run_segment(&artifacts, seed),
         other => anyhow::bail!("unknown subcommand `{other}`\n{USAGE}"),

@@ -2,11 +2,16 @@
 //! partitioning, intra-operator dataflow selection and granularity — then
 //! stage 2 — MAC-ratio PE allocation and spatial-organization selection.
 //! Runs on AMP by default (the paper's proposed configuration); a
-//! mesh-constrained variant is provided for ablations.
+//! mesh-constrained variant is provided for ablations, and
+//! [`PipeOrgan::tuned`] upgrades the closed-form rules to a plan-time
+//! budgeted beam search that can only match or beat them (see
+//! [`TunedPipeOrgan`]).
 
 mod oracle;
+mod tuned;
 
 pub use oracle::{candidates as organization_candidates, OracleOrganization};
+pub use tuned::{TunedPipeOrgan, TUNED_MAPPER_NAME};
 
 use crate::config::{ArchConfig, TopologyKind};
 use crate::cost::{Mapper, MappingPlan, PlannedHandoff, PlannedSegment};

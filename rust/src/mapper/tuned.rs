@@ -1,0 +1,195 @@
+//! `PipeOrgan::tuned` — the search-guided production mapper.
+//!
+//! The paper's central argument (§V, Fig. 16–17) is that the right
+//! pipeline depth/granularity/organization is shape-dependent and must be
+//! *searched*, not hard-coded; the `report::dse_gap` table quantifies how
+//! much the closed-form Sec. IV heuristic leaves on the table. This mapper
+//! closes that gap at plan time: it runs a budgeted beam search
+//! (`dse::tuned_plan`) over the heuristic mapper's own topology, reusing
+//! the `dse::space` enumeration and the memoized — and usually persistent —
+//! `dse::EvalCache`, and ships whichever plan is faster.
+//!
+//! Two properties make it safe as the default planning path:
+//!
+//! 1. **Never loses.** The heuristic plan seeds the beam and is the
+//!    fallback whenever the search cannot strictly improve on it, so
+//!    `tuned` is latency-equal-or-better than `PipeOrgan` on every model,
+//!    by construction.
+//! 2. **Bounded plan time.** The search charges cost-model evaluations
+//!    (cache misses) against a budget; once exhausted, enumeration narrows
+//!    to the heuristic candidate per segment and the DP completes cheaply.
+//!    With a warm [`EvalCache`] (shared across a sweep, or hydrated from a
+//!    `--cache-file`), repeated shapes plan at memo-lookup speed.
+
+use std::sync::Arc;
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::cost::{Mapper, MappingPlan};
+use crate::dse::{tuned_plan, DseConfig, EvalCache, RunCounters};
+use crate::ir::ModelGraph;
+
+use super::PipeOrgan;
+
+/// `MappingPlan::mapper_name` of every plan this mapper ships (both the
+/// search-improved and the heuristic-fallback branches).
+pub const TUNED_MAPPER_NAME: &str = "pipeorgan_tuned";
+
+/// The search-guided PipeOrgan mapper. Construct via
+/// [`PipeOrgan::tuned`], [`TunedPipeOrgan::new`] or
+/// [`TunedPipeOrgan::on`].
+#[derive(Clone)]
+pub struct TunedPipeOrgan {
+    /// The closed-form mapper searched around (its plan seeds the beam and
+    /// is the never-lose fallback); also fixes the topology.
+    pub base: PipeOrgan,
+    /// Plan-time search knobs (strategy/beam/depth/ladder/budget). The
+    /// topology actually searched is always `base.topology`.
+    pub search: DseConfig,
+    /// Shared memoized segment-cost cache. Pass one cache across a sweep
+    /// (and persist it with `EvalCache::save_file`) so repeated shapes
+    /// plan warm.
+    pub cache: Arc<EvalCache>,
+}
+
+impl TunedPipeOrgan {
+    /// Tuned mapper on the paper's default AMP topology.
+    pub fn new(cache: Arc<EvalCache>) -> Self {
+        Self::on(TopologyKind::Amp, cache)
+    }
+
+    /// Tuned mapper on an explicit topology.
+    pub fn on(topology: TopologyKind, cache: Arc<EvalCache>) -> Self {
+        Self {
+            base: PipeOrgan::on(topology),
+            search: DseConfig::tuned(topology),
+            cache,
+        }
+    }
+
+    /// Override the plan-time evaluation budget (`0` degenerates to the
+    /// heuristic-candidates-only search, which still explores segment
+    /// boundaries but no alternative organizations/granularities).
+    pub fn with_budget(mut self, budget: u64) -> Self {
+        self.search.budget = Some(budget);
+        self
+    }
+}
+
+impl Mapper for TunedPipeOrgan {
+    fn name(&self) -> &'static str {
+        TUNED_MAPPER_NAME
+    }
+
+    fn topology(&self) -> TopologyKind {
+        self.base.topology
+    }
+
+    fn plan(&self, graph: &ModelGraph, cfg: &ArchConfig) -> MappingPlan {
+        // A fresh per-plan meter keeps the search budget an exact per-plan
+        // window even when a whole sweep shares `self.cache`.
+        tuned_plan(
+            graph,
+            cfg,
+            &self.base,
+            &self.search,
+            &self.cache,
+            &RunCounters::new(),
+        )
+        .plan
+    }
+}
+
+impl PipeOrgan {
+    /// Ship the search-guided variant of this mapper: a plan-time budgeted
+    /// beam search over `self`'s topology that can only match or beat the
+    /// closed-form plan (see [`TunedPipeOrgan`]).
+    pub fn tuned(self, cache: Arc<EvalCache>) -> TunedPipeOrgan {
+        TunedPipeOrgan {
+            search: DseConfig::tuned(self.topology),
+            base: self,
+            cache,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::evaluate;
+    use crate::workloads;
+
+    fn small_cfg() -> ArchConfig {
+        ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        }
+    }
+
+    #[test]
+    fn tuned_never_loses_to_heuristic() {
+        let cfg = small_cfg();
+        let cache = Arc::new(EvalCache::new());
+        for g in [
+            workloads::keyword_detection(),
+            workloads::gaze_estimation(),
+        ] {
+            let heur = evaluate(&g, &PipeOrgan::default().plan(&g, &cfg), &cfg);
+            let mapper = PipeOrgan::default().tuned(Arc::clone(&cache));
+            let plan = mapper.plan(&g, &cfg);
+            plan.validate(&g, &cfg)
+                .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            assert_eq!(plan.mapper_name, TUNED_MAPPER_NAME);
+            let tuned = evaluate(&g, &plan, &cfg);
+            assert!(
+                tuned.cycles <= heur.cycles * 1.0001,
+                "{}: tuned {} vs heuristic {}",
+                g.name,
+                tuned.cycles,
+                heur.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn warm_cache_makes_replanning_free() {
+        let cfg = small_cfg();
+        let g = workloads::keyword_detection();
+        let cache = Arc::new(EvalCache::new());
+        // Unbounded budget: a budget-truncated cold search could otherwise
+        // legitimately differ from the warm (all-hits) replan.
+        let mapper = TunedPipeOrgan::new(Arc::clone(&cache)).with_budget(u64::MAX);
+        let first = mapper.plan(&g, &cfg);
+        let cold_misses = cache.stats().misses;
+        assert!(cold_misses > 0, "cold plan must evaluate candidates");
+        let second = mapper.plan(&g, &cfg);
+        assert_eq!(
+            cache.stats().misses,
+            cold_misses,
+            "replanning the same shape must be all cache hits"
+        );
+        assert_eq!(first, second, "tuned planning is deterministic");
+    }
+
+    #[test]
+    fn zero_budget_still_plans_and_cannot_lose() {
+        let cfg = small_cfg();
+        let g = workloads::gaze_estimation();
+        let mapper = TunedPipeOrgan::new(Arc::new(EvalCache::new())).with_budget(0);
+        let plan = mapper.plan(&g, &cfg);
+        plan.validate(&g, &cfg).unwrap();
+        let heur = evaluate(&g, &PipeOrgan::default().plan(&g, &cfg), &cfg);
+        let tuned = evaluate(&g, &plan, &cfg);
+        assert!(tuned.cycles <= heur.cycles * 1.0001);
+    }
+
+    #[test]
+    fn tuned_respects_its_topology() {
+        let cfg = small_cfg();
+        let g = workloads::keyword_detection();
+        let mapper = TunedPipeOrgan::on(TopologyKind::Mesh, Arc::new(EvalCache::new()));
+        assert_eq!(mapper.topology(), TopologyKind::Mesh);
+        let plan = mapper.plan(&g, &cfg);
+        assert_eq!(plan.topology, TopologyKind::Mesh);
+    }
+}

@@ -14,19 +14,22 @@ use super::Report;
 
 /// Explore every task (parallel across tasks; a single task parallelizes
 /// across its topologies instead) and return the per-task results.
+///
+/// The cache is caller-owned and shared by the whole sweep — keys are
+/// scoped by a workload/config fingerprint, so tasks never collide. Pass a
+/// cache hydrated via `EvalCache::load_file` to start the sweep warm
+/// across processes, and save it back afterwards.
 pub fn explore_all(
     cfg: &ArchConfig,
     tasks: Vec<ModelGraph>,
     dse: &DseConfig,
     workers: usize,
+    cache: &EvalCache,
 ) -> Vec<DseResult> {
     // Split the worker budget: tasks fan out over the queue, and each task
     // spends its share on per-topology parallelism inside `explore`.
     let inner_workers = (workers / tasks.len().max(1)).max(1);
-    run_queue(tasks, workers, |g| {
-        let cache = EvalCache::new();
-        explore(&g, cfg, dse, &cache, inner_workers)
-    })
+    run_queue(tasks, workers, |g| explore(&g, cfg, dse, cache, inner_workers))
 }
 
 /// Run the exploration and emit both reports (`pipeorgan dse`).
@@ -35,8 +38,9 @@ pub fn run_dse_reports(
     tasks: Vec<ModelGraph>,
     dse: &DseConfig,
     workers: usize,
+    cache: &EvalCache,
 ) -> Vec<Report> {
-    let results = explore_all(cfg, tasks, dse, workers);
+    let results = explore_all(cfg, tasks, dse, workers, cache);
     vec![dse_frontier(cfg, dse, &results), dse_gap(dse, &results)]
 }
 
@@ -100,6 +104,7 @@ pub fn dse_frontier(cfg: &ArchConfig, dse: &DseConfig, results: &[DseResult]) ->
             .set("evaluations", r.evaluations)
             .set("cache_hits", r.cache_hits)
             .set("heuristic", plan_point_json(&r.heuristic))
+            .set("tuned", plan_point_json(&r.tuned))
             .set("best", plan_point_json(r.best()))
             .set("frontier", frontier);
         arr.push(t);
@@ -117,17 +122,22 @@ pub fn dse_frontier(cfg: &ArchConfig, dse: &DseConfig, results: &[DseResult]) ->
     }
 }
 
-/// Heuristic-vs-oracle gap table: how much latency/DRAM the closed-form
-/// mapper leaves on the table versus the searched optimum.
+/// Heuristic-vs-tuned-vs-oracle gap table: how much latency/DRAM the
+/// closed-form mapper leaves on the table versus the searched optimum, and
+/// how much of it the production `PipeOrgan::tuned` mapper recovers at
+/// plan time under its budget.
 pub fn dse_gap(dse: &DseConfig, results: &[DseResult]) -> Report {
     let mut table = Table::new(
-        "DSE — heuristic mapper vs searched oracle",
+        "DSE — heuristic mapper vs tuned mapper vs searched oracle",
         &[
             "task",
             "heuristic cycles",
+            "tuned cycles",
             "oracle cycles",
+            "gap (heur/tuned)",
             "gap (heur/oracle)",
             "heuristic DRAM",
+            "tuned DRAM",
             "oracle DRAM",
             "oracle topology",
             "evals",
@@ -137,15 +147,20 @@ pub fn dse_gap(dse: &DseConfig, results: &[DseResult]) -> Report {
     let mut json = Json::obj();
     let mut arr = Json::Arr(vec![]);
     let mut gaps = Vec::new();
+    let mut tuned_gaps = Vec::new();
     for r in results {
         let best = r.best();
         gaps.push(r.gap());
+        tuned_gaps.push(r.tuned_gap());
         table.row(&[
             r.workload.clone(),
             fnum(r.heuristic.cycles),
+            fnum(r.tuned.cycles),
             fnum(best.cycles),
+            fnum(r.tuned_gap()),
             fnum(r.gap()),
             r.heuristic.dram_words.to_string(),
+            r.tuned.dram_words.to_string(),
             best.dram_words.to_string(),
             best.plan.topology.name().to_string(),
             r.evaluations.to_string(),
@@ -158,9 +173,12 @@ pub fn dse_gap(dse: &DseConfig, results: &[DseResult]) -> Report {
         let mut t = Json::obj();
         t.set("task", r.workload.clone())
             .set("heuristic_cycles", r.heuristic.cycles)
+            .set("tuned_cycles", r.tuned.cycles)
             .set("oracle_cycles", best.cycles)
+            .set("tuned_gap", r.tuned_gap())
             .set("gap", r.gap())
             .set("heuristic_dram_words", r.heuristic.dram_words)
+            .set("tuned_dram_words", r.tuned.dram_words)
             .set("oracle_dram_words", best.dram_words)
             .set("oracle_topology", best.plan.topology.name())
             .set("evaluations", r.evaluations)
@@ -172,14 +190,18 @@ pub fn dse_gap(dse: &DseConfig, results: &[DseResult]) -> Report {
             "GEOMEAN".into(),
             "".into(),
             "".into(),
+            "".into(),
+            fnum(geomean(&tuned_gaps)),
             fnum(geomean(&gaps)),
             "".into(),
             "".into(),
             "".into(),
             "".into(),
             "".into(),
+            "".into(),
         ]);
-        json.set("geomean_gap", geomean(&gaps));
+        json.set("geomean_gap", geomean(&gaps))
+            .set("geomean_tuned_gap", geomean(&tuned_gaps));
     }
     json.set("strategy", dse.strategy.name()).set("workloads", arr);
     Report {
@@ -221,7 +243,7 @@ mod tests {
             synthetic::aw_chain(2.0, 4),
             synthetic::pointwise_conv_segment(3),
         ];
-        let reports = run_dse_reports(&cfg, tasks, &dse, 2);
+        let reports = run_dse_reports(&cfg, tasks, &dse, 2, &EvalCache::new());
         assert_eq!(reports.len(), 2);
         assert_eq!(reports[0].name, "dse_frontier");
         assert_eq!(reports[1].name, "dse_gap");
@@ -230,8 +252,25 @@ mod tests {
         assert!(frontier_json.contains("pointwise"), "{frontier_json}");
         crate::util::json::Json::parse(&frontier_json).unwrap();
         crate::util::json::Json::parse(&reports[1].json.to_pretty()).unwrap();
-        // Gap table carries the geomean rollup row.
-        assert!(reports[1].table.to_markdown().contains("GEOMEAN"));
+        // Gap table carries the geomean rollup row and the tuned column.
+        let gap_md = reports[1].table.to_markdown();
+        assert!(gap_md.contains("GEOMEAN"));
+        assert!(gap_md.contains("tuned cycles"), "{gap_md}");
+    }
+
+    #[test]
+    fn gap_json_reports_tuned_between_heuristic_and_oracle() {
+        let (cfg, dse) = small();
+        let tasks = vec![synthetic::aw_chain(2.0, 4)];
+        let results = explore_all(&cfg, tasks, &dse, 1, &EvalCache::new());
+        let gap = dse_gap(&dse, &results);
+        for t in gap.json.get("workloads").unwrap().as_arr().unwrap() {
+            let heur = t.get("heuristic_cycles").and_then(|x| x.as_f64()).unwrap();
+            let tuned = t.get("tuned_cycles").and_then(|x| x.as_f64()).unwrap();
+            let orac = t.get("oracle_cycles").and_then(|x| x.as_f64()).unwrap();
+            assert!(tuned <= heur * 1.0001, "tuned {tuned} vs heuristic {heur}");
+            assert!(orac <= tuned * 1.0001, "oracle {orac} vs tuned {tuned}");
+        }
     }
 
     #[test]
@@ -242,8 +281,20 @@ mod tests {
             synthetic::equal_conv_segment(3),
         ];
         let names: Vec<String> = tasks.iter().map(|g| g.name.clone()).collect();
-        let results = explore_all(&cfg, tasks, &dse, 4);
+        let results = explore_all(&cfg, tasks, &dse, 4, &EvalCache::new());
         let got: Vec<String> = results.iter().map(|r| r.workload.clone()).collect();
         assert_eq!(got, names);
+    }
+
+    #[test]
+    fn shared_cache_makes_second_sweep_free() {
+        let (cfg, dse) = small();
+        let cache = EvalCache::new();
+        let mk_tasks = || vec![synthetic::pointwise_conv_segment(3)];
+        let cold = explore_all(&cfg, mk_tasks(), &dse, 1, &cache);
+        assert!(cold[0].evaluations > 0);
+        let warm = explore_all(&cfg, mk_tasks(), &dse, 1, &cache);
+        assert_eq!(warm[0].evaluations, 0, "sweep-shared cache must be warm");
+        assert_eq!(warm[0].best().cycles, cold[0].best().cycles);
     }
 }

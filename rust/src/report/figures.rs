@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use crate::config::{ArchConfig, TopologyKind};
-use crate::coordinator::{run_jobs, EvalJob};
+use crate::coordinator::{run_jobs_with_cache, EvalJob, MapperKind};
 use crate::dataflow::IntensityReport;
 use crate::ir::skips::SkipProfile;
 use crate::noc::Topology;
@@ -237,17 +237,26 @@ pub fn table2_bottlenecks(cfg: &ArchConfig) -> Report {
     }
 }
 
-fn e2e_outcomes(cfg: &ArchConfig, workers: usize) -> Vec<(String, [crate::cost::ModelCost; 3], f64)> {
-    use crate::coordinator::jobs::MapperKind;
+/// Display label of the mapper filling the "PipeOrgan" column of the e2e
+/// reports.
+fn primary_label(primary: MapperKind) -> &'static str {
+    match primary {
+        MapperKind::PipeOrganTuned => "PipeOrgan-tuned",
+        _ => "PipeOrgan",
+    }
+}
+
+fn e2e_outcomes(
+    cfg: &ArchConfig,
+    workers: usize,
+    primary: MapperKind,
+    cache: Option<Arc<crate::dse::EvalCache>>,
+) -> Vec<(String, [crate::cost::ModelCost; 3], f64)> {
     let tasks = workloads::all_tasks();
     let mut jobs = Vec::new();
     for g in &tasks {
         let graph = Arc::new(g.clone());
-        for mapper in [
-            MapperKind::PipeOrgan,
-            MapperKind::TangramLike,
-            MapperKind::SimbaLike,
-        ] {
+        for mapper in [primary, MapperKind::TangramLike, MapperKind::SimbaLike] {
             jobs.push(EvalJob {
                 graph: Arc::clone(&graph),
                 mapper,
@@ -255,7 +264,7 @@ fn e2e_outcomes(cfg: &ArchConfig, workers: usize) -> Vec<(String, [crate::cost::
             });
         }
     }
-    let outcomes = run_jobs(jobs, workers);
+    let outcomes = run_jobs_with_cache(jobs, workers, cache);
     outcomes
         .chunks(3)
         .map(|c| {
@@ -270,10 +279,23 @@ fn e2e_outcomes(cfg: &ArchConfig, workers: usize) -> Vec<(String, [crate::cost::
 
 /// E9 / Fig. 13: end-to-end performance normalized to TANGRAM-like.
 pub fn fig13_performance(cfg: &ArchConfig, workers: usize) -> Report {
-    let rows = e2e_outcomes(cfg, workers);
+    fig13_with(cfg, workers, MapperKind::PipeOrgan, None)
+}
+
+/// [`fig13_performance`] with the PipeOrgan column filled by `primary` —
+/// the `pipeorgan e2e --tuned` path runs [`MapperKind::PipeOrganTuned`]
+/// here with a (possibly file-hydrated) shared evaluation cache, turning
+/// the DSE into the production planning path of the whole-zoo sweep.
+pub fn fig13_with(
+    cfg: &ArchConfig,
+    workers: usize,
+    primary: MapperKind,
+    cache: Option<Arc<crate::dse::EvalCache>>,
+) -> Report {
+    let rows = e2e_outcomes(cfg, workers, primary, cache);
     let mut table = Table::new(
         "Fig. 13 — end-to-end performance (normalized to TANGRAM-like; higher is better)",
-        &["task", "PipeOrgan", "TANGRAM-like", "SIMBA-like"],
+        &["task", primary_label(primary), "TANGRAM-like", "SIMBA-like"],
     );
     let mut sp_po = Vec::new();
     let mut sp_sb = Vec::new();
@@ -308,6 +330,7 @@ pub fn fig13_performance(cfg: &ArchConfig, workers: usize) -> Report {
     ]);
     json.set("rows", arr)
         .set("geomean_pipeorgan_vs_tangram", geomean(&sp_po))
+        .set("primary_mapper", primary_label(primary))
         .set("paper_geomean", 1.95);
     Report {
         name: "fig13_performance",
@@ -318,10 +341,21 @@ pub fn fig13_performance(cfg: &ArchConfig, workers: usize) -> Report {
 
 /// E10 / Fig. 14: normalized DRAM accesses (lower is better).
 pub fn fig14_dram(cfg: &ArchConfig, workers: usize) -> Report {
-    let rows = e2e_outcomes(cfg, workers);
+    fig14_with(cfg, workers, MapperKind::PipeOrgan, None)
+}
+
+/// [`fig14_dram`] with the PipeOrgan column filled by `primary` (see
+/// [`fig13_with`]).
+pub fn fig14_with(
+    cfg: &ArchConfig,
+    workers: usize,
+    primary: MapperKind,
+    cache: Option<Arc<crate::dse::EvalCache>>,
+) -> Report {
+    let rows = e2e_outcomes(cfg, workers, primary, cache);
     let mut table = Table::new(
         "Fig. 14 — end-to-end DRAM accesses (normalized to TANGRAM-like; lower is better)",
-        &["task", "PipeOrgan", "TANGRAM-like", "SIMBA-like"],
+        &["task", primary_label(primary), "TANGRAM-like", "SIMBA-like"],
     );
     let mut ratios = Vec::new();
     let mut json = Json::obj();
@@ -347,6 +381,7 @@ pub fn fig14_dram(cfg: &ArchConfig, workers: usize) -> Report {
     ]);
     json.set("rows", arr)
         .set("geomean_reduction", 1.0 - geomean(&ratios))
+        .set("primary_mapper", primary_label(primary))
         .set("paper_reduction", 0.31);
     Report {
         name: "fig14_dram",

@@ -30,6 +30,19 @@ impl Organization {
         }
     }
 
+    /// Inverse of [`Organization::name`] (used by the persistent DSE cache
+    /// when rehydrating segment keys).
+    pub fn from_name(s: &str) -> Option<Organization> {
+        match s {
+            "blocked_1d" => Some(Organization::Blocked1D),
+            "blocked_2d" => Some(Organization::Blocked2D),
+            "fine_striped_1d" => Some(Organization::FineStriped1D),
+            "checkerboard_2d" => Some(Organization::Checkerboard2D),
+            "sequential" => Some(Organization::Sequential),
+            _ => None,
+        }
+    }
+
     pub fn is_interleaved(self) -> bool {
         matches!(
             self,
@@ -379,5 +392,19 @@ mod tests {
         let p = Placement::build(8, 9, Organization::Blocked2D, &[1, 1, 1]);
         p.validate().unwrap();
         assert_eq!(p.idle_pes(), 0);
+    }
+
+    #[test]
+    fn organization_names_roundtrip() {
+        for org in [
+            Organization::Blocked1D,
+            Organization::Blocked2D,
+            Organization::FineStriped1D,
+            Organization::Checkerboard2D,
+            Organization::Sequential,
+        ] {
+            assert_eq!(Organization::from_name(org.name()), Some(org));
+        }
+        assert_eq!(Organization::from_name("bogus"), None);
     }
 }

@@ -42,13 +42,6 @@ impl Json {
         self
     }
 
-    /// Serialize to a compact string.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
-    }
-
     /// Serialize with 2-space indentation.
     pub fn to_pretty(&self) -> String {
         let mut s = String::new();
@@ -118,6 +111,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact (no-whitespace) serialization; `Json::to_string()` comes from
+/// this impl via the blanket `ToString`.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        f.write_str(&s)
     }
 }
 

@@ -1,16 +1,20 @@
 //! Integration tests for the DSE engine: end-to-end exploration over real
-//! zoo workloads, the heuristic-vs-oracle guarantee, the strict CLI flag
-//! policy for the `dse` subcommand, and the enumeration invariants the
-//! search relies on (granularity floor, organization coverage).
+//! zoo workloads, the heuristic-vs-tuned-vs-oracle guarantees, the
+//! persistent-cache warm-start path, the strict CLI flag policy for the
+//! `dse` subcommand, and the enumeration invariants the search relies on
+//! (granularity floor, organization coverage).
 
 use pipeorgan::cli::Args;
 use pipeorgan::config::{ArchConfig, TopologyKind};
+use pipeorgan::cost::{evaluate, Mapper};
 use pipeorgan::dataflow::{choose_dataflow, LoopNest};
 use pipeorgan::dse::{
-    dominates, explore, legal_depths, segment_candidates, DseConfig, EvalCache, ParetoPoint,
-    SearchStrategy, DSE_FLAGS,
+    dominates, explore, legal_depths, segment_candidates, CacheLoadOutcome, DseConfig, EvalCache,
+    ParetoPoint, SearchStrategy, DSE_FLAGS,
 };
-use pipeorgan::mapper::{clamp_granularity, organization_candidates};
+use pipeorgan::mapper::{
+    clamp_granularity, organization_candidates, PipeOrgan, TunedPipeOrgan, TUNED_MAPPER_NAME,
+};
 use pipeorgan::pipeline::{pair_granularity, Segment};
 use pipeorgan::report::run_dse_reports;
 use pipeorgan::spatial::{choose_organization, Organization, Placement};
@@ -97,7 +101,7 @@ fn frontier_points_are_valid_and_mutually_non_dominating() {
 fn dse_reports_emit_frontier_json_and_gap_table() {
     let cfg = small_cfg();
     let dse = quick_dse();
-    let reports = run_dse_reports(&cfg, zoo_tasks(), &dse, 2);
+    let reports = run_dse_reports(&cfg, zoo_tasks(), &dse, 2, &EvalCache::new());
     assert_eq!(reports.len(), 2);
 
     let dir = std::env::temp_dir().join(format!("pipeorgan_dse_test_{}", std::process::id()));
@@ -117,13 +121,159 @@ fn dse_reports_emit_frontier_json_and_gap_table() {
     let gap = pipeorgan::util::json::Json::parse(&gap_text).unwrap();
     for t in gap.get("workloads").and_then(|w| w.as_arr()).unwrap() {
         let heur = t.get("heuristic_cycles").and_then(|x| x.as_f64()).unwrap();
+        let tuned = t.get("tuned_cycles").and_then(|x| x.as_f64()).unwrap();
         let orac = t.get("oracle_cycles").and_then(|x| x.as_f64()).unwrap();
         assert!(
-            orac <= heur * 1.0001,
-            "gap table must never show the oracle losing: {orac} vs {heur}"
+            tuned <= heur * 1.0001,
+            "gap table must never show tuned losing to the heuristic: {tuned} vs {heur}"
+        );
+        assert!(
+            orac <= tuned * 1.0001,
+            "gap table must never show the oracle losing to tuned: {orac} vs {tuned}"
         );
     }
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- the tuned mapper on real zoo workloads (acceptance criteria) ----------
+
+#[test]
+fn tuned_matches_or_beats_heuristic_on_all_three_zoo_workloads() {
+    let cfg = small_cfg();
+    let dse = quick_dse();
+    let cache = EvalCache::new();
+    for g in zoo_tasks() {
+        let r = explore(&g, &cfg, &dse, &cache, 1);
+        assert!(
+            r.tuned.cycles <= r.heuristic.cycles * 1.0001,
+            "{}: tuned {} must match or beat heuristic {}",
+            g.name,
+            r.tuned.cycles,
+            r.heuristic.cycles
+        );
+        assert!(r.tuned_gap() >= 0.9999, "{}", g.name);
+        r.tuned
+            .plan
+            .validate(&g, &cfg)
+            .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        assert_eq!(r.tuned.plan.mapper_name, TUNED_MAPPER_NAME);
+    }
+}
+
+#[test]
+fn tuned_mapper_plans_validate_and_never_lose_via_mapper_api() {
+    let cfg = small_cfg();
+    let cache = std::sync::Arc::new(EvalCache::new());
+    for g in zoo_tasks() {
+        let tuned = PipeOrgan::default().tuned(std::sync::Arc::clone(&cache));
+        let plan = tuned.plan(&g, &cfg);
+        plan.validate(&g, &cfg)
+            .unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        let heur = evaluate(&g, &PipeOrgan::default().plan(&g, &cfg), &cfg);
+        let got = evaluate(&g, &plan, &cfg);
+        assert!(
+            got.cycles <= heur.cycles * 1.0001,
+            "{}: tuned mapper {} vs heuristic {}",
+            g.name,
+            got.cycles,
+            heur.cycles
+        );
+    }
+}
+
+// ---- persistent cache: cold vs warm across "processes" ---------------------
+
+#[test]
+fn cache_file_warm_rerun_performs_strictly_fewer_evaluations() {
+    let cfg = small_cfg();
+    let dse = quick_dse();
+    let g = workloads::keyword_detection();
+    let path = std::env::temp_dir().join(format!(
+        "pipeorgan_dse_warm_test_{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    // Cold run: fresh cache, then persist it — the `pipeorgan dse
+    // --cache-file` save path.
+    let cold_cache = EvalCache::new();
+    let cold = explore(&g, &cfg, &dse, &cold_cache, 1);
+    assert!(cold.evaluations > 0, "cold run must evaluate candidates");
+    cold_cache.save_file(&path).unwrap();
+
+    // Warm run: a new cache hydrated from the file stands in for a second
+    // process. It must do strictly fewer evaluations (in fact zero, the
+    // same as an in-process rerun) and reach the same optimum.
+    let (warm_cache, outcome) = EvalCache::load_file(&path);
+    assert!(matches!(outcome, CacheLoadOutcome::Warm { entries } if entries > 0));
+    let warm = explore(&g, &cfg, &dse, &warm_cache, 1);
+    assert!(
+        warm.evaluations < cold.evaluations,
+        "warm rerun must evaluate strictly less: {} vs {}",
+        warm.evaluations,
+        cold.evaluations
+    );
+    assert_eq!(
+        warm.evaluations, 0,
+        "a file-hydrated cache must match an in-process rerun exactly"
+    );
+    assert!(warm.cache_hits > 0);
+    assert_eq!(warm.best().cycles, cold.best().cycles);
+    assert_eq!(warm.tuned.cycles, cold.tuned.cycles);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_cache_file_degrades_to_cold_start_not_panic() {
+    let cfg = small_cfg();
+    let dse = quick_dse();
+    let g = workloads::keyword_detection();
+    let path = std::env::temp_dir().join(format!(
+        "pipeorgan_dse_corrupt_test_{}.json",
+        std::process::id()
+    ));
+    std::fs::write(&path, "{\"version\": 1, \"entries\": [{\"trunc").unwrap();
+    let (cache, outcome) = EvalCache::load_file(&path);
+    assert!(matches!(outcome, CacheLoadOutcome::Rejected { .. }));
+    // The run proceeds exactly like a cold start.
+    let r = explore(&g, &cfg, &dse, &cache, 1);
+    assert!(r.evaluations > 0);
+    assert!(r.best().cycles <= r.heuristic.cycles * 1.0001);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn tuned_mapper_warm_starts_from_cache_file() {
+    let cfg = small_cfg();
+    let g = workloads::gaze_estimation();
+    let path = std::env::temp_dir().join(format!(
+        "pipeorgan_tuned_warm_test_{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+
+    // Unbounded budget: a budget-truncated cold search could otherwise
+    // legitimately differ from the warm (all-hits) replan.
+    let cold_cache = std::sync::Arc::new(EvalCache::new());
+    let cold_plan = TunedPipeOrgan::new(std::sync::Arc::clone(&cold_cache))
+        .with_budget(u64::MAX)
+        .plan(&g, &cfg);
+    let cold_misses = cold_cache.stats().misses;
+    assert!(cold_misses > 0);
+    cold_cache.save_file(&path).unwrap();
+
+    let (loaded, _) = EvalCache::load_file(&path);
+    let warm_cache = std::sync::Arc::new(loaded);
+    let warm_plan = TunedPipeOrgan::new(std::sync::Arc::clone(&warm_cache))
+        .with_budget(u64::MAX)
+        .plan(&g, &cfg);
+    assert!(
+        warm_cache.stats().misses < cold_misses,
+        "file-hydrated planning must evaluate strictly less: {} vs {cold_misses}",
+        warm_cache.stats().misses
+    );
+    assert_eq!(warm_plan, cold_plan, "warm planning must reach the same plan");
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
