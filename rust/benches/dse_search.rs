@@ -25,6 +25,7 @@ fn bench_strategy(strategy: SearchStrategy, task: &pipeorgan::ir::ModelGraph) {
         topologies: vec![TopologyKind::Amp, TopologyKind::Mesh],
         budget: None,
         max_labels: 64,
+        ..DseConfig::default()
     };
     let name = format!("dse_{}_{}", strategy.name(), task.name);
 

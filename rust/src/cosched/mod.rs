@@ -1,0 +1,161 @@
+//! Multi-workload co-scheduling: several concurrent XR tasks share one PE
+//! array (see DESIGN.md §Cosched).
+//!
+//! The single-model stack — mapper, DSE, cost model — optimizes one
+//! `ModelGraph` on a dedicated array. The XR deployments the paper targets
+//! run *sets* of such models concurrently (eye segmentation + gaze
+//! estimation + keyword detection), so the planning question one level up
+//! is: how should the array be split between them? This subsystem answers
+//! it:
+//!
+//! - [`scenario`]: a [`Scenario`] is a task list with per-task rates and
+//!   deadlines, with canned XR scenarios built from `workloads::tasks`;
+//! - [`region`]: rectangular per-task array regions
+//!   ([`RegionPartition`]), region-scoped architecture configs
+//!   ([`region_config`]), and the composed whole-array
+//!   [`ScenarioPlacement`] that validates tasks never overlap;
+//! - [`search`]: the co-scheduling search ([`schedule`]) — a dynamic
+//!   program whose state is *array occupancy* (columns consumed so far),
+//!   extending the DSE's Pareto-label machinery so per-task region widths
+//!   are chosen jointly. Per-(task, width) costs are memoized in the
+//!   shared `dse::EvalCache` (region configs fingerprint distinctly, so
+//!   persistent cache files warm-start co-scheduling too) and evaluated in
+//!   parallel over `coordinator::run_queue`.
+//!
+//! The even-column split is always seeded as a candidate, so the
+//! co-scheduled makespan can never exceed the naive even split — mirroring
+//! the tuned mapper's never-lose guarantee one level up. `pipeorgan
+//! cosched` runs it end to end and `report::cosched` tabulates per-task
+//! latency/energy and scenario makespan for solo-array vs naive-split vs
+//! co-scheduled allocations.
+
+mod region;
+mod scenario;
+mod search;
+
+pub use region::{even_widths, region_config, Region, RegionPartition, ScenarioPlacement};
+pub use scenario::{
+    canned_scenarios, scenario_by_name, scenario_names, xr_core, xr_hands, xr_world, Scenario,
+    TaskSpec,
+};
+pub use search::{
+    canned_live_contexts, schedule, CoschedOutcome, CoschedResult, TaskAssignment,
+};
+
+/// Knobs of one co-scheduling run. CLI flags map 1:1 onto these (see
+/// [`COSCHED_FLAGS`]).
+#[derive(Debug, Clone)]
+pub struct CoschedConfig {
+    /// Column-width quantum of candidate regions: widths are multiples of
+    /// this (the even-split widths are always added as candidates too).
+    /// Coarser quanta shrink the search; finer quanta find tighter splits.
+    pub quantum: usize,
+    /// Plan each region with the budgeted tuned search
+    /// (`mapper::TunedPipeOrgan`'s plan path) instead of the closed-form
+    /// heuristic. Slower, never worse per region.
+    pub tuned: bool,
+    /// Tuned-search evaluation budget per (task, width) plan
+    /// (`dse::TUNED_DEFAULT_BUDGET` when unset).
+    pub budget: Option<u64>,
+    /// Pareto labels kept per occupancy state in the allocation DP.
+    pub max_labels: usize,
+}
+
+impl Default for CoschedConfig {
+    fn default() -> Self {
+        Self {
+            quantum: 4,
+            tuned: false,
+            budget: None,
+            max_labels: 16,
+        }
+    }
+}
+
+impl CoschedConfig {
+    /// Build from parsed CLI flags (the `cosched` subcommand).
+    pub fn from_cli(args: &crate::cli::Args) -> Result<CoschedConfig, String> {
+        if args.has("budget") && !args.has("tuned") {
+            return Err(
+                "flag `--budget` on cosched requires `--tuned` (only the tuned search is budgeted)"
+                    .into(),
+            );
+        }
+        let defaults = CoschedConfig::default();
+        Ok(CoschedConfig {
+            quantum: args.get_usize("quantum", defaults.quantum)?.max(1),
+            tuned: args.has("tuned"),
+            budget: if args.has("budget") {
+                Some(args.get_u64("budget", 0)?)
+            } else {
+                None
+            },
+            max_labels: defaults.max_labels,
+        })
+    }
+}
+
+/// Flags accepted by the `cosched` subcommand on top of the global ones
+/// (`(name, takes_value)` — the `cli::Args` strict-flag table format).
+/// `--scenario` names canned scenarios (`all`, one name, or a comma list);
+/// `--cache-file`/`--cache-cap` manage the persistent evaluation cache
+/// exactly as on `dse`.
+pub const COSCHED_FLAGS: &[(&str, bool)] = &[
+    ("scenario", true),
+    ("quantum", true),
+    ("tuned", false),
+    ("budget", true),
+    ("cache-file", true),
+    ("cache-cap", true),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Args;
+
+    fn parse_cs(v: &[&str]) -> Result<CoschedConfig, String> {
+        let mut flags: Vec<(&str, bool)> = vec![("out", true), ("workers", true)];
+        flags.extend_from_slice(COSCHED_FLAGS);
+        let raw: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+        let args = Args::parse(&raw, &flags)?;
+        CoschedConfig::from_cli(&args)
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let cs = CoschedConfig::default();
+        assert!(cs.quantum >= 1 && cs.max_labels >= 1);
+        assert!(!cs.tuned);
+        assert!(cs.budget.is_none());
+    }
+
+    #[test]
+    fn cli_flags_parse_into_config() {
+        let cs = parse_cs(&[
+            "cosched",
+            "--scenario",
+            "xr-core",
+            "--quantum",
+            "2",
+            "--tuned",
+            "--budget",
+            "500",
+        ])
+        .unwrap();
+        assert_eq!(cs.quantum, 2);
+        assert!(cs.tuned);
+        assert_eq!(cs.budget, Some(500));
+    }
+
+    #[test]
+    fn bad_flags_rejected() {
+        assert!(parse_cs(&["cosched", "--quantum", "two"]).is_err());
+        assert!(parse_cs(&["cosched", "--nope"]).is_err());
+        // quantum 0 clamps to 1 instead of dividing by zero later
+        assert_eq!(parse_cs(&["cosched", "--quantum", "0"]).unwrap().quantum, 1);
+        // A budget without the tuned search would be silently dead — reject.
+        assert!(parse_cs(&["cosched", "--budget", "100"]).is_err());
+        assert!(parse_cs(&["cosched", "--budget", "100", "--tuned"]).is_ok());
+    }
+}

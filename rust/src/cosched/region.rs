@@ -1,0 +1,355 @@
+//! Rectangular array regions: how concurrent tasks split the PE array.
+//!
+//! A [`Region`] is a rectangle of PEs; a [`RegionPartition`] carves the
+//! array into one region per task (vertical full-height bands — the 1-D
+//! guillotine cut that keeps every region's NoC a smaller instance of the
+//! array's own topology). Costing a task inside a region reuses the whole
+//! single-model stack unchanged: [`region_config`] shrinks the
+//! architecture to the region's dimensions and scales the *shared*
+//! resources (global buffer capacity, DRAM bandwidth) by the region's PE
+//! share, so concurrently resident tasks never double-count them.
+//!
+//! [`ScenarioPlacement`] composes each task's own `spatial::Placement`
+//! (built at region dimensions) into one whole-array view and rejects any
+//! PE claimed twice — the structural non-overlap guarantee of a
+//! co-schedule.
+
+use crate::config::ArchConfig;
+use crate::spatial::Placement;
+
+/// A rectangle `[row0, row0+rows) × [col0, col0+cols)` of the PE array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub row0: usize,
+    pub col0: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Region {
+    pub fn num_pes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn row_end(&self) -> usize {
+        self.row0 + self.rows
+    }
+
+    pub fn col_end(&self) -> usize {
+        self.col0 + self.cols
+    }
+
+    pub fn contains(&self, r: usize, c: usize) -> bool {
+        (self.row0..self.row_end()).contains(&r) && (self.col0..self.col_end()).contains(&c)
+    }
+
+    pub fn overlaps(&self, other: &Region) -> bool {
+        self.row0 < other.row_end()
+            && other.row0 < self.row_end()
+            && self.col0 < other.col_end()
+            && other.col0 < self.col_end()
+    }
+}
+
+/// The array split into one region per task.
+#[derive(Debug, Clone)]
+pub struct RegionPartition {
+    pub array_rows: usize,
+    pub array_cols: usize,
+    pub regions: Vec<Region>,
+}
+
+impl RegionPartition {
+    /// Full-height vertical bands of the given column widths, left to
+    /// right. Widths may leave trailing columns idle; they must not exceed
+    /// the array (checked by [`RegionPartition::validate`]).
+    pub fn vertical(array_rows: usize, array_cols: usize, widths: &[usize]) -> RegionPartition {
+        let mut regions = Vec::with_capacity(widths.len());
+        let mut col0 = 0usize;
+        for &w in widths {
+            regions.push(Region {
+                row0: 0,
+                col0,
+                rows: array_rows,
+                cols: w,
+            });
+            col0 += w;
+        }
+        RegionPartition {
+            array_rows,
+            array_cols,
+            regions,
+        }
+    }
+
+    /// The naive baseline: split the columns as evenly as possible across
+    /// `n` bands.
+    pub fn even_split(array_rows: usize, array_cols: usize, n: usize) -> RegionPartition {
+        RegionPartition::vertical(array_rows, array_cols, &even_widths(array_cols, n))
+    }
+
+    /// Every region non-empty and in bounds; no two regions overlap.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, r) in self.regions.iter().enumerate() {
+            if r.rows == 0 || r.cols == 0 {
+                return Err(format!("region {i} is empty"));
+            }
+            if r.row_end() > self.array_rows || r.col_end() > self.array_cols {
+                return Err(format!(
+                    "region {i} ({}..{} × {}..{}) exceeds the {}×{} array",
+                    r.row0,
+                    r.row_end(),
+                    r.col0,
+                    r.col_end(),
+                    self.array_rows,
+                    self.array_cols
+                ));
+            }
+        }
+        for (i, a) in self.regions.iter().enumerate() {
+            for (j, b) in self.regions.iter().enumerate().skip(i + 1) {
+                if a.overlaps(b) {
+                    return Err(format!("regions {i} and {j} overlap"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// PEs assigned to no region.
+    pub fn idle_pes(&self) -> usize {
+        let used: usize = self.regions.iter().map(Region::num_pes).sum();
+        self.array_rows * self.array_cols - used
+    }
+}
+
+/// Split `cols` columns as evenly as possible across `n` bands (leftmost
+/// bands take the remainder). Requires `1 <= n <= cols`.
+pub fn even_widths(cols: usize, n: usize) -> Vec<usize> {
+    assert!(
+        (1..=cols).contains(&n),
+        "cannot split {cols} columns {n} ways"
+    );
+    let base = cols / n;
+    let rem = cols % n;
+    (0..n).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// The architecture restricted to one region. The per-PE microarchitecture
+/// (dot-product width, register files, link bandwidth) carries over
+/// unchanged; the *shared* resources — global-buffer capacity and DRAM
+/// bandwidth — are scaled by the region's PE share, so tasks resident at
+/// the same time never double-count them. Costs are translation-invariant:
+/// only the region's dimensions matter, not where the band sits.
+pub fn region_config(cfg: &ArchConfig, region: &Region) -> ArchConfig {
+    let share = region.num_pes() as f64 / cfg.num_pes().max(1) as f64;
+    ArchConfig {
+        pe_rows: region.rows,
+        pe_cols: region.cols,
+        sram_bytes: ((cfg.sram_bytes as f64 * share) as u64).max(1),
+        dram_bytes_per_cycle: (cfg.dram_bytes_per_cycle * share).max(1e-9),
+        ..cfg.clone()
+    }
+}
+
+/// Whole-array occupancy of a co-schedule: `(task, stage)` per PE, composed
+/// from each task's region-local [`Placement`].
+#[derive(Debug, Clone)]
+pub struct ScenarioPlacement {
+    pub rows: usize,
+    pub cols: usize,
+    /// `(task, stage)` per PE, row-major; `None` = idle.
+    assign: Vec<Option<(u16, u16)>>,
+}
+
+impl ScenarioPlacement {
+    /// Embed each region's placement at its offset. Fails if a placement's
+    /// dimensions disagree with its region, or if any PE ends up claimed by
+    /// two tasks (which [`RegionPartition::validate`] makes impossible for
+    /// well-formed partitions — the re-check here catches hand-built ones).
+    pub fn compose(
+        partition: &RegionPartition,
+        placements: &[Placement],
+    ) -> Result<ScenarioPlacement, String> {
+        if placements.len() != partition.regions.len() {
+            return Err(format!(
+                "{} placements for {} regions",
+                placements.len(),
+                partition.regions.len()
+            ));
+        }
+        let (rows, cols) = (partition.array_rows, partition.array_cols);
+        let mut assign: Vec<Option<(u16, u16)>> = vec![None; rows * cols];
+        for (t, (region, p)) in partition.regions.iter().zip(placements).enumerate() {
+            if p.rows != region.rows || p.cols != region.cols {
+                return Err(format!(
+                    "task {t}: placement is {}×{} but its region is {}×{}",
+                    p.rows, p.cols, region.rows, region.cols
+                ));
+            }
+            for r in 0..p.rows {
+                for c in 0..p.cols {
+                    let Some(stage) = p.stage_at(r, c) else {
+                        continue;
+                    };
+                    let cell = &mut assign[(region.row0 + r) * cols + (region.col0 + c)];
+                    if cell.is_some() {
+                        return Err(format!(
+                            "PE ({}, {}) claimed by two tasks",
+                            region.row0 + r,
+                            region.col0 + c
+                        ));
+                    }
+                    *cell = Some((t as u16, stage as u16));
+                }
+            }
+        }
+        Ok(ScenarioPlacement { rows, cols, assign })
+    }
+
+    /// `(task, stage)` at one PE.
+    pub fn at(&self, r: usize, c: usize) -> Option<(usize, usize)> {
+        self.assign[r * self.cols + c].map(|(t, s)| (t as usize, s as usize))
+    }
+
+    /// PEs owned by one task.
+    pub fn task_pes(&self, task: usize) -> usize {
+        self.assign
+            .iter()
+            .filter(|a| matches!(a, Some((t, _)) if *t as usize == task))
+            .count()
+    }
+
+    pub fn idle_pes(&self) -> usize {
+        self.assign.iter().filter(|a| a.is_none()).count()
+    }
+
+    /// ASCII rendering: one letter per PE (task index as `a`, `b`, …), `.`
+    /// for idle — the co-scheduling analogue of `Placement::render`.
+    pub fn render(&self) -> String {
+        let mut s = String::with_capacity((self.cols + 1) * self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                match self.at(r, c) {
+                    Some((t, _)) => s.push((b'a' + (t % 26) as u8) as char),
+                    None => s.push('.'),
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spatial::Organization;
+
+    #[test]
+    fn vertical_bands_tile_left_to_right() {
+        let p = RegionPartition::vertical(8, 16, &[4, 8, 4]);
+        p.validate().unwrap();
+        assert_eq!(p.idle_pes(), 0);
+        assert_eq!(p.regions[1].col0, 4);
+        assert_eq!(p.regions[2].col0, 12);
+        assert!(p.regions.iter().all(|r| r.rows == 8));
+    }
+
+    #[test]
+    fn even_split_covers_all_columns() {
+        assert_eq!(even_widths(16, 3), vec![6, 5, 5]);
+        assert_eq!(even_widths(32, 3), vec![11, 11, 10]);
+        assert_eq!(even_widths(8, 4), vec![2, 2, 2, 2]);
+        let p = RegionPartition::even_split(8, 17, 5);
+        p.validate().unwrap();
+        assert_eq!(p.idle_pes(), 0);
+    }
+
+    #[test]
+    fn validate_rejects_overlap_and_out_of_bounds() {
+        let mut p = RegionPartition::vertical(8, 16, &[8, 8]);
+        p.regions[1].col0 = 4; // now overlaps region 0
+        assert!(p.validate().unwrap_err().contains("overlap"));
+        let p = RegionPartition::vertical(8, 16, &[12, 8]); // 20 > 16 cols
+        assert!(p.validate().is_err());
+        let p = RegionPartition::vertical(8, 16, &[16, 0]);
+        assert!(p.validate().unwrap_err().contains("empty"));
+    }
+
+    #[test]
+    fn region_overlap_geometry() {
+        let a = Region {
+            row0: 0,
+            col0: 0,
+            rows: 4,
+            cols: 4,
+        };
+        let b = Region {
+            row0: 0,
+            col0: 4,
+            rows: 4,
+            cols: 4,
+        };
+        assert!(!a.overlaps(&b), "adjacent bands do not overlap");
+        let c = Region {
+            row0: 2,
+            col0: 2,
+            rows: 4,
+            cols: 4,
+        };
+        assert!(a.overlaps(&c) && c.overlaps(&a));
+        assert!(a.contains(3, 3) && !a.contains(3, 4));
+    }
+
+    #[test]
+    fn region_config_scales_shared_resources_only() {
+        let cfg = ArchConfig::default(); // 32×32
+        let half = Region {
+            row0: 0,
+            col0: 0,
+            rows: 32,
+            cols: 16,
+        };
+        let rc = region_config(&cfg, &half);
+        rc.validate().unwrap();
+        assert_eq!(rc.num_pes(), 512);
+        assert_eq!(rc.sram_bytes, cfg.sram_bytes / 2);
+        assert!((rc.dram_bytes_per_cycle - cfg.dram_bytes_per_cycle / 2.0).abs() < 1e-9);
+        // Per-PE resources are untouched.
+        assert_eq!(rc.pe_dot_product, cfg.pe_dot_product);
+        assert_eq!(rc.rf_bytes_per_pe, cfg.rf_bytes_per_pe);
+        assert_eq!(rc.link_words_per_cycle, cfg.link_words_per_cycle);
+    }
+
+    #[test]
+    fn compose_embeds_placements_and_counts_pes() {
+        let partition = RegionPartition::vertical(4, 8, &[4, 4]);
+        let p0 = Placement::build(4, 4, Organization::FineStriped1D, &[1, 1]);
+        let p1 = Placement::build(4, 4, Organization::Sequential, &[1]);
+        let sp = ScenarioPlacement::compose(&partition, &[p0, p1]).unwrap();
+        assert_eq!(sp.task_pes(0), 16);
+        assert_eq!(sp.task_pes(1), 16);
+        assert_eq!(sp.idle_pes(), 0);
+        // Task 1 owns the right half.
+        assert_eq!(sp.at(0, 4).map(|(t, _)| t), Some(1));
+        let lines: Vec<&str> = sp.render().lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("aaaa"));
+        assert!(lines[0].ends_with("bbbb"));
+    }
+
+    #[test]
+    fn compose_rejects_double_assignment_and_dim_mismatch() {
+        let mut partition = RegionPartition::vertical(4, 8, &[4, 4]);
+        partition.regions[1].col0 = 2; // overlap cols 2..6
+        let p0 = Placement::build(4, 4, Organization::Sequential, &[1]);
+        let p1 = Placement::build(4, 4, Organization::Sequential, &[1]);
+        let err = ScenarioPlacement::compose(&partition, &[p0.clone(), p1]).unwrap_err();
+        assert!(err.contains("two tasks"), "{err}");
+        // Placement dims must match the region dims.
+        let partition = RegionPartition::vertical(4, 8, &[4, 4]);
+        let wrong = Placement::build(4, 8, Organization::Sequential, &[1]);
+        assert!(ScenarioPlacement::compose(&partition, &[p0, wrong]).is_err());
+    }
+}

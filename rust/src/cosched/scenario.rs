@@ -1,0 +1,207 @@
+//! Multi-workload scenarios: the unit the co-scheduler plans.
+//!
+//! The paper's headline deployment is XR, where several small models run
+//! *concurrently* — eye segmentation and gaze estimation per camera frame,
+//! keyword detection on the audio stream — rather than one model owning the
+//! accelerator. A [`Scenario`] names such a task set: each [`TaskSpec`]
+//! carries its model graph plus the rate it must sustain and the
+//! per-inference deadline it must meet.
+//!
+//! Rates use a one-second scheduling frame: a task at `rate_hz` runs
+//! `ceil(rate_hz)` inferences per frame, and the scenario *makespan* is how
+//! many cycles the busiest resource needs to finish one frame of work.
+//! Deadlines default to the task's own frame time (`1000/rate_hz` ms — an
+//! inference must finish before the next input arrives) and can be
+//! tightened per task.
+//!
+//! The canned scenarios below are built from the `workloads::tasks` zoo at
+//! rates typical for the cited XR pipelines (camera-rate eye tracking,
+//! display-rate hand tracking, audio-chunk-rate keyword/speech models).
+
+use crate::ir::ModelGraph;
+use crate::workloads;
+
+/// One concurrent task: a model plus its service rate and deadline.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    pub graph: ModelGraph,
+    /// Invocation rate in Hz (how often a new input arrives).
+    pub rate_hz: f64,
+    /// Per-inference deadline in milliseconds. Defaults to the frame time
+    /// `1000 / rate_hz`.
+    pub deadline_ms: f64,
+}
+
+impl TaskSpec {
+    pub fn new(graph: ModelGraph, rate_hz: f64) -> TaskSpec {
+        assert!(rate_hz > 0.0, "task rate must be positive");
+        TaskSpec {
+            deadline_ms: 1000.0 / rate_hz,
+            graph,
+            rate_hz,
+        }
+    }
+
+    /// Override the default frame-time deadline.
+    pub fn with_deadline_ms(mut self, deadline_ms: f64) -> TaskSpec {
+        assert!(deadline_ms > 0.0, "deadline must be positive");
+        self.deadline_ms = deadline_ms;
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.graph.name
+    }
+
+    /// Inferences inside one one-second scheduling frame.
+    pub fn invocations(&self) -> u64 {
+        self.rate_hz.ceil().max(1.0) as u64
+    }
+}
+
+/// A named set of tasks that share the PE array concurrently.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl Scenario {
+    pub fn new(name: &str, tasks: Vec<TaskSpec>) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            tasks,
+        }
+    }
+
+    /// Non-empty, distinct task names, positive rates/deadlines.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tasks.is_empty() {
+            return Err(format!("scenario `{}` has no tasks", self.name));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &self.tasks {
+            if !seen.insert(t.name().to_string()) {
+                return Err(format!(
+                    "scenario `{}` lists task `{}` twice",
+                    self.name,
+                    t.name()
+                ));
+            }
+            if t.rate_hz <= 0.0 || t.deadline_ms <= 0.0 {
+                return Err(format!(
+                    "scenario `{}` task `{}` has a non-positive rate or deadline",
+                    self.name,
+                    t.name()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The paper's headline trio: per-eye-frame segmentation and gaze
+/// estimation at camera rate plus always-on keyword detection.
+pub fn xr_core() -> Scenario {
+    Scenario::new(
+        "xr-core",
+        vec![
+            TaskSpec::new(workloads::eye_segmentation(), 120.0),
+            TaskSpec::new(workloads::gaze_estimation(), 120.0),
+            TaskSpec::new(workloads::keyword_detection(), 10.0),
+        ],
+    )
+}
+
+/// Interaction pipeline: display-rate hand tracking alongside gaze and the
+/// audio hotword model.
+pub fn xr_hands() -> Scenario {
+    Scenario::new(
+        "xr-hands",
+        vec![
+            TaskSpec::new(workloads::hand_tracking(), 60.0),
+            TaskSpec::new(workloads::gaze_estimation(), 120.0),
+            TaskSpec::new(workloads::keyword_detection(), 10.0),
+        ],
+    )
+}
+
+/// World understanding: depth at camera rate, plane detection on keyframes,
+/// streaming speech chunks for world-locked audio.
+pub fn xr_world() -> Scenario {
+    Scenario::new(
+        "xr-world",
+        vec![
+            TaskSpec::new(workloads::depth_estimation(), 30.0),
+            TaskSpec::new(workloads::plane_detection(), 10.0),
+            TaskSpec::new(workloads::world_locking(), 12.5),
+        ],
+    )
+}
+
+/// All canned scenarios, in reporting order.
+pub fn canned_scenarios() -> Vec<Scenario> {
+    vec![xr_core(), xr_hands(), xr_world()]
+}
+
+pub fn scenario_by_name(name: &str) -> Option<Scenario> {
+    canned_scenarios().into_iter().find(|s| s.name == name)
+}
+
+pub fn scenario_names() -> Vec<String> {
+    canned_scenarios().into_iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canned_scenarios_validate_and_have_distinct_names() {
+        let all = canned_scenarios();
+        assert!(all.len() >= 2, "co-scheduling needs ≥2 canned scenarios");
+        let mut names = std::collections::BTreeSet::new();
+        for s in &all {
+            s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert!(s.tasks.len() >= 2, "{} is not concurrent", s.name);
+            assert!(names.insert(s.name.clone()), "duplicate {}", s.name);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for name in scenario_names() {
+            assert!(scenario_by_name(&name).is_some(), "missing {name}");
+        }
+        assert!(scenario_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn invocations_and_default_deadline() {
+        let t = TaskSpec::new(workloads::keyword_detection(), 10.0);
+        assert_eq!(t.invocations(), 10);
+        assert!((t.deadline_ms - 100.0).abs() < 1e-9);
+        // Fractional rates round invocations up (12.5 Hz → 13 per frame).
+        let t = TaskSpec::new(workloads::world_locking(), 12.5);
+        assert_eq!(t.invocations(), 13);
+        // Sub-Hz rates still run at least once per frame.
+        let t = TaskSpec::new(workloads::keyword_detection(), 0.5);
+        assert_eq!(t.invocations(), 1);
+        assert!((t.deadline_ms - 2000.0).abs() < 1e-9);
+        let t = t.with_deadline_ms(50.0);
+        assert!((t.deadline_ms - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_tasks_rejected() {
+        let s = Scenario::new(
+            "twice",
+            vec![
+                TaskSpec::new(workloads::keyword_detection(), 10.0),
+                TaskSpec::new(workloads::keyword_detection(), 20.0),
+            ],
+        );
+        assert!(s.validate().is_err());
+        assert!(Scenario::new("empty", vec![]).validate().is_err());
+    }
+}

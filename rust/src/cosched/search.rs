@@ -1,0 +1,731 @@
+//! The co-scheduling search: choose per-task region widths jointly.
+//!
+//! Stage A (parallel, memoized): every (task, candidate width) pair is
+//! planned and costed on its region-scoped architecture
+//! (`region_config`) — by the closed-form PipeOrgan mapper, or by the
+//! budgeted tuned search under `CoschedConfig::tuned`. Heuristic plans are
+//! costed *through the shared `dse::EvalCache`* at the same cache
+//! coordinates the DSE uses (heuristic segments always live at granularity
+//! scale 1), so repeated scenarios, repeated widths, and persistent cache
+//! files all hit instead of re-evaluating. The pair sweep fans out over
+//! `coordinator::run_queue`.
+//!
+//! Stage B (exact, cheap): a dynamic program over tasks whose state is
+//! *array occupancy* — how many columns are already committed. Each state
+//! holds a Pareto set of labels (frame makespan, energy, DRAM, worst
+//! channel load), pruned with the DSE's own `pareto_filter_first`;
+//! makespan and load compose by `max`, which is monotone, so prefix
+//! dominance is sound exactly as in the segment DP. The final winner is
+//! the minimum-(makespan, energy) complete label. The even-column split
+//! is additionally seeded as a complete candidate, so the co-scheduled
+//! plan **never loses to the naive even split** — the same never-lose
+//! construction the tuned mapper uses against the heuristic.
+//!
+//! Three allocations are reported per scenario: `solo` (each task owns the
+//! whole array, one frame of work time-multiplexed — makespan is the sum),
+//! `even_split` (one equal vertical band per task, makespan is the max),
+//! and `cosched` (searched bands, makespan is the max).
+
+use std::collections::HashSet;
+
+use crate::config::ArchConfig;
+use crate::coordinator::run_queue;
+use crate::cost::{evaluate_segment, Mapper, MappingPlan};
+use crate::dse::{
+    context_fingerprint, heuristic_segment_key, pareto_filter_first, tuned_plan, DseConfig,
+    EvalCache, ParetoPoint, RunCounters,
+};
+use crate::energy::EnergyModel;
+use crate::ir::ModelGraph;
+use crate::mapper::PipeOrgan;
+use crate::noc::Topology;
+use crate::spatial::Placement;
+
+use super::region::{even_widths, region_config, Region, RegionPartition, ScenarioPlacement};
+use super::scenario::Scenario;
+use super::CoschedConfig;
+
+/// One task's share of an allocation, fully costed.
+#[derive(Debug, Clone)]
+pub struct TaskAssignment {
+    pub task: String,
+    pub region: Region,
+    pub rate_hz: f64,
+    /// Inferences per one-second scheduling frame.
+    pub invocations: u64,
+    /// One inference's latency on the assigned region (cycles).
+    pub latency_cycles: f64,
+    /// One frame of work: `invocations × latency_cycles`.
+    pub busy_cycles: f64,
+    /// Energy of one inference; one frame costs `invocations ×` this
+    /// (see [`TaskAssignment::frame_energy`]).
+    pub energy: f64,
+    /// DRAM words of one inference.
+    pub dram_words: u64,
+    /// Worst per-interval channel load inside the region (Fig. 15 metric).
+    pub worst_channel_load: f64,
+    /// Does one inference finish inside the task's deadline?
+    pub deadline_met: bool,
+}
+
+impl TaskAssignment {
+    /// Energy of one frame of this task's work.
+    pub fn frame_energy(&self) -> f64 {
+        self.energy * self.invocations as f64
+    }
+}
+
+/// One allocation mode of a scenario, fully costed.
+#[derive(Debug, Clone)]
+pub struct CoschedOutcome {
+    /// `"solo"`, `"even_split"`, or `"cosched"`.
+    pub mode: &'static str,
+    pub assignments: Vec<TaskAssignment>,
+    /// Cycles to finish one frame of every task's work: max over tasks for
+    /// spatial splits (tasks run concurrently), sum for `solo` (the whole
+    /// array is time-multiplexed).
+    pub makespan_cycles: f64,
+    /// Total energy of one frame of work.
+    pub energy: f64,
+}
+
+/// Outcome of co-scheduling one scenario.
+#[derive(Debug, Clone)]
+pub struct CoschedResult {
+    pub scenario: String,
+    pub solo: CoschedOutcome,
+    pub even_split: CoschedOutcome,
+    pub cosched: CoschedOutcome,
+    /// Whole-array occupancy of the co-scheduled winner (validated
+    /// non-overlapping by construction).
+    pub placement: ScenarioPlacement,
+    /// Cost-model evaluations this run added to the cache (cache misses).
+    pub evaluations: u64,
+    /// Lookups served from the cache during this run.
+    pub cache_hits: u64,
+    /// Context fingerprints this scenario's search can hit — the live set
+    /// cache eviction must keep (full-array plus every candidate region
+    /// config, per task).
+    pub contexts: Vec<u64>,
+}
+
+impl CoschedResult {
+    /// Naive-even-split over co-scheduled makespan (≥ 1 by the even-split
+    /// seed).
+    pub fn speedup(&self) -> f64 {
+        self.even_split.makespan_cycles / self.cosched.makespan_cycles.max(1e-12)
+    }
+}
+
+/// A planned-and-costed (task, region) pair: stage A's table entry.
+#[derive(Debug, Clone)]
+struct PlannedCost {
+    plan: MappingPlan,
+    cycles: f64,
+    energy: f64,
+    dram_words: u64,
+    worst_load: f64,
+}
+
+/// Cost `plan`'s segments through the shared cache. Only valid for
+/// heuristic plans: their segments live at granularity scale 1, the same
+/// cache coordinates the DSE's seed path uses (`dse::space::build_planned`
+/// rebuilds them bit-identically), so entries are shared with any DSE or
+/// tuned search over the same (workload, config) context.
+fn evaluate_plan_cached(
+    graph: &ModelGraph,
+    plan: MappingPlan,
+    cfg: &ArchConfig,
+    cache: &EvalCache,
+    run: &RunCounters,
+) -> PlannedCost {
+    let ctx = context_fingerprint(graph, cfg);
+    let topo = Topology::cached(plan.topology, cfg.pe_rows, cfg.pe_cols);
+    let em = EnergyModel::default();
+    let mut cycles = 0.0f64;
+    let mut energy = 0.0f64;
+    let mut dram_words = 0u64;
+    let mut worst_load = 0.0f64;
+    for ps in &plan.segments {
+        let key = heuristic_segment_key(ctx, ps, plan.topology);
+        let c = cache.get_or_eval_in(key, || evaluate_segment(graph, ps, cfg, &topo, &em), run);
+        cycles += c.cycles;
+        energy += c.energy;
+        dram_words += c.dram_words;
+        worst_load = worst_load.max(c.worst_channel_load_per_interval);
+    }
+    PlannedCost {
+        plan,
+        cycles,
+        energy,
+        dram_words,
+        worst_load,
+    }
+}
+
+/// Plan one task inside one (full-array or region) config.
+///
+/// Pipeline depth is additionally capped to the region's narrow dimension:
+/// the 1-D organizations give each stage at least one column (and the 2-D
+/// stage grid at least one cell), so a band can never host more concurrent
+/// stages than it has columns. On square arrays this equals the usual
+/// `√numPEs` cap, so full-array plans are unchanged.
+fn plan_in(
+    graph: &ModelGraph,
+    cfg: &ArchConfig,
+    cs: &CoschedConfig,
+    cache: &EvalCache,
+    run: &RunCounters,
+) -> PlannedCost {
+    let geom_cap = cfg.pe_rows.min(cfg.pe_cols).max(1);
+    let base = PipeOrgan {
+        topology: cfg.topology,
+        depth_cap: Some(geom_cap),
+    };
+    if cs.tuned {
+        let mut dse = DseConfig::tuned(cfg.topology);
+        dse.depth_cap = dse.depth_cap.min(geom_cap);
+        if let Some(b) = cs.budget {
+            dse.budget = Some(b);
+        }
+        // Fresh meter per plan: the budget is an exact per-(task, width)
+        // window even though the whole scenario shares one cache and one
+        // aggregate report counter.
+        let plan_run = RunCounters::new();
+        let point = tuned_plan(graph, cfg, &base, &dse, cache, &plan_run);
+        run.absorb(plan_run.stats());
+        PlannedCost {
+            plan: point.plan,
+            cycles: point.cycles,
+            energy: point.energy,
+            dram_words: point.dram_words,
+            worst_load: point.worst_channel_load,
+        }
+    } else {
+        let plan = base.plan(graph, cfg);
+        evaluate_plan_cached(graph, plan, cfg, cache, run)
+    }
+}
+
+/// Candidate band widths for `n` tasks on `cols` columns: multiples of the
+/// quantum, plus the even-split widths (so the naive baseline is always in
+/// the searched set), capped so the remaining tasks can still fit.
+fn candidate_widths(cols: usize, n: usize, quantum: usize) -> Vec<usize> {
+    debug_assert!(n >= 1 && cols >= n);
+    let q = quantum.max(1);
+    let even = even_widths(cols, n);
+    let min_even = *even.iter().min().expect("n >= 1");
+    // The narrowest candidate any task may take; every even width fits
+    // under the cap this induces (see the partition feasibility argument in
+    // DESIGN.md §Cosched).
+    let w_min = q.min(min_even).max(1);
+    let w_max = cols - (n - 1) * w_min;
+    let mut ws: Vec<usize> = (1..).map(|k| k * q).take_while(|&w| w <= w_max).collect();
+    ws.extend(even.iter().copied().filter(|&w| w <= w_max));
+    ws.sort_unstable();
+    ws.dedup();
+    ws
+}
+
+/// An occupancy-DP label: one frame's objective vector plus the widths
+/// chosen so far. Makespan and channel load compose by `max` (tasks run
+/// concurrently); energy and DRAM are *frame-scaled* (per-inference cost ×
+/// invocations, consistent with the makespan axis) and compose by sum —
+/// all monotone, so Pareto pruning of prefixes is sound.
+#[derive(Debug, Clone)]
+struct AllocLabel {
+    makespan: f64,
+    energy: f64,
+    dram: u64,
+    load: f64,
+    widths: Vec<usize>,
+}
+
+impl ParetoPoint for AllocLabel {
+    fn objectives(&self) -> [f64; 4] {
+        [self.makespan, self.energy, self.dram as f64, self.load]
+    }
+}
+
+/// Prune on all four axes (load included, so congestion-diverse
+/// allocations survive to compete on the energy tie-break), truncated to
+/// `cap` keeping the lowest-makespan labels — the makespan optimum always
+/// survives, which is what makes the DP exact on makespan.
+fn prune_alloc(labels: &mut Vec<AllocLabel>, cap: usize) {
+    if labels.len() <= 1 {
+        return;
+    }
+    let mut kept = pareto_filter_first(std::mem::take(labels), 4);
+    kept.truncate(cap.max(1));
+    *labels = kept;
+}
+
+/// A co-scheduling job of stage A: cost one task on the full array (solo)
+/// or inside a band of `width` columns.
+enum Job {
+    Solo { task: usize },
+    Width { task: usize, width: usize },
+}
+
+/// Context fingerprints the canned scenarios can reach under `cfg` at the
+/// default quantum: full-array plus every candidate region config, per
+/// task. The CLI unions this into the live set of *every* cache save
+/// (`dse`, `e2e --tuned`, `cosched`), so one shared persistent cache file
+/// keeps default co-scheduling warm instead of having another
+/// subcommand's save prune its region-config entries as stale.
+/// Non-default quanta or hand-built scenarios stay warm through their own
+/// run's saves (touched contexts are always live) but may be pruned by
+/// other subcommands' saves — keep those in a separate `--cache-file`.
+pub fn canned_live_contexts(cfg: &ArchConfig) -> HashSet<u64> {
+    let mut out = HashSet::new();
+    let quantum = CoschedConfig::default().quantum;
+    for sc in super::scenario::canned_scenarios() {
+        let n = sc.tasks.len();
+        if cfg.pe_cols < n {
+            continue;
+        }
+        let widths = candidate_widths(cfg.pe_cols, n, quantum);
+        out.extend(scenario_contexts(&sc, cfg, &widths));
+    }
+    out
+}
+
+/// Context fingerprints one scenario can reach under `cfg` with the given
+/// candidate widths: full-array plus every candidate region config, per
+/// task (costs are translation-invariant, so `col0` never matters). The
+/// single source of truth for both a run's reported live set and the
+/// canned static one — they must enumerate identically or cache eviction
+/// would wrongly prune warm entries.
+fn scenario_contexts(scenario: &Scenario, cfg: &ArchConfig, widths: &[usize]) -> HashSet<u64> {
+    let mut out = HashSet::new();
+    for spec in &scenario.tasks {
+        out.insert(context_fingerprint(&spec.graph, cfg));
+        for &width in widths {
+            let region = Region {
+                row0: 0,
+                col0: 0,
+                rows: cfg.pe_rows,
+                cols: width,
+            };
+            out.insert(context_fingerprint(&spec.graph, &region_config(cfg, &region)));
+        }
+    }
+    out
+}
+
+/// Stage A's table entry for `(task, width)` — `width` must be one of the
+/// candidate widths.
+fn lookup<'a>(
+    table: &'a [Vec<Option<PlannedCost>>],
+    widths: &[usize],
+    task: usize,
+    width: usize,
+) -> &'a PlannedCost {
+    let wi = widths.iter().position(|&x| x == width).expect("known width");
+    table[task][wi].as_ref().expect("stage A filled the table")
+}
+
+/// Co-schedule one scenario onto the array described by `cfg`.
+///
+/// The cache is caller-owned and shared: pass one hydrated via
+/// `EvalCache::load_file` to warm-start repeated scenarios across
+/// processes. `workers` parallelizes the per-(task, width) costing sweep;
+/// the DP itself is exact and cheap.
+pub fn schedule(
+    scenario: &Scenario,
+    cfg: &ArchConfig,
+    cs: &CoschedConfig,
+    cache: &EvalCache,
+    workers: usize,
+) -> Result<CoschedResult, String> {
+    scenario.validate()?;
+    let n = scenario.tasks.len();
+    let cols = cfg.pe_cols;
+    if cols < n {
+        return Err(format!(
+            "scenario `{}` has {n} tasks but the array has only {cols} columns",
+            scenario.name
+        ));
+    }
+    let run = RunCounters::new();
+    let widths = candidate_widths(cols, n, cs.quantum);
+
+    // ---- stage A: parallel, memoized (task × width) costing --------------
+    let mut jobs: Vec<Job> = Vec::with_capacity(n * (widths.len() + 1));
+    for task in 0..n {
+        jobs.push(Job::Solo { task });
+        for &width in &widths {
+            jobs.push(Job::Width { task, width });
+        }
+    }
+    let outcomes: Vec<(usize, Option<usize>, PlannedCost)> =
+        run_queue(jobs, workers, |job| match job {
+            Job::Solo { task } => {
+                let pc = plan_in(&scenario.tasks[task].graph, cfg, cs, cache, &run);
+                (task, None, pc)
+            }
+            Job::Width { task, width } => {
+                let region = Region {
+                    row0: 0,
+                    col0: 0,
+                    rows: cfg.pe_rows,
+                    cols: width,
+                };
+                let rcfg = region_config(cfg, &region);
+                let pc = plan_in(&scenario.tasks[task].graph, &rcfg, cs, cache, &run);
+                (task, Some(width), pc)
+            }
+        });
+    let mut solo: Vec<Option<PlannedCost>> = vec![None; n];
+    let mut table: Vec<Vec<Option<PlannedCost>>> = vec![vec![None; widths.len()]; n];
+    for (task, width, pc) in outcomes {
+        match width {
+            None => solo[task] = Some(pc),
+            Some(w) => {
+                let wi = widths.iter().position(|&x| x == w).expect("known width");
+                table[task][wi] = Some(pc);
+            }
+        }
+    }
+
+    // The live-context set this run can hit (see `scenario_contexts`).
+    let contexts = scenario_contexts(scenario, cfg, &widths);
+
+    let inv: Vec<f64> = scenario.tasks.iter().map(|t| t.invocations() as f64).collect();
+
+    // ---- stage B: occupancy-state DP over tasks --------------------------
+    let w_min = *widths.first().expect("candidate set is never empty");
+    let mut states: Vec<Vec<AllocLabel>> = vec![Vec::new(); cols + 1];
+    states[0].push(AllocLabel {
+        makespan: 0.0,
+        energy: 0.0,
+        dram: 0,
+        load: 0.0,
+        widths: Vec::new(),
+    });
+    for task in 0..n {
+        let remaining = n - task - 1;
+        let mut next: Vec<Vec<AllocLabel>> = vec![Vec::new(); cols + 1];
+        for (used, labels) in states.iter().enumerate() {
+            if labels.is_empty() {
+                continue;
+            }
+            for (wi, &w) in widths.iter().enumerate() {
+                if used + w > cols {
+                    break; // widths ascend
+                }
+                if cols - used - w < remaining * w_min {
+                    continue; // later tasks could no longer fit
+                }
+                let pc = table[task][wi].as_ref().expect("stage A filled the table");
+                let busy = pc.cycles * inv[task];
+                let frame_energy = pc.energy * inv[task];
+                let frame_dram = pc.dram_words.saturating_mul(inv[task] as u64);
+                for lab in labels {
+                    let mut widths_so_far = lab.widths.clone();
+                    widths_so_far.push(w);
+                    next[used + w].push(AllocLabel {
+                        makespan: lab.makespan.max(busy),
+                        energy: lab.energy + frame_energy,
+                        dram: lab.dram.saturating_add(frame_dram),
+                        load: lab.load.max(pc.worst_load),
+                        widths: widths_so_far,
+                    });
+                }
+            }
+        }
+        for labels in next.iter_mut() {
+            prune_alloc(labels, cs.max_labels);
+        }
+        states = next;
+    }
+    let mut finals: Vec<AllocLabel> = states.into_iter().flatten().collect();
+
+    // Seed the even split as a complete label: truncation can never lose
+    // it, so cosched ≤ even_split by construction.
+    let even = even_widths(cols, n);
+    let even_label = {
+        let mut lab = AllocLabel {
+            makespan: 0.0,
+            energy: 0.0,
+            dram: 0,
+            load: 0.0,
+            widths: even.clone(),
+        };
+        for (task, &w) in even.iter().enumerate() {
+            let pc = lookup(&table, &widths, task, w);
+            lab.makespan = lab.makespan.max(pc.cycles * inv[task]);
+            lab.energy += pc.energy * inv[task];
+            lab.dram = lab
+                .dram
+                .saturating_add(pc.dram_words.saturating_mul(inv[task] as u64));
+            lab.load = lab.load.max(pc.worst_load);
+        }
+        lab
+    };
+    finals.push(even_label);
+    let best = finals
+        .into_iter()
+        .min_by(|a, b| {
+            (a.makespan, a.energy)
+                .partial_cmp(&(b.makespan, b.energy))
+                .expect("objectives are finite")
+        })
+        .expect("the even-split seed is always present");
+
+    // ---- assemble the three reported outcomes ----------------------------
+    let spatial_outcome = |mode: &'static str, widths_of: &[usize]| -> CoschedOutcome {
+        let partition = RegionPartition::vertical(cfg.pe_rows, cols, widths_of);
+        let assignments: Vec<TaskAssignment> = scenario
+            .tasks
+            .iter()
+            .zip(&partition.regions)
+            .enumerate()
+            .map(|(task, (spec, &region))| {
+                assignment(spec, region, lookup(&table, &widths, task, region.cols), cfg)
+            })
+            .collect();
+        outcome(mode, assignments, false)
+    };
+    let even_outcome = spatial_outcome("even_split", &even);
+    let cosched_outcome = spatial_outcome("cosched", &best.widths);
+
+    let full = Region {
+        row0: 0,
+        col0: 0,
+        rows: cfg.pe_rows,
+        cols,
+    };
+    let solo_assignments: Vec<TaskAssignment> = scenario
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(task, spec)| {
+            let pc = solo[task].as_ref().expect("stage A filled solo plans");
+            assignment(spec, full, pc, cfg)
+        })
+        .collect();
+    let solo_outcome = outcome("solo", solo_assignments, true);
+
+    // Compose the winner's whole-array placement (structural non-overlap).
+    let partition = RegionPartition::vertical(cfg.pe_rows, cols, &best.widths);
+    partition.validate()?;
+    let placements: Vec<Placement> = partition
+        .regions
+        .iter()
+        .enumerate()
+        .map(|(task, region)| {
+            representative_placement(lookup(&table, &widths, task, region.cols), region)
+        })
+        .collect();
+    let placement = ScenarioPlacement::compose(&partition, &placements)?;
+
+    let stats = run.stats();
+    Ok(CoschedResult {
+        scenario: scenario.name.clone(),
+        solo: solo_outcome,
+        even_split: even_outcome,
+        cosched: cosched_outcome,
+        placement,
+        evaluations: stats.misses,
+        cache_hits: stats.hits,
+        contexts: contexts.into_iter().collect(),
+    })
+}
+
+/// Cost one task's share of an allocation.
+fn assignment(
+    spec: &super::scenario::TaskSpec,
+    region: Region,
+    pc: &PlannedCost,
+    cfg: &ArchConfig,
+) -> TaskAssignment {
+    let invocations = spec.invocations();
+    let latency_s = pc.cycles / cfg.clock_hz.max(1.0);
+    TaskAssignment {
+        task: spec.name().to_string(),
+        region,
+        rate_hz: spec.rate_hz,
+        invocations,
+        latency_cycles: pc.cycles,
+        busy_cycles: pc.cycles * invocations as f64,
+        energy: pc.energy,
+        dram_words: pc.dram_words,
+        worst_channel_load: pc.worst_load,
+        deadline_met: latency_s <= spec.deadline_ms / 1e3,
+    }
+}
+
+/// Roll assignments up into an outcome. `time_multiplexed` sums busy
+/// cycles (solo: one array shared in time); spatial splits take the max
+/// (regions run concurrently). Energy is always frame-scaled — a task at
+/// 120 Hz spends 120× its per-inference energy per frame.
+fn outcome(
+    mode: &'static str,
+    assignments: Vec<TaskAssignment>,
+    time_multiplexed: bool,
+) -> CoschedOutcome {
+    let busies = assignments.iter().map(|a| a.busy_cycles);
+    let makespan_cycles = if time_multiplexed {
+        busies.sum()
+    } else {
+        busies.fold(0.0, f64::max)
+    };
+    CoschedOutcome {
+        energy: assignments.iter().map(TaskAssignment::frame_energy).sum(),
+        mode,
+        assignments,
+        makespan_cycles,
+    }
+}
+
+/// The placement rendered for a task inside its region: its deepest
+/// segment's stage layout (the most spatially interesting moment of the
+/// plan; other segments time-multiplex the same region).
+fn representative_placement(pc: &PlannedCost, region: &Region) -> Placement {
+    let seg = pc
+        .plan
+        .segments
+        .iter()
+        .max_by_key(|s| s.depth())
+        .expect("plans are never empty");
+    Placement::build(region.rows, region.cols, seg.organization, &seg.pe_alloc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cosched::TaskSpec;
+    use crate::workloads::synthetic;
+
+    fn small_cfg() -> ArchConfig {
+        ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        }
+    }
+
+    /// A fast synthetic scenario (real zoo scenarios are covered by the
+    /// integration tests).
+    fn tiny_scenario() -> Scenario {
+        let mut a = synthetic::aw_chain(3.0, 4);
+        a.name = "chain_a".into();
+        let mut b = synthetic::pointwise_conv_segment(3);
+        b.name = "chain_b".into();
+        Scenario::new("tiny", vec![TaskSpec::new(a, 30.0), TaskSpec::new(b, 60.0)])
+    }
+
+    #[test]
+    fn candidate_widths_include_even_split_and_fit() {
+        let ws = candidate_widths(32, 3, 4);
+        for w in even_widths(32, 3) {
+            assert!(ws.contains(&w), "even width {w} missing from {ws:?}");
+        }
+        assert!(ws.windows(2).all(|p| p[0] < p[1]), "sorted: {ws:?}");
+        // Oversized quantum still leaves the even widths.
+        let ws = candidate_widths(16, 3, 10);
+        assert!(!ws.is_empty());
+        assert!(ws.contains(&5) && ws.contains(&6));
+        let max = *ws.iter().max().unwrap();
+        assert!(max <= 16 - 2 * ws[0]);
+    }
+
+    #[test]
+    fn cosched_never_loses_to_even_split_on_synthetic_scenario() {
+        let cfg = small_cfg();
+        let cs = CoschedConfig::default();
+        let r = schedule(&tiny_scenario(), &cfg, &cs, &EvalCache::new(), 2).unwrap();
+        assert!(
+            r.cosched.makespan_cycles <= r.even_split.makespan_cycles * 1.0001,
+            "cosched {} vs even {}",
+            r.cosched.makespan_cycles,
+            r.even_split.makespan_cycles
+        );
+        assert!(r.speedup() >= 0.9999);
+        // Two tasks assigned, regions non-overlapping, everything positive.
+        for o in [&r.solo, &r.even_split, &r.cosched] {
+            assert_eq!(o.assignments.len(), 2, "{}", o.mode);
+            assert!(o.makespan_cycles > 0.0 && o.energy > 0.0, "{}", o.mode);
+            for a in &o.assignments {
+                assert!(a.latency_cycles > 0.0 && a.busy_cycles >= a.latency_cycles);
+            }
+        }
+        assert!(r.evaluations > 0);
+        assert!(!r.contexts.is_empty());
+    }
+
+    #[test]
+    fn solo_makespan_is_the_sum_spatial_is_the_max() {
+        let cfg = small_cfg();
+        let cs = CoschedConfig::default();
+        let r = schedule(&tiny_scenario(), &cfg, &cs, &EvalCache::new(), 1).unwrap();
+        let solo_sum: f64 = r.solo.assignments.iter().map(|a| a.busy_cycles).sum();
+        assert!((r.solo.makespan_cycles - solo_sum).abs() < 1e-6 * solo_sum.max(1.0));
+        let even_max = r
+            .even_split
+            .assignments
+            .iter()
+            .map(|a| a.busy_cycles)
+            .fold(0.0, f64::max);
+        assert_eq!(r.even_split.makespan_cycles, even_max);
+    }
+
+    #[test]
+    fn shared_cache_makes_rescheduling_free() {
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let cs = CoschedConfig::default();
+        let cold = schedule(&tiny_scenario(), &cfg, &cs, &cache, 1).unwrap();
+        assert!(cold.evaluations > 0);
+        let warm = schedule(&tiny_scenario(), &cfg, &cs, &cache, 1).unwrap();
+        assert_eq!(warm.evaluations, 0, "warm reschedule must be all hits");
+        assert!(warm.cache_hits > 0);
+        assert_eq!(warm.cosched.makespan_cycles, cold.cosched.makespan_cycles);
+    }
+
+    #[test]
+    fn placement_is_composed_and_non_overlapping() {
+        let cfg = small_cfg();
+        let cs = CoschedConfig::default();
+        let r = schedule(&tiny_scenario(), &cfg, &cs, &EvalCache::new(), 1).unwrap();
+        let sp = &r.placement;
+        assert_eq!(sp.rows, cfg.pe_rows);
+        assert_eq!(sp.cols, cfg.pe_cols);
+        let owned: usize = (0..2).map(|t| sp.task_pes(t)).sum();
+        assert_eq!(owned + sp.idle_pes(), cfg.num_pes());
+        assert!(sp.task_pes(0) > 0 && sp.task_pes(1) > 0);
+    }
+
+    #[test]
+    fn too_many_tasks_for_the_array_errors() {
+        let cfg = ArchConfig {
+            pe_rows: 4,
+            pe_cols: 1,
+            ..ArchConfig::default()
+        };
+        let cs = CoschedConfig::default();
+        let r = schedule(&tiny_scenario(), &cfg, &cs, &EvalCache::new(), 1);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn tuned_cosched_never_loses_to_heuristic_cosched() {
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let cs = CoschedConfig::default();
+        let heur = schedule(&tiny_scenario(), &cfg, &cs, &cache, 1).unwrap();
+        let tuned_cs = CoschedConfig {
+            tuned: true,
+            budget: Some(256),
+            ..CoschedConfig::default()
+        };
+        let tuned = schedule(&tiny_scenario(), &cfg, &tuned_cs, &cache, 1).unwrap();
+        assert!(
+            tuned.cosched.makespan_cycles <= heur.cosched.makespan_cycles * 1.0001,
+            "tuned {} vs heuristic {}",
+            tuned.cosched.makespan_cycles,
+            heur.cosched.makespan_cycles
+        );
+    }
+}

@@ -17,9 +17,20 @@
 //! truncated, version-skewed, or garbage file degrades to a cold start,
 //! and individually malformed entries are skipped: the cache is an
 //! optimization, never a correctness dependency.
+//!
+//! Persistence makes growth a problem: a cache file fed by repeated sweeps
+//! would grow without bound (and would keep entries whose workload
+//! definition has since changed, which can never hit again because the
+//! fingerprint changed with it). Two bounded-size levers fix that before a
+//! save: [`EvalCache::retain_contexts`] drops entries whose context
+//! fingerprint is no longer live, and [`EvalCache::prune_to_cap`] evicts
+//! least-recently-used entries beyond a cap ([`CACHE_DEFAULT_CAP`] unless
+//! `--cache-cap` overrides it). Recency is a per-process access tick:
+//! entries hydrated from a file start at tick 0, so untouched hydrated
+//! entries are always the first to go.
 
 use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,6 +48,11 @@ use crate::util::json::Json;
 /// back to a cold start.
 pub const CACHE_FILE_VERSION: u64 = 1;
 
+/// Default entry cap applied before [`EvalCache::save_file`] by the CLI
+/// (`--cache-cap` overrides). One serialized entry is ~300 bytes of
+/// pretty JSON, so a capped file stays around 5 MB.
+pub const CACHE_DEFAULT_CAP: usize = 16_384;
+
 /// Cache coordinates of one evaluated segment:
 /// `(workload/config fingerprint, start, depth, organization, granularity
 /// scale, topology)`. The leading fingerprint ([`context_fingerprint`])
@@ -44,6 +60,28 @@ pub const CACHE_FILE_VERSION: u64 = 1;
 /// architecture configs — without it, segment `(0, 1, Sequential, 1, Amp)`
 /// of two different models would collide silently.
 pub type SegmentKey = (u64, usize, usize, Organization, u64, TopologyKind);
+
+/// Cache coordinates of a *heuristic-planned* segment: granularity scale
+/// is always 1, so the segment lives exactly where the DSE enumerator
+/// would put it (`dse::space::build_planned(.., org, 1)` rebuilds it
+/// bit-identically). Both the DSE's seed path and cosched's plan costing
+/// key through this helper, so the layout can never drift between them —
+/// that shared layout is what lets one persistent cache warm-start dse,
+/// tuned planning, and co-scheduling alike.
+pub fn heuristic_segment_key(
+    ctx: u64,
+    ps: &crate::cost::PlannedSegment,
+    topology: TopologyKind,
+) -> SegmentKey {
+    (
+        ctx,
+        ps.segment.start,
+        ps.segment.depth,
+        ps.organization,
+        1,
+        topology,
+    )
+}
 
 /// Fingerprint of the (workload, architecture) evaluation context a
 /// [`SegmentKey`] is scoped to. Hashes the full per-layer structure (order
@@ -116,13 +154,32 @@ impl RunCounters {
             misses: self.misses.load(Ordering::Relaxed),
         }
     }
+
+    /// Fold another meter's totals into this one — used when inner
+    /// searches get fresh per-plan budget windows but an outer sweep still
+    /// reports aggregate evaluations/hits (e.g. cosched's per-(task, width)
+    /// tuned plans under one scenario).
+    pub fn absorb(&self, stats: CacheStats) {
+        self.hits.fetch_add(stats.hits, Ordering::Relaxed);
+        self.misses.fetch_add(stats.misses, Ordering::Relaxed);
+    }
+}
+
+/// One cached evaluation plus its last-access tick (the LRU clock of
+/// [`EvalCache::prune_to_cap`]). Hydrated entries start at tick 0; every
+/// lookup through `get_or_eval*` bumps the tick.
+struct Slot {
+    cost: SegmentCost,
+    tick: u64,
 }
 
 /// Sharded memoization table for segment evaluations.
 pub struct EvalCache {
-    shards: Vec<Mutex<HashMap<SegmentKey, SegmentCost>>>,
+    shards: Vec<Mutex<HashMap<SegmentKey, Slot>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Monotone access clock shared by all shards.
+    tick: AtomicU64,
 }
 
 impl Default for EvalCache {
@@ -137,13 +194,20 @@ impl EvalCache {
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            tick: AtomicU64::new(0),
         }
     }
 
-    fn shard(&self, key: &SegmentKey) -> &Mutex<HashMap<SegmentKey, SegmentCost>> {
+    fn shard(&self, key: &SegmentKey) -> &Mutex<HashMap<SegmentKey, Slot>> {
         let mut h = DefaultHasher::new();
         key.hash(&mut h);
         &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// Next value of the access clock (never 0, so tick 0 uniquely marks
+    /// hydrated-and-untouched entries).
+    fn now(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
     }
 
     /// Return the cached cost for `key`, or compute it with `eval`, insert,
@@ -171,28 +235,41 @@ impl EvalCache {
         run: &RunCounters,
     ) -> SegmentCost {
         let shard = self.shard(&key);
-        if let Some(cost) = shard.lock().unwrap().get(&key) {
+        if let Some(slot) = shard.lock().unwrap().get_mut(&key) {
+            slot.tick = self.now();
             self.hits.fetch_add(1, Ordering::Relaxed);
             run.hits.fetch_add(1, Ordering::Relaxed);
-            return cost.clone();
+            return slot.cost.clone();
         }
         let cost = eval();
         let mut map = shard.lock().unwrap();
-        if let Some(existing) = map.get(&key) {
+        if let Some(slot) = map.get_mut(&key) {
             // Another thread won the race; its value is identical.
+            slot.tick = self.now();
             self.hits.fetch_add(1, Ordering::Relaxed);
             run.hits.fetch_add(1, Ordering::Relaxed);
-            return existing.clone();
+            return slot.cost.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         run.misses.fetch_add(1, Ordering::Relaxed);
-        map.insert(key, cost.clone());
+        map.insert(
+            key,
+            Slot {
+                cost: cost.clone(),
+                tick: self.now(),
+            },
+        );
         cost
     }
 
-    /// Peek without evaluating (used by tests).
+    /// Peek without evaluating or touching the access clock (used by
+    /// tests).
     pub fn get(&self, key: &SegmentKey) -> Option<SegmentCost> {
-        self.shard(key).lock().unwrap().get(key).cloned()
+        self.shard(key)
+            .lock()
+            .unwrap()
+            .get(key)
+            .map(|s| s.cost.clone())
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -211,12 +288,68 @@ impl EvalCache {
         self.len() == 0
     }
 
-    /// Insert an already-known cost without touching the hit/miss counters:
-    /// hydrated entries are neither hits nor misses of this process's
-    /// searches, so the budget meter and the warm-vs-cold evaluation counts
-    /// stay exact.
+    /// Insert an already-known cost without touching the hit/miss counters
+    /// or the access clock: hydrated entries are neither hits nor misses of
+    /// this process's searches (so the budget meter and the warm-vs-cold
+    /// evaluation counts stay exact), and at tick 0 they are the first
+    /// candidates for LRU eviction until a lookup touches them.
     pub fn preload(&self, key: SegmentKey, cost: SegmentCost) {
-        self.shard(&key).lock().unwrap().insert(key, cost);
+        self.shard(&key)
+            .lock()
+            .unwrap()
+            .insert(key, Slot { cost, tick: 0 });
+    }
+
+    /// Drop every entry whose context fingerprint is not in `live`,
+    /// returning how many were removed. A fingerprint goes dead when the
+    /// workload or architecture it hashes changes — those entries can never
+    /// hit again, so pruning them before [`EvalCache::save_file`] keeps
+    /// persistent caches from accreting garbage across zoo edits.
+    pub fn retain_contexts(&self, live: &HashSet<u64>) -> usize {
+        let mut removed = 0;
+        for shard in &self.shards {
+            let mut map = shard.lock().unwrap();
+            let before = map.len();
+            map.retain(|k, _| live.contains(&k.0));
+            removed += before - map.len();
+        }
+        removed
+    }
+
+    /// Context fingerprints of entries inserted or hit by *this process*
+    /// (hydrated-but-untouched entries excluded). Callers union this with
+    /// their statically-known live set before [`EvalCache::retain_contexts`]
+    /// so contexts only this run knows about (e.g. per-region configs of a
+    /// cosched search) survive the save.
+    pub fn touched_contexts(&self) -> HashSet<u64> {
+        let mut out = HashSet::new();
+        for shard in &self.shards {
+            let map = shard.lock().unwrap();
+            out.extend(map.iter().filter(|(_, s)| s.tick > 0).map(|(k, _)| k.0));
+        }
+        out
+    }
+
+    /// Evict least-recently-used entries until at most `cap` remain,
+    /// returning how many were evicted. Ties (notably the tick-0 hydrated
+    /// entries) break on the key coordinates, so eviction is deterministic.
+    pub fn prune_to_cap(&self, cap: usize) -> usize {
+        if self.len() <= cap {
+            return 0;
+        }
+        let mut order: Vec<(u64, SegmentKey)> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let map = shard.lock().unwrap();
+            order.extend(map.iter().map(|(k, s)| (s.tick, *k)));
+        }
+        order.sort_by_key(|&(tick, (ctx, start, depth, org, scale, topo))| {
+            (tick, ctx, start, depth, org.name(), scale, topo.name())
+        });
+        let evict = order.len().saturating_sub(cap);
+        for &(_, key) in order.iter().take(evict) {
+            self.shard(&key).lock().unwrap().remove(&key);
+        }
+        evict
     }
 
     /// Every `(key, cost)` entry, sorted by key coordinates so serialized
@@ -225,7 +358,7 @@ impl EvalCache {
         let mut out: Vec<(SegmentKey, SegmentCost)> = Vec::with_capacity(self.len());
         for shard in &self.shards {
             let map = shard.lock().unwrap();
-            out.extend(map.iter().map(|(k, c)| (*k, c.clone())));
+            out.extend(map.iter().map(|(k, s)| (*k, s.cost.clone())));
         }
         out.sort_by_key(|((ctx, start, depth, org, scale, topo), _)| {
             (*ctx, *start, *depth, org.name(), *scale, topo.name())
@@ -577,6 +710,100 @@ mod tests {
         let b = c.to_json().to_pretty();
         assert_eq!(a, b, "serialization must be deterministic");
         Json::parse(&a).unwrap();
+    }
+
+    #[test]
+    fn prune_to_cap_respects_cap_and_keeps_recently_used() {
+        let c = EvalCache::new();
+        for i in 0..20 {
+            c.get_or_eval(key(i, 1), || cost(i as f64));
+        }
+        // Re-touch the first three keys: they become the most recent.
+        for i in 0..3 {
+            c.get_or_eval(key(i, 1), || panic!("cached"));
+        }
+        let evicted = c.prune_to_cap(5);
+        assert_eq!(evicted, 15);
+        assert_eq!(c.len(), 5);
+        // Survivors: the three re-touched keys plus the two most recently
+        // inserted ones.
+        for i in [0, 1, 2, 18, 19] {
+            assert!(c.get(&key(i, 1)).is_some(), "key {i} evicted");
+        }
+        for i in 3..18 {
+            assert!(c.get(&key(i, 1)).is_none(), "key {i} survived");
+        }
+        // Already under cap: a no-op.
+        assert_eq!(c.prune_to_cap(5), 0);
+        assert_eq!(c.prune_to_cap(1000), 0);
+    }
+
+    #[test]
+    fn hydrated_entries_are_evicted_before_touched_ones() {
+        let c = EvalCache::new();
+        for i in 0..10 {
+            c.preload(key(i, 1), cost(i as f64)); // tick 0
+        }
+        for i in 10..15 {
+            c.get_or_eval(key(i, 1), || cost(i as f64)); // ticked
+        }
+        assert_eq!(c.prune_to_cap(5), 10);
+        for i in 10..15 {
+            assert!(c.get(&key(i, 1)).is_some(), "touched key {i} evicted");
+        }
+        for i in 0..10 {
+            assert!(c.get(&key(i, 1)).is_none(), "hydrated key {i} survived");
+        }
+    }
+
+    #[test]
+    fn retain_contexts_drops_dead_fingerprints() {
+        let c = EvalCache::new();
+        let mk = |ctx: u64, start: usize| -> SegmentKey {
+            (
+                ctx,
+                start,
+                2,
+                Organization::FineStriped1D,
+                1,
+                TopologyKind::Mesh,
+            )
+        };
+        for i in 0..5 {
+            c.get_or_eval(mk(0xA, i), || cost(1.0));
+            c.get_or_eval(mk(0xB, i), || cost(2.0));
+        }
+        let live: HashSet<u64> = [0xB].into_iter().collect();
+        assert_eq!(c.retain_contexts(&live), 5);
+        assert_eq!(c.len(), 5);
+        assert!(c.get(&mk(0xA, 0)).is_none());
+        assert!(c.get(&mk(0xB, 0)).is_some());
+        // Touched contexts reports only what this process looked up.
+        assert_eq!(c.touched_contexts(), [0xB].into_iter().collect());
+    }
+
+    #[test]
+    fn touched_contexts_excludes_hydrated_entries() {
+        let c = EvalCache::new();
+        c.preload(key(0, 1), cost(1.0));
+        assert!(c.touched_contexts().is_empty());
+        c.get_or_eval(key(0, 1), || panic!("cached"));
+        assert_eq!(c.touched_contexts().len(), 1);
+    }
+
+    #[test]
+    fn pruned_cache_roundtrips_through_disk() {
+        let c = EvalCache::new();
+        for i in 0..30 {
+            c.get_or_eval(key(i, 1), || cost(i as f64));
+        }
+        c.prune_to_cap(10);
+        let path = tmp_path("pruned");
+        c.save_file(&path).unwrap();
+        let (loaded, outcome) = EvalCache::load_file(&path);
+        assert_eq!(outcome, CacheLoadOutcome::Warm { entries: 10 });
+        assert_eq!(loaded.len(), 10);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -17,7 +17,9 @@
 //! - [`search`]: exhaustive and beam-width-bounded multi-objective dynamic
 //!   programming over segment boundaries (per-segment costs are additive,
 //!   so Pareto-optimal plans have Pareto-optimal prefixes);
-//! - [`pareto`]: extraction of the latency/energy/DRAM-traffic frontier.
+//! - [`pareto`]: extraction of the latency/energy/DRAM-traffic frontier
+//!   (plus, behind [`DseConfig::channel_load_objective`], the Fig. 15
+//!   worst-channel-load axis, so congestion-free trade-offs stay visible).
 //!
 //! The searched frontier is seeded with the heuristic mapper's plan
 //! whenever its topology is inside the searched set (always true for the
@@ -33,10 +35,10 @@ mod search;
 mod space;
 
 pub use cache::{
-    context_fingerprint, CacheLoadOutcome, CacheStats, EvalCache, RunCounters, SegmentKey,
-    CACHE_FILE_VERSION,
+    context_fingerprint, heuristic_segment_key, CacheLoadOutcome, CacheStats, EvalCache,
+    RunCounters, SegmentKey, CACHE_DEFAULT_CAP, CACHE_FILE_VERSION,
 };
-pub use pareto::{dominates, pareto_filter, ParetoPoint};
+pub use pareto::{dominates, dominates_first, pareto_filter, pareto_filter_first, ParetoPoint};
 pub use search::{explore, tuned_plan, DseResult, PlanPoint};
 pub use space::{legal_depths, segment_candidates, CandidateSegment};
 
@@ -100,6 +102,11 @@ pub struct DseConfig {
     /// Safety cap on per-boundary Pareto sets under
     /// [`SearchStrategy::Exhaustive`].
     pub max_labels: usize,
+    /// Make the Fig. 15 worst-case channel load a fourth Pareto objective
+    /// (`--channel-load-objective`). Off by default: the frontier then
+    /// reproduces the original latency/energy/DRAM front exactly, while
+    /// the load value is still computed and reported on every point.
+    pub channel_load_objective: bool,
 }
 
 impl Default for DseConfig {
@@ -117,6 +124,7 @@ impl Default for DseConfig {
             ],
             budget: None,
             max_labels: 256,
+            channel_load_objective: false,
         }
     }
 }
@@ -133,6 +141,18 @@ impl DseConfig {
             topologies: vec![TopologyKind::Amp, TopologyKind::Mesh],
             budget: None,
             max_labels: 64,
+            channel_load_objective: false,
+        }
+    }
+
+    /// How many leading objectives participate in Pareto dominance:
+    /// 3 (cycles, energy, DRAM) normally, 4 with the channel-load axis
+    /// enabled.
+    pub fn objective_count(&self) -> usize {
+        if self.channel_load_objective {
+            4
+        } else {
+            3
         }
     }
 
@@ -175,6 +195,7 @@ impl DseConfig {
             }
             dse.topologies = topos;
         }
+        dse.channel_load_objective = args.has("channel-load-objective");
         Ok(dse)
     }
 }
@@ -182,7 +203,10 @@ impl DseConfig {
 /// Flags accepted by the `dse` subcommand on top of the global ones
 /// (`(name, takes_value)` — the `cli::Args` strict-flag table format).
 /// `--cache-file` names the persistent [`EvalCache`] file: loaded (warm
-/// start) before the sweep, saved back after it.
+/// start) before the sweep, pruned to `--cache-cap` entries
+/// ([`CACHE_DEFAULT_CAP`] by default) and saved back after it.
+/// `--channel-load-objective` adds the Fig. 15 worst-channel-load metric
+/// as a fourth Pareto axis.
 pub const DSE_FLAGS: &[(&str, bool)] = &[
     ("workload", true),
     ("strategy", true),
@@ -192,6 +216,8 @@ pub const DSE_FLAGS: &[(&str, bool)] = &[
     ("budget", true),
     ("topologies", true),
     ("cache-file", true),
+    ("cache-cap", true),
+    ("channel-load-objective", false),
 ];
 
 #[cfg(test)]
@@ -250,6 +276,15 @@ mod tests {
             d.topologies,
             vec![TopologyKind::Amp, TopologyKind::Mesh]
         );
+        assert!(!d.channel_load_objective);
+        assert_eq!(d.objective_count(), 3);
+    }
+
+    #[test]
+    fn channel_load_objective_flag_widens_the_front() {
+        let d = parse_dse(&["dse", "--channel-load-objective"]).unwrap();
+        assert!(d.channel_load_objective);
+        assert_eq!(d.objective_count(), 4);
     }
 
     #[test]

@@ -1,16 +1,32 @@
-//! Pareto-frontier extraction over the three reported objectives:
-//! latency (cycles), energy, and DRAM traffic — all minimized.
+//! Pareto-frontier extraction over the reported objectives: latency
+//! (cycles), energy, DRAM traffic, and — behind
+//! `DseConfig::channel_load_objective` — the Fig. 15 worst-case channel
+//! load. All objectives are minimized.
+//!
+//! Points always *carry* the full four-dimensional objective vector; how
+//! many leading axes participate in dominance is the caller's choice
+//! (`dominates_first` / `pareto_filter_first`). The default three-axis
+//! filter reproduces the original latency/energy/DRAM frontier exactly;
+//! enabling the fourth axis surfaces congestion-free trade-off points that
+//! a three-axis filter would collapse away.
 
 /// Anything with a fixed objective vector (smaller is better on every
-/// axis).
+/// axis). Order: `[cycles, energy, DRAM words, worst channel load]`.
 pub trait ParetoPoint {
-    fn objectives(&self) -> [f64; 3];
+    fn objectives(&self) -> [f64; 4];
 }
 
-/// `a` dominates `b`: no worse everywhere, strictly better somewhere.
-pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+/// `a` dominates `b` on all four objectives: no worse everywhere, strictly
+/// better somewhere.
+pub fn dominates(a: &[f64; 4], b: &[f64; 4]) -> bool {
+    dominates_first(a, b, 4)
+}
+
+/// `a` dominates `b` on the first `k` objectives (`k` clamped to `1..=4`).
+pub fn dominates_first(a: &[f64; 4], b: &[f64; 4], k: usize) -> bool {
+    let k = k.clamp(1, 4);
     let mut strictly = false;
-    for (x, y) in a.iter().zip(b.iter()) {
+    for (x, y) in a.iter().zip(b.iter()).take(k) {
         if x > y {
             return false;
         }
@@ -21,9 +37,18 @@ pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
     strictly
 }
 
-/// Keep the non-dominated subset of `points` (exact duplicates collapse to
-/// one), returned in ascending order of the first objective.
+/// Keep the subset of `points` non-dominated on all four objectives.
 pub fn pareto_filter<T: ParetoPoint>(points: Vec<T>) -> Vec<T> {
+    pareto_filter_first(points, 4)
+}
+
+/// Keep the subset of `points` non-dominated on the first `k` objectives
+/// (exact duplicates on those axes collapse to one — the sort below makes
+/// the survivor the one with the smallest trailing objectives, so the
+/// choice is deterministic). Returned in ascending order of the first
+/// objective.
+pub fn pareto_filter_first<T: ParetoPoint>(points: Vec<T>, k: usize) -> Vec<T> {
+    let k = k.clamp(1, 4);
     let mut points = points;
     points.sort_by(|a, b| {
         a.objectives()
@@ -33,13 +58,13 @@ pub fn pareto_filter<T: ParetoPoint>(points: Vec<T>) -> Vec<T> {
     let mut kept: Vec<T> = Vec::new();
     'next: for p in points {
         let po = p.objectives();
-        for k in &kept {
-            let ko = k.objectives();
-            if ko == po || dominates(&ko, &po) {
+        for q in &kept {
+            let qo = q.objectives();
+            if qo[..k] == po[..k] || dominates_first(&qo, &po, k) {
                 continue 'next;
             }
         }
-        kept.retain(|k| !dominates(&po, &k.objectives()));
+        kept.retain(|q| !dominates_first(&po, &q.objectives(), k));
         kept.push(p);
     }
     kept
@@ -50,75 +75,85 @@ mod tests {
     use super::*;
 
     #[derive(Debug, Clone, PartialEq)]
-    struct P([f64; 3]);
+    struct P([f64; 4]);
 
     impl ParetoPoint for P {
-        fn objectives(&self) -> [f64; 3] {
+        fn objectives(&self) -> [f64; 4] {
             self.0
         }
     }
 
+    /// Three-axis point with the load axis pinned to zero (the legacy
+    /// frontier shape).
+    fn p3(a: f64, b: f64, c: f64) -> P {
+        P([a, b, c, 0.0])
+    }
+
     #[test]
     fn dominance_rules() {
-        assert!(dominates(&[1.0, 1.0, 1.0], &[2.0, 1.0, 1.0]));
-        assert!(!dominates(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0])); // equal
-        assert!(!dominates(&[1.0, 3.0, 1.0], &[2.0, 1.0, 1.0])); // trade-off
+        assert!(dominates(&[1.0, 1.0, 1.0, 1.0], &[2.0, 1.0, 1.0, 1.0]));
+        assert!(!dominates(&[1.0, 1.0, 1.0, 1.0], &[1.0, 1.0, 1.0, 1.0])); // equal
+        assert!(!dominates(&[1.0, 3.0, 1.0, 1.0], &[2.0, 1.0, 1.0, 1.0])); // trade-off
+        // The fourth axis participates in full dominance...
+        assert!(dominates(&[1.0, 1.0, 1.0, 0.5], &[1.0, 1.0, 1.0, 1.0]));
+        // ...but not in the three-axis restriction.
+        assert!(!dominates_first(&[1.0, 1.0, 1.0, 0.5], &[1.0, 1.0, 1.0, 1.0], 3));
     }
 
     #[test]
     fn filter_keeps_tradeoffs_drops_dominated() {
         let pts = vec![
-            P([3.0, 1.0, 2.0]),
-            P([1.0, 3.0, 2.0]),
-            P([2.0, 2.0, 2.0]),
-            P([3.0, 3.0, 3.0]), // dominated by all three above
+            p3(3.0, 1.0, 2.0),
+            p3(1.0, 3.0, 2.0),
+            p3(2.0, 2.0, 2.0),
+            p3(3.0, 3.0, 3.0), // dominated by all three above
         ];
         let f = pareto_filter(pts);
         assert_eq!(f.len(), 3);
         // ascending by first objective
         assert!(f.windows(2).all(|w| w[0].0[0] <= w[1].0[0]));
-        assert!(!f.contains(&P([3.0, 3.0, 3.0])));
+        assert!(!f.contains(&p3(3.0, 3.0, 3.0)));
     }
 
     #[test]
     fn duplicates_collapse() {
-        let f = pareto_filter(vec![P([1.0, 1.0, 1.0]), P([1.0, 1.0, 1.0])]);
+        let f = pareto_filter(vec![p3(1.0, 1.0, 1.0), p3(1.0, 1.0, 1.0)]);
         assert_eq!(f.len(), 1);
     }
 
     #[test]
     fn single_and_empty() {
         assert!(pareto_filter(Vec::<P>::new()).is_empty());
-        assert_eq!(pareto_filter(vec![P([5.0, 5.0, 5.0])]).len(), 1);
+        assert_eq!(pareto_filter(vec![p3(5.0, 5.0, 5.0)]).len(), 1);
     }
 
     #[test]
     fn ties_on_some_axes_are_kept_as_tradeoffs() {
-        // Equal on two axes, trading off on the third: neither dominates,
-        // both must survive.
-        let f = pareto_filter(vec![P([1.0, 5.0, 2.0]), P([1.0, 4.0, 3.0])]);
+        // Equal on all but one axis, trading off on that one: neither
+        // dominates, both must survive.
+        let f = pareto_filter(vec![p3(1.0, 5.0, 2.0), p3(1.0, 4.0, 3.0)]);
         assert_eq!(f.len(), 2);
-        // Equal on two axes and strictly better on the third: dominated.
-        let f = pareto_filter(vec![P([1.0, 5.0, 2.0]), P([1.0, 5.0, 3.0])]);
-        assert_eq!(f, vec![P([1.0, 5.0, 2.0])]);
+        // Equal on all but one axis and strictly better there: dominated.
+        let f = pareto_filter(vec![p3(1.0, 5.0, 2.0), p3(1.0, 5.0, 3.0)]);
+        assert_eq!(f, vec![p3(1.0, 5.0, 2.0)]);
     }
 
     #[test]
     fn many_equal_points_collapse_to_one() {
-        let f = pareto_filter(vec![P([2.0, 2.0, 2.0]); 7]);
-        assert_eq!(f, vec![P([2.0, 2.0, 2.0])]);
+        let f = pareto_filter(vec![p3(2.0, 2.0, 2.0); 7]);
+        assert_eq!(f, vec![p3(2.0, 2.0, 2.0)]);
     }
 
     #[test]
     fn degenerate_single_objective_front_keeps_only_the_minimum() {
-        // All points identical on two axes — the frontier degenerates to
-        // the single best point of the remaining objective, regardless of
+        // All points identical on the other axes — the frontier degenerates
+        // to the single best point of the remaining objective, regardless of
         // which axis varies.
-        for axis in 0..3 {
+        for axis in 0..4 {
             let pts: Vec<P> = [5.0, 3.0, 9.0, 3.5]
                 .iter()
                 .map(|&v| {
-                    let mut o = [1.0, 1.0, 1.0];
+                    let mut o = [1.0, 1.0, 1.0, 1.0];
                     o[axis] = v;
                     P(o)
                 })
@@ -131,13 +166,13 @@ mod tests {
 
     #[test]
     fn dominance_is_irreflexive_and_antisymmetric_on_ties() {
-        let a = [1.0, 2.0, 3.0];
-        let b = [1.0, 2.0, 4.0];
+        let a = [1.0, 2.0, 3.0, 0.0];
+        let b = [1.0, 2.0, 4.0, 0.0];
         assert!(!dominates(&a, &a), "irreflexive");
         assert!(dominates(&a, &b));
         assert!(!dominates(&b, &a), "antisymmetric");
         // Ties on every axis dominate in neither direction.
-        let c = [1.0, 2.0, 3.0];
+        let c = [1.0, 2.0, 3.0, 0.0];
         assert!(!dominates(&a, &c) && !dominates(&c, &a));
     }
 
@@ -147,17 +182,51 @@ mod tests {
             .map(|i| {
                 let x = (i * 7 % 13) as f64;
                 let y = (i * 11 % 17) as f64;
-                P([x, y, (x + y) % 5.0])
+                P([x, y, (x + y) % 5.0, (x * y) % 3.0])
             })
             .collect();
-        let f = pareto_filter(pts);
-        for a in &f {
-            for b in &f {
-                assert!(
-                    std::ptr::eq(a, b) || !dominates(&a.objectives(), &b.objectives()),
-                    "{a:?} dominates {b:?}"
-                );
+        for k in [3, 4] {
+            let f = pareto_filter_first(pts.clone(), k);
+            for a in &f {
+                for b in &f {
+                    assert!(
+                        std::ptr::eq(a, b)
+                            || !dominates_first(&a.objectives(), &b.objectives(), k),
+                        "k={k}: {a:?} dominates {b:?}"
+                    );
+                }
             }
         }
+    }
+
+    #[test]
+    fn three_axis_filter_ignores_the_load_axis() {
+        // Two points equal on the first three axes: the 3-axis filter keeps
+        // exactly one (the lower-load one, deterministically); the 4-axis
+        // filter also keeps one because the lower-load point dominates.
+        let pts = vec![P([1.0, 1.0, 1.0, 9.0]), P([1.0, 1.0, 1.0, 2.0])];
+        let f3 = pareto_filter_first(pts.clone(), 3);
+        assert_eq!(f3, vec![P([1.0, 1.0, 1.0, 2.0])]);
+        let f4 = pareto_filter_first(pts, 4);
+        assert_eq!(f4, vec![P([1.0, 1.0, 1.0, 2.0])]);
+        // A point worse on cycles but better on load survives only under
+        // the four-axis filter.
+        let pts = vec![P([1.0, 1.0, 1.0, 9.0]), P([2.0, 1.0, 1.0, 2.0])];
+        assert_eq!(pareto_filter_first(pts.clone(), 3).len(), 1);
+        assert_eq!(pareto_filter_first(pts, 4).len(), 2);
+    }
+
+    #[test]
+    fn widening_the_objective_count_never_shrinks_the_front() {
+        let pts: Vec<P> = (0..40)
+            .map(|i| {
+                let x = (i * 5 % 11) as f64;
+                let y = (i * 3 % 7) as f64;
+                P([x, y, ((x + 2.0 * y) as usize % 6) as f64, (i % 4) as f64])
+            })
+            .collect();
+        let f3 = pareto_filter_first(pts.clone(), 3).len();
+        let f4 = pareto_filter_first(pts, 4).len();
+        assert!(f4 >= f3, "4-axis front {f4} smaller than 3-axis {f3}");
     }
 }

@@ -21,7 +21,7 @@ use crate::pipeline::Segment;
 use crate::spatial::Organization;
 
 use super::cache::{EvalCache, RunCounters};
-use super::pareto::{pareto_filter, ParetoPoint};
+use super::pareto::{pareto_filter_first, ParetoPoint};
 use super::space;
 use super::{DseConfig, SearchStrategy};
 
@@ -32,6 +32,10 @@ pub struct PlanPoint {
     pub cycles: f64,
     pub energy: f64,
     pub dram_words: u64,
+    /// Worst per-interval channel load over the plan's segments (the
+    /// Fig. 15 metric). Always computed and reported; participates in
+    /// dominance only under [`DseConfig::channel_load_objective`].
+    pub worst_channel_load: f64,
     /// `"search"` for explored points, `"heuristic"` for the seeded
     /// heuristic-mapper plan, `"tuned"` for the budgeted plan-time search
     /// behind `mapper::TunedPipeOrgan`.
@@ -39,9 +43,23 @@ pub struct PlanPoint {
 }
 
 impl ParetoPoint for PlanPoint {
-    fn objectives(&self) -> [f64; 3] {
-        [self.cycles, self.energy, self.dram_words as f64]
+    fn objectives(&self) -> [f64; 4] {
+        [
+            self.cycles,
+            self.energy,
+            self.dram_words as f64,
+            self.worst_channel_load,
+        ]
     }
+}
+
+/// Worst per-interval channel load over a whole-model cost (max across
+/// segments — congestion does not add up over time-multiplexed segments).
+fn max_channel_load(cost: &crate::cost::ModelCost) -> f64 {
+    cost.per_segment
+        .iter()
+        .map(|s| s.worst_channel_load_per_interval)
+        .fold(0.0, f64::max)
 }
 
 /// Outcome of one workload's exploration.
@@ -62,9 +80,11 @@ pub struct DseResult {
     /// [`DseResult::heuristic`] whenever the heuristic's topology is
     /// searched (always true for the defaults).
     pub tuned: PlanPoint,
-    /// Pareto frontier over (cycles, energy, DRAM words), ascending by
-    /// cycles. Non-empty, and restricted to the searched topologies (plus
-    /// the heuristic and tuned seeds when their topology is searched).
+    /// Pareto frontier over (cycles, energy, DRAM words) — plus worst
+    /// channel load under [`DseConfig::channel_load_objective`] — ascending
+    /// by cycles. Non-empty, and restricted to the searched topologies
+    /// (plus the heuristic and tuned seeds when their topology is
+    /// searched).
     pub frontier: Vec<PlanPoint>,
     /// Cost-model evaluations this run added to the cache (cache misses).
     pub evaluations: u64,
@@ -110,12 +130,17 @@ struct Label {
     cycles: f64,
     energy: f64,
     dram: u64,
+    /// Max per-interval worst-channel-load over the prefix's segments.
+    /// Max-composition is monotone, so prefix dominance still implies plan
+    /// dominance and the DP's principle of optimality survives the fourth
+    /// objective.
+    load: f64,
     segs: Vec<(usize, usize, Organization, u64)>,
 }
 
 impl ParetoPoint for Label {
-    fn objectives(&self) -> [f64; 3] {
-        [self.cycles, self.energy, self.dram as f64]
+    fn objectives(&self) -> [f64; 4] {
+        [self.cycles, self.energy, self.dram as f64, self.load]
     }
 }
 
@@ -129,13 +154,14 @@ fn budget_exhausted(dse: &DseConfig, run: &RunCounters) -> bool {
         .unwrap_or(false)
 }
 
-/// Prune a label set: Pareto filter, then truncate to `cap` keeping the
-/// lowest-latency labels (`pareto_filter` returns ascending cycles).
-fn prune(labels: &mut Vec<Label>, cap: usize) {
+/// Prune a label set: Pareto filter over the first `k` objectives, then
+/// truncate to `cap` keeping the lowest-latency labels
+/// (`pareto_filter_first` returns ascending cycles).
+fn prune(labels: &mut Vec<Label>, cap: usize, k: usize) {
     if labels.len() <= 1 {
         return;
     }
-    let mut kept = pareto_filter(std::mem::take(labels));
+    let mut kept = pareto_filter_first(std::mem::take(labels), k);
     kept.truncate(cap.max(1));
     *labels = kept;
 }
@@ -167,11 +193,13 @@ fn search_topology(
         SearchStrategy::Exhaustive => dse.max_labels.max(1),
         SearchStrategy::Beam => dse.beam_width.max(1),
     };
+    let k = dse.objective_count();
     let mut frontiers: Vec<Vec<Label>> = (0..=n).map(|_| Vec::new()).collect();
     frontiers[0].push(Label {
         cycles: 0.0,
         energy: 0.0,
         dram: 0,
+        load: 0.0,
         segs: Vec::new(),
     });
     if let Some(plan) = seed.filter(|p| p.topology == topology) {
@@ -179,33 +207,24 @@ fn search_topology(
             cycles: 0.0,
             energy: 0.0,
             dram: 0,
+            load: 0.0,
             segs: Vec::new(),
         };
         for ps in &plan.segments {
-            // The heuristic always plans at granularity scale 1, so its
-            // segments live at the same cache coordinates the enumerator
-            // would use (`space::build_planned(.., org, 1)` rebuilds them
-            // bit-identically).
-            let key = (
-                ctx,
-                ps.segment.start,
-                ps.segment.depth,
-                ps.organization,
-                1u64,
-                topology,
-            );
+            let key = super::cache::heuristic_segment_key(ctx, ps, topology);
             let cost =
                 cache.get_or_eval_in(key, || evaluate_segment(graph, ps, cfg, &topo, &em), run);
             acc.cycles += cost.cycles;
             acc.energy += cost.energy;
             acc.dram += cost.dram_words;
+            acc.load = acc.load.max(cost.worst_channel_load_per_interval);
             acc.segs
                 .push((ps.segment.start, ps.segment.depth, ps.organization, 1u64));
             frontiers[ps.segment.end()].push(acc.clone());
         }
     }
     for i in 0..n {
-        prune(&mut frontiers[i], cap);
+        prune(&mut frontiers[i], cap, k);
         if frontiers[i].is_empty() {
             continue;
         }
@@ -232,6 +251,7 @@ fn search_topology(
                             cycles: lab.cycles + cost.cycles,
                             energy: lab.energy + cost.energy,
                             dram: lab.dram + cost.dram_words,
+                            load: lab.load.max(cost.worst_channel_load_per_interval),
                             segs,
                         }
                     })
@@ -241,13 +261,13 @@ fn search_topology(
                 // Keep intermediate sets bounded so exhaustive pruning
                 // stays O(labels²) on small sets.
                 if dst.len() > cap.saturating_mul(8).max(64) {
-                    prune(dst, cap);
+                    prune(dst, cap, k);
                 }
             }
         }
     }
     let mut last = std::mem::take(&mut frontiers[n]);
-    prune(&mut last, cap);
+    prune(&mut last, cap, k);
     last
 }
 
@@ -274,6 +294,7 @@ fn rebuild(
         cycles: label.cycles,
         energy: label.energy,
         dram_words: label.dram,
+        worst_channel_load: label.load,
         source: "search",
     }
 }
@@ -305,6 +326,7 @@ pub fn explore(
         cycles: heur_cost.cycles,
         energy: heur_cost.energy,
         dram_words: heur_cost.dram_words,
+        worst_channel_load: max_channel_load(&heur_cost),
         source: "heuristic",
     };
 
@@ -359,7 +381,7 @@ pub fn explore(
             points.push(rebuild(graph, cfg, dse, topology, &label));
         }
     }
-    let frontier = pareto_filter(points);
+    let frontier = pareto_filter_first(points, dse.objective_count());
     let run_stats = run.stats();
     let tuned_stats = tuned_run.stats();
     DseResult {
@@ -417,6 +439,7 @@ pub fn tuned_plan(
         cycles: heur_cost.cycles,
         energy: heur_cost.energy,
         dram_words: heur_cost.dram_words,
+        worst_channel_load: max_channel_load(&heur_cost),
         source: "tuned",
     }
 }
@@ -444,6 +467,7 @@ mod tests {
             topologies: vec![TopologyKind::Amp, TopologyKind::Mesh],
             budget: None,
             max_labels: 64,
+            channel_load_objective: false,
         }
     }
 
@@ -496,11 +520,52 @@ mod tests {
         for (i, a) in r.frontier.iter().enumerate() {
             for (j, b) in r.frontier.iter().enumerate() {
                 assert!(
-                    i == j || !dominates(&a.objectives(), &b.objectives()),
+                    i == j
+                        || !crate::dse::dominates_first(&a.objectives(), &b.objectives(), 3),
                     "frontier point {i} dominates {j}"
                 );
             }
         }
+    }
+
+    #[test]
+    fn four_objective_frontier_dominates_correctly_and_never_shrinks() {
+        let g = synthetic::pointwise_conv_segment(4);
+        let cfg = small_cfg();
+        let three = explore(
+            &g,
+            &cfg,
+            &tiny_dse(SearchStrategy::Exhaustive),
+            &EvalCache::new(),
+            1,
+        );
+        let mut dse4 = tiny_dse(SearchStrategy::Exhaustive);
+        dse4.channel_load_objective = true;
+        let four = explore(&g, &cfg, &dse4, &EvalCache::new(), 1);
+        // Every reported point carries a finite, non-negative load.
+        for p in three.frontier.iter().chain(four.frontier.iter()) {
+            assert!(p.worst_channel_load.is_finite() && p.worst_channel_load >= 0.0);
+        }
+        // The four-axis front is mutually non-dominating on all four axes
+        // and at least as large as the three-axis one (a point dominated on
+        // three axes can survive by trading congestion).
+        for (i, a) in four.frontier.iter().enumerate() {
+            for (j, b) in four.frontier.iter().enumerate() {
+                assert!(
+                    i == j || !dominates(&a.objectives(), &b.objectives()),
+                    "4-obj frontier point {i} dominates {j}"
+                );
+            }
+        }
+        assert!(
+            four.frontier.len() >= three.frontier.len(),
+            "4-obj front {} smaller than 3-obj front {}",
+            four.frontier.len(),
+            three.frontier.len()
+        );
+        // The latency oracle is unchanged: the extra axis only widens the
+        // reported front, it never hides the latency-best plan.
+        assert!((four.best().cycles - three.best().cycles).abs() <= 1e-9 * three.best().cycles);
     }
 
     #[test]

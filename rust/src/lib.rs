@@ -20,6 +20,9 @@
 //!   ([`coordinator`], [`runtime`]);
 //! - a parallel design-space exploration engine with memoized cost
 //!   evaluation and Pareto reporting ([`dse`]);
+//! - multi-workload co-scheduling of concurrent XR task sets onto one
+//!   shared PE array via rectangular region partitioning and an
+//!   occupancy-state allocation search ([`cosched`]);
 //! - per-figure report emitters ([`report`]).
 //!
 //! See `rust/DESIGN.md` for the paper-to-module map, the no-network
@@ -31,6 +34,7 @@ pub mod baselines;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod cosched;
 pub mod cost;
 pub mod dataflow;
 pub mod dse;

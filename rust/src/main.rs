@@ -12,8 +12,9 @@
 //! pipeorgan granularity         # Fig. 17
 //! pipeorgan validate-dataflow   # Sec. IV-A heuristic validation
 //! pipeorgan dse                 # E16: design-space exploration (frontier + gap)
+//! pipeorgan cosched             # E17: multi-workload co-scheduling (XR scenarios)
 //! pipeorgan run-segment         # E15: functional pipelined execution (PJRT)
-//! pipeorgan all                 # everything above except dse/run-segment
+//! pipeorgan all                 # everything above except dse/cosched/run-segment
 //! ```
 //!
 //! Common flags: `--out <dir>` (reports directory, default `reports`),
@@ -23,24 +24,34 @@
 //! `dse`-only flags (rejected on every other subcommand): `--workload
 //! <name|all>` (comma lists allowed), `--strategy <beam|exhaustive>`,
 //! `--beam <n>`, `--depth-cap <n>`, `--rungs <n>`, `--budget <n>`,
-//! `--topologies <a,b,..>`, `--cache-file <file>` (persistent evaluation
-//! cache: loaded before the sweep, saved back after it).
+//! `--topologies <a,b,..>`, `--channel-load-objective` (fourth Pareto
+//! axis), `--cache-file <file>` (persistent evaluation cache: loaded
+//! before the sweep, pruned and saved back after it), `--cache-cap <n>`
+//! (entry cap applied before saving).
 //!
 //! `e2e`-only flags: `--tuned` (run the search-guided `PipeOrgan::tuned`
-//! mapper in the PipeOrgan column) and `--cache-file <file>` (shared
-//! persistent cache for the tuned sweep).
+//! mapper in the PipeOrgan column), `--cache-file <file>` / `--cache-cap
+//! <n>` (shared persistent cache for the tuned sweep).
+//!
+//! `cosched`-only flags: `--scenario <name|all>` (canned XR scenarios,
+//! comma lists allowed), `--quantum <cols>` (region width quantum),
+//! `--tuned`, `--budget <n>`, `--cache-file <file>`, `--cache-cap <n>`.
 
+use std::collections::HashSet;
 use std::sync::Arc;
 
 use pipeorgan::cli::Args;
 use pipeorgan::config::ArchConfig;
 use pipeorgan::coordinator as coord;
 use pipeorgan::coordinator::MapperKind;
-use pipeorgan::dse::{CacheLoadOutcome, DseConfig, EvalCache, DSE_FLAGS};
+use pipeorgan::cosched::{self, CoschedConfig, COSCHED_FLAGS};
+use pipeorgan::dse::{
+    context_fingerprint, CacheLoadOutcome, DseConfig, EvalCache, CACHE_DEFAULT_CAP, DSE_FLAGS,
+};
 use pipeorgan::report;
 use pipeorgan::workloads;
 
-const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --cache-file FILE]";
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N] [cosched: --scenario NAME|all --quantum N --tuned --budget N --cache-file FILE --cache-cap N]";
 
 const FLAGS: &[(&str, bool)] = &[
     ("out", true),
@@ -58,11 +69,34 @@ fn known_flags(subcommand: &str) -> Vec<(&'static str, bool)> {
     if subcommand == "dse" {
         flags.extend_from_slice(DSE_FLAGS);
     }
+    if subcommand == "cosched" {
+        flags.extend_from_slice(COSCHED_FLAGS);
+    }
     if subcommand == "e2e" {
         flags.push(("tuned", false));
         flags.push(("cache-file", true));
+        flags.push(("cache-cap", true));
     }
     flags
+}
+
+/// The shared `--cache-file`/`--cache-cap` plumbing of the `e2e`, `dse`
+/// and `cosched` arms: reject a cap without a file (`--cache-cap` only
+/// matters at save time, which only happens with `--cache-file` — it
+/// would be silently dead), then load the cache and parse the cap.
+fn load_cache_with_cap(
+    args: &Args,
+) -> anyhow::Result<(Option<std::path::PathBuf>, EvalCache, usize)> {
+    if args.has("cache-cap") && !args.has("cache-file") {
+        anyhow::bail!(
+            "flag `--cache-cap` requires `--cache-file` (the cap bounds the persistent cache at save time)"
+        );
+    }
+    let (path, cache) = load_cache(args);
+    let cap = args
+        .get_usize("cache-cap", CACHE_DEFAULT_CAP)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    Ok((path, cache, cap))
 }
 
 /// Load the persistent evaluation cache named by `--cache-file` (cold and
@@ -90,15 +124,56 @@ fn load_cache(args: &Args) -> (Option<std::path::PathBuf>, EvalCache) {
     (Some(path), cache)
 }
 
-/// Save the cache back when `--cache-file` was given.
-fn save_cache(path: &Option<std::path::PathBuf>, cache: &EvalCache) -> anyhow::Result<()> {
-    if let Some(p) = path {
-        cache
-            .save_file(p)
-            .map_err(|e| anyhow::anyhow!("saving cache to {}: {e}", p.display()))?;
-        println!("cache: saved {} entries to {}", cache.len(), p.display());
+/// Save the cache back when `--cache-file` was given, after eviction:
+/// entries whose context fingerprint is outside `live` (stale workload or
+/// architecture definitions — they can never hit again) are dropped, then
+/// the least-recently-used entries beyond `cap` are evicted. Contexts this
+/// process actually touched are always considered live, so a run over
+/// non-zoo contexts (e.g. cosched region configs) never prunes its own
+/// work.
+fn save_cache(
+    path: &Option<std::path::PathBuf>,
+    cache: &EvalCache,
+    live: impl FnOnce() -> HashSet<u64>,
+    cap: usize,
+) -> anyhow::Result<()> {
+    let Some(p) = path else {
+        return Ok(());
+    };
+    let mut live = live();
+    live.extend(cache.touched_contexts());
+    let stale = cache.retain_contexts(&live);
+    if stale > 0 {
+        println!(
+            "cache: pruned {stale} entries from contexts outside this run's live set \
+             (stale workload/config fingerprints; custom cosched scenarios keep warm \
+             via their own saves — use a separate --cache-file per subcommand if needed)"
+        );
     }
+    let evicted = cache.prune_to_cap(cap);
+    if evicted > 0 {
+        println!("cache: evicted {evicted} least-recently-used entries (cap {cap})");
+    }
+    cache
+        .save_file(p)
+        .map_err(|e| anyhow::anyhow!("saving cache to {}: {e}", p.display()))?;
+    println!("cache: saved {} entries to {}", cache.len(), p.display());
     Ok(())
+}
+
+/// The statically-known live set for cache eviction: the whole zoo under
+/// `cfg` plus everything the canned cosched scenarios can reach at the
+/// default quantum. Every subcommand's save uses this same base, so one
+/// shared `--cache-file` stays warm across `dse`, `e2e --tuned`, and
+/// default `cosched` runs instead of each save pruning the others'
+/// entries.
+fn zoo_contexts(cfg: &ArchConfig) -> HashSet<u64> {
+    let mut live: HashSet<u64> = workloads::all_tasks()
+        .iter()
+        .map(|g| context_fingerprint(g, cfg))
+        .collect();
+    live.extend(cosched::canned_live_contexts(cfg));
+    live
 }
 
 fn main() {
@@ -149,13 +224,13 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
             report::table2_bottlenecks(&cfg),
         ]),
         "e2e" => {
-            if args.has("cache-file") && !args.has("tuned") {
+            if (args.has("cache-file") || args.has("cache-cap")) && !args.has("tuned") {
                 anyhow::bail!(
-                    "flag `--cache-file` on e2e requires `--tuned` (only the tuned mapper uses the evaluation cache)"
+                    "flag `--cache-file`/`--cache-cap` on e2e requires `--tuned` (only the tuned mapper uses the evaluation cache)"
                 );
             }
             if args.has("tuned") {
-                let (cache_file, cache) = load_cache(&args);
+                let (cache_file, cache, cache_cap) = load_cache_with_cap(&args)?;
                 let cache = Arc::new(cache);
                 emit(vec![
                     report::fig13_with(
@@ -171,7 +246,7 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
                         Some(Arc::clone(&cache)),
                     ),
                 ])?;
-                save_cache(&cache_file, &cache)
+                save_cache(&cache_file, &cache, || zoo_contexts(&cfg), cache_cap)
             } else {
                 emit(vec![
                     report::fig13_performance(&cfg, workers),
@@ -192,9 +267,43 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
         "dse" => {
             let dse_cfg = DseConfig::from_cli(&args).map_err(|e| anyhow::anyhow!(e))?;
             let tasks = resolve_workloads(args.get_or("workload", "all"))?;
-            let (cache_file, cache) = load_cache(&args);
+            let (cache_file, cache, cache_cap) = load_cache_with_cap(&args)?;
             emit(report::run_dse_reports(&cfg, tasks, &dse_cfg, workers, &cache))?;
-            save_cache(&cache_file, &cache)
+            save_cache(&cache_file, &cache, || zoo_contexts(&cfg), cache_cap)
+        }
+        "cosched" => {
+            let cs = CoschedConfig::from_cli(&args).map_err(|e| anyhow::anyhow!(e))?;
+            let scenarios = resolve_scenarios(args.get_or("scenario", "all"))?;
+            let (cache_file, cache, cache_cap) = load_cache_with_cap(&args)?;
+            let mut results = Vec::with_capacity(scenarios.len());
+            for sc in &scenarios {
+                results.push(
+                    cosched::schedule(sc, &cfg, &cs, &cache, workers)
+                        .map_err(|e| anyhow::anyhow!(e))?,
+                );
+            }
+            for r in &results {
+                println!(
+                    "{}: co-scheduled makespan {:.3e} cycles ({:.2}x vs naive even split)",
+                    r.scenario, r.cosched.makespan_cycles, r.speedup()
+                );
+            }
+            emit(vec![report::cosched_report(&cfg, &results)])?;
+            // Live contexts: the shared base plus every candidate region
+            // config these scenarios actually reached (covers non-default
+            // quanta and custom configs).
+            save_cache(
+                &cache_file,
+                &cache,
+                || {
+                    let mut live = zoo_contexts(&cfg);
+                    for r in &results {
+                        live.extend(r.contexts.iter().copied());
+                    }
+                    live
+                },
+                cache_cap,
+            )
         }
         "run-segment" => run_segment(&artifacts, seed),
         other => anyhow::bail!("unknown subcommand `{other}`\n{USAGE}"),
@@ -217,6 +326,24 @@ fn resolve_workloads(spec: &str) -> anyhow::Result<Vec<pipeorgan::ir::ModelGraph
     }
     anyhow::ensure!(!tasks.is_empty(), "flag `--workload` lists no workloads");
     Ok(tasks)
+}
+
+/// Resolve `--scenario`: `all`, one canned scenario, or a comma list.
+fn resolve_scenarios(spec: &str) -> anyhow::Result<Vec<cosched::Scenario>> {
+    if spec == "all" {
+        return Ok(cosched::canned_scenarios());
+    }
+    let mut scenarios = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        scenarios.push(cosched::scenario_by_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario `{name}` (known: {})",
+                cosched::scenario_names().join(", ")
+            )
+        })?);
+    }
+    anyhow::ensure!(!scenarios.is_empty(), "flag `--scenario` lists no scenarios");
+    Ok(scenarios)
 }
 
 /// E15: execute the AOT segment three ways through PJRT and check numerics.

@@ -1,0 +1,149 @@
+//! Co-scheduling report: per-task latency/energy and scenario makespan for
+//! solo-array vs naive even-split vs co-scheduled allocations (the
+//! `pipeorgan cosched` artifact; see DESIGN.md §Cosched).
+
+use crate::config::ArchConfig;
+use crate::cosched::{CoschedOutcome, CoschedResult};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+use super::Report;
+
+fn outcome_json(o: &CoschedOutcome) -> Json {
+    let mut tasks = Json::Arr(vec![]);
+    for a in &o.assignments {
+        let mut t = Json::obj();
+        t.set("task", a.task.clone())
+            .set("region_rows", a.region.rows)
+            .set("region_cols", a.region.cols)
+            .set("region_col0", a.region.col0)
+            .set("rate_hz", a.rate_hz)
+            .set("invocations", a.invocations)
+            .set("latency_cycles", a.latency_cycles)
+            .set("busy_cycles", a.busy_cycles)
+            .set("energy_per_inference", a.energy)
+            .set("frame_energy", a.frame_energy())
+            .set("dram_words_per_inference", a.dram_words)
+            .set("worst_channel_load", a.worst_channel_load)
+            .set("deadline_met", a.deadline_met);
+        tasks.push(t);
+    }
+    let mut out = Json::obj();
+    out.set("mode", o.mode)
+        .set("makespan_cycles", o.makespan_cycles)
+        .set("energy", o.energy)
+        .set("tasks", tasks);
+    out
+}
+
+/// One table row per (scenario, mode, task) plus a MAKESPAN rollup row per
+/// mode; JSON mirrors the full nested structure (including the ASCII
+/// occupancy rendering of the co-scheduled placement).
+pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
+    let mut table = Table::new(
+        "Cosched — concurrent XR tasks on one shared PE array",
+        &[
+            "scenario",
+            "mode",
+            "task",
+            "region",
+            "rate Hz",
+            "latency cycles",
+            "busy cycles",
+            "deadline",
+            "frame energy",
+            "worst chan load",
+        ],
+    );
+    let mut json = Json::obj();
+    let mut arr = Json::Arr(vec![]);
+    for r in results {
+        for o in [&r.solo, &r.even_split, &r.cosched] {
+            for a in &o.assignments {
+                table.row(&[
+                    r.scenario.clone(),
+                    o.mode.to_string(),
+                    a.task.clone(),
+                    format!("{}x{}@c{}", a.region.rows, a.region.cols, a.region.col0),
+                    fnum(a.rate_hz),
+                    fnum(a.latency_cycles),
+                    fnum(a.busy_cycles),
+                    if a.deadline_met { "met" } else { "MISS" }.to_string(),
+                    fnum(a.frame_energy()),
+                    fnum(a.worst_channel_load),
+                ]);
+            }
+            table.row(&[
+                r.scenario.clone(),
+                o.mode.to_string(),
+                "MAKESPAN".into(),
+                "".into(),
+                "".into(),
+                "".into(),
+                fnum(o.makespan_cycles),
+                "".into(),
+                fnum(o.energy),
+                "".into(),
+            ]);
+        }
+        let mut s = Json::obj();
+        s.set("scenario", r.scenario.clone())
+            .set("speedup_vs_even_split", r.speedup())
+            .set("evaluations", r.evaluations)
+            .set("cache_hits", r.cache_hits)
+            .set("placement", r.placement.render())
+            .set("solo", outcome_json(&r.solo))
+            .set("even_split", outcome_json(&r.even_split))
+            .set("cosched", outcome_json(&r.cosched));
+        arr.push(s);
+    }
+    json.set("config", cfg.to_json()).set("scenarios", arr);
+    Report {
+        name: "cosched",
+        table,
+        json,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cosched::{schedule, CoschedConfig, Scenario, TaskSpec};
+    use crate::dse::EvalCache;
+    use crate::workloads::synthetic;
+
+    fn results() -> Vec<CoschedResult> {
+        let cfg = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        let mut a = synthetic::aw_chain(2.0, 4);
+        a.name = "a".into();
+        let mut b = synthetic::pointwise_conv_segment(2);
+        b.name = "b".into();
+        let sc = Scenario::new("pair", vec![TaskSpec::new(a, 30.0), TaskSpec::new(b, 60.0)]);
+        vec![schedule(&sc, &cfg, &CoschedConfig::default(), &EvalCache::new(), 1).unwrap()]
+    }
+
+    #[test]
+    fn report_tabulates_all_modes_and_parses() {
+        let cfg = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        let r = cosched_report(&cfg, &results());
+        assert_eq!(r.name, "cosched");
+        let md = r.table.to_markdown();
+        for mode in ["solo", "even_split", "cosched"] {
+            assert!(md.contains(mode), "{md}");
+        }
+        assert!(md.contains("MAKESPAN"), "{md}");
+        let text = r.json.to_pretty();
+        crate::util::json::Json::parse(&text).unwrap();
+        assert!(text.contains("speedup_vs_even_split"), "{text}");
+        // 2 tasks × 3 modes + 3 makespan rows.
+        assert_eq!(r.table.rows.len(), 9);
+    }
+}

@@ -57,6 +57,7 @@ fn plan_point_json(p: &crate::dse::PlanPoint) -> Json {
     o.set("cycles", p.cycles)
         .set("energy", p.energy)
         .set("dram_words", p.dram_words)
+        .set("worst_channel_load", p.worst_channel_load)
         .set("topology", p.plan.topology.name())
         .set("mean_depth", p.plan.mean_depth())
         .set("source", p.source)
@@ -75,6 +76,7 @@ pub fn dse_frontier(cfg: &ArchConfig, dse: &DseConfig, results: &[DseResult]) ->
             "cycles",
             "energy",
             "DRAM words",
+            "worst chan load",
             "mean depth",
             "segments",
         ],
@@ -90,6 +92,7 @@ pub fn dse_frontier(cfg: &ArchConfig, dse: &DseConfig, results: &[DseResult]) ->
                 fnum(p.cycles),
                 fnum(p.energy),
                 p.dram_words.to_string(),
+                fnum(p.worst_channel_load),
                 fnum(p.plan.mean_depth()),
                 p.plan.segments.len().to_string(),
             ]);
@@ -113,6 +116,7 @@ pub fn dse_frontier(cfg: &ArchConfig, dse: &DseConfig, results: &[DseResult]) ->
         .set("depth_cap", dse.depth_cap)
         .set("ladder_rungs", dse.ladder_rungs)
         .set("beam_width", dse.beam_width)
+        .set("channel_load_objective", dse.channel_load_objective)
         .set("config", cfg.to_json())
         .set("workloads", arr);
     Report {
@@ -232,6 +236,7 @@ mod tests {
             topologies: vec![TopologyKind::Amp],
             budget: None,
             max_labels: 32,
+            channel_load_objective: false,
         };
         (cfg, dse)
     }

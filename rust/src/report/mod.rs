@@ -3,10 +3,12 @@
 //! under a reports directory, so external tooling can re-plot them.
 
 mod ablations;
+mod cosched;
 mod dse;
 mod figures;
 
 pub use ablations::{ablation_depth, ablation_organization, ablation_topology};
+pub use cosched::cosched_report;
 pub use dse::{dse_frontier, dse_gap, explore_all, run_dse_reports};
 pub use figures::{
     fig13_performance, fig13_with, fig14_dram, fig14_with, fig15_congestion, fig16_depth,

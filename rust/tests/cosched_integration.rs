@@ -1,0 +1,215 @@
+//! Integration tests for the co-scheduling subsystem: the never-lose
+//! guarantee against the naive even split on every canned XR scenario, the
+//! structural non-overlap of composed scenario placements, the shared
+//! persistent-cache warm path, the strict CLI flag policy of the `cosched`
+//! subcommand, and the report emitter.
+
+use pipeorgan::cli::Args;
+use pipeorgan::config::ArchConfig;
+use pipeorgan::cosched::{
+    canned_live_contexts, canned_scenarios, even_widths, region_config, scenario_by_name,
+    schedule, CoschedConfig, Region, RegionPartition, COSCHED_FLAGS,
+};
+use pipeorgan::dse::EvalCache;
+use pipeorgan::report::cosched_report;
+
+/// A smaller array than Table III keeps debug-build evaluation fast; every
+/// asserted property is architecture-independent.
+fn small_cfg() -> ArchConfig {
+    ArchConfig {
+        pe_rows: 16,
+        pe_cols: 16,
+        ..ArchConfig::default()
+    }
+}
+
+fn quick_cs() -> CoschedConfig {
+    CoschedConfig {
+        quantum: 4,
+        ..CoschedConfig::default()
+    }
+}
+
+/// The acceptance criterion: on every canned scenario, the co-scheduled
+/// allocation's makespan never exceeds the naive even split's (the
+/// even-split seed makes this a construction guarantee, not luck), and the
+/// whole scenario runs end to end.
+#[test]
+fn cosched_never_worse_than_even_split_on_every_canned_scenario() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    for sc in canned_scenarios() {
+        let r = schedule(&sc, &cfg, &quick_cs(), &cache, 2)
+            .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+        assert!(
+            r.cosched.makespan_cycles <= r.even_split.makespan_cycles * 1.0001,
+            "{}: cosched {} vs even split {}",
+            sc.name,
+            r.cosched.makespan_cycles,
+            r.even_split.makespan_cycles
+        );
+        assert!(r.speedup() >= 0.9999, "{}: speedup {}", sc.name, r.speedup());
+        // Every task is assigned in every mode, with positive work.
+        for o in [&r.solo, &r.even_split, &r.cosched] {
+            assert_eq!(o.assignments.len(), sc.tasks.len(), "{} {}", sc.name, o.mode);
+            assert!(o.makespan_cycles > 0.0, "{} {}", sc.name, o.mode);
+            for a in &o.assignments {
+                assert!(
+                    a.latency_cycles > 0.0 && a.energy > 0.0,
+                    "{} {} {}",
+                    sc.name,
+                    o.mode,
+                    a.task
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scenario_placement_is_non_overlapping_and_covers_every_task() {
+    let cfg = small_cfg();
+    let sc = scenario_by_name("xr-core").expect("canned scenario");
+    let r = schedule(&sc, &cfg, &quick_cs(), &EvalCache::new(), 2).unwrap();
+    let sp = &r.placement;
+    assert_eq!((sp.rows, sp.cols), (cfg.pe_rows, cfg.pe_cols));
+    // Each PE belongs to at most one task (compose() rejects overlap), and
+    // the per-task counts plus idle PEs tile the array exactly.
+    let owned: usize = (0..sc.tasks.len()).map(|t| sp.task_pes(t)).sum();
+    assert_eq!(owned + sp.idle_pes(), cfg.num_pes());
+    for t in 0..sc.tasks.len() {
+        assert!(sp.task_pes(t) > 0, "task {t} got no PEs");
+    }
+    // The regions of the co-scheduled outcome validate as a partition.
+    let widths: Vec<usize> = r.cosched.assignments.iter().map(|a| a.region.cols).collect();
+    RegionPartition::vertical(cfg.pe_rows, cfg.pe_cols, &widths)
+        .validate()
+        .unwrap();
+    // Rendering is one row per array row.
+    assert_eq!(sp.render().lines().count(), cfg.pe_rows);
+}
+
+#[test]
+fn shared_cache_warms_across_scenarios_and_reruns() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let cold = schedule(&sc, &cfg, &quick_cs(), &cache, 1).unwrap();
+    assert!(cold.evaluations > 0);
+    let warm = schedule(&sc, &cfg, &quick_cs(), &cache, 1).unwrap();
+    assert_eq!(warm.evaluations, 0, "rescheduling must be fully memoized");
+    assert!(warm.cache_hits > 0);
+    assert_eq!(
+        warm.cosched.makespan_cycles,
+        cold.cosched.makespan_cycles,
+        "memoized reschedule must agree"
+    );
+    // The reported live contexts cover everything this run touched, so the
+    // eviction path can never prune this scenario's own entries.
+    let touched = cache.touched_contexts();
+    let live: std::collections::HashSet<u64> = cold.contexts.iter().copied().collect();
+    assert!(
+        touched.is_subset(&live),
+        "live contexts must cover touched contexts"
+    );
+    assert_eq!(cache.retain_contexts(&live), 0);
+}
+
+/// One shared cache file must stay warm across subcommands: the
+/// statically-known canned live set (what every subcommand's save keeps)
+/// covers everything a default-quantum canned-scenario run touches, so a
+/// later `dse`/`e2e` save can never prune a default cosched run's entries.
+#[test]
+fn canned_live_contexts_cover_default_runs() {
+    let cfg = small_cfg();
+    let live = canned_live_contexts(&cfg);
+    assert!(!live.is_empty());
+    let sc = scenario_by_name("xr-core").unwrap();
+    let r = schedule(&sc, &cfg, &quick_cs(), &EvalCache::new(), 1).unwrap();
+    for ctx in &r.contexts {
+        assert!(live.contains(ctx), "context {ctx:x} missing from canned live set");
+    }
+}
+
+#[test]
+fn solo_uses_the_full_array_and_sums_busy_time() {
+    let cfg = small_cfg();
+    let sc = scenario_by_name("xr-hands").unwrap();
+    let r = schedule(&sc, &cfg, &quick_cs(), &EvalCache::new(), 2).unwrap();
+    let sum: f64 = r.solo.assignments.iter().map(|a| a.busy_cycles).sum();
+    assert!((r.solo.makespan_cycles - sum).abs() <= 1e-6 * sum);
+    for a in &r.solo.assignments {
+        assert_eq!(a.region.cols, cfg.pe_cols, "{}", a.task);
+        assert_eq!(a.region.rows, cfg.pe_rows, "{}", a.task);
+        assert_eq!(a.busy_cycles, a.latency_cycles * a.invocations as f64);
+    }
+}
+
+#[test]
+fn region_configs_scale_shared_resources() {
+    let cfg = small_cfg();
+    let region = Region {
+        row0: 0,
+        col0: 0,
+        rows: 16,
+        cols: 4,
+    };
+    let rc = region_config(&cfg, &region);
+    rc.validate().unwrap();
+    assert_eq!(rc.num_pes(), 64);
+    assert_eq!(rc.sram_bytes, cfg.sram_bytes / 4);
+    assert!((rc.dram_bytes_per_cycle - cfg.dram_bytes_per_cycle / 4.0).abs() < 1e-9);
+    assert_eq!(even_widths(16, 3).iter().sum::<usize>(), 16);
+}
+
+#[test]
+fn cosched_cli_flags_are_strict() {
+    let mut flags: Vec<(&str, bool)> = vec![("out", true), ("workers", true), ("config", true)];
+    flags.extend_from_slice(COSCHED_FLAGS);
+    let ok = |v: &[&str]| {
+        let raw: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+        Args::parse(&raw, &flags)
+    };
+    let args = ok(&[
+        "cosched",
+        "--scenario",
+        "xr-core",
+        "--quantum",
+        "2",
+        "--cache-file",
+        "reports/dse_cache.json",
+        "--cache-cap",
+        "1000",
+    ])
+    .unwrap();
+    let cs = CoschedConfig::from_cli(&args).unwrap();
+    assert_eq!(cs.quantum, 2);
+    assert!(!cs.tuned);
+    // Typos and dse-only flags stay hard errors on cosched.
+    assert!(ok(&["cosched", "--scenari", "xr-core"]).is_err());
+    assert!(ok(&["cosched", "--beam", "4"]).is_err());
+}
+
+#[test]
+fn cosched_report_emits_to_disk() {
+    let cfg = small_cfg();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let r = schedule(&sc, &cfg, &quick_cs(), &EvalCache::new(), 2).unwrap();
+    let report = cosched_report(&cfg, &[r]);
+    let dir = std::env::temp_dir().join(format!("pipeorgan_cosched_test_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    report.emit(&dir).unwrap();
+    assert!(dir.join("cosched.csv").exists());
+    let text = std::fs::read_to_string(dir.join("cosched.json")).unwrap();
+    let json = pipeorgan::util::json::Json::parse(&text).unwrap();
+    let scenarios = json.get("scenarios").and_then(|s| s.as_arr()).unwrap();
+    assert_eq!(scenarios.len(), 1);
+    let s0 = &scenarios[0];
+    assert_eq!(s0.get("scenario").and_then(|v| v.as_str()), Some("xr-core"));
+    let speedup = s0
+        .get("speedup_vs_even_split")
+        .and_then(|v| v.as_f64())
+        .unwrap();
+    assert!(speedup >= 0.9999, "speedup {speedup}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

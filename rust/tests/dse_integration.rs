@@ -39,6 +39,7 @@ fn quick_dse() -> DseConfig {
         topologies: vec![TopologyKind::Amp],
         budget: None,
         max_labels: 64,
+        channel_load_objective: false,
     }
 }
 
