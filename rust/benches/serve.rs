@@ -1,0 +1,75 @@
+//! §Perf microbenchmark for the online serving engine: event-loop
+//! throughput per policy on the canned `xr-core` scenario (requests and
+//! trace events simulated per wall-second), the dynamic-vs-static
+//! bandwidth model overhead, and the rate-sweep cost. Planning runs once
+//! up front through the shared evaluation cache, so the timed region is
+//! the discrete-event simulation itself — the serving hot path.
+
+mod common;
+
+use pipeorgan::config::ArchConfig;
+use pipeorgan::cosched::scenario_by_name;
+use pipeorgan::dse::EvalCache;
+use pipeorgan::serve::{
+    plan_scenario, simulate, streams, sweep_max_rate, ArrivalProcess, BandwidthModel, Policy,
+    SimOptions,
+};
+
+fn main() {
+    let cfg = ArchConfig::default();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").expect("canned scenario");
+    let plan = plan_scenario(&sc, &cfg, &cache, 4).expect("planning succeeds");
+    println!(
+        "planned xr-core: {} evaluations, {} cache hits",
+        plan.evaluations, plan.cache_hits
+    );
+
+    // One second of Poisson traffic at the native rates, shared by every
+    // timed policy so the comparisons are apples to apples.
+    let arrivals = streams(&sc, &ArrivalProcess::Poisson, 1.0, 1.0, 7);
+    let requests: usize = arrivals.iter().map(Vec::len).sum();
+
+    for policy in Policy::ALL {
+        let name = format!("serve_{}_dynamic", policy.name());
+        let s = common::bench(&name, 1, 5, || {
+            simulate(&sc, &plan, policy, &arrivals, SimOptions::default()).total_requests()
+        });
+        println!(
+            "{name}: {:.0} requests/s simulated ({requests} requests)",
+            requests as f64 / (s.mean_ns / 1e9)
+        );
+    }
+
+    // Static split: no per-epoch demand computation — the contention
+    // model's overhead is the gap to the dynamic runs above.
+    let static_opts = SimOptions {
+        bandwidth: BandwidthModel::Static,
+        ..SimOptions::default()
+    };
+    common::bench("serve_fifo_static", 1, 5, || {
+        simulate(&sc, &plan, Policy::Fifo, &arrivals, static_opts).total_requests()
+    });
+
+    // Borrowing scans every queue on idle regions; time the worst case.
+    let borrow_opts = SimOptions {
+        borrow: true,
+        ..SimOptions::default()
+    };
+    common::bench("serve_edf_borrow", 1, 5, || {
+        simulate(&sc, &plan, Policy::Edf, &arrivals, borrow_opts).total_requests()
+    });
+
+    // The sweep multiplies the simulation by its probe count; short
+    // windows keep it a planning-time (not serving-time) tool.
+    let sweep = common::bench("serve_sweep_edf", 0, 2, || {
+        sweep_max_rate(&sc, &plan, Policy::Edf, SimOptions::default(), 0.1).probes.len()
+    });
+    let result = sweep_max_rate(&sc, &plan, Policy::Edf, SimOptions::default(), 0.1);
+    println!(
+        "serve_sweep_edf: boundary {:.3}x in {} probes (mean {:.1} ms/sweep)",
+        result.max_mult,
+        result.probes.len(),
+        sweep.mean_ns / 1e6
+    );
+}

@@ -80,6 +80,21 @@ impl Args {
         self.get_parsed(name, default)
     }
 
+    /// Float-valued flags (durations, rate multipliers). Rust's float
+    /// parser happily accepts `nan` and `inf`, which no flag describing a
+    /// physical quantity wants, so non-finite values are rejected here
+    /// alongside garbage — callers still add their own range checks
+    /// (positivity, bounds).
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse::<f64>() {
+                Ok(x) if x.is_finite() => Ok(x),
+                _ => Err(format!("flag `--{name}` expects a finite number, got `{v}`")),
+            },
+        }
+    }
+
     pub fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
@@ -137,5 +152,31 @@ mod tests {
         let a = Args::parse(&s(&["e2e", "--workers", "4096"]), FLAGS).unwrap();
         assert_eq!(a.get_u64("workers", 7).unwrap(), 4096);
         assert_eq!(a.get_u64("out", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn f64_flag_parses_and_defaults() {
+        let a = Args::parse(&s(&["serve", "--workers", "2.5"]), FLAGS).unwrap();
+        assert_eq!(a.get_f64("workers", 1.0).unwrap(), 2.5);
+        // Plain integers parse as floats too; absent flags take the default.
+        let a = Args::parse(&s(&["serve", "--workers", "3"]), FLAGS).unwrap();
+        assert_eq!(a.get_f64("workers", 1.0).unwrap(), 3.0);
+        assert_eq!(a.get_f64("out", 0.25).unwrap(), 0.25);
+    }
+
+    #[test]
+    fn f64_flag_rejects_garbage_and_duplicates() {
+        let a = Args::parse(&s(&["serve", "--workers", "fast"]), FLAGS).unwrap();
+        let err = a.get_f64("workers", 1.0).unwrap_err();
+        assert!(err.contains("expects a finite number"), "{err}");
+        // `f64::from_str` accepts "nan"/"inf"; the flag parser must not.
+        for bad in ["nan", "NaN", "inf", "-inf", "infinity"] {
+            let a = Args::parse(&s(&["serve", "--workers", bad]), FLAGS).unwrap();
+            assert!(a.get_f64("workers", 1.0).is_err(), "{bad} must be rejected");
+        }
+        // Duplicate float flags are rejected at parse time like any other.
+        assert!(
+            Args::parse(&s(&["serve", "--workers", "1.0", "--workers", "2.0"]), FLAGS).is_err()
+        );
     }
 }

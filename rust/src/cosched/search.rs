@@ -55,6 +55,11 @@ pub struct TaskAssignment {
     pub invocations: u64,
     /// One inference's latency on the assigned region (cycles).
     pub latency_cycles: f64,
+    /// The same latency in milliseconds (`latency_cycles / clock`), kept so
+    /// reports can show deadline slack without re-threading the clock.
+    pub latency_ms: f64,
+    /// The task's per-inference deadline (from its `TaskSpec`).
+    pub deadline_ms: f64,
     /// One frame of work: `invocations × latency_cycles`.
     pub busy_cycles: f64,
     /// Energy of one inference; one frame costs `invocations ×` this
@@ -72,6 +77,12 @@ impl TaskAssignment {
     /// Energy of one frame of this task's work.
     pub fn frame_energy(&self) -> f64 {
         self.energy * self.invocations as f64
+    }
+
+    /// Deadline slack of one inference: `deadline_ms − latency_ms`.
+    /// Negative exactly when the deadline is missed.
+    pub fn slack_ms(&self) -> f64 {
+        self.deadline_ms - self.latency_ms
     }
 }
 
@@ -548,11 +559,14 @@ fn assignment(
         rate_hz: spec.rate_hz,
         invocations,
         latency_cycles: pc.cycles,
+        latency_ms: latency_s * 1e3,
+        deadline_ms: spec.deadline_ms,
         busy_cycles: pc.cycles * invocations as f64,
         energy: pc.energy,
         dram_words: pc.dram_words,
         worst_channel_load: pc.worst_load,
-        deadline_met: latency_s <= spec.deadline_ms / 1e3,
+        // Compared in ms so the verdict agrees bit-for-bit with `slack_ms`.
+        deadline_met: latency_s * 1e3 <= spec.deadline_ms,
     }
 }
 

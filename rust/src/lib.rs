@@ -23,6 +23,9 @@
 //! - multi-workload co-scheduling of concurrent XR task sets onto one
 //!   shared PE array via rectangular region partitioning and an
 //!   occupancy-state allocation search ([`cosched`]);
+//! - an online serving simulator replaying request streams against the
+//!   co-scheduled plan with deadline-aware dispatch and dynamic
+//!   cross-region DRAM-bandwidth contention ([`serve`]);
 //! - per-figure report emitters ([`report`]).
 //!
 //! See `rust/DESIGN.md` for the paper-to-module map, the no-network
@@ -46,6 +49,7 @@ pub mod noc;
 pub mod pipeline;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod spatial;
 pub mod traffic;

@@ -13,8 +13,9 @@
 //! pipeorgan validate-dataflow   # Sec. IV-A heuristic validation
 //! pipeorgan dse                 # E16: design-space exploration (frontier + gap)
 //! pipeorgan cosched             # E17: multi-workload co-scheduling (XR scenarios)
+//! pipeorgan serve               # E18: online serving simulation (deadline-aware)
 //! pipeorgan run-segment         # E15: functional pipelined execution (PJRT)
-//! pipeorgan all                 # everything above except dse/cosched/run-segment
+//! pipeorgan all                 # everything above except dse/cosched/serve/run-segment
 //! ```
 //!
 //! Common flags: `--out <dir>` (reports directory, default `reports`),
@@ -36,6 +37,14 @@
 //! `cosched`-only flags: `--scenario <name|all>` (canned XR scenarios,
 //! comma lists allowed), `--quantum <cols>` (region width quantum),
 //! `--tuned`, `--budget <n>`, `--cache-file <file>`, `--cache-cap <n>`.
+//!
+//! `serve`-only flags: `--scenario <name|all>`, `--policy
+//! <fifo|edf|rm|all>` (comma lists allowed), `--arrivals
+//! <periodic|jittered|poisson>`, `--duration-s <s>`, `--rate-mult <x>`,
+//! `--borrow` (cross-task region borrowing), `--bandwidth
+//! <dynamic|static>` (DRAM contention model), `--sweep` (binary-search the
+//! max sustainable rate multiplier), `--cache-file <file>`, `--cache-cap
+//! <n>`.
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -49,9 +58,10 @@ use pipeorgan::dse::{
     context_fingerprint, CacheLoadOutcome, DseConfig, EvalCache, CACHE_DEFAULT_CAP, DSE_FLAGS,
 };
 use pipeorgan::report;
+use pipeorgan::serve::{self, ServeConfig, SERVE_FLAGS};
 use pipeorgan::workloads;
 
-const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N] [cosched: --scenario NAME|all --quantum N --tuned --budget N --cache-file FILE --cache-cap N]";
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N] [cosched: --scenario NAME|all --quantum N --tuned --budget N --cache-file FILE --cache-cap N] [serve: --scenario NAME|all --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N]";
 
 const FLAGS: &[(&str, bool)] = &[
     ("out", true),
@@ -71,6 +81,9 @@ fn known_flags(subcommand: &str) -> Vec<(&'static str, bool)> {
     }
     if subcommand == "cosched" {
         flags.extend_from_slice(COSCHED_FLAGS);
+    }
+    if subcommand == "serve" {
+        flags.extend_from_slice(SERVE_FLAGS);
     }
     if subcommand == "e2e" {
         flags.push(("tuned", false));
@@ -299,6 +312,55 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
                     let mut live = zoo_contexts(&cfg);
                     for r in &results {
                         live.extend(r.contexts.iter().copied());
+                    }
+                    live
+                },
+                cache_cap,
+            )
+        }
+        "serve" => {
+            let sv = ServeConfig::from_cli(&args, seed).map_err(|e| anyhow::anyhow!(e))?;
+            let scenarios = resolve_scenarios(args.get_or("scenario", "all"))?;
+            let (cache_file, cache, cache_cap) = load_cache_with_cap(&args)?;
+            let mut runs = Vec::with_capacity(scenarios.len());
+            for sc in &scenarios {
+                runs.push(
+                    serve::run_scenario(sc, &cfg, &sv, &cache, workers)
+                        .map_err(|e| anyhow::anyhow!(e))?,
+                );
+            }
+            for r in &runs {
+                for o in &r.outcomes {
+                    println!(
+                        "{}: {} missed {}/{} requests ({:.2}% miss rate{})",
+                        r.scenario,
+                        o.policy.name(),
+                        o.total_missed(),
+                        o.total_requests(),
+                        100.0 * o.miss_rate(),
+                        if o.schedulable() { " — schedulable" } else { "" }
+                    );
+                }
+                for s in &r.sweeps {
+                    println!(
+                        "{}: {} sustains up to {:.3}x the native rates ({} probes)",
+                        r.scenario,
+                        s.policy.name(),
+                        s.max_mult,
+                        s.probes.len()
+                    );
+                }
+            }
+            emit(report::serve_reports(&cfg, &sv, &runs))?;
+            // Live contexts: the shared base plus every region config the
+            // underlying co-schedules reached (covers custom configs).
+            save_cache(
+                &cache_file,
+                &cache,
+                || {
+                    let mut live = zoo_contexts(&cfg);
+                    for r in &runs {
+                        live.extend(r.plan.cosched.contexts.iter().copied());
                     }
                     live
                 },

@@ -20,6 +20,9 @@ fn outcome_json(o: &CoschedOutcome) -> Json {
             .set("rate_hz", a.rate_hz)
             .set("invocations", a.invocations)
             .set("latency_cycles", a.latency_cycles)
+            .set("latency_ms", a.latency_ms)
+            .set("deadline_ms", a.deadline_ms)
+            .set("slack_ms", a.slack_ms())
             .set("busy_cycles", a.busy_cycles)
             .set("energy_per_inference", a.energy)
             .set("frame_energy", a.frame_energy())
@@ -51,6 +54,7 @@ pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
             "latency cycles",
             "busy cycles",
             "deadline",
+            "slack ms",
             "frame energy",
             "worst chan load",
         ],
@@ -60,6 +64,7 @@ pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
     for r in results {
         for o in [&r.solo, &r.even_split, &r.cosched] {
             for a in &o.assignments {
+                let slack = a.slack_ms();
                 table.row(&[
                     r.scenario.clone(),
                     o.mode.to_string(),
@@ -69,6 +74,9 @@ pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
                     fnum(a.latency_cycles),
                     fnum(a.busy_cycles),
                     if a.deadline_met { "met" } else { "MISS" }.to_string(),
+                    // Negative slack (a structural deadline miss) is
+                    // flagged so it stands out in a column of numbers.
+                    format!("{}{}", fnum(slack), if slack < 0.0 { " !" } else { "" }),
                     fnum(a.frame_energy()),
                     fnum(a.worst_channel_load),
                 ]);
@@ -81,6 +89,7 @@ pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
                 "".into(),
                 "".into(),
                 fnum(o.makespan_cycles),
+                "".into(),
                 "".into(),
                 fnum(o.energy),
                 "".into(),
@@ -140,10 +149,32 @@ mod tests {
             assert!(md.contains(mode), "{md}");
         }
         assert!(md.contains("MAKESPAN"), "{md}");
+        assert!(md.contains("slack ms"), "{md}");
         let text = r.json.to_pretty();
         crate::util::json::Json::parse(&text).unwrap();
         assert!(text.contains("speedup_vs_even_split"), "{text}");
+        assert!(text.contains("slack_ms"), "{text}");
         // 2 tasks × 3 modes + 3 makespan rows.
         assert_eq!(r.table.rows.len(), 9);
+    }
+
+    #[test]
+    fn slack_sign_agrees_with_the_deadline_verdict() {
+        for r in results() {
+            for o in [&r.solo, &r.even_split, &r.cosched] {
+                for a in &o.assignments {
+                    assert!((a.latency_ms - a.latency_cycles / 1e9 * 1e3).abs() < 1e-9);
+                    assert_eq!(
+                        a.slack_ms() >= 0.0,
+                        a.deadline_met,
+                        "{} {}: slack {} vs verdict {}",
+                        o.mode,
+                        a.task,
+                        a.slack_ms(),
+                        a.deadline_met
+                    );
+                }
+            }
+        }
     }
 }

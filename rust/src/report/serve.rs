@@ -1,0 +1,262 @@
+//! Serving report: per-policy tail latencies, deadline-miss accounting and
+//! schedulability verdicts per scenario, plus the rate-sweep boundary
+//! table (the `pipeorgan serve` artifacts; see DESIGN.md §Serve).
+
+use crate::config::ArchConfig;
+use crate::serve::{ServeConfig, ServeOutcome, ServeRun, SweepResult};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+use super::Report;
+
+fn outcome_json(o: &ServeOutcome) -> Json {
+    let mut tasks = Json::Arr(vec![]);
+    for m in &o.tasks {
+        let mut t = Json::obj();
+        t.set("task", m.task.clone())
+            .set("rate_hz", m.rate_hz)
+            .set("deadline_ms", m.deadline_ms)
+            .set("requests", m.requests)
+            .set("completed", m.completed)
+            .set("dropped", m.dropped)
+            .set("missed", m.missed)
+            .set("miss_rate", m.miss_rate())
+            .set("p50_ms", m.p50_ms)
+            .set("p95_ms", m.p95_ms)
+            .set("p99_ms", m.p99_ms)
+            .set("mean_wait_ms", m.mean_wait_ms)
+            .set("max_queue_depth", m.max_queue_depth)
+            .set("utilization", m.utilization);
+        tasks.push(t);
+    }
+    let mut out = Json::obj();
+    out.set("policy", o.policy.name())
+        .set("bandwidth", o.bandwidth.name())
+        .set("schedulable", o.schedulable())
+        .set("span_s", o.span_s)
+        .set("miss_rate", o.miss_rate())
+        .set("tasks", tasks);
+    out
+}
+
+fn sweep_json(s: &SweepResult) -> Json {
+    let mut probes = Json::Arr(vec![]);
+    for &(m, ok) in &s.probes {
+        let mut p = Json::Arr(vec![]);
+        p.push(m).push(ok);
+        probes.push(p);
+    }
+    let mut out = Json::obj();
+    out.set("policy", s.policy.name())
+        .set("max_mult", s.max_mult)
+        .set("probes", probes);
+    out
+}
+
+/// One row per (scenario, policy, task) plus a VERDICT rollup row per
+/// policy; when sweeps ran, a second report tabulates the schedulability
+/// boundary per (scenario, policy). JSON mirrors everything, probes
+/// included.
+pub fn serve_reports(cfg: &ArchConfig, sv: &ServeConfig, runs: &[ServeRun]) -> Vec<Report> {
+    let mut table = Table::new(
+        "Serve — online deadline-aware serving on the co-scheduled array",
+        &[
+            "scenario",
+            "policy",
+            "task",
+            "rate Hz",
+            "requests",
+            "served",
+            "dropped",
+            "missed",
+            "miss %",
+            "p50 ms",
+            "p95 ms",
+            "p99 ms",
+            "max queue",
+            "util %",
+        ],
+    );
+    let mut arr = Json::Arr(vec![]);
+    for r in runs {
+        for o in &r.outcomes {
+            for m in &o.tasks {
+                table.row(&[
+                    r.scenario.clone(),
+                    o.policy.name().to_string(),
+                    m.task.clone(),
+                    fnum(m.rate_hz * sv.rate_mult),
+                    m.requests.to_string(),
+                    m.completed.to_string(),
+                    m.dropped.to_string(),
+                    m.missed.to_string(),
+                    fnum(100.0 * m.miss_rate()),
+                    fnum(m.p50_ms),
+                    fnum(m.p95_ms),
+                    fnum(m.p99_ms),
+                    m.max_queue_depth.to_string(),
+                    fnum(100.0 * m.utilization),
+                ]);
+            }
+            table.row(&[
+                r.scenario.clone(),
+                o.policy.name().to_string(),
+                "VERDICT".into(),
+                "".into(),
+                o.total_requests().to_string(),
+                "".into(),
+                "".into(),
+                o.total_missed().to_string(),
+                fnum(100.0 * o.miss_rate()),
+                "".into(),
+                "".into(),
+                "".into(),
+                "".into(),
+                if o.schedulable() {
+                    "SCHEDULABLE".into()
+                } else {
+                    "UNSCHEDULABLE".into()
+                },
+            ]);
+        }
+        let mut s = Json::obj();
+        let mut sweeps = Json::Arr(vec![]);
+        for sw in &r.sweeps {
+            sweeps.push(sweep_json(sw));
+        }
+        let mut outcomes = Json::Arr(vec![]);
+        for o in &r.outcomes {
+            outcomes.push(outcome_json(o));
+        }
+        s.set("scenario", r.scenario.clone())
+            .set("evaluations", r.plan.evaluations)
+            .set("cache_hits", r.plan.cache_hits)
+            .set("policies", outcomes)
+            .set("sweeps", sweeps);
+        arr.push(s);
+    }
+    let mut json = Json::obj();
+    json.set("config", cfg.to_json())
+        .set("arrivals", sv.arrivals.name())
+        .set("duration_s", sv.duration_s)
+        .set("rate_mult", sv.rate_mult)
+        .set("seed", sv.seed)
+        .set("borrow", sv.borrow)
+        .set("bandwidth", sv.bandwidth.name())
+        .set("scenarios", arr);
+    let mut reports = vec![Report {
+        name: "serve",
+        table,
+        json,
+    }];
+
+    if runs.iter().any(|r| !r.sweeps.is_empty()) {
+        let mut sweep_table = Table::new(
+            "Serve — max sustainable uniform rate multiplier (sweep)",
+            &["scenario", "policy", "max rate mult", "probes", "schedulable @1x"],
+        );
+        let mut sweep_arr = Json::Arr(vec![]);
+        for r in runs {
+            for sw in &r.sweeps {
+                let at_native = sw
+                    .probes
+                    .iter()
+                    .find(|(m, _)| *m == 1.0)
+                    .map(|&(_, ok)| ok)
+                    .unwrap_or(false);
+                sweep_table.row(&[
+                    r.scenario.clone(),
+                    sw.policy.name().to_string(),
+                    fnum(sw.max_mult),
+                    sw.probes.len().to_string(),
+                    if at_native { "yes" } else { "no" }.to_string(),
+                ]);
+                let mut s = sweep_json(sw);
+                s.set("scenario", r.scenario.clone());
+                sweep_arr.push(s);
+            }
+        }
+        let mut sweep_doc = Json::obj();
+        sweep_doc
+            .set("config", cfg.to_json())
+            .set("duration_s", sv.duration_s)
+            .set("sweeps", sweep_arr);
+        reports.push(Report {
+            name: "serve_sweep",
+            table: sweep_table,
+            json: sweep_doc,
+        });
+    }
+    reports
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cosched::{Scenario, TaskSpec};
+    use crate::dse::EvalCache;
+    use crate::serve::{run_scenario, Policy};
+    use crate::workloads::synthetic;
+
+    fn runs(sweep: bool) -> (ArchConfig, ServeConfig, Vec<ServeRun>) {
+        let cfg = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        let mut a = synthetic::aw_chain(2.0, 4);
+        a.name = "a".into();
+        let mut b = synthetic::pointwise_conv_segment(2);
+        b.name = "b".into();
+        let sc = Scenario::new("pair", vec![TaskSpec::new(a, 30.0), TaskSpec::new(b, 60.0)]);
+        let sv = ServeConfig {
+            policies: vec![Policy::Fifo, Policy::Edf],
+            duration_s: 0.05,
+            sweep,
+            ..ServeConfig::default()
+        };
+        let run = run_scenario(&sc, &cfg, &sv, &EvalCache::new(), 1).unwrap();
+        (cfg, sv, vec![run])
+    }
+
+    #[test]
+    fn report_tabulates_policies_and_parses() {
+        let (cfg, sv, runs) = runs(false);
+        let reports = serve_reports(&cfg, &sv, &runs);
+        assert_eq!(reports.len(), 1, "no sweep requested, no sweep report");
+        let r = &reports[0];
+        assert_eq!(r.name, "serve");
+        let md = r.table.to_markdown();
+        for needle in ["fifo", "edf", "VERDICT", "SCHEDULABLE"] {
+            assert!(md.contains(needle), "missing {needle} in:\n{md}");
+        }
+        // 2 tasks × 2 policies + 2 verdict rows.
+        assert_eq!(r.table.rows.len(), 6);
+        let text = r.json.to_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let scenarios = parsed.get("scenarios").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(scenarios.len(), 1);
+        let policies = scenarios[0].get("policies").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(policies.len(), 2);
+    }
+
+    #[test]
+    fn sweep_report_emitted_when_swept() {
+        let (cfg, sv, runs) = runs(true);
+        let reports = serve_reports(&cfg, &sv, &runs);
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[1].name, "serve_sweep");
+        let md = reports[1].table.to_markdown();
+        assert!(md.contains("max rate mult"), "{md}");
+        // Two policies swept on one scenario.
+        assert_eq!(reports[1].table.rows.len(), 2);
+        let text = reports[1].json.to_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let sweeps = parsed.get("sweeps").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(sweeps.len(), 2);
+        for sw in sweeps {
+            let probes = sw.get("probes").and_then(|p| p.as_arr()).unwrap();
+            assert!(!probes.is_empty());
+        }
+    }
+}

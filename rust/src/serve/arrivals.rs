@@ -1,0 +1,205 @@
+//! Per-task arrival processes: when requests show up.
+//!
+//! Every process is generated *up front* into a sorted `Vec<f64>` of
+//! arrival instants over the simulated window. Pre-materializing (rather
+//! than drawing lazily inside the event loop) keeps the whole stream a
+//! pure function of `(process, rate, duration, seed)`, so different
+//! dispatch policies replay byte-identical traffic and two runs with the
+//! same seed are bit-identical — the determinism the integration tests
+//! assert.
+//!
+//! Randomness goes through the seedable [`SplitMix64`] like everything
+//! else in the crate (DESIGN.md §2).
+
+use crate::cosched::Scenario;
+use crate::util::rng::SplitMix64;
+
+/// Jitter amplitude of [`ArrivalProcess::Jittered`] as a fraction of the
+/// period, when selected by name on the CLI (`--arrivals jittered`).
+pub const DEFAULT_JITTER_FRAC: f64 = 0.1;
+
+/// How one task's requests arrive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Strict-periodic: one request every `1/rate_hz` seconds, phase 0 —
+    /// the frame clock of a camera or display pipeline.
+    Periodic,
+    /// Periodic with per-request uniform jitter of `± frac/2` periods —
+    /// a frame clock with transport wobble.
+    Jittered(f64),
+    /// Poisson: i.i.d. exponential gaps at `rate_hz` — open-loop traffic
+    /// such as voice activity or network-fed requests.
+    Poisson,
+    /// Replay of an externally captured timestamp trace (seconds).
+    Trace(Vec<f64>),
+}
+
+impl ArrivalProcess {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Periodic => "periodic",
+            ArrivalProcess::Jittered(_) => "jittered",
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Trace(_) => "trace",
+        }
+    }
+
+    /// CLI names. `Trace` is API-only (a trace has no flag syntax).
+    pub fn from_name(s: &str) -> Option<ArrivalProcess> {
+        match s {
+            "periodic" => Some(ArrivalProcess::Periodic),
+            "jittered" => Some(ArrivalProcess::Jittered(DEFAULT_JITTER_FRAC)),
+            "poisson" => Some(ArrivalProcess::Poisson),
+            _ => None,
+        }
+    }
+}
+
+/// Arrival instants in `[0, duration_s)`, sorted ascending. The RNG is
+/// consumed only by the stochastic processes, so periodic streams are
+/// seed-independent by construction.
+pub fn arrival_times(
+    process: &ArrivalProcess,
+    rate_hz: f64,
+    duration_s: f64,
+    rng: &mut SplitMix64,
+) -> Vec<f64> {
+    assert!(rate_hz > 0.0, "arrival rate must be positive");
+    assert!(duration_s > 0.0, "arrival window must be positive");
+    let period = 1.0 / rate_hz;
+    let mut out: Vec<f64> = match process {
+        ArrivalProcess::Periodic => (0..)
+            .map(|k| k as f64 * period)
+            .take_while(|&t| t < duration_s)
+            .collect(),
+        ArrivalProcess::Jittered(frac) => (0..)
+            .map(|k| k as f64 * period)
+            .take_while(|&t| t < duration_s)
+            .map(|t| (t + frac * period * (rng.gen_f64() - 0.5)).max(0.0))
+            .collect(),
+        ArrivalProcess::Poisson => {
+            let mut out = Vec::new();
+            let mut t = 0.0f64;
+            loop {
+                // Exponential gap; `1 - u` is in (0, 1], so ln is finite.
+                t += -(1.0 - rng.gen_f64()).ln() * period;
+                if t >= duration_s {
+                    break;
+                }
+                out.push(t);
+            }
+            out
+        }
+        ArrivalProcess::Trace(ts) => ts
+            .iter()
+            .copied()
+            .filter(|&t| (0.0..duration_s).contains(&t))
+            .collect(),
+    };
+    // Jitter can reorder neighbours and traces may arrive unsorted; the
+    // event loop requires ascending instants.
+    out.sort_by(|a, b| a.total_cmp(b));
+    out.retain(|&t| t < duration_s);
+    out
+}
+
+/// One arrival stream per task of `scenario`, each task's RNG derived
+/// from the master `seed` in task order. This is the *single* source of
+/// truth for the seed → streams mapping: the engine, the rate sweep, the
+/// benches and the determinism tests all generate traffic through it, so
+/// "same seed, same streams" can never drift between them.
+pub fn streams(
+    scenario: &Scenario,
+    process: &ArrivalProcess,
+    rate_mult: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Vec<Vec<f64>> {
+    let mut master = SplitMix64::new(seed);
+    scenario
+        .tasks
+        .iter()
+        .map(|t| {
+            let mut rng = SplitMix64::new(master.next_u64());
+            arrival_times(process, t.rate_hz * rate_mult, duration_s, &mut rng)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_counts_and_phase() {
+        let mut rng = SplitMix64::new(1);
+        let ts = arrival_times(&ArrivalProcess::Periodic, 10.0, 1.0, &mut rng);
+        assert_eq!(ts.len(), 10);
+        assert_eq!(ts[0], 0.0);
+        assert!((ts[9] - 0.9).abs() < 1e-12);
+        // Seed-independent: no randomness consumed.
+        let mut other = SplitMix64::new(999);
+        assert_eq!(ts, arrival_times(&ArrivalProcess::Periodic, 10.0, 1.0, &mut other));
+    }
+
+    #[test]
+    fn jittered_stays_sorted_and_in_window() {
+        let mut rng = SplitMix64::new(7);
+        let ts = arrival_times(&ArrivalProcess::Jittered(0.5), 100.0, 1.0, &mut rng);
+        assert!(!ts.is_empty());
+        assert!(ts.windows(2).all(|p| p[0] <= p[1]), "unsorted: {ts:?}");
+        assert!(ts.iter().all(|&t| (0.0..1.0).contains(&t)));
+    }
+
+    #[test]
+    fn poisson_is_deterministic_per_seed_and_differs_across_seeds() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        let ta = arrival_times(&ArrivalProcess::Poisson, 100.0, 1.0, &mut a);
+        let tb = arrival_times(&ArrivalProcess::Poisson, 100.0, 1.0, &mut b);
+        assert_eq!(ta, tb, "same seed must replay identically");
+        let mut c = SplitMix64::new(43);
+        let tc = arrival_times(&ArrivalProcess::Poisson, 100.0, 1.0, &mut c);
+        assert_ne!(ta, tc, "different seeds must differ");
+        // Roughly the right rate (100 expected over 1 s).
+        assert!(ta.len() > 50 && ta.len() < 200, "n={}", ta.len());
+        assert!(ta.windows(2).all(|p| p[0] <= p[1]));
+    }
+
+    #[test]
+    fn trace_replay_filters_and_sorts() {
+        let mut rng = SplitMix64::new(0);
+        let trace = ArrivalProcess::Trace(vec![0.5, 0.1, 2.0, -0.3, 0.1]);
+        let ts = arrival_times(&trace, 1.0, 1.0, &mut rng);
+        assert_eq!(ts, vec![0.1, 0.1, 0.5]);
+    }
+
+    #[test]
+    fn streams_are_seed_deterministic_and_per_task_independent() {
+        use crate::cosched::TaskSpec;
+        use crate::workloads::synthetic;
+        let mut a = synthetic::aw_chain(2.0, 3);
+        a.name = "a".into();
+        let mut b = synthetic::pointwise_conv_segment(2);
+        b.name = "b".into();
+        let sc = Scenario::new("pair", vec![TaskSpec::new(a, 50.0), TaskSpec::new(b, 80.0)]);
+        let x = streams(&sc, &ArrivalProcess::Poisson, 1.0, 0.5, 7);
+        assert_eq!(x.len(), 2);
+        assert_eq!(x, streams(&sc, &ArrivalProcess::Poisson, 1.0, 0.5, 7));
+        assert_ne!(x, streams(&sc, &ArrivalProcess::Poisson, 1.0, 0.5, 8));
+        // The rate multiplier scales every task's stream.
+        let dense = streams(&sc, &ArrivalProcess::Periodic, 4.0, 0.5, 7);
+        let sparse = streams(&sc, &ArrivalProcess::Periodic, 1.0, 0.5, 7);
+        assert!(dense[0].len() > sparse[0].len());
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for name in ["periodic", "jittered", "poisson"] {
+            let p = ArrivalProcess::from_name(name).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        assert!(ArrivalProcess::from_name("bursty").is_none());
+        assert_eq!(ArrivalProcess::Trace(vec![]).name(), "trace");
+    }
+}

@@ -1,0 +1,304 @@
+//! Dispatch policies: which queued request a freed region serves next.
+//!
+//! Each task owns one region of the co-scheduled partition and keeps its
+//! own FIFO arrival queue. Within a single task's queue every policy
+//! agrees on the order (deadlines are `arrival + constant`, so EDF order
+//! *is* arrival order); policies differ in two places:
+//!
+//! - **deadline awareness**: [`Policy::Edf`] and [`Policy::Rm`] never
+//!   spend a region on a request that cannot meet its deadline even at
+//!   the best-case service time (full-array DRAM bandwidth donated) — such
+//!   requests are dropped at dispatch time and counted as misses, instead
+//!   of being served late *and* delaying everything behind them.
+//!   [`Policy::Fifo`] is the deadline-blind baseline: it serves strictly
+//!   in arrival order, doomed requests included.
+//! - **cross-task borrowing** (opt-in): when a region is idle and its own
+//!   queue is empty it may serve another task's queued request. Which
+//!   queue it steals from is the policy's choice: FIFO takes the oldest
+//!   request, EDF the most urgent, RM the highest-rate (shortest-period)
+//!   task's — the classic rate-monotonic priority order.
+//!
+//! Dropping only ever removes requests that would miss under *any*
+//! policy: without borrowing, a request's home region is the only server
+//! it will ever see, so "best case on the home region already misses" is
+//! final; with borrowing, a request is dropped only when the best case on
+//! *every* region misses (`doomed`), and a foreign front that this region
+//! cannot save — but its own (or a wider) region still could — is merely
+//! *skipped*, left queued for a better server. This is what makes the
+//! deadline-aware policies no worse than FIFO on miss rate in the regimes
+//! the integration tests pin down.
+
+use std::collections::VecDeque;
+
+/// Dispatch order of a freed region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// First-in-first-out by arrival instant; deadline-blind.
+    Fifo,
+    /// Earliest (absolute) deadline first; drops hopeless requests.
+    Edf,
+    /// Rate-monotonic: highest-rate task first; drops hopeless requests.
+    Rm,
+}
+
+impl Policy {
+    /// All policies, in reporting order.
+    pub const ALL: [Policy; 3] = [Policy::Fifo, Policy::Edf, Policy::Rm];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::Edf => "edf",
+            Policy::Rm => "rm",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Policy> {
+        match s {
+            "fifo" => Some(Policy::Fifo),
+            "edf" => Some(Policy::Edf),
+            "rm" => Some(Policy::Rm),
+            _ => None,
+        }
+    }
+
+    /// Deadline-aware policies drop requests that cannot meet their
+    /// deadline even in the best case instead of serving them late.
+    pub fn deadline_aware(self) -> bool {
+        !matches!(self, Policy::Fifo)
+    }
+}
+
+/// One queued inference request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    /// Task (and home region) index within the scenario.
+    pub task: usize,
+    /// Per-task arrival sequence number.
+    pub id: u64,
+    /// Arrival instant (seconds).
+    pub arrival_s: f64,
+    /// Absolute deadline (seconds): `arrival + deadline_ms / 1e3`.
+    pub deadline_s: f64,
+}
+
+/// Pop droppable requests off the front of `q`. Within one task's queue
+/// deadlines ascend with arrival order and best-case service times are
+/// per-(task, region) constants, so both drop rules are monotone in queue
+/// position: once the front survives, everything behind it does too — the
+/// front-only purge is complete.
+fn purge_hopeless(
+    q: &mut VecDeque<Request>,
+    rule: &dyn Fn(&Request) -> bool,
+    dropped: &mut Vec<Request>,
+) {
+    while let Some(front) = q.front() {
+        if rule(front) {
+            dropped.push(q.pop_front().expect("front exists"));
+        } else {
+            break;
+        }
+    }
+}
+
+/// Choose the next request for the region owned by task `home`.
+///
+/// Returns the requests dropped as unsalvageable (deadline-aware policies
+/// only) and the chosen request, already popped from its queue.
+/// `hopeless_here` answers for the *serving* region ("can this request
+/// still meet its deadline if service starts here, now, at best-case
+/// speed?"); `doomed` answers for *every* region ("does even the fastest
+/// region's best case miss?"). Without borrowing the home region is a
+/// request's only possible server, so `hopeless_here` is already final
+/// and drives the drops; with borrowing only `doomed` requests are
+/// dropped, and a foreign front that is merely hopeless *here* is
+/// skipped — left queued for its own or a faster region.
+pub fn select_next(
+    policy: Policy,
+    queues: &mut [VecDeque<Request>],
+    home: usize,
+    borrow: bool,
+    rates_hz: &[f64],
+    hopeless_here: &dyn Fn(&Request) -> bool,
+    doomed: &dyn Fn(&Request) -> bool,
+) -> (Vec<Request>, Option<Request>) {
+    let mut dropped = Vec::new();
+    let drop_rule = if borrow { doomed } else { hopeless_here };
+    if policy.deadline_aware() {
+        purge_hopeless(&mut queues[home], drop_rule, &mut dropped);
+    }
+    let candidates: Vec<usize> = if !queues[home].is_empty() {
+        vec![home]
+    } else if borrow {
+        if policy.deadline_aware() {
+            for q in queues.iter_mut() {
+                purge_hopeless(q, drop_rule, &mut dropped);
+            }
+        }
+        (0..queues.len())
+            .filter(|&t| match queues[t].front() {
+                // Aware borrowers skip foreign fronts they cannot save:
+                // serving one late here would waste the region *and* the
+                // request, while a better region may still meet it.
+                Some(front) => !(policy.deadline_aware() && hopeless_here(front)),
+                None => false,
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    if candidates.is_empty() {
+        return (dropped, None);
+    }
+    // Per-candidate sort key: primary then secondary objective, with the
+    // task index as the final deterministic tie-break.
+    let key = |t: usize| -> (f64, f64) {
+        let front = queues[t].front().expect("candidates are non-empty");
+        match policy {
+            Policy::Fifo => (front.arrival_s, front.deadline_s),
+            Policy::Edf => (front.deadline_s, front.arrival_s),
+            Policy::Rm => (1.0 / rates_hz[t].max(1e-12), front.arrival_s),
+        }
+    };
+    let chosen = candidates
+        .iter()
+        .copied()
+        .min_by(|&a, &b| {
+            let (a0, a1) = key(a);
+            let (b0, b1) = key(b);
+            a0.total_cmp(&b0).then(a1.total_cmp(&b1)).then(a.cmp(&b))
+        })
+        .expect("candidates are non-empty");
+    let req = queues[chosen].pop_front();
+    (dropped, req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(task: usize, id: u64, arrival_s: f64, deadline_s: f64) -> Request {
+        Request {
+            task,
+            id,
+            arrival_s,
+            deadline_s,
+        }
+    }
+
+    fn queues(reqs: &[&[Request]]) -> Vec<VecDeque<Request>> {
+        reqs.iter().map(|q| q.iter().copied().collect()).collect()
+    }
+
+    const NEVER: fn(&Request) -> bool = |_| false;
+
+    #[test]
+    fn names_roundtrip_and_awareness() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::from_name(p.name()), Some(p));
+        }
+        assert!(Policy::from_name("lifo").is_none());
+        assert!(!Policy::Fifo.deadline_aware());
+        assert!(Policy::Edf.deadline_aware() && Policy::Rm.deadline_aware());
+    }
+
+    #[test]
+    fn own_queue_wins_even_when_borrowing() {
+        let mut qs = queues(&[
+            &[req(0, 0, 5.0, 6.0)],
+            &[req(1, 0, 0.0, 0.5)], // older and more urgent, but foreign
+        ]);
+        let rates = [10.0, 100.0];
+        for p in Policy::ALL {
+            let (dropped, got) = select_next(p, &mut qs.clone(), 0, true, &rates, &NEVER, &NEVER);
+            assert!(dropped.is_empty());
+            assert_eq!(got.unwrap().task, 0, "{p:?} must serve its home queue first");
+        }
+        // Without borrowing an empty home queue serves nothing.
+        qs[0].clear();
+        let (_, got) = select_next(Policy::Fifo, &mut qs, 0, false, &rates, &NEVER, &NEVER);
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn borrow_order_is_policy_specific() {
+        // Task 1: older arrival, later deadline, low rate.
+        // Task 2: newer arrival, earlier deadline, high rate.
+        let build = || {
+            queues(&[
+                &[],
+                &[req(1, 0, 0.0, 10.0)],
+                &[req(2, 0, 1.0, 2.0)],
+            ])
+        };
+        let rates = [10.0, 5.0, 50.0];
+        let (_, fifo) = select_next(Policy::Fifo, &mut build(), 0, true, &rates, &NEVER, &NEVER);
+        assert_eq!(fifo.unwrap().task, 1, "FIFO borrows the oldest");
+        let (_, edf) = select_next(Policy::Edf, &mut build(), 0, true, &rates, &NEVER, &NEVER);
+        assert_eq!(edf.unwrap().task, 2, "EDF borrows the most urgent");
+        let (_, rm) = select_next(Policy::Rm, &mut build(), 0, true, &rates, &NEVER, &NEVER);
+        assert_eq!(rm.unwrap().task, 2, "RM borrows the highest-rate task");
+    }
+
+    #[test]
+    fn aware_policies_drop_hopeless_fifo_serves_them() {
+        let hopeless = |r: &Request| r.deadline_s < 1.0;
+        let build = || {
+            queues(&[&[
+                req(0, 0, 0.0, 0.5), // doomed
+                req(0, 1, 0.1, 0.6), // doomed
+                req(0, 2, 0.2, 5.0), // viable
+            ]])
+        };
+        let rates = [10.0];
+        // Without borrowing the home region is the only server, so the
+        // here-hopeless rule drives the drops.
+        let (dropped, got) =
+            select_next(Policy::Edf, &mut build(), 0, false, &rates, &hopeless, &NEVER);
+        assert_eq!(dropped.len(), 2);
+        assert_eq!(got.unwrap().id, 2, "EDF skips straight to the viable request");
+        let (dropped, got) =
+            select_next(Policy::Fifo, &mut build(), 0, false, &rates, &hopeless, &NEVER);
+        assert!(dropped.is_empty(), "FIFO is deadline-blind");
+        assert_eq!(got.unwrap().id, 0);
+    }
+
+    #[test]
+    fn borrowers_skip_but_never_drop_requests_other_regions_could_save() {
+        // This (narrow) region cannot meet task 1's front, but some other
+        // region still can: the front must stay queued, not be dropped,
+        // and the borrower must fall through to a front it can serve.
+        let hopeless_here = |r: &Request| r.task == 1;
+        let build = || queues(&[&[], &[req(1, 0, 0.0, 0.2)], &[req(2, 0, 1.0, 9.0)]]);
+        let rates = [10.0, 10.0, 10.0];
+        let mut qs = build();
+        let (dropped, got) =
+            select_next(Policy::Edf, &mut qs, 0, true, &rates, &hopeless_here, &NEVER);
+        assert!(dropped.is_empty(), "viable-elsewhere requests are never dropped");
+        assert_eq!(got.unwrap().task, 2, "the borrower serves what it can save");
+        assert_eq!(qs[1].len(), 1, "task 1's front stays queued for a better region");
+        // Globally doomed requests are dropped even from foreign queues.
+        let doomed = |r: &Request| r.task == 1;
+        let mut qs = build();
+        let (dropped, got) =
+            select_next(Policy::Edf, &mut qs, 0, true, &rates, &hopeless_here, &doomed);
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].task, 1);
+        assert_eq!(got.unwrap().task, 2);
+        // FIFO remains blind either way: it serves the hopeless front.
+        let mut qs = build();
+        let (dropped, got) =
+            select_next(Policy::Fifo, &mut qs, 0, true, &rates, &hopeless_here, &doomed);
+        assert!(dropped.is_empty());
+        assert_eq!(got.unwrap().task, 1);
+    }
+
+    #[test]
+    fn tie_breaks_are_deterministic_by_task_index() {
+        let twin = |t| req(t, 0, 1.0, 2.0);
+        let mut qs = queues(&[&[], &[twin(1)], &[twin(2)]]);
+        let rates = [1.0, 10.0, 10.0];
+        let (_, got) = select_next(Policy::Edf, &mut qs, 0, true, &rates, &NEVER, &NEVER);
+        assert_eq!(got.unwrap().task, 1, "identical keys fall back to task order");
+    }
+}

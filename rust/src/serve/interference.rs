@@ -1,0 +1,191 @@
+//! Dynamic cross-region DRAM-bandwidth contention.
+//!
+//! The planning stack (`cosched::region_config`) splits off-chip bandwidth
+//! *statically* by PE share: a region of `w` of the array's columns is
+//! costed at `w/W` of the DRAM bytes/cycle, always. That is the right
+//! conservative assumption at plan time — every co-resident task may be
+//! active at once — but it wastes headroom online: whenever a region is
+//! idle, or busy on a compute-bound phase that cannot use its share, the
+//! unclaimed bandwidth just evaporates.
+//!
+//! [`allocate_bandwidth`] is the online replacement, recomputed at every
+//! event epoch (the interval between two discrete events, during which the
+//! set of in-flight requests is constant):
+//!
+//! 1. every busy region is *entitled* to its static share;
+//! 2. a region first receives `min(demand, entitlement)` — demand is the
+//!    bandwidth its current pipeline phase can actually absorb, so
+//!    DRAM-underutilizing tasks claim only what they can use;
+//! 3. the pooled headroom (idle regions' entire shares plus busy regions'
+//!    unclaimed remainders, plus any columns no region owns) is donated to
+//!    regions demanding *more* than their entitlement, pro rata to unmet
+//!    demand and capped at demand.
+//!
+//! Two properties make it safe to use for served latencies: allocations
+//! never exceed the physical total, and a busy region never receives less
+//! than `min(demand, entitlement)` — so no request is ever served slower
+//! than the static plan-time model predicts (the never-worse claim
+//! `tests/serve_integration.rs` checks end to end).
+
+/// Which bandwidth model the serving simulator charges requests under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BandwidthModel {
+    /// Plan-time proportional shares, always — the conservative baseline.
+    Static,
+    /// Demand-driven per-epoch splitting with headroom donation.
+    Dynamic,
+}
+
+impl BandwidthModel {
+    pub fn name(self) -> &'static str {
+        match self {
+            BandwidthModel::Static => "static",
+            BandwidthModel::Dynamic => "dynamic",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<BandwidthModel> {
+        match s {
+            "static" => Some(BandwidthModel::Static),
+            "dynamic" => Some(BandwidthModel::Dynamic),
+            _ => None,
+        }
+    }
+}
+
+/// Split `total` bytes/cycle across regions for one event epoch.
+///
+/// `entitlements[i]` is region `i`'s static share; `demands[i]` is `None`
+/// for an idle region and `Some(d)` for a busy one, where `d` is the
+/// bandwidth its in-flight request can still absorb this epoch. Returns
+/// one allocation per region (idle regions get 0).
+///
+/// Guarantees, up to float rounding: `alloc[i] ≥ min(demand, entitlement)`
+/// for every busy region, `alloc[i] ≤ demand`, and `Σ alloc ≤ total`.
+/// The proportional donation round is exact water-filling here: grants are
+/// capped at unmet demand, and either the surplus covers all unmet demand
+/// (everyone saturates) or it is exhausted in the single pro-rata pass.
+pub fn allocate_bandwidth(total: f64, entitlements: &[f64], demands: &[Option<f64>]) -> Vec<f64> {
+    assert_eq!(
+        entitlements.len(),
+        demands.len(),
+        "one demand per entitled region"
+    );
+    let n = entitlements.len();
+    let mut alloc = vec![0.0f64; n];
+    let mut granted = 0.0f64;
+    for i in 0..n {
+        if let Some(d) = demands[i] {
+            alloc[i] = d.max(0.0).min(entitlements[i].max(0.0));
+            granted += alloc[i];
+        }
+    }
+    let surplus = (total - granted).max(0.0);
+    let unmet: Vec<f64> = (0..n)
+        .map(|i| match demands[i] {
+            Some(d) if d > alloc[i] => d - alloc[i],
+            _ => 0.0,
+        })
+        .collect();
+    let want: f64 = unmet.iter().sum();
+    if want > 0.0 && surplus > 0.0 {
+        let scale = (surplus / want).min(1.0);
+        for i in 0..n {
+            alloc[i] += unmet[i] * scale;
+        }
+    }
+    alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total_of(alloc: &[f64]) -> f64 {
+        alloc.iter().sum()
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for m in [BandwidthModel::Static, BandwidthModel::Dynamic] {
+            assert_eq!(BandwidthModel::from_name(m.name()), Some(m));
+        }
+        assert!(BandwidthModel::from_name("shared").is_none());
+    }
+
+    #[test]
+    fn fully_contended_regions_fall_back_to_static_shares() {
+        // Everyone demands more than their entitlement and the shares tile
+        // the total: nothing to donate, allocation == entitlement.
+        let e = [128.0, 64.0, 64.0];
+        let d = [Some(500.0), Some(500.0), Some(500.0)];
+        let a = allocate_bandwidth(256.0, &e, &d);
+        assert_eq!(a, vec![128.0, 64.0, 64.0]);
+    }
+
+    #[test]
+    fn idle_regions_donate_their_whole_share() {
+        let e = [128.0, 128.0];
+        let d = [Some(1000.0), None];
+        let a = allocate_bandwidth(256.0, &e, &d);
+        assert_eq!(a[1], 0.0);
+        assert!((a[0] - 256.0).abs() < 1e-9, "idle share donated: {a:?}");
+    }
+
+    #[test]
+    fn underutilizing_regions_donate_headroom() {
+        // Region 1 can only absorb 16 of its 128: region 0 takes the rest,
+        // capped at its own demand.
+        let e = [128.0, 128.0];
+        let d = [Some(200.0), Some(16.0)];
+        let a = allocate_bandwidth(256.0, &e, &d);
+        assert!((a[1] - 16.0).abs() < 1e-9);
+        assert!((a[0] - 200.0).abs() < 1e-9, "capped at demand: {a:?}");
+        assert!(total_of(&a) <= 256.0 + 1e-9);
+    }
+
+    #[test]
+    fn donation_is_pro_rata_to_unmet_demand() {
+        let e = [100.0, 100.0, 56.0];
+        let d = [Some(200.0), Some(150.0), None]; // 56 + nothing-held-back to donate
+        let a = allocate_bandwidth(256.0, &e, &d);
+        // Base 100 + 100, surplus 56 split 2:1 (unmet 100 vs 50).
+        assert!((a[0] - (100.0 + 56.0 * 100.0 / 150.0)).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - (100.0 + 56.0 * 50.0 / 150.0)).abs() < 1e-9, "{a:?}");
+        assert_eq!(a[2], 0.0);
+        assert!((total_of(&a) - 256.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn never_worse_than_static_and_never_over_total() {
+        let e = [64.0, 96.0, 96.0];
+        let cases: [[Option<f64>; 3]; 4] = [
+            [Some(10.0), Some(400.0), None],
+            [Some(64.0), Some(96.0), Some(96.0)],
+            [None, None, Some(1.0)],
+            [Some(0.0), Some(1e6), Some(50.0)],
+        ];
+        for d in cases {
+            let a = allocate_bandwidth(256.0, &e, &d);
+            assert!(total_of(&a) <= 256.0 + 1e-9, "{d:?} -> {a:?}");
+            for i in 0..3 {
+                match d[i] {
+                    Some(di) => {
+                        assert!(
+                            a[i] + 1e-9 >= di.min(e[i]),
+                            "region {i} below its static floor: {d:?} -> {a:?}"
+                        );
+                        assert!(a[i] <= di + 1e-9, "over demand: {d:?} -> {a:?}");
+                    }
+                    None => assert_eq!(a[i], 0.0),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_idle_allocates_nothing() {
+        let a = allocate_bandwidth(256.0, &[128.0, 128.0], &[None, None]);
+        assert_eq!(a, vec![0.0, 0.0]);
+    }
+}

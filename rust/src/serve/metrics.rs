@@ -1,0 +1,255 @@
+//! Served-latency metrics, schedulability verdicts, and the rate sweep.
+//!
+//! A [`ServeOutcome`] rolls one simulation up into per-task tail latencies
+//! (nearest-rank percentiles via `util::stats::percentile`), deadline-miss
+//! accounting (late completions *plus* dispatcher drops — a dropped
+//! request missed its deadline by definition), queueing depth, and home-
+//! region utilization. A scenario is *schedulable* under a policy when no
+//! request misses.
+//!
+//! [`sweep_max_rate`] turns the boolean verdict into a boundary: the
+//! largest uniform rate multiplier the plan still serves miss-free.
+//! Probes use strict-periodic arrivals — deterministic, and scaling every
+//! period by the same factor keeps the feasibility predicate monotone
+//! (each band is a work-conserving queue whose per-request response times
+//! only shrink when all gaps widen), which is what licenses the
+//! exponential-bracket + bisection search. The probe list is recorded so
+//! reports (and the monotonicity test) can audit the boundary.
+
+use crate::cosched::Scenario;
+use crate::util::stats::percentile;
+
+use super::arrivals::{streams, ArrivalProcess};
+use super::dispatch::Policy;
+use super::engine::{simulate, ServePlan, SimOptions, TraceEvent};
+use super::interference::BandwidthModel;
+
+/// Nearest-rank percentile with an empty-sample guard (no completions →
+/// 0, e.g. a task whose every request was dropped).
+pub fn pct_or_zero(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        percentile(xs, p)
+    }
+}
+
+/// One task's served-traffic summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskMetrics {
+    pub task: String,
+    pub rate_hz: f64,
+    pub deadline_ms: f64,
+    /// Requests that arrived inside the window.
+    pub requests: u64,
+    /// Requests served to completion (on time or late).
+    pub completed: u64,
+    /// Requests dropped as hopeless by a deadline-aware dispatcher.
+    pub dropped: u64,
+    /// Deadline misses: late completions + drops.
+    pub missed: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_wait_ms: f64,
+    pub max_queue_depth: usize,
+    /// Busy fraction of the task's home region over the served span.
+    pub utilization: f64,
+}
+
+impl TaskMetrics {
+    pub fn miss_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.missed as f64 / self.requests as f64
+        }
+    }
+}
+
+/// One full simulation's result.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub policy: Policy,
+    pub scenario: String,
+    pub bandwidth: BandwidthModel,
+    pub tasks: Vec<TaskMetrics>,
+    /// Last event instant: arrivals stop at the window's end, the span
+    /// runs until the backlog drains.
+    pub span_s: f64,
+    /// The deterministic event trace (the reproducibility witness).
+    pub trace: Vec<TraceEvent>,
+}
+
+impl ServeOutcome {
+    /// No request of any task missed its deadline.
+    pub fn schedulable(&self) -> bool {
+        self.tasks.iter().all(|t| t.missed == 0)
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.tasks.iter().map(|t| t.requests).sum()
+    }
+
+    pub fn total_missed(&self) -> u64 {
+        self.tasks.iter().map(|t| t.missed).sum()
+    }
+
+    /// Scenario-wide deadline-miss rate.
+    pub fn miss_rate(&self) -> f64 {
+        let total = self.total_requests();
+        if total == 0 {
+            0.0
+        } else {
+            self.total_missed() as f64 / total as f64
+        }
+    }
+}
+
+/// Upper bracket of the rate sweep: beyond 1024× the scenario's native
+/// rates the boundary is reported as "at least this".
+pub const SWEEP_MAX_MULT: f64 = 1024.0;
+
+/// Lower bracket: below 1/1024× the scenario is reported unschedulable at
+/// any rate (its base latencies already blow the deadlines).
+pub const SWEEP_MIN_MULT: f64 = 1.0 / 1024.0;
+
+/// Bisection refinements after bracketing (≈3 significant digits).
+const SWEEP_BISECT_ITERS: usize = 12;
+
+/// Outcome of one policy's rate sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepResult {
+    pub policy: Policy,
+    /// Every probe in evaluation order: `(rate multiplier, schedulable)`.
+    pub probes: Vec<(f64, bool)>,
+    /// Largest multiplier found schedulable; 0 when even
+    /// [`SWEEP_MIN_MULT`] misses deadlines.
+    pub max_mult: f64,
+}
+
+/// Binary-search the largest uniform rate multiplier `scenario` sustains
+/// miss-free under `policy`, probing with strict-periodic arrivals over
+/// `duration_s`-second windows.
+pub fn sweep_max_rate(
+    scenario: &Scenario,
+    plan: &ServePlan,
+    policy: Policy,
+    opts: SimOptions,
+    duration_s: f64,
+) -> SweepResult {
+    let mut probes: Vec<(f64, bool)> = Vec::new();
+    // Probes only read the verdict: skip the per-event trace, which at
+    // high multipliers would dwarf the rest of the probe's work.
+    let opts = SimOptions {
+        record_trace: false,
+        ..opts
+    };
+    let feasible = |m: f64, probes: &mut Vec<(f64, bool)>| -> bool {
+        // Periodic probes consume no randomness, so the seed is moot.
+        let arrivals = streams(scenario, &ArrivalProcess::Periodic, m, duration_s, 0);
+        let ok = simulate(scenario, plan, policy, &arrivals, opts).schedulable();
+        probes.push((m, ok));
+        ok
+    };
+
+    let (mut lo, mut hi);
+    if feasible(1.0, &mut probes) {
+        // Bracket upward: double until infeasible or capped.
+        lo = 1.0;
+        hi = 2.0;
+        while hi <= SWEEP_MAX_MULT && feasible(hi, &mut probes) {
+            lo = hi;
+            hi *= 2.0;
+        }
+        if hi > SWEEP_MAX_MULT {
+            return SweepResult {
+                policy,
+                probes,
+                max_mult: lo,
+            };
+        }
+    } else {
+        // Bracket downward: halve until feasible or floored.
+        hi = 1.0;
+        lo = 0.5;
+        while lo >= SWEEP_MIN_MULT && !feasible(lo, &mut probes) {
+            hi = lo;
+            lo *= 0.5;
+        }
+        if lo < SWEEP_MIN_MULT {
+            return SweepResult {
+                policy,
+                probes,
+                max_mult: 0.0,
+            };
+        }
+    }
+    for _ in 0..SWEEP_BISECT_ITERS {
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid, &mut probes) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    SweepResult {
+        policy,
+        probes,
+        max_mult: lo,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tm(requests: u64, missed: u64) -> TaskMetrics {
+        TaskMetrics {
+            task: "t".into(),
+            rate_hz: 10.0,
+            deadline_ms: 100.0,
+            requests,
+            completed: requests - missed,
+            dropped: 0,
+            missed,
+            p50_ms: 1.0,
+            p95_ms: 2.0,
+            p99_ms: 3.0,
+            mean_wait_ms: 0.0,
+            max_queue_depth: 1,
+            utilization: 0.5,
+        }
+    }
+
+    fn outcome(tasks: Vec<TaskMetrics>) -> ServeOutcome {
+        ServeOutcome {
+            policy: Policy::Edf,
+            scenario: "s".into(),
+            bandwidth: BandwidthModel::Dynamic,
+            tasks,
+            span_s: 1.0,
+            trace: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn miss_rate_math_and_guards() {
+        let m = tm(10, 3);
+        assert!((m.miss_rate() - 0.3).abs() < 1e-12);
+        assert_eq!(tm(0, 0).miss_rate(), 0.0);
+        let o = outcome(vec![tm(10, 3), tm(30, 0)]);
+        assert_eq!(o.total_requests(), 40);
+        assert_eq!(o.total_missed(), 3);
+        assert!((o.miss_rate() - 3.0 / 40.0).abs() < 1e-12);
+        assert!(!o.schedulable());
+        assert!(outcome(vec![tm(10, 0)]).schedulable());
+        assert_eq!(outcome(vec![]).miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn pct_or_zero_guards_empty() {
+        assert_eq!(pct_or_zero(&[], 99.0), 0.0);
+        assert_eq!(pct_or_zero(&[5.0, 1.0, 3.0], 50.0), 3.0);
+    }
+}

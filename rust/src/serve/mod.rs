@@ -1,0 +1,244 @@
+//! Online serving: a deterministic discrete-event simulator that replays
+//! request streams against a co-scheduled array plan (DESIGN.md §Serve).
+//!
+//! The planning stack answers "how should concurrent XR tasks split the
+//! array?" ([`crate::cosched`]); this subsystem answers the question one
+//! level up the deployment: *does that split actually hold up under live
+//! traffic?* Each task's requests arrive on their own clock — strict- or
+//! jittered-periodic frame rates, Poisson streams, or replayed traces
+//! ([`arrivals`]) — queue at the task's region, and are admitted by a
+//! pluggable dispatcher (FIFO baseline, deadline-aware EDF and
+//! rate-monotonic, with opt-in cross-task region borrowing;
+//! [`dispatch`]). Served latencies come from the same memoized segment
+//! costs the DSE and co-scheduler share, split into bandwidth-independent
+//! compute floors and DRAM traffic so concurrent regions contend for
+//! off-chip bandwidth *dynamically*: each event epoch re-splits the pool
+//! by demand and DRAM-underutilizing regions donate headroom
+//! ([`interference`]), never serving anyone slower than the static
+//! plan-time split. Per-task tail latencies, deadline-miss rates, queue
+//! depths, utilization and the schedulability verdict — plus a rate sweep
+//! that binary-searches the largest sustainable uniform rate multiplier —
+//! land in [`metrics`], and `pipeorgan serve` + `report::serve` emit it
+//! all.
+//!
+//! Everything is a pure function of `(scenario, config, seed)`: arrivals
+//! are pre-materialized, events tie-break on sequence numbers, and all
+//! state lives in task-indexed vectors, so two runs with one seed are
+//! bit-identical and policy comparisons share one arrival replay.
+
+mod arrivals;
+mod dispatch;
+mod engine;
+mod interference;
+mod metrics;
+
+pub use arrivals::{arrival_times, streams, ArrivalProcess, DEFAULT_JITTER_FRAC};
+pub use dispatch::{select_next, Policy, Request};
+pub use engine::{
+    plan_scenario, run_scenario, simulate, ServePlan, ServeRun, ServedCost, ServiceStage,
+    SimOptions, TraceEvent, TraceKind,
+};
+pub use interference::{allocate_bandwidth, BandwidthModel};
+pub use metrics::{
+    pct_or_zero, sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics, SWEEP_MAX_MULT,
+    SWEEP_MIN_MULT,
+};
+
+/// Knobs of one serving run. CLI flags map 1:1 onto these (see
+/// [`SERVE_FLAGS`]).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Dispatch policies to replay (all three by default, so the emitted
+    /// report is a per-policy comparison on one arrival stream).
+    pub policies: Vec<Policy>,
+    /// Arrival process shared by every task (each at its own rate).
+    pub arrivals: ArrivalProcess,
+    /// Arrival window in seconds; the simulation runs until the backlog
+    /// drains.
+    pub duration_s: f64,
+    /// Uniform multiplier on every task's native rate.
+    pub rate_mult: f64,
+    /// Let idle regions with empty home queues serve other tasks.
+    pub borrow: bool,
+    /// DRAM bandwidth contention model for served latencies.
+    pub bandwidth: BandwidthModel,
+    /// Also binary-search the max sustainable rate multiplier per policy.
+    pub sweep: bool,
+    /// Master seed for the stochastic arrival processes.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            policies: Policy::ALL.to_vec(),
+            arrivals: ArrivalProcess::Periodic,
+            duration_s: 1.0,
+            rate_mult: 1.0,
+            borrow: false,
+            bandwidth: BandwidthModel::Dynamic,
+            sweep: false,
+            seed: 42,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Build from parsed CLI flags (the `serve` subcommand). `seed` is the
+    /// global `--seed` main.rs already parsed.
+    pub fn from_cli(args: &crate::cli::Args, seed: u64) -> Result<ServeConfig, String> {
+        let defaults = ServeConfig::default();
+        let policies = parse_policies(args.get_or("policy", "all"))?;
+        let arrivals_name = args.get_or("arrivals", "periodic");
+        let arrivals = ArrivalProcess::from_name(arrivals_name).ok_or_else(|| {
+            format!(
+                "unknown arrival process `{arrivals_name}` (known: periodic, jittered, poisson)"
+            )
+        })?;
+        let duration_s = args.get_f64("duration-s", defaults.duration_s)?;
+        if !(duration_s > 0.0 && duration_s.is_finite()) {
+            return Err(format!(
+                "flag `--duration-s` must be a positive finite number of seconds, got `{duration_s}`"
+            ));
+        }
+        let rate_mult = args.get_f64("rate-mult", defaults.rate_mult)?;
+        if !(rate_mult > 0.0 && rate_mult.is_finite()) {
+            return Err(format!(
+                "flag `--rate-mult` must be a positive finite multiplier, got `{rate_mult}`"
+            ));
+        }
+        let bandwidth_name = args.get_or("bandwidth", "dynamic");
+        let bandwidth = BandwidthModel::from_name(bandwidth_name).ok_or_else(|| {
+            format!("unknown bandwidth model `{bandwidth_name}` (known: dynamic, static)")
+        })?;
+        Ok(ServeConfig {
+            policies,
+            arrivals,
+            duration_s,
+            rate_mult,
+            borrow: args.has("borrow"),
+            bandwidth,
+            sweep: args.has("sweep"),
+            seed,
+        })
+    }
+}
+
+/// Resolve `--policy`: `all`, one policy, or a comma list.
+fn parse_policies(spec: &str) -> Result<Vec<Policy>, String> {
+    if spec == "all" {
+        return Ok(Policy::ALL.to_vec());
+    }
+    let mut out = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let p = Policy::from_name(name).ok_or_else(|| {
+            format!(
+                "unknown policy `{name}` (known: {})",
+                Policy::ALL
+                    .iter()
+                    .map(|p| p.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })?;
+        if !out.contains(&p) {
+            out.push(p);
+        }
+    }
+    if out.is_empty() {
+        return Err("flag `--policy` lists no policies".into());
+    }
+    Ok(out)
+}
+
+/// Flags accepted by the `serve` subcommand on top of the global ones
+/// (`(name, takes_value)` — the `cli::Args` strict-flag table format).
+/// `--scenario` names canned scenarios exactly as on `cosched`;
+/// `--cache-file`/`--cache-cap` manage the persistent evaluation cache
+/// exactly as on `dse`.
+pub const SERVE_FLAGS: &[(&str, bool)] = &[
+    ("scenario", true),
+    ("policy", true),
+    ("arrivals", true),
+    ("duration-s", true),
+    ("rate-mult", true),
+    ("borrow", false),
+    ("bandwidth", true),
+    ("sweep", false),
+    ("cache-file", true),
+    ("cache-cap", true),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::Args;
+
+    fn parse_sv(v: &[&str]) -> Result<ServeConfig, String> {
+        let mut flags: Vec<(&str, bool)> = vec![("out", true), ("workers", true), ("seed", true)];
+        flags.extend_from_slice(SERVE_FLAGS);
+        let raw: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+        let args = Args::parse(&raw, &flags)?;
+        ServeConfig::from_cli(&args, 7)
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let sv = ServeConfig::default();
+        assert_eq!(sv.policies, Policy::ALL.to_vec());
+        assert_eq!(sv.arrivals, ArrivalProcess::Periodic);
+        assert!(sv.duration_s > 0.0 && sv.rate_mult > 0.0);
+        assert!(!sv.borrow && !sv.sweep);
+        assert_eq!(sv.bandwidth, BandwidthModel::Dynamic);
+    }
+
+    #[test]
+    fn cli_flags_parse_into_config() {
+        let sv = parse_sv(&[
+            "serve",
+            "--scenario",
+            "xr-core",
+            "--policy",
+            "edf,fifo",
+            "--arrivals",
+            "poisson",
+            "--duration-s",
+            "0.5",
+            "--rate-mult",
+            "2.5",
+            "--borrow",
+            "--bandwidth",
+            "static",
+            "--sweep",
+        ])
+        .unwrap();
+        assert_eq!(sv.policies, vec![Policy::Edf, Policy::Fifo]);
+        assert_eq!(sv.arrivals, ArrivalProcess::Poisson);
+        assert_eq!(sv.duration_s, 0.5);
+        assert_eq!(sv.rate_mult, 2.5);
+        assert!(sv.borrow && sv.sweep);
+        assert_eq!(sv.bandwidth, BandwidthModel::Static);
+        assert_eq!(sv.seed, 7, "the global seed threads through");
+    }
+
+    #[test]
+    fn bad_flags_rejected() {
+        assert!(parse_sv(&["serve", "--policy", "lifo"]).is_err());
+        assert!(parse_sv(&["serve", "--policy", ","]).is_err());
+        assert!(parse_sv(&["serve", "--arrivals", "bursty"]).is_err());
+        assert!(parse_sv(&["serve", "--bandwidth", "shared"]).is_err());
+        assert!(parse_sv(&["serve", "--duration-s", "0"]).is_err());
+        assert!(parse_sv(&["serve", "--duration-s", "soon"]).is_err());
+        assert!(parse_sv(&["serve", "--rate-mult", "-1"]).is_err());
+        assert!(parse_sv(&["serve", "--rate-mult", "inf"]).is_err());
+        assert!(parse_sv(&["serve", "--nope"]).is_err());
+    }
+
+    #[test]
+    fn policy_lists_dedupe_and_keep_order() {
+        let sv = parse_sv(&["serve", "--policy", "rm,edf,rm"]).unwrap();
+        assert_eq!(sv.policies, vec![Policy::Rm, Policy::Edf]);
+        let sv = parse_sv(&["serve", "--policy", "all"]).unwrap();
+        assert_eq!(sv.policies.len(), 3);
+    }
+}

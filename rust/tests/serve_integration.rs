@@ -1,0 +1,303 @@
+//! Integration tests for the serve subsystem: EDF never misses more than
+//! FIFO on any canned scenario at a shared seed/rate, the rate sweep's
+//! schedulability boundary is monotone, same-seed runs are bit-identical
+//! (property-tested) while Poisson arrivals differ across seeds, the
+//! dynamic bandwidth model never serves slower than the static split, and
+//! the CLI flag surface stays strict.
+
+use pipeorgan::cli::Args;
+use pipeorgan::config::ArchConfig;
+use pipeorgan::cosched::{canned_scenarios, scenario_by_name, Scenario};
+use pipeorgan::dse::EvalCache;
+use pipeorgan::prop_assert;
+use pipeorgan::serve::{
+    plan_scenario, run_scenario, simulate, streams, sweep_max_rate, ArrivalProcess,
+    BandwidthModel, Policy, ServeConfig, ServePlan, SimOptions, SERVE_FLAGS,
+};
+use pipeorgan::util::proptest_lite;
+
+/// A smaller array than Table III keeps debug-build evaluation fast; every
+/// asserted property is architecture-independent.
+fn small_cfg() -> ArchConfig {
+    ArchConfig {
+        pe_rows: 16,
+        pe_cols: 16,
+        ..ArchConfig::default()
+    }
+}
+
+fn periodic_arrivals(sc: &Scenario, mult: f64, duration_s: f64) -> Vec<Vec<f64>> {
+    streams(sc, &ArrivalProcess::Periodic, mult, duration_s, 0)
+}
+
+/// The acceptance criterion: on every canned scenario, at the same
+/// arrival replay, EDF's deadline-miss rate never exceeds FIFO's — in the
+/// feasible regime both are zero, and under overload EDF's hopeless-drop
+/// rule spends capacity only on requests that can still make it while
+/// FIFO burns it on doomed ones.
+#[test]
+fn edf_never_misses_more_than_fifo_on_every_canned_scenario() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    for sc in canned_scenarios() {
+        let plan = plan_scenario(&sc, &cfg, &cache, 2)
+            .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+        for mult in [1.0, 8.0] {
+            let arrivals = periodic_arrivals(&sc, mult, 0.05);
+            let fifo = simulate(&sc, &plan, Policy::Fifo, &arrivals, SimOptions::default());
+            let edf = simulate(&sc, &plan, Policy::Edf, &arrivals, SimOptions::default());
+            assert!(
+                edf.miss_rate() <= fifo.miss_rate() + 1e-12,
+                "{} @ {mult}x: EDF miss rate {} > FIFO {}",
+                sc.name,
+                edf.miss_rate(),
+                fifo.miss_rate()
+            );
+            // Per-task accounting always closes.
+            for out in [&fifo, &edf] {
+                for (t, m) in out.tasks.iter().enumerate() {
+                    assert_eq!(
+                        m.completed + m.dropped,
+                        arrivals[t].len() as u64,
+                        "{} {} {}",
+                        sc.name,
+                        out.policy.name(),
+                        m.task
+                    );
+                    assert!(m.missed <= m.requests);
+                }
+            }
+        }
+    }
+}
+
+/// Rate-monotonic is deadline-aware like EDF, so the same dominance holds
+/// against the blind FIFO baseline on the canned scenarios.
+#[test]
+fn rm_never_misses_more_than_fifo_on_xr_core() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let plan = plan_scenario(&sc, &cfg, &cache, 2).unwrap();
+    for mult in [1.0, 8.0] {
+        let arrivals = periodic_arrivals(&sc, mult, 0.05);
+        let fifo = simulate(&sc, &plan, Policy::Fifo, &arrivals, SimOptions::default());
+        let rm = simulate(&sc, &plan, Policy::Rm, &arrivals, SimOptions::default());
+        assert!(
+            rm.miss_rate() <= fifo.miss_rate() + 1e-12,
+            "@ {mult}x: RM {} > FIFO {}",
+            rm.miss_rate(),
+            fifo.miss_rate()
+        );
+    }
+}
+
+/// The sweep's probe record must be consistent with a monotone
+/// schedulability boundary: no multiplier may be infeasible while a
+/// *larger* one is feasible.
+#[test]
+fn sweep_boundary_is_monotone_on_every_canned_scenario() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    for sc in canned_scenarios() {
+        let plan = plan_scenario(&sc, &cfg, &cache, 2).unwrap();
+        for policy in [Policy::Fifo, Policy::Edf] {
+            let sweep = sweep_max_rate(&sc, &plan, policy, SimOptions::default(), 0.05);
+            assert!(!sweep.probes.is_empty());
+            assert!(sweep.max_mult >= 0.0);
+            for &(m_lo, ok_lo) in &sweep.probes {
+                for &(m_hi, ok_hi) in &sweep.probes {
+                    assert!(
+                        !(m_lo < m_hi && !ok_lo && ok_hi),
+                        "{} {}: non-monotone probes ({m_lo}, {ok_lo}) vs ({m_hi}, {ok_hi})",
+                        sc.name,
+                        policy.name()
+                    );
+                }
+            }
+            // The reported boundary is itself a feasible probe (or 0).
+            if sweep.max_mult > 0.0 {
+                assert!(
+                    sweep.probes.iter().any(|&(m, ok)| m == sweep.max_mult && ok),
+                    "{} {}: boundary {} was never probed feasible",
+                    sc.name,
+                    policy.name(),
+                    sweep.max_mult
+                );
+            }
+        }
+    }
+}
+
+/// Same seed → bit-identical event traces and metrics, for every policy;
+/// property-tested over random seeds. Poisson arrival streams must differ
+/// across seeds (that is what the seed is for).
+#[test]
+fn serving_is_deterministic_per_seed_property() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let plan = plan_scenario(&sc, &cfg, &cache, 2).unwrap();
+    proptest_lite::run(16, |rng| {
+        let seed = rng.next_u64();
+        let policy = *rng.choose(&Policy::ALL);
+        let borrow = rng.gen_bool(0.5);
+        let make_arrivals = |seed: u64| -> Vec<Vec<f64>> {
+            streams(&sc, &ArrivalProcess::Poisson, 1.0, 0.05, seed)
+        };
+        let arrivals = make_arrivals(seed);
+        let opts = SimOptions {
+            borrow,
+            ..SimOptions::default()
+        };
+        let a = simulate(&sc, &plan, policy, &arrivals, opts);
+        let b = simulate(&sc, &plan, policy, &make_arrivals(seed), opts);
+        prop_assert!(a.trace == b.trace, "trace diverged at seed {seed:#x}");
+        prop_assert!(a.tasks == b.tasks, "metrics diverged at seed {seed:#x}");
+        prop_assert!(a.span_s == b.span_s, "span diverged at seed {seed:#x}");
+        // A different seed must produce a different Poisson stream.
+        let other = make_arrivals(seed ^ 0x9E37_79B9_7F4A_7C15);
+        prop_assert!(
+            arrivals != other,
+            "distinct seeds produced identical Poisson arrivals (seed {seed:#x})"
+        );
+        Ok(())
+    });
+}
+
+/// The dynamic contention model may only ever *donate* bandwidth, so under
+/// FIFO (same service order, no drops) every task's tail latencies and
+/// miss counts are no worse than under the static split.
+#[test]
+fn dynamic_bandwidth_never_worse_than_static_on_canned_scenarios() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    for sc in canned_scenarios() {
+        let plan = plan_scenario(&sc, &cfg, &cache, 2).unwrap();
+        let arrivals = periodic_arrivals(&sc, 2.0, 0.05);
+        let run = |bandwidth| {
+            simulate(
+                &sc,
+                &plan,
+                Policy::Fifo,
+                &arrivals,
+                SimOptions {
+                    bandwidth,
+                    ..SimOptions::default()
+                },
+            )
+        };
+        let stat = run(BandwidthModel::Static);
+        let dynamic = run(BandwidthModel::Dynamic);
+        for (s, d) in stat.tasks.iter().zip(&dynamic.tasks) {
+            assert_eq!(s.completed, d.completed, "{}: {}", sc.name, s.task);
+            assert!(
+                d.missed <= s.missed,
+                "{} {}: dynamic missed {} > static {}",
+                sc.name,
+                s.task,
+                d.missed,
+                s.missed
+            );
+            for (pd, ps) in [(d.p50_ms, s.p50_ms), (d.p95_ms, s.p95_ms), (d.p99_ms, s.p99_ms)] {
+                assert!(
+                    pd <= ps + 1e-6,
+                    "{} {}: dynamic {pd} > static {ps}",
+                    sc.name,
+                    s.task
+                );
+            }
+        }
+        assert!(dynamic.span_s <= stat.span_s + 1e-9);
+    }
+}
+
+/// Serving costs must agree with the co-scheduler's cost model on each
+/// task's home region: same shared cache entries, same latency.
+#[test]
+fn home_region_costs_match_cosched() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-hands").unwrap();
+    let plan: ServePlan = plan_scenario(&sc, &cfg, &cache, 2).unwrap();
+    for (t, a) in plan.cosched.cosched.assignments.iter().enumerate() {
+        let own = &plan.costs[t][t];
+        assert!(
+            (own.nominal_cycles - a.latency_cycles).abs() <= 1e-6 * a.latency_cycles.max(1.0),
+            "task {t}: serve nominal {} vs cosched {}",
+            own.nominal_cycles,
+            a.latency_cycles
+        );
+        assert!(own.best_case_cycles <= own.nominal_cycles * (1.0 + 1e-9));
+    }
+    // Replanning against the same cache is fully memoized.
+    let again = plan_scenario(&sc, &cfg, &cache, 1).unwrap();
+    assert_eq!(again.evaluations, 0, "warm replan must be all cache hits");
+    assert!(again.cache_hits > 0);
+}
+
+/// End-to-end CLI-level run: all policies on one scenario share arrivals,
+/// and the run is reproducible from its seed.
+#[test]
+fn run_scenario_end_to_end_is_deterministic() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let sv = ServeConfig {
+        duration_s: 0.05,
+        arrivals: ArrivalProcess::Poisson,
+        seed: 7,
+        ..ServeConfig::default()
+    };
+    let a = run_scenario(&sc, &cfg, &sv, &cache, 2).unwrap();
+    let b = run_scenario(&sc, &cfg, &sv, &cache, 2).unwrap();
+    assert_eq!(a.outcomes.len(), 3);
+    for (oa, ob) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(oa.policy, ob.policy);
+        assert_eq!(oa.trace, ob.trace);
+        assert_eq!(oa.tasks, ob.tasks);
+    }
+    // All policies replay identical arrival streams: per-task request
+    // counts agree across policies.
+    for o in &a.outcomes {
+        for (t, m) in o.tasks.iter().enumerate() {
+            assert_eq!(m.requests, a.outcomes[0].tasks[t].requests);
+        }
+    }
+}
+
+#[test]
+fn serve_cli_flags_are_strict() {
+    let mut flags: Vec<(&str, bool)> = vec![("out", true), ("workers", true), ("seed", true)];
+    flags.extend_from_slice(SERVE_FLAGS);
+    let parse = |v: &[&str]| {
+        let raw: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+        Args::parse(&raw, &flags)
+    };
+    let args = parse(&[
+        "serve",
+        "--scenario",
+        "xr-core",
+        "--policy",
+        "edf",
+        "--seed",
+        "7",
+        "--duration-s",
+        "0.25",
+        "--rate-mult",
+        "1.5",
+        "--sweep",
+        "--cache-file",
+        "reports/dse_cache.json",
+    ])
+    .unwrap();
+    let sv = ServeConfig::from_cli(&args, 7).unwrap();
+    assert_eq!(sv.policies, vec![Policy::Edf]);
+    assert_eq!(sv.duration_s, 0.25);
+    assert_eq!(sv.rate_mult, 1.5);
+    assert!(sv.sweep);
+    // Typos and foreign subcommand flags stay hard errors on serve.
+    assert!(parse(&["serve", "--policey", "edf"]).is_err());
+    assert!(parse(&["serve", "--quantum", "4"]).is_err());
+    assert!(parse(&["serve", "--beam", "4"]).is_err());
+}
