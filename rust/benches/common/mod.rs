@@ -10,6 +10,12 @@ use std::time::Instant;
 use pipeorgan::util::stats::Summary;
 
 /// Time `f` with `warmup` discarded runs and `samples` measured runs.
+///
+/// When the `PIPEORGAN_BENCH_JSON` environment variable names a file, one
+/// JSON line per bench (`{"bench": …, "mean_ns": …, "p50_ns": …, …}`) is
+/// appended to it — the raw record `tools/bench_check.py` aggregates into
+/// `reports/BENCH_ci.json` and gates against `BENCH_baseline.json` in the
+/// CI `bench-smoke` job.
 pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Summary {
     for _ in 0..warmup {
         std::hint::black_box(f());
@@ -22,7 +28,38 @@ pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -
     }
     let s = Summary::from_ns(&ns);
     println!("bench {name}: {s}");
+    if let Ok(path) = std::env::var("PIPEORGAN_BENCH_JSON") {
+        if let Err(e) = append_json_line(&path, name, &s) {
+            eprintln!("bench {name}: could not append record to {path}: {e}");
+        }
+    }
     s
+}
+
+/// Append one bench record as compact JSON-per-line (JSONL keeps the file
+/// trivially appendable across the separate bench binaries `cargo bench`
+/// runs in sequence).
+fn append_json_line(path: &str, name: &str, s: &Summary) -> std::io::Result<()> {
+    use std::io::Write as _;
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut j = pipeorgan::util::json::Json::obj();
+    j.set("bench", name)
+        .set("n", s.n)
+        .set("mean_ns", s.mean_ns)
+        .set("stddev_ns", s.stddev_ns)
+        .set("min_ns", s.min_ns)
+        .set("p50_ns", s.p50_ns)
+        .set("p95_ns", s.p95_ns)
+        .set("max_ns", s.max_ns);
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(f, "{j}")
 }
 
 /// Standard output directory for bench-generated reports.

@@ -8,7 +8,7 @@
 mod common;
 
 use pipeorgan::config::ArchConfig;
-use pipeorgan::cosched::scenario_by_name;
+use pipeorgan::cosched::{scenario_by_name, CoschedConfig};
 use pipeorgan::dse::EvalCache;
 use pipeorgan::serve::{
     plan_scenario, simulate, streams, sweep_max_rate, ArrivalProcess, BandwidthModel, Policy,
@@ -19,7 +19,8 @@ fn main() {
     let cfg = ArchConfig::default();
     let cache = EvalCache::new();
     let sc = scenario_by_name("xr-core").expect("canned scenario");
-    let plan = plan_scenario(&sc, &cfg, &cache, 4).expect("planning succeeds");
+    let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 4)
+        .expect("planning succeeds");
     println!(
         "planned xr-core: {} evaluations, {} cache hits",
         plan.evaluations, plan.cache_hits

@@ -1,0 +1,465 @@
+//! Guillotine cut trees: recursive 2-D partitioning of the PE array.
+//!
+//! A [`CutTree`] describes how one rectangle is split into per-task
+//! regions by alternating (or repeated) horizontal and vertical guillotine
+//! cuts — every cut runs edge to edge of its rectangle, so the leaves are
+//! always non-overlapping rectangles that tile the parent exactly (no
+//! gaps, no overlap, by construction). The 1-D vertical bands the
+//! co-scheduler started with are the special case of a right-leaning chain
+//! of vertical cuts ([`CutTree::vertical_bands`]).
+//!
+//! Each leaf names the task that owns its rectangle *and* the NoC topology
+//! instantiated inside it (the paper's modified mesh vs a conventional
+//! mesh can be chosen per region). Trees serialize to and from the report
+//! JSON ([`CutTree::to_json`] / [`CutTree::from_json`]), so a planned
+//! partition round-trips through `reports/cosched.json` and can be fed
+//! back into external tooling; [`CutTree::encode`] is the compact
+//! single-line rendering used in tables (`V8(a:m,H4(b:A,c:m))`).
+
+use crate::config::TopologyKind;
+use crate::util::json::Json;
+
+use super::region::{Region, RegionPartition};
+
+/// Orientation of one guillotine cut.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CutAxis {
+    /// The cut line runs horizontally: `low` is the top part (`at` rows),
+    /// `high` the bottom part.
+    Horizontal,
+    /// The cut line runs vertically: `low` is the left part (`at`
+    /// columns), `high` the right part.
+    Vertical,
+}
+
+impl CutAxis {
+    pub fn name(self) -> &'static str {
+        match self {
+            CutAxis::Horizontal => "h",
+            CutAxis::Vertical => "v",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<CutAxis> {
+        match s {
+            "h" => Some(CutAxis::Horizontal),
+            "v" => Some(CutAxis::Vertical),
+            _ => None,
+        }
+    }
+}
+
+/// A recursive guillotine partition of a rectangle into per-task regions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CutTree {
+    /// The rectangle belongs to `task`, served by a `topology` NoC.
+    Leaf { task: usize, topology: TopologyKind },
+    /// The rectangle is deliberately left unassigned (e.g. the trailing
+    /// columns a band winner did not use) — the cuts still tile the array
+    /// exactly, this space just powers no task.
+    Idle,
+    /// The rectangle is split `at` rows/columns from its origin.
+    Cut {
+        axis: CutAxis,
+        at: usize,
+        low: Box<CutTree>,
+        high: Box<CutTree>,
+    },
+}
+
+impl CutTree {
+    /// Task leaves only — [`CutTree::Idle`] rectangles do not count.
+    pub fn num_leaves(&self) -> usize {
+        match self {
+            CutTree::Leaf { .. } => 1,
+            CutTree::Idle => 0,
+            CutTree::Cut { low, high, .. } => low.num_leaves() + high.num_leaves(),
+        }
+    }
+
+    /// The 1-D special case: full-height vertical bands of the given
+    /// widths on a `total_cols`-wide array, task `i` owning band `i`,
+    /// every region on one topology. Widths that do not use every column
+    /// leave an explicit trailing [`CutTree::Idle`] rectangle, so the
+    /// tree realizes exactly the band partition (no silent widening).
+    pub fn vertical_bands(widths: &[usize], total_cols: usize, topology: TopologyKind) -> CutTree {
+        assert!(!widths.is_empty(), "a cut tree needs at least one band");
+        let used: usize = widths.iter().sum();
+        assert!(
+            (1..=total_cols).contains(&used),
+            "band widths {widths:?} must fit {total_cols} columns"
+        );
+        let bands = Self::bands_from(0, widths, topology);
+        if used < total_cols {
+            CutTree::Cut {
+                axis: CutAxis::Vertical,
+                at: used,
+                low: Box::new(bands),
+                high: Box::new(CutTree::Idle),
+            }
+        } else {
+            bands
+        }
+    }
+
+    fn bands_from(task0: usize, widths: &[usize], topology: TopologyKind) -> CutTree {
+        if widths.len() == 1 {
+            return CutTree::Leaf {
+                task: task0,
+                topology,
+            };
+        }
+        CutTree::Cut {
+            axis: CutAxis::Vertical,
+            at: widths[0],
+            low: Box::new(CutTree::Leaf {
+                task: task0,
+                topology,
+            }),
+            high: Box::new(Self::bands_from(task0 + 1, &widths[1..], topology)),
+        }
+    }
+
+    /// Realize the tree on an `array_rows × array_cols` array: one region
+    /// per task (indexed by task, like every `RegionPartition` in the
+    /// co-scheduler) plus each region's topology. Fails if a cut offset
+    /// falls outside its rectangle or the leaf tasks are not exactly
+    /// `0..num_leaves` (each once); the resulting partition is validated,
+    /// and by construction the cuts tile the array with no gap — every PE
+    /// is in exactly one task region or one explicit [`CutTree::Idle`]
+    /// rectangle.
+    pub fn partition(
+        &self,
+        array_rows: usize,
+        array_cols: usize,
+    ) -> Result<(RegionPartition, Vec<TopologyKind>), String> {
+        let n = self.num_leaves();
+        let mut slots: Vec<Option<(Region, TopologyKind)>> = vec![None; n];
+        self.collect(0, 0, array_rows, array_cols, &mut slots)?;
+        let mut regions = Vec::with_capacity(n);
+        let mut topologies = Vec::with_capacity(n);
+        for (task, slot) in slots.into_iter().enumerate() {
+            let (region, topo) =
+                slot.ok_or_else(|| format!("cut tree assigns no region to task {task}"))?;
+            regions.push(region);
+            topologies.push(topo);
+        }
+        let partition = RegionPartition {
+            array_rows,
+            array_cols,
+            regions,
+        };
+        partition.validate()?;
+        Ok((partition, topologies))
+    }
+
+    fn collect(
+        &self,
+        row0: usize,
+        col0: usize,
+        rows: usize,
+        cols: usize,
+        slots: &mut [Option<(Region, TopologyKind)>],
+    ) -> Result<(), String> {
+        match self {
+            CutTree::Leaf { task, topology } => {
+                let n = slots.len();
+                let slot = slots
+                    .get_mut(*task)
+                    .ok_or_else(|| format!("leaf task {task} outside 0..{n}"))?;
+                if slot.is_some() {
+                    return Err(format!("cut tree assigns task {task} twice"));
+                }
+                *slot = Some((
+                    Region {
+                        row0,
+                        col0,
+                        rows,
+                        cols,
+                    },
+                    *topology,
+                ));
+                Ok(())
+            }
+            CutTree::Idle => Ok(()),
+            CutTree::Cut {
+                axis,
+                at,
+                low,
+                high,
+            } => {
+                let dim = match axis {
+                    CutAxis::Horizontal => rows,
+                    CutAxis::Vertical => cols,
+                };
+                if *at == 0 || *at >= dim {
+                    return Err(format!(
+                        "cut at {at} outside its {dim}-{} rectangle",
+                        match axis {
+                            CutAxis::Horizontal => "row",
+                            CutAxis::Vertical => "column",
+                        }
+                    ));
+                }
+                match axis {
+                    CutAxis::Horizontal => {
+                        low.collect(row0, col0, *at, cols, slots)?;
+                        high.collect(row0 + at, col0, rows - at, cols, slots)
+                    }
+                    CutAxis::Vertical => {
+                        low.collect(row0, col0, rows, *at, slots)?;
+                        high.collect(row0, col0 + at, rows, cols - at, slots)
+                    }
+                }
+            }
+        }
+    }
+
+    /// JSON form: leaves are `{"task": 1, "topology": "mesh"}`, idle
+    /// rectangles `{"idle": true}`, cuts `{"axis": "v", "at": 8,
+    /// "low": …, "high": …}`.
+    pub fn to_json(&self) -> Json {
+        match self {
+            CutTree::Leaf { task, topology } => {
+                let mut o = Json::obj();
+                o.set("task", *task).set("topology", topology.name());
+                o
+            }
+            CutTree::Idle => {
+                let mut o = Json::obj();
+                o.set("idle", true);
+                o
+            }
+            CutTree::Cut {
+                axis,
+                at,
+                low,
+                high,
+            } => {
+                let mut o = Json::obj();
+                o.set("axis", axis.name())
+                    .set("at", *at)
+                    .set("low", low.to_json())
+                    .set("high", high.to_json());
+                o
+            }
+        }
+    }
+
+    /// Inverse of [`CutTree::to_json`], so serialized plans round-trip
+    /// through JSON reports. A leaf without a `topology` field defaults to
+    /// the conventional mesh (hand-written plans stay terse).
+    pub fn from_json(v: &Json) -> Result<CutTree, String> {
+        if let Some(task) = v.get("task") {
+            let task = task
+                .as_usize()
+                .filter(|_| task.as_f64().is_some_and(|x| x >= 0.0))
+                .ok_or("cut-tree leaf `task` must be a non-negative number")?;
+            let topology = match v.get("topology") {
+                None => TopologyKind::Mesh,
+                Some(t) => {
+                    let name = t.as_str().ok_or("cut-tree leaf `topology` must be a string")?;
+                    TopologyKind::from_name(name)
+                        .ok_or_else(|| format!("unknown cut-tree topology `{name}`"))?
+                }
+            };
+            return Ok(CutTree::Leaf { task, topology });
+        }
+        if v.get("idle").is_some() {
+            return Ok(CutTree::Idle);
+        }
+        let axis_name = v
+            .get("axis")
+            .and_then(Json::as_str)
+            .ok_or("cut-tree node needs a `task` (leaf) or string `axis` (cut)")?;
+        let axis = CutAxis::from_name(axis_name)
+            .ok_or_else(|| format!("unknown cut axis `{axis_name}` (known: h, v)"))?;
+        let at = v
+            .get("at")
+            .and_then(Json::as_usize)
+            .ok_or("cut-tree cut needs a numeric `at`")?;
+        let low = CutTree::from_json(v.get("low").ok_or("cut-tree cut needs `low`")?)?;
+        let high = CutTree::from_json(v.get("high").ok_or("cut-tree cut needs `high`")?)?;
+        Ok(CutTree::Cut {
+            axis,
+            at,
+            low: Box::new(low),
+            high: Box::new(high),
+        })
+    }
+
+    /// Compact single-line rendering for tables: tasks as letters (the
+    /// same `a`, `b`, … the placement ASCII art uses), topologies as one
+    /// letter (`m`esh, `A`mp, `t`orus, `f`lattened butterfly), idle
+    /// rectangles as `_` — `V8(a:m,H4(b:A,c:m))`.
+    pub fn encode(&self) -> String {
+        match self {
+            CutTree::Idle => "_".to_string(),
+            CutTree::Leaf { task, topology } => {
+                let letter = (b'a' + (task % 26) as u8) as char;
+                let topo = match topology {
+                    TopologyKind::Mesh => "m",
+                    TopologyKind::Amp => "A",
+                    TopologyKind::Torus => "t",
+                    TopologyKind::FlattenedButterfly => "f",
+                };
+                format!("{letter}:{topo}")
+            }
+            CutTree::Cut {
+                axis,
+                at,
+                low,
+                high,
+            } => format!(
+                "{}{at}({},{})",
+                match axis {
+                    CutAxis::Horizontal => "H",
+                    CutAxis::Vertical => "V",
+                },
+                low.encode(),
+                high.encode()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf(task: usize, topology: TopologyKind) -> Box<CutTree> {
+        Box::new(CutTree::Leaf { task, topology })
+    }
+
+    #[test]
+    fn vertical_bands_match_the_band_partition() {
+        let tree = CutTree::vertical_bands(&[4, 8, 4], 16, TopologyKind::Mesh);
+        assert_eq!(tree.num_leaves(), 3);
+        let (p, topos) = tree.partition(8, 16).unwrap();
+        let bands = RegionPartition::vertical(8, 16, &[4, 8, 4]);
+        assert_eq!(p.regions, bands.regions);
+        assert_eq!(topos, vec![TopologyKind::Mesh; 3]);
+        assert_eq!(p.idle_pes(), 0);
+    }
+
+    #[test]
+    fn under_full_bands_get_an_explicit_idle_tail() {
+        // 4 + 8 of 16 columns used: the tree must realize bands of widths
+        // 4 and 8 exactly (no silent widening of the last band) with the
+        // trailing 4 columns as an explicit idle rectangle.
+        let tree = CutTree::vertical_bands(&[4, 8], 16, TopologyKind::Amp);
+        assert_eq!(tree.num_leaves(), 2);
+        assert_eq!(tree.encode(), "V12(V4(a:A,b:A),_)");
+        let (p, _) = tree.partition(8, 16).unwrap();
+        assert_eq!(p.regions, RegionPartition::vertical(8, 16, &[4, 8]).regions);
+        assert_eq!(p.idle_pes(), 4 * 8);
+        // JSON round-trips the idle rectangle too.
+        let back = CutTree::from_json(&tree.to_json()).unwrap();
+        assert_eq!(back, tree);
+    }
+
+    #[test]
+    fn mixed_cuts_tile_without_gap_and_carry_topologies() {
+        // Left half to task 0 on AMP; right half split top/bottom between
+        // tasks 2 and 1 on meshes — leaf order need not be task order.
+        let tree = CutTree::Cut {
+            axis: CutAxis::Vertical,
+            at: 8,
+            low: leaf(0, TopologyKind::Amp),
+            high: Box::new(CutTree::Cut {
+                axis: CutAxis::Horizontal,
+                at: 6,
+                low: leaf(2, TopologyKind::Mesh),
+                high: leaf(1, TopologyKind::Mesh),
+            }),
+        };
+        let (p, topos) = tree.partition(16, 16).unwrap();
+        assert_eq!(p.regions.len(), 3);
+        let total: usize = p.regions.iter().map(Region::num_pes).sum();
+        assert_eq!(total, 256, "guillotine partitions tile exactly");
+        assert_eq!(p.idle_pes(), 0);
+        let rect = |row0, col0, rows, cols| Region {
+            row0,
+            col0,
+            rows,
+            cols,
+        };
+        assert_eq!(p.regions[0], rect(0, 0, 16, 8));
+        assert_eq!(p.regions[2], rect(0, 8, 6, 8));
+        assert_eq!(p.regions[1], rect(6, 8, 10, 8));
+        assert_eq!(topos[0], TopologyKind::Amp);
+        assert_eq!(tree.encode(), "V8(a:A,H6(c:m,b:m))");
+    }
+
+    #[test]
+    fn malformed_trees_are_rejected() {
+        // Cut offset outside the rectangle.
+        let tree = CutTree::Cut {
+            axis: CutAxis::Vertical,
+            at: 16,
+            low: leaf(0, TopologyKind::Mesh),
+            high: leaf(1, TopologyKind::Mesh),
+        };
+        assert!(tree.partition(8, 16).unwrap_err().contains("outside"));
+        // Duplicate task.
+        let tree = CutTree::Cut {
+            axis: CutAxis::Horizontal,
+            at: 4,
+            low: leaf(0, TopologyKind::Mesh),
+            high: leaf(0, TopologyKind::Mesh),
+        };
+        assert!(tree.partition(8, 16).unwrap_err().contains("twice"));
+        // Task index out of range leaves a hole at task 1.
+        let tree = CutTree::Cut {
+            axis: CutAxis::Horizontal,
+            at: 4,
+            low: leaf(0, TopologyKind::Mesh),
+            high: leaf(2, TopologyKind::Mesh),
+        };
+        assert!(tree.partition(8, 16).is_err());
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let tree = CutTree::Cut {
+            axis: CutAxis::Vertical,
+            at: 12,
+            low: Box::new(CutTree::Cut {
+                axis: CutAxis::Horizontal,
+                at: 20,
+                low: leaf(1, TopologyKind::Amp),
+                high: leaf(0, TopologyKind::Mesh),
+            }),
+            high: leaf(2, TopologyKind::Torus),
+        };
+        let json = tree.to_json();
+        let back = CutTree::from_json(&json).unwrap();
+        assert_eq!(back, tree);
+        // Through the serializer + parser too (the report path).
+        let reparsed = Json::parse(&json.to_pretty()).unwrap();
+        assert_eq!(CutTree::from_json(&reparsed).unwrap(), tree);
+    }
+
+    #[test]
+    fn from_json_defaults_topology_and_rejects_garbage() {
+        let v = Json::parse(r#"{"task": 3}"#).unwrap();
+        assert_eq!(
+            CutTree::from_json(&v).unwrap(),
+            CutTree::Leaf {
+                task: 3,
+                topology: TopologyKind::Mesh
+            }
+        );
+        for bad in [
+            r#"{"axis": "d", "at": 4, "low": {"task": 0}, "high": {"task": 1}}"#,
+            r#"{"axis": "v", "low": {"task": 0}, "high": {"task": 1}}"#,
+            r#"{"axis": "v", "at": 4, "low": {"task": 0}}"#,
+            r#"{"at": 4}"#,
+            r#"{"task": "zero"}"#,
+            r#"{"task": 0, "topology": "ring"}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(CutTree::from_json(&v).is_err(), "{bad}");
+        }
+    }
+}

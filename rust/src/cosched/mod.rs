@@ -8,19 +8,27 @@
 //! is: how should the array be split between them? This subsystem answers
 //! it:
 //!
-//! - [`scenario`]: a [`Scenario`] is a task list with per-task rates and
+//! - `scenario`: a [`Scenario`] is a task list with per-task rates and
 //!   deadlines, with canned XR scenarios built from `workloads::tasks`;
-//! - [`region`]: rectangular per-task array regions
+//! - `region`: rectangular per-task array regions
 //!   ([`RegionPartition`]), region-scoped architecture configs
 //!   ([`region_config`]), and the composed whole-array
 //!   [`ScenarioPlacement`] that validates tasks never overlap;
-//! - [`search`]: the co-scheduling search ([`schedule`]) — a dynamic
+//! - `cut`: guillotine [`CutTree`]s — recursive H/V cuts that realize
+//!   arbitrary rectangular partitions (vertical bands are the 1-D special
+//!   case) with a per-region NoC topology choice, JSON-serializable so
+//!   plans round-trip through reports;
+//! - `search`: the co-scheduling search ([`schedule`]) — a dynamic
 //!   program whose state is *array occupancy* (columns consumed so far),
 //!   extending the DSE's Pareto-label machinery so per-task region widths
-//!   are chosen jointly. Per-(task, width) costs are memoized in the
-//!   shared `dse::EvalCache` (region configs fingerprint distinctly, so
-//!   persistent cache files warm-start co-scheduling too) and evaluated in
-//!   parallel over `coordinator::run_queue`.
+//!   are chosen jointly, plus (under
+//!   [`PartitionKind::Guillotine`]) a memoized beam over cut trees —
+//!   cut position × axis × task-to-leaf assignment — seeded with the
+//!   vertical-band winner so 2-D can never lose to 1-D. Per-(task,
+//!   rectangle) costs are memoized in the shared `dse::EvalCache` (region
+//!   configs fingerprint distinctly, so persistent cache files warm-start
+//!   co-scheduling too) and evaluated in parallel over
+//!   `coordinator::run_queue`.
 //!
 //! The even-column split is always seeded as a candidate, so the
 //! co-scheduled makespan can never exceed the naive even split — mirroring
@@ -29,10 +37,12 @@
 //! latency/energy and scenario makespan for solo-array vs naive-split vs
 //! co-scheduled allocations.
 
+mod cut;
 mod region;
 mod scenario;
 mod search;
 
+pub use cut::{CutAxis, CutTree};
 pub use region::{even_widths, region_config, Region, RegionPartition, ScenarioPlacement};
 pub use scenario::{
     canned_scenarios, scenario_by_name, scenario_names, xr_core, xr_hands, xr_world, Scenario,
@@ -42,13 +52,46 @@ pub use search::{
     canned_live_contexts, schedule, CoschedOutcome, CoschedResult, TaskAssignment,
 };
 
+/// How the array is carved into per-task regions (`--partition`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// Full-height vertical bands — the 1-D occupancy DP.
+    Bands,
+    /// Recursive guillotine rectangles ([`CutTree`]) with per-region
+    /// topology choice; always seeded with the band winner, so it can
+    /// never lose to [`PartitionKind::Bands`].
+    Guillotine,
+}
+
+impl PartitionKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PartitionKind::Bands => "bands",
+            PartitionKind::Guillotine => "guillotine",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PartitionKind> {
+        match s {
+            "bands" => Some(PartitionKind::Bands),
+            "guillotine" => Some(PartitionKind::Guillotine),
+            _ => None,
+        }
+    }
+}
+
 /// Knobs of one co-scheduling run. CLI flags map 1:1 onto these (see
 /// [`COSCHED_FLAGS`]).
 #[derive(Debug, Clone)]
 pub struct CoschedConfig {
+    /// Region-shape family searched: 1-D vertical bands or recursive 2-D
+    /// guillotine rectangles.
+    pub partition: PartitionKind,
     /// Column-width quantum of candidate regions: widths are multiples of
-    /// this (the even-split widths are always added as candidates too).
-    /// Coarser quanta shrink the search; finer quanta find tighter splits.
+    /// this (under [`PartitionKind::Guillotine`] it is the cut grid along
+    /// *both* axes; the even-split widths are always added as band
+    /// candidates too). Coarser quanta shrink the search; finer quanta
+    /// find tighter splits.
     pub quantum: usize,
     /// Plan each region with the budgeted tuned search
     /// (`mapper::TunedPipeOrgan`'s plan path) instead of the closed-form
@@ -64,6 +107,7 @@ pub struct CoschedConfig {
 impl Default for CoschedConfig {
     fn default() -> Self {
         Self {
+            partition: PartitionKind::Bands,
             quantum: 4,
             tuned: false,
             budget: None,
@@ -82,7 +126,12 @@ impl CoschedConfig {
             );
         }
         let defaults = CoschedConfig::default();
+        let partition_name = args.get_or("partition", defaults.partition.name());
+        let partition = PartitionKind::from_name(partition_name).ok_or_else(|| {
+            format!("unknown partition kind `{partition_name}` (known: bands, guillotine)")
+        })?;
         Ok(CoschedConfig {
+            partition,
             quantum: args.get_usize("quantum", defaults.quantum)?.max(1),
             tuned: args.has("tuned"),
             budget: if args.has("budget") {
@@ -98,10 +147,12 @@ impl CoschedConfig {
 /// Flags accepted by the `cosched` subcommand on top of the global ones
 /// (`(name, takes_value)` — the `cli::Args` strict-flag table format).
 /// `--scenario` names canned scenarios (`all`, one name, or a comma list);
+/// `--partition` picks the region family (`bands` or `guillotine`);
 /// `--cache-file`/`--cache-cap` manage the persistent evaluation cache
 /// exactly as on `dse`.
 pub const COSCHED_FLAGS: &[(&str, bool)] = &[
     ("scenario", true),
+    ("partition", true),
     ("quantum", true),
     ("tuned", false),
     ("budget", true),
@@ -128,6 +179,7 @@ mod tests {
         assert!(cs.quantum >= 1 && cs.max_labels >= 1);
         assert!(!cs.tuned);
         assert!(cs.budget.is_none());
+        assert_eq!(cs.partition, PartitionKind::Bands);
     }
 
     #[test]
@@ -136,6 +188,8 @@ mod tests {
             "cosched",
             "--scenario",
             "xr-core",
+            "--partition",
+            "guillotine",
             "--quantum",
             "2",
             "--tuned",
@@ -143,14 +197,24 @@ mod tests {
             "500",
         ])
         .unwrap();
+        assert_eq!(cs.partition, PartitionKind::Guillotine);
         assert_eq!(cs.quantum, 2);
         assert!(cs.tuned);
         assert_eq!(cs.budget, Some(500));
     }
 
     #[test]
+    fn partition_kind_names_roundtrip() {
+        for pk in [PartitionKind::Bands, PartitionKind::Guillotine] {
+            assert_eq!(PartitionKind::from_name(pk.name()), Some(pk));
+        }
+        assert!(PartitionKind::from_name("diagonal").is_none());
+    }
+
+    #[test]
     fn bad_flags_rejected() {
         assert!(parse_cs(&["cosched", "--quantum", "two"]).is_err());
+        assert!(parse_cs(&["cosched", "--partition", "diagonal"]).is_err());
         assert!(parse_cs(&["cosched", "--nope"]).is_err());
         // quantum 0 clamps to 1 instead of dividing by zero later
         assert_eq!(parse_cs(&["cosched", "--quantum", "0"]).unwrap().quantum, 1);

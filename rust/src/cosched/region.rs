@@ -1,13 +1,19 @@
 //! Rectangular array regions: how concurrent tasks split the PE array.
 //!
 //! A [`Region`] is a rectangle of PEs; a [`RegionPartition`] carves the
-//! array into one region per task (vertical full-height bands — the 1-D
-//! guillotine cut that keeps every region's NoC a smaller instance of the
-//! array's own topology). Costing a task inside a region reuses the whole
-//! single-model stack unchanged: [`region_config`] shrinks the
-//! architecture to the region's dimensions and scales the *shared*
-//! resources (global buffer capacity, DRAM bandwidth) by the region's PE
-//! share, so concurrently resident tasks never double-count them.
+//! array into one region per task. [`RegionPartition::vertical`] builds
+//! the 1-D special case (full-height bands); arbitrary non-overlapping
+//! rectangles come from guillotine [`CutTree`]s
+//! ([`CutTree::partition`]) — every region's NoC stays a smaller
+//! instance of a whole-array topology either way. Costing a task inside
+//! a region reuses the whole single-model stack unchanged:
+//! [`region_config`] shrinks the architecture to the region's dimensions
+//! and scales the *shared* resources (global buffer capacity, DRAM
+//! bandwidth) by the region's PE share, so concurrently resident tasks
+//! never double-count them.
+//!
+//! [`CutTree`]: super::CutTree
+//! [`CutTree::partition`]: super::CutTree::partition
 //!
 //! [`ScenarioPlacement`] composes each task's own `spatial::Placement`
 //! (built at region dimensions) into one whole-array view and rejects any

@@ -1,12 +1,12 @@
-//! The co-scheduling search: choose per-task region widths jointly.
+//! The co-scheduling search: choose per-task regions jointly.
 //!
-//! Stage A (parallel, memoized): every (task, candidate width) pair is
+//! Stage A (parallel, memoized): every (task, candidate region) pair is
 //! planned and costed on its region-scoped architecture
 //! (`region_config`) — by the closed-form PipeOrgan mapper, or by the
 //! budgeted tuned search under `CoschedConfig::tuned`. Heuristic plans are
 //! costed *through the shared `dse::EvalCache`* at the same cache
 //! coordinates the DSE uses (heuristic segments always live at granularity
-//! scale 1), so repeated scenarios, repeated widths, and persistent cache
+//! scale 1), so repeated scenarios, repeated shapes, and persistent cache
 //! files all hit instead of re-evaluating. The pair sweep fans out over
 //! `coordinator::run_queue`.
 //!
@@ -21,14 +21,25 @@
 //! plan **never loses to the naive even split** — the same never-lose
 //! construction the tuned mapper uses against the heuristic.
 //!
+//! Under `PartitionKind::Guillotine` a second search runs on top: a
+//! memoized beam over guillotine [`CutTree`]s — for every (rectangle,
+//! task-set) state it enumerates cut axis × cut position (quantum grid) ×
+//! task-to-leaf assignment and keeps a Pareto set of labels, each carrying
+//! the realizing tree; leaves additionally choose a per-region NoC
+//! topology (the paper's modified mesh vs a conventional mesh). The
+//! vertical-band winner is seeded as a complete candidate, so the 2-D
+//! plan **never loses to 1-D** by construction.
+//!
 //! Three allocations are reported per scenario: `solo` (each task owns the
 //! whole array, one frame of work time-multiplexed — makespan is the sum),
 //! `even_split` (one equal vertical band per task, makespan is the max),
-//! and `cosched` (searched bands, makespan is the max).
+//! and `cosched` (the searched partition, makespan is the max).
 
-use std::collections::HashSet;
+use std::cell::RefCell;
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::rc::Rc;
 
-use crate::config::ArchConfig;
+use crate::config::{ArchConfig, TopologyKind};
 use crate::coordinator::run_queue;
 use crate::cost::{evaluate_segment, Mapper, MappingPlan};
 use crate::dse::{
@@ -41,15 +52,19 @@ use crate::mapper::PipeOrgan;
 use crate::noc::Topology;
 use crate::spatial::Placement;
 
+use super::cut::{CutAxis, CutTree};
 use super::region::{even_widths, region_config, Region, RegionPartition, ScenarioPlacement};
 use super::scenario::Scenario;
-use super::CoschedConfig;
+use super::{CoschedConfig, PartitionKind};
 
 /// One task's share of an allocation, fully costed.
 #[derive(Debug, Clone)]
 pub struct TaskAssignment {
     pub task: String,
     pub region: Region,
+    /// NoC topology instantiated inside the region (the guillotine search
+    /// chooses it per rectangle; bands inherit the array topology).
+    pub topology: TopologyKind,
     pub rate_hz: f64,
     /// Inferences per one-second scheduling frame.
     pub invocations: u64,
@@ -104,6 +119,12 @@ pub struct CoschedOutcome {
 #[derive(Debug, Clone)]
 pub struct CoschedResult {
     pub scenario: String,
+    /// Region family that produced [`CoschedResult::cut_tree`].
+    pub partition: PartitionKind,
+    /// The winning partition as a guillotine cut tree (a right-leaning
+    /// chain of vertical cuts under `bands`); serializable through
+    /// [`CutTree::to_json`], so plans round-trip through JSON reports.
+    pub cut_tree: CutTree,
     pub solo: CoschedOutcome,
     pub even_split: CoschedOutcome,
     pub cosched: CoschedOutcome,
@@ -178,9 +199,9 @@ fn evaluate_plan_cached(
 ///
 /// Pipeline depth is additionally capped to the region's narrow dimension:
 /// the 1-D organizations give each stage at least one column (and the 2-D
-/// stage grid at least one cell), so a band can never host more concurrent
-/// stages than it has columns. On square arrays this equals the usual
-/// `√numPEs` cap, so full-array plans are unchanged.
+/// stage grid at least one cell), so a region can never host more
+/// concurrent stages than its narrow side has lanes. On square arrays this
+/// equals the usual `√numPEs` cap, so full-array plans are unchanged.
 fn plan_in(
     graph: &ModelGraph,
     cfg: &ArchConfig,
@@ -261,8 +282,8 @@ impl ParetoPoint for AllocLabel {
 /// Prune on all four axes (load included, so congestion-diverse
 /// allocations survive to compete on the energy tie-break), truncated to
 /// `cap` keeping the lowest-makespan labels — the makespan optimum always
-/// survives, which is what makes the DP exact on makespan.
-fn prune_alloc(labels: &mut Vec<AllocLabel>, cap: usize) {
+/// survives, which is what makes both DPs exact on makespan.
+fn prune_labels<T: ParetoPoint>(labels: &mut Vec<T>, cap: usize) {
     if labels.len() <= 1 {
         return;
     }
@@ -278,47 +299,133 @@ enum Job {
     Width { task: usize, width: usize },
 }
 
+/// Per-region NoC choices the guillotine search considers: the paper's
+/// modified mesh (AMP) vs a conventional mesh, plus the configured array
+/// topology when it is neither. The configured topology comes first so
+/// exact ties keep today's choice.
+fn region_topologies(cfg: &ArchConfig) -> Vec<TopologyKind> {
+    let mut topos = vec![cfg.topology];
+    for t in [TopologyKind::Mesh, TopologyKind::Amp] {
+        if !topos.contains(&t) {
+            topos.push(t);
+        }
+    }
+    topos
+}
+
+/// The architecture restricted to a `rows × cols` region on an explicit
+/// per-region topology (costs are translation-invariant, so only the
+/// dimensions reach the config).
+fn region_topo_config(
+    cfg: &ArchConfig,
+    rows: usize,
+    cols: usize,
+    topo: TopologyKind,
+) -> ArchConfig {
+    let mut rcfg = region_config(
+        cfg,
+        &Region {
+            row0: 0,
+            col0: 0,
+            rows,
+            cols,
+        },
+    );
+    rcfg.topology = topo;
+    rcfg
+}
+
+/// Candidate guillotine cut offsets inside a `dim`-long side: multiples of
+/// the quantum strictly inside `(0, dim)`.
+fn cut_positions(dim: usize, quantum: usize) -> Vec<usize> {
+    let q = quantum.max(1);
+    (1..).map(|k| k * q).take_while(|&a| a < dim).collect()
+}
+
+/// All side lengths reachable from `dim` by recursive guillotine cuts on
+/// the quantum grid — the fixpoint that lets stage A pre-cost every
+/// rectangle the cut-tree DP can visit, in parallel.
+fn reachable_dims(dim: usize, quantum: usize) -> Vec<usize> {
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
+    seen.insert(dim);
+    let mut work = vec![dim];
+    while let Some(h) = work.pop() {
+        for a in cut_positions(h, quantum) {
+            for side in [a, h - a] {
+                if seen.insert(side) {
+                    work.push(side);
+                }
+            }
+        }
+    }
+    seen.into_iter().collect()
+}
+
 /// Context fingerprints the canned scenarios can reach under `cfg` at the
-/// default quantum: full-array plus every candidate region config, per
-/// task. The CLI unions this into the live set of *every* cache save
-/// (`dse`, `e2e --tuned`, `cosched`), so one shared persistent cache file
-/// keeps default co-scheduling warm instead of having another
-/// subcommand's save prune its region-config entries as stale.
+/// default quantum, for *both* partition families. The CLI unions this
+/// into the live set of *every* cache save (`dse`, `e2e --tuned`,
+/// `cosched`, `serve`), so one shared persistent cache file keeps default
+/// co-scheduling — bands and guillotine alike — warm instead of having
+/// another subcommand's save prune its region-config entries as stale.
 /// Non-default quanta or hand-built scenarios stay warm through their own
 /// run's saves (touched contexts are always live) but may be pruned by
 /// other subcommands' saves — keep those in a separate `--cache-file`.
 pub fn canned_live_contexts(cfg: &ArchConfig) -> HashSet<u64> {
     let mut out = HashSet::new();
-    let quantum = CoschedConfig::default().quantum;
     for sc in super::scenario::canned_scenarios() {
-        let n = sc.tasks.len();
-        if cfg.pe_cols < n {
-            continue;
+        for partition in [PartitionKind::Bands, PartitionKind::Guillotine] {
+            let cs = CoschedConfig {
+                partition,
+                ..CoschedConfig::default()
+            };
+            out.extend(scenario_contexts(&sc, cfg, &cs));
         }
-        let widths = candidate_widths(cfg.pe_cols, n, quantum);
-        out.extend(scenario_contexts(&sc, cfg, &widths));
     }
     out
 }
 
-/// Context fingerprints one scenario can reach under `cfg` with the given
-/// candidate widths: full-array plus every candidate region config, per
-/// task (costs are translation-invariant, so `col0` never matters). The
-/// single source of truth for both a run's reported live set and the
-/// canned static one — they must enumerate identically or cache eviction
-/// would wrongly prune warm entries.
-fn scenario_contexts(scenario: &Scenario, cfg: &ArchConfig, widths: &[usize]) -> HashSet<u64> {
+/// Context fingerprints one scenario can reach under `cfg` and `cs`:
+/// full-array plus every candidate band config per task, and — under the
+/// guillotine partitioner — every reachable rectangle × per-region
+/// topology (costs are translation-invariant, so `row0`/`col0` never
+/// matter). The single source of truth for both a run's reported live set
+/// and the canned static one — they must enumerate identically or cache
+/// eviction would wrongly prune warm entries.
+fn scenario_contexts(scenario: &Scenario, cfg: &ArchConfig, cs: &CoschedConfig) -> HashSet<u64> {
     let mut out = HashSet::new();
+    let n = scenario.tasks.len();
+    if n == 0 || cfg.pe_cols < n {
+        return out;
+    }
+    let widths = candidate_widths(cfg.pe_cols, n, cs.quantum);
+    let grid = if cs.partition == PartitionKind::Guillotine {
+        Some((
+            reachable_dims(cfg.pe_rows, cs.quantum),
+            reachable_dims(cfg.pe_cols, cs.quantum),
+            region_topologies(cfg),
+        ))
+    } else {
+        None
+    };
     for spec in &scenario.tasks {
         out.insert(context_fingerprint(&spec.graph, cfg));
-        for &width in widths {
-            let region = Region {
-                row0: 0,
-                col0: 0,
-                rows: cfg.pe_rows,
-                cols: width,
-            };
-            out.insert(context_fingerprint(&spec.graph, &region_config(cfg, &region)));
+        for &width in &widths {
+            out.insert(context_fingerprint(
+                &spec.graph,
+                &region_topo_config(cfg, cfg.pe_rows, width, cfg.topology),
+            ));
+        }
+        if let Some((rset, cset, topos)) = &grid {
+            for &r in rset {
+                for &c in cset {
+                    for &topo in topos {
+                        out.insert(context_fingerprint(
+                            &spec.graph,
+                            &region_topo_config(cfg, r, c, topo),
+                        ));
+                    }
+                }
+            }
         }
     }
     out
@@ -336,12 +443,197 @@ fn lookup<'a>(
     table[task][wi].as_ref().expect("stage A filled the table")
 }
 
+/// Lazily planned-and-costed (task × rectangle × topology) entries for
+/// the guillotine search — pre-warmed in parallel over the reachable
+/// rectangle grid and stage A's band entries; anything else (only the
+/// vertical-band seed's off-grid widths, in practice) is costed on first
+/// use through the same shared `EvalCache`.
+struct CostTable<'a> {
+    scenario: &'a Scenario,
+    cfg: &'a ArchConfig,
+    cs: &'a CoschedConfig,
+    cache: &'a EvalCache,
+    run: &'a RunCounters,
+    map: RefCell<HashMap<(usize, usize, usize, TopologyKind), Rc<PlannedCost>>>,
+}
+
+impl CostTable<'_> {
+    fn insert(&self, task: usize, rows: usize, cols: usize, topo: TopologyKind, pc: PlannedCost) {
+        self.map
+            .borrow_mut()
+            .entry((task, rows, cols, topo))
+            .or_insert_with(|| Rc::new(pc));
+    }
+
+    fn contains(&self, task: usize, rows: usize, cols: usize, topo: TopologyKind) -> bool {
+        self.map.borrow().contains_key(&(task, rows, cols, topo))
+    }
+
+    fn cost(&self, task: usize, rows: usize, cols: usize, topo: TopologyKind) -> Rc<PlannedCost> {
+        if let Some(pc) = self.map.borrow().get(&(task, rows, cols, topo)) {
+            return Rc::clone(pc);
+        }
+        let rcfg = region_topo_config(self.cfg, rows, cols, topo);
+        let pc = Rc::new(plan_in(
+            &self.scenario.tasks[task].graph,
+            &rcfg,
+            self.cs,
+            self.cache,
+            self.run,
+        ));
+        Rc::clone(
+            self.map
+                .borrow_mut()
+                .entry((task, rows, cols, topo))
+                .or_insert(pc),
+        )
+    }
+}
+
+/// A guillotine-DP label: one frame's objective vector for a (rectangle,
+/// task-set) state plus the cut tree realizing it. Composition mirrors
+/// the band labels: makespan/load by `max`, energy/DRAM by sum.
+#[derive(Debug, Clone)]
+struct GLabel {
+    makespan: f64,
+    energy: f64,
+    dram: u64,
+    load: f64,
+    tree: CutTree,
+}
+
+impl ParetoPoint for GLabel {
+    fn objectives(&self) -> [f64; 4] {
+        [self.makespan, self.energy, self.dram as f64, self.load]
+    }
+}
+
+/// The beam over cut trees: a memoized DP on (rectangle dims, task set)
+/// states. Single-task states pick the best per-region topology; larger
+/// states enumerate cut axis × quantum-grid position × every proper
+/// task-subset split, composing child Pareto sets and pruning each state
+/// to `max_labels` lowest-makespan-first (so the makespan optimum over
+/// the cut grid always survives). Dims are translation-invariant, which
+/// is what makes the memoization sound.
+struct GuillotineSearch<'a, 'b> {
+    table: &'b CostTable<'a>,
+    /// Per-task invocations per frame (frame-scales energy/DRAM/busy).
+    inv: &'b [f64],
+    topos: Vec<TopologyKind>,
+    quantum: usize,
+    max_labels: usize,
+    memo: HashMap<(usize, usize, u32), Vec<GLabel>>,
+}
+
+impl GuillotineSearch<'_, '_> {
+    fn solve(&mut self, rows: usize, cols: usize, mask: u32) -> Vec<GLabel> {
+        if let Some(v) = self.memo.get(&(rows, cols, mask)) {
+            return v.clone();
+        }
+        let count = mask.count_ones() as usize;
+        let mut labels: Vec<GLabel> = Vec::new();
+        if count == 1 {
+            let task = mask.trailing_zeros() as usize;
+            let topos = self.topos.clone();
+            for topo in topos {
+                let pc = self.table.cost(task, rows, cols, topo);
+                labels.push(GLabel {
+                    makespan: pc.cycles * self.inv[task],
+                    energy: pc.energy * self.inv[task],
+                    dram: pc.dram_words.saturating_mul(self.inv[task] as u64),
+                    load: pc.worst_load,
+                    tree: CutTree::Leaf {
+                        task,
+                        topology: topo,
+                    },
+                });
+            }
+        } else if rows * cols >= count {
+            for (axis, dim) in [(CutAxis::Vertical, cols), (CutAxis::Horizontal, rows)] {
+                for at in cut_positions(dim, self.quantum) {
+                    // Every proper non-empty subset goes to the low side
+                    // once; the complement takes the high side. Both
+                    // orientations are enumerated (the grid need not be
+                    // symmetric around the cut), so nothing is lost.
+                    let mut lo = mask.wrapping_sub(1) & mask;
+                    while lo != 0 {
+                        let hi = mask & !lo;
+                        let ((lr, lc), (hr, hc)) = match axis {
+                            CutAxis::Vertical => ((rows, at), (rows, cols - at)),
+                            CutAxis::Horizontal => ((at, cols), (rows - at, cols)),
+                        };
+                        if lr * lc >= lo.count_ones() as usize
+                            && hr * hc >= hi.count_ones() as usize
+                        {
+                            let lo_labels = self.solve(lr, lc, lo);
+                            let hi_labels = self.solve(hr, hc, hi);
+                            for a in &lo_labels {
+                                for b in &hi_labels {
+                                    labels.push(GLabel {
+                                        makespan: a.makespan.max(b.makespan),
+                                        energy: a.energy + b.energy,
+                                        dram: a.dram.saturating_add(b.dram),
+                                        load: a.load.max(b.load),
+                                        tree: CutTree::Cut {
+                                            axis,
+                                            at,
+                                            low: Box::new(a.tree.clone()),
+                                            high: Box::new(b.tree.clone()),
+                                        },
+                                    });
+                                }
+                            }
+                            if labels.len() > 8 * self.max_labels {
+                                prune_labels(&mut labels, self.max_labels);
+                            }
+                        }
+                        lo = lo.wrapping_sub(1) & mask;
+                    }
+                }
+            }
+        }
+        prune_labels(&mut labels, self.max_labels);
+        self.memo.insert((rows, cols, mask), labels.clone());
+        labels
+    }
+}
+
+/// Objectives of a complete cut tree, costed through the table — used to
+/// seed the vertical-band winner into the guillotine finals (its leaf
+/// costs were already computed by stage A, so this is pure lookup).
+fn tree_label(
+    tree: &CutTree,
+    rows: usize,
+    cols: usize,
+    table: &CostTable<'_>,
+    inv: &[f64],
+) -> Result<GLabel, String> {
+    let (partition, topos) = tree.partition(rows, cols)?;
+    let mut lab = GLabel {
+        makespan: 0.0,
+        energy: 0.0,
+        dram: 0,
+        load: 0.0,
+        tree: tree.clone(),
+    };
+    for (task, (region, &topo)) in partition.regions.iter().zip(&topos).enumerate() {
+        let pc = table.cost(task, region.rows, region.cols, topo);
+        lab.makespan = lab.makespan.max(pc.cycles * inv[task]);
+        lab.energy += pc.energy * inv[task];
+        lab.dram = lab
+            .dram
+            .saturating_add(pc.dram_words.saturating_mul(inv[task] as u64));
+        lab.load = lab.load.max(pc.worst_load);
+    }
+    Ok(lab)
+}
+
 /// Co-schedule one scenario onto the array described by `cfg`.
 ///
 /// The cache is caller-owned and shared: pass one hydrated via
 /// `EvalCache::load_file` to warm-start repeated scenarios across
-/// processes. `workers` parallelizes the per-(task, width) costing sweep;
-/// the DP itself is exact and cheap.
+/// processes. `workers` parallelizes the per-(task, region) costing sweep;
+/// the DPs themselves are exact and cheap.
 pub fn schedule(
     scenario: &Scenario,
     cfg: &ArchConfig,
@@ -351,10 +643,18 @@ pub fn schedule(
 ) -> Result<CoschedResult, String> {
     scenario.validate()?;
     let n = scenario.tasks.len();
+    let rows = cfg.pe_rows;
     let cols = cfg.pe_cols;
     if cols < n {
         return Err(format!(
             "scenario `{}` has {n} tasks but the array has only {cols} columns",
+            scenario.name
+        ));
+    }
+    if cs.partition == PartitionKind::Guillotine && n > 8 {
+        return Err(format!(
+            "scenario `{}` has {n} tasks; the guillotine search supports at most 8 \
+             (use --partition bands)",
             scenario.name
         ));
     }
@@ -376,13 +676,7 @@ pub fn schedule(
                 (task, None, pc)
             }
             Job::Width { task, width } => {
-                let region = Region {
-                    row0: 0,
-                    col0: 0,
-                    rows: cfg.pe_rows,
-                    cols: width,
-                };
-                let rcfg = region_config(cfg, &region);
+                let rcfg = region_topo_config(cfg, rows, width, cfg.topology);
                 let pc = plan_in(&scenario.tasks[task].graph, &rcfg, cs, cache, &run);
                 (task, Some(width), pc)
             }
@@ -400,7 +694,7 @@ pub fn schedule(
     }
 
     // The live-context set this run can hit (see `scenario_contexts`).
-    let contexts = scenario_contexts(scenario, cfg, &widths);
+    let contexts = scenario_contexts(scenario, cfg, cs);
 
     let inv: Vec<f64> = scenario.tasks.iter().map(|t| t.invocations() as f64).collect();
 
@@ -446,7 +740,7 @@ pub fn schedule(
             }
         }
         for labels in next.iter_mut() {
-            prune_alloc(labels, cs.max_labels);
+            prune_labels(labels, cs.max_labels);
         }
         states = next;
     }
@@ -484,27 +778,106 @@ pub fn schedule(
         })
         .expect("the even-split seed is always present");
 
+    // ---- shared cost table (both partition families draw from it) --------
+    let cost_table = CostTable {
+        scenario,
+        cfg,
+        cs,
+        cache,
+        run: &run,
+        map: RefCell::new(HashMap::new()),
+    };
+    for (task, row) in table.iter().enumerate() {
+        for (wi, pc) in row.iter().enumerate() {
+            if let Some(pc) = pc {
+                cost_table.insert(task, rows, widths[wi], cfg.topology, pc.clone());
+            }
+        }
+    }
+
+    // The 1-D winner as a cut tree (unused trailing columns become an
+    // explicit idle rectangle, so realized regions match the DP label
+    // exactly): the bands result itself, and the seed that makes the
+    // guillotine search never-lose against it.
+    let bands_tree = CutTree::vertical_bands(&best.widths, cols, cfg.topology);
+
+    // ---- stage C (guillotine only): beam over cut trees ------------------
+    let cut_tree = match cs.partition {
+        PartitionKind::Bands => bands_tree,
+        PartitionKind::Guillotine => {
+            let topos = region_topologies(cfg);
+            // Pre-cost every rectangle on the cut grid, in parallel.
+            let rset = reachable_dims(rows, cs.quantum);
+            let cset = reachable_dims(cols, cs.quantum);
+            let mut grid_jobs: Vec<(usize, usize, usize, TopologyKind)> = Vec::new();
+            for task in 0..n {
+                for &r in &rset {
+                    for &c in &cset {
+                        for &topo in &topos {
+                            if !cost_table.contains(task, r, c, topo) {
+                                grid_jobs.push((task, r, c, topo));
+                            }
+                        }
+                    }
+                }
+            }
+            let costed = run_queue(grid_jobs, workers, |(task, r, c, topo)| {
+                let rcfg = region_topo_config(cfg, r, c, topo);
+                let pc = plan_in(&scenario.tasks[task].graph, &rcfg, cs, cache, &run);
+                (task, r, c, topo, pc)
+            });
+            for (task, r, c, topo, pc) in costed {
+                cost_table.insert(task, r, c, topo, pc);
+            }
+            let mut gs = GuillotineSearch {
+                table: &cost_table,
+                inv: &inv,
+                topos,
+                quantum: cs.quantum,
+                max_labels: cs.max_labels,
+                memo: HashMap::new(),
+            };
+            let mut gfinals = gs.solve(rows, cols, (1u32 << n) - 1);
+            // Seed the vertical-band winner: 2-D never loses to 1-D.
+            gfinals.push(tree_label(&bands_tree, rows, cols, &cost_table, &inv)?);
+            gfinals
+                .into_iter()
+                .min_by(|a, b| {
+                    (a.makespan, a.energy)
+                        .partial_cmp(&(b.makespan, b.energy))
+                        .expect("objectives are finite")
+                })
+                .expect("the vertical-band seed is always present")
+                .tree
+        }
+    };
+
     // ---- assemble the three reported outcomes ----------------------------
-    let spatial_outcome = |mode: &'static str, widths_of: &[usize]| -> CoschedOutcome {
-        let partition = RegionPartition::vertical(cfg.pe_rows, cols, widths_of);
+    let band_outcome = |mode: &'static str, widths_of: &[usize]| -> CoschedOutcome {
+        let partition = RegionPartition::vertical(rows, cols, widths_of);
         let assignments: Vec<TaskAssignment> = scenario
             .tasks
             .iter()
             .zip(&partition.regions)
             .enumerate()
             .map(|(task, (spec, &region))| {
-                assignment(spec, region, lookup(&table, &widths, task, region.cols), cfg)
+                assignment(
+                    spec,
+                    region,
+                    cfg.topology,
+                    lookup(&table, &widths, task, region.cols),
+                    cfg,
+                )
             })
             .collect();
         outcome(mode, assignments, false)
     };
-    let even_outcome = spatial_outcome("even_split", &even);
-    let cosched_outcome = spatial_outcome("cosched", &best.widths);
+    let even_outcome = band_outcome("even_split", &even);
 
     let full = Region {
         row0: 0,
         col0: 0,
-        rows: cfg.pe_rows,
+        rows,
         cols,
     };
     let solo_assignments: Vec<TaskAssignment> = scenario
@@ -513,20 +886,35 @@ pub fn schedule(
         .enumerate()
         .map(|(task, spec)| {
             let pc = solo[task].as_ref().expect("stage A filled solo plans");
-            assignment(spec, full, pc, cfg)
+            assignment(spec, full, cfg.topology, pc, cfg)
         })
         .collect();
     let solo_outcome = outcome("solo", solo_assignments, true);
 
-    // Compose the winner's whole-array placement (structural non-overlap).
-    let partition = RegionPartition::vertical(cfg.pe_rows, cols, &best.widths);
-    partition.validate()?;
+    // The winner, realized: regions indexed by task, costed through the
+    // shared table (pure lookups), composed into a validated whole-array
+    // placement (structural non-overlap).
+    let (partition, region_topos) = cut_tree.partition(rows, cols)?;
+    let cosched_assignments: Vec<TaskAssignment> = scenario
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(task, spec)| {
+            let region = partition.regions[task];
+            let topo = region_topos[task];
+            let pc = cost_table.cost(task, region.rows, region.cols, topo);
+            assignment(spec, region, topo, &pc, cfg)
+        })
+        .collect();
+    let cosched_outcome = outcome("cosched", cosched_assignments, false);
+
     let placements: Vec<Placement> = partition
         .regions
         .iter()
         .enumerate()
         .map(|(task, region)| {
-            representative_placement(lookup(&table, &widths, task, region.cols), region)
+            let pc = cost_table.cost(task, region.rows, region.cols, region_topos[task]);
+            representative_placement(&pc, region)
         })
         .collect();
     let placement = ScenarioPlacement::compose(&partition, &placements)?;
@@ -534,6 +922,8 @@ pub fn schedule(
     let stats = run.stats();
     Ok(CoschedResult {
         scenario: scenario.name.clone(),
+        partition: cs.partition,
+        cut_tree,
         solo: solo_outcome,
         even_split: even_outcome,
         cosched: cosched_outcome,
@@ -548,6 +938,7 @@ pub fn schedule(
 fn assignment(
     spec: &super::scenario::TaskSpec,
     region: Region,
+    topology: TopologyKind,
     pc: &PlannedCost,
     cfg: &ArchConfig,
 ) -> TaskAssignment {
@@ -556,6 +947,7 @@ fn assignment(
     TaskAssignment {
         task: spec.name().to_string(),
         region,
+        topology,
         rate_hz: spec.rate_hz,
         invocations,
         latency_cycles: pc.cycles,
@@ -646,6 +1038,21 @@ mod tests {
     }
 
     #[test]
+    fn cut_grid_helpers_cover_the_quantum_lattice() {
+        assert_eq!(cut_positions(16, 4), vec![4, 8, 12]);
+        assert_eq!(cut_positions(4, 4), Vec::<usize>::new());
+        assert_eq!(cut_positions(17, 8), vec![8, 16]);
+        let dims = reachable_dims(16, 4);
+        assert_eq!(dims, vec![4, 8, 12, 16]);
+        // Non-multiple array sides reach both residue classes.
+        let dims = reachable_dims(17, 8);
+        assert!(dims.contains(&17) && dims.contains(&8) && dims.contains(&9));
+        for &d in &dims {
+            assert!((1..=17).contains(&d));
+        }
+    }
+
+    #[test]
     fn cosched_never_loses_to_even_split_on_synthetic_scenario() {
         let cfg = small_cfg();
         let cs = CoschedConfig::default();
@@ -657,16 +1064,64 @@ mod tests {
             r.even_split.makespan_cycles
         );
         assert!(r.speedup() >= 0.9999);
+        assert_eq!(r.partition, PartitionKind::Bands);
         // Two tasks assigned, regions non-overlapping, everything positive.
         for o in [&r.solo, &r.even_split, &r.cosched] {
             assert_eq!(o.assignments.len(), 2, "{}", o.mode);
             assert!(o.makespan_cycles > 0.0 && o.energy > 0.0, "{}", o.mode);
             for a in &o.assignments {
                 assert!(a.latency_cycles > 0.0 && a.busy_cycles >= a.latency_cycles);
+                assert_eq!(a.topology, cfg.topology, "bands keep the array topology");
             }
         }
         assert!(r.evaluations > 0);
         assert!(!r.contexts.is_empty());
+        // The bands winner round-trips through its cut tree.
+        let (p, topos) = r.cut_tree.partition(cfg.pe_rows, cfg.pe_cols).unwrap();
+        let regions: Vec<Region> = r.cosched.assignments.iter().map(|a| a.region).collect();
+        assert_eq!(p.regions, regions);
+        assert_eq!(topos, vec![cfg.topology; 2]);
+    }
+
+    #[test]
+    fn guillotine_never_loses_to_bands_on_synthetic_scenario() {
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let bands = schedule(
+            &tiny_scenario(),
+            &cfg,
+            &CoschedConfig::default(),
+            &cache,
+            2,
+        )
+        .unwrap();
+        let gcs = CoschedConfig {
+            partition: PartitionKind::Guillotine,
+            ..CoschedConfig::default()
+        };
+        let g = schedule(&tiny_scenario(), &cfg, &gcs, &cache, 2).unwrap();
+        assert_eq!(g.partition, PartitionKind::Guillotine);
+        assert!(
+            g.cosched.makespan_cycles <= bands.cosched.makespan_cycles * 1.0001,
+            "guillotine {} vs bands {}",
+            g.cosched.makespan_cycles,
+            bands.cosched.makespan_cycles
+        );
+        // The winner's tree realizes exactly the reported regions and
+        // topologies, and the composed placement tiles the array.
+        let (p, topos) = g.cut_tree.partition(cfg.pe_rows, cfg.pe_cols).unwrap();
+        for (task, a) in g.cosched.assignments.iter().enumerate() {
+            assert_eq!(p.regions[task], a.region);
+            assert_eq!(topos[task], a.topology);
+            assert!(a.region.num_pes() > 0);
+        }
+        let owned: usize = (0..2).map(|t| g.placement.task_pes(t)).sum();
+        assert_eq!(owned + g.placement.idle_pes(), cfg.num_pes());
+        // Guillotine live contexts strictly contain the band ones.
+        let band_ctx: HashSet<u64> = bands.contexts.iter().copied().collect();
+        let g_ctx: HashSet<u64> = g.contexts.iter().copied().collect();
+        assert!(band_ctx.is_subset(&g_ctx));
+        assert!(g_ctx.len() > band_ctx.len());
     }
 
     #[test]
@@ -689,13 +1144,17 @@ mod tests {
     fn shared_cache_makes_rescheduling_free() {
         let cfg = small_cfg();
         let cache = EvalCache::new();
-        let cs = CoschedConfig::default();
+        let cs = CoschedConfig {
+            partition: PartitionKind::Guillotine,
+            ..CoschedConfig::default()
+        };
         let cold = schedule(&tiny_scenario(), &cfg, &cs, &cache, 1).unwrap();
         assert!(cold.evaluations > 0);
         let warm = schedule(&tiny_scenario(), &cfg, &cs, &cache, 1).unwrap();
         assert_eq!(warm.evaluations, 0, "warm reschedule must be all hits");
         assert!(warm.cache_hits > 0);
         assert_eq!(warm.cosched.makespan_cycles, cold.cosched.makespan_cycles);
+        assert_eq!(warm.cut_tree, cold.cut_tree, "memoized reschedule agrees");
     }
 
     #[test]

@@ -7,17 +7,17 @@
 //! of it. This subsystem searches the space directly so the heuristic can
 //! be measured against a true optimum:
 //!
-//! - [`space`]: enumerate candidate segments — every contiguous layer
+//! - `space`: enumerate candidate segments — every contiguous layer
 //!   partition up to a depth cap, crossed with a granularity ladder
 //!   (powers of 4 over the Algorithm-1 finest granularity) and the oracle
 //!   organization candidates, on each NoC topology;
-//! - [`cache`]: a sharded, memoized evaluation cache so a sub-plan shared
+//! - `cache`: a sharded, memoized evaluation cache so a sub-plan shared
 //!   by many candidate partitions is costed through `cost::evaluate_segment`
 //!   exactly once;
-//! - [`search`]: exhaustive and beam-width-bounded multi-objective dynamic
+//! - `search`: exhaustive and beam-width-bounded multi-objective dynamic
 //!   programming over segment boundaries (per-segment costs are additive,
 //!   so Pareto-optimal plans have Pareto-optimal prefixes);
-//! - [`pareto`]: extraction of the latency/energy/DRAM-traffic frontier
+//! - `pareto`: extraction of the latency/energy/DRAM-traffic frontier
 //!   (plus, behind [`DseConfig::channel_load_objective`], the Fig. 15
 //!   worst-channel-load axis, so congestion-free trade-offs stay visible).
 //!

@@ -35,10 +35,13 @@
 //! <n>` (shared persistent cache for the tuned sweep).
 //!
 //! `cosched`-only flags: `--scenario <name|all>` (canned XR scenarios,
-//! comma lists allowed), `--quantum <cols>` (region width quantum),
-//! `--tuned`, `--budget <n>`, `--cache-file <file>`, `--cache-cap <n>`.
+//! comma lists allowed), `--partition <bands|guillotine>` (vertical bands
+//! vs 2-D guillotine rectangles with per-region topology choice),
+//! `--quantum <cols>` (region width / cut-grid quantum), `--tuned`,
+//! `--budget <n>`, `--cache-file <file>`, `--cache-cap <n>`.
 //!
-//! `serve`-only flags: `--scenario <name|all>`, `--policy
+//! `serve`-only flags: `--scenario <name|all>`, `--partition
+//! <bands|guillotine>` (partition family of the served plan), `--policy
 //! <fifo|edf|rm|all>` (comma lists allowed), `--arrivals
 //! <periodic|jittered|poisson>`, `--duration-s <s>`, `--rate-mult <x>`,
 //! `--borrow` (cross-task region borrowing), `--bandwidth
@@ -61,7 +64,7 @@ use pipeorgan::report;
 use pipeorgan::serve::{self, ServeConfig, SERVE_FLAGS};
 use pipeorgan::workloads;
 
-const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N] [cosched: --scenario NAME|all --quantum N --tuned --budget N --cache-file FILE --cache-cap N] [serve: --scenario NAME|all --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N]";
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N]";
 
 const FLAGS: &[(&str, bool)] = &[
     ("out", true),
@@ -297,8 +300,13 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
             }
             for r in &results {
                 println!(
-                    "{}: co-scheduled makespan {:.3e} cycles ({:.2}x vs naive even split)",
-                    r.scenario, r.cosched.makespan_cycles, r.speedup()
+                    "{}: co-scheduled makespan {:.3e} cycles ({:.2}x vs naive even split) \
+                     [{} {}]",
+                    r.scenario,
+                    r.cosched.makespan_cycles,
+                    r.speedup(),
+                    r.partition.name(),
+                    r.cut_tree.encode()
                 );
             }
             emit(vec![report::cosched_report(&cfg, &results)])?;

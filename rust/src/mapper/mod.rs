@@ -172,7 +172,7 @@ fn plan_segment(graph: &ModelGraph, cfg: &ArchConfig, seg: &Segment) -> PlannedS
     plan_segment_scaled(graph, cfg, seg, 1)
 }
 
-/// [`plan_segment`] generalized over a granularity-ladder rung: every
+/// `plan_segment` generalized over a granularity-ladder rung: every
 /// handoff's Algorithm-1 finest granularity is multiplied by `gran_scale`
 /// before clamping, so `gran_scale == 1` reproduces the heuristic mapper's
 /// segment exactly and powers of 4 walk toward whole-tensor handoffs. The

@@ -16,7 +16,9 @@ fn outcome_json(o: &CoschedOutcome) -> Json {
         t.set("task", a.task.clone())
             .set("region_rows", a.region.rows)
             .set("region_cols", a.region.cols)
+            .set("region_row0", a.region.row0)
             .set("region_col0", a.region.col0)
+            .set("topology", a.topology.name())
             .set("rate_hz", a.rate_hz)
             .set("invocations", a.invocations)
             .set("latency_cycles", a.latency_cycles)
@@ -40,8 +42,10 @@ fn outcome_json(o: &CoschedOutcome) -> Json {
 }
 
 /// One table row per (scenario, mode, task) plus a MAKESPAN rollup row per
-/// mode; JSON mirrors the full nested structure (including the ASCII
-/// occupancy rendering of the co-scheduled placement).
+/// mode whose `cut tree` cell carries the winning partition's compact
+/// [`crate::cosched::CutTree::encode`] rendering; JSON mirrors the full
+/// nested structure (per-region geometry and topology, the serialized cut
+/// tree, and the ASCII occupancy rendering of the co-scheduled placement).
 pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
     let mut table = Table::new(
         "Cosched — concurrent XR tasks on one shared PE array",
@@ -50,6 +54,7 @@ pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
             "mode",
             "task",
             "region",
+            "topo",
             "rate Hz",
             "latency cycles",
             "busy cycles",
@@ -57,6 +62,7 @@ pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
             "slack ms",
             "frame energy",
             "worst chan load",
+            "cut tree",
         ],
     );
     let mut json = Json::obj();
@@ -69,7 +75,11 @@ pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
                     r.scenario.clone(),
                     o.mode.to_string(),
                     a.task.clone(),
-                    format!("{}x{}@c{}", a.region.rows, a.region.cols, a.region.col0),
+                    format!(
+                        "{}x{}@r{}c{}",
+                        a.region.rows, a.region.cols, a.region.row0, a.region.col0
+                    ),
+                    a.topology.name().to_string(),
                     fnum(a.rate_hz),
                     fnum(a.latency_cycles),
                     fnum(a.busy_cycles),
@@ -79,6 +89,7 @@ pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
                     format!("{}{}", fnum(slack), if slack < 0.0 { " !" } else { "" }),
                     fnum(a.frame_energy()),
                     fnum(a.worst_channel_load),
+                    "".into(),
                 ]);
             }
             table.row(&[
@@ -88,15 +99,24 @@ pub fn cosched_report(cfg: &ArchConfig, results: &[CoschedResult]) -> Report {
                 "".into(),
                 "".into(),
                 "".into(),
+                "".into(),
                 fnum(o.makespan_cycles),
                 "".into(),
                 "".into(),
                 fnum(o.energy),
                 "".into(),
+                if o.mode == "cosched" {
+                    r.cut_tree.encode()
+                } else {
+                    "".into()
+                },
             ]);
         }
         let mut s = Json::obj();
         s.set("scenario", r.scenario.clone())
+            .set("partition", r.partition.name())
+            .set("cut_tree", r.cut_tree.to_json())
+            .set("cut_tree_str", r.cut_tree.encode())
             .set("speedup_vs_even_split", r.speedup())
             .set("evaluations", r.evaluations)
             .set("cache_hits", r.cache_hits)
@@ -154,8 +174,35 @@ mod tests {
         crate::util::json::Json::parse(&text).unwrap();
         assert!(text.contains("speedup_vs_even_split"), "{text}");
         assert!(text.contains("slack_ms"), "{text}");
+        assert!(text.contains("cut_tree"), "{text}");
+        assert!(text.contains("topology"), "{text}");
         // 2 tasks × 3 modes + 3 makespan rows.
         assert_eq!(r.table.rows.len(), 9);
+    }
+
+    #[test]
+    fn cut_tree_round_trips_through_the_emitted_json() {
+        use crate::cosched::CutTree;
+        let cfg = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        let rs = results();
+        let report = cosched_report(&cfg, &rs);
+        let parsed = crate::util::json::Json::parse(&report.json.to_pretty()).unwrap();
+        let scenarios = parsed.get("scenarios").and_then(|s| s.as_arr()).unwrap();
+        let tree_json = scenarios[0].get("cut_tree").unwrap();
+        let tree = CutTree::from_json(tree_json).unwrap();
+        assert_eq!(tree, rs[0].cut_tree, "serialized plan must round-trip");
+        assert_eq!(
+            scenarios[0].get("cut_tree_str").and_then(|v| v.as_str()),
+            Some(rs[0].cut_tree.encode().as_str())
+        );
+        assert_eq!(
+            scenarios[0].get("partition").and_then(|v| v.as_str()),
+            Some("bands")
+        );
     }
 
     #[test]

@@ -128,7 +128,25 @@ pub fn serve_reports(cfg: &ArchConfig, sv: &ServeConfig, runs: &[ServeRun]) -> V
         for o in &r.outcomes {
             outcomes.push(outcome_json(o));
         }
+        // Per-region geometry of the plan being served (home region of
+        // task `i` at index `i`), plus the cut tree that produced it —
+        // serialized so external tooling can reconstruct the partition.
+        let mut regions = Json::Arr(vec![]);
+        for (i, (region, &topo)) in r.plan.regions.iter().zip(&r.plan.topologies).enumerate() {
+            let mut g = Json::obj();
+            g.set("task", r.plan.cosched.cosched.assignments[i].task.clone())
+                .set("row0", region.row0)
+                .set("col0", region.col0)
+                .set("rows", region.rows)
+                .set("cols", region.cols)
+                .set("topology", topo.name())
+                .set("entitlement_bytes_per_cycle", r.plan.entitlements[i]);
+            regions.push(g);
+        }
         s.set("scenario", r.scenario.clone())
+            .set("partition", r.plan.cosched.partition.name())
+            .set("cut_tree", r.plan.cosched.cut_tree.to_json())
+            .set("regions", regions)
             .set("evaluations", r.plan.evaluations)
             .set("cache_hits", r.plan.cache_hits)
             .set("policies", outcomes)
@@ -238,6 +256,19 @@ mod tests {
         assert_eq!(scenarios.len(), 1);
         let policies = scenarios[0].get("policies").and_then(|p| p.as_arr()).unwrap();
         assert_eq!(policies.len(), 2);
+        // Per-region geometry and the serialized cut tree ride along.
+        let regions = scenarios[0].get("regions").and_then(|g| g.as_arr()).unwrap();
+        assert_eq!(regions.len(), 2);
+        for g in regions {
+            assert!(g.get("topology").and_then(|t| t.as_str()).is_some());
+            assert!(g.get("rows").and_then(|x| x.as_usize()).unwrap() > 0);
+        }
+        let tree = crate::cosched::CutTree::from_json(scenarios[0].get("cut_tree").unwrap());
+        assert!(tree.is_ok(), "{tree:?}");
+        assert_eq!(
+            scenarios[0].get("partition").and_then(|p| p.as_str()),
+            Some("bands")
+        );
     }
 
     #[test]

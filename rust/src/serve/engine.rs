@@ -24,7 +24,7 @@
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::config::ArchConfig;
+use crate::config::{ArchConfig, TopologyKind};
 use crate::cosched::{self, region_config, CoschedConfig, CoschedResult, Region, Scenario};
 use crate::cost::{evaluate_segment, Mapper};
 use crate::dse::{context_fingerprint, heuristic_segment_key, EvalCache, RunCounters};
@@ -65,9 +65,13 @@ pub struct ServedCost {
 
 /// The serving plan of one scenario: regions, shares, and service costs.
 pub struct ServePlan {
-    /// Region `i` is task `i`'s home band of the co-scheduled partition.
+    /// Region `i` is task `i`'s home region of the co-scheduled partition
+    /// (a full-height band, or an arbitrary guillotine rectangle).
     pub regions: Vec<Region>,
-    /// Static DRAM bytes/cycle share of each region (plan-time model).
+    /// Per-region NoC topology the co-schedule chose.
+    pub topologies: Vec<TopologyKind>,
+    /// Static DRAM bytes/cycle share of each region (plan-time model;
+    /// proportional to the region's PE share, whatever its shape).
     pub entitlements: Vec<f64>,
     /// Whole-array DRAM bytes/cycle — the pool the dynamic model splits.
     pub total_bandwidth: f64,
@@ -128,24 +132,31 @@ pub enum TraceKind {
     Drop { region: usize },
 }
 
-/// Plan a scenario for serving: co-schedule the partition, then cost every
-/// task on every region (repeat widths hit the shared cache, so the extra
-/// columns of the borrow table are effectively free).
+/// Plan a scenario for serving: co-schedule the partition under `cs`
+/// (bands or guillotine — `ServeConfig::partition` maps onto it), then
+/// cost every task on every region (repeat shapes hit the shared cache,
+/// so the extra columns of the borrow table are effectively free).
 pub fn plan_scenario(
     scenario: &Scenario,
     cfg: &ArchConfig,
+    cs: &CoschedConfig,
     cache: &EvalCache,
     workers: usize,
 ) -> Result<ServePlan, String> {
     scenario.validate()?;
-    let cs = CoschedConfig::default();
-    let cosched = cosched::schedule(scenario, cfg, &cs, cache, workers)?;
+    let cosched = cosched::schedule(scenario, cfg, cs, cache, workers)?;
     let run = RunCounters::new();
     let regions: Vec<Region> = cosched
         .cosched
         .assignments
         .iter()
         .map(|a| a.region)
+        .collect();
+    let topologies: Vec<TopologyKind> = cosched
+        .cosched
+        .assignments
+        .iter()
+        .map(|a| a.topology)
         .collect();
     let entitlements: Vec<f64> = regions
         .iter()
@@ -157,7 +168,8 @@ pub fn plan_scenario(
         .map(|spec| {
             regions
                 .iter()
-                .map(|r| cost_on_region(&spec.graph, cfg, r, cache, &run))
+                .zip(&topologies)
+                .map(|(r, &topo)| cost_on_region(&spec.graph, cfg, r, topo, cache, &run))
                 .collect()
         })
         .collect();
@@ -166,6 +178,7 @@ pub fn plan_scenario(
     let cache_hits = cosched.cache_hits + stats.hits;
     Ok(ServePlan {
         regions,
+        topologies,
         entitlements,
         total_bandwidth: cfg.dram_bytes_per_cycle.max(1e-9),
         clock_hz: cfg.clock_hz.max(1.0),
@@ -178,20 +191,23 @@ pub fn plan_scenario(
     })
 }
 
-/// Plan and cost one task inside one region, through the shared cache at
-/// the same coordinates the DSE and co-scheduler use (heuristic segments
-/// live at granularity scale 1), so serving warm-starts from their files.
+/// Plan and cost one task inside one region on its chosen topology,
+/// through the shared cache at the same coordinates the DSE and
+/// co-scheduler use (heuristic segments live at granularity scale 1), so
+/// serving warm-starts from their files.
 fn cost_on_region(
     graph: &ModelGraph,
     cfg: &ArchConfig,
     region: &Region,
+    topo_kind: TopologyKind,
     cache: &EvalCache,
     run: &RunCounters,
 ) -> ServedCost {
-    // Costs are translation-invariant: only the region's dimensions reach
-    // the config, so borrowed-band costs share entries with home bands of
-    // the same width.
-    let rcfg = region_config(cfg, region);
+    // Costs are translation-invariant: only the region's dimensions and
+    // topology reach the config, so borrowed-region costs share entries
+    // with home regions of the same shape.
+    let mut rcfg = region_config(cfg, region);
+    rcfg.topology = topo_kind;
     let geom_cap = rcfg.pe_rows.min(rcfg.pe_cols).max(1);
     let mapper = PipeOrgan {
         topology: rcfg.topology,
@@ -612,7 +628,11 @@ pub fn run_scenario(
     cache: &EvalCache,
     workers: usize,
 ) -> Result<ServeRun, String> {
-    let plan = plan_scenario(scenario, cfg, cache, workers)?;
+    let cs = CoschedConfig {
+        partition: sv.partition,
+        ..CoschedConfig::default()
+    };
+    let plan = plan_scenario(scenario, cfg, &cs, cache, workers)?;
     let opts = SimOptions {
         borrow: sv.borrow,
         bandwidth: sv.bandwidth,
@@ -673,7 +693,7 @@ mod tests {
         let cfg = small_cfg();
         let cache = EvalCache::new();
         let sc = tiny_scenario();
-        let plan = plan_scenario(&sc, &cfg, &cache, 1).unwrap();
+        let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
         for (t, a) in plan.cosched.cosched.assignments.iter().enumerate() {
             let own = &plan.costs[t][t];
             assert!(
@@ -695,7 +715,7 @@ mod tests {
         let cfg = small_cfg();
         let cache = EvalCache::new();
         let sc = tiny_scenario();
-        let plan = plan_scenario(&sc, &cfg, &cache, 1).unwrap();
+        let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
         // When every home latency fits its deadline (= its period, the
         // TaskSpec default), periodic requests never queue: each finishes
         // before the next arrives, so every policy is miss-free. When the
@@ -726,11 +746,50 @@ mod tests {
     }
 
     #[test]
+    fn guillotine_plan_serves_with_consistent_nominals() {
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let sc = tiny_scenario();
+        let cs = CoschedConfig {
+            partition: crate::cosched::PartitionKind::Guillotine,
+            ..CoschedConfig::default()
+        };
+        let plan = plan_scenario(&sc, &cfg, &cs, &cache, 1).unwrap();
+        assert_eq!(plan.regions.len(), 2);
+        assert_eq!(plan.topologies.len(), 2);
+        // Serve's nominal latency on the home region equals the cosched
+        // assignment's, whatever the region's shape and topology.
+        for (t, a) in plan.cosched.cosched.assignments.iter().enumerate() {
+            assert_eq!(plan.regions[t], a.region);
+            assert_eq!(plan.topologies[t], a.topology);
+            let own = &plan.costs[t][t];
+            assert!(
+                (own.nominal_cycles - a.latency_cycles).abs()
+                    <= 1e-6 * a.latency_cycles.max(1.0),
+                "task {t}: serve nominal {} vs cosched latency {}",
+                own.nominal_cycles,
+                a.latency_cycles
+            );
+        }
+        // Entitlements stay proportional to PE share and inside the pool.
+        let total_pes: usize = plan.regions.iter().map(|r| r.num_pes()).sum();
+        assert!(total_pes <= cfg.num_pes());
+        let granted: f64 = plan.entitlements.iter().sum();
+        assert!(granted <= plan.total_bandwidth * (1.0 + 1e-9));
+        // And the simulator runs end to end on the guillotine plan.
+        let arrivals = periodic_arrivals(&sc, 1.0, 0.1);
+        let out = simulate(&sc, &plan, Policy::Fifo, &arrivals, SimOptions::default());
+        for (t, m) in out.tasks.iter().enumerate() {
+            assert_eq!(m.completed + m.dropped, arrivals[t].len() as u64);
+        }
+    }
+
+    #[test]
     fn simulate_is_deterministic() {
         let cfg = small_cfg();
         let cache = EvalCache::new();
         let sc = tiny_scenario();
-        let plan = plan_scenario(&sc, &cfg, &cache, 1).unwrap();
+        let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
         let arrivals = streams(&sc, &ArrivalProcess::Poisson, 1.0, 0.2, 9);
         let a = simulate(&sc, &plan, Policy::Edf, &arrivals, SimOptions::default());
         let b = simulate(&sc, &plan, Policy::Edf, &arrivals, SimOptions::default());
@@ -744,7 +803,7 @@ mod tests {
         let cfg = small_cfg();
         let cache = EvalCache::new();
         let sc = tiny_scenario();
-        let plan = plan_scenario(&sc, &cfg, &cache, 1).unwrap();
+        let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
         let arrivals = periodic_arrivals(&sc, 4.0, 0.1);
         let stat = simulate(
             &sc,
@@ -781,7 +840,7 @@ mod tests {
         let cfg = small_cfg();
         let cache = EvalCache::new();
         let sc = tiny_scenario();
-        let plan = plan_scenario(&sc, &cfg, &cache, 1).unwrap();
+        let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
         // A rate multiplier that provably overloads every task: the
         // interarrival gap shrinks below a quarter of even the best-case
         // service time, so arrivals pile up while the first request is

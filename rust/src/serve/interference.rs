@@ -1,8 +1,9 @@
 //! Dynamic cross-region DRAM-bandwidth contention.
 //!
 //! The planning stack (`cosched::region_config`) splits off-chip bandwidth
-//! *statically* by PE share: a region of `w` of the array's columns is
-//! costed at `w/W` of the DRAM bytes/cycle, always. That is the right
+//! *statically* by PE share: a region owning `p` of the array's `P` PEs —
+//! a full-height band or any guillotine rectangle, shape never matters —
+//! is costed at `p/P` of the DRAM bytes/cycle, always. That is the right
 //! conservative assumption at plan time — every co-resident task may be
 //! active at once — but it wastes headroom online: whenever a region is
 //! idle, or busy on a compute-bound phase that cannot use its share, the
@@ -187,5 +188,22 @@ mod tests {
     fn all_idle_allocates_nothing() {
         let a = allocate_bandwidth(256.0, &[128.0, 128.0], &[None, None]);
         assert_eq!(a, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn guillotine_shaped_entitlements_split_like_any_other() {
+        // A 2-D partition of a 16×16 array: a 16×8 half plus two 8×8
+        // quadrants → PE shares 1/2, 1/4, 1/4 of a 256 B/cycle pool. The
+        // allocator only ever sees the entitlement vector, so rectangle
+        // shape cannot change any guarantee — floors, demand caps, and
+        // conservation hold exactly as for bands.
+        let e = [128.0, 64.0, 64.0];
+        let d = [Some(40.0), None, Some(500.0)];
+        let a = allocate_bandwidth(256.0, &e, &d);
+        assert!((a[0] - 40.0).abs() < 1e-9, "capped at demand: {a:?}");
+        assert_eq!(a[1], 0.0);
+        // Region 2 keeps its floor and absorbs all donated headroom.
+        assert!(a[2] + 1e-9 >= 64.0, "{a:?}");
+        assert!((total_of(&a) - (40.0 + 216.0)).abs() < 1e-9, "{a:?}");
     }
 }

@@ -6,19 +6,19 @@
 //! level up the deployment: *does that split actually hold up under live
 //! traffic?* Each task's requests arrive on their own clock — strict- or
 //! jittered-periodic frame rates, Poisson streams, or replayed traces
-//! ([`arrivals`]) — queue at the task's region, and are admitted by a
+//! (`arrivals`) — queue at the task's region, and are admitted by a
 //! pluggable dispatcher (FIFO baseline, deadline-aware EDF and
 //! rate-monotonic, with opt-in cross-task region borrowing;
-//! [`dispatch`]). Served latencies come from the same memoized segment
+//! `dispatch`). Served latencies come from the same memoized segment
 //! costs the DSE and co-scheduler share, split into bandwidth-independent
 //! compute floors and DRAM traffic so concurrent regions contend for
 //! off-chip bandwidth *dynamically*: each event epoch re-splits the pool
 //! by demand and DRAM-underutilizing regions donate headroom
-//! ([`interference`]), never serving anyone slower than the static
+//! (`interference`), never serving anyone slower than the static
 //! plan-time split. Per-task tail latencies, deadline-miss rates, queue
 //! depths, utilization and the schedulability verdict — plus a rate sweep
 //! that binary-searches the largest sustainable uniform rate multiplier —
-//! land in [`metrics`], and `pipeorgan serve` + `report::serve` emit it
+//! land in `metrics`, and `pipeorgan serve` + `report::serve` emit it
 //! all.
 //!
 //! Everything is a pure function of `(scenario, config, seed)`: arrivals
@@ -31,6 +31,8 @@ mod dispatch;
 mod engine;
 mod interference;
 mod metrics;
+
+use crate::cosched::PartitionKind;
 
 pub use arrivals::{arrival_times, streams, ArrivalProcess, DEFAULT_JITTER_FRAC};
 pub use dispatch::{select_next, Policy, Request};
@@ -51,6 +53,10 @@ pub struct ServeConfig {
     /// Dispatch policies to replay (all three by default, so the emitted
     /// report is a per-policy comparison on one arrival stream).
     pub policies: Vec<Policy>,
+    /// Region family the underlying co-schedule searches
+    /// (`cosched::PartitionKind`): vertical bands or 2-D guillotine
+    /// rectangles.
+    pub partition: PartitionKind,
     /// Arrival process shared by every task (each at its own rate).
     pub arrivals: ArrivalProcess,
     /// Arrival window in seconds; the simulation runs until the backlog
@@ -72,6 +78,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             policies: Policy::ALL.to_vec(),
+            partition: PartitionKind::Bands,
             arrivals: ArrivalProcess::Periodic,
             duration_s: 1.0,
             rate_mult: 1.0,
@@ -89,6 +96,10 @@ impl ServeConfig {
     pub fn from_cli(args: &crate::cli::Args, seed: u64) -> Result<ServeConfig, String> {
         let defaults = ServeConfig::default();
         let policies = parse_policies(args.get_or("policy", "all"))?;
+        let partition_name = args.get_or("partition", defaults.partition.name());
+        let partition = PartitionKind::from_name(partition_name).ok_or_else(|| {
+            format!("unknown partition kind `{partition_name}` (known: bands, guillotine)")
+        })?;
         let arrivals_name = args.get_or("arrivals", "periodic");
         let arrivals = ArrivalProcess::from_name(arrivals_name).ok_or_else(|| {
             format!(
@@ -113,6 +124,7 @@ impl ServeConfig {
         })?;
         Ok(ServeConfig {
             policies,
+            partition,
             arrivals,
             duration_s,
             rate_mult,
@@ -153,11 +165,12 @@ fn parse_policies(spec: &str) -> Result<Vec<Policy>, String> {
 
 /// Flags accepted by the `serve` subcommand on top of the global ones
 /// (`(name, takes_value)` — the `cli::Args` strict-flag table format).
-/// `--scenario` names canned scenarios exactly as on `cosched`;
+/// `--scenario` and `--partition` behave exactly as on `cosched`;
 /// `--cache-file`/`--cache-cap` manage the persistent evaluation cache
 /// exactly as on `dse`.
 pub const SERVE_FLAGS: &[(&str, bool)] = &[
     ("scenario", true),
+    ("partition", true),
     ("policy", true),
     ("arrivals", true),
     ("duration-s", true),
@@ -190,6 +203,7 @@ mod tests {
         assert!(sv.duration_s > 0.0 && sv.rate_mult > 0.0);
         assert!(!sv.borrow && !sv.sweep);
         assert_eq!(sv.bandwidth, BandwidthModel::Dynamic);
+        assert_eq!(sv.partition, PartitionKind::Bands);
     }
 
     #[test]
@@ -198,6 +212,8 @@ mod tests {
             "serve",
             "--scenario",
             "xr-core",
+            "--partition",
+            "guillotine",
             "--policy",
             "edf,fifo",
             "--arrivals",
@@ -213,6 +229,7 @@ mod tests {
         ])
         .unwrap();
         assert_eq!(sv.policies, vec![Policy::Edf, Policy::Fifo]);
+        assert_eq!(sv.partition, PartitionKind::Guillotine);
         assert_eq!(sv.arrivals, ArrivalProcess::Poisson);
         assert_eq!(sv.duration_s, 0.5);
         assert_eq!(sv.rate_mult, 2.5);
@@ -224,6 +241,7 @@ mod tests {
     #[test]
     fn bad_flags_rejected() {
         assert!(parse_sv(&["serve", "--policy", "lifo"]).is_err());
+        assert!(parse_sv(&["serve", "--partition", "diagonal"]).is_err());
         assert!(parse_sv(&["serve", "--policy", ","]).is_err());
         assert!(parse_sv(&["serve", "--arrivals", "bursty"]).is_err());
         assert!(parse_sv(&["serve", "--bandwidth", "shared"]).is_err());

@@ -4,11 +4,13 @@
 
 use pipeorgan::baselines::{SimbaLike, TangramLike};
 use pipeorgan::config::{ArchConfig, TopologyKind};
+use pipeorgan::cosched::{CutAxis, CutTree};
 use pipeorgan::cost::{evaluate, Mapper};
 use pipeorgan::mapper::PipeOrgan;
 use pipeorgan::prop_assert;
 use pipeorgan::spatial::{allocate_pes, Organization, Placement};
 use pipeorgan::util::proptest_lite;
+use pipeorgan::util::rng::SplitMix64;
 use pipeorgan::workloads::synthetic::random_model;
 
 #[test]
@@ -190,6 +192,115 @@ fn channel_load_invariants_on_random_traffic() {
         );
         // wire length ≥ hops on mesh (unit links), ≥ hops on AMP too
         prop_assert!(a.total_word_wire + 1e-6 >= a.total_word_hops || flows.is_empty());
+        Ok(())
+    });
+}
+
+/// Build a random feasible guillotine tree assigning tasks
+/// `task0..task0 + count` to a `rows × cols` rectangle: random axis/cut/
+/// split first, exhaustive fallback second (one always exists whenever
+/// `rows * cols >= count`, so the builder never fails on feasible input).
+fn random_cut_tree(
+    rng: &mut SplitMix64,
+    task0: usize,
+    count: usize,
+    rows: usize,
+    cols: usize,
+) -> CutTree {
+    assert!(rows * cols >= count && count >= 1);
+    let topology = *rng.choose(&[TopologyKind::Mesh, TopologyKind::Amp]);
+    if count == 1 {
+        return CutTree::Leaf {
+            task: task0,
+            topology,
+        };
+    }
+    let build = |rng: &mut SplitMix64, vertical: bool, at: usize, k1: usize| -> CutTree {
+        let (r1, c1, r2, c2) = if vertical {
+            (rows, at, rows, cols - at)
+        } else {
+            (at, cols, rows - at, cols)
+        };
+        CutTree::Cut {
+            axis: if vertical {
+                CutAxis::Vertical
+            } else {
+                CutAxis::Horizontal
+            },
+            at,
+            low: Box::new(random_cut_tree(rng, task0, k1, r1, c1)),
+            high: Box::new(random_cut_tree(rng, task0 + k1, count - k1, r2, c2)),
+        }
+    };
+    let feasible = |vertical: bool, at: usize, k1: usize| -> bool {
+        let (a1, a2) = if vertical {
+            (rows * at, rows * (cols - at))
+        } else {
+            (at * cols, (rows - at) * cols)
+        };
+        a1 >= k1 && a2 >= count - k1
+    };
+    for _ in 0..8 {
+        let vertical = rng.gen_bool(0.5);
+        let dim = if vertical { cols } else { rows };
+        if dim < 2 {
+            continue;
+        }
+        let at = rng.gen_usize(1, dim);
+        let k1 = rng.gen_usize(1, count);
+        if feasible(vertical, at, k1) {
+            return build(rng, vertical, at, k1);
+        }
+    }
+    for vertical in [true, false] {
+        let dim = if vertical { cols } else { rows };
+        for at in 1..dim {
+            for k1 in 1..count {
+                if feasible(vertical, at, k1) {
+                    return build(rng, vertical, at, k1);
+                }
+            }
+        }
+    }
+    unreachable!("a feasible guillotine cut always exists when area >= count >= 2")
+}
+
+#[test]
+fn random_cut_trees_tile_the_array_exactly_and_round_trip() {
+    proptest_lite::run(200, |rng| {
+        let rows = rng.gen_usize(1, 33);
+        let cols = rng.gen_usize(1, 33);
+        let max_tasks = (rows * cols).min(6);
+        let count = rng.gen_usize(1, max_tasks + 1);
+        let tree = random_cut_tree(rng, 0, count, rows, cols);
+        prop_assert!(
+            tree.num_leaves() == count,
+            "tree has {} leaves, wanted {count}",
+            tree.num_leaves()
+        );
+        let (partition, topos) = tree
+            .partition(rows, cols)
+            .map_err(|e| format!("{rows}x{cols}/{count}: {e}"))?;
+        if let Err(e) = partition.validate() {
+            return Err(format!("{rows}x{cols}/{count}: {e}"));
+        }
+        // No overlap (validate), no gap, and PE counts sum to the array.
+        let total: usize = partition.regions.iter().map(|r| r.num_pes()).sum();
+        prop_assert!(
+            total == rows * cols && partition.idle_pes() == 0,
+            "{rows}x{cols}/{count}: covered {total}, idle {}",
+            partition.idle_pes()
+        );
+        prop_assert!(
+            partition.regions.len() == count && topos.len() == count,
+            "one region and topology per task"
+        );
+        // Serialized plans round-trip through the report JSON path.
+        let json_text = tree.to_json().to_pretty();
+        let parsed = pipeorgan::util::json::Json::parse(&json_text)
+            .map_err(|e| format!("reparse: {e}"))?;
+        let back = CutTree::from_json(&parsed).map_err(|e| format!("from_json: {e}"))?;
+        prop_assert!(back == tree, "cut tree JSON round-trip diverged");
         Ok(())
     });
 }

@@ -7,7 +7,9 @@
 
 use pipeorgan::cli::Args;
 use pipeorgan::config::ArchConfig;
-use pipeorgan::cosched::{canned_scenarios, scenario_by_name, Scenario};
+use pipeorgan::cosched::{
+    canned_scenarios, scenario_by_name, CoschedConfig, PartitionKind, Scenario,
+};
 use pipeorgan::dse::EvalCache;
 use pipeorgan::prop_assert;
 use pipeorgan::serve::{
@@ -40,7 +42,7 @@ fn edf_never_misses_more_than_fifo_on_every_canned_scenario() {
     let cfg = small_cfg();
     let cache = EvalCache::new();
     for sc in canned_scenarios() {
-        let plan = plan_scenario(&sc, &cfg, &cache, 2)
+        let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2)
             .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
         for mult in [1.0, 8.0] {
             let arrivals = periodic_arrivals(&sc, mult, 0.05);
@@ -78,7 +80,7 @@ fn rm_never_misses_more_than_fifo_on_xr_core() {
     let cfg = small_cfg();
     let cache = EvalCache::new();
     let sc = scenario_by_name("xr-core").unwrap();
-    let plan = plan_scenario(&sc, &cfg, &cache, 2).unwrap();
+    let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2).unwrap();
     for mult in [1.0, 8.0] {
         let arrivals = periodic_arrivals(&sc, mult, 0.05);
         let fifo = simulate(&sc, &plan, Policy::Fifo, &arrivals, SimOptions::default());
@@ -100,7 +102,7 @@ fn sweep_boundary_is_monotone_on_every_canned_scenario() {
     let cfg = small_cfg();
     let cache = EvalCache::new();
     for sc in canned_scenarios() {
-        let plan = plan_scenario(&sc, &cfg, &cache, 2).unwrap();
+        let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2).unwrap();
         for policy in [Policy::Fifo, Policy::Edf] {
             let sweep = sweep_max_rate(&sc, &plan, policy, SimOptions::default(), 0.05);
             assert!(!sweep.probes.is_empty());
@@ -137,7 +139,7 @@ fn serving_is_deterministic_per_seed_property() {
     let cfg = small_cfg();
     let cache = EvalCache::new();
     let sc = scenario_by_name("xr-core").unwrap();
-    let plan = plan_scenario(&sc, &cfg, &cache, 2).unwrap();
+    let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2).unwrap();
     proptest_lite::run(16, |rng| {
         let seed = rng.next_u64();
         let policy = *rng.choose(&Policy::ALL);
@@ -173,7 +175,7 @@ fn dynamic_bandwidth_never_worse_than_static_on_canned_scenarios() {
     let cfg = small_cfg();
     let cache = EvalCache::new();
     for sc in canned_scenarios() {
-        let plan = plan_scenario(&sc, &cfg, &cache, 2).unwrap();
+        let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2).unwrap();
         let arrivals = periodic_arrivals(&sc, 2.0, 0.05);
         let run = |bandwidth| {
             simulate(
@@ -219,7 +221,7 @@ fn home_region_costs_match_cosched() {
     let cfg = small_cfg();
     let cache = EvalCache::new();
     let sc = scenario_by_name("xr-hands").unwrap();
-    let plan: ServePlan = plan_scenario(&sc, &cfg, &cache, 2).unwrap();
+    let plan: ServePlan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2).unwrap();
     for (t, a) in plan.cosched.cosched.assignments.iter().enumerate() {
         let own = &plan.costs[t][t];
         assert!(
@@ -231,7 +233,7 @@ fn home_region_costs_match_cosched() {
         assert!(own.best_case_cycles <= own.nominal_cycles * (1.0 + 1e-9));
     }
     // Replanning against the same cache is fully memoized.
-    let again = plan_scenario(&sc, &cfg, &cache, 1).unwrap();
+    let again = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
     assert_eq!(again.evaluations, 0, "warm replan must be all cache hits");
     assert!(again.cache_hits > 0);
 }
@@ -264,6 +266,49 @@ fn run_scenario_end_to_end_is_deterministic() {
             assert_eq!(m.requests, a.outcomes[0].tasks[t].requests);
         }
     }
+}
+
+/// The acceptance criterion's serve half: `pipeorgan serve` runs end to
+/// end on a guillotine plan — planning, simulation and accounting all
+/// hold on arbitrary-rectangle partitions, and the guillotine plan's
+/// makespan never loses to the band plan it was seeded with.
+#[test]
+fn serve_runs_end_to_end_on_a_guillotine_plan() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let sv = ServeConfig {
+        partition: PartitionKind::Guillotine,
+        duration_s: 0.05,
+        ..ServeConfig::default()
+    };
+    let run = run_scenario(&sc, &cfg, &sv, &cache, 2).unwrap();
+    assert_eq!(run.plan.cosched.partition, PartitionKind::Guillotine);
+    assert_eq!(run.plan.regions.len(), sc.tasks.len());
+    assert_eq!(run.plan.topologies.len(), sc.tasks.len());
+    // The served regions are exactly the cut tree's realization.
+    let (partition, topos) = run
+        .plan
+        .cosched
+        .cut_tree
+        .partition(cfg.pe_rows, cfg.pe_cols)
+        .unwrap();
+    assert_eq!(partition.regions, run.plan.regions);
+    assert_eq!(topos, run.plan.topologies);
+    for o in &run.outcomes {
+        for m in &o.tasks {
+            assert_eq!(m.completed + m.dropped, m.requests, "{}", m.task);
+        }
+    }
+    // Never-lose carries through to the served plan's makespan.
+    let bands = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2).unwrap();
+    assert!(
+        run.plan.cosched.cosched.makespan_cycles
+            <= bands.cosched.cosched.makespan_cycles * 1.0001,
+        "guillotine {} vs bands {}",
+        run.plan.cosched.cosched.makespan_cycles,
+        bands.cosched.cosched.makespan_cycles
+    );
 }
 
 #[test]
@@ -300,4 +345,12 @@ fn serve_cli_flags_are_strict() {
     assert!(parse(&["serve", "--policey", "edf"]).is_err());
     assert!(parse(&["serve", "--quantum", "4"]).is_err());
     assert!(parse(&["serve", "--beam", "4"]).is_err());
+    // --partition parses on serve exactly as on cosched.
+    let args = parse(&["serve", "--partition", "guillotine"]).unwrap();
+    assert_eq!(
+        ServeConfig::from_cli(&args, 7).unwrap().partition,
+        PartitionKind::Guillotine
+    );
+    let args = parse(&["serve", "--partition", "diagonal"]).unwrap();
+    assert!(ServeConfig::from_cli(&args, 7).is_err());
 }

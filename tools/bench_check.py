@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Aggregate raw bench records and gate CI on perf regressions.
+
+Usage: python3 tools/bench_check.py [raw_jsonl] [baseline_json] [out_json]
+
+Reads the JSONL file the bench harness appends to when PIPEORGAN_BENCH_JSON
+is set (one record per bench run: {"bench": name, "mean_ns": ..., "p50_ns":
+..., ...}; the last record per name wins), writes the aggregated
+BENCH_ci.json artifact, then compares against the checked-in baseline:
+
+  - a bench whose p50_ns exceeds baseline p50_ns * BENCH_MAX_RATIO
+    (env var, default 2.0) fails the gate;
+  - a baseline bench missing from the run fails the gate (renamed or
+    deleted hot paths must update BENCH_baseline.json deliberately);
+  - benches not in the baseline are reported as new, never fatal;
+  - a baseline entry with p50_ns null is a record-only placeholder —
+    promote a green CI run's BENCH_ci.json numbers to arm it.
+
+Exit status 0 iff the gate passes. The artifact is written in all cases so
+the bench trajectory accumulates even across red runs.
+"""
+
+import json
+import os
+import sys
+
+
+def read_records(path):
+    benches = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            benches[rec["bench"]] = rec
+    return benches
+
+
+def main():
+    raw_path = sys.argv[1] if len(sys.argv) > 1 else "reports/bench_raw.jsonl"
+    baseline_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_baseline.json"
+    out_path = sys.argv[3] if len(sys.argv) > 3 else "reports/BENCH_ci.json"
+    max_ratio = float(os.environ.get("BENCH_MAX_RATIO", "2.0"))
+
+    benches = read_records(raw_path)
+    if not benches:
+        print(f"error: no bench records in {raw_path}", file=sys.stderr)
+        return 1
+
+    baseline = {}
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f).get("benches", {})
+    else:
+        print(f"warning: no baseline at {baseline_path}; recording only")
+
+    failures = []
+    rows = []
+    for name in sorted(set(baseline) | set(benches)):
+        base = baseline.get(name)
+        cur = benches.get(name)
+        if cur is None:
+            failures.append(
+                f"{name}: in baseline but not produced by this run "
+                f"(renamed/deleted hot paths must update {baseline_path})"
+            )
+            rows.append((name, base.get("p50_ns"), None, None, "MISSING"))
+            continue
+        if base is None:
+            rows.append((name, None, cur["p50_ns"], None, "new"))
+            continue
+        base_p50 = base.get("p50_ns")
+        if base_p50 is None:
+            rows.append((name, None, cur["p50_ns"], None, "record-only"))
+            continue
+        ratio = cur["p50_ns"] / max(float(base_p50), 1.0)
+        verdict = "ok" if ratio <= max_ratio else "REGRESSED"
+        if ratio > max_ratio:
+            failures.append(
+                f"{name}: p50 {cur['p50_ns'] / 1e6:.2f} ms is {ratio:.2f}x the "
+                f"baseline {base_p50 / 1e6:.2f} ms (limit {max_ratio:.1f}x)"
+            )
+        rows.append((name, base_p50, cur["p50_ns"], ratio, verdict))
+
+    report = {
+        "schema": 1,
+        "metric": "p50_ns",
+        "max_ratio": max_ratio,
+        "benches": benches,
+        "failures": failures,
+    }
+    out_dir = os.path.dirname(out_path)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    width = max(len(name) for name, *_ in rows)
+    print(f"{'bench':<{width}}  {'base p50':>12}  {'ci p50':>12}  {'ratio':>6}  verdict")
+    for name, base_p50, cur_p50, ratio, verdict in rows:
+        fmt = lambda ns: f"{ns / 1e6:.3f} ms" if ns is not None else "-"
+        r = f"{ratio:.2f}x" if ratio is not None else "-"
+        print(f"{name:<{width}}  {fmt(base_p50):>12}  {fmt(cur_p50):>12}  {r:>6}  {verdict}")
+    print(f"\nwrote {out_path} ({len(benches)} benches)")
+
+    if failures:
+        print(f"\nbench gate FAILED ({len(failures)}):", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -149,11 +149,55 @@ def plot_fig5(reports, out):
     plt.close(fig)
 
 
+def plot_cosched(reports, out):
+    """Per-scenario makespans for solo / even-split / co-scheduled.
+
+    Newer reports carry 2-D partitioning fields (`partition`, `cut_tree`,
+    `cut_tree_str`, per-task `region_row0`/`topology`); older ones do not —
+    every access below degrades gracefully so both plot.
+    """
+    data = load(reports, "cosched")
+    if not data:
+        return
+    scenarios = data.get("scenarios", [])
+    if not scenarios:
+        return
+    names = [s.get("scenario", f"s{i}") for i, s in enumerate(scenarios)]
+    modes = [("solo", "solo"), ("even_split", "even split"), ("cosched", "co-scheduled")]
+    x = np.arange(len(scenarios))
+    w = 0.27
+    fig, ax = plt.subplots(figsize=(max(6, 2.5 * len(scenarios)), 4))
+    for k, (key, label) in enumerate(modes):
+        ys = [s.get(key, {}).get("makespan_cycles", 0.0) for s in scenarios]
+        ax.bar(x + (k - 1) * w, ys, w, label=label)
+    for i, s in enumerate(scenarios):
+        # Annotate the winning partition when the report is new enough to
+        # carry it (partition kind + compact cut-tree encoding).
+        parts = [p for p in (s.get("partition"), s.get("cut_tree_str")) if p]
+        if parts:
+            y = s.get("cosched", {}).get("makespan_cycles", 0.0)
+            ax.annotate(
+                "\n".join(parts),
+                (x[i] + w, y),
+                ha="center",
+                va="bottom",
+                fontsize=6,
+            )
+    ax.set_xticks(x)
+    ax.set_xticklabels(names, fontsize=8)
+    ax.set_ylabel("frame makespan (cycles)")
+    ax.set_title("Cosched — per-scenario makespan by allocation mode")
+    ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "cosched_makespan.png"), dpi=150)
+    plt.close(fig)
+
+
 def main():
     reports = sys.argv[1] if len(sys.argv) > 1 else "reports"
     out = sys.argv[2] if len(sys.argv) > 2 else reports
     os.makedirs(out, exist_ok=True)
-    for fn in (plot_fig13, plot_fig14, plot_fig15, plot_fig16, plot_fig5):
+    for fn in (plot_fig13, plot_fig14, plot_fig15, plot_fig16, plot_fig5, plot_cosched):
         fn(reports, out)
         print(f"{fn.__name__} done")
 
