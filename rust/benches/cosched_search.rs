@@ -1,0 +1,64 @@
+//! §Perf microbenchmark for the co-scheduling hot path: the memoized
+//! guillotine beam on the widest canned scenario (`xr-hands`). The
+//! evaluation cache is pre-warmed by one throwaway run, so the timed
+//! region is the beam itself — state expansion, label pruning, and memo
+//! lookups — not first-touch segment costing. `guillotine_beam_xr_hands`
+//! is pinned in BENCH_baseline.json; the bands DP runs alongside for
+//! scale, not for gating.
+
+mod common;
+
+use pipeorgan::config::ArchConfig;
+use pipeorgan::cosched::{schedule, xr_hands, CoschedConfig, PartitionKind};
+use pipeorgan::dse::EvalCache;
+
+fn main() {
+    let cfg = ArchConfig::default();
+    let sc = xr_hands();
+    let cache = EvalCache::new();
+
+    let cs = CoschedConfig {
+        partition: PartitionKind::Guillotine,
+        ..CoschedConfig::default()
+    };
+    schedule(&sc, &cfg, &cs, &cache, 4).expect("warm-up schedule succeeds");
+    let beam = common::bench("guillotine_beam_xr_hands", 1, 5, || {
+        schedule(&sc, &cfg, &cs, &cache, 4)
+            .expect("schedule succeeds")
+            .cosched
+            .makespan_cycles as u64
+    });
+
+    let r = schedule(&sc, &cfg, &cs, &cache, 4).expect("schedule succeeds");
+    println!(
+        "guillotine_beam_xr_hands: makespan {:.3e} cycles, cut {} (mean {:.2} ms/solve)",
+        r.cosched.makespan_cycles,
+        r.cut_tree.encode(),
+        beam.mean_ns / 1e6
+    );
+
+    // The 1-D bands DP on the same scenario: the cheap baseline the beam
+    // must justify its cost against.
+    let bands = CoschedConfig {
+        partition: PartitionKind::Bands,
+        ..CoschedConfig::default()
+    };
+    let dp = common::bench("bands_dp_xr_hands", 1, 5, || {
+        schedule(&sc, &cfg, &bands, &cache, 4)
+            .expect("schedule succeeds")
+            .cosched
+            .makespan_cycles as u64
+    });
+    println!(
+        "bands_dp_xr_hands: {:.2}x cheaper than the guillotine beam",
+        beam.mean_ns / dp.mean_ns
+    );
+
+    let stats = cache.stats();
+    println!(
+        "cache: {} hits / {} misses (hit rate {:.1}%)",
+        stats.hits,
+        stats.misses,
+        100.0 * stats.hit_rate()
+    );
+}

@@ -42,6 +42,14 @@ fn main() {
         );
     }
 
+    // The gate-watched event-loop bench: FIFO on the shared traffic with
+    // observability disabled, under a stable name so BENCH_baseline.json
+    // can pin the no-obs hot path (the <5% overhead budget in DESIGN.md
+    // §Obs is judged against this number).
+    common::bench("serve_event_loop_xr_core", 1, 5, || {
+        simulate(&sc, &plan, Policy::Fifo, &arrivals, SimOptions::default()).total_requests()
+    });
+
     // Static split: no per-epoch demand computation — the contention
     // model's overhead is the gap to the dynamic runs above.
     let static_opts = SimOptions {

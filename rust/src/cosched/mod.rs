@@ -102,6 +102,9 @@ pub struct CoschedConfig {
     pub budget: Option<u64>,
     /// Pareto labels kept per occupancy state in the allocation DP.
     pub max_labels: usize,
+    /// Observability handle (`--obs` / `--trace-out`): guillotine-beam
+    /// counters and planner phase spans. Disabled (free) by default.
+    pub obs: crate::obs::Obs,
 }
 
 impl Default for CoschedConfig {
@@ -112,6 +115,7 @@ impl Default for CoschedConfig {
             tuned: false,
             budget: None,
             max_labels: 16,
+            obs: crate::obs::Obs::disabled(),
         }
     }
 }
@@ -140,6 +144,7 @@ impl CoschedConfig {
                 None
             },
             max_labels: defaults.max_labels,
+            obs: crate::obs::Obs::from_cli(args),
         })
     }
 }
@@ -149,7 +154,9 @@ impl CoschedConfig {
 /// `--scenario` names canned scenarios (`all`, one name, or a comma list);
 /// `--partition` picks the region family (`bands` or `guillotine`);
 /// `--cache-file`/`--cache-cap` manage the persistent evaluation cache
-/// exactly as on `dse`.
+/// exactly as on `dse`. `--obs` enables the observability counters;
+/// `--trace-out FILE` additionally writes the Perfetto trace there (and
+/// implies `--obs`).
 pub const COSCHED_FLAGS: &[(&str, bool)] = &[
     ("scenario", true),
     ("partition", true),
@@ -158,6 +165,8 @@ pub const COSCHED_FLAGS: &[(&str, bool)] = &[
     ("budget", true),
     ("cache-file", true),
     ("cache-cap", true),
+    ("obs", false),
+    ("trace-out", true),
 ];
 
 #[cfg(test)]
@@ -201,6 +210,16 @@ mod tests {
         assert_eq!(cs.quantum, 2);
         assert!(cs.tuned);
         assert_eq!(cs.budget, Some(500));
+    }
+
+    #[test]
+    fn obs_flags_enable_the_handle() {
+        assert!(!parse_cs(&["cosched"]).unwrap().obs.is_enabled());
+        assert!(parse_cs(&["cosched", "--obs"]).unwrap().obs.is_enabled());
+        assert!(parse_cs(&["cosched", "--trace-out", "t.json"])
+            .unwrap()
+            .obs
+            .is_enabled());
     }
 
     #[test]

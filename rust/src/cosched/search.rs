@@ -527,9 +527,12 @@ struct GuillotineSearch<'a, 'b> {
 
 impl GuillotineSearch<'_, '_> {
     fn solve(&mut self, rows: usize, cols: usize, mask: u32) -> Vec<GLabel> {
+        let obs = &self.table.cs.obs;
         if let Some(v) = self.memo.get(&(rows, cols, mask)) {
+            obs.count("cosched.guillotine.memo_hit", 1);
             return v.clone();
         }
+        obs.count("cosched.guillotine.state_expanded", 1);
         let count = mask.count_ones() as usize;
         let mut labels: Vec<GLabel> = Vec::new();
         if count == 1 {
@@ -584,7 +587,12 @@ impl GuillotineSearch<'_, '_> {
                                 }
                             }
                             if labels.len() > 8 * self.max_labels {
+                                let before = labels.len();
                                 prune_labels(&mut labels, self.max_labels);
+                                obs.count(
+                                    "cosched.guillotine.labels_pruned",
+                                    (before - labels.len()) as u64,
+                                );
                             }
                         }
                         lo = lo.wrapping_sub(1) & mask;
@@ -592,7 +600,12 @@ impl GuillotineSearch<'_, '_> {
                 }
             }
         }
+        let before = labels.len();
         prune_labels(&mut labels, self.max_labels);
+        obs.count(
+            "cosched.guillotine.labels_pruned",
+            (before - labels.len()) as u64,
+        );
         self.memo.insert((rows, cols, mask), labels.clone());
         labels
     }
@@ -669,7 +682,7 @@ pub fn schedule(
             jobs.push(Job::Width { task, width });
         }
     }
-    let outcomes: Vec<(usize, Option<usize>, PlannedCost)> =
+    let outcomes: Vec<(usize, Option<usize>, PlannedCost)> = cs.obs.timed("cosched.stage_a", || {
         run_queue(jobs, workers, |job| match job {
             Job::Solo { task } => {
                 let pc = plan_in(&scenario.tasks[task].graph, cfg, cs, cache, &run);
@@ -680,7 +693,8 @@ pub fn schedule(
                 let pc = plan_in(&scenario.tasks[task].graph, &rcfg, cs, cache, &run);
                 (task, Some(width), pc)
             }
-        });
+        })
+    });
     let mut solo: Vec<Option<PlannedCost>> = vec![None; n];
     let mut table: Vec<Vec<Option<PlannedCost>>> = vec![vec![None; widths.len()]; n];
     for (task, width, pc) in outcomes {
@@ -699,84 +713,86 @@ pub fn schedule(
     let inv: Vec<f64> = scenario.tasks.iter().map(|t| t.invocations() as f64).collect();
 
     // ---- stage B: occupancy-state DP over tasks --------------------------
-    let w_min = *widths.first().expect("candidate set is never empty");
-    let mut states: Vec<Vec<AllocLabel>> = vec![Vec::new(); cols + 1];
-    states[0].push(AllocLabel {
-        makespan: 0.0,
-        energy: 0.0,
-        dram: 0,
-        load: 0.0,
-        widths: Vec::new(),
-    });
-    for task in 0..n {
-        let remaining = n - task - 1;
-        let mut next: Vec<Vec<AllocLabel>> = vec![Vec::new(); cols + 1];
-        for (used, labels) in states.iter().enumerate() {
-            if labels.is_empty() {
-                continue;
-            }
-            for (wi, &w) in widths.iter().enumerate() {
-                if used + w > cols {
-                    break; // widths ascend
-                }
-                if cols - used - w < remaining * w_min {
-                    continue; // later tasks could no longer fit
-                }
-                let pc = table[task][wi].as_ref().expect("stage A filled the table");
-                let busy = pc.cycles * inv[task];
-                let frame_energy = pc.energy * inv[task];
-                let frame_dram = pc.dram_words.saturating_mul(inv[task] as u64);
-                for lab in labels {
-                    let mut widths_so_far = lab.widths.clone();
-                    widths_so_far.push(w);
-                    next[used + w].push(AllocLabel {
-                        makespan: lab.makespan.max(busy),
-                        energy: lab.energy + frame_energy,
-                        dram: lab.dram.saturating_add(frame_dram),
-                        load: lab.load.max(pc.worst_load),
-                        widths: widths_so_far,
-                    });
-                }
-            }
-        }
-        for labels in next.iter_mut() {
-            prune_labels(labels, cs.max_labels);
-        }
-        states = next;
-    }
-    let mut finals: Vec<AllocLabel> = states.into_iter().flatten().collect();
-
-    // Seed the even split as a complete label: truncation can never lose
-    // it, so cosched ≤ even_split by construction.
     let even = even_widths(cols, n);
-    let even_label = {
-        let mut lab = AllocLabel {
+    let best = cs.obs.timed("cosched.stage_b", || {
+        let w_min = *widths.first().expect("candidate set is never empty");
+        let mut states: Vec<Vec<AllocLabel>> = vec![Vec::new(); cols + 1];
+        states[0].push(AllocLabel {
             makespan: 0.0,
             energy: 0.0,
             dram: 0,
             load: 0.0,
-            widths: even.clone(),
-        };
-        for (task, &w) in even.iter().enumerate() {
-            let pc = lookup(&table, &widths, task, w);
-            lab.makespan = lab.makespan.max(pc.cycles * inv[task]);
-            lab.energy += pc.energy * inv[task];
-            lab.dram = lab
-                .dram
-                .saturating_add(pc.dram_words.saturating_mul(inv[task] as u64));
-            lab.load = lab.load.max(pc.worst_load);
+            widths: Vec::new(),
+        });
+        for task in 0..n {
+            let remaining = n - task - 1;
+            let mut next: Vec<Vec<AllocLabel>> = vec![Vec::new(); cols + 1];
+            for (used, labels) in states.iter().enumerate() {
+                if labels.is_empty() {
+                    continue;
+                }
+                for (wi, &w) in widths.iter().enumerate() {
+                    if used + w > cols {
+                        break; // widths ascend
+                    }
+                    if cols - used - w < remaining * w_min {
+                        continue; // later tasks could no longer fit
+                    }
+                    let pc = table[task][wi].as_ref().expect("stage A filled the table");
+                    let busy = pc.cycles * inv[task];
+                    let frame_energy = pc.energy * inv[task];
+                    let frame_dram = pc.dram_words.saturating_mul(inv[task] as u64);
+                    for lab in labels {
+                        let mut widths_so_far = lab.widths.clone();
+                        widths_so_far.push(w);
+                        next[used + w].push(AllocLabel {
+                            makespan: lab.makespan.max(busy),
+                            energy: lab.energy + frame_energy,
+                            dram: lab.dram.saturating_add(frame_dram),
+                            load: lab.load.max(pc.worst_load),
+                            widths: widths_so_far,
+                        });
+                    }
+                }
+            }
+            for labels in next.iter_mut() {
+                prune_labels(labels, cs.max_labels);
+            }
+            states = next;
         }
-        lab
-    };
-    finals.push(even_label);
-    let best = finals
-        .into_iter()
-        .min_by(|a, b| {
-            (a.makespan, a.energy)
-                .partial_cmp(&(b.makespan, b.energy))
-                .expect("objectives are finite")
-        })
-        .expect("the even-split seed is always present");
+        let mut finals: Vec<AllocLabel> = states.into_iter().flatten().collect();
+
+        // Seed the even split as a complete label: truncation can never
+        // lose it, so cosched ≤ even_split by construction.
+        let even_label = {
+            let mut lab = AllocLabel {
+                makespan: 0.0,
+                energy: 0.0,
+                dram: 0,
+                load: 0.0,
+                widths: even.clone(),
+            };
+            for (task, &w) in even.iter().enumerate() {
+                let pc = lookup(&table, &widths, task, w);
+                lab.makespan = lab.makespan.max(pc.cycles * inv[task]);
+                lab.energy += pc.energy * inv[task];
+                lab.dram = lab
+                    .dram
+                    .saturating_add(pc.dram_words.saturating_mul(inv[task] as u64));
+                lab.load = lab.load.max(pc.worst_load);
+            }
+            lab
+        };
+        finals.push(even_label);
+        finals
+            .into_iter()
+            .min_by(|a, b| {
+                (a.makespan, a.energy)
+                    .partial_cmp(&(b.makespan, b.energy))
+                    .expect("objectives are finite")
+            })
+            .expect("the even-split seed is always present")
+    });
 
     // ---- shared cost table (both partition families draw from it) --------
     let cost_table = CostTable {
@@ -804,7 +820,7 @@ pub fn schedule(
     // ---- stage C (guillotine only): beam over cut trees ------------------
     let cut_tree = match cs.partition {
         PartitionKind::Bands => bands_tree,
-        PartitionKind::Guillotine => {
+        PartitionKind::Guillotine => cs.obs.timed("cosched.stage_c", || {
             let topos = region_topologies(cfg);
             // Pre-cost every rectangle on the cut grid, in parallel.
             let rset = reachable_dims(rows, cs.quantum);
@@ -840,16 +856,18 @@ pub fn schedule(
             let mut gfinals = gs.solve(rows, cols, (1u32 << n) - 1);
             // Seed the vertical-band winner: 2-D never loses to 1-D.
             gfinals.push(tree_label(&bands_tree, rows, cols, &cost_table, &inv)?);
-            gfinals
-                .into_iter()
-                .min_by(|a, b| {
-                    (a.makespan, a.energy)
-                        .partial_cmp(&(b.makespan, b.energy))
-                        .expect("objectives are finite")
-                })
-                .expect("the vertical-band seed is always present")
-                .tree
-        }
+            Ok::<CutTree, String>(
+                gfinals
+                    .into_iter()
+                    .min_by(|a, b| {
+                        (a.makespan, a.energy)
+                            .partial_cmp(&(b.makespan, b.energy))
+                            .expect("objectives are finite")
+                    })
+                    .expect("the vertical-band seed is always present")
+                    .tree,
+            )
+        })?,
     };
 
     // ---- assemble the three reported outcomes ----------------------------
@@ -920,6 +938,8 @@ pub fn schedule(
     let placement = ScenarioPlacement::compose(&partition, &placements)?;
 
     let stats = run.stats();
+    cs.obs.count("cosched.cache.hits", stats.hits);
+    cs.obs.count("cosched.cache.misses", stats.misses);
     Ok(CoschedResult {
         scenario: scenario.name.clone(),
         partition: cs.partition,

@@ -107,6 +107,9 @@ pub struct DseConfig {
     /// reproduces the original latency/energy/DRAM front exactly, while
     /// the load value is still computed and reported on every point.
     pub channel_load_objective: bool,
+    /// Observability handle (`--obs` / `--trace-out`): per-candidate eval
+    /// timing and cache hit/miss counters. Disabled (free) by default.
+    pub obs: crate::obs::Obs,
 }
 
 impl Default for DseConfig {
@@ -125,6 +128,7 @@ impl Default for DseConfig {
             budget: None,
             max_labels: 256,
             channel_load_objective: false,
+            obs: crate::obs::Obs::disabled(),
         }
     }
 }
@@ -142,6 +146,7 @@ impl DseConfig {
             budget: None,
             max_labels: 64,
             channel_load_objective: false,
+            obs: crate::obs::Obs::disabled(),
         }
     }
 
@@ -196,6 +201,7 @@ impl DseConfig {
             dse.topologies = topos;
         }
         dse.channel_load_objective = args.has("channel-load-objective");
+        dse.obs = crate::obs::Obs::from_cli(args);
         Ok(dse)
     }
 }
@@ -206,7 +212,9 @@ impl DseConfig {
 /// start) before the sweep, pruned to `--cache-cap` entries
 /// ([`CACHE_DEFAULT_CAP`] by default) and saved back after it.
 /// `--channel-load-objective` adds the Fig. 15 worst-channel-load metric
-/// as a fourth Pareto axis.
+/// as a fourth Pareto axis. `--obs` enables the observability counters;
+/// `--trace-out FILE` additionally writes the Perfetto trace there (and
+/// implies `--obs`).
 pub const DSE_FLAGS: &[(&str, bool)] = &[
     ("workload", true),
     ("strategy", true),
@@ -218,6 +226,8 @@ pub const DSE_FLAGS: &[(&str, bool)] = &[
     ("cache-file", true),
     ("cache-cap", true),
     ("channel-load-objective", false),
+    ("obs", false),
+    ("trace-out", true),
 ];
 
 #[cfg(test)]
@@ -293,6 +303,16 @@ mod tests {
         assert_eq!(t.topologies, vec![TopologyKind::Mesh]);
         assert_eq!(t.budget, Some(TUNED_DEFAULT_BUDGET));
         assert_eq!(t.strategy, SearchStrategy::Beam);
+    }
+
+    #[test]
+    fn obs_flags_enable_the_handle() {
+        assert!(!parse_dse(&["dse"]).unwrap().obs.is_enabled());
+        assert!(parse_dse(&["dse", "--obs"]).unwrap().obs.is_enabled());
+        assert!(parse_dse(&["dse", "--trace-out", "t.json"])
+            .unwrap()
+            .obs
+            .is_enabled());
     }
 
     #[test]

@@ -237,11 +237,17 @@ fn search_topology(
             };
             for cand in candidates {
                 let key = (ctx, i, d, cand.organization, cand.gran_scale, topology);
-                let cost = cache.get_or_eval_in(
-                    key,
-                    || evaluate_segment(graph, &cand.planned, cfg, &topo, &em),
-                    run,
-                );
+                // `timed` is a no-op branch when obs is off; when on, every
+                // candidate evaluation lands in the `time.dse.eval_candidate`
+                // histogram (hits and misses alike, so the distribution
+                // shows what the cache saves).
+                let cost = dse.obs.timed("dse.eval_candidate", || {
+                    cache.get_or_eval_in(
+                        key,
+                        || evaluate_segment(graph, &cand.planned, cfg, &topo, &em),
+                        run,
+                    )
+                });
                 let fresh: Vec<Label> = frontiers[i]
                     .iter()
                     .map(|lab| {
@@ -384,6 +390,10 @@ pub fn explore(
     let frontier = pareto_filter_first(points, dse.objective_count());
     let run_stats = run.stats();
     let tuned_stats = tuned_run.stats();
+    dse.obs
+        .count("dse.cache.hits", run_stats.hits + tuned_stats.hits);
+    dse.obs
+        .count("dse.cache.misses", run_stats.misses + tuned_stats.misses);
     DseResult {
         workload: graph.name.clone(),
         strategy: dse.strategy,
@@ -468,6 +478,7 @@ mod tests {
             budget: None,
             max_labels: 64,
             channel_load_objective: false,
+            obs: Default::default(),
         }
     }
 

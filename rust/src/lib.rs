@@ -26,6 +26,9 @@
 //! - an online serving simulator replaying request streams against the
 //!   co-scheduled plan with deadline-aware dispatch and dynamic
 //!   cross-region DRAM-bandwidth contention ([`serve`]);
+//! - unified observability — zero-cost-when-disabled tracing/counters
+//!   with Chrome/Perfetto timeline export across dse/cosched/serve
+//!   ([`obs`]);
 //! - per-figure report emitters ([`report`]).
 //!
 //! See `rust/DESIGN.md` for the paper-to-module map, the no-network
@@ -46,6 +49,7 @@ pub mod ir;
 pub mod mapper;
 pub mod memory;
 pub mod noc;
+pub mod obs;
 pub mod pipeline;
 pub mod report;
 pub mod runtime;

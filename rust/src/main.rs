@@ -28,7 +28,9 @@
 //! `--topologies <a,b,..>`, `--channel-load-objective` (fourth Pareto
 //! axis), `--cache-file <file>` (persistent evaluation cache: loaded
 //! before the sweep, pruned and saved back after it), `--cache-cap <n>`
-//! (entry cap applied before saving).
+//! (entry cap applied before saving), `--obs` (observability counters +
+//! `reports/obs.json`), `--trace-out <file>` (Chrome/Perfetto trace of
+//! the run; implies `--obs`).
 //!
 //! `e2e`-only flags: `--tuned` (run the search-guided `PipeOrgan::tuned`
 //! mapper in the PipeOrgan column), `--cache-file <file>` / `--cache-cap
@@ -38,7 +40,8 @@
 //! comma lists allowed), `--partition <bands|guillotine>` (vertical bands
 //! vs 2-D guillotine rectangles with per-region topology choice),
 //! `--quantum <cols>` (region width / cut-grid quantum), `--tuned`,
-//! `--budget <n>`, `--cache-file <file>`, `--cache-cap <n>`.
+//! `--budget <n>`, `--cache-file <file>`, `--cache-cap <n>`, `--obs`,
+//! `--trace-out <file>`.
 //!
 //! `serve`-only flags: `--scenario <name|all>`, `--partition
 //! <bands|guillotine>` (partition family of the served plan), `--policy
@@ -47,7 +50,10 @@
 //! `--borrow` (cross-task region borrowing), `--bandwidth
 //! <dynamic|static>` (DRAM contention model), `--sweep` (binary-search the
 //! max sustainable rate multiplier), `--cache-file <file>`, `--cache-cap
-//! <n>`.
+//! <n>`, `--obs` (request-lifecycle counters + `reports/obs.json`),
+//! `--trace-out <file>` (Perfetto timeline of the event loop: one track
+//! per region, counter tracks for queue depth / bandwidth split /
+//! utilization; implies `--obs`).
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -60,11 +66,12 @@ use pipeorgan::cosched::{self, CoschedConfig, COSCHED_FLAGS};
 use pipeorgan::dse::{
     context_fingerprint, CacheLoadOutcome, DseConfig, EvalCache, CACHE_DEFAULT_CAP, DSE_FLAGS,
 };
+use pipeorgan::obs::Obs;
 use pipeorgan::report;
 use pipeorgan::serve::{self, ServeConfig, SERVE_FLAGS};
 use pipeorgan::workloads;
 
-const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N]";
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N --obs --trace-out FILE] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N --obs --trace-out FILE] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N --obs --trace-out FILE]";
 
 const FLAGS: &[(&str, bool)] = &[
     ("out", true),
@@ -192,6 +199,51 @@ fn zoo_contexts(cfg: &ArchConfig) -> HashSet<u64> {
     live
 }
 
+/// Fold an `--obs` handle into a subcommand's report set: attach the
+/// counters registry under an `"obs"` key in every report's JSON and
+/// append the `report::obs` summary table. A disabled or silent handle
+/// leaves the reports exactly as the subcommand built them.
+fn with_obs(mut reports: Vec<report::Report>, obs: &Obs) -> Vec<report::Report> {
+    if !obs.is_silent() {
+        let counters = obs.counters_json();
+        for r in &mut reports {
+            if matches!(r.json, pipeorgan::util::json::Json::Obj(_)) {
+                r.json.set("obs", counters.clone());
+            }
+        }
+    }
+    reports.extend(report::obs_report(obs));
+    reports
+}
+
+/// The post-emission `--obs` epilogue shared by `dse`, `cosched`, and
+/// `serve`: write the Perfetto trace when `--trace-out` was given and
+/// flush scoped `time.*` timings to the CI bench recorder
+/// (`PIPEORGAN_BENCH_JSON`).
+fn finish_obs(obs: &Obs, args: &Args) -> anyhow::Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        obs.write_trace(path)
+            .map_err(|e| anyhow::anyhow!("writing trace to {path}: {e}"))?;
+        let dropped = obs.dropped_events();
+        let suffix = if dropped > 0 {
+            format!(" ({dropped} oldest events dropped at the ring cap)")
+        } else {
+            String::new()
+        };
+        println!(
+            "trace: wrote {} events to {path}{suffix}",
+            obs.events().len()
+        );
+    }
+    let flushed = obs
+        .flush_bench_records()
+        .map_err(|e| anyhow::anyhow!("flushing bench records: {e}"))?;
+    if flushed > 0 {
+        println!("obs: appended {flushed} timing records to the bench recorder");
+    }
+    Ok(())
+}
+
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
@@ -284,7 +336,9 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
             let dse_cfg = DseConfig::from_cli(&args).map_err(|e| anyhow::anyhow!(e))?;
             let tasks = resolve_workloads(args.get_or("workload", "all"))?;
             let (cache_file, cache, cache_cap) = load_cache_with_cap(&args)?;
-            emit(report::run_dse_reports(&cfg, tasks, &dse_cfg, workers, &cache))?;
+            let reports = report::run_dse_reports(&cfg, tasks, &dse_cfg, workers, &cache);
+            emit(with_obs(reports, &dse_cfg.obs))?;
+            finish_obs(&dse_cfg.obs, &args)?;
             save_cache(&cache_file, &cache, || zoo_contexts(&cfg), cache_cap)
         }
         "cosched" => {
@@ -309,7 +363,8 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
                     r.cut_tree.encode()
                 );
             }
-            emit(vec![report::cosched_report(&cfg, &results)])?;
+            emit(with_obs(vec![report::cosched_report(&cfg, &results)], &cs.obs))?;
+            finish_obs(&cs.obs, &args)?;
             // Live contexts: the shared base plus every candidate region
             // config these scenarios actually reached (covers non-default
             // quanta and custom configs).
@@ -359,7 +414,8 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
                     );
                 }
             }
-            emit(report::serve_reports(&cfg, &sv, &runs))?;
+            emit(with_obs(report::serve_reports(&cfg, &sv, &runs), &sv.obs))?;
+            finish_obs(&sv.obs, &args)?;
             // Live contexts: the shared base plus every region config the
             // underlying co-schedules reached (covers custom configs).
             save_cache(

@@ -1,0 +1,200 @@
+//! Typed counter/gauge/histogram registry.
+//!
+//! Names are dotted paths (`serve.miss`, `dse.cache.hit`,
+//! `time.cosched.schedule`); a name is bound to one cell kind on first use
+//! and misuse panics — a counter silently becoming a gauge would corrupt
+//! every report built on it. Histogram percentiles go through the
+//! sort-once [`Histogram`](crate::util::stats::Histogram) so rendering a
+//! cell costs one sort regardless of how many quantiles the report reads.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+
+/// One registered metric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    /// Monotone event count.
+    Counter(u64),
+    /// Last-write-wins level.
+    Gauge(f64),
+    /// Raw samples; summarized (p50/p95/p99/mean/min/max) at render time.
+    Hist(Vec<f64>),
+}
+
+/// Name → cell map behind `Obs`'s mutex; all mutation goes through
+/// [`super::Obs::count`]/[`super::Obs::gauge`]/[`super::Obs::observe`].
+#[derive(Debug, Default)]
+pub struct Registry {
+    cells: BTreeMap<String, Cell>,
+}
+
+impl Registry {
+    pub fn count(&mut self, name: &str, n: u64) {
+        match self
+            .cells
+            .entry(name.to_string())
+            .or_insert(Cell::Counter(0))
+        {
+            Cell::Counter(c) => *c += n,
+            other => panic!("obs counter {name} already registered as {other:?}"),
+        }
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        match self
+            .cells
+            .entry(name.to_string())
+            .or_insert(Cell::Gauge(0.0))
+        {
+            Cell::Gauge(g) => *g = v,
+            other => panic!("obs gauge {name} already registered as {other:?}"),
+        }
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        match self
+            .cells
+            .entry(name.to_string())
+            .or_insert_with(|| Cell::Hist(Vec::new()))
+        {
+            Cell::Hist(xs) => xs.push(v),
+            other => panic!("obs histogram {name} already registered as {other:?}"),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Cell> {
+        self.cells.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Histogram cells as `(name, samples)` pairs, in name order.
+    pub fn histograms(&self) -> Vec<(String, Vec<f64>)> {
+        self.cells
+            .iter()
+            .filter_map(|(name, cell)| match cell {
+                Cell::Hist(xs) => Some((name.clone(), xs.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// JSON rendering: `{name: {"kind": …, …}}`, histograms summarized.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        for (name, cell) in &self.cells {
+            let mut c = Json::obj();
+            match cell {
+                Cell::Counter(n) => {
+                    c.set("kind", "counter").set("value", *n);
+                }
+                Cell::Gauge(v) => {
+                    c.set("kind", "gauge").set("value", *v);
+                }
+                Cell::Hist(xs) => {
+                    let h = Histogram::from_samples(xs);
+                    c.set("kind", "histogram")
+                        .set("n", xs.len())
+                        .set("mean", h.mean())
+                        .set("min", h.min())
+                        .set("p50", h.percentile(50.0))
+                        .set("p95", h.percentile(95.0))
+                        .set("p99", h.percentile(99.0))
+                        .set("max", h.max());
+                }
+            }
+            j.set(name, c);
+        }
+        j
+    }
+
+    /// Table rows `(name, kind, rendered summary)` for `report::obs`.
+    pub fn rows(&self) -> Vec<(String, String, String)> {
+        self.cells
+            .iter()
+            .map(|(name, cell)| {
+                let (kind, rendered) = match cell {
+                    Cell::Counter(n) => ("counter", format!("{n}")),
+                    Cell::Gauge(v) => ("gauge", format!("{v:.4}")),
+                    Cell::Hist(xs) => {
+                        let h = Histogram::from_samples(xs);
+                        (
+                            "histogram",
+                            format!(
+                                "n={} p50={:.3} p95={:.3} p99={:.3}",
+                                xs.len(),
+                                h.percentile(50.0),
+                                h.percentile(95.0),
+                                h.percentile(99.0)
+                            ),
+                        )
+                    }
+                };
+                (name.clone(), kind.to_string(), rendered)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_accumulates() {
+        let mut r = Registry::default();
+        r.count("a.b", 1);
+        r.count("a.b", 2);
+        assert_eq!(r.get("a.b"), Some(&Cell::Counter(3)));
+    }
+
+    #[test]
+    fn gauge_last_write_wins() {
+        let mut r = Registry::default();
+        r.gauge("g", 1.0);
+        r.gauge("g", 7.5);
+        assert_eq!(r.get("g"), Some(&Cell::Gauge(7.5)));
+    }
+
+    #[test]
+    fn hist_summarizes_in_json() {
+        let mut r = Registry::default();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            r.observe("h", v);
+        }
+        let j = r.to_json();
+        let h = j.get("h").unwrap();
+        assert_eq!(h.get("kind").and_then(|k| k.as_str()), Some("histogram"));
+        assert_eq!(h.get("n").and_then(|n| n.as_usize()), Some(5));
+        assert_eq!(h.get("p50").and_then(|p| p.as_f64()), Some(3.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn kind_mismatch_panics() {
+        let mut r = Registry::default();
+        r.count("x", 1);
+        r.gauge("x", 1.0);
+    }
+
+    #[test]
+    fn rows_cover_every_cell() {
+        let mut r = Registry::default();
+        r.count("c", 2);
+        r.gauge("g", 0.5);
+        r.observe("h", 1.0);
+        let rows = r.rows();
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().any(|(n, k, _)| n == "c" && k == "counter"));
+        assert!(rows.iter().any(|(n, k, _)| n == "g" && k == "gauge"));
+        assert!(rows.iter().any(|(n, k, _)| n == "h" && k == "histogram"));
+    }
+}

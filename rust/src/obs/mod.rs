@@ -1,0 +1,428 @@
+//! Observability: unified tracing, counters, and timeline export.
+//!
+//! The sensor layer for everything the planner/simulator stack does with
+//! time and bytes (DESIGN.md §Obs): a zero-cost-when-disabled [`Obs`]
+//! handle records scoped spans, instant events, and counter samples into a
+//! bounded ring ([`trace`]), accumulates typed counters/gauges/histograms
+//! ([`counters`]), exports Chrome/Perfetto `trace_event` JSON
+//! ([`perfetto`], `--trace-out FILE` on `dse`/`cosched`/`serve`), and
+//! feeds scoped self-profiling timings into the CI bench recorder
+//! ([`selfprof`]). The serve event loop, the cosched guillotine beam, and
+//! the dse search all carry an `Obs` in their configs; the future online
+//! re-planning controller reads the same counters live.
+//!
+//! **Zero-cost-when-disabled.** A disabled handle is `inner: None`; every
+//! method early-returns before formatting, locking, or allocating, so the
+//! instrumented hot paths (the serve event loop foremost — gated by
+//! `benches/serve.rs::serve_event_loop_xr_core`) pay one branch per site.
+//!
+//! **Clock domains.** Timestamps are microseconds, but the *domain* is
+//! per-pid: [`PID_SIM`] events carry simulated time (`t_s × 1e6`),
+//! [`PID_PLAN`] and [`PID_SELF`] carry wall time since the handle's
+//! creation. Perfetto renders each pid as its own process group, so the
+//! domains never visually interleave.
+//!
+//! **Thread safety.** The handle is `Clone + Send + Sync` (an `Arc` over
+//! mutex-guarded state), so instrumented closures fanned out over
+//! `coordinator::run_queue` record into the same ring/registry as the
+//! coordinating thread. Determinism note: sim-domain events are emitted
+//! single-threaded in event-loop order, so a fixed seed yields an
+//! identical `PID_SIM` sequence; wall-domain events are real timings and
+//! are not expected to replay.
+
+pub mod counters;
+pub mod perfetto;
+pub mod selfprof;
+pub mod trace;
+
+pub use selfprof::ScopedTimer;
+pub use trace::{Event, Phase, DEFAULT_RING_CAP};
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::cli::Args;
+use crate::util::json::Json;
+
+/// First sim-time process id: the serve event loop replays each dispatch
+/// policy under its own pid (`PID_SIM + policy index`, pids 1..=9
+/// reserved) so the per-policy timelines — which all cover the same
+/// simulated window — never interleave on one track. `ts` = simulated
+/// seconds × 1e6; `tid` = region index.
+pub const PID_SIM: u32 = 1;
+/// Wall-clock process: planner/search phases (dse sweep, cosched stages).
+pub const PID_PLAN: u32 = 10;
+/// Wall-clock process: scoped self-profiling timers ([`Obs::scope`]).
+pub const PID_SELF: u32 = 11;
+
+/// Human-readable Perfetto track names, keyed by pid and (pid, tid).
+#[derive(Debug, Clone, Default)]
+pub struct Tracks {
+    pub processes: BTreeMap<u32, String>,
+    pub threads: BTreeMap<(u32, u32), String>,
+}
+
+/// Shared observability handle. Disabled by default ([`Obs::default`] /
+/// [`Obs::disabled`]); [`Obs::from_cli`] enables it when `--obs` or
+/// `--trace-out` is present. Cloning shares the underlying recorder.
+#[derive(Debug, Clone, Default)]
+pub struct Obs {
+    inner: Option<Arc<Inner>>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    epoch: Instant,
+    ring: Mutex<trace::Ring>,
+    counters: Mutex<counters::Registry>,
+    tracks: Mutex<Tracks>,
+}
+
+impl Obs {
+    /// The no-op handle every config defaults to.
+    pub fn disabled() -> Self {
+        Self { inner: None }
+    }
+
+    /// Enabled with the default ring capacity.
+    pub fn enabled() -> Self {
+        Self::with_cap(DEFAULT_RING_CAP)
+    }
+
+    /// Enabled with an explicit ring capacity (events). Sim-time pids are
+    /// named by the serve loop itself (one per policy); the wall-clock
+    /// processes are fixed, so they are pre-named here.
+    pub fn with_cap(cap: usize) -> Self {
+        let mut tracks = Tracks::default();
+        tracks.processes.insert(PID_PLAN, "planner".to_string());
+        tracks.processes.insert(PID_SELF, "selfprof".to_string());
+        Self {
+            inner: Some(Arc::new(Inner {
+                epoch: Instant::now(),
+                ring: Mutex::new(trace::Ring::new(cap)),
+                counters: Mutex::new(counters::Registry::default()),
+                tracks: Mutex::new(tracks),
+            })),
+        }
+    }
+
+    /// Enabled iff the subcommand was invoked with `--obs` or
+    /// `--trace-out` (both registered on `dse`/`cosched`/`serve`).
+    pub fn from_cli(args: &Args) -> Self {
+        if args.has("obs") || args.get("trace-out").is_some() {
+            Self::enabled()
+        } else {
+            Self::disabled()
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Microseconds of wall time since the handle was created (0.0 when
+    /// disabled) — the [`PID_PLAN`]/[`PID_SELF`] timestamp source.
+    pub fn wall_us(&self) -> f64 {
+        match &self.inner {
+            Some(i) => i.epoch.elapsed().as_nanos() as f64 / 1e3,
+            None => 0.0,
+        }
+    }
+
+    /// Name the `(pid, tid)` track in the Perfetto export (first name
+    /// wins, so call sites can register unconditionally).
+    pub fn name_track(&self, pid: u32, tid: u32, name: &str) {
+        if let Some(i) = &self.inner {
+            i.tracks
+                .lock()
+                .unwrap()
+                .threads
+                .entry((pid, tid))
+                .or_insert_with(|| name.to_string());
+        }
+    }
+
+    /// Name the `pid` process group in the Perfetto export (first name
+    /// wins).
+    pub fn name_process(&self, pid: u32, name: &str) {
+        if let Some(i) = &self.inner {
+            i.tracks
+                .lock()
+                .unwrap()
+                .processes
+                .entry(pid)
+                .or_insert_with(|| name.to_string());
+        }
+    }
+
+    /// Record a complete span (`ts_us` start, `dur_us` length).
+    pub fn span(&self, name: &str, pid: u32, tid: u32, ts_us: f64, dur_us: f64) {
+        if let Some(i) = &self.inner {
+            i.ring.lock().unwrap().push(Event {
+                name: name.to_string(),
+                pid,
+                tid,
+                ts_us,
+                phase: Phase::Span { dur_us },
+            });
+        }
+    }
+
+    /// Record an instant marker.
+    pub fn instant(&self, name: &str, pid: u32, tid: u32, ts_us: f64) {
+        if let Some(i) = &self.inner {
+            i.ring.lock().unwrap().push(Event {
+                name: name.to_string(),
+                pid,
+                tid,
+                ts_us,
+                phase: Phase::Instant,
+            });
+        }
+    }
+
+    /// Record a counter sample (one value per named series). Counter
+    /// tracks live on `tid` 0 of their pid; Perfetto keys them by name.
+    pub fn counter(&self, name: &str, pid: u32, ts_us: f64, series: &[(&str, f64)]) {
+        if let Some(i) = &self.inner {
+            i.ring.lock().unwrap().push(Event {
+                name: name.to_string(),
+                pid,
+                tid: 0,
+                ts_us,
+                phase: Phase::Counter {
+                    series: series.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+                },
+            });
+        }
+    }
+
+    /// Add `n` to the named monotone counter.
+    pub fn count(&self, name: &str, n: u64) {
+        if let Some(i) = &self.inner {
+            i.counters.lock().unwrap().count(name, n);
+        }
+    }
+
+    /// Set the named gauge.
+    pub fn gauge(&self, name: &str, v: f64) {
+        if let Some(i) = &self.inner {
+            i.counters.lock().unwrap().gauge(name, v);
+        }
+    }
+
+    /// Append a sample to the named histogram.
+    pub fn observe(&self, name: &str, v: f64) {
+        if let Some(i) = &self.inner {
+            i.counters.lock().unwrap().observe(name, v);
+        }
+    }
+
+    /// Current value of a monotone counter (0 when disabled or unset).
+    pub fn counter_total(&self, name: &str) -> u64 {
+        match &self.inner {
+            Some(i) => match i.counters.lock().unwrap().get(name) {
+                Some(counters::Cell::Counter(n)) => *n,
+                _ => 0,
+            },
+            None => 0,
+        }
+    }
+
+    /// Time `f` on the wall clock: a [`PID_SELF`] span plus a nanosecond
+    /// sample in the `time.<name>` histogram. Runs `f` bare when disabled.
+    pub fn timed<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
+        if self.inner.is_none() {
+            return f();
+        }
+        let _t = self.scope(name);
+        f()
+    }
+
+    /// RAII variant of [`Obs::timed`] for scopes that aren't closures.
+    pub fn scope(&self, name: &str) -> ScopedTimer<'_> {
+        ScopedTimer::new(self, name)
+    }
+
+    /// Snapshot of the ring in record order (empty when disabled).
+    pub fn events(&self) -> Vec<Event> {
+        match &self.inner {
+            Some(i) => i.ring.lock().unwrap().events(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Events the ring evicted under pressure.
+    pub fn dropped_events(&self) -> u64 {
+        match &self.inner {
+            Some(i) => i.ring.lock().unwrap().dropped(),
+            None => 0,
+        }
+    }
+
+    /// True when neither the ring nor the registry recorded anything.
+    pub fn is_silent(&self) -> bool {
+        match &self.inner {
+            Some(i) => i.ring.lock().unwrap().is_empty() && i.counters.lock().unwrap().is_empty(),
+            None => true,
+        }
+    }
+
+    /// `time.*` histograms as `(name, ns samples)` for the bench flusher.
+    pub fn timer_histograms(&self) -> Vec<(String, Vec<f64>)> {
+        match &self.inner {
+            Some(i) => i
+                .counters
+                .lock()
+                .unwrap()
+                .histograms()
+                .into_iter()
+                .filter(|(name, _)| name.starts_with(selfprof::TIMER_PREFIX))
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// The counter registry as JSON (`Json::Null` when disabled, so report
+    /// attachment sites can skip it with one check).
+    pub fn counters_json(&self) -> Json {
+        match &self.inner {
+            Some(i) => i.counters.lock().unwrap().to_json(),
+            None => Json::Null,
+        }
+    }
+
+    /// Registry table rows `(name, kind, summary)` for `report::obs`.
+    pub fn counter_rows(&self) -> Vec<(String, String, String)> {
+        match &self.inner {
+            Some(i) => i.counters.lock().unwrap().rows(),
+            None => Vec::new(),
+        }
+    }
+
+    /// The full Perfetto trace document ([`perfetto::trace_json`]).
+    pub fn trace_json(&self) -> Json {
+        match &self.inner {
+            Some(i) => {
+                let ring = i.ring.lock().unwrap();
+                let tracks = i.tracks.lock().unwrap();
+                perfetto::trace_json(&ring.events(), ring.dropped(), &tracks)
+            }
+            None => perfetto::trace_json(&[], 0, &Tracks::default()),
+        }
+    }
+
+    /// Write the Perfetto trace to `path` (parent dirs created).
+    pub fn write_trace(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.trace_json().to_pretty() + "\n")
+    }
+
+    /// Flush `time.*` timings to the CI bench recorder
+    /// ([`selfprof::flush_bench_records`]).
+    pub fn flush_bench_records(&self) -> std::io::Result<usize> {
+        selfprof::flush_bench_records(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_free_and_silent() {
+        let obs = Obs::disabled();
+        assert!(!obs.is_enabled());
+        obs.span("s", PID_SIM, 0, 0.0, 1.0);
+        obs.instant("i", PID_SIM, 0, 0.0);
+        obs.counter("c", PID_SIM, 0.0, &[("x", 1.0)]);
+        obs.count("n", 3);
+        obs.gauge("g", 1.0);
+        obs.observe("h", 1.0);
+        obs.name_track(PID_SIM, 0, "region0");
+        assert!(obs.is_silent());
+        assert!(obs.events().is_empty());
+        assert_eq!(obs.counters_json(), Json::Null);
+        assert_eq!(obs.counter_total("n"), 0);
+        assert_eq!(obs.timed("t", || 41 + 1), 42);
+        assert!(obs.is_silent(), "timed must not record when disabled");
+    }
+
+    #[test]
+    fn enabled_records_in_order() {
+        let obs = Obs::enabled();
+        obs.instant("a", PID_SIM, 0, 1.0);
+        obs.span("b", PID_SIM, 1, 2.0, 3.0);
+        obs.counter("c", PID_SIM, 4.0, &[("q", 7.0)]);
+        let evs = obs.events();
+        assert_eq!(
+            evs.iter().map(|e| e.name.as_str()).collect::<Vec<_>>(),
+            vec!["a", "b", "c"]
+        );
+        assert!(!obs.is_silent());
+        assert_eq!(obs.dropped_events(), 0);
+    }
+
+    #[test]
+    fn clones_share_the_recorder() {
+        let obs = Obs::enabled();
+        let clone = obs.clone();
+        clone.count("shared", 2);
+        obs.count("shared", 1);
+        assert_eq!(obs.counter_total("shared"), 3);
+        clone.instant("e", PID_PLAN, 0, 0.0);
+        assert_eq!(obs.events().len(), 1);
+    }
+
+    #[test]
+    fn from_cli_gates_on_flags() {
+        let flags = [("obs", false), ("trace-out", true), ("seed", true)];
+        let parse = |argv: &[&str]| {
+            let raw: Vec<String> = std::iter::once("serve".to_string())
+                .chain(argv.iter().map(|s| s.to_string()))
+                .collect();
+            Args::parse(&raw, &flags).unwrap()
+        };
+        assert!(!Obs::from_cli(&parse(&[])).is_enabled());
+        assert!(Obs::from_cli(&parse(&["--obs"])).is_enabled());
+        assert!(Obs::from_cli(&parse(&["--trace-out", "t.json"])).is_enabled());
+        assert!(!Obs::from_cli(&parse(&["--seed", "7"])).is_enabled());
+    }
+
+    #[test]
+    fn trace_json_names_registered_tracks() {
+        let obs = Obs::enabled();
+        obs.name_process(PID_SIM, "serve-sim [fifo]");
+        obs.name_track(PID_SIM, 2, "region2");
+        obs.instant("e", PID_SIM, 2, 1.0);
+        let doc = obs.trace_json();
+        let evs = doc.get("traceEvents").and_then(|a| a.as_arr()).unwrap();
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .filter_map(|e| e.get("args")?.get("name")?.as_str())
+            .collect();
+        assert!(names.contains(&"serve-sim [fifo]"), "{names:?}");
+        assert!(names.contains(&"planner"), "{names:?}");
+        assert!(names.contains(&"region2"), "{names:?}");
+    }
+
+    #[test]
+    fn ring_pressure_surfaces_dropped_count() {
+        let obs = Obs::with_cap(4);
+        for i in 0..10 {
+            obs.instant("e", PID_SIM, 0, i as f64);
+        }
+        assert_eq!(obs.events().len(), 4);
+        assert_eq!(obs.dropped_events(), 6);
+        assert_eq!(
+            obs.trace_json().get("droppedEvents").and_then(|d| d.as_f64()),
+            Some(6.0)
+        );
+    }
+}

@@ -1,0 +1,166 @@
+//! Chrome/Perfetto `trace_event` JSON exporter.
+//!
+//! Emits the JSON *object* format — `{"traceEvents": [...]}` — loadable by
+//! `ui.perfetto.dev` and `chrome://tracing`. Every event (including the
+//! `"M"` metadata events that name tracks) carries `ph`/`ts`/`pid`/`tid`,
+//! which is what `tools/trace_check.py` validates in CI. Timestamps are
+//! microseconds; the clock *domain* is per-pid (sim-time vs wall-time, see
+//! the `PID_*` constants in [`super`]), which is exactly what the
+//! trace_event format's process grouping is for — Perfetto renders each
+//! pid as its own process group with an independent time origin story told
+//! by its `process_name`.
+
+use super::trace::{Event, Phase};
+use super::Tracks;
+use crate::util::json::Json;
+
+/// Build the full trace document from a recorded event snapshot.
+pub fn trace_json(events: &[Event], dropped: u64, tracks: &Tracks) -> Json {
+    let mut arr = Json::Arr(Vec::new());
+    for (pid, name) in &tracks.processes {
+        arr.push(meta_event("process_name", *pid, 0, name));
+    }
+    for ((pid, tid), name) in &tracks.threads {
+        arr.push(meta_event("thread_name", *pid, *tid, name));
+    }
+    for ev in events {
+        arr.push(event_json(ev));
+    }
+    let mut top = Json::obj();
+    top.set("traceEvents", arr)
+        .set("displayTimeUnit", "ms")
+        .set("droppedEvents", dropped);
+    top
+}
+
+fn meta_event(kind: &str, pid: u32, tid: u32, name: &str) -> Json {
+    let mut args = Json::obj();
+    args.set("name", name);
+    let mut m = Json::obj();
+    m.set("name", kind)
+        .set("ph", "M")
+        .set("ts", 0.0)
+        .set("pid", pid)
+        .set("tid", tid)
+        .set("args", args);
+    m
+}
+
+fn event_json(ev: &Event) -> Json {
+    let mut j = Json::obj();
+    j.set("name", ev.name.as_str())
+        .set("ts", ev.ts_us)
+        .set("pid", ev.pid)
+        .set("tid", ev.tid);
+    match &ev.phase {
+        Phase::Span { dur_us } => {
+            j.set("ph", "X").set("dur", *dur_us);
+        }
+        Phase::Instant => {
+            // "s":"t" scopes the instant to its thread track.
+            j.set("ph", "i").set("s", "t");
+        }
+        Phase::Counter { series } => {
+            let mut args = Json::obj();
+            for (k, v) in series {
+                args.set(k, *v);
+            }
+            j.set("ph", "C").set("args", args);
+        }
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracks() -> Tracks {
+        let mut t = Tracks::default();
+        t.processes.insert(1, "serve-sim".to_string());
+        t.threads.insert((1, 0), "region0".to_string());
+        t
+    }
+
+    #[test]
+    fn every_event_has_required_fields() {
+        let events = vec![
+            Event {
+                name: "stage".into(),
+                pid: 1,
+                tid: 0,
+                ts_us: 10.0,
+                phase: Phase::Span { dur_us: 5.0 },
+            },
+            Event {
+                name: "arrive".into(),
+                pid: 1,
+                tid: 0,
+                ts_us: 11.0,
+                phase: Phase::Instant,
+            },
+            Event {
+                name: "queue_depth".into(),
+                pid: 1,
+                tid: 0,
+                ts_us: 12.0,
+                phase: Phase::Counter {
+                    series: vec![("chain_a".to_string(), 2.0)],
+                },
+            },
+        ];
+        let doc = trace_json(&events, 3, &tracks());
+        let evs = doc.get("traceEvents").and_then(|a| a.as_arr()).unwrap();
+        // 2 metadata + 3 payload events.
+        assert_eq!(evs.len(), 5);
+        for e in evs {
+            for key in ["ph", "ts", "pid", "tid"] {
+                assert!(e.get(key).is_some(), "missing {key} in {e}");
+            }
+        }
+        assert_eq!(doc.get("droppedEvents").and_then(|d| d.as_f64()), Some(3.0));
+    }
+
+    #[test]
+    fn phases_map_to_trace_event_ph() {
+        let span = Event {
+            name: "s".into(),
+            pid: 2,
+            tid: 1,
+            ts_us: 0.0,
+            phase: Phase::Span { dur_us: 1.0 },
+        };
+        let j = event_json(&span);
+        assert_eq!(j.get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(j.get("dur").and_then(|d| d.as_f64()), Some(1.0));
+
+        let ctr = Event {
+            name: "c".into(),
+            pid: 1,
+            tid: 0,
+            ts_us: 0.0,
+            phase: Phase::Counter {
+                series: vec![("a".to_string(), 4.0), ("b".to_string(), 5.0)],
+            },
+        };
+        let j = event_json(&ctr);
+        assert_eq!(j.get("ph").and_then(|p| p.as_str()), Some("C"));
+        let args = j.get("args").unwrap();
+        assert_eq!(args.get("a").and_then(|v| v.as_f64()), Some(4.0));
+        assert_eq!(args.get("b").and_then(|v| v.as_f64()), Some(5.0));
+    }
+
+    #[test]
+    fn document_round_trips_through_parser() {
+        let events = vec![Event {
+            name: "e".into(),
+            pid: 1,
+            tid: 0,
+            ts_us: 1.5,
+            phase: Phase::Instant,
+        }];
+        let doc = trace_json(&events, 0, &tracks());
+        let reparsed = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(reparsed, doc);
+    }
+}

@@ -1,0 +1,124 @@
+//! Scoped wall-clock self-profiling timers.
+//!
+//! [`Obs::timed`]/[`Obs::scope`] record each timed section twice: as a
+//! span on the self-profiling track (`PID_SELF`) and as a nanosecond
+//! sample in a `time.<name>` histogram cell. [`flush_bench_records`]
+//! then appends one record per `time.*` histogram to the JSONL file named
+//! by `PIPEORGAN_BENCH_JSON` — byte-compatible with what
+//! `benches/common::bench` writes — so CLI hot-path timings flow into the
+//! same `reports/BENCH_ci.json` trajectory the CI bench gate aggregates
+//! (run-only records are reported as "new" by `tools/bench_check.py`,
+//! never fatal).
+
+use super::{Obs, PID_SELF};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Histogram-name prefix marking nanosecond self-profiling samples.
+pub const TIMER_PREFIX: &str = "time.";
+
+/// RAII timer: records a span + histogram sample for `name` when dropped.
+/// Obtain via [`Obs::scope`]; disabled handles make both ends no-ops.
+pub struct ScopedTimer<'a> {
+    obs: &'a Obs,
+    name: String,
+    start_us: f64,
+}
+
+impl<'a> ScopedTimer<'a> {
+    pub(super) fn new(obs: &'a Obs, name: &str) -> Self {
+        Self {
+            obs,
+            name: name.to_string(),
+            start_us: obs.wall_us(),
+        }
+    }
+}
+
+impl Drop for ScopedTimer<'_> {
+    fn drop(&mut self) {
+        if !self.obs.is_enabled() {
+            return;
+        }
+        let dur_us = self.obs.wall_us() - self.start_us;
+        self.obs
+            .span(&self.name, PID_SELF, 0, self.start_us, dur_us);
+        self.obs
+            .observe(&format!("{TIMER_PREFIX}{}", self.name), dur_us * 1e3);
+    }
+}
+
+/// Append every `time.*` histogram as one bench-shaped JSONL record to the
+/// `PIPEORGAN_BENCH_JSON` file (no-op when the variable is unset or the
+/// handle is disabled). Returns the number of records written.
+pub fn flush_bench_records(obs: &Obs) -> std::io::Result<usize> {
+    let Ok(path) = std::env::var("PIPEORGAN_BENCH_JSON") else {
+        return Ok(0);
+    };
+    let mut written = 0;
+    for (name, samples) in obs.timer_histograms() {
+        if samples.is_empty() {
+            continue;
+        }
+        append_record(&path, &name, &Summary::from_ns(&samples))?;
+        written += 1;
+    }
+    Ok(written)
+}
+
+/// One compact JSON line, field-for-field the `benches/common` record.
+fn append_record(path: &str, name: &str, s: &Summary) -> std::io::Result<()> {
+    use std::io::Write as _;
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut j = Json::obj();
+    j.set("bench", name)
+        .set("n", s.n)
+        .set("mean_ns", s.mean_ns)
+        .set("stddev_ns", s.stddev_ns)
+        .set("min_ns", s.min_ns)
+        .set("p50_ns", s.p50_ns)
+        .set("p95_ns", s.p95_ns)
+        .set("max_ns", s.max_ns);
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(f, "{j}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Phase;
+
+    #[test]
+    fn scope_records_span_and_histogram() {
+        let obs = Obs::enabled();
+        {
+            let _t = obs.scope("unit.work");
+        }
+        let events = obs.events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].name, "unit.work");
+        assert_eq!(events[0].pid, PID_SELF);
+        assert!(matches!(events[0].phase, Phase::Span { .. }));
+        let hists = obs.timer_histograms();
+        assert_eq!(hists.len(), 1);
+        assert_eq!(hists[0].0, "time.unit.work");
+        assert_eq!(hists[0].1.len(), 1);
+    }
+
+    #[test]
+    fn disabled_scope_is_silent() {
+        let obs = Obs::disabled();
+        {
+            let _t = obs.scope("unit.work");
+        }
+        assert!(obs.events().is_empty());
+        assert!(obs.timer_histograms().is_empty());
+    }
+}

@@ -1,0 +1,135 @@
+//! Event model and ring buffer for the trace recorder.
+//!
+//! Three event shapes cover everything the subsystems emit: complete spans
+//! (Perfetto `"X"`, a name + start + duration on one track), instant
+//! markers (`"i"`, request lifecycle edges like arrive/finish/miss/drop),
+//! and counter samples (`"C"`, a named multi-series sample such as the
+//! per-task queue depths at one sim instant). Events are recorded into a
+//! bounded [`Ring`] that drops the *oldest* events under pressure — the
+//! tail of a run is what the re-planning controller and a human debugging
+//! a deadline miss care about — and counts what it dropped so the exporter
+//! can say so instead of silently truncating.
+
+use std::collections::VecDeque;
+
+/// Default ring capacity (events). At the serve event loop's emission rate
+/// (a handful of events per heap pop) this holds several simulated seconds
+/// of the canned scenarios; raise via [`super::Obs::with_cap`] for long
+/// traces.
+pub const DEFAULT_RING_CAP: usize = 65_536;
+
+/// Event shape; maps 1:1 onto Perfetto `ph` values in `obs::perfetto`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Phase {
+    /// Complete span (`ph:"X"`): `dur_us` of work starting at the event's
+    /// timestamp.
+    Span { dur_us: f64 },
+    /// Instant marker (`ph:"i"`).
+    Instant,
+    /// Counter sample (`ph:"C"`): one value per named series, rendered by
+    /// Perfetto as a stacked counter track per event name.
+    Counter { series: Vec<(String, f64)> },
+}
+
+/// One recorded event. `ts_us` is microseconds in the clock domain of
+/// `pid` (sim-time or wall-time — see the `PID_*` constants in
+/// [`super`]); `tid` picks the track within the domain (e.g. region index
+/// on the sim pid).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub name: String,
+    pub pid: u32,
+    pub tid: u32,
+    pub ts_us: f64,
+    pub phase: Phase,
+}
+
+/// Bounded event buffer: drop-oldest on overflow, with a dropped count.
+#[derive(Debug)]
+pub struct Ring {
+    cap: usize,
+    buf: VecDeque<Event>,
+    dropped: u64,
+}
+
+impl Ring {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "trace ring capacity must be positive");
+        Self {
+            cap,
+            buf: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events evicted to stay within capacity (oldest-first).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Snapshot of the buffered events in record order.
+    pub fn events(&self) -> Vec<Event> {
+        self.buf.iter().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &str, ts_us: f64) -> Event {
+        Event {
+            name: name.to_string(),
+            pid: 1,
+            tid: 0,
+            ts_us,
+            phase: Phase::Instant,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_order() {
+        let mut r = Ring::new(8);
+        for i in 0..5 {
+            r.push(ev("e", i as f64));
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.dropped(), 0);
+        let ts: Vec<f64> = r.events().iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = Ring::new(3);
+        for i in 0..5 {
+            r.push(ev("e", i as f64));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let ts: Vec<f64> = r.events().iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ring_rejects_zero_cap() {
+        Ring::new(0);
+    }
+}

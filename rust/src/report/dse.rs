@@ -237,6 +237,7 @@ mod tests {
             budget: None,
             max_labels: 32,
             channel_load_objective: false,
+            obs: Default::default(),
         };
         (cfg, dse)
     }

@@ -6,11 +6,13 @@ mod ablations;
 mod cosched;
 mod dse;
 mod figures;
+mod obs;
 mod serve;
 
 pub use ablations::{ablation_depth, ablation_organization, ablation_topology};
 pub use cosched::cosched_report;
 pub use dse::{dse_frontier, dse_gap, explore_all, run_dse_reports};
+pub use obs::obs_report;
 pub use serve::serve_reports;
 pub use figures::{
     fig13_performance, fig13_with, fig14_dram, fig14_with, fig15_congestion, fig16_depth,

@@ -32,10 +32,12 @@ use crate::energy::EnergyModel;
 use crate::ir::ModelGraph;
 use crate::mapper::PipeOrgan;
 use crate::noc::Topology;
+use crate::obs::{Obs, PID_SIM};
+use crate::util::stats::Histogram;
 
 use super::dispatch::{select_next, Policy, Request};
-use super::interference::{allocate_bandwidth, BandwidthModel};
-use super::metrics::{pct_or_zero, sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics};
+use super::interference::{allocate_bandwidth, donated_bandwidth, BandwidthModel};
+use super::metrics::{sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics};
 use super::ServeConfig;
 
 /// One pipeline stage of a request's service, from one planned segment.
@@ -264,6 +266,9 @@ struct Service {
     req: Request,
     start_s: f64,
     stage: usize,
+    /// When the current stage started (seconds) — the obs stage-span
+    /// anchor; dead weight (one f64) when tracing is off.
+    stage_start_s: f64,
     /// Remaining compute floor of the current stage (cycles).
     floor_rem: f64,
     /// Remaining DRAM traffic of the current stage (bytes).
@@ -325,7 +330,8 @@ const DEADLINE_EPS_S: f64 = 1e-9;
 
 /// Replay `arrivals` (one ascending stream per task, seconds) against the
 /// plan under one policy. Deterministic: same inputs, same
-/// [`ServeOutcome`], bit for bit.
+/// [`ServeOutcome`], bit for bit. Thin wrapper over [`simulate_traced`]
+/// with a disabled observability handle.
 pub fn simulate(
     scenario: &Scenario,
     plan: &ServePlan,
@@ -333,9 +339,57 @@ pub fn simulate(
     arrivals: &[Vec<f64>],
     opts: SimOptions,
 ) -> ServeOutcome {
+    simulate_traced(scenario, plan, policy, arrivals, opts, &Obs::disabled())
+}
+
+/// [`simulate`] with an observability handle. When `obs` is enabled the
+/// event loop additionally emits, in the sim-time clock domain (pid
+/// `PID_SIM + policy index`, one Perfetto process per replayed policy, one
+/// thread track per region):
+///
+/// - the request lifecycle as instants (`arrive`/`dispatch` and
+///   `finish`/`miss`/`drop`) and each service stage as a span on its
+///   region's track;
+/// - counter tracks sampled once per event epoch: `queue_depth` (one
+///   series per task), `dram_bw` + `dram_bw_donated` (the epoch's
+///   bandwidth split), `region_util` (cumulative busy fraction), and
+///   `worst_channel_load` (max planned load among busy regions);
+/// - registry counters (`serve.<policy>.arrivals`/`completions`/
+///   `misses`/`drops`/`dispatches`/`epochs`) and the
+///   `serve.<policy>.latency_ms` histogram for `report::obs`.
+///
+/// Sim-domain emission is single-threaded in event-loop order, so a fixed
+/// seed produces an identical event sequence (asserted by
+/// `tests/obs_integration.rs`). Disabled handles cost one branch per site.
+pub fn simulate_traced(
+    scenario: &Scenario,
+    plan: &ServePlan,
+    policy: Policy,
+    arrivals: &[Vec<f64>],
+    opts: SimOptions,
+    obs: &Obs,
+) -> ServeOutcome {
     let n = scenario.tasks.len();
     assert_eq!(arrivals.len(), n, "one arrival stream per task");
     let clock = plan.clock_hz;
+
+    // All per-event emission below is guarded on `obs_on`, so a disabled
+    // handle costs the hot loop one branch per site; the name tables are
+    // only materialized when tracing is live.
+    let obs_on = obs.is_enabled();
+    let pid = PID_SIM + Policy::ALL.iter().position(|&p| p == policy).unwrap_or(0) as u32;
+    let mut task_names: Vec<String> = Vec::new();
+    let mut region_keys: Vec<String> = Vec::new();
+    let mut cprefix = String::new();
+    if obs_on {
+        task_names = scenario.tasks.iter().map(|t| t.name().to_string()).collect();
+        region_keys = (0..n).map(|r| format!("region{r}")).collect();
+        cprefix = format!("serve.{}", policy.name());
+        obs.name_process(pid, &format!("serve-sim [{}]", policy.name()));
+        for (r, name) in task_names.iter().enumerate() {
+            obs.name_track(pid, r as u32, &format!("region{r} ({name})"));
+        }
+    }
 
     let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     let mut seq = 0u64;
@@ -420,6 +474,15 @@ pub fn simulate(
                 }
                 queues[req.task].push_back(req);
                 max_depth[req.task] = max_depth[req.task].max(queues[req.task].len());
+                if obs_on {
+                    obs.instant(
+                        &format!("arrive {}#{}", task_names[req.task], req.id),
+                        pid,
+                        req.task as u32,
+                        now * 1e6,
+                    );
+                    obs.count(&format!("{cprefix}.arrivals"), 1);
+                }
             }
             EvKind::Completion { region, .. } => {
                 let finished = {
@@ -428,7 +491,18 @@ pub fn simulate(
                         .as_mut()
                         .expect("completion fired on an idle region");
                     let stages = &plan.costs[s.req.task][region].stages;
+                    if obs_on {
+                        let ts = s.stage_start_s * 1e6;
+                        obs.span(
+                            &format!("{} s{}", task_names[s.req.task], s.stage),
+                            pid,
+                            region as u32,
+                            ts,
+                            now * 1e6 - ts,
+                        );
+                    }
                     s.stage += 1;
+                    s.stage_start_s = now;
                     if s.stage < stages.len() {
                         s.floor_rem = stages[s.stage].floor_cycles;
                         s.bytes_rem = stages[s.stage].dram_bytes;
@@ -439,10 +513,11 @@ pub fn simulate(
                 };
                 if let Some((req, start_s)) = finished {
                     regions[region].serving = None;
+                    let missed = now > req.deadline_s + DEADLINE_EPS_S;
                     recs[req.task].push(Rec {
                         latency_s: now - req.arrival_s,
                         wait_s: start_s - req.arrival_s,
-                        missed: now > req.deadline_s + DEADLINE_EPS_S,
+                        missed,
                     });
                     if opts.record_trace {
                         trace.push(TraceEvent {
@@ -451,6 +526,23 @@ pub fn simulate(
                             id: req.id,
                             kind: TraceKind::Complete { region },
                         });
+                    }
+                    if obs_on {
+                        let what = if missed { "miss" } else { "finish" };
+                        obs.instant(
+                            &format!("{what} {}#{}", task_names[req.task], req.id),
+                            pid,
+                            region as u32,
+                            now * 1e6,
+                        );
+                        obs.count(&format!("{cprefix}.completions"), 1);
+                        if missed {
+                            obs.count(&format!("{cprefix}.misses"), 1);
+                        }
+                        obs.observe(
+                            &format!("{cprefix}.latency_ms"),
+                            (now - req.arrival_s) * 1e3,
+                        );
                     }
                 }
             }
@@ -487,6 +579,15 @@ pub fn simulate(
                         kind: TraceKind::Drop { region },
                     });
                 }
+                if obs_on {
+                    obs.instant(
+                        &format!("drop {}#{}", task_names[d.task], d.id),
+                        pid,
+                        region as u32,
+                        now * 1e6,
+                    );
+                    obs.count(&format!("{cprefix}.drops"), 1);
+                }
             }
             if let Some(req) = chosen {
                 let first = plan.costs[req.task][region].stages[0];
@@ -494,6 +595,7 @@ pub fn simulate(
                     req,
                     start_s: now,
                     stage: 0,
+                    stage_start_s: now,
                     floor_rem: first.floor_cycles,
                     bytes_rem: first.dram_bytes,
                     alloc: 0.0,
@@ -505,6 +607,15 @@ pub fn simulate(
                         id: req.id,
                         kind: TraceKind::Start { region },
                     });
+                }
+                if obs_on {
+                    obs.instant(
+                        &format!("dispatch {}#{}", task_names[req.task], req.id),
+                        pid,
+                        region as u32,
+                        now * 1e6,
+                    );
+                    obs.count(&format!("{cprefix}.dispatches"), 1);
                 }
             }
         }
@@ -531,9 +642,60 @@ pub fn simulate(
                 seq += 1;
             }
         }
+
+        // Sample the epoch's counter tracks after the fresh split, so the
+        // timeline shows the state the simulator carries *out* of this
+        // event.
+        if obs_on {
+            obs.count(&format!("{cprefix}.epochs"), 1);
+            let ts = now * 1e6;
+            let depths: Vec<(&str, f64)> = task_names
+                .iter()
+                .map(String::as_str)
+                .zip(queues.iter().map(|q| q.len() as f64))
+                .collect();
+            obs.counter("queue_depth", pid, ts, &depths);
+            let granted: Vec<f64> = regions
+                .iter()
+                .map(|r| r.serving.as_ref().map_or(0.0, |s| s.alloc))
+                .collect();
+            let bw: Vec<(&str, f64)> = region_keys
+                .iter()
+                .map(String::as_str)
+                .zip(granted.iter().copied())
+                .collect();
+            obs.counter("dram_bw", pid, ts, &bw);
+            obs.counter(
+                "dram_bw_donated",
+                pid,
+                ts,
+                &[("donated", donated_bandwidth(&plan.entitlements, &granted))],
+            );
+            if now > 0.0 {
+                let util: Vec<(&str, f64)> = region_keys
+                    .iter()
+                    .map(String::as_str)
+                    .zip(
+                        regions
+                            .iter()
+                            .map(|r| (r.busy_cycles / (now * clock)).min(1.0)),
+                    )
+                    .collect();
+                obs.counter("region_util", pid, ts, &util);
+            }
+            let worst = regions
+                .iter()
+                .filter_map(|r| r.serving.as_ref())
+                .map(|s| plan.cosched.cosched.assignments[s.req.task].worst_channel_load)
+                .fold(0.0f64, f64::max);
+            obs.counter("worst_channel_load", pid, ts, &[("load", worst)]);
+        }
     }
 
     let span_s = now.max(1e-12);
+    if obs_on {
+        obs.gauge(&format!("{cprefix}.span_s"), span_s);
+    }
     let tasks: Vec<TaskMetrics> = scenario
         .tasks
         .iter()
@@ -542,6 +704,7 @@ pub fn simulate(
             let lat_ms: Vec<f64> = recs[t].iter().map(|r| r.latency_s * 1e3).collect();
             let waits_ms: Vec<f64> = recs[t].iter().map(|r| r.wait_s * 1e3).collect();
             let late = recs[t].iter().filter(|r| r.missed).count() as u64;
+            let lat = Histogram::from_samples(&lat_ms);
             TaskMetrics {
                 task: spec.name().to_string(),
                 rate_hz: spec.rate_hz,
@@ -550,9 +713,9 @@ pub fn simulate(
                 completed: recs[t].len() as u64,
                 dropped: drops[t],
                 missed: late + drops[t],
-                p50_ms: pct_or_zero(&lat_ms, 50.0),
-                p95_ms: pct_or_zero(&lat_ms, 95.0),
-                p99_ms: pct_or_zero(&lat_ms, 99.0),
+                p50_ms: lat.percentile(50.0),
+                p95_ms: lat.percentile(95.0),
+                p99_ms: lat.percentile(99.0),
                 mean_wait_ms: if waits_ms.is_empty() {
                     0.0
                 } else {
@@ -630,9 +793,14 @@ pub fn run_scenario(
 ) -> Result<ServeRun, String> {
     let cs = CoschedConfig {
         partition: sv.partition,
+        obs: sv.obs.clone(),
         ..CoschedConfig::default()
     };
-    let plan = plan_scenario(scenario, cfg, &cs, cache, workers)?;
+    let plan = sv
+        .obs
+        .timed("serve.plan_scenario", || {
+            plan_scenario(scenario, cfg, &cs, cache, workers)
+        })?;
     let opts = SimOptions {
         borrow: sv.borrow,
         bandwidth: sv.bandwidth,
@@ -643,7 +811,11 @@ pub fn run_scenario(
     let outcomes: Vec<ServeOutcome> = sv
         .policies
         .iter()
-        .map(|&p| simulate(scenario, &plan, p, &arrivals, opts))
+        .map(|&p| {
+            sv.obs.timed(&format!("serve.simulate.{}", p.name()), || {
+                simulate_traced(scenario, &plan, p, &arrivals, opts, &sv.obs)
+            })
+        })
         .collect();
     let sweeps: Vec<SweepResult> = if sv.sweep {
         sv.policies

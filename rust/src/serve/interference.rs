@@ -98,6 +98,23 @@ pub fn allocate_bandwidth(total: f64, entitlements: &[f64], demands: &[Option<f6
     alloc
 }
 
+/// Total bandwidth granted *above* static entitlements this epoch — the
+/// donated headroom the `dram_bw_donated` counter track plots. `granted`
+/// is one epoch's allocation vector aligned with `entitlements` (idle
+/// regions hold 0.0, exactly as [`allocate_bandwidth`] returns).
+pub fn donated_bandwidth(entitlements: &[f64], granted: &[f64]) -> f64 {
+    assert_eq!(
+        entitlements.len(),
+        granted.len(),
+        "one grant per entitled region"
+    );
+    entitlements
+        .iter()
+        .zip(granted)
+        .map(|(&e, &g)| (g - e).max(0.0))
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +205,16 @@ mod tests {
     fn all_idle_allocates_nothing() {
         let a = allocate_bandwidth(256.0, &[128.0, 128.0], &[None, None]);
         assert_eq!(a, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn donated_bandwidth_counts_only_excess_over_entitlement() {
+        let e = [128.0, 128.0];
+        // Region 0 absorbed all of region 1's idle share: 128 donated.
+        assert!((donated_bandwidth(&e, &[256.0, 0.0]) - 128.0).abs() < 1e-9);
+        // At or below entitlement nothing counts as donated.
+        assert_eq!(donated_bandwidth(&e, &[128.0, 100.0]), 0.0);
+        assert_eq!(donated_bandwidth(&e, &[0.0, 0.0]), 0.0);
     }
 
     #[test]

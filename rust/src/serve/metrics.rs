@@ -1,7 +1,7 @@
 //! Served-latency metrics, schedulability verdicts, and the rate sweep.
 //!
 //! A [`ServeOutcome`] rolls one simulation up into per-task tail latencies
-//! (nearest-rank percentiles via `util::stats::percentile`), deadline-miss
+//! (nearest-rank percentiles via `util::stats::Histogram`), deadline-miss
 //! accounting (late completions *plus* dispatcher drops — a dropped
 //! request missed its deadline by definition), queueing depth, and home-
 //! region utilization. A scenario is *schedulable* under a policy when no
@@ -17,7 +17,7 @@
 //! reports (and the monotonicity test) can audit the boundary.
 
 use crate::cosched::Scenario;
-use crate::util::stats::percentile;
+use crate::util::stats::Histogram;
 
 use super::arrivals::{streams, ArrivalProcess};
 use super::dispatch::Policy;
@@ -25,13 +25,11 @@ use super::engine::{simulate, ServePlan, SimOptions, TraceEvent};
 use super::interference::BandwidthModel;
 
 /// Nearest-rank percentile with an empty-sample guard (no completions →
-/// 0, e.g. a task whose every request was dropped).
+/// 0, e.g. a task whose every request was dropped). One-shot convenience
+/// over [`Histogram`]; sort once via `Histogram::from_samples` instead
+/// when taking several percentiles of one sample set.
 pub fn pct_or_zero(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        0.0
-    } else {
-        percentile(xs, p)
-    }
+    Histogram::from_samples(xs).percentile(p)
 }
 
 /// One task's served-traffic summary.

@@ -37,10 +37,10 @@ use crate::cosched::PartitionKind;
 pub use arrivals::{arrival_times, streams, ArrivalProcess, DEFAULT_JITTER_FRAC};
 pub use dispatch::{select_next, Policy, Request};
 pub use engine::{
-    plan_scenario, run_scenario, simulate, ServePlan, ServeRun, ServedCost, ServiceStage,
-    SimOptions, TraceEvent, TraceKind,
+    plan_scenario, run_scenario, simulate, simulate_traced, ServePlan, ServeRun, ServedCost,
+    ServiceStage, SimOptions, TraceEvent, TraceKind,
 };
-pub use interference::{allocate_bandwidth, BandwidthModel};
+pub use interference::{allocate_bandwidth, donated_bandwidth, BandwidthModel};
 pub use metrics::{
     pct_or_zero, sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics, SWEEP_MAX_MULT,
     SWEEP_MIN_MULT,
@@ -72,6 +72,10 @@ pub struct ServeConfig {
     pub sweep: bool,
     /// Master seed for the stochastic arrival processes.
     pub seed: u64,
+    /// Observability handle (`--obs` / `--trace-out`): request-lifecycle
+    /// events, per-region tracks and queue/bandwidth/utilization counter
+    /// tracks from the event loop. Disabled (free) by default.
+    pub obs: crate::obs::Obs,
 }
 
 impl Default for ServeConfig {
@@ -86,6 +90,7 @@ impl Default for ServeConfig {
             bandwidth: BandwidthModel::Dynamic,
             sweep: false,
             seed: 42,
+            obs: crate::obs::Obs::disabled(),
         }
     }
 }
@@ -132,6 +137,7 @@ impl ServeConfig {
             bandwidth,
             sweep: args.has("sweep"),
             seed,
+            obs: crate::obs::Obs::from_cli(args),
         })
     }
 }
@@ -167,7 +173,9 @@ fn parse_policies(spec: &str) -> Result<Vec<Policy>, String> {
 /// (`(name, takes_value)` — the `cli::Args` strict-flag table format).
 /// `--scenario` and `--partition` behave exactly as on `cosched`;
 /// `--cache-file`/`--cache-cap` manage the persistent evaluation cache
-/// exactly as on `dse`.
+/// exactly as on `dse`. `--obs` enables the observability counters;
+/// `--trace-out FILE` additionally writes the Perfetto event-loop trace
+/// there (and implies `--obs`).
 pub const SERVE_FLAGS: &[(&str, bool)] = &[
     ("scenario", true),
     ("partition", true),
@@ -180,6 +188,8 @@ pub const SERVE_FLAGS: &[(&str, bool)] = &[
     ("sweep", false),
     ("cache-file", true),
     ("cache-cap", true),
+    ("obs", false),
+    ("trace-out", true),
 ];
 
 #[cfg(test)]
@@ -250,6 +260,16 @@ mod tests {
         assert!(parse_sv(&["serve", "--rate-mult", "-1"]).is_err());
         assert!(parse_sv(&["serve", "--rate-mult", "inf"]).is_err());
         assert!(parse_sv(&["serve", "--nope"]).is_err());
+    }
+
+    #[test]
+    fn obs_flags_enable_the_handle() {
+        assert!(!parse_sv(&["serve"]).unwrap().obs.is_enabled());
+        assert!(parse_sv(&["serve", "--obs"]).unwrap().obs.is_enabled());
+        assert!(parse_sv(&["serve", "--trace-out", "t.json"])
+            .unwrap()
+            .obs
+            .is_enabled());
     }
 
     #[test]

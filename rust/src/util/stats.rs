@@ -32,13 +32,65 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (0..=100) by nearest-rank on a copy.
+///
+/// Sorts per call; when several percentiles are read off the same samples,
+/// build a [`Histogram`] once instead.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
-    assert!((0.0..=100.0).contains(&p));
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-    v[rank]
+    Histogram::from_samples(xs).percentile(p)
+}
+
+/// Sort-once sample set: sorts at construction, then serves any number of
+/// nearest-rank percentile reads without re-sorting. This is the shared
+/// percentile path for `serve::metrics` (p50/p95/p99 per task) and the
+/// `obs::counters` histogram cells, deduplicating what used to be one sort
+/// per percentile.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Histogram {
+    sorted: Vec<f64>,
+}
+
+impl Histogram {
+    /// Build from unsorted samples (one sort, NaN-free input assumed).
+    pub fn from_samples(xs: &[f64]) -> Self {
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { sorted }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Nearest-rank percentile (0..=100); 0.0 for an empty histogram, so
+    /// callers reporting tasks that never completed a request need no guard.
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * (self.sorted.len() - 1) as f64).round() as usize;
+        self.sorted[rank]
+    }
+
+    /// Arithmetic mean; 0.0 for empty.
+    pub fn mean(&self) -> f64 {
+        mean(&self.sorted)
+    }
+
+    /// Smallest sample; 0.0 for empty.
+    pub fn min(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(0.0)
+    }
+
+    /// Largest sample; 0.0 for empty.
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(0.0)
+    }
 }
 
 pub fn min(xs: &[f64]) -> f64 {
@@ -144,5 +196,34 @@ mod tests {
         let s = Summary::from_ns(&[1500.0, 1500.0]);
         let txt = format!("{s}");
         assert!(txt.contains("µs"), "{txt}");
+    }
+
+    #[test]
+    fn histogram_matches_percentile_fn() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let h = Histogram::from_samples(&xs);
+        for p in [0.0, 25.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), percentile(&xs, p), "p{p}");
+        }
+        assert_eq!(h.len(), 5);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 5.0);
+        assert_eq!(h.mean(), 3.0);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = Histogram::from_samples(&[]);
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn histogram_percentile_range_checked() {
+        Histogram::from_samples(&[1.0]).percentile(101.0);
     }
 }

@@ -40,6 +40,7 @@ fn quick_dse() -> DseConfig {
         budget: None,
         max_labels: 64,
         channel_load_objective: false,
+        obs: Default::default(),
     }
 }
 

@@ -1,0 +1,146 @@
+//! Integration tests for the observability layer end to end: same-seed
+//! serve runs replay an identical sim-domain event sequence, the Perfetto
+//! export obeys the trace_event schema (every event carries
+//! `ph`/`ts`/`pid`/`tid`, counter tracks sample monotonically, one named
+//! track per region), a disabled handle records nothing across a full
+//! simulation, and the `report::obs` artifact round-trips through the
+//! JSON parser.
+
+use std::collections::{BTreeMap, HashSet};
+
+use pipeorgan::config::ArchConfig;
+use pipeorgan::cosched::{scenario_by_name, CoschedConfig, Scenario};
+use pipeorgan::dse::EvalCache;
+use pipeorgan::obs::{Obs, PID_PLAN, PID_SIM};
+use pipeorgan::report::obs_report;
+use pipeorgan::serve::{
+    plan_scenario, simulate, simulate_traced, streams, ArrivalProcess, Policy, ServePlan,
+    SimOptions,
+};
+use pipeorgan::util::json::Json;
+
+/// One planned canned scenario with a fixed-seed Poisson replay: the
+/// shared fixture for every test here. Small array + short window keep
+/// debug-build runs fast.
+fn planned_xr_core() -> (Scenario, ServePlan, Vec<Vec<f64>>) {
+    let cfg = ArchConfig {
+        pe_rows: 16,
+        pe_cols: 16,
+        ..ArchConfig::default()
+    };
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").expect("canned scenario");
+    let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2)
+        .expect("planning succeeds");
+    let arrivals = streams(&sc, &ArrivalProcess::Poisson, 1.0, 0.1, 7);
+    assert!(
+        arrivals.iter().any(|s| !s.is_empty()),
+        "fixture window must carry traffic"
+    );
+    (sc, plan, arrivals)
+}
+
+#[test]
+fn same_seed_replays_an_identical_sim_event_sequence() {
+    let (sc, plan, arrivals) = planned_xr_core();
+    let run = || {
+        let obs = Obs::enabled();
+        simulate_traced(&sc, &plan, Policy::Edf, &arrivals, SimOptions::default(), &obs);
+        // Sim-domain events only: wall-domain timings are real and are
+        // not expected to replay.
+        obs.events()
+            .into_iter()
+            .filter(|e| (PID_SIM..PID_PLAN).contains(&e.pid))
+            .collect::<Vec<_>>()
+    };
+    let a = run();
+    let b = run();
+    assert!(!a.is_empty(), "instrumented run records sim events");
+    assert_eq!(a, b, "sim-domain trace must replay bit-identically");
+}
+
+#[test]
+fn perfetto_export_obeys_the_trace_event_schema() {
+    let (sc, plan, arrivals) = planned_xr_core();
+    let obs = Obs::enabled();
+    simulate_traced(&sc, &plan, Policy::Fifo, &arrivals, SimOptions::default(), &obs);
+    let doc = obs.trace_json();
+    let evs = doc
+        .get("traceEvents")
+        .and_then(|a| a.as_arr())
+        .expect("traceEvents array");
+    assert!(!evs.is_empty());
+    for e in evs {
+        for key in ["ph", "ts", "pid", "tid"] {
+            assert!(e.get(key).is_some(), "missing {key} in {e}");
+        }
+    }
+
+    // Counter tracks sample monotonically in time, per (pid, name).
+    let mut last: BTreeMap<(u64, String), f64> = BTreeMap::new();
+    for e in evs {
+        if e.get("ph").and_then(|p| p.as_str()) != Some("C") {
+            continue;
+        }
+        let pid = e.get("pid").and_then(|p| p.as_f64()).unwrap() as u64;
+        let name = e.get("name").and_then(|n| n.as_str()).unwrap().to_string();
+        let ts = e.get("ts").and_then(|t| t.as_f64()).unwrap();
+        if let Some(prev) = last.insert((pid, name.clone()), ts) {
+            assert!(ts >= prev, "counter {name} went back in time: {prev} -> {ts}");
+        }
+    }
+
+    // The timeline view's counter tracks are all present.
+    let counters: HashSet<&str> = evs
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("C"))
+        .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+        .collect();
+    for want in ["queue_depth", "dram_bw", "region_util", "worst_channel_load"] {
+        assert!(counters.contains(want), "missing counter track {want}: {counters:?}");
+    }
+
+    // One named track per region.
+    let thread_names = evs
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+        .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("thread_name"))
+        .count();
+    assert!(
+        thread_names >= sc.tasks.len(),
+        "{thread_names} named tracks for {} regions",
+        sc.tasks.len()
+    );
+}
+
+#[test]
+fn a_disabled_handle_records_nothing_across_a_full_simulation() {
+    let (sc, plan, arrivals) = planned_xr_core();
+    let obs = Obs::disabled();
+    let traced = simulate_traced(&sc, &plan, Policy::Edf, &arrivals, SimOptions::default(), &obs);
+    assert!(traced.total_requests() > 0);
+    assert!(obs.is_silent());
+    assert!(obs.events().is_empty());
+    assert_eq!(obs.counters_json(), Json::Null);
+    // And instrumentation changes nothing about the simulation itself.
+    let plain = simulate(&sc, &plan, Policy::Edf, &arrivals, SimOptions::default());
+    assert_eq!(plain.total_requests(), traced.total_requests());
+    assert_eq!(plain.total_missed(), traced.total_missed());
+}
+
+#[test]
+fn obs_report_round_trips_through_the_json_parser() {
+    let (sc, plan, arrivals) = planned_xr_core();
+    let obs = Obs::enabled();
+    obs.timed("serve.simulate.edf", || {
+        simulate_traced(&sc, &plan, Policy::Edf, &arrivals, SimOptions::default(), &obs)
+    });
+    let r = obs_report(&obs).expect("instrumented run reports");
+    assert_eq!(r.name, "obs");
+    assert!(!r.table.rows.is_empty());
+    let counters = r.json.get("counters").expect("counters key");
+    assert!(counters.get("serve.edf.epochs").is_some());
+    assert!(counters.get("time.serve.simulate.edf").is_some());
+    let reparsed = Json::parse(&r.json.to_pretty()).unwrap();
+    assert_eq!(reparsed, r.json);
+}

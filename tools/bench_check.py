@@ -2,6 +2,7 @@
 """Aggregate raw bench records and gate CI on perf regressions.
 
 Usage: python3 tools/bench_check.py [raw_jsonl] [baseline_json] [out_json]
+       python3 tools/bench_check.py --promote [ci_json] [baseline_json]
 
 Reads the JSONL file the bench harness appends to when PIPEORGAN_BENCH_JSON
 is set (one record per bench run: {"bench": name, "mean_ns": ..., "p50_ns":
@@ -18,6 +19,13 @@ BENCH_ci.json artifact, then compares against the checked-in baseline:
 
 Exit status 0 iff the gate passes. The artifact is written in all cases so
 the bench trajectory accumulates even across red runs.
+
+`--promote` arms or tightens the gate from a green run: every bench already
+in the baseline takes its p50_ns from the given BENCH_ci.json (default
+reports/BENCH_ci.json). Names in the CI artifact but not in the baseline —
+e.g. the obs layer's `time.*` self-profiling records, which only exist on
+`--obs` runs — are listed but never added, because a baseline entry makes
+the bench mandatory on every future run.
 """
 
 import json
@@ -37,7 +45,46 @@ def read_records(path):
     return benches
 
 
+def promote(argv):
+    ci_path = argv[0] if len(argv) > 0 else "reports/BENCH_ci.json"
+    baseline_path = argv[1] if len(argv) > 1 else "BENCH_baseline.json"
+    with open(ci_path) as f:
+        benches = json.load(f).get("benches", {})
+    if not benches:
+        print(f"error: no benches in {ci_path}", file=sys.stderr)
+        return 1
+    with open(baseline_path) as f:
+        doc = json.load(f)
+    entries = doc.get("benches", {})
+
+    updated, skipped = [], []
+    for name in sorted(benches):
+        p50 = benches[name].get("p50_ns")
+        if p50 is None:
+            continue
+        if name in entries:
+            old = entries[name].get("p50_ns")
+            entries[name]["p50_ns"] = p50
+            updated.append((name, old, p50))
+        else:
+            skipped.append(name)
+
+    with open(baseline_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    for name, old, new in updated:
+        was = f"{old / 1e6:.3f} ms" if old is not None else "null"
+        print(f"promote {name}: {was} -> {new / 1e6:.3f} ms")
+    if skipped:
+        print(f"skipped (not in baseline, add by hand to gate): {', '.join(skipped)}")
+    print(f"promoted {len(updated)} baselines from {ci_path} -> {baseline_path}")
+    return 0
+
+
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--promote":
+        return promote(sys.argv[2:])
     raw_path = sys.argv[1] if len(sys.argv) > 1 else "reports/bench_raw.jsonl"
     baseline_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_baseline.json"
     out_path = sys.argv[3] if len(sys.argv) > 3 else "reports/BENCH_ci.json"

@@ -9,6 +9,8 @@ Produces PNG counterparts of the paper's evaluation figures:
   fig15_congestion.png   — delay factor vs compute interval (log-x)
   fig16_depth.png        — depth profile per task
   fig5_aw_ratios.png     — per-task A/W ratio ranges (log-y)
+  obs_timeline.png       — serve queue-depth / utilization timeline, from
+                           a --trace-out export saved as reports/trace.json
 """
 
 import json
@@ -193,11 +195,62 @@ def plot_cosched(reports, out):
     plt.close(fig)
 
 
+def plot_obs(reports, out):
+    """Serve timeline from a `--trace-out` export: per-task queue depth and
+    per-region utilization over simulated time, for the lowest-numbered
+    sim pid in the trace (the first dispatch policy). Degrades gracefully:
+    a missing trace.json, a trace without counter samples, or one predating
+    a counter track all skip silently.
+    """
+    data = load(reports, "trace")
+    if not data:
+        return
+    events = data.get("traceEvents")
+    if not isinstance(events, list):
+        return
+    counters = [e for e in events if isinstance(e, dict) and e.get("ph") == "C"]
+    if not counters:
+        return
+    pid = min(e.get("pid", 0) for e in counters)
+    series = {}  # track name -> series key -> ([ts_ms], [value])
+    for e in counters:
+        if e.get("pid") != pid or not isinstance(e.get("args"), dict):
+            continue
+        for k, v in e["args"].items():
+            xs, ys = series.setdefault(e.get("name", "?"), {}).setdefault(k, ([], []))
+            xs.append(e.get("ts", 0.0) / 1e3)
+            ys.append(v)
+    panels = [
+        (name, label)
+        for name, label in (
+            ("queue_depth", "queue depth (requests)"),
+            ("region_util", "region utilization"),
+        )
+        if name in series
+    ]
+    if not panels:
+        return
+    fig, axes = plt.subplots(
+        len(panels), 1, figsize=(10, 3 * len(panels)), sharex=True, squeeze=False
+    )
+    for ax, (name, label) in zip(axes[:, 0], panels):
+        for key, (xs, ys) in sorted(series[name].items()):
+            ax.step(xs, ys, where="post", label=key, alpha=0.8)
+        ax.set_ylabel(label)
+        ax.legend(fontsize=6, ncol=2)
+        ax.grid(alpha=0.3)
+    axes[-1, 0].set_xlabel("simulated time (ms)")
+    axes[0, 0].set_title(f"Serve timeline — counter tracks from trace.json (pid {pid})")
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "obs_timeline.png"), dpi=150)
+    plt.close(fig)
+
+
 def main():
     reports = sys.argv[1] if len(sys.argv) > 1 else "reports"
     out = sys.argv[2] if len(sys.argv) > 2 else reports
     os.makedirs(out, exist_ok=True)
-    for fn in (plot_fig13, plot_fig14, plot_fig15, plot_fig16, plot_fig5, plot_cosched):
+    for fn in (plot_fig13, plot_fig14, plot_fig15, plot_fig16, plot_fig5, plot_cosched, plot_obs):
         fn(reports, out)
         print(f"{fn.__name__} done")
 

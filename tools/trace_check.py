@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Validate a Perfetto trace_event JSON file produced by --trace-out.
+
+Usage: python3 tools/trace_check.py [trace_json]
+
+Checks the properties DESIGN.md §Obs promises and ui.perfetto.dev relies
+on (the CI trace-smoke step runs this on a fresh `serve --trace-out`):
+
+  - the file is valid JSON with a non-empty traceEvents list;
+  - every event (metadata included) carries ph/ts/pid/tid;
+  - counter ("C") events have an args object and sample monotonically in
+    time per (pid, name) — a counter track that goes back in time renders
+    as garbage;
+  - the serve timeline's counter tracks (queue_depth, dram_bw,
+    region_util, worst_channel_load) are all present;
+  - at least one thread_name metadata event names a region track.
+
+Exit status 0 iff the trace passes; failures are listed on stderr.
+"""
+
+import json
+import sys
+
+REQUIRED_FIELDS = ("ph", "ts", "pid", "tid")
+REQUIRED_COUNTERS = ("queue_depth", "dram_bw", "region_util", "worst_channel_load")
+
+
+def check(doc):
+    errors = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["traceEvents must be a non-empty list"]
+
+    last_counter_ts = {}
+    counter_names = set()
+    thread_names = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event {i}: not an object")
+            continue
+        missing = [k for k in REQUIRED_FIELDS if k not in ev]
+        if missing:
+            errors.append(f"event {i} ({ev.get('name', '?')}): missing {missing}")
+            continue
+        ph = ev["ph"]
+        if ph == "M" and ev.get("name") == "thread_name":
+            thread_names += 1
+        if ph != "C":
+            continue
+        name = ev.get("name", "?")
+        counter_names.add(name)
+        if not isinstance(ev.get("args"), dict) or not ev["args"]:
+            errors.append(f"event {i} ({name}): counter without args series")
+        key = (ev["pid"], name)
+        ts = ev["ts"]
+        prev = last_counter_ts.get(key)
+        if prev is not None and ts < prev:
+            errors.append(
+                f"event {i} ({name}): counter ts {ts} < previous {prev} on pid {ev['pid']}"
+            )
+        last_counter_ts[key] = ts
+
+    for want in REQUIRED_COUNTERS:
+        if want not in counter_names:
+            errors.append(f"missing counter track {want} (have: {sorted(counter_names)})")
+    if thread_names == 0:
+        errors.append("no thread_name metadata events (region tracks would be unnamed)")
+    return errors
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "reports/trace.json"
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: {path}: {e}", file=sys.stderr)
+        return 1
+
+    errors = check(doc)
+    events = doc.get("traceEvents") or []
+    if errors:
+        print(f"trace check FAILED on {path} ({len(errors)} problems):", file=sys.stderr)
+        for msg in errors[:25]:
+            print(f"  - {msg}", file=sys.stderr)
+        if len(errors) > 25:
+            print(f"  ... and {len(errors) - 25} more", file=sys.stderr)
+        return 1
+    dropped = doc.get("droppedEvents", 0)
+    suffix = f", {dropped} dropped at the ring cap" if dropped else ""
+    print(f"trace check passed: {path} ({len(events)} events{suffix})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
