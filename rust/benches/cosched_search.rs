@@ -3,8 +3,10 @@
 //! evaluation cache is pre-warmed by one throwaway run, so the timed
 //! region is the beam itself — state expansion, label pruning, and memo
 //! lookups — not first-touch segment costing. `guillotine_beam_xr_hands`
-//! is pinned in BENCH_baseline.json; the bands DP runs alongside for
-//! scale, not for gating.
+//! is pinned in BENCH_baseline.json with a tightened per-entry
+//! `max_ratio` that locks in the bitset-key / parent-pointer-label /
+//! parallel-level rework (design and runbook: docs/PERFORMANCE.md); the
+//! bands DP runs alongside for scale, not for gating.
 
 mod common;
 

@@ -67,10 +67,14 @@ pub struct EvalOutcome {
 /// to `workers` scoped threads and return the results in task order.
 ///
 /// This is the one thread-fanout primitive of the crate — the (task ×
-/// mapper) sweep of [`run_jobs`] and the per-topology searches of
-/// `dse::explore` both ride on it, so parallel behavior (work stealing off
-/// a shared queue, result reordering, panic propagation at scope exit)
-/// stays identical everywhere.
+/// mapper) sweep of [`run_jobs`], the per-topology searches of
+/// `dse::explore`, and the per-level state expansion of the cosched
+/// guillotine beam all ride on it, so parallel behavior (work stealing
+/// off a shared queue, result reordering, panic propagation at scope
+/// exit) stays identical everywhere. Order preservation is load-bearing
+/// for the beam: results merge back positionally, which is what makes a
+/// parallel beam run bit-identical to a single-threaded one (see
+/// docs/PERFORMANCE.md).
 pub fn run_queue<T, R, F>(tasks: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send,

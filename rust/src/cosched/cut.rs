@@ -128,6 +128,37 @@ impl CutTree {
     /// and by construction the cuts tile the array with no gap — every PE
     /// is in exactly one task region or one explicit [`CutTree::Idle`]
     /// rectangle.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use pipeorgan::config::TopologyKind;
+    /// use pipeorgan::cosched::{CutAxis, CutTree};
+    ///
+    /// // Task 1 on the left 16×8 half; the right half split into two
+    /// // 8×8 quadrants for tasks 0 (top) and 2 (bottom).
+    /// let tree = CutTree::Cut {
+    ///     axis: CutAxis::Vertical,
+    ///     at: 8,
+    ///     low: Box::new(CutTree::Leaf { task: 1, topology: TopologyKind::Amp }),
+    ///     high: Box::new(CutTree::Cut {
+    ///         axis: CutAxis::Horizontal,
+    ///         at: 8,
+    ///         low: Box::new(CutTree::Leaf { task: 0, topology: TopologyKind::Mesh }),
+    ///         high: Box::new(CutTree::Leaf { task: 2, topology: TopologyKind::Mesh }),
+    ///     }),
+    /// };
+    /// let (partition, topologies) = tree.partition(16, 16).unwrap();
+    ///
+    /// // Regions and topologies are indexed by task, not tree position.
+    /// assert_eq!(partition.regions.len(), 3);
+    /// assert_eq!((partition.regions[1].rows, partition.regions[1].cols), (16, 8));
+    /// assert_eq!((partition.regions[0].rows, partition.regions[0].cols), (8, 8));
+    /// assert_eq!(topologies[1], TopologyKind::Amp);
+    /// // The three regions tile the array exactly.
+    /// let pes: usize = partition.regions.iter().map(|r| r.rows * r.cols).sum();
+    /// assert_eq!(pes, 16 * 16);
+    /// ```
     pub fn partition(
         &self,
         array_rows: usize,
@@ -292,6 +323,26 @@ impl CutTree {
     /// same `a`, `b`, … the placement ASCII art uses), topologies as one
     /// letter (`m`esh, `A`mp, `t`orus, `f`lattened butterfly), idle
     /// rectangles as `_` — `V8(a:m,H4(b:A,c:m))`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use pipeorgan::config::TopologyKind;
+    /// use pipeorgan::cosched::{CutAxis, CutTree};
+    ///
+    /// let tree = CutTree::Cut {
+    ///     axis: CutAxis::Vertical,
+    ///     at: 8,
+    ///     low: Box::new(CutTree::Leaf { task: 0, topology: TopologyKind::Amp }),
+    ///     high: Box::new(CutTree::Cut {
+    ///         axis: CutAxis::Horizontal,
+    ///         at: 6,
+    ///         low: Box::new(CutTree::Leaf { task: 2, topology: TopologyKind::Mesh }),
+    ///         high: Box::new(CutTree::Leaf { task: 1, topology: TopologyKind::Mesh }),
+    ///     }),
+    /// };
+    /// assert_eq!(tree.encode(), "V8(a:A,H6(c:m,b:m))");
+    /// ```
     pub fn encode(&self) -> String {
         match self {
             CutTree::Idle => "_".to_string(),

@@ -49,7 +49,8 @@ pub use scenario::{
     TaskSpec,
 };
 pub use search::{
-    canned_live_contexts, schedule, CoschedOutcome, CoschedResult, TaskAssignment,
+    canned_live_contexts, schedule, CoschedOutcome, CoschedResult, ProperSubsets, TaskAssignment,
+    TaskSet,
 };
 
 /// How the array is carved into per-task regions (`--partition`).

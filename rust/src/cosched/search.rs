@@ -24,11 +24,20 @@
 //! Under `PartitionKind::Guillotine` a second search runs on top: a
 //! memoized beam over guillotine [`CutTree`]s — for every (rectangle,
 //! task-set) state it enumerates cut axis × cut position (quantum grid) ×
-//! task-to-leaf assignment and keeps a Pareto set of labels, each carrying
-//! the realizing tree; leaves additionally choose a per-region NoC
-//! topology (the paper's modified mesh vs a conventional mesh). The
-//! vertical-band winner is seeded as a complete candidate, so the 2-D
-//! plan **never loses to 1-D** by construction.
+//! task-to-leaf assignment and keeps a Pareto set of labels; leaves
+//! additionally choose a per-region NoC topology (the paper's modified
+//! mesh vs a conventional mesh). The vertical-band winner is seeded as a
+//! complete candidate, so the 2-D plan **never loses to 1-D** by
+//! construction.
+//!
+//! The beam is engineered for warm-cache replan latency (see
+//! `docs/PERFORMANCE.md`): task subsets are [`TaskSet`] `u64` bitsets
+//! packed with the rectangle dims into a `Copy` memo key, labels are
+//! `Copy` parent-pointer records (no cut tree is ever cloned in the inner
+//! product loop — the winner's tree is rebuilt once from the memo), and
+//! states are expanded bottom-up by task-set size with each level fanned
+//! out over `coordinator::run_queue` in sorted state order, so any worker
+//! count produces bit-identical results.
 //!
 //! Three allocations are reported per scenario: `solo` (each task owns the
 //! whole array, one frame of work time-multiplexed — makespan is the sum),
@@ -43,8 +52,9 @@ use crate::config::{ArchConfig, TopologyKind};
 use crate::coordinator::run_queue;
 use crate::cost::{evaluate_segment, Mapper, MappingPlan};
 use crate::dse::{
-    context_fingerprint, heuristic_segment_key, pareto_filter_first, tuned_plan, DseConfig,
-    EvalCache, ParetoPoint, RunCounters,
+    arch_fingerprint, combine_fingerprints, context_fingerprint, graph_fingerprint,
+    heuristic_segment_key, pareto_filter_first, tuned_plan, DseConfig, EvalCache, ParetoPoint,
+    RunCounters,
 };
 use crate::energy::EnergyModel;
 use crate::ir::ModelGraph;
@@ -398,34 +408,35 @@ fn scenario_contexts(scenario: &Scenario, cfg: &ArchConfig, cs: &CoschedConfig) 
         return out;
     }
     let widths = candidate_widths(cfg.pe_cols, n, cs.quantum);
-    let grid = if cs.partition == PartitionKind::Guillotine {
-        Some((
-            reachable_dims(cfg.pe_rows, cs.quantum),
-            reachable_dims(cfg.pe_cols, cs.quantum),
-            region_topologies(cfg),
-        ))
-    } else {
-        None
-    };
-    for spec in &scenario.tasks {
-        out.insert(context_fingerprint(&spec.graph, cfg));
-        for &width in &widths {
-            out.insert(context_fingerprint(
-                &spec.graph,
-                &region_topo_config(cfg, cfg.pe_rows, width, cfg.topology),
-            ));
-        }
-        if let Some((rset, cset, topos)) = &grid {
-            for &r in rset {
-                for &c in cset {
-                    for &topo in topos {
-                        out.insert(context_fingerprint(
-                            &spec.graph,
-                            &region_topo_config(cfg, r, c, topo),
-                        ));
-                    }
+    // Contexts are a cross product of (task graph) × (region config), so
+    // hash each half once and combine: n graph walks + G config JSON
+    // serializations instead of n×G full fingerprints. The combined
+    // values are identical to `context_fingerprint` by definition.
+    let mut arch_fps: Vec<u64> = vec![arch_fingerprint(cfg)];
+    for &width in &widths {
+        arch_fps.push(arch_fingerprint(&region_topo_config(
+            cfg,
+            cfg.pe_rows,
+            width,
+            cfg.topology,
+        )));
+    }
+    if cs.partition == PartitionKind::Guillotine {
+        let rset = reachable_dims(cfg.pe_rows, cs.quantum);
+        let cset = reachable_dims(cfg.pe_cols, cs.quantum);
+        let topos = region_topologies(cfg);
+        for &r in &rset {
+            for &c in &cset {
+                for &topo in &topos {
+                    arch_fps.push(arch_fingerprint(&region_topo_config(cfg, r, c, topo)));
                 }
             }
+        }
+    }
+    for spec in &scenario.tasks {
+        let gfp = graph_fingerprint(&spec.graph);
+        for &afp in &arch_fps {
+            out.insert(combine_fingerprints(gfp, afp));
         }
     }
     out
@@ -490,22 +501,284 @@ impl CostTable<'_> {
     }
 }
 
+/// A set of task indices encoded as a `u64` bitset (bit `t` set ⇔ task
+/// `t` in the set) — the guillotine DP's memo-key representation of task
+/// subsets. Replaces sorted `Vec<usize>` keys: it is `Copy`, hashes as
+/// one word, and subset enumeration is two bit operations per step. Two
+/// sets are equal exactly when they contain the same tasks, whatever
+/// order they were built in — the agreement with sorted-Vec keys that
+/// `tests/property_invariants.rs` checks on random subsets.
+///
+/// # Examples
+///
+/// ```
+/// use pipeorgan::cosched::TaskSet;
+///
+/// let s = TaskSet::from_tasks(&[2, 0, 2]);
+/// assert_eq!(s.to_sorted_vec(), vec![0, 2]);
+/// assert_eq!(s.len(), 2);
+/// assert!(s.contains(2) && !s.contains(1));
+/// // Proper subsets of {0, 2}: {2} then {0}, descending bitset order.
+/// let subs: Vec<_> = s.proper_subsets().map(TaskSet::to_sorted_vec).collect();
+/// assert_eq!(subs, vec![vec![2], vec![0]]);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskSet(u64);
+
+impl TaskSet {
+    /// Largest task index a set can hold (+1): one bit per task.
+    pub const MAX_TASKS: usize = 64;
+
+    /// The empty set.
+    pub fn empty() -> TaskSet {
+        TaskSet(0)
+    }
+
+    /// The full set `{0, …, n-1}`.
+    pub fn full(n: usize) -> TaskSet {
+        assert!(n <= Self::MAX_TASKS, "at most {} tasks", Self::MAX_TASKS);
+        if n == Self::MAX_TASKS {
+            TaskSet(u64::MAX)
+        } else {
+            TaskSet((1u64 << n) - 1)
+        }
+    }
+
+    /// The set of exactly the given task indices; order and duplicates
+    /// are irrelevant, which is what makes the bitset a sound stand-in
+    /// for a sorted, deduplicated `Vec<usize>` key.
+    pub fn from_tasks(tasks: &[usize]) -> TaskSet {
+        let mut bits = 0u64;
+        for &t in tasks {
+            assert!(t < Self::MAX_TASKS, "task index {t} out of range");
+            bits |= 1u64 << t;
+        }
+        TaskSet(bits)
+    }
+
+    /// The raw bit pattern (bit `t` ⇔ task `t`).
+    pub fn bits(self) -> u64 {
+        self.0
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Number of tasks in the set.
+    pub fn len(self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    pub fn contains(self, task: usize) -> bool {
+        task < Self::MAX_TASKS && self.0 & (1u64 << task) != 0
+    }
+
+    /// The single member of a singleton set, `None` otherwise.
+    pub fn sole_member(self) -> Option<usize> {
+        if self.len() == 1 {
+            Some(self.0.trailing_zeros() as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Members in ascending order — the sorted-Vec key this set replaces.
+    pub fn to_sorted_vec(self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut bits = self.0;
+        while bits != 0 {
+            out.push(bits.trailing_zeros() as usize);
+            bits &= bits - 1;
+        }
+        out
+    }
+
+    /// Set difference `universe \ self` — the high side of a split whose
+    /// low side is `self`.
+    pub fn complement_in(self, universe: TaskSet) -> TaskSet {
+        TaskSet(universe.0 & !self.0)
+    }
+
+    /// Every non-empty *proper* subset, in descending bitset order — the
+    /// exact order the classic `lo = (lo - 1) & mask` loop walks, which
+    /// the DP relies on for reproducible label accumulation.
+    pub fn proper_subsets(self) -> ProperSubsets {
+        ProperSubsets {
+            mask: self.0,
+            next: self.0.wrapping_sub(1) & self.0,
+        }
+    }
+}
+
+/// Iterator returned by [`TaskSet::proper_subsets`].
+pub struct ProperSubsets {
+    mask: u64,
+    next: u64,
+}
+
+impl Iterator for ProperSubsets {
+    type Item = TaskSet;
+
+    fn next(&mut self) -> Option<TaskSet> {
+        if self.next == 0 {
+            return None;
+        }
+        let cur = self.next;
+        self.next = cur.wrapping_sub(1) & self.mask;
+        Some(TaskSet(cur))
+    }
+}
+
+/// A guillotine DP state: rectangle dimensions plus the task subset to
+/// place, packed `Copy`-small (dims fit `u16` comfortably) so memo keys
+/// hash as a few words instead of a heap vector. `Ord` gives the
+/// deterministic per-level expansion order of the parallel beam.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+struct StateKey {
+    rows: u16,
+    cols: u16,
+    tasks: TaskSet,
+}
+
+impl StateKey {
+    fn new(rows: usize, cols: usize, tasks: TaskSet) -> StateKey {
+        debug_assert!(rows <= u16::MAX as usize && cols <= u16::MAX as usize);
+        StateKey {
+            rows: rows as u16,
+            cols: cols as u16,
+            tasks,
+        }
+    }
+
+    fn rows(self) -> usize {
+        self.rows as usize
+    }
+
+    fn cols(self) -> usize {
+        self.cols as usize
+    }
+}
+
+/// Where a beam label came from: a leaf assignment, or a cut composing
+/// two child labels referenced by (child state, index into that state's
+/// *final pruned* label vector — children are always finished before any
+/// parent expands). Labels are `Copy`, so the beam's inner product loop
+/// never clones a cut tree; [`GuillotineBeam::rebuild`] re-materializes
+/// the tree for the one winning label by walking these parent pointers.
+#[derive(Debug, Clone, Copy)]
+enum LabelSrc {
+    Leaf {
+        task: usize,
+        topology: TopologyKind,
+    },
+    Cut {
+        axis: CutAxis,
+        at: u16,
+        lo: (StateKey, u32),
+        hi: (StateKey, u32),
+    },
+}
+
 /// A guillotine-DP label: one frame's objective vector for a (rectangle,
-/// task-set) state plus the cut tree realizing it. Composition mirrors
-/// the band labels: makespan/load by `max`, energy/DRAM by sum.
-#[derive(Debug, Clone)]
-struct GLabel {
+/// task-set) state plus the provenance that reconstructs its cut tree on
+/// demand. Composition mirrors the band labels: makespan/load by `max`,
+/// energy/DRAM by sum.
+#[derive(Debug, Clone, Copy)]
+struct BeamLabel {
     makespan: f64,
     energy: f64,
     dram: u64,
     load: f64,
-    tree: CutTree,
+    src: LabelSrc,
 }
 
-impl ParetoPoint for GLabel {
+impl ParetoPoint for BeamLabel {
     fn objectives(&self) -> [f64; 4] {
         [self.makespan, self.energy, self.dram as f64, self.load]
     }
+}
+
+/// Visit every feasible (cut, low child, high child) decomposition of a
+/// composed state, in the DP's canonical order: vertical cuts then
+/// horizontal, positions ascending on the quantum grid, low-side subsets
+/// in descending bitset order. Every proper non-empty subset goes to the
+/// low side once; the complement takes the high side. Both orientations
+/// are enumerated (the grid need not be symmetric around the cut), so
+/// nothing is lost. Shared by state discovery and expansion so the two
+/// can never disagree about which children exist.
+fn for_each_split(
+    key: StateKey,
+    quantum: usize,
+    mut f: impl FnMut(CutAxis, usize, StateKey, StateKey),
+) {
+    let (rows, cols) = (key.rows(), key.cols());
+    let q = quantum.max(1);
+    for (axis, dim) in [(CutAxis::Vertical, cols), (CutAxis::Horizontal, rows)] {
+        for at in (1..).map(|k| k * q).take_while(|&a| a < dim) {
+            for lo in key.tasks.proper_subsets() {
+                let hi = lo.complement_in(key.tasks);
+                let ((lr, lc), (hr, hc)) = match axis {
+                    CutAxis::Vertical => ((rows, at), (rows, cols - at)),
+                    CutAxis::Horizontal => ((at, cols), (rows - at, cols)),
+                };
+                if lr * lc >= lo.len() && hr * hc >= hi.len() {
+                    f(axis, at, StateKey::new(lr, lc, lo), StateKey::new(hr, hc, hi));
+                }
+            }
+        }
+    }
+}
+
+/// Expand one composed (≥ 2 tasks) state against fully-computed child
+/// levels. A free function on purpose: the per-level parallel sweep
+/// shares `memo` read-only across `run_queue` workers, and borrowing the
+/// whole beam struct would drag the non-`Sync` cost table (interior
+/// `RefCell`) into the closure. Returns the state's final pruned labels
+/// plus counter deltas (memo lookups, labels pruned) the caller reports
+/// to obs in one batch.
+fn expand_composed(
+    key: StateKey,
+    memo: &HashMap<StateKey, Vec<BeamLabel>>,
+    quantum: usize,
+    max_labels: usize,
+) -> (Vec<BeamLabel>, u64, u64) {
+    let count = key.tasks.len();
+    let mut labels: Vec<BeamLabel> = Vec::new();
+    let mut lookups = 0u64;
+    let mut pruned = 0u64;
+    if key.rows() * key.cols() >= count {
+        for_each_split(key, quantum, |axis, at, lo_key, hi_key| {
+            let lo_labels = memo.get(&lo_key).expect("children finished level-by-level");
+            let hi_labels = memo.get(&hi_key).expect("children finished level-by-level");
+            lookups += 2;
+            for (i, a) in lo_labels.iter().enumerate() {
+                for (j, b) in hi_labels.iter().enumerate() {
+                    labels.push(BeamLabel {
+                        makespan: a.makespan.max(b.makespan),
+                        energy: a.energy + b.energy,
+                        dram: a.dram.saturating_add(b.dram),
+                        load: a.load.max(b.load),
+                        src: LabelSrc::Cut {
+                            axis,
+                            at: at as u16,
+                            lo: (lo_key, i as u32),
+                            hi: (hi_key, j as u32),
+                        },
+                    });
+                }
+            }
+            if labels.len() > 8 * max_labels {
+                let before = labels.len();
+                prune_labels(&mut labels, max_labels);
+                pruned += (before - labels.len()) as u64;
+            }
+        });
+    }
+    let before = labels.len();
+    prune_labels(&mut labels, max_labels);
+    pruned += (before - labels.len()) as u64;
+    (labels, lookups, pruned)
 }
 
 /// The beam over cut trees: a memoized DP on (rectangle dims, task set)
@@ -514,129 +787,161 @@ impl ParetoPoint for GLabel {
 /// task-subset split, composing child Pareto sets and pruning each state
 /// to `max_labels` lowest-makespan-first (so the makespan optimum over
 /// the cut grid always survives). Dims are translation-invariant, which
-/// is what makes the memoization sound.
-struct GuillotineSearch<'a, 'b> {
+/// is what makes the memoization sound. States are solved bottom-up by
+/// task-set size, each level fanned out over `coordinator::run_queue`.
+struct GuillotineBeam<'a, 'b> {
     table: &'b CostTable<'a>,
     /// Per-task invocations per frame (frame-scales energy/DRAM/busy).
     inv: &'b [f64],
-    topos: Vec<TopologyKind>,
+    topos: &'b [TopologyKind],
     quantum: usize,
     max_labels: usize,
-    memo: HashMap<(usize, usize, u32), Vec<GLabel>>,
+    memo: HashMap<StateKey, Vec<BeamLabel>>,
 }
 
-impl GuillotineSearch<'_, '_> {
-    fn solve(&mut self, rows: usize, cols: usize, mask: u32) -> Vec<GLabel> {
-        let obs = &self.table.cs.obs;
-        if let Some(v) = self.memo.get(&(rows, cols, mask)) {
-            obs.count("cosched.guillotine.memo_hit", 1);
-            return v.clone();
-        }
-        obs.count("cosched.guillotine.state_expanded", 1);
-        let count = mask.count_ones() as usize;
-        let mut labels: Vec<GLabel> = Vec::new();
-        if count == 1 {
-            let task = mask.trailing_zeros() as usize;
-            let topos = self.topos.clone();
-            for topo in topos {
-                let pc = self.table.cost(task, rows, cols, topo);
-                labels.push(GLabel {
-                    makespan: pc.cycles * self.inv[task],
-                    energy: pc.energy * self.inv[task],
-                    dram: pc.dram_words.saturating_mul(self.inv[task] as u64),
-                    load: pc.worst_load,
-                    tree: CutTree::Leaf {
-                        task,
-                        topology: topo,
-                    },
-                });
+impl GuillotineBeam<'_, '_> {
+    /// Every state reachable from `root`, grouped by task-set size
+    /// (`levels[k]` holds the sorted size-`k` states). The structural
+    /// walk visits exactly the feasible child pairs `for_each_split`
+    /// yields, so the bottom-up sweep computes precisely the states a
+    /// top-down memoized recursion would have.
+    fn reachable_states(&self, root: StateKey) -> Vec<Vec<StateKey>> {
+        let mut seen: HashSet<StateKey> = HashSet::new();
+        seen.insert(root);
+        let mut stack = vec![root];
+        while let Some(s) = stack.pop() {
+            if s.tasks.len() <= 1 || s.rows() * s.cols() < s.tasks.len() {
+                continue;
             }
-        } else if rows * cols >= count {
-            for (axis, dim) in [(CutAxis::Vertical, cols), (CutAxis::Horizontal, rows)] {
-                for at in cut_positions(dim, self.quantum) {
-                    // Every proper non-empty subset goes to the low side
-                    // once; the complement takes the high side. Both
-                    // orientations are enumerated (the grid need not be
-                    // symmetric around the cut), so nothing is lost.
-                    let mut lo = mask.wrapping_sub(1) & mask;
-                    while lo != 0 {
-                        let hi = mask & !lo;
-                        let ((lr, lc), (hr, hc)) = match axis {
-                            CutAxis::Vertical => ((rows, at), (rows, cols - at)),
-                            CutAxis::Horizontal => ((at, cols), (rows - at, cols)),
-                        };
-                        if lr * lc >= lo.count_ones() as usize
-                            && hr * hc >= hi.count_ones() as usize
-                        {
-                            let lo_labels = self.solve(lr, lc, lo);
-                            let hi_labels = self.solve(hr, hc, hi);
-                            for a in &lo_labels {
-                                for b in &hi_labels {
-                                    labels.push(GLabel {
-                                        makespan: a.makespan.max(b.makespan),
-                                        energy: a.energy + b.energy,
-                                        dram: a.dram.saturating_add(b.dram),
-                                        load: a.load.max(b.load),
-                                        tree: CutTree::Cut {
-                                            axis,
-                                            at,
-                                            low: Box::new(a.tree.clone()),
-                                            high: Box::new(b.tree.clone()),
-                                        },
-                                    });
-                                }
-                            }
-                            if labels.len() > 8 * self.max_labels {
-                                let before = labels.len();
-                                prune_labels(&mut labels, self.max_labels);
-                                obs.count(
-                                    "cosched.guillotine.labels_pruned",
-                                    (before - labels.len()) as u64,
-                                );
-                            }
-                        }
-                        lo = lo.wrapping_sub(1) & mask;
+            for_each_split(s, self.quantum, |_axis, _at, lo, hi| {
+                for child in [lo, hi] {
+                    if seen.insert(child) {
+                        stack.push(child);
                     }
                 }
+            });
+        }
+        let mut levels: Vec<Vec<StateKey>> = vec![Vec::new(); root.tasks.len() + 1];
+        for s in seen {
+            levels[s.tasks.len()].push(s);
+        }
+        for level in levels.iter_mut() {
+            level.sort_unstable();
+        }
+        levels
+    }
+
+    /// Labels of a single-task state: one per candidate per-region
+    /// topology, straight from the (pre-warmed) cost table.
+    fn expand_leaf(&self, key: StateKey) -> Vec<BeamLabel> {
+        let task = key.tasks.sole_member().expect("leaf states hold one task");
+        let mut labels = Vec::with_capacity(self.topos.len());
+        for &topo in self.topos {
+            let pc = self.table.cost(task, key.rows(), key.cols(), topo);
+            labels.push(BeamLabel {
+                makespan: pc.cycles * self.inv[task],
+                energy: pc.energy * self.inv[task],
+                dram: pc.dram_words.saturating_mul(self.inv[task] as u64),
+                load: pc.worst_load,
+                src: LabelSrc::Leaf {
+                    task,
+                    topology: topo,
+                },
+            });
+        }
+        labels
+    }
+
+    /// Run the bottom-up sweep and return the root's final labels.
+    ///
+    /// Level 1 reads the `RefCell`-backed cost table and stays
+    /// sequential (after the parallel grid pre-warm these are pure memo
+    /// lookups); every larger level fans its states out over
+    /// `run_queue`. Per-state label accumulation is byte-for-byte the
+    /// sequential order, children are always final before parents, and
+    /// results merge in the level's sorted state order (`run_queue`
+    /// preserves input order) — so any worker count produces
+    /// bit-identical label sets, which `tests/cosched_integration.rs`
+    /// asserts against a forced single-thread run.
+    fn solve(&mut self, root: StateKey, workers: usize) -> Vec<BeamLabel> {
+        let obs = self.table.cs.obs.clone();
+        let levels = self.reachable_states(root);
+        for (size, level) in levels.iter().enumerate().skip(1) {
+            if level.is_empty() {
+                continue;
+            }
+            if size == 1 {
+                for &key in level {
+                    let mut labels = self.expand_leaf(key);
+                    let before = labels.len();
+                    prune_labels(&mut labels, self.max_labels);
+                    obs.count("cosched.guillotine.state_expanded", 1);
+                    obs.count(
+                        "cosched.guillotine.labels_pruned",
+                        (before - labels.len()) as u64,
+                    );
+                    self.memo.insert(key, labels);
+                }
+                continue;
+            }
+            let (quantum, max_labels) = (self.quantum, self.max_labels);
+            let results = {
+                let memo = &self.memo;
+                run_queue(level.clone(), workers, |key| {
+                    expand_composed(key, memo, quantum, max_labels)
+                })
+            };
+            for (key, (labels, lookups, pruned)) in level.iter().zip(results) {
+                obs.count("cosched.guillotine.state_expanded", 1);
+                obs.count("cosched.guillotine.memo_hit", lookups);
+                obs.count("cosched.guillotine.labels_pruned", pruned);
+                self.memo.insert(*key, labels);
             }
         }
-        let before = labels.len();
-        prune_labels(&mut labels, self.max_labels);
-        obs.count(
-            "cosched.guillotine.labels_pruned",
-            (before - labels.len()) as u64,
-        );
-        self.memo.insert((rows, cols, mask), labels.clone());
-        labels
+        self.memo.get(&root).cloned().unwrap_or_default()
+    }
+
+    /// Re-materialize the cut tree of one surviving label by walking its
+    /// parent pointers through the memo — the only place the guillotine
+    /// search ever builds a tree.
+    fn rebuild(&self, key: StateKey, idx: usize) -> CutTree {
+        match self.memo[&key][idx].src {
+            LabelSrc::Leaf { task, topology } => CutTree::Leaf { task, topology },
+            LabelSrc::Cut { axis, at, lo, hi } => CutTree::Cut {
+                axis,
+                at: at as usize,
+                low: Box::new(self.rebuild(lo.0, lo.1 as usize)),
+                high: Box::new(self.rebuild(hi.0, hi.1 as usize)),
+            },
+        }
     }
 }
 
-/// Objectives of a complete cut tree, costed through the table — used to
-/// seed the vertical-band winner into the guillotine finals (its leaf
-/// costs were already computed by stage A, so this is pure lookup).
+/// Makespan/energy of a complete cut tree, costed through the table —
+/// used to seed the vertical-band winner into the guillotine finals (its
+/// leaf costs were already computed by stage A, so this is pure lookup).
+/// Only the tie-break axes are needed; the caller already owns the tree.
+struct SeedLabel {
+    makespan: f64,
+    energy: f64,
+}
+
 fn tree_label(
     tree: &CutTree,
     rows: usize,
     cols: usize,
     table: &CostTable<'_>,
     inv: &[f64],
-) -> Result<GLabel, String> {
+) -> Result<SeedLabel, String> {
     let (partition, topos) = tree.partition(rows, cols)?;
-    let mut lab = GLabel {
+    let mut lab = SeedLabel {
         makespan: 0.0,
         energy: 0.0,
-        dram: 0,
-        load: 0.0,
-        tree: tree.clone(),
     };
     for (task, (region, &topo)) in partition.regions.iter().zip(&topos).enumerate() {
         let pc = table.cost(task, region.rows, region.cols, topo);
         lab.makespan = lab.makespan.max(pc.cycles * inv[task]);
         lab.energy += pc.energy * inv[task];
-        lab.dram = lab
-            .dram
-            .saturating_add(pc.dram_words.saturating_mul(inv[task] as u64));
-        lab.load = lab.load.max(pc.worst_load);
     }
     Ok(lab)
 }
@@ -645,8 +950,34 @@ fn tree_label(
 ///
 /// The cache is caller-owned and shared: pass one hydrated via
 /// `EvalCache::load_file` to warm-start repeated scenarios across
-/// processes. `workers` parallelizes the per-(task, region) costing sweep;
-/// the DPs themselves are exact and cheap.
+/// processes. `workers` parallelizes the per-(task, region) costing sweep
+/// and the guillotine beam's per-level state expansion; results are
+/// bit-identical for any worker count.
+///
+/// # Examples
+///
+/// ```
+/// use pipeorgan::config::ArchConfig;
+/// use pipeorgan::cosched::{schedule, CoschedConfig, Scenario, TaskSpec};
+/// use pipeorgan::dse::EvalCache;
+/// use pipeorgan::workloads::synthetic;
+///
+/// let cfg = ArchConfig { pe_rows: 8, pe_cols: 8, ..ArchConfig::default() };
+/// let scenario = Scenario::new(
+///     "doc-pair",
+///     vec![
+///         TaskSpec::new(synthetic::aw_chain(2.0, 3), 30.0),
+///         TaskSpec::new(synthetic::pointwise_conv_segment(2), 60.0),
+///     ],
+/// );
+/// let cache = EvalCache::new();
+/// let result = schedule(&scenario, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
+///
+/// // One region per task, and the searched split never loses to the
+/// // naive even split (the even-split label is seeded into the DP).
+/// assert_eq!(result.cosched.assignments.len(), 2);
+/// assert!(result.cosched.makespan_cycles <= result.even_split.makespan_cycles);
+/// ```
 pub fn schedule(
     scenario: &Scenario,
     cfg: &ArchConfig,
@@ -795,13 +1126,30 @@ pub fn schedule(
     });
 
     // ---- shared cost table (both partition families draw from it) --------
+    // The guillotine grid is computed up front so the table can be sized
+    // once for everything the cut-tree DP can possibly touch — stage A's
+    // band entries plus the full (task × reachable rect × topology)
+    // grid — instead of rehashing as the lazy fills trickle in.
+    let guillotine_grid = if cs.partition == PartitionKind::Guillotine {
+        Some((
+            reachable_dims(rows, cs.quantum),
+            reachable_dims(cols, cs.quantum),
+            region_topologies(cfg),
+        ))
+    } else {
+        None
+    };
+    let table_capacity = n * (widths.len() + 1)
+        + guillotine_grid
+            .as_ref()
+            .map_or(0, |(rset, cset, topos)| n * rset.len() * cset.len() * topos.len());
     let cost_table = CostTable {
         scenario,
         cfg,
         cs,
         cache,
         run: &run,
-        map: RefCell::new(HashMap::new()),
+        map: RefCell::new(HashMap::with_capacity(table_capacity)),
     };
     for (task, row) in table.iter().enumerate() {
         for (wi, pc) in row.iter().enumerate() {
@@ -821,15 +1169,15 @@ pub fn schedule(
     let cut_tree = match cs.partition {
         PartitionKind::Bands => bands_tree,
         PartitionKind::Guillotine => cs.obs.timed("cosched.stage_c", || {
-            let topos = region_topologies(cfg);
+            let (rset, cset, topos) = guillotine_grid
+                .as_ref()
+                .expect("guillotine grid precomputed for this partition kind");
             // Pre-cost every rectangle on the cut grid, in parallel.
-            let rset = reachable_dims(rows, cs.quantum);
-            let cset = reachable_dims(cols, cs.quantum);
             let mut grid_jobs: Vec<(usize, usize, usize, TopologyKind)> = Vec::new();
             for task in 0..n {
-                for &r in &rset {
-                    for &c in &cset {
-                        for &topo in &topos {
+                for &r in rset {
+                    for &c in cset {
+                        for &topo in topos {
                             if !cost_table.contains(task, r, c, topo) {
                                 grid_jobs.push((task, r, c, topo));
                             }
@@ -845,7 +1193,7 @@ pub fn schedule(
             for (task, r, c, topo, pc) in costed {
                 cost_table.insert(task, r, c, topo, pc);
             }
-            let mut gs = GuillotineSearch {
+            let mut gs = GuillotineBeam {
                 table: &cost_table,
                 inv: &inv,
                 topos,
@@ -853,20 +1201,31 @@ pub fn schedule(
                 max_labels: cs.max_labels,
                 memo: HashMap::new(),
             };
-            let mut gfinals = gs.solve(rows, cols, (1u32 << n) - 1);
-            // Seed the vertical-band winner: 2-D never loses to 1-D.
-            gfinals.push(tree_label(&bands_tree, rows, cols, &cost_table, &inv)?);
-            Ok::<CutTree, String>(
-                gfinals
-                    .into_iter()
-                    .min_by(|a, b| {
-                        (a.makespan, a.energy)
-                            .partial_cmp(&(b.makespan, b.energy))
-                            .expect("objectives are finite")
-                    })
-                    .expect("the vertical-band seed is always present")
-                    .tree,
-            )
+            let root = StateKey::new(rows, cols, TaskSet::full(n));
+            let gfinals = gs.solve(root, workers);
+            // The beam's pick: first label minimizing (makespan, energy) —
+            // the same first-minimal rule `min_by` applied before.
+            let beam_best = gfinals.iter().enumerate().min_by(|(_, a), (_, b)| {
+                (a.makespan, a.energy)
+                    .partial_cmp(&(b.makespan, b.energy))
+                    .expect("objectives are finite")
+            });
+            // Seed the vertical-band winner: 2-D never loses to 1-D. The
+            // seed was historically appended *after* the beam labels, so
+            // on exact ties the beam label wins — preserved here by only
+            // falling back to the bands tree on a strictly worse beam.
+            let seed = tree_label(&bands_tree, rows, cols, &cost_table, &inv)?;
+            Ok::<CutTree, String>(match beam_best {
+                Some((idx, lab))
+                    if (lab.makespan, lab.energy)
+                        .partial_cmp(&(seed.makespan, seed.energy))
+                        .expect("objectives are finite")
+                        != std::cmp::Ordering::Greater =>
+                {
+                    gs.rebuild(root, idx)
+                }
+                _ => bands_tree,
+            })
         })?,
     };
 
@@ -1220,5 +1579,60 @@ mod tests {
             tuned.cosched.makespan_cycles,
             heur.cosched.makespan_cycles
         );
+    }
+
+    #[test]
+    fn taskset_roundtrips_and_counts() {
+        assert!(TaskSet::empty().is_empty());
+        assert_eq!(TaskSet::full(0).len(), 0);
+        assert_eq!(TaskSet::full(64).len(), 64);
+        let s = TaskSet::from_tasks(&[5, 1, 3, 1]);
+        assert_eq!(s.to_sorted_vec(), vec![1, 3, 5]);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(3) && !s.contains(0) && !s.contains(63));
+        assert_eq!(s.sole_member(), None);
+        assert_eq!(TaskSet::from_tasks(&[7]).sole_member(), Some(7));
+        assert_eq!(
+            s.complement_in(TaskSet::full(6)).to_sorted_vec(),
+            vec![0, 2, 4]
+        );
+    }
+
+    #[test]
+    fn taskset_proper_subsets_match_the_classic_mask_walk() {
+        let mask: u64 = 0b101101;
+        let set = TaskSet::from_tasks(&[0, 2, 3, 5]);
+        assert_eq!(set.bits(), mask);
+        let mut expected = Vec::new();
+        let mut lo = mask.wrapping_sub(1) & mask;
+        while lo != 0 {
+            expected.push(lo);
+            lo = lo.wrapping_sub(1) & mask;
+        }
+        let got: Vec<u64> = set.proper_subsets().map(TaskSet::bits).collect();
+        assert_eq!(got, expected);
+        assert_eq!(got.len(), (1 << set.len()) - 2);
+        assert_eq!(TaskSet::from_tasks(&[4]).proper_subsets().count(), 0);
+        assert_eq!(TaskSet::empty().proper_subsets().count(), 0);
+    }
+
+    /// The parallel per-level beam must be invisible in the results: any
+    /// worker count yields the same labels, hence the same tree.
+    #[test]
+    fn guillotine_is_identical_across_worker_counts() {
+        let cfg = small_cfg();
+        let cs = CoschedConfig {
+            partition: PartitionKind::Guillotine,
+            ..CoschedConfig::default()
+        };
+        let cache = EvalCache::new();
+        let one = schedule(&tiny_scenario(), &cfg, &cs, &cache, 1).unwrap();
+        let four = schedule(&tiny_scenario(), &cfg, &cs, &cache, 4).unwrap();
+        assert_eq!(one.cut_tree.encode(), four.cut_tree.encode());
+        assert_eq!(
+            one.cosched.makespan_cycles.to_bits(),
+            four.cosched.makespan_cycles.to_bits()
+        );
+        assert_eq!(one.cosched.energy.to_bits(), four.cosched.energy.to_bits());
     }
 }

@@ -45,8 +45,9 @@ use crate::util::json::Json;
 /// On-disk cache format version. Bump on any change to the entry layout or
 /// to the [`context_fingerprint`] recipe (old fingerprints would silently
 /// alias new ones otherwise); loaders reject any other version and fall
-/// back to a cold start.
-pub const CACHE_FILE_VERSION: u64 = 1;
+/// back to a cold start. Version 2: the fingerprint became a combination
+/// of separately-hashed graph and architecture halves.
+pub const CACHE_FILE_VERSION: u64 = 2;
 
 /// Default entry cap applied before [`EvalCache::save_file`] by the CLI
 /// (`--cache-cap` overrides). One serialized entry is ~300 bytes of
@@ -84,10 +85,23 @@ pub fn heuristic_segment_key(
 }
 
 /// Fingerprint of the (workload, architecture) evaluation context a
-/// [`SegmentKey`] is scoped to. Hashes the full per-layer structure (order
-/// matters — segment coordinates are positional) and the edge list, not
-/// just aggregates, so structurally different graphs never share keys.
+/// [`SegmentKey`] is scoped to: [`graph_fingerprint`] and
+/// [`arch_fingerprint`] combined via [`combine_fingerprints`].
+///
+/// The split matters on the co-scheduler's hot path: enumerating a
+/// scenario's live contexts crosses every task graph with every candidate
+/// region config, and hashing each half once — n graph walks plus G
+/// config serializations instead of n×G full fingerprints — collapses the
+/// dominant JSON-rendering cost of the sweep (see `docs/PERFORMANCE.md`).
 pub fn context_fingerprint(graph: &ModelGraph, cfg: &ArchConfig) -> u64 {
+    combine_fingerprints(graph_fingerprint(graph), arch_fingerprint(cfg))
+}
+
+/// Workload half of [`context_fingerprint`]. Hashes the full per-layer
+/// structure (order matters — segment coordinates are positional) and the
+/// edge list, not just aggregates, so structurally different graphs never
+/// share keys.
+pub fn graph_fingerprint(graph: &ModelGraph) -> u64 {
     let mut h = DefaultHasher::new();
     graph.name.hash(&mut h);
     graph.num_layers().hash(&mut h);
@@ -103,8 +117,25 @@ pub fn context_fingerprint(graph: &ModelGraph, cfg: &ArchConfig) -> u64 {
         edge.src.hash(&mut h);
         edge.dst.hash(&mut h);
     }
-    // ArchConfig holds f64s, so hash its canonical JSON rendering.
+    h.finish()
+}
+
+/// Architecture half of [`context_fingerprint`]. ArchConfig holds f64s,
+/// so hash its canonical JSON rendering.
+pub fn arch_fingerprint(cfg: &ArchConfig) -> u64 {
+    let mut h = DefaultHasher::new();
     cfg.to_json().to_string().hash(&mut h);
+    h.finish()
+}
+
+/// Combine the two fingerprint halves into one context fingerprint. By
+/// definition `context_fingerprint(g, c) ==
+/// combine_fingerprints(graph_fingerprint(g), arch_fingerprint(c))`, so
+/// callers that sweep one axis may hash each half once and cross-combine.
+pub fn combine_fingerprints(graph_fp: u64, arch_fp: u64) -> u64 {
+    let mut h = DefaultHasher::new();
+    graph_fp.hash(&mut h);
+    arch_fp.hash(&mut h);
     h.finish()
 }
 

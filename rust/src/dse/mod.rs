@@ -35,8 +35,9 @@ mod search;
 mod space;
 
 pub use cache::{
-    context_fingerprint, heuristic_segment_key, CacheLoadOutcome, CacheStats, EvalCache,
-    RunCounters, SegmentKey, CACHE_DEFAULT_CAP, CACHE_FILE_VERSION,
+    arch_fingerprint, combine_fingerprints, context_fingerprint, graph_fingerprint,
+    heuristic_segment_key, CacheLoadOutcome, CacheStats, EvalCache, RunCounters, SegmentKey,
+    CACHE_DEFAULT_CAP, CACHE_FILE_VERSION,
 };
 pub use pareto::{dominates, dominates_first, pareto_filter, pareto_filter_first, ParetoPoint};
 pub use search::{explore, tuned_plan, DseResult, PlanPoint};

@@ -420,6 +420,30 @@ pub fn explore(
 /// search's evaluations (pass a fresh [`RunCounters`] per plan call so the
 /// budget is an exact per-plan window, even when many plans share one
 /// cache concurrently).
+///
+/// # Examples
+///
+/// ```
+/// use pipeorgan::config::ArchConfig;
+/// use pipeorgan::dse::{tuned_plan, DseConfig, EvalCache, RunCounters};
+/// use pipeorgan::mapper::PipeOrgan;
+/// use pipeorgan::workloads::synthetic;
+///
+/// let cfg = ArchConfig { pe_rows: 8, pe_cols: 8, ..ArchConfig::default() };
+/// let graph = synthetic::aw_chain(2.0, 3);
+/// let base = PipeOrgan { topology: cfg.topology, depth_cap: Some(8) };
+/// let mut dse = DseConfig::tuned(cfg.topology);
+/// dse.budget = Some(64);
+/// let cache = EvalCache::new();
+///
+/// let point = tuned_plan(&graph, &cfg, &base, &dse, &cache, &RunCounters::new());
+/// assert!(point.cycles > 0.0 && !point.plan.segments.is_empty());
+///
+/// // Never worse than the heuristic it was seeded with: a warm re-plan
+/// // returns the same point without new cost-model evaluations.
+/// let warm = tuned_plan(&graph, &cfg, &base, &dse, &cache, &RunCounters::new());
+/// assert_eq!(warm.cycles, point.cycles);
+/// ```
 pub fn tuned_plan(
     graph: &ModelGraph,
     cfg: &ArchConfig,

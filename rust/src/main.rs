@@ -71,7 +71,7 @@ use pipeorgan::report;
 use pipeorgan::serve::{self, ServeConfig, SERVE_FLAGS};
 use pipeorgan::workloads;
 
-const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N --obs --trace-out FILE] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N --obs --trace-out FILE] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N --obs --trace-out FILE]";
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N --obs --trace-out FILE] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N --obs --trace-out FILE] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N --obs --trace-out FILE]\ndocs: rust/DESIGN.md (architecture), docs/PERFORMANCE.md (bench gate, hot-path design, reading --obs output)";
 
 const FLAGS: &[(&str, bool)] = &[
     ("out", true),

@@ -66,6 +66,30 @@ pub struct Tracks {
 /// Shared observability handle. Disabled by default ([`Obs::default`] /
 /// [`Obs::disabled`]); [`Obs::from_cli`] enables it when `--obs` or
 /// `--trace-out` is present. Cloning shares the underlying recorder.
+///
+/// # Examples
+///
+/// ```
+/// use pipeorgan::obs::Obs;
+///
+/// // A disabled handle records nothing and costs one branch per site.
+/// let off = Obs::disabled();
+/// assert!(!off.is_enabled());
+/// off.count("demo.events", 3);
+/// assert_eq!(off.counter_total("demo.events"), 0);
+///
+/// // An enabled handle accumulates counters and `time.*` histograms.
+/// let obs = Obs::enabled();
+/// obs.count("demo.events", 3);
+/// obs.count("demo.events", 2);
+/// assert_eq!(obs.counter_total("demo.events"), 5);
+/// let answer = obs.timed("demo.work", || 6 * 7);
+/// assert_eq!(answer, 42);
+/// assert!(obs
+///     .timer_histograms()
+///     .iter()
+///     .any(|(name, samples)| name == "time.demo.work" && samples.len() == 1));
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct Obs {
     inner: Option<Arc<Inner>>,

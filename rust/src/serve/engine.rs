@@ -36,7 +36,7 @@ use crate::obs::{Obs, PID_SIM};
 use crate::util::stats::Histogram;
 
 use super::dispatch::{select_next, Policy, Request};
-use super::interference::{allocate_bandwidth, donated_bandwidth, BandwidthModel};
+use super::interference::{donated_bandwidth, BandwidthCache, BandwidthModel};
 use super::metrics::{sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics};
 use super::ServeConfig;
 
@@ -328,6 +328,28 @@ struct Rec {
 /// never flips a verdict.
 const DEADLINE_EPS_S: f64 = 1e-9;
 
+/// Reusable allocations of one simulation run: the event heap, the
+/// per-epoch demand vector, and the one-entry bandwidth-split memo.
+///
+/// One `simulate` call makes tens of thousands of event epochs, and the
+/// rate sweep makes dozens of `simulate` calls back to back — reusing
+/// this scratch across probes keeps the heap's and demand vector's
+/// buffers warm instead of regrowing them from empty every probe. The
+/// scratch carries no results: every run clears it first, so reuse can
+/// never change an outcome (the determinism tests replay both ways).
+#[derive(Default)]
+pub struct SimScratch {
+    heap: BinaryHeap<Reverse<Ev>>,
+    demands: Vec<Option<f64>>,
+    bw: BandwidthCache,
+}
+
+impl SimScratch {
+    pub fn new() -> SimScratch {
+        SimScratch::default()
+    }
+}
+
 /// Replay `arrivals` (one ascending stream per task, seconds) against the
 /// plan under one policy. Deterministic: same inputs, same
 /// [`ServeOutcome`], bit for bit. Thin wrapper over [`simulate_traced`]
@@ -369,6 +391,22 @@ pub fn simulate_traced(
     opts: SimOptions,
     obs: &Obs,
 ) -> ServeOutcome {
+    simulate_with_scratch(scenario, plan, policy, arrivals, opts, obs, &mut SimScratch::new())
+}
+
+/// [`simulate_traced`] with caller-owned [`SimScratch`], so tight probe
+/// loops (the rate sweep) amortize the heap/demand-vector allocations and
+/// keep the bandwidth-split memo warm across runs. Results are identical
+/// to a fresh-scratch run.
+pub fn simulate_with_scratch(
+    scenario: &Scenario,
+    plan: &ServePlan,
+    policy: Policy,
+    arrivals: &[Vec<f64>],
+    opts: SimOptions,
+    obs: &Obs,
+    scratch: &mut SimScratch,
+) -> ServeOutcome {
     let n = scenario.tasks.len();
     assert_eq!(arrivals.len(), n, "one arrival stream per task");
     let clock = plan.clock_hz;
@@ -391,7 +429,13 @@ pub fn simulate_traced(
         }
     }
 
-    let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+    // Split the scratch into disjoint &mut fields (heap for the event
+    // loop, demands + bw memo for `reallocate`) and reset what carries
+    // state; the buffers keep their capacity, the memo keeps its entry
+    // (keyed on exact inputs, so staleness is impossible).
+    let SimScratch { heap, demands, bw } = scratch;
+    heap.clear();
+    let (bw_hits0, bw_misses0) = bw.stats();
     let mut seq = 0u64;
     for (task, times) in arrivals.iter().enumerate() {
         for (k, &t) in times.iter().enumerate() {
@@ -622,7 +666,7 @@ pub fn simulate_traced(
 
         // New epoch: re-split bandwidth and reschedule every busy region's
         // completion under the fresh rates (older events go stale).
-        reallocate(&mut regions, plan, opts.bandwidth);
+        reallocate(&mut regions, plan, opts.bandwidth, demands, bw);
         for (ri, r) in regions.iter_mut().enumerate() {
             if let Some(s) = &r.serving {
                 r.version += 1;
@@ -695,6 +739,11 @@ pub fn simulate_traced(
     let span_s = now.max(1e-12);
     if obs_on {
         obs.gauge(&format!("{cprefix}.span_s"), span_s);
+        // This run's split-memo effectiveness, as deltas (the scratch —
+        // and so its lifetime totals — may be shared across runs).
+        let (bw_hits, bw_misses) = bw.stats();
+        obs.count(&format!("{cprefix}.bw_cache_hits"), bw_hits - bw_hits0);
+        obs.count(&format!("{cprefix}.bw_cache_misses"), bw_misses - bw_misses0);
     }
     let tasks: Vec<TaskMetrics> = scenario
         .tasks
@@ -736,8 +785,19 @@ pub fn simulate_traced(
     }
 }
 
-/// Re-split DRAM bandwidth for the epoch that starts now.
-fn reallocate(regions: &mut [RegionSt], plan: &ServePlan, model: BandwidthModel) {
+/// Re-split DRAM bandwidth for the epoch that starts now. The demand
+/// vector and the split itself live in the caller's scratch: the vector
+/// is rebuilt in place, and the split is served from the one-entry
+/// [`BandwidthCache`] whenever the epoch's inputs are bit-for-bit the
+/// previous epoch's (zero-length epochs, all-idle stretches,
+/// compute-bound phases — see the cache's docs).
+fn reallocate(
+    regions: &mut [RegionSt],
+    plan: &ServePlan,
+    model: BandwidthModel,
+    demands: &mut Vec<Option<f64>>,
+    bw: &mut BandwidthCache,
+) {
     match model {
         BandwidthModel::Static => {
             for (r, &e) in regions.iter_mut().zip(&plan.entitlements) {
@@ -747,23 +807,21 @@ fn reallocate(regions: &mut [RegionSt], plan: &ServePlan, model: BandwidthModel)
             }
         }
         BandwidthModel::Dynamic => {
-            let demands: Vec<Option<f64>> = regions
-                .iter()
-                .map(|r| {
-                    r.serving.as_ref().map(|s| {
-                        if s.bytes_rem <= 0.0 {
-                            0.0
-                        } else {
-                            // Bandwidth that drains the stage's DRAM no
-                            // later than its compute floor — all a
-                            // pipelined stage can absorb.
-                            (s.bytes_rem / s.floor_rem.max(1e-9)).min(plan.total_bandwidth)
-                        }
-                    })
+            demands.clear();
+            demands.extend(regions.iter().map(|r| {
+                r.serving.as_ref().map(|s| {
+                    if s.bytes_rem <= 0.0 {
+                        0.0
+                    } else {
+                        // Bandwidth that drains the stage's DRAM no
+                        // later than its compute floor — all a
+                        // pipelined stage can absorb.
+                        (s.bytes_rem / s.floor_rem.max(1e-9)).min(plan.total_bandwidth)
+                    }
                 })
-                .collect();
-            let alloc = allocate_bandwidth(plan.total_bandwidth, &plan.entitlements, &demands);
-            for (r, a) in regions.iter_mut().zip(alloc) {
+            }));
+            let alloc = bw.allocate(plan.total_bandwidth, &plan.entitlements, demands);
+            for (r, &a) in regions.iter_mut().zip(alloc) {
                 if let Some(s) = r.serving.as_mut() {
                     s.alloc = a;
                 }
@@ -784,6 +842,38 @@ pub struct ServeRun {
 /// Plan and serve one scenario end to end per the CLI-level config: every
 /// requested policy replays the *same* pre-generated arrival streams, so
 /// policy comparisons are apples to apples at one seed.
+///
+/// # Examples
+///
+/// ```
+/// use pipeorgan::config::ArchConfig;
+/// use pipeorgan::cosched::{Scenario, TaskSpec};
+/// use pipeorgan::dse::EvalCache;
+/// use pipeorgan::serve::{run_scenario, Policy, ServeConfig};
+/// use pipeorgan::workloads::synthetic;
+///
+/// let cfg = ArchConfig { pe_rows: 8, pe_cols: 8, ..ArchConfig::default() };
+/// let scenario = Scenario::new(
+///     "doc-serve",
+///     vec![
+///         TaskSpec::new(synthetic::aw_chain(2.0, 3), 40.0),
+///         TaskSpec::new(synthetic::pointwise_conv_segment(2), 80.0),
+///     ],
+/// );
+/// let sv = ServeConfig {
+///     policies: vec![Policy::Fifo],
+///     duration_s: 0.05,
+///     ..ServeConfig::default()
+/// };
+/// let run = run_scenario(&scenario, &cfg, &sv, &EvalCache::new(), 1).unwrap();
+///
+/// // One outcome per requested policy; every arrival is accounted for
+/// // (completed or dropped — the replay always drains its backlog).
+/// assert_eq!(run.outcomes.len(), 1);
+/// for tm in &run.outcomes[0].tasks {
+///     assert_eq!(tm.completed + tm.dropped, tm.requests);
+/// }
+/// ```
 pub fn run_scenario(
     scenario: &Scenario,
     cfg: &ArchConfig,
@@ -968,6 +1058,43 @@ mod tests {
         assert_eq!(a.trace, b.trace);
         assert_eq!(a.tasks, b.tasks);
         assert_eq!(a.span_s, b.span_s);
+    }
+
+    /// Reusing one scratch across runs — even across different policies
+    /// and bandwidth models — must be invisible in the results.
+    #[test]
+    fn shared_scratch_matches_fresh_scratch_runs() {
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let sc = tiny_scenario();
+        let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
+        let arrivals = streams(&sc, &ArrivalProcess::Poisson, 1.5, 0.2, 9);
+        let mut scratch = SimScratch::new();
+        for bandwidth in [BandwidthModel::Dynamic, BandwidthModel::Static] {
+            let opts = SimOptions {
+                bandwidth,
+                ..SimOptions::default()
+            };
+            for policy in Policy::ALL {
+                let fresh = simulate(&sc, &plan, policy, &arrivals, opts);
+                let reused = simulate_with_scratch(
+                    &sc,
+                    &plan,
+                    policy,
+                    &arrivals,
+                    opts,
+                    &Obs::disabled(),
+                    &mut scratch,
+                );
+                assert_eq!(fresh.trace, reused.trace, "{}", policy.name());
+                assert_eq!(fresh.tasks, reused.tasks, "{}", policy.name());
+                assert_eq!(fresh.span_s, reused.span_s, "{}", policy.name());
+            }
+        }
+        // The dynamic runs exercised the split memo.
+        let (hits, misses) = scratch.bw.stats();
+        assert!(misses > 0, "dynamic runs recompute at least once");
+        assert!(hits + misses > 0);
     }
 
     #[test]

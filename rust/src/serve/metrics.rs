@@ -21,7 +21,7 @@ use crate::util::stats::Histogram;
 
 use super::arrivals::{streams, ArrivalProcess};
 use super::dispatch::Policy;
-use super::engine::{simulate, ServePlan, SimOptions, TraceEvent};
+use super::engine::{simulate_with_scratch, ServePlan, SimOptions, SimScratch, TraceEvent};
 use super::interference::BandwidthModel;
 
 /// Nearest-rank percentile with an empty-sample guard (no completions →
@@ -143,10 +143,23 @@ pub fn sweep_max_rate(
         record_trace: false,
         ..opts
     };
-    let feasible = |m: f64, probes: &mut Vec<(f64, bool)>| -> bool {
+    // One scratch for the whole sweep: the event heap and demand vector
+    // regrow once instead of once per probe (results are unaffected —
+    // `engine::tests::shared_scratch_matches_fresh_scratch_runs`).
+    let mut scratch = SimScratch::new();
+    let mut feasible = |m: f64, probes: &mut Vec<(f64, bool)>| -> bool {
         // Periodic probes consume no randomness, so the seed is moot.
         let arrivals = streams(scenario, &ArrivalProcess::Periodic, m, duration_s, 0);
-        let ok = simulate(scenario, plan, policy, &arrivals, opts).schedulable();
+        let ok = simulate_with_scratch(
+            scenario,
+            plan,
+            policy,
+            &arrivals,
+            opts,
+            &crate::obs::Obs::disabled(),
+            &mut scratch,
+        )
+        .schedulable();
         probes.push((m, ok));
         ok
     };

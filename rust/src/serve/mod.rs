@@ -37,10 +37,12 @@ use crate::cosched::PartitionKind;
 pub use arrivals::{arrival_times, streams, ArrivalProcess, DEFAULT_JITTER_FRAC};
 pub use dispatch::{select_next, Policy, Request};
 pub use engine::{
-    plan_scenario, run_scenario, simulate, simulate_traced, ServePlan, ServeRun, ServedCost,
-    ServiceStage, SimOptions, TraceEvent, TraceKind,
+    plan_scenario, run_scenario, simulate, simulate_traced, simulate_with_scratch, ServePlan,
+    ServeRun, ServedCost, ServiceStage, SimOptions, SimScratch, TraceEvent, TraceKind,
 };
-pub use interference::{allocate_bandwidth, donated_bandwidth, BandwidthModel};
+pub use interference::{
+    allocate_bandwidth, allocate_bandwidth_into, donated_bandwidth, BandwidthCache, BandwidthModel,
+};
 pub use metrics::{
     pct_or_zero, sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics, SWEEP_MAX_MULT,
     SWEEP_MIN_MULT,

@@ -286,3 +286,55 @@ fn guillotine_plan_round_trips_through_json() {
         assert!(live.contains(ctx), "context {ctx:x} missing from canned live set");
     }
 }
+
+/// The acceptance criterion of the parallel beam: fanning the per-level
+/// state expansion over worker threads must be invisible — plan, makespan
+/// (bit-exact), and cut-tree encoding all identical to a forced
+/// single-thread run, on every canned scenario. One warm cache is shared
+/// across all runs so worker counts can't diverge through costing either.
+#[test]
+fn parallel_beam_is_bit_identical_to_single_thread_on_every_canned_scenario() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    for sc in canned_scenarios() {
+        let serial = schedule(&sc, &cfg, &guillotine_cs(), &cache, 1)
+            .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+        for workers in [2, 4, 7] {
+            let par = schedule(&sc, &cfg, &guillotine_cs(), &cache, workers)
+                .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+            assert_eq!(
+                serial.cut_tree.encode(),
+                par.cut_tree.encode(),
+                "{} @ {workers} workers: plans diverged",
+                sc.name
+            );
+            assert_eq!(
+                serial.cosched.makespan_cycles.to_bits(),
+                par.cosched.makespan_cycles.to_bits(),
+                "{} @ {workers} workers: makespan diverged",
+                sc.name
+            );
+            assert_eq!(
+                serial.cosched.energy.to_bits(),
+                par.cosched.energy.to_bits(),
+                "{} @ {workers} workers: energy diverged",
+                sc.name
+            );
+            for (a, b) in serial
+                .cosched
+                .assignments
+                .iter()
+                .zip(&par.cosched.assignments)
+            {
+                assert_eq!(a.region, b.region, "{}: regions diverged", sc.name);
+                assert_eq!(a.topology, b.topology, "{}: topologies diverged", sc.name);
+                assert_eq!(
+                    a.latency_cycles.to_bits(),
+                    b.latency_cycles.to_bits(),
+                    "{}: latencies diverged",
+                    sc.name
+                );
+            }
+        }
+    }
+}

@@ -319,3 +319,76 @@ fn depth_cap_caps_and_flexible_dominates() {
         Ok(())
     });
 }
+
+/// The guillotine DP's `u64`-bitset memo keys must agree with the sorted
+/// `Vec<usize>` keys they replaced: same membership ⇒ same key, distinct
+/// membership ⇒ distinct key, order/duplicate-insensitive construction,
+/// and proper-subset enumeration identical to the classic
+/// `lo = (lo - 1) & mask` walk over the sorted-Vec universe.
+#[test]
+fn bitset_task_keys_agree_with_sorted_vec_keys() {
+    use pipeorgan::cosched::TaskSet;
+    proptest_lite::run(200, |rng| {
+        let universe = rng.gen_usize(1, 16);
+        let mut tasks: Vec<usize> = (0..universe)
+            .filter(|_| rng.gen_bool(0.5))
+            .collect();
+        let mut sorted = tasks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+
+        // Construction is order- and duplicate-insensitive.
+        rng.shuffle(&mut tasks);
+        if !tasks.is_empty() {
+            let dup = tasks[rng.gen_usize(0, tasks.len())];
+            tasks.push(dup);
+        }
+        let set = TaskSet::from_tasks(&tasks);
+        prop_assert!(
+            set == TaskSet::from_tasks(&sorted),
+            "shuffled/duplicated construction diverged for {sorted:?}"
+        );
+        prop_assert!(
+            set.to_sorted_vec() == sorted,
+            "round-trip diverged: {:?} vs {sorted:?}",
+            set.to_sorted_vec()
+        );
+        prop_assert!(set.len() == sorted.len(), "cardinality diverged");
+        for t in 0..universe {
+            prop_assert!(
+                set.contains(t) == sorted.contains(&t),
+                "membership of {t} diverged"
+            );
+        }
+
+        // Distinct sorted-Vec keys map to distinct bitset keys.
+        let mut other: Vec<usize> = (0..universe)
+            .filter(|_| rng.gen_bool(0.5))
+            .collect();
+        other.sort_unstable();
+        other.dedup();
+        prop_assert!(
+            (TaskSet::from_tasks(&other) == set) == (other == sorted),
+            "key equality diverged for {other:?} vs {sorted:?}"
+        );
+
+        // Proper subsets: exactly the classic mask walk, which visits
+        // every non-empty proper subset of the sorted-Vec universe.
+        let mask = set.bits();
+        let mut expected: Vec<u64> = Vec::new();
+        let mut lo = mask.wrapping_sub(1) & mask;
+        while lo != 0 {
+            expected.push(lo);
+            lo = lo.wrapping_sub(1) & mask;
+        }
+        let got: Vec<u64> = set.proper_subsets().map(TaskSet::bits).collect();
+        prop_assert!(got == expected, "subset walk diverged for {sorted:?}");
+        if !sorted.is_empty() {
+            prop_assert!(
+                got.len() == (1usize << sorted.len()) - 2,
+                "subset count diverged for {sorted:?}"
+            );
+        }
+        Ok(())
+    });
+}

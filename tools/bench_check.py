@@ -3,6 +3,7 @@
 
 Usage: python3 tools/bench_check.py [raw_jsonl] [baseline_json] [out_json]
        python3 tools/bench_check.py --promote [ci_json] [baseline_json]
+       python3 tools/bench_check.py --compare A.json B.json [--markdown]
 
 Reads the JSONL file the bench harness appends to when PIPEORGAN_BENCH_JSON
 is set (one record per bench run: {"bench": name, "mean_ns": ..., "p50_ns":
@@ -10,7 +11,9 @@ is set (one record per bench run: {"bench": name, "mean_ns": ..., "p50_ns":
 BENCH_ci.json artifact, then compares against the checked-in baseline:
 
   - a bench whose p50_ns exceeds baseline p50_ns * BENCH_MAX_RATIO
-    (env var, default 2.0) fails the gate;
+    (env var, default 2.0) fails the gate; a baseline entry may override
+    the global ratio with its own "max_ratio" field (how the tentpole
+    benches pin their locked-in speedups, see docs/PERFORMANCE.md);
   - a baseline bench missing from the run fails the gate (renamed or
     deleted hot paths must update BENCH_baseline.json deliberately);
   - benches not in the baseline are reported as new, never fatal;
@@ -26,6 +29,13 @@ reports/BENCH_ci.json). Names in the CI artifact but not in the baseline —
 e.g. the obs layer's `time.*` self-profiling records, which only exist on
 `--obs` runs — are listed but never added, because a baseline entry makes
 the bench mandatory on every future run.
+
+`--compare` prints a per-bench speedup table between two bench artifacts
+(BENCH_ci.json or BENCH_baseline.json — anything with a `benches` map of
+`p50_ns` entries). Speedup is A/B, so `--compare before.json after.json`
+reads as "after is N.NNx faster". `--markdown` emits a GitHub table (the
+bench-smoke job appends it to the step summary; paste it into PR
+descriptions). Never fails: comparison is reporting, not gating.
 """
 
 import json
@@ -82,9 +92,49 @@ def promote(argv):
     return 0
 
 
+def load_benches(path):
+    with open(path) as f:
+        return json.load(f).get("benches", {})
+
+
+def compare(argv):
+    markdown = "--markdown" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    if len(paths) != 2:
+        print("usage: bench_check.py --compare A.json B.json [--markdown]", file=sys.stderr)
+        return 1
+    a_path, b_path = paths
+    a, b = load_benches(a_path), load_benches(b_path)
+
+    rows = []
+    for name in sorted(set(a) | set(b)):
+        a_p50 = a.get(name, {}).get("p50_ns")
+        b_p50 = b.get(name, {}).get("p50_ns")
+        speedup = None
+        if a_p50 is not None and b_p50 is not None and b_p50 > 0:
+            speedup = float(a_p50) / float(b_p50)
+        rows.append((name, a_p50, b_p50, speedup))
+
+    fmt = lambda ns: f"{ns / 1e6:.3f} ms" if ns is not None else "-"
+    spd = lambda s: f"{s:.2f}x" if s is not None else "-"
+    if markdown:
+        print(f"| bench | {a_path} p50 | {b_path} p50 | speedup (A/B) |")
+        print("|---|---:|---:|---:|")
+        for name, a_p50, b_p50, speedup in rows:
+            print(f"| {name} | {fmt(a_p50)} | {fmt(b_p50)} | {spd(speedup)} |")
+    else:
+        width = max(len(name) for name, *_ in rows) if rows else 5
+        print(f"{'bench':<{width}}  {'A p50':>12}  {'B p50':>12}  {'A/B':>7}")
+        for name, a_p50, b_p50, speedup in rows:
+            print(f"{name:<{width}}  {fmt(a_p50):>12}  {fmt(b_p50):>12}  {spd(speedup):>7}")
+    return 0
+
+
 def main():
     if len(sys.argv) > 1 and sys.argv[1] == "--promote":
         return promote(sys.argv[2:])
+    if len(sys.argv) > 1 and sys.argv[1] == "--compare":
+        return compare(sys.argv[2:])
     raw_path = sys.argv[1] if len(sys.argv) > 1 else "reports/bench_raw.jsonl"
     baseline_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_baseline.json"
     out_path = sys.argv[3] if len(sys.argv) > 3 else "reports/BENCH_ci.json"
@@ -121,12 +171,13 @@ def main():
         if base_p50 is None:
             rows.append((name, None, cur["p50_ns"], None, "record-only"))
             continue
+        limit = float(base.get("max_ratio", max_ratio))
         ratio = cur["p50_ns"] / max(float(base_p50), 1.0)
-        verdict = "ok" if ratio <= max_ratio else "REGRESSED"
-        if ratio > max_ratio:
+        verdict = "ok" if ratio <= limit else "REGRESSED"
+        if ratio > limit:
             failures.append(
                 f"{name}: p50 {cur['p50_ns'] / 1e6:.2f} ms is {ratio:.2f}x the "
-                f"baseline {base_p50 / 1e6:.2f} ms (limit {max_ratio:.1f}x)"
+                f"baseline {base_p50 / 1e6:.2f} ms (limit {limit:.1f}x)"
             )
         rows.append((name, base_p50, cur["p50_ns"], ratio, verdict))
 
