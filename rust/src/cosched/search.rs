@@ -94,6 +94,16 @@ pub struct TaskAssignment {
     pub dram_words: u64,
     /// Worst per-interval channel load inside the region (Fig. 15 metric).
     pub worst_channel_load: f64,
+    /// Predicted bandwidth-independent compute floor of one inference:
+    /// the segments' summed `max(pipeline, NoC, GB)` cycles. With
+    /// [`TaskAssignment::stretch_cycles`] this is the plan-time half of
+    /// the predicted-vs-observed attribution comparison (`obs::attr`
+    /// and `report::attr` consume it as the skew baseline).
+    pub floor_cycles: f64,
+    /// Predicted DRAM-contention stretch of one inference at the static
+    /// bandwidth share: `latency_cycles − floor_cycles` (accumulated
+    /// per segment, so equal only up to float association).
+    pub stretch_cycles: f64,
     /// Does one inference finish inside the task's deadline?
     pub deadline_met: bool,
 }
@@ -164,6 +174,10 @@ impl CoschedResult {
 struct PlannedCost {
     plan: MappingPlan,
     cycles: f64,
+    /// Summed per-segment compute floors (`max(pipeline, NoC, GB)`).
+    floor_cycles: f64,
+    /// Summed per-segment DRAM stretch (`cycles − floor` per segment).
+    stretch_cycles: f64,
     energy: f64,
     dram_words: u64,
     worst_load: f64,
@@ -185,13 +199,18 @@ fn evaluate_plan_cached(
     let topo = Topology::cached(plan.topology, cfg.pe_rows, cfg.pe_cols);
     let em = EnergyModel::default();
     let mut cycles = 0.0f64;
+    let mut floor_cycles = 0.0f64;
+    let mut stretch_cycles = 0.0f64;
     let mut energy = 0.0f64;
     let mut dram_words = 0u64;
     let mut worst_load = 0.0f64;
     for ps in &plan.segments {
         let key = heuristic_segment_key(ctx, ps, plan.topology);
         let c = cache.get_or_eval_in(key, || evaluate_segment(graph, ps, cfg, &topo, &em), run);
+        let floor = c.pipeline_cycles.max(c.noc_cycles).max(c.gb_cycles);
         cycles += c.cycles;
+        floor_cycles += floor;
+        stretch_cycles += c.cycles - floor;
         energy += c.energy;
         dram_words += c.dram_words;
         worst_load = worst_load.max(c.worst_channel_load_per_interval);
@@ -199,10 +218,31 @@ fn evaluate_plan_cached(
     PlannedCost {
         plan,
         cycles,
+        floor_cycles,
+        stretch_cycles,
         energy,
         dram_words,
         worst_load,
     }
+}
+
+/// Recompute the floor/stretch split for an already-chosen plan by direct
+/// segment evaluation — no cache. Tuned plans may carry segments at
+/// non-unit granularity, where `heuristic_segment_key` coordinates would
+/// collide with the scale-1 entries, so the cached path is off-limits.
+/// One extra pass per *winning* tuned plan is noise next to the search.
+fn plan_breakdown(graph: &ModelGraph, plan: &MappingPlan, cfg: &ArchConfig) -> (f64, f64) {
+    let topo = Topology::cached(plan.topology, cfg.pe_rows, cfg.pe_cols);
+    let em = EnergyModel::default();
+    let mut floor_cycles = 0.0f64;
+    let mut stretch_cycles = 0.0f64;
+    for ps in &plan.segments {
+        let c = evaluate_segment(graph, ps, cfg, &topo, &em);
+        let floor = c.pipeline_cycles.max(c.noc_cycles).max(c.gb_cycles);
+        floor_cycles += floor;
+        stretch_cycles += c.cycles - floor;
+    }
+    (floor_cycles, stretch_cycles)
 }
 
 /// Plan one task inside one (full-array or region) config.
@@ -236,9 +276,12 @@ fn plan_in(
         let plan_run = RunCounters::new();
         let point = tuned_plan(graph, cfg, &base, &dse, cache, &plan_run);
         run.absorb(plan_run.stats());
+        let (floor_cycles, stretch_cycles) = plan_breakdown(graph, &point.plan, cfg);
         PlannedCost {
             plan: point.plan,
             cycles: point.cycles,
+            floor_cycles,
+            stretch_cycles,
             energy: point.energy,
             dram_words: point.dram_words,
             worst_load: point.worst_channel_load,
@@ -1336,6 +1379,8 @@ fn assignment(
         energy: pc.energy,
         dram_words: pc.dram_words,
         worst_channel_load: pc.worst_load,
+        floor_cycles: pc.floor_cycles,
+        stretch_cycles: pc.stretch_cycles,
         // Compared in ms so the verdict agrees bit-for-bit with `slack_ms`.
         deadline_met: latency_s * 1e3 <= spec.deadline_ms,
     }
@@ -1579,6 +1624,51 @@ mod tests {
             tuned.cosched.makespan_cycles,
             heur.cosched.makespan_cycles
         );
+    }
+
+    /// The predicted floor/stretch split is conservative: per assignment,
+    /// `floor + stretch` recovers `latency_cycles` (to summation-order
+    /// float tolerance) on both the heuristic-cached and the tuned
+    /// (`plan_breakdown`) evaluation paths, and neither part is negative
+    /// beyond rounding.
+    #[test]
+    fn predicted_breakdown_sums_to_latency_on_both_paths() {
+        let cfg = small_cfg();
+        let cache = EvalCache::new();
+        let runs = [
+            schedule(&tiny_scenario(), &cfg, &CoschedConfig::default(), &cache, 1).unwrap(),
+            schedule(
+                &tiny_scenario(),
+                &cfg,
+                &CoschedConfig {
+                    tuned: true,
+                    budget: Some(256),
+                    ..CoschedConfig::default()
+                },
+                &cache,
+                1,
+            )
+            .unwrap(),
+        ];
+        for r in &runs {
+            for o in [&r.solo, &r.even_split, &r.cosched] {
+                for a in &o.assignments {
+                    let tol = 1e-9 * a.latency_cycles.max(1.0);
+                    assert!(a.floor_cycles > 0.0, "{} {}: no floor", o.mode, a.task);
+                    assert!(a.stretch_cycles >= -tol, "{} {}: negative stretch", o.mode, a.task);
+                    let sum = a.floor_cycles + a.stretch_cycles;
+                    assert!(
+                        (sum - a.latency_cycles).abs() <= tol,
+                        "{} {}: floor {} + stretch {} != cycles {}",
+                        o.mode,
+                        a.task,
+                        a.floor_cycles,
+                        a.stretch_cycles,
+                        a.latency_cycles
+                    );
+                }
+            }
+        }
     }
 
     #[test]

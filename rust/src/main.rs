@@ -53,7 +53,13 @@
 //! <n>`, `--obs` (request-lifecycle counters + `reports/obs.json`),
 //! `--trace-out <file>` (Perfetto timeline of the event loop: one track
 //! per region, counter tracks for queue depth / bandwidth split /
-//! utilization; implies `--obs`).
+//! utilization; implies `--obs`), `--attr-out <file>` (standalone
+//! critical-path latency-attribution report: windowed queue/compute/DRAM
+//! breakdown, SLO burn rate, worst requests — also embedded as an `attr`
+//! block in `serve.json`), `--flight-out <file>` (arm the flight
+//! recorder: a bounded ring of recent events frozen at the first
+//! deadline miss, dumped as a Perfetto-compatible snippet plus
+//! attribution table; see docs/OBSERVABILITY.md).
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -71,7 +77,7 @@ use pipeorgan::report;
 use pipeorgan::serve::{self, ServeConfig, SERVE_FLAGS};
 use pipeorgan::workloads;
 
-const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N --obs --trace-out FILE] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N --obs --trace-out FILE] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N --obs --trace-out FILE]\ndocs: rust/DESIGN.md (architecture), docs/PERFORMANCE.md (bench gate, hot-path design, reading --obs output)";
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N --obs --trace-out FILE] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N --obs --trace-out FILE] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N --obs --trace-out FILE --attr-out FILE --flight-out FILE]\ndocs: rust/DESIGN.md (architecture), docs/PERFORMANCE.md (bench gate, hot-path design, reading --obs output), docs/OBSERVABILITY.md (traces, latency attribution, flight recorder)";
 
 const FLAGS: &[(&str, bool)] = &[
     ("out", true),
@@ -244,6 +250,18 @@ fn finish_obs(obs: &Obs, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Write a standalone JSON document, creating parent directories as
+/// needed (the `--attr-out` / `--flight-out` sink).
+fn write_json_file(path: &str, json: &pipeorgan::util::json::Json) -> anyhow::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, json.to_pretty())
+        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
+}
+
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
@@ -414,7 +432,44 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
                     );
                 }
             }
-            emit(with_obs(report::serve_reports(&cfg, &sv, &runs), &sv.obs))?;
+            let mut reports = report::serve_reports(&cfg, &sv, &runs);
+            match report::attr_report(&runs) {
+                Some(rep) => {
+                    if let Some(path) = args.get("attr-out") {
+                        write_json_file(path, &rep.json)?;
+                        println!("attr: wrote attribution report to {path}");
+                    }
+                    reports.push(rep);
+                }
+                None => {
+                    if args.has("attr-out") {
+                        println!("attr: no attribution records (nothing arrived?); skipping --attr-out");
+                    }
+                }
+            }
+            if let Some(path) = args.get("flight-out") {
+                // Prefer the snapshot frozen at a deadline miss (the
+                // incident being diagnosed); otherwise the first
+                // end-of-run tail (nothing missed anywhere).
+                let snaps: Vec<_> = runs
+                    .iter()
+                    .flat_map(|r| r.outcomes.iter())
+                    .filter_map(|o| o.flight.as_ref().map(|f| (o, f)))
+                    .collect();
+                match snaps.iter().find(|(_, f)| f.missed()).or_else(|| snaps.first()) {
+                    Some((o, f)) => {
+                        write_json_file(path, &f.document(report::flight_table_json(o)))?;
+                        println!(
+                            "flight: wrote {} snapshot ({} {}) to {path}",
+                            f.trigger.kind(),
+                            o.scenario,
+                            o.policy.name()
+                        );
+                    }
+                    None => println!("flight: recorder armed but produced no snapshot"),
+                }
+            }
+            emit(with_obs(reports, &sv.obs))?;
             finish_obs(&sv.obs, &args)?;
             // Live contexts: the shared base plus every region config the
             // underlying co-schedules reached (covers custom configs).

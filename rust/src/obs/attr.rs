@@ -1,0 +1,640 @@
+//! Critical-path latency attribution over per-request lifecycle records.
+//!
+//! The serve event loop ([`crate::serve::engine`]) emits one
+//! [`RequestAttr`] per finished (or dropped) request, decomposing its
+//! measured end-to-end latency into the causal components the paper
+//! argues about: queue wait, bandwidth-independent compute floor,
+//! DRAM-contention stretch at the plan's static bandwidth share, and
+//! the donation received back when the dynamic model granted the
+//! region more than its entitlement. This module aggregates those
+//! records into windowed bottleneck attribution (what fraction of
+//! p50/p99 latency each component explains per time bucket), per-task
+//! and per-region rollups, an SLO burn-rate monitor over a sliding
+//! window, and the top-k worst requests with their critical paths.
+//!
+//! # Conservation, bit-exactly
+//!
+//! The engine derives the components in one canonical order:
+//!
+//! ```text
+//! latency  = now − arrival                (measured, end to end)
+//! queue    = start − arrival
+//! floor    = floor_cycles / clock         (plan compute floor)
+//! stretch  = (nominal − floor_cycles) / clock   (predicted DRAM stretch)
+//! donation = stretch − ((latency − queue) − floor)
+//! ```
+//!
+//! so `donation` is *defined* as whatever closes the books: the gap
+//! between the predicted DRAM stretch and the stretch actually
+//! observed. [`RequestAttr::residual_s`] replays exactly those
+//! operations — `(((latency − queue) − floor) − stretch) + donation` —
+//! and because IEEE-754 rounding is sign-symmetric the residual is
+//! exactly `0.0` for every finite record, not merely small. The naïve
+//! check `queue + floor + stretch − donation == latency` is **not**
+//! float-guaranteed; tests and `tools/trace_check.py` assert the
+//! canonical form.
+
+use crate::util::json::Json;
+
+/// Latency buckets per run used by the report layer when it windows a
+/// serve outcome (`span / DEFAULT_WINDOWS` seconds per bucket).
+pub const DEFAULT_WINDOWS: usize = 8;
+
+/// Default SLO miss budget (fraction of requests allowed to miss their
+/// deadline) that the burn-rate monitor normalizes against: burn rate
+/// 1.0 means the window is missing at exactly the budgeted rate.
+pub const DEFAULT_SLO_BUDGET: f64 = 0.01;
+
+/// How a request's lifecycle ended.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttrOutcome {
+    /// Served to completion; `missed` records whether it finished past
+    /// its deadline (+ the engine's epsilon).
+    Completed { missed: bool },
+    /// Dropped by the dispatch policy (hopeless/doomed pruning); the
+    /// whole lifetime is queue wait and the miss is a policy artifact.
+    Dropped,
+}
+
+/// One request's causal latency decomposition, recorded by the serve
+/// event loop at completion (or drop) time.
+///
+/// All `_s` fields are seconds. For completed requests the invariant
+/// `queue + floor + stretch − donation == latency` holds bit-exactly
+/// in the canonical evaluation order of [`residual_s`]; for drops the
+/// compute components are zero and `latency == queue` (time spent
+/// waiting before the policy gave up).
+///
+/// [`residual_s`]: RequestAttr::residual_s
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestAttr {
+    /// Task index in the scenario.
+    pub task: usize,
+    /// Per-task request sequence number (matches trace/arrival ids).
+    pub id: u64,
+    /// Region that served (or dropped) the request.
+    pub region: usize,
+    /// Arrival time.
+    pub arrival_s: f64,
+    /// Measured end-to-end latency (completion − arrival, or for drops
+    /// the time waited before being dropped).
+    pub latency_s: f64,
+    /// Queue wait (dispatch − arrival).
+    pub queue_s: f64,
+    /// Bandwidth-independent compute floor from the plan's per-stage
+    /// `max(pipeline, NoC, GB)` cycles.
+    pub floor_s: f64,
+    /// Plan-predicted DRAM-contention stretch at the static bandwidth
+    /// share: `(nominal − floor) / clock`.
+    pub stretch_s: f64,
+    /// Donation received: predicted stretch minus observed stretch.
+    /// Positive when dynamic bandwidth splitting served DRAM phases
+    /// faster than the static entitlement would have; ~0 under the
+    /// static model.
+    pub donation_s: f64,
+    /// Diagnostic: bytes granted above the region's static entitlement
+    /// while this request was being served (the donation in bandwidth
+    /// terms rather than time terms).
+    pub donated_bytes: f64,
+    /// How the lifecycle ended.
+    pub outcome: AttrOutcome,
+}
+
+impl RequestAttr {
+    /// True when the request was served to completion (even if late).
+    pub fn completed(&self) -> bool {
+        matches!(self.outcome, AttrOutcome::Completed { .. })
+    }
+
+    /// True when the request failed its SLO: completed past its
+    /// deadline, or dropped.
+    pub fn missed(&self) -> bool {
+        match self.outcome {
+            AttrOutcome::Completed { missed } => missed,
+            AttrOutcome::Dropped => true,
+        }
+    }
+
+    /// Time on a region (latency minus queue wait).
+    pub fn service_s(&self) -> f64 {
+        self.latency_s - self.queue_s
+    }
+
+    /// Observed DRAM stretch (service time above the compute floor) —
+    /// equals `stretch_s − donation_s` bit-exactly by construction.
+    pub fn actual_stretch_s(&self) -> f64 {
+        (self.latency_s - self.queue_s) - self.floor_s
+    }
+
+    /// Conservation residual in the canonical evaluation order; this
+    /// is exactly `0.0` (not merely small) for every finite record the
+    /// engine emits, because `donation_s` is derived as the closing
+    /// term of the same float expression. Keep the parenthesization —
+    /// reassociating the sum forfeits the bit-exact guarantee.
+    pub fn residual_s(&self) -> f64 {
+        (((self.latency_s - self.queue_s) - self.floor_s) - self.stretch_s) + self.donation_s
+    }
+
+    /// The observed latency components, in critical-path order:
+    /// `("queue", "compute", "dram")`. The DRAM component is the
+    /// *observed* stretch so the three sum (modulo float) to latency.
+    pub fn components(&self) -> [(&'static str, f64); 3] {
+        [
+            ("queue", self.queue_s),
+            ("compute", self.floor_s),
+            ("dram", self.actual_stretch_s()),
+        ]
+    }
+
+    /// The dominant latency component — the critical path's largest
+    /// leg. Drops attribute to the dispatch policy rather than any
+    /// physical resource.
+    pub fn dominant(&self) -> &'static str {
+        if !self.completed() {
+            return "policy";
+        }
+        let mut best = ("queue", f64::NEG_INFINITY);
+        for (name, v) in self.components() {
+            if v > best.1 {
+                best = (name, v);
+            }
+        }
+        best.0
+    }
+
+    /// Full-precision JSON record. `Json::Num` serializes via Rust's
+    /// shortest-round-trip float formatting, so the seconds fields
+    /// survive a JSON round trip with identical bits — which is what
+    /// lets `tools/trace_check.py` re-assert `residual_s == 0.0` on
+    /// the exported documents, and the worker-count determinism test
+    /// compare outputs byte-for-byte.
+    pub fn to_json(&self) -> Json {
+        let (outcome, missed) = match self.outcome {
+            AttrOutcome::Completed { missed } => ("completed", missed),
+            AttrOutcome::Dropped => ("dropped", true),
+        };
+        let mut j = Json::obj();
+        j.set("task", self.task)
+            .set("id", self.id)
+            .set("region", self.region)
+            .set("arrival_s", self.arrival_s)
+            .set("latency_s", self.latency_s)
+            .set("queue_s", self.queue_s)
+            .set("floor_s", self.floor_s)
+            .set("stretch_s", self.stretch_s)
+            .set("donation_s", self.donation_s)
+            .set("donated_bytes", self.donated_bytes)
+            .set("outcome", outcome)
+            .set("missed", missed)
+            .set("dominant", self.dominant());
+        j
+    }
+}
+
+/// Aggregate attribution for one time bucket (requests bucketed by
+/// arrival time). Component sums cover completed requests; the p50/p99
+/// shares are the component fractions of the latency-rank request at
+/// that percentile (nearest rank), i.e. "what explains the p99".
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowAttr {
+    /// Bucket start (inclusive).
+    pub t0_s: f64,
+    /// Bucket end (exclusive).
+    pub t1_s: f64,
+    /// Requests completed / dropped / SLO-missed in the bucket.
+    pub completed: usize,
+    pub dropped: usize,
+    pub missed: usize,
+    /// Summed components over completed requests.
+    pub queue_s: f64,
+    pub floor_s: f64,
+    pub dram_s: f64,
+    pub donation_s: f64,
+    /// Nearest-rank latency percentiles over completed requests.
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// `[queue, compute, dram]` fractions of the p50/p99 request's
+    /// latency (zeros when the bucket completed nothing).
+    pub p50_share: [f64; 3],
+    pub p99_share: [f64; 3],
+}
+
+impl WindowAttr {
+    pub fn to_json(&self) -> Json {
+        let share = |s: &[f64; 3]| {
+            let mut j = Json::obj();
+            j.set("queue", s[0]).set("compute", s[1]).set("dram", s[2]);
+            j
+        };
+        let mut j = Json::obj();
+        j.set("t0_s", self.t0_s)
+            .set("t1_s", self.t1_s)
+            .set("completed", self.completed)
+            .set("dropped", self.dropped)
+            .set("missed", self.missed)
+            .set("queue_s", self.queue_s)
+            .set("floor_s", self.floor_s)
+            .set("dram_s", self.dram_s)
+            .set("donation_s", self.donation_s)
+            .set("p50_latency_s", self.p50_latency_s)
+            .set("p99_latency_s", self.p99_latency_s)
+            .set("p50_share", share(&self.p50_share))
+            .set("p99_share", share(&self.p99_share));
+        j
+    }
+}
+
+/// Attribution rolled up over one grouping key (a task or a region).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupAttr {
+    /// Task index for [`by_task`], region index for [`by_region`].
+    pub key: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub missed: usize,
+    /// Summed components over completed requests.
+    pub queue_s: f64,
+    pub floor_s: f64,
+    pub dram_s: f64,
+    pub donation_s: f64,
+    /// Summed end-to-end latency over completed requests.
+    pub latency_s: f64,
+}
+
+impl GroupAttr {
+    /// Mean of a summed component over completed requests (0 when the
+    /// group completed nothing).
+    pub fn mean(&self, total_s: f64) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            total_s / self.completed as f64
+        }
+    }
+}
+
+/// One sliding-window sample of the SLO burn-rate monitor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BurnSample {
+    /// Window end time (the sample point); covers `(t_s − window, t_s]`.
+    pub t_s: f64,
+    /// Requests that ended (completed or dropped) in the window.
+    pub requests: usize,
+    /// Of those, how many missed their SLO.
+    pub missed: usize,
+    /// `missed / requests` (0 when the window is empty).
+    pub miss_rate: f64,
+    /// `miss_rate / budget` — 1.0 burns the error budget exactly;
+    /// sustained >1.0 is the replan-now signal.
+    pub burn_rate: f64,
+}
+
+impl BurnSample {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("t_s", self.t_s)
+            .set("requests", self.requests)
+            .set("missed", self.missed)
+            .set("miss_rate", self.miss_rate)
+            .set("burn_rate", self.burn_rate);
+        j
+    }
+}
+
+/// Bucket records by arrival time into contiguous `window_s`-wide
+/// windows starting at 0 and aggregate per-bucket attribution.
+/// Returns an empty vec for empty input or a non-positive window.
+pub fn windowed(attrs: &[RequestAttr], window_s: f64) -> Vec<WindowAttr> {
+    if attrs.is_empty() || !(window_s > 0.0) {
+        return Vec::new();
+    }
+    let bucket = |t: f64| ((t / window_s).floor().max(0.0)) as usize;
+    let last = attrs.iter().map(|a| bucket(a.arrival_s)).max().unwrap_or(0);
+    let mut out: Vec<WindowAttr> = (0..=last)
+        .map(|i| WindowAttr {
+            t0_s: i as f64 * window_s,
+            t1_s: (i + 1) as f64 * window_s,
+            completed: 0,
+            dropped: 0,
+            missed: 0,
+            queue_s: 0.0,
+            floor_s: 0.0,
+            dram_s: 0.0,
+            donation_s: 0.0,
+            p50_latency_s: 0.0,
+            p99_latency_s: 0.0,
+            p50_share: [0.0; 3],
+            p99_share: [0.0; 3],
+        })
+        .collect();
+    let mut members: Vec<Vec<&RequestAttr>> = vec![Vec::new(); last + 1];
+    for a in attrs {
+        let w = &mut out[bucket(a.arrival_s)];
+        if a.missed() {
+            w.missed += 1;
+        }
+        if a.completed() {
+            w.completed += 1;
+            w.queue_s += a.queue_s;
+            w.floor_s += a.floor_s;
+            w.dram_s += a.actual_stretch_s();
+            w.donation_s += a.donation_s;
+            members[bucket(a.arrival_s)].push(a);
+        } else {
+            w.dropped += 1;
+        }
+    }
+    for (w, m) in out.iter_mut().zip(members.iter_mut()) {
+        if m.is_empty() {
+            continue;
+        }
+        // Deterministic total order: latency, then (task, id) to break
+        // exact-tie latencies identically on every run.
+        m.sort_by(|a, b| {
+            a.latency_s
+                .total_cmp(&b.latency_s)
+                .then(a.task.cmp(&b.task))
+                .then(a.id.cmp(&b.id))
+        });
+        let pick = |q: f64| {
+            let rank = ((q * m.len() as f64).ceil() as usize).max(1) - 1;
+            m[rank.min(m.len() - 1)]
+        };
+        let share = |a: &RequestAttr| {
+            if a.latency_s > 0.0 {
+                [
+                    a.queue_s / a.latency_s,
+                    a.floor_s / a.latency_s,
+                    a.actual_stretch_s() / a.latency_s,
+                ]
+            } else {
+                [0.0; 3]
+            }
+        };
+        let (p50, p99) = (pick(0.50), pick(0.99));
+        w.p50_latency_s = p50.latency_s;
+        w.p99_latency_s = p99.latency_s;
+        w.p50_share = share(p50);
+        w.p99_share = share(p99);
+    }
+    out
+}
+
+fn grouped(attrs: &[RequestAttr], key: impl Fn(&RequestAttr) -> usize) -> Vec<GroupAttr> {
+    let n = match attrs.iter().map(&key).max() {
+        Some(m) => m + 1,
+        None => return Vec::new(),
+    };
+    let mut out: Vec<GroupAttr> = (0..n)
+        .map(|k| GroupAttr {
+            key: k,
+            completed: 0,
+            dropped: 0,
+            missed: 0,
+            queue_s: 0.0,
+            floor_s: 0.0,
+            dram_s: 0.0,
+            donation_s: 0.0,
+            latency_s: 0.0,
+        })
+        .collect();
+    for a in attrs {
+        let g = &mut out[key(a)];
+        if a.missed() {
+            g.missed += 1;
+        }
+        if a.completed() {
+            g.completed += 1;
+            g.queue_s += a.queue_s;
+            g.floor_s += a.floor_s;
+            g.dram_s += a.actual_stretch_s();
+            g.donation_s += a.donation_s;
+            g.latency_s += a.latency_s;
+        } else {
+            g.dropped += 1;
+        }
+    }
+    out
+}
+
+/// Roll attribution up per task index.
+pub fn by_task(attrs: &[RequestAttr]) -> Vec<GroupAttr> {
+    grouped(attrs, |a| a.task)
+}
+
+/// Roll attribution up per serving region.
+pub fn by_region(attrs: &[RequestAttr]) -> Vec<GroupAttr> {
+    grouped(attrs, |a| a.region)
+}
+
+/// SLO burn-rate monitor: slide a `window_s` window (half-window
+/// stride) over request *end* times and sample `miss_rate / budget`.
+/// The stride widens so no run produces more than ~256 samples.
+pub fn burn_rate(attrs: &[RequestAttr], window_s: f64, budget: f64) -> Vec<BurnSample> {
+    if attrs.is_empty() || !(window_s > 0.0) || !(budget > 0.0) {
+        return Vec::new();
+    }
+    let mut ends: Vec<(f64, bool, usize, u64)> = attrs
+        .iter()
+        .map(|a| (a.arrival_s + a.latency_s, a.missed(), a.task, a.id))
+        .collect();
+    ends.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.2.cmp(&b.2)).then(a.3.cmp(&b.3)));
+    let (first, last) = (ends[0].0, ends[ends.len() - 1].0);
+    let stride = (window_s / 2.0).max((last - first) / 256.0);
+    let mut out = Vec::new();
+    let mut t = first;
+    loop {
+        let lo = t - window_s;
+        let (mut requests, mut missed) = (0usize, 0usize);
+        for &(end, m, _, _) in &ends {
+            if end > lo && end <= t {
+                requests += 1;
+                if m {
+                    missed += 1;
+                }
+            }
+        }
+        let miss_rate = if requests == 0 {
+            0.0
+        } else {
+            missed as f64 / requests as f64
+        };
+        out.push(BurnSample {
+            t_s: t,
+            requests,
+            missed,
+            miss_rate,
+            burn_rate: miss_rate / budget,
+        });
+        if t >= last {
+            break;
+        }
+        t = (t + stride).min(last);
+    }
+    out
+}
+
+/// The `k` slowest completed requests, worst first (ties broken by
+/// `(task, id)` so the order is identical on every run).
+pub fn worst_k(attrs: &[RequestAttr], k: usize) -> Vec<&RequestAttr> {
+    let mut done: Vec<&RequestAttr> = attrs.iter().filter(|a| a.completed()).collect();
+    done.sort_by(|a, b| {
+        b.latency_s
+            .total_cmp(&a.latency_s)
+            .then(a.task.cmp(&b.task))
+            .then(a.id.cmp(&b.id))
+    });
+    done.truncate(k);
+    done
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a record exactly the way the engine does: `donation` is
+    /// the closing term of the canonical float expression. `parts` is
+    /// `[latency, queue, floor, stretch]` in seconds.
+    fn rec(task: usize, id: u64, arrival: f64, parts: [f64; 4], missed: bool) -> RequestAttr {
+        let [latency, queue, floor, stretch] = parts;
+        let donation = stretch - ((latency - queue) - floor);
+        RequestAttr {
+            task,
+            id,
+            region: task,
+            arrival_s: arrival,
+            latency_s: latency,
+            queue_s: queue,
+            floor_s: floor,
+            stretch_s: stretch,
+            donation_s: donation,
+            donated_bytes: 0.0,
+            outcome: AttrOutcome::Completed { missed },
+        }
+    }
+
+    #[test]
+    fn residual_is_bit_exactly_zero_for_adversarial_components() {
+        // Components chosen to be float-hostile: wildly mixed
+        // magnitudes where a reassociated sum would NOT cancel.
+        let cases = [
+            (1.0e-3, 2.5e-4, 1.0e-7, 3.0e-5),
+            (17.0 / 3.0, 1.0 / 7.0, 1.0e-12, 2.0 / 3.0),
+            (1.0e3 + 1.0e-9, 1.0e-9, 999.0, 0.5),
+            (0.1 + 0.2, 0.1, 0.2, 0.05),
+            (f64::MIN_POSITIVE * 8.0, f64::MIN_POSITIVE, f64::MIN_POSITIVE * 2.0, 0.0),
+        ];
+        for (i, &(lat, q, f, s)) in cases.iter().enumerate() {
+            let a = rec(0, i as u64, 0.0, [lat, q, f, s], false);
+            assert_eq!(a.residual_s(), 0.0, "case {i}: residual must be exactly zero");
+        }
+    }
+
+    #[test]
+    fn dominant_picks_the_largest_component_and_drops_blame_policy() {
+        assert_eq!(rec(0, 0, 0.0, [1.0, 0.7, 0.2, 0.1], false).dominant(), "queue");
+        assert_eq!(rec(0, 1, 0.0, [1.0, 0.1, 0.8, 0.1], false).dominant(), "compute");
+        assert_eq!(rec(0, 2, 0.0, [1.0, 0.1, 0.2, 0.7], false).dominant(), "dram");
+        let drop = RequestAttr {
+            outcome: AttrOutcome::Dropped,
+            floor_s: 0.0,
+            stretch_s: 0.0,
+            donation_s: 0.0,
+            ..rec(0, 3, 0.0, [0.5, 0.5, 0.0, 0.0], true)
+        };
+        assert_eq!(drop.dominant(), "policy");
+        assert!(drop.missed() && !drop.completed());
+        assert_eq!(drop.residual_s(), 0.0);
+    }
+
+    #[test]
+    fn windowed_buckets_by_arrival_and_ranks_percentiles() {
+        let attrs: Vec<RequestAttr> = (0..20)
+            .map(|i| {
+                let lat = 1e-3 * (i + 1) as f64;
+                rec(0, i as u64, 0.05 * i as f64, [lat, lat * 0.5, lat * 0.3, lat * 0.2], false)
+            })
+            .collect();
+        let ws = windowed(&attrs, 0.25);
+        assert_eq!(ws.len(), 4, "20 arrivals at 50ms spacing over 1s → 4 buckets of 0.25s");
+        for w in &ws {
+            assert_eq!(w.completed, 5);
+            assert_eq!(w.dropped, 0);
+            assert!(w.p99_latency_s >= w.p50_latency_s);
+            let share_sum: f64 = w.p50_share.iter().sum();
+            assert!((share_sum - 1.0).abs() < 1e-9, "shares cover the whole latency");
+        }
+        // The p99 (nearest-rank) of 5 requests is the max.
+        assert_eq!(ws[0].p99_latency_s, 5e-3);
+    }
+
+    #[test]
+    fn burn_rate_tracks_the_miss_budget() {
+        let attrs: Vec<RequestAttr> = (0..100)
+            .map(|i| rec(0, i as u64, 0.01 * i as f64, [1e-3, 5e-4, 4e-4, 1e-4], i % 10 == 0))
+            .collect();
+        let samples = burn_rate(&attrs, 0.2, 0.01);
+        assert!(!samples.is_empty());
+        for pair in samples.windows(2) {
+            assert!(pair[1].t_s > pair[0].t_s, "samples are time-ordered");
+        }
+        let last = samples.last().unwrap();
+        // 10% misses against a 1% budget → burn rate near 10.
+        assert!(last.burn_rate > 1.0, "overbudget misses must show burn > 1");
+    }
+
+    #[test]
+    fn worst_k_orders_by_latency_with_stable_ties() {
+        let mut attrs = vec![
+            rec(1, 7, 0.0, [3e-3, 1e-3, 1e-3, 1e-3], false),
+            rec(0, 2, 0.0, [5e-3, 2e-3, 2e-3, 1e-3], true),
+            rec(2, 1, 0.0, [5e-3, 2e-3, 2e-3, 1e-3], true),
+            rec(0, 9, 0.0, [1e-3, 5e-4, 4e-4, 1e-4], false),
+        ];
+        attrs.push(RequestAttr {
+            outcome: AttrOutcome::Dropped,
+            ..attrs[0]
+        });
+        let worst = worst_k(&attrs, 3);
+        assert_eq!(worst.len(), 3);
+        assert_eq!((worst[0].task, worst[0].id), (0, 2), "tie broken by (task, id)");
+        assert_eq!((worst[1].task, worst[1].id), (2, 1));
+        assert_eq!((worst[2].task, worst[2].id), (1, 7));
+    }
+
+    #[test]
+    fn group_rollups_split_by_task_and_region() {
+        let attrs = vec![
+            rec(0, 0, 0.0, [1e-3, 5e-4, 4e-4, 1e-4], false),
+            rec(0, 1, 0.1, [2e-3, 1e-3, 8e-4, 2e-4], true),
+            rec(1, 0, 0.2, [4e-3, 2e-3, 1e-3, 1e-3], false),
+        ];
+        let tasks = by_task(&attrs);
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(tasks[0].completed, 2);
+        assert_eq!(tasks[0].missed, 1);
+        assert_eq!(tasks[1].completed, 1);
+        assert!((tasks[1].mean(tasks[1].latency_s) - 4e-3).abs() < 1e-12);
+        let regions = by_region(&attrs);
+        assert_eq!(regions.len(), 2);
+        assert_eq!(regions[0].completed + regions[1].completed, 3);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_component_bits() {
+        let a = rec(3, 42, 0.123456789, [17.0 / 3.0, 1.0 / 7.0, 1.0e-12, 2.0 / 3.0], false);
+        let text = a.to_json().to_pretty();
+        let parsed = Json::parse(&text).expect("attr json parses");
+        for key in ["latency_s", "queue_s", "floor_s", "stretch_s", "donation_s"] {
+            let got = parsed.get(key).and_then(|v| v.as_f64()).unwrap();
+            let want = match key {
+                "latency_s" => a.latency_s,
+                "queue_s" => a.queue_s,
+                "floor_s" => a.floor_s,
+                "stretch_s" => a.stretch_s,
+                _ => a.donation_s,
+            };
+            assert_eq!(got.to_bits(), want.to_bits(), "{key} must round-trip bit-exactly");
+        }
+    }
+}

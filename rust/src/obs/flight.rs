@@ -1,0 +1,293 @@
+//! SLO flight recorder: a bounded ring of recent sim events frozen at
+//! the first deadline miss.
+//!
+//! Long sweeps make full traces impractical — a 30 s overload run at
+//! trace granularity is tens of millions of events, and the miss you
+//! care about is buried in the first second. The flight recorder keeps
+//! only the last [`DEFAULT_FLIGHT_CAP`] events (a private [`Obs`] ring,
+//! so the Perfetto exporter and track naming are reused wholesale) and
+//! *freezes* the ring the moment the first deadline miss completes.
+//! What you get is a focused, Perfetto-loadable snippet of the moments
+//! leading up to the miss plus a machine-readable trigger record; the
+//! CLI (`pipeorgan serve --flight-out FILE`) attaches the worst-request
+//! attribution table ([`crate::obs::attr`]) and writes the combined
+//! document. Runs that never miss still dump an end-of-run snapshot so
+//! `--flight-out` always produces a file.
+//!
+//! The recorder is independent of the user-facing `--obs`/`--trace-out`
+//! handle: it can run with observability otherwise disabled, and its
+//! ring cap bounds memory regardless of run length.
+
+use super::Obs;
+use crate::util::json::Json;
+
+/// Default event capacity of the flight ring: large enough to hold the
+/// last few scheduling epochs of every region at serve granularity,
+/// small enough that an always-on recorder costs a few MB at worst.
+pub const DEFAULT_FLIGHT_CAP: usize = 4096;
+
+/// Why a snapshot was taken.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FlightTrigger {
+    /// The first request in the run to complete past its deadline.
+    DeadlineMiss {
+        task: usize,
+        id: u64,
+        region: usize,
+        t_s: f64,
+    },
+    /// No request missed; the snapshot is the tail of the run.
+    EndOfRun { t_s: f64 },
+}
+
+impl FlightTrigger {
+    /// Stable string tag used in the dumped JSON (`deadline_miss` /
+    /// `end_of_run`), matched by `tools/trace_check.py`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FlightTrigger::DeadlineMiss { .. } => "deadline_miss",
+            FlightTrigger::EndOfRun { .. } => "end_of_run",
+        }
+    }
+
+    /// Simulated time of the trigger.
+    pub fn t_s(&self) -> f64 {
+        match *self {
+            FlightTrigger::DeadlineMiss { t_s, .. } | FlightTrigger::EndOfRun { t_s } => t_s,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", self.kind()).set("t_s", self.t_s());
+        if let FlightTrigger::DeadlineMiss {
+            task, id, region, ..
+        } = *self
+        {
+            j.set("task", task).set("id", id).set("region", region);
+        }
+        j
+    }
+}
+
+/// The frozen output of a [`FlightRecorder`]: the trigger plus a
+/// Perfetto-compatible trace document of the events leading up to it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightSnapshot {
+    /// What froze the ring.
+    pub trigger: FlightTrigger,
+    doc: Json,
+}
+
+impl FlightSnapshot {
+    /// True when the snapshot was frozen by a deadline miss (the case
+    /// `--flight-out` prefers when several policies ran).
+    pub fn missed(&self) -> bool {
+        matches!(self.trigger, FlightTrigger::DeadlineMiss { .. })
+    }
+
+    /// The dump written to `--flight-out`: the frozen Perfetto trace
+    /// (loads unmodified in ui.perfetto.dev, which ignores unknown
+    /// top-level keys) with a `"flight"` block carrying the trigger and
+    /// the caller-supplied attribution table.
+    pub fn document(&self, attr_table: Json) -> Json {
+        let mut flight = self.trigger.to_json();
+        flight.set("table", attr_table);
+        let mut doc = self.doc.clone();
+        doc.set("flight", flight);
+        doc
+    }
+}
+
+/// A bounded recorder of recent sim events that freezes on the first
+/// deadline miss.
+///
+/// The serve event loop mirrors every emission (track names, spans,
+/// instants, counter samples) into the recorder when
+/// `SimOptions::flight` is set; [`trigger_miss`] freezes the ring at
+/// the first miss and later emissions become no-ops, so the snapshot
+/// shows the lead-up rather than the aftermath. [`finish`] always
+/// yields a snapshot — [`FlightTrigger::EndOfRun`] when nothing missed.
+///
+/// [`trigger_miss`]: FlightRecorder::trigger_miss
+/// [`finish`]: FlightRecorder::finish
+#[derive(Debug)]
+pub struct FlightRecorder {
+    sink: Obs,
+    frozen: Option<(FlightTrigger, Json)>,
+}
+
+impl FlightRecorder {
+    /// A recorder whose ring keeps the most recent `cap` events
+    /// (drop-oldest beyond that).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            sink: Obs::with_cap(cap),
+            frozen: None,
+        }
+    }
+
+    /// True once the first miss has frozen the ring.
+    pub fn triggered(&self) -> bool {
+        self.frozen.is_some()
+    }
+
+    /// Name a process track (first name wins, like [`Obs`]).
+    pub fn name_process(&self, pid: u32, name: &str) {
+        self.sink.name_process(pid, name);
+    }
+
+    /// Name a thread track (first name wins).
+    pub fn name_track(&self, pid: u32, tid: u32, name: &str) {
+        self.sink.name_track(pid, tid, name);
+    }
+
+    /// Record a complete span; no-op once frozen.
+    pub fn span(&self, name: &str, pid: u32, tid: u32, ts_us: f64, dur_us: f64) {
+        if self.frozen.is_none() {
+            self.sink.span(name, pid, tid, ts_us, dur_us);
+        }
+    }
+
+    /// Record an instant event; no-op once frozen.
+    pub fn instant(&self, name: &str, pid: u32, tid: u32, ts_us: f64) {
+        if self.frozen.is_none() {
+            self.sink.instant(name, pid, tid, ts_us);
+        }
+    }
+
+    /// Record a counter sample; no-op once frozen.
+    pub fn counter(&self, name: &str, pid: u32, ts_us: f64, series: &[(&str, f64)]) {
+        if self.frozen.is_none() {
+            self.sink.counter(name, pid, ts_us, series);
+        }
+    }
+
+    /// Report a deadline miss. The *first* call freezes the ring into
+    /// the snapshot (including the miss event itself if the caller
+    /// emitted it just before); every later call is a no-op, so one run
+    /// produces at most one miss-triggered snapshot.
+    pub fn trigger_miss(&mut self, task: usize, id: u64, region: usize, t_s: f64) {
+        if self.frozen.is_none() {
+            self.frozen = Some((
+                FlightTrigger::DeadlineMiss {
+                    task,
+                    id,
+                    region,
+                    t_s,
+                },
+                self.sink.trace_json(),
+            ));
+        }
+    }
+
+    /// Consume the recorder into its snapshot: the miss-frozen ring if
+    /// a miss triggered, otherwise the end-of-run tail at `t_s`.
+    pub fn finish(self, t_s: f64) -> FlightSnapshot {
+        match self.frozen {
+            Some((trigger, doc)) => FlightSnapshot { trigger, doc },
+            None => FlightSnapshot {
+                trigger: FlightTrigger::EndOfRun { t_s },
+                doc: self.sink.trace_json(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events_of(doc: &Json) -> Vec<Json> {
+        doc.get("traceEvents")
+            .and_then(|e| e.as_arr())
+            .expect("trace doc has traceEvents")
+            .to_vec()
+    }
+
+    #[test]
+    fn first_miss_freezes_and_later_events_are_excluded() {
+        let mut fr = FlightRecorder::new(64);
+        fr.name_process(1, "serve-sim");
+        fr.name_track(1, 0, "region0");
+        fr.instant("arrive t0#0", 1, 0, 10.0);
+        fr.instant("miss t0#0", 1, 0, 20.0);
+        fr.trigger_miss(0, 0, 0, 2e-5);
+        assert!(fr.triggered());
+        let frozen_len = {
+            let (_, doc) = fr.frozen.as_ref().unwrap();
+            events_of(doc).len()
+        };
+        // Emissions and triggers after the freeze change nothing.
+        fr.instant("arrive t0#1", 1, 0, 30.0);
+        fr.span("t0 s0", 1, 0, 30.0, 5.0);
+        fr.counter("queue_depth", 1, 40.0, &[("t0", 1.0)]);
+        fr.trigger_miss(9, 9, 9, 9.0);
+        let snap = fr.finish(1.0);
+        assert_eq!(
+            snap.trigger,
+            FlightTrigger::DeadlineMiss {
+                task: 0,
+                id: 0,
+                region: 0,
+                t_s: 2e-5
+            }
+        );
+        assert!(snap.missed());
+        assert_eq!(events_of(&snap.document(Json::Arr(vec![]))).len(), frozen_len);
+    }
+
+    #[test]
+    fn no_miss_yields_an_end_of_run_snapshot_with_all_events() {
+        let mut fr = FlightRecorder::new(64);
+        fr.instant("arrive t0#0", 1, 0, 10.0);
+        fr.counter("queue_depth", 1, 20.0, &[("t0", 0.0)]);
+        assert!(!fr.triggered());
+        let snap = fr.finish(0.5);
+        assert_eq!(snap.trigger, FlightTrigger::EndOfRun { t_s: 0.5 });
+        assert!(!snap.missed());
+        // 2 payload events; meta events (process/thread names) may add more.
+        assert!(events_of(&snap.document(Json::Arr(vec![]))).len() >= 2);
+    }
+
+    #[test]
+    fn ring_cap_bounds_the_snapshot_and_keeps_the_newest_events() {
+        let fr = {
+            let mut fr = FlightRecorder::new(8);
+            for i in 0..100 {
+                fr.instant(&format!("e{i}"), 1, 0, i as f64);
+            }
+            fr.trigger_miss(0, 99, 0, 99e-6);
+            fr
+        };
+        let snap = fr.finish(1.0);
+        let events = events_of(&snap.document(Json::Arr(vec![])));
+        let payload: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("i"))
+            .collect();
+        assert_eq!(payload.len(), 8, "ring cap bounds the payload");
+        let last = payload.last().unwrap();
+        assert_eq!(last.get("name").and_then(|n| n.as_str()), Some("e99"));
+    }
+
+    #[test]
+    fn document_attaches_the_flight_block() {
+        let mut fr = FlightRecorder::new(8);
+        fr.instant("arrive t0#0", 1, 0, 1.0);
+        fr.trigger_miss(2, 7, 1, 0.25);
+        let snap = fr.finish(0.5);
+        let mut row = Json::obj();
+        row.set("task", 2u32).set("id", 7u32);
+        let doc = snap.document(Json::Arr(vec![row]));
+        let fl = doc.get("flight").expect("flight block present");
+        assert_eq!(fl.get("kind").and_then(|k| k.as_str()), Some("deadline_miss"));
+        assert_eq!(fl.get("task").and_then(|t| t.as_usize()), Some(2));
+        assert_eq!(fl.get("id").and_then(|t| t.as_usize()), Some(7));
+        assert_eq!(fl.get("region").and_then(|t| t.as_usize()), Some(1));
+        assert_eq!(fl.get("table").and_then(|t| t.as_arr()).map(|a| a.len()), Some(1));
+        // The trace body is untouched: still a valid Perfetto doc.
+        assert!(doc.get("traceEvents").is_some());
+        assert!(doc.get("displayTimeUnit").is_some());
+    }
+}

@@ -9,7 +9,14 @@
 //! feeds scoped self-profiling timings into the CI bench recorder
 //! ([`selfprof`]). The serve event loop, the cosched guillotine beam, and
 //! the dse search all carry an `Obs` in their configs; the future online
-//! re-planning controller reads the same counters live.
+//! re-planning controller reads the same counters live. On top of the
+//! raw stream sit two analysis layers (docs/OBSERVABILITY.md): [`attr`]
+//! decomposes each served request's latency into queue / compute /
+//! DRAM-stretch / donation components (conserved bit-exactly) and
+//! aggregates windowed bottleneck attribution plus an SLO burn-rate
+//! monitor, and [`flight`] is a bounded flight recorder that freezes a
+//! Perfetto-loadable snippet at the first deadline miss
+//! (`serve --flight-out FILE`).
 //!
 //! **Zero-cost-when-disabled.** A disabled handle is `inner: None`; every
 //! method early-returns before formatting, locking, or allocating, so the
@@ -30,11 +37,15 @@
 //! identical `PID_SIM` sequence; wall-domain events are real timings and
 //! are not expected to replay.
 
+pub mod attr;
 pub mod counters;
+pub mod flight;
 pub mod perfetto;
 pub mod selfprof;
 pub mod trace;
 
+pub use attr::{AttrOutcome, RequestAttr};
+pub use flight::{FlightRecorder, FlightSnapshot, FlightTrigger, DEFAULT_FLIGHT_CAP};
 pub use selfprof::ScopedTimer;
 pub use trace::{Event, Phase, DEFAULT_RING_CAP};
 

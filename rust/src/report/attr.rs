@@ -1,0 +1,412 @@
+//! Latency-attribution report: windowed bottleneck breakdown, SLO burn
+//! rate, and top-k worst requests with critical paths, per (scenario,
+//! policy) — the `pipeorgan serve --attr-out` artifact plus the `attr`
+//! block embedded in the serve report (see docs/OBSERVABILITY.md).
+//!
+//! The observed side comes from the engine's per-request
+//! [`RequestAttr`] records (`obs::attr`); the predicted side comes from
+//! the serving plan's per-task [`ServedCost`] split
+//! (`floor_cycles` / `nominal_cycles − floor_cycles`), so
+//! predicted-vs-observed skew is a first-class column rather than a
+//! post-hoc join.
+
+use crate::obs::attr::{
+    burn_rate, by_region, by_task, windowed, worst_k, GroupAttr, RequestAttr, DEFAULT_SLO_BUDGET,
+    DEFAULT_WINDOWS,
+};
+use crate::serve::{ServeOutcome, ServePlan, ServeRun};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+use super::Report;
+
+/// Schema tag stamped on the standalone attribution document so
+/// `tools/trace_check.py` can dispatch its validation mode.
+pub const ATTR_SCHEMA: &str = "pipeorgan-attr-v1";
+
+/// Worst requests carried in the report's per-policy block.
+const WORST_K_REPORT: usize = 5;
+
+/// Worst requests tabulated in the flight-recorder document.
+const WORST_K_FLIGHT: usize = 10;
+
+/// One request as JSON plus its explicit critical path: the observed
+/// legs in lifecycle order (queue → compute → dram), which sum to the
+/// measured latency modulo the canonical-order donation bookkeeping.
+fn request_json(a: &RequestAttr) -> Json {
+    let mut j = a.to_json();
+    let mut path = Json::Arr(vec![]);
+    for (leg, v) in a.components() {
+        let mut e = Json::obj();
+        e.set("leg", leg).set("s", v);
+        path.push(e);
+    }
+    j.set("critical_path", path);
+    j
+}
+
+fn group_json(g: &GroupAttr, key_name: &str) -> Json {
+    let mut j = Json::obj();
+    j.set(key_name, g.key)
+        .set("completed", g.completed)
+        .set("dropped", g.dropped)
+        .set("missed", g.missed)
+        .set("queue_s", g.queue_s)
+        .set("floor_s", g.floor_s)
+        .set("dram_s", g.dram_s)
+        .set("donation_s", g.donation_s)
+        .set("latency_s", g.latency_s);
+    j
+}
+
+/// The largest mean observed component of a group (the rollup analogue
+/// of [`RequestAttr::dominant`]); "policy" when the group only dropped.
+fn group_dominant(g: &GroupAttr) -> &'static str {
+    if g.completed == 0 {
+        return if g.dropped > 0 { "policy" } else { "idle" };
+    }
+    let mut best = ("queue", f64::NEG_INFINITY);
+    for (name, v) in [
+        ("queue", g.queue_s),
+        ("compute", g.floor_s),
+        ("dram", g.dram_s),
+    ] {
+        if v > best.1 {
+            best = (name, v);
+        }
+    }
+    best.0
+}
+
+/// Predicted per-inference (floor ms, dram-stretch ms) of `task` on its
+/// home region, from the plan's service-cost matrix diagonal.
+fn predicted_ms(plan: &ServePlan, task: usize) -> Option<(f64, f64)> {
+    let c = plan.costs.get(task)?.get(task)?;
+    let clock = plan.clock_hz.max(1.0);
+    Some((
+        c.floor_cycles / clock * 1e3,
+        (c.nominal_cycles - c.floor_cycles) / clock * 1e3,
+    ))
+}
+
+/// One policy's full attribution block, or `None` when the outcome
+/// carries no records (attribution disabled, or nothing arrived).
+pub fn policy_attr_json(plan: &ServePlan, o: &ServeOutcome) -> Option<Json> {
+    if o.attr.is_empty() {
+        return None;
+    }
+    let window_s = (o.span_s / DEFAULT_WINDOWS as f64).max(1e-9);
+
+    let mut totals = GroupAttr {
+        key: 0,
+        completed: 0,
+        dropped: 0,
+        missed: 0,
+        queue_s: 0.0,
+        floor_s: 0.0,
+        dram_s: 0.0,
+        donation_s: 0.0,
+        latency_s: 0.0,
+    };
+    for a in &o.attr {
+        if a.missed() {
+            totals.missed += 1;
+        }
+        if a.completed() {
+            totals.completed += 1;
+            totals.queue_s += a.queue_s;
+            totals.floor_s += a.floor_s;
+            totals.dram_s += a.actual_stretch_s();
+            totals.donation_s += a.donation_s;
+            totals.latency_s += a.latency_s;
+        } else {
+            totals.dropped += 1;
+        }
+    }
+    let mut totals_json = group_json(&totals, "requests");
+    totals_json
+        .set("requests", o.attr.len())
+        .set("dominant", group_dominant(&totals));
+
+    let mut tasks = Json::Arr(vec![]);
+    for g in by_task(&o.attr) {
+        let mut t = group_json(&g, "task");
+        if let Some(m) = o.tasks.get(g.key) {
+            t.set("name", m.task.clone());
+        }
+        t.set("mean_queue_ms", g.mean(g.queue_s) * 1e3)
+            .set("mean_compute_ms", g.mean(g.floor_s) * 1e3)
+            .set("mean_dram_ms", g.mean(g.dram_s) * 1e3)
+            .set("mean_donation_ms", g.mean(g.donation_s) * 1e3)
+            .set("mean_latency_ms", g.mean(g.latency_s) * 1e3)
+            .set("dominant", group_dominant(&g));
+        if let Some((floor_ms, dram_ms)) = predicted_ms(plan, g.key) {
+            // Skew: observed mean service time vs the plan's nominal
+            // (floor + static-share stretch) prediction, in percent.
+            // Positive = slower than planned (contention, borrowing a
+            // foreign region); negative = donation sped service up.
+            let pred = floor_ms + dram_ms;
+            let obs = g.mean(g.floor_s + g.dram_s) * 1e3;
+            t.set("pred_compute_ms", floor_ms).set("pred_dram_ms", dram_ms);
+            if pred > 0.0 && g.completed > 0 {
+                t.set("skew_pct", 100.0 * (obs - pred) / pred);
+            }
+        }
+        tasks.push(t);
+    }
+
+    let mut regions = Json::Arr(vec![]);
+    for g in by_region(&o.attr) {
+        let mut r = group_json(&g, "region");
+        r.set("dominant", group_dominant(&g));
+        regions.push(r);
+    }
+
+    let mut windows = Json::Arr(vec![]);
+    for w in windowed(&o.attr, window_s) {
+        windows.push(w.to_json());
+    }
+    let mut burn = Json::Arr(vec![]);
+    for b in burn_rate(&o.attr, window_s, DEFAULT_SLO_BUDGET) {
+        burn.push(b.to_json());
+    }
+    let mut worst = Json::Arr(vec![]);
+    for a in worst_k(&o.attr, WORST_K_REPORT) {
+        worst.push(request_json(a));
+    }
+
+    let mut j = Json::obj();
+    j.set("window_s", window_s)
+        .set("slo_budget", DEFAULT_SLO_BUDGET)
+        .set("totals", totals_json)
+        .set("tasks", tasks)
+        .set("regions", regions)
+        .set("windows", windows)
+        .set("burn", burn)
+        .set("worst", worst);
+    Some(j)
+}
+
+/// Tabulate the flight-recorder's attribution context: the worst
+/// completed requests (exact seconds, full precision) so the frozen
+/// trace snippet ships with the numbers that explain it.
+pub fn flight_table_json(o: &ServeOutcome) -> Json {
+    let mut rows = Json::Arr(vec![]);
+    for a in worst_k(&o.attr, WORST_K_FLIGHT) {
+        rows.push(request_json(a));
+    }
+    let mut j = Json::obj();
+    j.set("policy", o.policy.name())
+        .set("scenario", o.scenario.clone())
+        .set("requests", o.attr.len())
+        .set("worst", rows);
+    j
+}
+
+/// The standalone attribution report (`--attr-out`, `report/attr.*`):
+/// one stacked-breakdown row per (scenario, policy, task) plus the
+/// top-[`WORST_K_REPORT`] worst requests per policy, with the plan's
+/// predicted compute/DRAM split and the skew column beside the
+/// observed means. `None` when no outcome recorded attribution.
+pub fn attr_report(runs: &[ServeRun]) -> Option<Report> {
+    let mut table = Table::new(
+        "Attr — critical-path latency attribution (observed vs plan-predicted)",
+        &[
+            "scenario",
+            "policy",
+            "row",
+            "who",
+            "queue ms",
+            "compute ms",
+            "dram ms",
+            "donation ms",
+            "latency ms",
+            "pred compute ms",
+            "pred dram ms",
+            "skew %",
+            "dominant",
+        ],
+    );
+    let mut scenarios = Json::Arr(vec![]);
+    let mut any = false;
+    for r in runs {
+        let mut policies = Json::Arr(vec![]);
+        for o in &r.outcomes {
+            let Some(mut block) = policy_attr_json(&r.plan, o) else {
+                continue;
+            };
+            any = true;
+            block.set("policy", o.policy.name());
+            for g in by_task(&o.attr) {
+                let who = o
+                    .tasks
+                    .get(g.key)
+                    .map(|m| m.task.clone())
+                    .unwrap_or_else(|| format!("task{}", g.key));
+                let pred = predicted_ms(&r.plan, g.key);
+                let skew = pred.and_then(|(f, d)| {
+                    let p = f + d;
+                    (p > 0.0 && g.completed > 0)
+                        .then(|| 100.0 * (g.mean(g.floor_s + g.dram_s) * 1e3 - p) / p)
+                });
+                table.row(&[
+                    r.scenario.clone(),
+                    o.policy.name().to_string(),
+                    "task".into(),
+                    who,
+                    fnum(g.mean(g.queue_s) * 1e3),
+                    fnum(g.mean(g.floor_s) * 1e3),
+                    fnum(g.mean(g.dram_s) * 1e3),
+                    fnum(g.mean(g.donation_s) * 1e3),
+                    fnum(g.mean(g.latency_s) * 1e3),
+                    pred.map(|(f, _)| fnum(f)).unwrap_or_default(),
+                    pred.map(|(_, d)| fnum(d)).unwrap_or_default(),
+                    skew.map(fnum).unwrap_or_default(),
+                    group_dominant(&g).into(),
+                ]);
+            }
+            for a in worst_k(&o.attr, WORST_K_REPORT) {
+                let who = o
+                    .tasks
+                    .get(a.task)
+                    .map(|m| format!("{}#{}", m.task, a.id))
+                    .unwrap_or_else(|| format!("task{}#{}", a.task, a.id));
+                table.row(&[
+                    r.scenario.clone(),
+                    o.policy.name().to_string(),
+                    "worst".into(),
+                    who,
+                    fnum(a.queue_s * 1e3),
+                    fnum(a.floor_s * 1e3),
+                    fnum(a.actual_stretch_s() * 1e3),
+                    fnum(a.donation_s * 1e3),
+                    fnum(a.latency_s * 1e3),
+                    "".into(),
+                    "".into(),
+                    "".into(),
+                    a.dominant().into(),
+                ]);
+            }
+            policies.push(block);
+        }
+        let mut s = Json::obj();
+        s.set("scenario", r.scenario.clone()).set("policies", policies);
+        scenarios.push(s);
+    }
+    if !any {
+        return None;
+    }
+    let mut json = Json::obj();
+    json.set("schema", ATTR_SCHEMA).set("scenarios", scenarios);
+    Some(Report {
+        name: "attr",
+        table,
+        json,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::cosched::{Scenario, TaskSpec};
+    use crate::dse::EvalCache;
+    use crate::serve::{run_scenario, Policy, ServeConfig};
+    use crate::workloads::synthetic;
+
+    fn runs() -> Vec<ServeRun> {
+        let cfg = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        let mut a = synthetic::aw_chain(2.0, 4);
+        a.name = "a".into();
+        let mut b = synthetic::pointwise_conv_segment(2);
+        b.name = "b".into();
+        let sc = Scenario::new("pair", vec![TaskSpec::new(a, 30.0), TaskSpec::new(b, 60.0)]);
+        let sv = ServeConfig {
+            policies: vec![Policy::Fifo, Policy::Edf],
+            duration_s: 0.05,
+            ..ServeConfig::default()
+        };
+        vec![run_scenario(&sc, &cfg, &sv, &EvalCache::new(), 1).unwrap()]
+    }
+
+    #[test]
+    fn attr_report_tabulates_tasks_and_worst_and_parses() {
+        let runs = runs();
+        let r = attr_report(&runs).expect("attr recorded by default");
+        assert_eq!(r.name, "attr");
+        let md = r.table.to_markdown();
+        for needle in ["task", "worst", "dominant", "skew %"] {
+            assert!(md.contains(needle), "missing {needle} in:\n{md}");
+        }
+        // 2 policies × (2 task rows + ≤5 worst rows); at least one worst
+        // row exists because something completed.
+        assert!(r.table.rows.len() >= 2 * 2 + 2, "rows: {}", r.table.rows.len());
+        let text = r.json.to_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("schema").and_then(|s| s.as_str()),
+            Some(ATTR_SCHEMA)
+        );
+        let scenarios = parsed.get("scenarios").and_then(|s| s.as_arr()).unwrap();
+        let policies = scenarios[0].get("policies").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(policies.len(), 2);
+        for p in policies {
+            for key in ["totals", "tasks", "regions", "windows", "burn", "worst"] {
+                assert!(p.get(key).is_some(), "policy block missing {key}");
+            }
+            // Windows are contiguous and time-ordered.
+            let ws = p.get("windows").and_then(|w| w.as_arr()).unwrap();
+            for pair in ws.windows(2) {
+                let t1 = pair[0].get("t1_s").and_then(|v| v.as_f64()).unwrap();
+                let t0 = pair[1].get("t0_s").and_then(|v| v.as_f64()).unwrap();
+                assert!((t1 - t0).abs() < 1e-12, "windows tile the span");
+            }
+            // Worst rows conserve: queue + compute + dram ≈ latency
+            // (reassociated here, so float tolerance rather than the
+            // bit-exact canonical form trace_check.py asserts).
+            for w in p.get("worst").and_then(|w| w.as_arr()).unwrap() {
+                let f = |k: &str| w.get(k).and_then(|v| v.as_f64()).unwrap();
+                let path = w.get("critical_path").and_then(|c| c.as_arr()).unwrap();
+                assert_eq!(path.len(), 3);
+                let sum: f64 = path.iter().map(|e| e.get("s").and_then(|v| v.as_f64()).unwrap()).sum();
+                assert!(
+                    (sum - f("latency_s")).abs() <= 1e-12 * f("latency_s").max(1e-9),
+                    "critical path legs must cover the latency"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn attr_report_is_none_without_records() {
+        let mut runs = runs();
+        for o in &mut runs[0].outcomes {
+            o.attr.clear();
+        }
+        assert!(attr_report(&runs).is_none());
+        assert!(policy_attr_json(&runs[0].plan, &runs[0].outcomes[0]).is_none());
+    }
+
+    #[test]
+    fn flight_table_lists_worst_requests_with_paths() {
+        let runs = runs();
+        let o = &runs[0].outcomes[0];
+        let j = flight_table_json(o);
+        let text = j.to_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("requests").and_then(|v| v.as_usize()),
+            Some(o.attr.len())
+        );
+        let worst = parsed.get("worst").and_then(|w| w.as_arr()).unwrap();
+        assert!(!worst.is_empty() && worst.len() <= 10);
+        for w in worst {
+            assert!(w.get("critical_path").is_some());
+            assert_eq!(w.get("outcome").and_then(|v| v.as_str()), Some("completed"));
+        }
+    }
+}

@@ -30,6 +30,10 @@ fn outcome_json(o: &CoschedOutcome) -> Json {
             .set("frame_energy", a.frame_energy())
             .set("dram_words_per_inference", a.dram_words)
             .set("worst_channel_load", a.worst_channel_load)
+            // Plan-time predicted latency split — the skew baseline the
+            // serve-side `attr` report compares observed behavior against.
+            .set("floor_cycles", a.floor_cycles)
+            .set("stretch_cycles", a.stretch_cycles)
             .set("deadline_met", a.deadline_met);
         tasks.push(t);
     }
@@ -176,6 +180,8 @@ mod tests {
         assert!(text.contains("slack_ms"), "{text}");
         assert!(text.contains("cut_tree"), "{text}");
         assert!(text.contains("topology"), "{text}");
+        assert!(text.contains("floor_cycles"), "{text}");
+        assert!(text.contains("stretch_cycles"), "{text}");
         // 2 tasks × 3 modes + 3 makespan rows.
         assert_eq!(r.table.rows.len(), 9);
     }

@@ -3,6 +3,7 @@
 //! under a reports directory, so external tooling can re-plot them.
 
 mod ablations;
+mod attr;
 mod cosched;
 mod dse;
 mod figures;
@@ -10,6 +11,7 @@ mod obs;
 mod serve;
 
 pub use ablations::{ablation_depth, ablation_organization, ablation_topology};
+pub use attr::{attr_report, flight_table_json, policy_attr_json, ATTR_SCHEMA};
 pub use cosched::cosched_report;
 pub use dse::{dse_frontier, dse_gap, explore_all, run_dse_reports};
 pub use obs::obs_report;

@@ -126,7 +126,13 @@ pub fn serve_reports(cfg: &ArchConfig, sv: &ServeConfig, runs: &[ServeRun]) -> V
         }
         let mut outcomes = Json::Arr(vec![]);
         for o in &r.outcomes {
-            outcomes.push(outcome_json(o));
+            let mut oj = outcome_json(o);
+            // Per-policy latency attribution (windowed breakdown, burn
+            // rate, worst requests) when the run recorded it.
+            if let Some(a) = super::attr::policy_attr_json(&r.plan, o) {
+                oj.set("attr", a);
+            }
+            outcomes.push(oj);
         }
         // Per-region geometry of the plan being served (home region of
         // task `i` at index `i`), plus the cut tree that produced it —
@@ -256,6 +262,11 @@ mod tests {
         assert_eq!(scenarios.len(), 1);
         let policies = scenarios[0].get("policies").and_then(|p| p.as_arr()).unwrap();
         assert_eq!(policies.len(), 2);
+        // Attribution rides along on every policy (recorded by default).
+        for p in policies {
+            let a = p.get("attr").expect("attr block present");
+            assert!(a.get("totals").is_some() && a.get("windows").is_some());
+        }
         // Per-region geometry and the serialized cut tree ride along.
         let regions = scenarios[0].get("regions").and_then(|g| g.as_arr()).unwrap();
         assert_eq!(regions.len(), 2);

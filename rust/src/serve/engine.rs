@@ -32,11 +32,13 @@ use crate::energy::EnergyModel;
 use crate::ir::ModelGraph;
 use crate::mapper::PipeOrgan;
 use crate::noc::Topology;
+use crate::obs::attr::{AttrOutcome, RequestAttr};
+use crate::obs::flight::FlightRecorder;
 use crate::obs::{Obs, PID_SIM};
 use crate::util::stats::Histogram;
 
 use super::dispatch::{select_next, Policy, Request};
-use super::interference::{donated_bandwidth, BandwidthCache, BandwidthModel};
+use super::interference::{donated_bandwidth, donated_rate, BandwidthCache, BandwidthModel};
 use super::metrics::{sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics};
 use super::ServeConfig;
 
@@ -56,6 +58,12 @@ pub struct ServedCost {
     /// Latency at the region's static bandwidth share — identical to the
     /// offline cost model's segment-summed cycles by construction.
     pub nominal_cycles: f64,
+    /// Bandwidth-independent compute floor: the stages' summed
+    /// `max(pipeline, NoC, GB)` cycles. `nominal_cycles − floor_cycles`
+    /// is the plan-predicted DRAM-contention stretch at the static
+    /// share — the predicted half of the attribution split
+    /// (`obs::attr`); always `floor ≤ best_case ≤ nominal`.
+    pub floor_cycles: f64,
     /// Latency if the whole array's DRAM bandwidth were donated: the
     /// certificate the deadline-aware dispatchers use to drop requests
     /// that cannot meet their deadline under *any* contention outcome.
@@ -103,6 +111,16 @@ pub struct SimOptions {
     /// would otherwise allocate traces of hundreds of thousands of
     /// events just to drop them.
     pub record_trace: bool,
+    /// Record one [`RequestAttr`] per finished/dropped request
+    /// (`ServeOutcome::attr`). On by default — a few flops per request
+    /// plus one per-epoch donation accumulate, no allocation beyond the
+    /// record vector; the rate sweep turns it off alongside the trace.
+    pub record_attr: bool,
+    /// Run a flight recorder with this ring capacity
+    /// ([`crate::obs::flight::DEFAULT_FLIGHT_CAP`] is the CLI default);
+    /// `None` (the default) records nothing and keeps the hot loop
+    /// identical to an untraced run.
+    pub flight: Option<usize>,
 }
 
 impl Default for SimOptions {
@@ -111,6 +129,8 @@ impl Default for SimOptions {
             borrow: false,
             bandwidth: BandwidthModel::Dynamic,
             record_trace: true,
+            record_attr: true,
+            flight: None,
         }
     }
 }
@@ -223,6 +243,7 @@ fn cost_on_region(
     let total_b = cfg.dram_bytes_per_cycle.max(1e-9);
     let mut stages = Vec::with_capacity(plan.segments.len());
     let mut nominal = 0.0f64;
+    let mut floor_total = 0.0f64;
     let mut best = 0.0f64;
     let mut energy = 0.0f64;
     let mut dram_words = 0u64;
@@ -238,6 +259,7 @@ fn cost_on_region(
             });
         }
         nominal += c.cycles;
+        floor_total += floor;
         best += floor.max(bytes / total_b);
         energy += c.energy;
         dram_words += c.dram_words;
@@ -250,11 +272,13 @@ fn cost_on_region(
             dram_bytes: 0.0,
         });
         nominal = nominal.max(1.0);
+        floor_total = floor_total.max(1.0);
         best = best.max(1.0);
     }
     ServedCost {
         stages,
         nominal_cycles: nominal,
+        floor_cycles: floor_total,
         best_case_cycles: best,
         energy,
         dram_words,
@@ -275,6 +299,10 @@ struct Service {
     bytes_rem: f64,
     /// Bytes/cycle granted for the current epoch.
     alloc: f64,
+    /// Bytes granted above the region's static entitlement while this
+    /// request has been in service — the attribution layer's
+    /// donation-received diagnostic; dead weight when attribution is off.
+    donated_bytes: f64,
 }
 
 struct RegionSt {
@@ -383,6 +411,13 @@ pub fn simulate(
 /// Sim-domain emission is single-threaded in event-loop order, so a fixed
 /// seed produces an identical event sequence (asserted by
 /// `tests/obs_integration.rs`). Disabled handles cost one branch per site.
+///
+/// Independently of the handle, [`SimOptions::record_attr`] fills
+/// [`ServeOutcome::attr`] with one per-request latency attribution record
+/// (queue/compute/DRAM-stretch/donation, conserved bit-exactly — see
+/// [`crate::obs::attr`]), and [`SimOptions::flight`] mirrors the same
+/// event stream into a bounded [`FlightRecorder`] that freezes at the
+/// first deadline miss ([`ServeOutcome::flight`]).
 pub fn simulate_traced(
     scenario: &Scenario,
     plan: &ServePlan,
@@ -411,21 +446,35 @@ pub fn simulate_with_scratch(
     assert_eq!(arrivals.len(), n, "one arrival stream per task");
     let clock = plan.clock_hz;
 
-    // All per-event emission below is guarded on `obs_on`, so a disabled
-    // handle costs the hot loop one branch per site; the name tables are
-    // only materialized when tracing is live.
+    // All per-event emission below is guarded on `rec_on` (the obs
+    // handle, the flight recorder, or both are live), so an untraced run
+    // costs the hot loop one branch per site; the name tables are only
+    // materialized when some recorder is live. Every emission site
+    // formats its event name once and fans it out to both sinks — the
+    // flight recorder sees exactly the stream `--trace-out` would, which
+    // is why its frozen snippet passes the same schema checks.
     let obs_on = obs.is_enabled();
+    let mut flight = opts.flight.map(FlightRecorder::new);
+    let rec_on = obs_on || flight.is_some();
     let pid = PID_SIM + Policy::ALL.iter().position(|&p| p == policy).unwrap_or(0) as u32;
     let mut task_names: Vec<String> = Vec::new();
     let mut region_keys: Vec<String> = Vec::new();
     let mut cprefix = String::new();
-    if obs_on {
+    if rec_on {
         task_names = scenario.tasks.iter().map(|t| t.name().to_string()).collect();
         region_keys = (0..n).map(|r| format!("region{r}")).collect();
         cprefix = format!("serve.{}", policy.name());
-        obs.name_process(pid, &format!("serve-sim [{}]", policy.name()));
+        let pname = format!("serve-sim [{}]", policy.name());
+        obs.name_process(pid, &pname);
+        if let Some(f) = &flight {
+            f.name_process(pid, &pname);
+        }
         for (r, name) in task_names.iter().enumerate() {
-            obs.name_track(pid, r as u32, &format!("region{r} ({name})"));
+            let tname = format!("region{r} ({name})");
+            obs.name_track(pid, r as u32, &tname);
+            if let Some(f) = &flight {
+                f.name_track(pid, r as u32, &tname);
+            }
         }
     }
 
@@ -463,6 +512,7 @@ pub fn simulate_with_scratch(
         })
         .collect();
     let mut recs: Vec<Vec<Rec>> = (0..n).map(|_| Vec::new()).collect();
+    let mut attr: Vec<RequestAttr> = Vec::new();
     let mut drops: Vec<u64> = vec![0; n];
     let mut max_depth: Vec<usize> = vec![0; n];
     let mut trace: Vec<TraceEvent> = Vec::new();
@@ -496,11 +546,15 @@ pub fn simulate_with_scratch(
         let dt = (ev.t_s - now).max(0.0);
         if dt > 0.0 {
             let dt_cycles = dt * clock;
-            for r in regions.iter_mut() {
+            for (ri, r) in regions.iter_mut().enumerate() {
                 if let Some(s) = r.serving.as_mut() {
                     s.floor_rem = (s.floor_rem - dt_cycles).max(0.0);
                     s.bytes_rem = (s.bytes_rem - dt_cycles * s.alloc).max(0.0);
                     r.busy_cycles += dt_cycles;
+                    if opts.record_attr {
+                        s.donated_bytes +=
+                            dt_cycles * donated_rate(plan.entitlements[ri], s.alloc);
+                    }
                 }
             }
         }
@@ -518,14 +572,15 @@ pub fn simulate_with_scratch(
                 }
                 queues[req.task].push_back(req);
                 max_depth[req.task] = max_depth[req.task].max(queues[req.task].len());
-                if obs_on {
-                    obs.instant(
-                        &format!("arrive {}#{}", task_names[req.task], req.id),
-                        pid,
-                        req.task as u32,
-                        now * 1e6,
-                    );
-                    obs.count(&format!("{cprefix}.arrivals"), 1);
+                if rec_on {
+                    let name = format!("arrive {}#{}", task_names[req.task], req.id);
+                    obs.instant(&name, pid, req.task as u32, now * 1e6);
+                    if let Some(f) = &flight {
+                        f.instant(&name, pid, req.task as u32, now * 1e6);
+                    }
+                    if obs_on {
+                        obs.count(&format!("{cprefix}.arrivals"), 1);
+                    }
                 }
             }
             EvKind::Completion { region, .. } => {
@@ -535,15 +590,13 @@ pub fn simulate_with_scratch(
                         .as_mut()
                         .expect("completion fired on an idle region");
                     let stages = &plan.costs[s.req.task][region].stages;
-                    if obs_on {
+                    if rec_on {
+                        let name = format!("{} s{}", task_names[s.req.task], s.stage);
                         let ts = s.stage_start_s * 1e6;
-                        obs.span(
-                            &format!("{} s{}", task_names[s.req.task], s.stage),
-                            pid,
-                            region as u32,
-                            ts,
-                            now * 1e6 - ts,
-                        );
+                        obs.span(&name, pid, region as u32, ts, now * 1e6 - ts);
+                        if let Some(f) = &flight {
+                            f.span(&name, pid, region as u32, ts, now * 1e6 - ts);
+                        }
                     }
                     s.stage += 1;
                     s.stage_start_s = now;
@@ -552,17 +605,42 @@ pub fn simulate_with_scratch(
                         s.bytes_rem = stages[s.stage].dram_bytes;
                         None
                     } else {
-                        Some((s.req, s.start_s))
+                        Some((s.req, s.start_s, s.donated_bytes))
                     }
                 };
-                if let Some((req, start_s)) = finished {
+                if let Some((req, start_s, donated_bytes)) = finished {
                     regions[region].serving = None;
                     let missed = now > req.deadline_s + DEADLINE_EPS_S;
+                    let latency_s = now - req.arrival_s;
+                    let queue_s = start_s - req.arrival_s;
                     recs[req.task].push(Rec {
-                        latency_s: now - req.arrival_s,
-                        wait_s: start_s - req.arrival_s,
+                        latency_s,
+                        wait_s: queue_s,
                         missed,
                     });
+                    if opts.record_attr {
+                        // Canonical decomposition order — donation is the
+                        // closing term of this exact float expression, which
+                        // is what makes `RequestAttr::residual_s` bit-exactly
+                        // zero (see obs::attr's module docs).
+                        let cost = &plan.costs[req.task][region];
+                        let floor_s = cost.floor_cycles / clock;
+                        let stretch_s = (cost.nominal_cycles - cost.floor_cycles) / clock;
+                        let donation_s = stretch_s - ((latency_s - queue_s) - floor_s);
+                        attr.push(RequestAttr {
+                            task: req.task,
+                            id: req.id,
+                            region,
+                            arrival_s: req.arrival_s,
+                            latency_s,
+                            queue_s,
+                            floor_s,
+                            stretch_s,
+                            donation_s,
+                            donated_bytes,
+                            outcome: AttrOutcome::Completed { missed },
+                        });
+                    }
                     if opts.record_trace {
                         trace.push(TraceEvent {
                             t_s: now,
@@ -571,22 +649,28 @@ pub fn simulate_with_scratch(
                             kind: TraceKind::Complete { region },
                         });
                     }
-                    if obs_on {
+                    if rec_on {
                         let what = if missed { "miss" } else { "finish" };
-                        obs.instant(
-                            &format!("{what} {}#{}", task_names[req.task], req.id),
-                            pid,
-                            region as u32,
-                            now * 1e6,
-                        );
-                        obs.count(&format!("{cprefix}.completions"), 1);
-                        if missed {
-                            obs.count(&format!("{cprefix}.misses"), 1);
+                        let name = format!("{what} {}#{}", task_names[req.task], req.id);
+                        obs.instant(&name, pid, region as u32, now * 1e6);
+                        if let Some(f) = &flight {
+                            f.instant(&name, pid, region as u32, now * 1e6);
                         }
-                        obs.observe(
-                            &format!("{cprefix}.latency_ms"),
-                            (now - req.arrival_s) * 1e3,
-                        );
+                        if obs_on {
+                            obs.count(&format!("{cprefix}.completions"), 1);
+                            if missed {
+                                obs.count(&format!("{cprefix}.misses"), 1);
+                            }
+                            obs.observe(&format!("{cprefix}.latency_ms"), latency_s * 1e3);
+                        }
+                    }
+                    if missed {
+                        // After the miss instant above, so the frozen snippet
+                        // ends on the event being diagnosed. Only the first
+                        // call freezes; later misses are no-ops.
+                        if let Some(f) = flight.as_mut() {
+                            f.trigger_miss(req.task, req.id, region, now);
+                        }
                     }
                 }
             }
@@ -615,6 +699,25 @@ pub fn simulate_with_scratch(
             );
             for d in dropped {
                 drops[d.task] += 1;
+                if opts.record_attr {
+                    // A drop's whole lifetime is queue wait; the compute
+                    // components are zero, so conservation still holds and
+                    // the dominant component reads "policy".
+                    let waited_s = now - d.arrival_s;
+                    attr.push(RequestAttr {
+                        task: d.task,
+                        id: d.id,
+                        region,
+                        arrival_s: d.arrival_s,
+                        latency_s: waited_s,
+                        queue_s: waited_s,
+                        floor_s: 0.0,
+                        stretch_s: 0.0,
+                        donation_s: 0.0,
+                        donated_bytes: 0.0,
+                        outcome: AttrOutcome::Dropped,
+                    });
+                }
                 if opts.record_trace {
                     trace.push(TraceEvent {
                         t_s: now,
@@ -623,14 +726,20 @@ pub fn simulate_with_scratch(
                         kind: TraceKind::Drop { region },
                     });
                 }
-                if obs_on {
-                    obs.instant(
-                        &format!("drop {}#{}", task_names[d.task], d.id),
-                        pid,
-                        region as u32,
-                        now * 1e6,
-                    );
-                    obs.count(&format!("{cprefix}.drops"), 1);
+                if rec_on {
+                    let name = format!("drop {}#{}", task_names[d.task], d.id);
+                    obs.instant(&name, pid, region as u32, now * 1e6);
+                    if let Some(f) = &flight {
+                        f.instant(&name, pid, region as u32, now * 1e6);
+                    }
+                    if obs_on {
+                        obs.count(&format!("{cprefix}.drops"), 1);
+                    }
+                }
+                // A drop is a deadline miss by definition, so it freezes
+                // the flight recorder exactly like a late completion.
+                if let Some(f) = flight.as_mut() {
+                    f.trigger_miss(d.task, d.id, region, now);
                 }
             }
             if let Some(req) = chosen {
@@ -643,6 +752,7 @@ pub fn simulate_with_scratch(
                     floor_rem: first.floor_cycles,
                     bytes_rem: first.dram_bytes,
                     alloc: 0.0,
+                    donated_bytes: 0.0,
                 });
                 if opts.record_trace {
                     trace.push(TraceEvent {
@@ -652,14 +762,15 @@ pub fn simulate_with_scratch(
                         kind: TraceKind::Start { region },
                     });
                 }
-                if obs_on {
-                    obs.instant(
-                        &format!("dispatch {}#{}", task_names[req.task], req.id),
-                        pid,
-                        region as u32,
-                        now * 1e6,
-                    );
-                    obs.count(&format!("{cprefix}.dispatches"), 1);
+                if rec_on {
+                    let name = format!("dispatch {}#{}", task_names[req.task], req.id);
+                    obs.instant(&name, pid, region as u32, now * 1e6);
+                    if let Some(f) = &flight {
+                        f.instant(&name, pid, region as u32, now * 1e6);
+                    }
+                    if obs_on {
+                        obs.count(&format!("{cprefix}.dispatches"), 1);
+                    }
                 }
             }
         }
@@ -689,9 +800,13 @@ pub fn simulate_with_scratch(
 
         // Sample the epoch's counter tracks after the fresh split, so the
         // timeline shows the state the simulator carries *out* of this
-        // event.
-        if obs_on {
-            obs.count(&format!("{cprefix}.epochs"), 1);
+        // event. The flight recorder gets every counter track too, so
+        // its frozen snippet satisfies the same schema checks
+        // (tools/trace_check.py) a full `--trace-out` export does.
+        if rec_on {
+            if obs_on {
+                obs.count(&format!("{cprefix}.epochs"), 1);
+            }
             let ts = now * 1e6;
             let depths: Vec<(&str, f64)> = task_names
                 .iter()
@@ -709,14 +824,11 @@ pub fn simulate_with_scratch(
                 .zip(granted.iter().copied())
                 .collect();
             obs.counter("dram_bw", pid, ts, &bw);
-            obs.counter(
-                "dram_bw_donated",
-                pid,
-                ts,
-                &[("donated", donated_bandwidth(&plan.entitlements, &granted))],
-            );
+            let donated = donated_bandwidth(&plan.entitlements, &granted);
+            obs.counter("dram_bw_donated", pid, ts, &[("donated", donated)]);
+            let mut util: Vec<(&str, f64)> = Vec::new();
             if now > 0.0 {
-                let util: Vec<(&str, f64)> = region_keys
+                util = region_keys
                     .iter()
                     .map(String::as_str)
                     .zip(
@@ -733,6 +845,15 @@ pub fn simulate_with_scratch(
                 .map(|s| plan.cosched.cosched.assignments[s.req.task].worst_channel_load)
                 .fold(0.0f64, f64::max);
             obs.counter("worst_channel_load", pid, ts, &[("load", worst)]);
+            if let Some(f) = &flight {
+                f.counter("queue_depth", pid, ts, &depths);
+                f.counter("dram_bw", pid, ts, &bw);
+                f.counter("dram_bw_donated", pid, ts, &[("donated", donated)]);
+                if !util.is_empty() {
+                    f.counter("region_util", pid, ts, &util);
+                }
+                f.counter("worst_channel_load", pid, ts, &[("load", worst)]);
+            }
         }
     }
 
@@ -782,6 +903,8 @@ pub fn simulate_with_scratch(
         tasks,
         span_s,
         trace,
+        attr,
+        flight: flight.map(|f| f.finish(now)),
     }
 }
 
@@ -894,6 +1017,11 @@ pub fn run_scenario(
     let opts = SimOptions {
         borrow: sv.borrow,
         bandwidth: sv.bandwidth,
+        flight: if sv.flight {
+            Some(crate::obs::flight::DEFAULT_FLIGHT_CAP)
+        } else {
+            None
+        },
         ..SimOptions::default()
     };
     let arrivals =

@@ -208,8 +208,19 @@ pub fn donated_bandwidth(entitlements: &[f64], granted: &[f64]) -> f64 {
     entitlements
         .iter()
         .zip(granted)
-        .map(|(&e, &g)| (g - e).max(0.0))
+        .map(|(&e, &g)| donated_rate(e, g))
         .sum()
+}
+
+/// One region's bytes/cycle granted above its static entitlement this
+/// epoch (0 when the grant is at or below it). The per-region term of
+/// [`donated_bandwidth`], split out so the attribution layer can charge
+/// donation *received* to the request being served: the engine
+/// integrates `donated_rate × dt_cycles` into the in-flight request's
+/// `donated_bytes` (`obs::attr::RequestAttr`), turning the epoch-level
+/// split this module computes into per-request accounting.
+pub fn donated_rate(entitlement: f64, granted: f64) -> f64 {
+    (granted - entitlement).max(0.0)
 }
 
 #[cfg(test)]
@@ -366,6 +377,10 @@ mod tests {
         // At or below entitlement nothing counts as donated.
         assert_eq!(donated_bandwidth(&e, &[128.0, 100.0]), 0.0);
         assert_eq!(donated_bandwidth(&e, &[0.0, 0.0]), 0.0);
+        // The per-region term the attribution layer integrates.
+        assert_eq!(donated_rate(128.0, 256.0), 128.0);
+        assert_eq!(donated_rate(128.0, 100.0), 0.0);
+        assert_eq!(donated_rate(128.0, 128.0), 0.0);
     }
 
     #[test]

@@ -17,6 +17,8 @@
 //! reports (and the monotonicity test) can audit the boundary.
 
 use crate::cosched::Scenario;
+use crate::obs::attr::RequestAttr;
+use crate::obs::flight::FlightSnapshot;
 use crate::util::stats::Histogram;
 
 use super::arrivals::{streams, ArrivalProcess};
@@ -77,6 +79,13 @@ pub struct ServeOutcome {
     pub span_s: f64,
     /// The deterministic event trace (the reproducibility witness).
     pub trace: Vec<TraceEvent>,
+    /// Per-request latency attribution in completion/drop order
+    /// (`obs::attr`); empty when `SimOptions::record_attr` is off
+    /// (sweep probes).
+    pub attr: Vec<RequestAttr>,
+    /// Flight-recorder snapshot when `SimOptions::flight` was set:
+    /// frozen at the first deadline miss, or the end-of-run tail.
+    pub flight: Option<FlightSnapshot>,
 }
 
 impl ServeOutcome {
@@ -137,10 +146,13 @@ pub fn sweep_max_rate(
     duration_s: f64,
 ) -> SweepResult {
     let mut probes: Vec<(f64, bool)> = Vec::new();
-    // Probes only read the verdict: skip the per-event trace, which at
-    // high multipliers would dwarf the rest of the probe's work.
+    // Probes only read the verdict: skip the per-event trace and the
+    // attribution records, which at high multipliers would dwarf the
+    // rest of the probe's work; no flight recorder either.
     let opts = SimOptions {
         record_trace: false,
+        record_attr: false,
+        flight: None,
         ..opts
     };
     // One scratch for the whole sweep: the event heap and demand vector
@@ -241,6 +253,8 @@ mod tests {
             tasks,
             span_s: 1.0,
             trace: Vec::new(),
+            attr: Vec::new(),
+            flight: None,
         }
     }
 

@@ -41,7 +41,8 @@ pub use engine::{
     ServeRun, ServedCost, ServiceStage, SimOptions, SimScratch, TraceEvent, TraceKind,
 };
 pub use interference::{
-    allocate_bandwidth, allocate_bandwidth_into, donated_bandwidth, BandwidthCache, BandwidthModel,
+    allocate_bandwidth, allocate_bandwidth_into, donated_bandwidth, donated_rate, BandwidthCache,
+    BandwidthModel,
 };
 pub use metrics::{
     pct_or_zero, sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics, SWEEP_MAX_MULT,
@@ -78,6 +79,10 @@ pub struct ServeConfig {
     /// events, per-region tracks and queue/bandwidth/utilization counter
     /// tracks from the event loop. Disabled (free) by default.
     pub obs: crate::obs::Obs,
+    /// Run each simulation with a flight recorder (`--flight-out FILE`):
+    /// a bounded ring of recent sim events frozen at the first deadline
+    /// miss, dumped with the attribution table. Off by default.
+    pub flight: bool,
 }
 
 impl Default for ServeConfig {
@@ -93,6 +98,7 @@ impl Default for ServeConfig {
             sweep: false,
             seed: 42,
             obs: crate::obs::Obs::disabled(),
+            flight: false,
         }
     }
 }
@@ -140,6 +146,7 @@ impl ServeConfig {
             sweep: args.has("sweep"),
             seed,
             obs: crate::obs::Obs::from_cli(args),
+            flight: args.get("flight-out").is_some(),
         })
     }
 }
@@ -177,7 +184,12 @@ fn parse_policies(spec: &str) -> Result<Vec<Policy>, String> {
 /// `--cache-file`/`--cache-cap` manage the persistent evaluation cache
 /// exactly as on `dse`. `--obs` enables the observability counters;
 /// `--trace-out FILE` additionally writes the Perfetto event-loop trace
-/// there (and implies `--obs`).
+/// there (and implies `--obs`). `--attr-out FILE` writes the per-request
+/// latency-attribution report (`report::attr`), and `--flight-out FILE`
+/// arms the flight recorder and writes its first-deadline-miss (or
+/// end-of-run) snapshot; neither implies `--obs` — attribution and the
+/// flight ring run independently of the trace handle
+/// (docs/OBSERVABILITY.md).
 pub const SERVE_FLAGS: &[(&str, bool)] = &[
     ("scenario", true),
     ("partition", true),
@@ -192,6 +204,8 @@ pub const SERVE_FLAGS: &[(&str, bool)] = &[
     ("cache-cap", true),
     ("obs", false),
     ("trace-out", true),
+    ("attr-out", true),
+    ("flight-out", true),
 ];
 
 #[cfg(test)]
@@ -272,6 +286,17 @@ mod tests {
             .unwrap()
             .obs
             .is_enabled());
+    }
+
+    #[test]
+    fn flight_flag_arms_the_recorder_without_obs() {
+        assert!(!parse_sv(&["serve"]).unwrap().flight);
+        let sv = parse_sv(&["serve", "--flight-out", "f.json"]).unwrap();
+        assert!(sv.flight, "--flight-out arms the recorder");
+        assert!(!sv.obs.is_enabled(), "the flight ring is independent of --obs");
+        // --attr-out parses but needs no config bit: attribution records
+        // are on by default and the CLI only picks where to write them.
+        assert!(parse_sv(&["serve", "--attr-out", "a.json"]).is_ok());
     }
 
     #[test]

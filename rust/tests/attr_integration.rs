@@ -1,0 +1,347 @@
+//! Integration tests for latency attribution and the flight recorder:
+//! per-request conservation is bit-exact on every canned scenario ×
+//! policy, attribution JSON is byte-identical across worker counts, the
+//! flight recorder freezes exactly at the first deadline miss (and falls
+//! back to an end-of-run snapshot when nothing missed), its frozen
+//! document satisfies the same schema `tools/trace_check.py` enforces,
+//! and turning attribution off changes no simulation result.
+
+use pipeorgan::config::ArchConfig;
+use pipeorgan::cosched::{canned_scenarios, scenario_by_name, CoschedConfig, Scenario, TaskSpec};
+use pipeorgan::dse::EvalCache;
+use pipeorgan::obs::{FlightTrigger, DEFAULT_FLIGHT_CAP};
+use pipeorgan::report;
+use pipeorgan::serve::{
+    plan_scenario, run_scenario, simulate, streams, ArrivalProcess, BandwidthModel, Policy,
+    ServeConfig, ServeRun, SimOptions,
+};
+use pipeorgan::util::json::Json;
+use pipeorgan::workloads::synthetic;
+
+fn small_cfg() -> ArchConfig {
+    ArchConfig {
+        pe_rows: 16,
+        pe_cols: 16,
+        ..ArchConfig::default()
+    }
+}
+
+/// A fast two-task scenario whose deadlines can be pinned per test.
+fn pair_scenario(deadline_ms: Option<f64>) -> Scenario {
+    let mut a = synthetic::aw_chain(2.0, 4);
+    a.name = "a".into();
+    let mut b = synthetic::pointwise_conv_segment(2);
+    b.name = "b".into();
+    let spec = |g, rate| {
+        let t = TaskSpec::new(g, rate);
+        match deadline_ms {
+            Some(d) => t.with_deadline_ms(d),
+            None => t,
+        }
+    };
+    Scenario::new("pair", vec![spec(a, 100.0), spec(b, 100.0)])
+}
+
+/// Tentpole invariant: every per-request record's components sum back to
+/// the measured latency with residual exactly `0.0` — not approximately —
+/// on every canned scenario, policy, and load level, and the record
+/// counts close against the per-task metrics.
+#[test]
+fn attribution_conserves_bit_exactly_on_every_canned_scenario_and_policy() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    for sc in canned_scenarios() {
+        let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2)
+            .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+        for mult in [1.0, 8.0] {
+            let arrivals = streams(&sc, &ArrivalProcess::Periodic, mult, 0.05, 0);
+            for policy in Policy::ALL {
+                let out = simulate(&sc, &plan, policy, &arrivals, SimOptions::default());
+                let ended: u64 = out.tasks.iter().map(|t| t.completed + t.dropped).sum();
+                assert_eq!(
+                    out.attr.len() as u64,
+                    ended,
+                    "{} {} @ {mult}x: one record per ended request",
+                    sc.name,
+                    policy.name()
+                );
+                let mut missed = 0u64;
+                for a in &out.attr {
+                    assert_eq!(
+                        a.residual_s(),
+                        0.0,
+                        "{} {} @ {mult}x task {} req {}: residual must be exactly zero",
+                        sc.name,
+                        policy.name(),
+                        a.task,
+                        a.id
+                    );
+                    assert!(a.queue_s >= 0.0 && a.floor_s >= 0.0 && a.stretch_s >= 0.0);
+                    if a.missed() {
+                        missed += 1;
+                    }
+                    if !a.completed() {
+                        // A drop's whole lifetime is queue wait.
+                        assert_eq!(a.latency_s, a.queue_s);
+                        assert_eq!((a.floor_s, a.stretch_s, a.donation_s), (0.0, 0.0, 0.0));
+                        assert_eq!(a.dominant(), "policy");
+                    }
+                }
+                assert_eq!(
+                    missed,
+                    out.total_missed(),
+                    "{} {} @ {mult}x: SLO accounting must agree with metrics",
+                    sc.name,
+                    policy.name()
+                );
+            }
+        }
+    }
+}
+
+/// Attribution is part of the determinism witness: the exported JSON is
+/// byte-identical across 1/2/4 workers at a fixed seed (workers only
+/// parallelize planning, never the simulation).
+#[test]
+fn attribution_json_is_byte_identical_across_worker_counts() {
+    let cfg = small_cfg();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let sv = ServeConfig {
+        duration_s: 0.05,
+        arrivals: ArrivalProcess::Poisson,
+        seed: 7,
+        ..ServeConfig::default()
+    };
+    let render = |r: &ServeRun| -> Vec<String> {
+        r.outcomes
+            .iter()
+            .map(|o| {
+                let mut arr = Json::Arr(vec![]);
+                for a in &o.attr {
+                    arr.push(a.to_json());
+                }
+                arr.to_pretty()
+            })
+            .collect()
+    };
+    let base = render(&run_scenario(&sc, &cfg, &sv, &EvalCache::new(), 1).unwrap());
+    assert!(!base.is_empty() && base.iter().all(|s| s.len() > 2));
+    for workers in [2usize, 4] {
+        let other = render(&run_scenario(&sc, &cfg, &sv, &EvalCache::new(), workers).unwrap());
+        assert_eq!(base, other, "attr JSON diverged at {workers} workers");
+    }
+}
+
+/// The flight recorder freezes on the *first* deadline miss — a late
+/// completion under FIFO, a policy drop under EDF — and the trigger
+/// identifies exactly the first SLO-missing attribution record.
+#[test]
+fn flight_recorder_freezes_on_the_first_miss() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    // Deadlines far below any service time: every request misses, so a
+    // trigger is guaranteed on the very first ended request.
+    let sc = pair_scenario(Some(1e-4));
+    let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
+    let arrivals = streams(&sc, &ArrivalProcess::Periodic, 1.0, 0.05, 0);
+    let opts = SimOptions {
+        flight: Some(DEFAULT_FLIGHT_CAP),
+        ..SimOptions::default()
+    };
+    for policy in [Policy::Fifo, Policy::Edf] {
+        let out = simulate(&sc, &plan, policy, &arrivals, opts);
+        assert!(out.total_missed() > 0, "{}: fixture must miss", policy.name());
+        let snap = out.flight.as_ref().expect("armed recorder returns a snapshot");
+        assert!(snap.missed(), "{}: miss run must freeze on the miss", policy.name());
+        let first = out.attr.iter().find(|a| a.missed()).expect("a missed record");
+        match snap.trigger {
+            FlightTrigger::DeadlineMiss { task, id, region, t_s } => {
+                assert_eq!(
+                    (task, id, region),
+                    (first.task, first.id, first.region),
+                    "{}: trigger must be the first miss, not a later one",
+                    policy.name()
+                );
+                assert!(
+                    (t_s - (first.arrival_s + first.latency_s)).abs() <= 1e-9,
+                    "{}: trigger time {} vs first miss end {}",
+                    policy.name(),
+                    t_s,
+                    first.arrival_s + first.latency_s
+                );
+            }
+            FlightTrigger::EndOfRun { .. } => panic!("{}: wrong trigger", policy.name()),
+        }
+    }
+}
+
+/// With generous deadlines nothing misses, and `finish` falls back to an
+/// end-of-run snapshot covering the whole span.
+#[test]
+fn flight_recorder_falls_back_to_end_of_run_without_misses() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = pair_scenario(Some(10_000.0));
+    let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
+    let arrivals = streams(&sc, &ArrivalProcess::Periodic, 1.0, 0.05, 0);
+    let out = simulate(
+        &sc,
+        &plan,
+        Policy::Fifo,
+        &arrivals,
+        SimOptions {
+            flight: Some(DEFAULT_FLIGHT_CAP),
+            ..SimOptions::default()
+        },
+    );
+    assert_eq!(out.total_missed(), 0, "fixture must not miss");
+    let snap = out.flight.as_ref().unwrap();
+    assert!(!snap.missed());
+    match snap.trigger {
+        FlightTrigger::EndOfRun { t_s } => {
+            assert!((t_s - out.span_s).abs() <= 1e-9, "{t_s} vs span {}", out.span_s)
+        }
+        FlightTrigger::DeadlineMiss { .. } => panic!("nothing missed"),
+    }
+}
+
+/// The flight document satisfies the same schema `tools/trace_check.py`
+/// enforces on full `--trace-out` exports: non-empty traceEvents each
+/// carrying ph/ts/pid/tid, all four counter tracks, named region tracks —
+/// plus the `flight` block with its trigger and attribution table.
+#[test]
+fn flight_document_mirrors_the_trace_schema() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = pair_scenario(Some(1e-4));
+    let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap();
+    let arrivals = streams(&sc, &ArrivalProcess::Periodic, 1.0, 0.05, 0);
+    let out = simulate(
+        &sc,
+        &plan,
+        Policy::Fifo,
+        &arrivals,
+        SimOptions {
+            flight: Some(DEFAULT_FLIGHT_CAP),
+            ..SimOptions::default()
+        },
+    );
+    let snap = out.flight.as_ref().unwrap();
+    let doc = snap.document(report::flight_table_json(&out));
+    let parsed = Json::parse(&doc.to_pretty()).unwrap();
+
+    let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    assert!(!events.is_empty(), "frozen snippet must carry events");
+    let mut counters = std::collections::BTreeSet::new();
+    let mut thread_names = 0usize;
+    for ev in events {
+        for key in ["ph", "ts", "pid", "tid"] {
+            assert!(ev.get(key).is_some(), "event missing {key}: {}", ev.to_pretty());
+        }
+        let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap();
+        let name = ev.get("name").and_then(|n| n.as_str()).unwrap_or("");
+        if ph == "M" && name == "thread_name" {
+            thread_names += 1;
+        }
+        if ph == "C" {
+            counters.insert(name.to_string());
+            let args = ev.get("args").expect("counter carries an args series");
+            assert!(matches!(args, Json::Obj(_)));
+        }
+    }
+    for want in ["queue_depth", "dram_bw", "region_util", "worst_channel_load"] {
+        assert!(counters.contains(want), "missing counter {want} (have {counters:?})");
+    }
+    assert!(thread_names > 0, "region tracks must be named");
+
+    let flight = parsed.get("flight").expect("flight block");
+    assert_eq!(flight.get("kind").and_then(|k| k.as_str()), Some("deadline_miss"));
+    assert!(flight.get("t_s").and_then(|t| t.as_f64()).is_some());
+    let table = flight.get("table").expect("attribution table rides along");
+    assert!(!table.get("worst").and_then(|w| w.as_arr()).unwrap().is_empty());
+}
+
+/// Attribution and the flight recorder are observers: turning them off
+/// (the sweep-probe configuration) changes no simulation result.
+#[test]
+fn disabling_attribution_changes_no_results() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2).unwrap();
+    let arrivals = streams(&sc, &ArrivalProcess::Periodic, 4.0, 0.05, 0);
+    for policy in Policy::ALL {
+        let on = simulate(
+            &sc,
+            &plan,
+            policy,
+            &arrivals,
+            SimOptions {
+                flight: Some(DEFAULT_FLIGHT_CAP),
+                ..SimOptions::default()
+            },
+        );
+        let off = simulate(
+            &sc,
+            &plan,
+            policy,
+            &arrivals,
+            SimOptions {
+                record_attr: false,
+                flight: None,
+                ..SimOptions::default()
+            },
+        );
+        assert!(off.attr.is_empty() && off.flight.is_none());
+        assert!(!on.attr.is_empty());
+        assert_eq!(on.tasks, off.tasks, "{}", policy.name());
+        assert_eq!(on.trace, off.trace, "{}", policy.name());
+        assert_eq!(on.span_s, off.span_s, "{}", policy.name());
+    }
+}
+
+/// Donation semantics: the static bandwidth model never donates (service
+/// runs at exactly the entitled share), while the dynamic model only ever
+/// speeds service up — donations are non-negative.
+#[test]
+fn donation_is_zero_under_static_and_nonnegative_under_dynamic() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-hands").unwrap();
+    let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2).unwrap();
+    let arrivals = streams(&sc, &ArrivalProcess::Periodic, 2.0, 0.05, 0);
+    let run = |bandwidth| {
+        simulate(
+            &sc,
+            &plan,
+            Policy::Fifo,
+            &arrivals,
+            SimOptions {
+                bandwidth,
+                ..SimOptions::default()
+            },
+        )
+    };
+    let stat = run(BandwidthModel::Static);
+    for a in stat.attr.iter().filter(|a| a.completed()) {
+        assert_eq!(a.donated_bytes, 0.0, "static split grants exactly the entitlement");
+        assert!(
+            a.donation_s.abs() <= 1e-9 + 1e-6 * a.latency_s,
+            "task {} req {}: static donation {} should be ~0",
+            a.task,
+            a.id,
+            a.donation_s
+        );
+    }
+    let dynamic = run(BandwidthModel::Dynamic);
+    for a in dynamic.attr.iter().filter(|a| a.completed()) {
+        assert!(
+            a.donation_s >= -(1e-9 + 1e-6 * a.latency_s),
+            "task {} req {}: dynamic donation {} must not be negative",
+            a.task,
+            a.id,
+            a.donation_s
+        );
+        assert!(a.donated_bytes >= 0.0);
+    }
+}

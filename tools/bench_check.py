@@ -2,7 +2,8 @@
 """Aggregate raw bench records and gate CI on perf regressions.
 
 Usage: python3 tools/bench_check.py [raw_jsonl] [baseline_json] [out_json]
-       python3 tools/bench_check.py --promote [ci_json] [baseline_json]
+       python3 tools/bench_check.py --promote [--dry-run] [--markdown] \
+           [ci_json] [baseline_json]
        python3 tools/bench_check.py --compare A.json B.json [--markdown]
 
 Reads the JSONL file the bench harness appends to when PIPEORGAN_BENCH_JSON
@@ -28,7 +29,11 @@ in the baseline takes its p50_ns from the given BENCH_ci.json (default
 reports/BENCH_ci.json). Names in the CI artifact but not in the baseline —
 e.g. the obs layer's `time.*` self-profiling records, which only exist on
 `--obs` runs — are listed but never added, because a baseline entry makes
-the bench mandatory on every future run.
+the bench mandatory on every future run. `--dry-run` prints the promote
+diff without rewriting the baseline — the bench-smoke CI job runs it on
+every green build so the step summary always shows what a promote would
+change (the runbook in docs/PERFORMANCE.md); `--markdown` renders that
+diff as a GitHub table.
 
 `--compare` prints a per-bench speedup table between two bench artifacts
 (BENCH_ci.json or BENCH_baseline.json — anything with a `benches` map of
@@ -56,8 +61,11 @@ def read_records(path):
 
 
 def promote(argv):
-    ci_path = argv[0] if len(argv) > 0 else "reports/BENCH_ci.json"
-    baseline_path = argv[1] if len(argv) > 1 else "BENCH_baseline.json"
+    dry_run = "--dry-run" in argv
+    markdown = "--markdown" in argv
+    paths = [a for a in argv if not a.startswith("--")]
+    ci_path = paths[0] if len(paths) > 0 else "reports/BENCH_ci.json"
+    baseline_path = paths[1] if len(paths) > 1 else "BENCH_baseline.json"
     with open(ci_path) as f:
         benches = json.load(f).get("benches", {})
     if not benches:
@@ -79,16 +87,31 @@ def promote(argv):
         else:
             skipped.append(name)
 
-    with open(baseline_path, "w") as f:
-        json.dump(doc, f, indent=2, sort_keys=True)
-        f.write("\n")
+    if not dry_run:
+        with open(baseline_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
 
-    for name, old, new in updated:
-        was = f"{old / 1e6:.3f} ms" if old is not None else "null"
-        print(f"promote {name}: {was} -> {new / 1e6:.3f} ms")
-    if skipped:
-        print(f"skipped (not in baseline, add by hand to gate): {', '.join(skipped)}")
-    print(f"promoted {len(updated)} baselines from {ci_path} -> {baseline_path}")
+    fmt = lambda ns: f"{ns / 1e6:.3f} ms" if ns is not None else "null"
+    if markdown:
+        verb = "would promote" if dry_run else "promoted"
+        print(f"| bench | baseline p50 | {verb} to | delta |")
+        print("|---|---:|---:|---:|")
+        for name, old, new in updated:
+            delta = f"{new / old:.2f}x" if old else "arm"
+            print(f"| {name} | {fmt(old)} | {fmt(new)} | {delta} |")
+        for name in skipped:
+            print(f"| {name} | (not in baseline) | - | skip |")
+    else:
+        verb = "would promote" if dry_run else "promote"
+        for name, old, new in updated:
+            print(f"{verb} {name}: {fmt(old)} -> {fmt(new)}")
+        if skipped:
+            print(f"skipped (not in baseline, add by hand to gate): {', '.join(skipped)}")
+    if dry_run:
+        print(f"dry run: {len(updated)} baselines would change; {baseline_path} untouched")
+    else:
+        print(f"promoted {len(updated)} baselines from {ci_path} -> {baseline_path}")
     return 0
 
 

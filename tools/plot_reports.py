@@ -11,6 +11,9 @@ Produces PNG counterparts of the paper's evaluation figures:
   fig5_aw_ratios.png     — per-task A/W ratio ranges (log-y)
   obs_timeline.png       — serve queue-depth / utilization timeline, from
                            a --trace-out export saved as reports/trace.json
+  attr_breakdown.png     — stacked queue/compute/DRAM latency breakdown per
+                           (scenario, policy, task), from the `attr` blocks
+                           in reports/serve.json (see docs/OBSERVABILITY.md)
 """
 
 import json
@@ -246,11 +249,91 @@ def plot_obs(reports, out):
     plt.close(fig)
 
 
+def plot_attr(reports, out):
+    """Stacked latency-breakdown bars per (scenario, policy, task) from the
+    `attr` blocks `pipeorgan serve` embeds in serve.json: mean queue wait,
+    compute floor, DRAM-contention stretch and donation credit stack to the
+    mean end-to-end latency, with an `x` marking the plan-time predicted
+    service floor (compute + DRAM) where the report carries it. Degrades
+    gracefully: reports predating the attr block (or runs with attribution
+    disabled) skip silently.
+    """
+    data = load(reports, "serve")
+    if not data:
+        return
+    labels, stacks, preds = [], [], []
+    for s in data.get("scenarios") or []:
+        for p in s.get("policies") or []:
+            attr = p.get("attr")
+            if not isinstance(attr, dict):
+                continue
+            for t in attr.get("tasks") or []:
+                parts = [
+                    t.get(k)
+                    for k in (
+                        "mean_queue_ms",
+                        "mean_compute_ms",
+                        "mean_dram_ms",
+                        "mean_donation_ms",
+                    )
+                ]
+                if not all(isinstance(v, (int, float)) for v in parts):
+                    continue
+                labels.append(
+                    f"{s.get('scenario', '?')}\n{p.get('policy', '?')}\n"
+                    f"{t.get('name', t.get('task', '?'))}"
+                )
+                stacks.append(parts)
+                pc, pd = t.get("pred_compute_ms"), t.get("pred_dram_ms")
+                preds.append(
+                    pc + pd
+                    if isinstance(pc, (int, float)) and isinstance(pd, (int, float))
+                    else None
+                )
+    if not stacks:
+        return
+    x = np.arange(len(labels))
+    fig, ax = plt.subplots(figsize=(max(6, 1.1 * len(labels)), 4.5))
+    bottom = np.zeros(len(labels))
+    for i, part in enumerate(("queue wait", "compute floor", "DRAM stretch", "donation")):
+        ys = np.array([st[i] for st in stacks])
+        ax.bar(x, ys, 0.6, bottom=bottom, label=part)
+        bottom += ys
+    px = [i for i, v in enumerate(preds) if v is not None]
+    if px:
+        ax.scatter(
+            px,
+            [preds[i] for i in px],
+            marker="x",
+            color="black",
+            zorder=3,
+            label="predicted service (plan)",
+        )
+    ax.set_xticks(x)
+    ax.set_xticklabels(labels, fontsize=6)
+    ax.set_ylabel("mean latency contribution (ms)")
+    ax.set_title("Attr — critical-path latency breakdown, observed vs plan-predicted")
+    ax.legend(fontsize=7)
+    ax.grid(axis="y", alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "attr_breakdown.png"), dpi=150)
+    plt.close(fig)
+
+
 def main():
     reports = sys.argv[1] if len(sys.argv) > 1 else "reports"
     out = sys.argv[2] if len(sys.argv) > 2 else reports
     os.makedirs(out, exist_ok=True)
-    for fn in (plot_fig13, plot_fig14, plot_fig15, plot_fig16, plot_fig5, plot_cosched, plot_obs):
+    for fn in (
+        plot_fig13,
+        plot_fig14,
+        plot_fig15,
+        plot_fig16,
+        plot_fig5,
+        plot_cosched,
+        plot_obs,
+        plot_attr,
+    ):
         fn(reports, out)
         print(f"{fn.__name__} done")
 

@@ -1,21 +1,37 @@
 #!/usr/bin/env python3
-"""Validate a Perfetto trace_event JSON file produced by --trace-out.
+"""Validate observability artifacts: --trace-out / --flight-out traces
+and --attr-out attribution reports.
 
-Usage: python3 tools/trace_check.py [trace_json]
+Usage: python3 tools/trace_check.py [file ...]    (default reports/trace.json)
 
-Checks the properties DESIGN.md §Obs promises and ui.perfetto.dev relies
-on (the CI trace-smoke step runs this on a fresh `serve --trace-out`):
+Dispatches on document shape:
 
-  - the file is valid JSON with a non-empty traceEvents list;
-  - every event (metadata included) carries ph/ts/pid/tid;
-  - counter ("C") events have an args object and sample monotonically in
-    time per (pid, name) — a counter track that goes back in time renders
-    as garbage;
-  - the serve timeline's counter tracks (queue_depth, dram_bw,
-    region_util, worst_channel_load) are all present;
-  - at least one thread_name metadata event names a region track.
+  - Perfetto trace_event docs (a `traceEvents` list — `--trace-out` and
+    `--flight-out` dumps) get the checks DESIGN.md §Obs promises and
+    ui.perfetto.dev relies on (the CI trace-smoke step runs this on a
+    fresh `serve --trace-out`):
+      * valid JSON with a non-empty traceEvents list;
+      * every event (metadata included) carries ph/ts/pid/tid;
+      * counter ("C") events have an args object and sample
+        monotonically in time per (pid, name) — a counter track that
+        goes back in time renders as garbage;
+      * the serve timeline's counter tracks (queue_depth, dram_bw,
+        region_util, worst_channel_load) are all present;
+      * at least one thread_name metadata event names a region track.
+    A `flight` block (present on `--flight-out` dumps) is additionally
+    validated: a known trigger kind, a numeric trigger time, and every
+    attribution table row conserving *bit-exactly* — the canonical
+    `(((latency − queue) − floor) − stretch) + donation` recompute must
+    equal 0.0, which round-trips because both sides serialize floats
+    shortest-round-trip (see docs/OBSERVABILITY.md).
 
-Exit status 0 iff the trace passes; failures are listed on stderr.
+  - Attribution reports (`"schema": "pipeorgan-attr-v1"` — `--attr-out`)
+    are checked structurally: every policy block carries its
+    totals/tasks/regions/windows/burn/worst sections, windows tile the
+    span in order, burn-rate samples are time-ordered, and the worst-
+    request rows conserve bit-exactly as above.
+
+Exit status 0 iff every file passes; failures are listed on stderr.
 """
 
 import json
@@ -23,9 +39,63 @@ import sys
 
 REQUIRED_FIELDS = ("ph", "ts", "pid", "tid")
 REQUIRED_COUNTERS = ("queue_depth", "dram_bw", "region_util", "worst_channel_load")
+ATTR_SCHEMA = "pipeorgan-attr-v1"
+FLIGHT_KINDS = ("deadline_miss", "end_of_run")
+ATTR_BLOCK_KEYS = ("totals", "tasks", "regions", "windows", "burn", "worst")
 
 
-def check(doc):
+def residual(row):
+    """The canonical conservation recompute: exactly 0.0 for every row
+    the engine emits (same IEEE-754 ops in the same order)."""
+    return (
+        ((row["latency_s"] - row["queue_s"]) - row["floor_s"]) - row["stretch_s"]
+    ) + row["donation_s"]
+
+
+def check_attr_rows(rows, where):
+    errors = []
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{where}[{i}]: not an object")
+            continue
+        missing = [
+            k
+            for k in ("latency_s", "queue_s", "floor_s", "stretch_s", "donation_s")
+            if not isinstance(row.get(k), (int, float))
+        ]
+        if missing:
+            errors.append(f"{where}[{i}]: missing numeric {missing}")
+            continue
+        r = residual(row)
+        if r != 0.0:
+            errors.append(
+                f"{where}[{i}] (task {row.get('task')} id {row.get('id')}): "
+                f"conservation residual {r!r} != 0.0"
+            )
+        if row.get("outcome") not in ("completed", "dropped"):
+            errors.append(f"{where}[{i}]: unknown outcome {row.get('outcome')!r}")
+    return errors
+
+
+def check_flight_block(flight):
+    errors = []
+    if flight.get("kind") not in FLIGHT_KINDS:
+        errors.append(f"flight: unknown trigger kind {flight.get('kind')!r}")
+    if not isinstance(flight.get("t_s"), (int, float)):
+        errors.append("flight: trigger t_s must be numeric")
+    table = flight.get("table")
+    if not isinstance(table, dict):
+        errors.append("flight: missing attribution table")
+        return errors
+    worst = table.get("worst")
+    if not isinstance(worst, list):
+        errors.append("flight.table: missing worst list")
+    else:
+        errors.extend(check_attr_rows(worst, "flight.table.worst"))
+    return errors
+
+
+def check_trace(doc):
     errors = []
     events = doc.get("traceEvents")
     if not isinstance(events, list) or not events:
@@ -65,31 +135,97 @@ def check(doc):
             errors.append(f"missing counter track {want} (have: {sorted(counter_names)})")
     if thread_names == 0:
         errors.append("no thread_name metadata events (region tracks would be unnamed)")
+    if isinstance(doc.get("flight"), dict):
+        errors.extend(check_flight_block(doc["flight"]))
     return errors
 
 
-def main():
-    path = sys.argv[1] if len(sys.argv) > 1 else "reports/trace.json"
-    try:
-        with open(path) as f:
-            doc = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"error: {path}: {e}", file=sys.stderr)
-        return 1
+def check_attr_report(doc):
+    errors = []
+    scenarios = doc.get("scenarios")
+    if not isinstance(scenarios, list) or not scenarios:
+        return ["attr report: scenarios must be a non-empty list"]
+    for s in scenarios:
+        name = s.get("scenario", "?")
+        for p in s.get("policies") or []:
+            where = f"{name}/{p.get('policy', '?')}"
+            for key in ATTR_BLOCK_KEYS:
+                if key not in p:
+                    errors.append(f"{where}: missing {key} section")
+            windows = p.get("windows") or []
+            ok_windows = all(
+                isinstance(w.get("t0_s"), (int, float)) and isinstance(w.get("t1_s"), (int, float))
+                for w in windows
+            )
+            if not ok_windows:
+                errors.append(f"{where}: windows must carry numeric t0_s/t1_s")
+            else:
+                for i, w in enumerate(windows):
+                    if not w["t0_s"] < w["t1_s"]:
+                        errors.append(f"{where}: window {i} is empty or inverted")
+                for a, b in zip(windows, windows[1:]):
+                    if a["t1_s"] != b["t0_s"]:
+                        errors.append(
+                            f"{where}: windows must tile the span ({a['t1_s']} vs {b['t0_s']})"
+                        )
+            burn = p.get("burn") or []
+            if not all(isinstance(b.get("t_s"), (int, float)) for b in burn):
+                errors.append(f"{where}: burn samples must carry numeric t_s")
+            else:
+                for a, b in zip(burn, burn[1:]):
+                    if not a["t_s"] < b["t_s"]:
+                        errors.append(f"{where}: burn samples must be time-ordered")
+                        break
+            for b in burn:
+                if not isinstance(b.get("burn_rate"), (int, float)) or b["burn_rate"] < 0:
+                    errors.append(f"{where}: burn_rate must be a non-negative number")
+                    break
+            errors.extend(check_attr_rows(p.get("worst") or [], f"{where}.worst"))
+    return errors
 
-    errors = check(doc)
-    events = doc.get("traceEvents") or []
-    if errors:
-        print(f"trace check FAILED on {path} ({len(errors)} problems):", file=sys.stderr)
-        for msg in errors[:25]:
-            print(f"  - {msg}", file=sys.stderr)
-        if len(errors) > 25:
-            print(f"  ... and {len(errors) - 25} more", file=sys.stderr)
-        return 1
-    dropped = doc.get("droppedEvents", 0)
-    suffix = f", {dropped} dropped at the ring cap" if dropped else ""
-    print(f"trace check passed: {path} ({len(events)} events{suffix})")
-    return 0
+
+def check(doc):
+    if isinstance(doc.get("traceEvents"), list):
+        return check_trace(doc)
+    if doc.get("schema") == ATTR_SCHEMA:
+        return check_attr_report(doc)
+    return ["unrecognized document: neither a trace (traceEvents) nor an attr report (schema)"]
+
+
+def describe(doc):
+    events = doc.get("traceEvents")
+    if isinstance(events, list):
+        dropped = doc.get("droppedEvents", 0)
+        suffix = f", {dropped} dropped at the ring cap" if dropped else ""
+        if isinstance(doc.get("flight"), dict):
+            suffix += f", flight trigger {doc['flight'].get('kind')}"
+        return f"{len(events)} events{suffix}"
+    policies = sum(len(s.get("policies") or []) for s in doc.get("scenarios") or [])
+    return f"attr report, {policies} policy blocks"
+
+
+def main():
+    paths = sys.argv[1:] or ["reports/trace.json"]
+    failed = False
+    for path in paths:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: {path}: {e}", file=sys.stderr)
+            failed = True
+            continue
+        errors = check(doc)
+        if errors:
+            failed = True
+            print(f"trace check FAILED on {path} ({len(errors)} problems):", file=sys.stderr)
+            for msg in errors[:25]:
+                print(f"  - {msg}", file=sys.stderr)
+            if len(errors) > 25:
+                print(f"  ... and {len(errors) - 25} more", file=sys.stderr)
+        else:
+            print(f"trace check passed: {path} ({describe(doc)})")
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
