@@ -40,6 +40,14 @@ fn main() {
         analyze(&topo, &flows).total_word_hops
     });
 
+    // --- per-link loadmap (telemetry on top of analyze) -----------------------
+    let cached = Topology::cached(TopologyKind::Mesh, 32, 32);
+    common::bench("noc_loadmap", 3, 50, || {
+        let a = analyze(&cached, &flows);
+        let map = pipeorgan::noc::LinkLoadMap::from_analysis(cached.clone(), &a, 640.0);
+        (map.max(), map.class_totals()[0].1)
+    });
+
     // --- cycle-level sim ----------------------------------------------------
     common::bench("cycle_sim_fig8_depth4", 1, 5, || {
         simulate_interval(&topo, &flows, 1).makespan

@@ -246,6 +246,43 @@ impl CutTree {
         }
     }
 
+    /// The [`CutTree::Idle`] rectangles of the realized partition, in tree
+    /// order. [`CutTree::partition`] drops them (regions are indexed by
+    /// task); NoC heatmaps need them back so the exported grids tile the
+    /// full array — idle space is rendered as explicit zero-load regions.
+    pub fn idle_rects(&self, array_rows: usize, array_cols: usize) -> Vec<Region> {
+        let mut rects = Vec::new();
+        self.walk_idle(0, 0, array_rows, array_cols, &mut rects);
+        rects
+    }
+
+    fn walk_idle(&self, row0: usize, col0: usize, rows: usize, cols: usize, out: &mut Vec<Region>) {
+        match self {
+            CutTree::Leaf { .. } => {}
+            CutTree::Idle => out.push(Region {
+                row0,
+                col0,
+                rows,
+                cols,
+            }),
+            CutTree::Cut {
+                axis,
+                at,
+                low,
+                high,
+            } => match axis {
+                CutAxis::Horizontal => {
+                    low.walk_idle(row0, col0, (*at).min(rows), cols, out);
+                    high.walk_idle(row0 + at, col0, rows.saturating_sub(*at), cols, out);
+                }
+                CutAxis::Vertical => {
+                    low.walk_idle(row0, col0, rows, (*at).min(cols), out);
+                    high.walk_idle(row0, col0 + at, rows, cols.saturating_sub(*at), out);
+                }
+            },
+        }
+    }
+
     /// JSON form: leaves are `{"task": 1, "topology": "mesh"}`, idle
     /// rectangles `{"idle": true}`, cuts `{"axis": "v", "at": 8,
     /// "low": …, "high": …}`.
@@ -407,6 +444,29 @@ mod tests {
         // JSON round-trips the idle rectangle too.
         let back = CutTree::from_json(&tree.to_json()).unwrap();
         assert_eq!(back, tree);
+    }
+
+    #[test]
+    fn idle_rects_complement_the_task_regions_exactly() {
+        let tree = CutTree::vertical_bands(&[4, 8], 16, TopologyKind::Amp);
+        let (p, _) = tree.partition(8, 16).unwrap();
+        let idle = tree.idle_rects(8, 16);
+        assert_eq!(idle.len(), 1);
+        assert_eq!(
+            idle[0],
+            Region {
+                row0: 0,
+                col0: 12,
+                rows: 8,
+                cols: 4
+            }
+        );
+        let task_pes: usize = p.regions.iter().map(Region::num_pes).sum();
+        let idle_pes: usize = idle.iter().map(Region::num_pes).sum();
+        assert_eq!(task_pes + idle_pes, 8 * 16, "task + idle tile the array");
+        // Fully-used trees report no idle space.
+        let full = CutTree::vertical_bands(&[8, 8], 16, TopologyKind::Mesh);
+        assert!(full.idle_rects(8, 16).is_empty());
     }
 
     #[test]

@@ -168,6 +168,7 @@ pub const COSCHED_FLAGS: &[(&str, bool)] = &[
     ("cache-cap", true),
     ("obs", false),
     ("trace-out", true),
+    ("noc-out", true),
 ];
 
 #[cfg(test)]

@@ -106,6 +106,11 @@ pub struct TaskAssignment {
     pub stretch_cycles: f64,
     /// Does one inference finish inside the task's deadline?
     pub deadline_met: bool,
+    /// The mapping plan the costs above were evaluated from — kept so
+    /// downstream telemetry (report::noc's link-load maps) can re-derive
+    /// per-link data with [`crate::cost::segment_loadmap`] on the region's
+    /// config without re-running the search.
+    pub plan: MappingPlan,
 }
 
 impl TaskAssignment {
@@ -1383,6 +1388,7 @@ fn assignment(
         stretch_cycles: pc.stretch_cycles,
         // Compared in ms so the verdict agrees bit-for-bit with `slack_ms`.
         deadline_met: latency_s * 1e3 <= spec.deadline_ms,
+        plan: pc.plan.clone(),
     }
 }
 

@@ -8,15 +8,17 @@
 //! 3. global-buffer serialization for via-GB handoffs,
 //! 4. DRAM bandwidth for the segment's off-chip traffic.
 
+use std::sync::Arc;
+
 use crate::config::ArchConfig;
 use crate::energy::EnergyModel;
 use crate::ir::ModelGraph;
 use crate::memory::{bandwidth_cycles, segment_dram_traffic};
-use crate::noc::Topology;
+use crate::noc::{LinkLoadMap, Topology};
 use crate::pipeline::{pipeline_latency, StageInterval};
 use crate::sim::analyze;
 use crate::spatial::Placement;
-use crate::traffic::{derive_flows, StageHandoff};
+use crate::traffic::{derive_flows, Flow, StageHandoff};
 
 use super::plan::{MappingPlan, PlannedSegment};
 
@@ -125,18 +127,19 @@ pub fn evaluate(graph: &ModelGraph, plan: &MappingPlan, cfg: &ArchConfig) -> Mod
     }
 }
 
-/// Evaluate one planned segment on a topology.
-pub fn evaluate_segment(
-    graph: &ModelGraph,
+/// The Fig. 3 compute waterfall of one segment: per-stage intervals plus
+/// the bottleneck stage's `(compute_interval, interval_count)`.
+///
+/// Shared by [`evaluate_segment`] and [`segment_loadmap`] so the
+/// per-interval scaling of link loads can never diverge from the scalar
+/// `worst_channel_load_per_interval` — the bit-exactness invariant holds
+/// by construction, not by parallel maintenance.
+fn stage_waterfall(
     seg: &PlannedSegment,
     cfg: &ArchConfig,
-    topo: &Topology,
-    em: &EnergyModel,
-) -> SegmentCost {
+    macs: &[u64],
+) -> (Vec<StageInterval>, f64, u64) {
     let depth = seg.depth();
-    let macs: Vec<u64> = seg.segment.layers().map(|i| graph.layer(i).macs()).collect();
-
-    // ---- bound 1: Fig. 3 compute waterfall -------------------------------
     let dot = cfg.pe_dot_product as f64;
     let intervals_of = |stage: usize| -> u64 {
         seg.handoffs
@@ -168,11 +171,13 @@ pub fn evaluate_segment(
             intervals: t,
         });
     }
-    let lat = pipeline_latency(&stage_intervals);
+    (stage_intervals, bottleneck_compute, bottleneck_t)
+}
 
-    // ---- bound 2: NoC serialization --------------------------------------
-    // Route each NoC handoff's *whole-segment* volume; the busiest link
-    // sets the serialization bound.
+/// Route a segment's NoC handoffs (whole-segment volumes, via-GB traffic
+/// excluded) over a topology — the flow set both the cost model and the
+/// loadmap accumulate.
+fn noc_flows(seg: &PlannedSegment, cfg: &ArchConfig, topo: &Topology) -> Vec<Flow> {
     let placement = Placement::build(cfg.pe_rows, cfg.pe_cols, seg.organization, &seg.pe_alloc);
     let noc_handoffs: Vec<StageHandoff> = seg
         .handoffs
@@ -185,8 +190,58 @@ pub fn evaluate_segment(
             is_skip: h.is_skip,
         })
         .collect();
-    let flows = derive_flows(topo, &placement, &noc_handoffs);
-    let load = analyze(topo, &flows);
+    derive_flows(topo, &placement, &noc_handoffs)
+}
+
+/// Link-resolved load map of one planned segment, scaled per bottleneck
+/// interval. `map.max()` equals [`evaluate_segment`]'s
+/// `worst_channel_load_per_interval` bit-exactly: same flows, same routes,
+/// same `bottleneck_t`, and IEEE division by a positive constant is
+/// monotone, so max-then-divide equals divide-then-max.
+pub fn segment_loadmap(
+    graph: &ModelGraph,
+    seg: &PlannedSegment,
+    cfg: &ArchConfig,
+    topo: &Arc<Topology>,
+) -> LinkLoadMap {
+    let macs: Vec<u64> = seg.segment.layers().map(|i| graph.layer(i).macs()).collect();
+    let (_, _, bottleneck_t) = stage_waterfall(seg, cfg, &macs);
+    let load = analyze(topo, &noc_flows(seg, cfg, topo));
+    LinkLoadMap::from_analysis(Arc::clone(topo), &load, bottleneck_t.max(1) as f64)
+}
+
+/// Link-resolved load map of a whole plan: element-wise max over its
+/// segments, mirroring how plan scalars fold per-segment
+/// `worst_channel_load_per_interval` with `f64::max` — so
+/// `plan_loadmap(..).max()` equals that fold bit-exactly.
+pub fn plan_loadmap(graph: &ModelGraph, plan: &MappingPlan, cfg: &ArchConfig) -> LinkLoadMap {
+    let topo = Topology::cached(plan.topology, cfg.pe_rows, cfg.pe_cols);
+    let mut map = LinkLoadMap::empty(Arc::clone(&topo));
+    for seg in &plan.segments {
+        map.merge_max(&segment_loadmap(graph, seg, cfg, &topo))
+            .expect("plan segments share one topology");
+    }
+    map
+}
+
+/// Evaluate one planned segment on a topology.
+pub fn evaluate_segment(
+    graph: &ModelGraph,
+    seg: &PlannedSegment,
+    cfg: &ArchConfig,
+    topo: &Topology,
+    em: &EnergyModel,
+) -> SegmentCost {
+    let macs: Vec<u64> = seg.segment.layers().map(|i| graph.layer(i).macs()).collect();
+
+    // ---- bound 1: Fig. 3 compute waterfall -------------------------------
+    let (stage_intervals, bottleneck_compute, bottleneck_t) = stage_waterfall(seg, cfg, &macs);
+    let lat = pipeline_latency(&stage_intervals);
+
+    // ---- bound 2: NoC serialization --------------------------------------
+    // Route each NoC handoff's *whole-segment* volume; the busiest link
+    // sets the serialization bound.
+    let load = analyze(topo, &noc_flows(seg, cfg, topo));
     let noc_cycles = load.worst_channel_load / cfg.link_words_per_cycle;
 
     // ---- bound 3: global-buffer serialization -----------------------------
@@ -365,6 +420,41 @@ mod tests {
         assert!(c.cycles > 0.0 && c.energy > 0.0 && c.dram_words > 0);
         let sum: f64 = c.per_segment.iter().map(|s| s.cycles).sum();
         assert_eq!(c.cycles, sum);
+    }
+
+    #[test]
+    fn loadmap_max_matches_scalar_bit_exactly_on_all_topologies() {
+        // The tentpole invariant at segment and plan granularity, on every
+        // topology kind and both fine-grained organizations.
+        for kind in [
+            TopologyKind::Mesh,
+            TopologyKind::Amp,
+            TopologyKind::Torus,
+            TopologyKind::FlattenedButterfly,
+        ] {
+            for org in [Organization::Blocked1D, Organization::FineStriped1D] {
+                let (g, mut plan) = depth2_plan(org, false);
+                plan.topology = kind;
+                let cfg = cfg();
+                let cost = evaluate(&g, &plan, &cfg);
+                let topo = Topology::cached(kind, cfg.pe_rows, cfg.pe_cols);
+                for (seg, sc) in plan.segments.iter().zip(&cost.per_segment) {
+                    let map = segment_loadmap(&g, seg, &cfg, &topo);
+                    assert_eq!(
+                        map.max(),
+                        sc.worst_channel_load_per_interval,
+                        "{kind:?} {org:?}"
+                    );
+                }
+                let plan_map = plan_loadmap(&g, &plan, &cfg);
+                let scalar = cost
+                    .per_segment
+                    .iter()
+                    .map(|s| s.worst_channel_load_per_interval)
+                    .fold(0.0, f64::max);
+                assert_eq!(plan_map.max(), scalar, "{kind:?} {org:?} plan fold");
+            }
+        }
     }
 
     #[test]

@@ -5,5 +5,7 @@
 mod eval;
 mod plan;
 
-pub use eval::{evaluate, evaluate_segment, ModelCost, SegmentCost};
+pub use eval::{
+    evaluate, evaluate_segment, plan_loadmap, segment_loadmap, ModelCost, SegmentCost,
+};
 pub use plan::{Mapper, MappingPlan, PlannedHandoff, PlannedSegment};

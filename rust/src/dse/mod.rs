@@ -229,6 +229,7 @@ pub const DSE_FLAGS: &[(&str, bool)] = &[
     ("channel-load-objective", false),
     ("obs", false),
     ("trace-out", true),
+    ("noc-out", true),
 ];
 
 #[cfg(test)]

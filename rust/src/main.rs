@@ -30,7 +30,11 @@
 //! before the sweep, pruned and saved back after it), `--cache-cap <n>`
 //! (entry cap applied before saving), `--obs` (observability counters +
 //! `reports/obs.json`), `--trace-out <file>` (Chrome/Perfetto trace of
-//! the run; implies `--obs`).
+//! the run; implies `--obs`), `--noc-out <file>` (standalone
+//! `pipeorgan-noc-v1` link-load document — per-link load maps and the
+//! congestion verifier; implies the `report::noc` table, which otherwise
+//! rides `--channel-load-objective`; see docs/OBSERVABILITY.md §NoC
+//! telemetry).
 //!
 //! `e2e`-only flags: `--tuned` (run the search-guided `PipeOrgan::tuned`
 //! mapper in the PipeOrgan column), `--cache-file <file>` / `--cache-cap
@@ -41,7 +45,9 @@
 //! vs 2-D guillotine rectangles with per-region topology choice),
 //! `--quantum <cols>` (region width / cut-grid quantum), `--tuned`,
 //! `--budget <n>`, `--cache-file <file>`, `--cache-cap <n>`, `--obs`,
-//! `--trace-out <file>`.
+//! `--trace-out <file>`, `--noc-out <file>` (per-region link-load maps
+//! composed into a full-array congestion heatmap, idle rectangles
+//! included).
 //!
 //! `serve`-only flags: `--scenario <name|all>`, `--partition
 //! <bands|guillotine>` (partition family of the served plan), `--policy
@@ -59,7 +65,11 @@
 //! block in `serve.json`), `--flight-out <file>` (arm the flight
 //! recorder: a bounded ring of recent events frozen at the first
 //! deadline miss, dumped as a Perfetto-compatible snippet plus
-//! attribution table; see docs/OBSERVABILITY.md).
+//! attribution table; see docs/OBSERVABILITY.md), `--trace-file <file>`
+//! (replay a captured device trace: one timestamp column per task,
+//! replacing the synthetic `--arrivals`/`--rate-mult` process),
+//! `--noc-out <file>` (link-load maps per home region plus time-windowed
+//! congestion heatmaps over the replay).
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -77,7 +87,7 @@ use pipeorgan::report;
 use pipeorgan::serve::{self, ServeConfig, SERVE_FLAGS};
 use pipeorgan::workloads;
 
-const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N --obs --trace-out FILE] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N --obs --trace-out FILE] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N --obs --trace-out FILE --attr-out FILE --flight-out FILE]\ndocs: rust/DESIGN.md (architecture), docs/PERFORMANCE.md (bench gate, hot-path design, reading --obs output), docs/OBSERVABILITY.md (traces, latency attribution, flight recorder)";
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N --obs --trace-out FILE --noc-out FILE] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N --obs --trace-out FILE --noc-out FILE] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --trace-file FILE --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N --obs --trace-out FILE --noc-out FILE --attr-out FILE --flight-out FILE]\ndocs: rust/DESIGN.md (architecture), docs/PERFORMANCE.md (bench gate, hot-path design, reading --obs output), docs/OBSERVABILITY.md (traces, latency attribution, NoC telemetry, flight recorder)";
 
 const FLAGS: &[(&str, bool)] = &[
     ("out", true),
@@ -354,7 +364,22 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
             let dse_cfg = DseConfig::from_cli(&args).map_err(|e| anyhow::anyhow!(e))?;
             let tasks = resolve_workloads(args.get_or("workload", "all"))?;
             let (cache_file, cache, cache_cap) = load_cache_with_cap(&args)?;
-            let reports = report::run_dse_reports(&cfg, tasks, &dse_cfg, workers, &cache);
+            let results = report::explore_all(&cfg, tasks.clone(), &dse_cfg, workers, &cache);
+            let mut reports = vec![
+                report::dse_frontier(&cfg, &dse_cfg, &results),
+                report::dse_gap(&dse_cfg, &results),
+            ];
+            // The link-load distribution rides the fourth Pareto axis (or
+            // an explicit artifact request) — it re-evaluates each plan on
+            // both fabrics, so it is opt-in.
+            if dse_cfg.channel_load_objective || args.has("noc-out") {
+                let noc = report::dse_noc_report(&cfg, &tasks, &results);
+                if let Some(path) = args.get("noc-out") {
+                    write_json_file(path, &noc.json)?;
+                    println!("noc: wrote link-load report to {path}");
+                }
+                reports.push(noc);
+            }
             emit(with_obs(reports, &dse_cfg.obs))?;
             finish_obs(&dse_cfg.obs, &args)?;
             save_cache(&cache_file, &cache, || zoo_contexts(&cfg), cache_cap)
@@ -381,7 +406,14 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
                     r.cut_tree.encode()
                 );
             }
-            emit(with_obs(vec![report::cosched_report(&cfg, &results)], &cs.obs))?;
+            let mut reports = vec![report::cosched_report(&cfg, &results)];
+            let noc = report::cosched_noc_report(&cfg, &scenarios, &results);
+            if let Some(path) = args.get("noc-out") {
+                write_json_file(path, &noc.json)?;
+                println!("noc: wrote link-load report to {path}");
+            }
+            reports.push(noc);
+            emit(with_obs(reports, &cs.obs))?;
             finish_obs(&cs.obs, &args)?;
             // Live contexts: the shared base plus every candidate region
             // config these scenarios actually reached (covers non-default
@@ -433,6 +465,14 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
                 }
             }
             let mut reports = report::serve_reports(&cfg, &sv, &runs);
+            // Before `with_obs`/`finish_obs`: the windowed heatmaps also
+            // emit per-policy `noc_load` counter samples into the handle.
+            let noc = report::serve_noc_report(&cfg, &scenarios, &runs, &sv.obs);
+            if let Some(path) = args.get("noc-out") {
+                write_json_file(path, &noc.json)?;
+                println!("noc: wrote link-load report to {path}");
+            }
+            reports.push(noc);
             match report::attr_report(&runs) {
                 Some(rep) => {
                     if let Some(path) = args.get("attr-out") {

@@ -1,0 +1,331 @@
+//! Link-resolved load maps: the spatial view of the channel-load model.
+//!
+//! [`crate::sim::analyze`] already accumulates words-per-interval on every
+//! directed link; this module keeps that dense vector next to its
+//! [`Topology`] (instead of reducing it to one scalar) and scales it to
+//! *per bottleneck interval* — the Fig. 15 unit the cost model reports as
+//! `worst_channel_load_per_interval`.
+//!
+//! The load-bearing invariant, pinned by tests and re-checked in Python by
+//! `tools/trace_check.py`: **`LinkLoadMap::max()` equals the scalar
+//! `worst_channel_load_per_interval` bit-exactly.** Both sides divide the
+//! same per-link words by the same positive interval count and fold with
+//! `f64::max` from `0.0`; division by a positive constant is monotone in
+//! IEEE-754, so the max commutes with the scaling.
+
+use std::sync::Arc;
+
+use crate::config::TopologyKind;
+use crate::sim::LoadAnalysis;
+
+use super::topology::{Link, Topology};
+
+/// Compass direction of a directed link, from the source PE's viewpoint.
+/// Torus wraparound links point in the *travel* direction (a link from
+/// column 0 to column `cols-1` carries westward traffic), so heatmap cells
+/// show where words actually leave each PE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkDir {
+    East,
+    West,
+    North,
+    South,
+}
+
+impl LinkDir {
+    pub const ALL: [LinkDir; 4] = [LinkDir::East, LinkDir::West, LinkDir::North, LinkDir::South];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkDir::East => "east",
+            LinkDir::West => "west",
+            LinkDir::North => "north",
+            LinkDir::South => "south",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            LinkDir::East => 0,
+            LinkDir::West => 1,
+            LinkDir::North => 2,
+            LinkDir::South => 3,
+        }
+    }
+}
+
+/// Wire class of a link, for per-class counter tracks: `local` mesh
+/// neighbors, `express` long links (AMP express and flattened-butterfly
+/// spans), `wrap` torus wraparounds.
+pub const LINK_CLASSES: [&str; 3] = ["local", "express", "wrap"];
+
+/// Direction a link carries traffic (see [`LinkDir`]). Every topology here
+/// links along exactly one axis, so one coordinate delta is nonzero.
+pub fn link_dir(topo: &Topology, link: &Link) -> LinkDir {
+    let (fr, fc) = topo.coords(link.from);
+    let (tr, tc) = topo.coords(link.to);
+    let wrap = is_wrap(topo, link);
+    if fc != tc {
+        match (tc > fc) ^ wrap {
+            true => LinkDir::East,
+            false => LinkDir::West,
+        }
+    } else {
+        match (tr > fr) ^ wrap {
+            true => LinkDir::South,
+            false => LinkDir::North,
+        }
+    }
+}
+
+/// Torus wraparound links are the length-1 links whose endpoints sit on
+/// opposite edges; no other topology builds such a link.
+fn is_wrap(topo: &Topology, link: &Link) -> bool {
+    if topo.kind != TopologyKind::Torus {
+        return false;
+    }
+    let (fr, fc) = topo.coords(link.from);
+    let (tr, tc) = topo.coords(link.to);
+    fr.abs_diff(tr) > 1 || fc.abs_diff(tc) > 1
+}
+
+/// Wire class of a link (one of [`LINK_CLASSES`]).
+pub fn link_class(topo: &Topology, link: &Link) -> &'static str {
+    if is_wrap(topo, link) {
+        "wrap"
+    } else if link.length > 1 {
+        "express"
+    } else {
+        "local"
+    }
+}
+
+/// Nearest-rank percentile over the active (nonzero) entries of a load
+/// slice; 0 when all idle. Shared by [`LinkLoadMap::percentile`] and the
+/// composed-heatmap stats so both report the same distribution.
+pub fn percentile_of(loads: &[f64], p: f64) -> f64 {
+    let mut active: Vec<f64> = loads.iter().cloned().filter(|&w| w > 0.0).collect();
+    if active.is_empty() {
+        return 0.0;
+    }
+    active.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((p / 100.0) * active.len() as f64).ceil() as usize;
+    active[rank.clamp(1, active.len()) - 1]
+}
+
+/// Per-link load in words **per bottleneck interval**, dense by `LinkId`,
+/// pinned to the topology it was routed on.
+#[derive(Debug, Clone)]
+pub struct LinkLoadMap {
+    topo: Arc<Topology>,
+    loads: Vec<f64>,
+}
+
+impl LinkLoadMap {
+    /// All-zero map over a topology.
+    pub fn empty(topo: Arc<Topology>) -> LinkLoadMap {
+        let loads = vec![0.0; topo.num_links()];
+        LinkLoadMap { topo, loads }
+    }
+
+    /// Scale an [`analyze`](crate::sim::analyze) result to per-interval
+    /// units. `interval` must be ≥ 1 (callers pass `bottleneck_t.max(1)`),
+    /// matching the cost model's `worst_channel_load / bottleneck_t`.
+    pub fn from_analysis(topo: Arc<Topology>, load: &LoadAnalysis, interval: f64) -> LinkLoadMap {
+        debug_assert_eq!(topo.num_links(), load.per_link_words.len());
+        let loads = load.per_link_words.iter().map(|&w| w / interval).collect();
+        LinkLoadMap { topo, loads }
+    }
+
+    pub fn topology(&self) -> &Arc<Topology> {
+        &self.topo
+    }
+
+    pub fn loads(&self) -> &[f64] {
+        &self.loads
+    }
+
+    /// Busiest link's load — bit-exact equal to the cost model's
+    /// `worst_channel_load_per_interval` for a map built by
+    /// [`crate::cost::segment_loadmap`] (same fold, same scaling).
+    pub fn max(&self) -> f64 {
+        self.loads.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Σ over links — per-interval total word-hops (conservation: equals
+    /// `total_word_hops / interval` up to summation order).
+    pub fn sum(&self) -> f64 {
+        self.loads.iter().sum()
+    }
+
+    /// Σ over links of load × physical wire length — the per-interval
+    /// hop-energy proxy (`total_word_wire / interval` up to order).
+    pub fn wire_weighted_sum(&self) -> f64 {
+        self.loads
+            .iter()
+            .zip(self.topo.links())
+            .map(|(&w, l)| w * l.length as f64)
+            .sum()
+    }
+
+    /// Number of links carrying any traffic.
+    pub fn active_links(&self) -> usize {
+        self.loads.iter().filter(|&&w| w > 0.0).count()
+    }
+
+    /// Nearest-rank percentile over the *active* links (0 when idle);
+    /// `p` in [0, 100]. Over active links only, so a mostly-idle fabric
+    /// doesn't report p95 = 0 while one link melts.
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile_of(&self.loads, p)
+    }
+
+    /// Element-wise max with another map over the *same* topology — the
+    /// spatial analogue of how plan costs fold per-segment
+    /// `worst_channel_load_per_interval` with `f64::max`, so a plan map's
+    /// [`max`](Self::max) still equals the plan's scalar bit-exactly.
+    pub fn merge_max(&mut self, other: &LinkLoadMap) -> Result<(), String> {
+        let (a, b) = (&self.topo, &other.topo);
+        if a.kind != b.kind || a.rows != b.rows || a.cols != b.cols {
+            return Err(format!(
+                "merge_max across topologies: {:?} {}x{} vs {:?} {}x{}",
+                a.kind, a.rows, a.cols, b.kind, b.rows, b.cols
+            ));
+        }
+        for (dst, &src) in self.loads.iter_mut().zip(&other.loads) {
+            *dst = dst.max(src);
+        }
+        Ok(())
+    }
+
+    /// Return a copy with every load scaled (serve uses busy fractions to
+    /// window a region's map in time). Scaling by exactly `1.0` is the
+    /// IEEE identity, so unscaled windows stay bit-exact.
+    pub fn scaled(&self, factor: f64) -> LinkLoadMap {
+        LinkLoadMap {
+            topo: Arc::clone(&self.topo),
+            loads: self.loads.iter().map(|&w| w * factor).collect(),
+        }
+    }
+
+    /// Total load per wire class, ordered as [`LINK_CLASSES`].
+    pub fn class_totals(&self) -> [(&'static str, f64); 3] {
+        let mut totals = [0.0f64; 3];
+        for (w, link) in self.loads.iter().zip(self.topo.links()) {
+            let class = link_class(&self.topo, link);
+            let slot = LINK_CLASSES.iter().position(|&c| c == class).unwrap();
+            totals[slot] += w;
+        }
+        [
+            (LINK_CLASSES[0], totals[0]),
+            (LINK_CLASSES[1], totals[1]),
+            (LINK_CLASSES[2], totals[2]),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::analyze;
+    use crate::traffic::{derive_flows, scenarios};
+
+    fn map_for(kind: TopologyKind) -> LinkLoadMap {
+        let topo = Topology::cached(kind, 32, 32);
+        let s = scenarios::fig8_depth2_blocked(32, 32);
+        let flows = derive_flows(&topo, &s.placement, &s.handoffs);
+        let load = analyze(&topo, &flows);
+        LinkLoadMap::from_analysis(Arc::clone(&topo), &load, 2.0)
+    }
+
+    #[test]
+    fn max_is_scaled_worst_channel_load() {
+        for kind in [
+            TopologyKind::Mesh,
+            TopologyKind::Amp,
+            TopologyKind::Torus,
+            TopologyKind::FlattenedButterfly,
+        ] {
+            let topo = Topology::cached(kind, 32, 32);
+            let s = scenarios::fig8_depth2_blocked(32, 32);
+            let flows = derive_flows(&topo, &s.placement, &s.handoffs);
+            let load = analyze(&topo, &flows);
+            for t in [1u64, 2, 7, 640] {
+                let map = LinkLoadMap::from_analysis(Arc::clone(&topo), &load, t as f64);
+                assert_eq!(
+                    map.max(),
+                    load.worst_channel_load / t as f64,
+                    "{kind:?} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sum_conserves_word_hops() {
+        let topo = Topology::cached(TopologyKind::Mesh, 32, 32);
+        let s = scenarios::fig8_depth2_blocked(32, 32);
+        let flows = derive_flows(&topo, &s.placement, &s.handoffs);
+        let load = analyze(&topo, &flows);
+        let map = LinkLoadMap::from_analysis(Arc::clone(&topo), &load, 1.0);
+        assert!((map.sum() - load.total_word_hops).abs() < 1e-6);
+        assert!((map.wire_weighted_sum() - load.total_word_wire).abs() < 1e-6);
+        assert_eq!(map.active_links(), load.active_links());
+    }
+
+    #[test]
+    fn merge_max_matches_scalar_fold() {
+        let a = map_for(TopologyKind::Mesh);
+        let b = a.scaled(0.5);
+        let mut merged = b.clone();
+        merged.merge_max(&a).unwrap();
+        assert_eq!(merged.max(), a.max().max(b.max()));
+        // Mismatched topologies refuse to merge.
+        let mut amp = map_for(TopologyKind::Amp);
+        assert!(amp.merge_max(&a).is_err());
+    }
+
+    #[test]
+    fn percentiles_are_ordered_and_max_agrees() {
+        let map = map_for(TopologyKind::Mesh);
+        let (p50, p95, max) = (map.percentile(50.0), map.percentile(95.0), map.max());
+        assert!(p50 <= p95 && p95 <= max, "{p50} {p95} {max}");
+        assert_eq!(map.percentile(100.0), max);
+        let idle = LinkLoadMap::empty(Topology::cached(TopologyKind::Mesh, 4, 4));
+        assert_eq!(idle.percentile(95.0), 0.0);
+        assert_eq!(idle.max(), 0.0);
+    }
+
+    #[test]
+    fn directions_cover_mesh_and_wraps_invert() {
+        let topo = Topology::cached(TopologyKind::Mesh, 4, 4);
+        let east = topo.link_between(topo.node(1, 1), topo.node(1, 2)).unwrap();
+        let north = topo.link_between(topo.node(2, 1), topo.node(1, 1)).unwrap();
+        assert_eq!(link_dir(&topo, &topo.link(east)), LinkDir::East);
+        assert_eq!(link_dir(&topo, &topo.link(north)), LinkDir::North);
+        let torus = Topology::cached(TopologyKind::Torus, 4, 4);
+        // col 0 → col 3 wraps westward.
+        let wrap = torus
+            .link_between(torus.node(1, 0), torus.node(1, 3))
+            .unwrap();
+        assert_eq!(link_dir(&torus, &torus.link(wrap)), LinkDir::West);
+        assert_eq!(link_class(&torus, &torus.link(wrap)), "wrap");
+    }
+
+    #[test]
+    fn classes_split_local_express_wrap() {
+        let amp = Topology::cached(TopologyKind::Amp, 32, 32);
+        let classes: Vec<&str> = amp
+            .links()
+            .iter()
+            .map(|l| link_class(&amp, l))
+            .collect();
+        assert!(classes.contains(&"local") && classes.contains(&"express"));
+        assert!(!classes.contains(&"wrap"));
+        let map = map_for(TopologyKind::Amp);
+        let totals = map.class_totals();
+        let total: f64 = totals.iter().map(|(_, w)| w).sum();
+        assert!((total - map.sum()).abs() < 1e-6);
+        assert!(totals[1].1 > 0.0, "express links should carry load on AMP");
+    }
+}

@@ -4,11 +4,15 @@
 //! Links are directed and indexed densely so traffic analysis can
 //! accumulate per-link channel load in a flat array.
 
+mod loadmap;
 mod routing;
 mod topology;
+mod verify;
 
+pub use loadmap::{link_class, link_dir, percentile_of, LinkDir, LinkLoadMap, LINK_CLASSES};
 pub use routing::{route, route_into, route_wire_length};
 pub use topology::{amp_express_len, Link, LinkId, NodeId, Topology};
+pub use verify::{congestion_threshold, verify, verify_loads, CongestionVerdict};
 
 #[cfg(test)]
 mod tests {

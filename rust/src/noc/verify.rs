@@ -1,0 +1,131 @@
+//! Congestion-free verification (the paper's headline claim, Sec. IV-C):
+//! a link is saturated when its per-interval load cannot drain within the
+//! bottleneck compute interval at `link_words_per_cycle`; a plan is
+//! congestion-free when no link is.
+//!
+//! [`verify`] classifies every link of a [`LinkLoadMap`] against a
+//! capacity threshold in the same words-per-interval unit and reports the
+//! saturated-link count plus the p50/p95/max load distribution — the
+//! spatial refinement of `SegmentCost::noc_bound()`.
+
+use super::loadmap::LinkLoadMap;
+
+/// Link capacity in words per interval: what the NoC can drain during one
+/// bottleneck compute interval. Loads above this congest (the Fig. 15
+/// condition `worst_load / link_bw > compute_interval`, rearranged).
+pub fn congestion_threshold(bottleneck_compute_interval: f64, link_words_per_cycle: f64) -> f64 {
+    bottleneck_compute_interval * link_words_per_cycle
+}
+
+/// Verdict of [`verify`]: the load distribution and the saturated count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CongestionVerdict {
+    /// Capacity threshold the links were classified against
+    /// (words per interval).
+    pub threshold: f64,
+    pub total_links: usize,
+    pub active_links: usize,
+    /// Links with load strictly above the threshold.
+    pub saturated: usize,
+    /// Nearest-rank percentiles over active links.
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+    /// No saturated link anywhere.
+    pub congestion_free: bool,
+}
+
+impl CongestionVerdict {
+    /// Worst link's utilization of the threshold (>1 means congested);
+    /// infinite when the threshold is zero but traffic exists.
+    pub fn utilization(&self) -> f64 {
+        if self.threshold > 0.0 {
+            self.max / self.threshold
+        } else if self.max > 0.0 {
+            f64::INFINITY
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Classify every link of `map` against `threshold` words per interval.
+pub fn verify(map: &LinkLoadMap, threshold: f64) -> CongestionVerdict {
+    verify_loads(map.loads(), threshold)
+}
+
+/// Slice form of [`verify`], for composed heatmaps whose regions sit on
+/// different topologies (the concatenated per-link loads still form one
+/// distribution; the fold-max stays bit-exact).
+pub fn verify_loads(loads: &[f64], threshold: f64) -> CongestionVerdict {
+    let saturated = loads.iter().filter(|&&w| w > threshold).count();
+    CongestionVerdict {
+        threshold,
+        total_links: loads.len(),
+        active_links: loads.iter().filter(|&&w| w > 0.0).count(),
+        saturated,
+        p50: super::loadmap::percentile_of(loads, 50.0),
+        p95: super::loadmap::percentile_of(loads, 95.0),
+        max: loads.iter().cloned().fold(0.0, f64::max),
+        congestion_free: saturated == 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::noc::Topology;
+    use crate::sim::analyze;
+    use crate::traffic::{derive_flows, scenarios};
+    use std::sync::Arc;
+
+    fn blocked_map(kind: TopologyKind) -> LinkLoadMap {
+        let topo = Topology::cached(kind, 32, 32);
+        let s = scenarios::fig8_depth2_blocked(32, 32);
+        let flows = derive_flows(&topo, &s.placement, &s.handoffs);
+        let load = analyze(&topo, &flows);
+        LinkLoadMap::from_analysis(Arc::clone(&topo), &load, 1.0)
+    }
+
+    #[test]
+    fn blocked_mesh_congests_striped_does_not() {
+        // Fig. 8 vs Fig. 10: the blocked layout saturates boundary links at
+        // a 2-cycle interval, the striped one stays below one word/interval.
+        let topo = Topology::cached(TopologyKind::Mesh, 32, 32);
+        let thresh = congestion_threshold(2.0, 1.0);
+        let blocked = verify(&blocked_map(TopologyKind::Mesh), thresh);
+        assert!(!blocked.congestion_free);
+        assert!(blocked.saturated > 0 && blocked.saturated < blocked.total_links);
+        assert!(blocked.utilization() > 1.0);
+
+        let s = scenarios::fig10_striped(32, 32);
+        let flows = derive_flows(&topo, &s.placement, &s.handoffs);
+        let load = analyze(&topo, &flows);
+        let striped = LinkLoadMap::from_analysis(Arc::clone(&topo), &load, 1.0);
+        let v = verify(&striped, thresh);
+        assert!(v.congestion_free, "striped saturated {} links", v.saturated);
+        assert!(v.utilization() <= 1.0);
+    }
+
+    #[test]
+    fn amp_reduces_saturation_vs_mesh() {
+        let thresh = congestion_threshold(2.0, 1.0);
+        let mesh = verify(&blocked_map(TopologyKind::Mesh), thresh);
+        let amp = verify(&blocked_map(TopologyKind::Amp), thresh);
+        assert!(amp.max < mesh.max, "amp {} mesh {}", amp.max, mesh.max);
+        assert!(amp.saturated <= mesh.saturated);
+    }
+
+    #[test]
+    fn verdict_distribution_is_consistent() {
+        let v = verify(&blocked_map(TopologyKind::Mesh), 1.0);
+        assert!(v.p50 <= v.p95 && v.p95 <= v.max);
+        assert!(v.active_links <= v.total_links);
+        assert!(v.saturated <= v.active_links, "idle links never saturate");
+        let idle = LinkLoadMap::empty(Topology::cached(TopologyKind::Mesh, 4, 4));
+        let vi = verify(&idle, 0.0);
+        assert!(vi.congestion_free);
+        assert_eq!(vi.utilization(), 0.0);
+    }
+}

@@ -1,0 +1,346 @@
+//! Congestion heatmaps and the `pipeorgan-noc-v1` artifact (`--noc-out`).
+//!
+//! A [`Heatmap`] projects per-link loads onto a rows×cols grid, one grid
+//! per compass direction: each cell holds the **max** load over the links
+//! leaving that PE in that direction. Max (not sum) keeps the headline
+//! invariant recomputable downstream: the max over all four grids equals
+//! [`LinkLoadMap::max`], which equals the cost model's
+//! `worst_channel_load_per_interval` — `tools/trace_check.py` re-derives
+//! the chain from the JSON alone.
+//!
+//! Heatmaps compose: cosched/serve place each guillotine region's map at
+//! its `(row0, col0)` offset (serve additionally scales by the window's
+//! busy fraction), and `Idle` rectangles are listed alongside so the
+//! artifact tiles the full array. See docs/OBSERVABILITY.md §NoC
+//! telemetry for the schema.
+
+use crate::noc::{link_class, link_dir, verify_loads, LinkDir, LinkLoadMap, LINK_CLASSES};
+use crate::util::json::Json;
+
+use super::Obs;
+
+/// Schema tag of the `--noc-out` artifact.
+pub const NOC_SCHEMA: &str = "pipeorgan-noc-v1";
+
+/// One region's load map placed on the full array at `(row0, col0)`,
+/// scaled by `scale` (1.0 everywhere except serve's time windows).
+pub struct RegionMap {
+    pub label: String,
+    pub map: LinkLoadMap,
+    pub row0: usize,
+    pub col0: usize,
+    pub scale: f64,
+}
+
+impl RegionMap {
+    /// A whole-array map (no offset, no scaling) — the dse/plan case.
+    pub fn whole(label: &str, map: LinkLoadMap) -> RegionMap {
+        RegionMap {
+            label: label.to_string(),
+            map,
+            row0: 0,
+            col0: 0,
+            scale: 1.0,
+        }
+    }
+}
+
+/// An idle rectangle of the guillotine partition (no task, zero load).
+pub struct IdleRect {
+    pub row0: usize,
+    pub col0: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// rows×cols×direction max-load grids (row-major).
+pub struct Heatmap {
+    pub rows: usize,
+    pub cols: usize,
+    grids: [Vec<f64>; 4],
+}
+
+impl Heatmap {
+    pub fn new(rows: usize, cols: usize) -> Heatmap {
+        Heatmap {
+            rows,
+            cols,
+            grids: std::array::from_fn(|_| vec![0.0; rows * cols]),
+        }
+    }
+
+    /// Fold a region's links into the grids at its offset. Cells take the
+    /// max so the grid max stays the map max regardless of placement.
+    pub fn add(&mut self, part: &RegionMap) {
+        let topo = part.map.topology();
+        for (link, &w) in topo.links().iter().zip(part.map.loads()) {
+            let w = w * part.scale;
+            let (r, c) = topo.coords(link.from);
+            let (r, c) = (part.row0 + r, part.col0 + c);
+            debug_assert!(r < self.rows && c < self.cols, "region overflows array");
+            let cell = &mut self.grids[link_dir(topo, link).index()][r * self.cols + c];
+            *cell = cell.max(w);
+        }
+    }
+
+    pub fn grid(&self, dir: LinkDir) -> &[f64] {
+        &self.grids[dir.index()]
+    }
+
+    /// Max over every cell of every direction — equals the max over the
+    /// constituent maps' loads (a max of maxes over a partition).
+    pub fn max(&self) -> f64 {
+        self.grids
+            .iter()
+            .flat_map(|g| g.iter().cloned())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Build one artifact entry: compose `parts` (plus `idle` rectangles) on a
+/// rows×cols array, classify the concatenated link loads against
+/// `threshold`, and embed the direction grids.
+///
+/// `worst_channel_load` is the plan's scalar when the entry is backed by
+/// one — `trace_check.py` asserts it equals the recomputed grid max
+/// exactly. `window` is serve's `(t0_s, t1_s)` sample window.
+#[allow(clippy::too_many_arguments)]
+pub fn entry_json(
+    label: &str,
+    kind: &str,
+    topology: &str,
+    rows: usize,
+    cols: usize,
+    parts: &[RegionMap],
+    idle: &[IdleRect],
+    worst_channel_load: Option<f64>,
+    threshold: f64,
+    window: Option<(f64, f64)>,
+) -> Json {
+    let mut heat = Heatmap::new(rows, cols);
+    let mut loads = Vec::new();
+    let mut class_totals = [0.0f64; 3];
+    for part in parts {
+        heat.add(part);
+        let topo = part.map.topology();
+        for (link, &w) in topo.links().iter().zip(part.map.loads()) {
+            let w = w * part.scale;
+            loads.push(w);
+            let slot = LINK_CLASSES
+                .iter()
+                .position(|&c| c == link_class(topo, link))
+                .unwrap();
+            class_totals[slot] += w;
+        }
+    }
+    let v = verify_loads(&loads, threshold);
+
+    let mut e = Json::obj();
+    e.set("label", label)
+        .set("kind", kind)
+        .set("topology", topology)
+        .set("rows", rows)
+        .set("cols", cols)
+        .set("max", v.max)
+        .set("p50", v.p50)
+        .set("p95", v.p95);
+    if let Some(w) = worst_channel_load {
+        e.set("worst_channel_load", w);
+    }
+    let mut links = Json::obj();
+    links
+        .set("total", v.total_links)
+        .set("active", v.active_links)
+        .set("saturated", v.saturated);
+    e.set("links", links);
+    let mut verdict = Json::obj();
+    verdict
+        .set("threshold", v.threshold)
+        .set("congestion_free", v.congestion_free)
+        .set("utilization", v.utilization());
+    e.set("verify", verdict);
+    let mut classes = Json::obj();
+    for (name, total) in LINK_CLASSES.iter().zip(class_totals) {
+        classes.set(name, total);
+    }
+    e.set("class_load", classes);
+    let mut grid = Json::obj();
+    for dir in LinkDir::ALL {
+        let mut arr = Json::Arr(Vec::new());
+        for &w in heat.grid(dir) {
+            arr.push(w);
+        }
+        grid.set(dir.name(), arr);
+    }
+    e.set("grid", grid);
+    let mut regions = Json::Arr(Vec::new());
+    for part in parts {
+        let topo = part.map.topology();
+        let mut r = Json::obj();
+        r.set("label", part.label.as_str())
+            .set("row0", part.row0)
+            .set("col0", part.col0)
+            .set("rows", topo.rows)
+            .set("cols", topo.cols)
+            .set("idle", false);
+        regions.push(r);
+    }
+    for rect in idle {
+        let mut r = Json::obj();
+        r.set("label", "idle")
+            .set("row0", rect.row0)
+            .set("col0", rect.col0)
+            .set("rows", rect.rows)
+            .set("cols", rect.cols)
+            .set("idle", true);
+        regions.push(r);
+    }
+    e.set("regions", regions);
+    if let Some((t0, t1)) = window {
+        let mut w = Json::obj();
+        w.set("t0_s", t0).set("t1_s", t1);
+        e.set("window", w);
+    }
+    e
+}
+
+/// The `pipeorgan-noc-v1` document: schema tag, producing subcommand,
+/// link bandwidth (the words-per-cycle the thresholds assume), entries.
+pub fn noc_document(source: &str, link_words_per_cycle: f64, entries: Vec<Json>) -> Json {
+    let mut doc = Json::obj();
+    doc.set("schema", NOC_SCHEMA)
+        .set("source", source)
+        .set("link_words_per_cycle", link_words_per_cycle)
+        .set("entries", Json::Arr(entries));
+    doc
+}
+
+/// Emit one `noc_load` counter sample with a series per wire class —
+/// Perfetto renders a track with local/express/wrap lines per pid.
+pub fn emit_class_counters(
+    obs: &Obs,
+    pid: u32,
+    ts_us: f64,
+    class_load: &[(&'static str, f64); 3],
+) {
+    obs.counter("noc_load", pid, ts_us, class_load);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+    use crate::noc::Topology;
+    use crate::sim::analyze;
+    use crate::traffic::{derive_flows, scenarios};
+    use std::sync::Arc;
+
+    fn blocked_map(kind: TopologyKind, rows: usize, cols: usize) -> LinkLoadMap {
+        let topo = Topology::cached(kind, rows, cols);
+        let s = scenarios::fig8_depth2_blocked(rows, cols);
+        let flows = derive_flows(&topo, &s.placement, &s.handoffs);
+        let load = analyze(&topo, &flows);
+        LinkLoadMap::from_analysis(Arc::clone(&topo), &load, 1.0)
+    }
+
+    #[test]
+    fn grid_max_equals_map_max() {
+        for kind in [
+            TopologyKind::Mesh,
+            TopologyKind::Amp,
+            TopologyKind::Torus,
+            TopologyKind::FlattenedButterfly,
+        ] {
+            let map = blocked_map(kind, 16, 16);
+            let mut heat = Heatmap::new(16, 16);
+            heat.add(&RegionMap::whole("w", map.clone()));
+            assert_eq!(heat.max(), map.max(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn composition_offsets_preserve_max() {
+        // Two 8×8 regions side by side on a 8×16 array.
+        let a = blocked_map(TopologyKind::Mesh, 8, 8);
+        let b = blocked_map(TopologyKind::Amp, 8, 8);
+        let mut heat = Heatmap::new(8, 16);
+        heat.add(&RegionMap {
+            label: "a".into(),
+            map: a.clone(),
+            row0: 0,
+            col0: 0,
+            scale: 1.0,
+        });
+        heat.add(&RegionMap {
+            label: "b".into(),
+            map: b.clone(),
+            row0: 0,
+            col0: 8,
+            scale: 1.0,
+        });
+        assert_eq!(heat.max(), a.max().max(b.max()));
+    }
+
+    #[test]
+    fn entry_json_embeds_grids_and_verdict() {
+        let map = blocked_map(TopologyKind::Mesh, 8, 8);
+        let scalar = map.max();
+        let parts = [RegionMap::whole("task", map)];
+        let idle = [IdleRect {
+            row0: 0,
+            col0: 0,
+            rows: 2,
+            cols: 2,
+        }];
+        let e = entry_json(
+            "t/plan",
+            "plan",
+            "mesh",
+            8,
+            8,
+            &parts,
+            &idle,
+            Some(scalar),
+            2.0,
+            Some((0.0, 0.5)),
+        );
+        assert_eq!(e.get("max").and_then(|v| v.as_f64()), Some(scalar));
+        assert_eq!(
+            e.get("worst_channel_load").and_then(|v| v.as_f64()),
+            Some(scalar)
+        );
+        // Grid max recomputes to the scalar — the Python-side invariant.
+        let grid = e.get("grid").unwrap();
+        let gm = LinkDir::ALL
+            .iter()
+            .flat_map(|d| grid.get(d.name()).and_then(|g| g.as_arr()).unwrap())
+            .filter_map(|v| v.as_f64())
+            .fold(0.0, f64::max);
+        assert_eq!(gm, scalar);
+        let regions = e.get("regions").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(regions.len(), 2);
+        assert_eq!(
+            e.get("window").and_then(|w| w.get("t1_s")).and_then(|v| v.as_f64()),
+            Some(0.5)
+        );
+    }
+
+    #[test]
+    fn document_carries_schema_and_source() {
+        let doc = noc_document("dse", 1.0, vec![]);
+        assert_eq!(
+            doc.get("schema").and_then(|s| s.as_str()),
+            Some(NOC_SCHEMA)
+        );
+        assert_eq!(doc.get("source").and_then(|s| s.as_str()), Some("dse"));
+    }
+
+    #[test]
+    fn class_counter_emits_one_sample_per_call() {
+        let obs = Obs::enabled();
+        emit_class_counters(&obs, 1, 0.0, &[("local", 1.0), ("express", 2.0), ("wrap", 0.0)]);
+        let evs = obs.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "noc_load");
+    }
+}

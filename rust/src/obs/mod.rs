@@ -40,6 +40,7 @@
 pub mod attr;
 pub mod counters;
 pub mod flight;
+pub mod heatmap;
 pub mod perfetto;
 pub mod selfprof;
 pub mod trace;

@@ -7,6 +7,7 @@ mod attr;
 mod cosched;
 mod dse;
 mod figures;
+mod noc;
 mod obs;
 mod serve;
 
@@ -14,6 +15,7 @@ pub use ablations::{ablation_depth, ablation_organization, ablation_topology};
 pub use attr::{attr_report, flight_table_json, policy_attr_json, ATTR_SCHEMA};
 pub use cosched::cosched_report;
 pub use dse::{dse_frontier, dse_gap, explore_all, run_dse_reports};
+pub use noc::{cosched_noc_report, dse_noc_report, serve_noc_report, NOC_WINDOWS};
 pub use obs::obs_report;
 pub use serve::serve_reports;
 pub use figures::{

@@ -1,0 +1,587 @@
+//! The `report::noc` emitters: per-link load distributions (Fig. 15-style
+//! mesh-vs-AMP, heuristic-vs-tuned), composed full-array congestion
+//! heatmaps, and time-windowed serve heatmaps — the table/JSON side of the
+//! NoC telemetry layer (docs/OBSERVABILITY.md §NoC telemetry).
+//!
+//! Each emitter's `Report::json` *is* the `pipeorgan-noc-v1` document, so
+//! `--noc-out FILE` and the `reports/noc_*.json` file are the same
+//! artifact and both validate under `tools/trace_check.py`.
+
+use crate::config::{ArchConfig, TopologyKind};
+use crate::cosched::{region_config, CoschedResult, Scenario, TaskAssignment};
+use crate::cost::{evaluate, plan_loadmap, MappingPlan};
+use crate::dse::DseResult;
+use crate::ir::ModelGraph;
+use crate::noc::{congestion_threshold, verify, LinkLoadMap};
+use crate::obs::heatmap::{emit_class_counters, entry_json, noc_document, IdleRect, RegionMap};
+use crate::obs::{Obs, PID_SIM};
+use crate::serve::{busy_windows, Policy, ServeRun};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+use super::Report;
+
+/// Time windows per serve scenario in the windowed heatmap sampling.
+pub const NOC_WINDOWS: usize = 8;
+
+/// A plan's link-load view: the map, the scalar it must agree with, and
+/// the (conservative) congestion threshold.
+struct PlanNoc {
+    map: LinkLoadMap,
+    /// Fold of per-segment `worst_channel_load_per_interval` with
+    /// `f64::max` — bit-exact equal to `map.max()`.
+    worst: f64,
+    /// Min over segments of `bottleneck_compute_interval × link_bw`: the
+    /// tightest interval any segment must drain within, so one threshold
+    /// classifies the merged map conservatively.
+    threshold: f64,
+}
+
+fn plan_noc(graph: &ModelGraph, plan: &MappingPlan, cfg: &ArchConfig) -> PlanNoc {
+    let cost = evaluate(graph, plan, cfg);
+    let worst = cost
+        .per_segment
+        .iter()
+        .map(|s| s.worst_channel_load_per_interval)
+        .fold(0.0, f64::max);
+    let threshold = cost
+        .per_segment
+        .iter()
+        .map(|s| congestion_threshold(s.bottleneck_compute_interval, cfg.link_words_per_cycle))
+        .fold(f64::INFINITY, f64::min);
+    PlanNoc {
+        map: plan_loadmap(graph, plan, cfg),
+        worst,
+        threshold: if threshold.is_finite() { threshold } else { 0.0 },
+    }
+}
+
+/// One table row + one artifact entry for a whole-array plan map.
+#[allow(clippy::too_many_arguments)]
+fn plan_row(
+    table: &mut Table,
+    entries: &mut Vec<Json>,
+    label: &str,
+    source: &str,
+    topology: &str,
+    rows: usize,
+    cols: usize,
+    pn: &PlanNoc,
+) {
+    let v = verify(&pn.map, pn.threshold);
+    table.row(&[
+        label.to_string(),
+        source.to_string(),
+        topology.to_string(),
+        fnum(pn.worst),
+        fnum(v.p50),
+        fnum(v.p95),
+        format!("{}/{}", v.active_links, v.total_links),
+        v.saturated.to_string(),
+        fnum(v.threshold),
+        if v.congestion_free { "yes" } else { "NO" }.to_string(),
+    ]);
+    entries.push(entry_json(
+        label,
+        source,
+        topology,
+        rows,
+        cols,
+        &[RegionMap::whole(label, pn.map.clone())],
+        &[],
+        Some(pn.worst),
+        pn.threshold,
+        None,
+    ));
+}
+
+fn noc_table(title: &str) -> Table {
+    Table::new(
+        title,
+        &[
+            "entry",
+            "kind",
+            "topology",
+            "worst load",
+            "p50",
+            "p95",
+            "active",
+            "saturated",
+            "thresh",
+            "congestion-free",
+        ],
+    )
+}
+
+/// DSE link-load report: for every explored workload, the heuristic plan
+/// on mesh *and* AMP (Fig. 15's comparison — same plan, both fabrics)
+/// plus the tuned winner on its own topology. `tasks` are the graphs the
+/// exploration ran over, matched to results by workload name.
+pub fn dse_noc_report(cfg: &ArchConfig, tasks: &[ModelGraph], results: &[DseResult]) -> Report {
+    let mut table = noc_table("NoC link load — mesh vs AMP, heuristic vs tuned (Fig. 15-style)");
+    let mut entries = Vec::new();
+    for r in results {
+        let Some(graph) = tasks.iter().find(|g| g.name == r.workload) else {
+            continue;
+        };
+        let native = r.heuristic.plan.topology;
+        // Heuristic on its native fabric: the scalar comes straight from
+        // the search, so the artifact pins the bit-exact crosscheck.
+        let pn = plan_noc(graph, &r.heuristic.plan, cfg);
+        plan_row(
+            &mut table,
+            &mut entries,
+            &format!("{}/heuristic", r.workload),
+            "heuristic",
+            native.name(),
+            cfg.pe_rows,
+            cfg.pe_cols,
+            &pn,
+        );
+        // The same plan retargeted onto the fabrics the paper compares.
+        for kind in [TopologyKind::Mesh, TopologyKind::Amp] {
+            if kind == native {
+                continue;
+            }
+            let mut plan = r.heuristic.plan.clone();
+            plan.topology = kind;
+            let pn = plan_noc(graph, &plan, cfg);
+            plan_row(
+                &mut table,
+                &mut entries,
+                &format!("{}/heuristic@{}", r.workload, kind.name()),
+                "heuristic",
+                kind.name(),
+                cfg.pe_rows,
+                cfg.pe_cols,
+                &pn,
+            );
+        }
+        let pn = plan_noc(graph, &r.tuned.plan, cfg);
+        plan_row(
+            &mut table,
+            &mut entries,
+            &format!("{}/tuned", r.workload),
+            "tuned",
+            r.tuned.plan.topology.name(),
+            cfg.pe_rows,
+            cfg.pe_cols,
+            &pn,
+        );
+    }
+    Report {
+        name: "noc_dse",
+        table,
+        json: noc_document("dse", cfg.link_words_per_cycle, entries),
+    }
+}
+
+/// Region-local maps of a co-schedule's assignments, in assignment order:
+/// `(assignment, its PlanNoc on the region config)`. Tasks whose graph is
+/// not in `scenario` (never the case for results produced from it) are
+/// skipped.
+fn assignment_maps<'a>(
+    scenario: &Scenario,
+    assignments: &'a [TaskAssignment],
+    cfg: &ArchConfig,
+) -> Vec<(&'a TaskAssignment, PlanNoc)> {
+    assignments
+        .iter()
+        .filter_map(|a| {
+            let spec = scenario.tasks.iter().find(|t| t.name() == a.task)?;
+            let mut rcfg = region_config(cfg, &a.region);
+            rcfg.topology = a.topology;
+            Some((a, plan_noc(&spec.graph, &a.plan, &rcfg)))
+        })
+        .collect()
+}
+
+/// Compose per-region maps into one full-array entry (task regions at
+/// their offsets, idle rectangles listed), plus the composed table row.
+fn composed_entry(
+    table: &mut Table,
+    entries: &mut Vec<Json>,
+    label: &str,
+    cfg: &ArchConfig,
+    maps: &[(&TaskAssignment, PlanNoc)],
+    idle: &[IdleRect],
+) {
+    let parts: Vec<RegionMap> = maps
+        .iter()
+        .map(|(a, pn)| RegionMap {
+            label: a.task.clone(),
+            map: pn.map.clone(),
+            row0: a.region.row0,
+            col0: a.region.col0,
+            scale: 1.0,
+        })
+        .collect();
+    let worst = maps.iter().map(|(a, _)| a.worst_channel_load).fold(0.0, f64::max);
+    let threshold = maps
+        .iter()
+        .map(|(_, pn)| pn.threshold)
+        .fold(f64::INFINITY, f64::min);
+    let threshold = if threshold.is_finite() { threshold } else { 0.0 };
+    let e = entry_json(
+        label,
+        "composed",
+        "composite",
+        cfg.pe_rows,
+        cfg.pe_cols,
+        &parts,
+        idle,
+        Some(worst),
+        threshold,
+        None,
+    );
+    table.row(&[
+        label.to_string(),
+        "composed".to_string(),
+        "composite".to_string(),
+        fnum(worst),
+        fnum(e.get("p50").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+        fnum(e.get("p95").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+        e.get("links")
+            .map(|l| {
+                format!(
+                    "{}/{}",
+                    l.get("active").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    l.get("total").and_then(|v| v.as_f64()).unwrap_or(0.0)
+                )
+            })
+            .unwrap_or_default(),
+        e.get("links")
+            .and_then(|l| l.get("saturated"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+            .to_string(),
+        fnum(threshold),
+        e.get("verify")
+            .and_then(|v| v.get("congestion_free"))
+            .map(|v| {
+                if *v == Json::Bool(true) {
+                    "yes".to_string()
+                } else {
+                    "NO".to_string()
+                }
+            })
+            .unwrap_or_default(),
+    ]);
+    entries.push(e);
+}
+
+fn region_row(table: &mut Table, entries: &mut Vec<Json>, label: &str, a: &TaskAssignment, pn: &PlanNoc) {
+    let v = verify(&pn.map, pn.threshold);
+    table.row(&[
+        label.to_string(),
+        "region".to_string(),
+        a.topology.name().to_string(),
+        fnum(a.worst_channel_load),
+        fnum(v.p50),
+        fnum(v.p95),
+        format!("{}/{}", v.active_links, v.total_links),
+        v.saturated.to_string(),
+        fnum(v.threshold),
+        if v.congestion_free { "yes" } else { "NO" }.to_string(),
+    ]);
+    entries.push(entry_json(
+        label,
+        "region",
+        a.topology.name(),
+        a.region.rows,
+        a.region.cols,
+        &[RegionMap::whole(&a.task, pn.map.clone())],
+        &[],
+        Some(a.worst_channel_load),
+        pn.threshold,
+        None,
+    ));
+}
+
+/// Cosched link-load report: one region-local entry per task assignment
+/// plus the composed full-array heatmap per scenario (idle rectangles
+/// included, so the grids tile the array).
+pub fn cosched_noc_report(
+    cfg: &ArchConfig,
+    scenarios: &[Scenario],
+    results: &[CoschedResult],
+) -> Report {
+    let mut table = noc_table("NoC link load — per-region maps and composed array heatmaps");
+    let mut entries = Vec::new();
+    for r in results {
+        let Some(scenario) = scenarios.iter().find(|s| s.name == r.scenario) else {
+            continue;
+        };
+        let maps = assignment_maps(scenario, &r.cosched.assignments, cfg);
+        for (a, pn) in &maps {
+            region_row(&mut table, &mut entries, &format!("{}/{}", r.scenario, a.task), a, pn);
+        }
+        let idle: Vec<IdleRect> = r
+            .cut_tree
+            .idle_rects(cfg.pe_rows, cfg.pe_cols)
+            .into_iter()
+            .map(|rect| IdleRect {
+                row0: rect.row0,
+                col0: rect.col0,
+                rows: rect.rows,
+                cols: rect.cols,
+            })
+            .collect();
+        composed_entry(
+            &mut table,
+            &mut entries,
+            &format!("{}/array", r.scenario),
+            cfg,
+            &maps,
+            &idle,
+        );
+    }
+    Report {
+        name: "noc_cosched",
+        table,
+        json: noc_document("cosched", cfg.link_words_per_cycle, entries),
+    }
+}
+
+/// Serve link-load report: the cosched-style per-region and composed
+/// entries for each run's plan, plus [`NOC_WINDOWS`] time-windowed
+/// heatmaps (each region's map scaled by its busy fraction in the window,
+/// from the first replayed policy's trace) so hotspot drift under load is
+/// visible. Every policy additionally gets per-window `noc_load` counter
+/// samples (one series per wire class) on its sim-time Perfetto track.
+pub fn serve_noc_report(
+    cfg: &ArchConfig,
+    scenarios: &[Scenario],
+    runs: &[ServeRun],
+    obs: &Obs,
+) -> Report {
+    let mut table = noc_table("NoC link load — serve: plan maps and time-windowed heatmaps");
+    let mut entries = Vec::new();
+    for run in runs {
+        let Some(scenario) = scenarios.iter().find(|s| s.name == run.scenario) else {
+            continue;
+        };
+        let maps = assignment_maps(scenario, &run.plan.cosched.cosched.assignments, cfg);
+        for (a, pn) in &maps {
+            region_row(&mut table, &mut entries, &format!("{}/{}", run.scenario, a.task), a, pn);
+        }
+        let idle: Vec<IdleRect> = run
+            .plan
+            .cosched
+            .cut_tree
+            .idle_rects(cfg.pe_rows, cfg.pe_cols)
+            .into_iter()
+            .map(|rect| IdleRect {
+                row0: rect.row0,
+                col0: rect.col0,
+                rows: rect.rows,
+                cols: rect.cols,
+            })
+            .collect();
+        composed_entry(
+            &mut table,
+            &mut entries,
+            &format!("{}/array", run.scenario),
+            cfg,
+            &maps,
+            &idle,
+        );
+
+        // Busy fractions index regions by task (region i = task i's home),
+        // matching assignment order; maps[] preserved that order.
+        for outcome in &run.outcomes {
+            let windows = busy_windows(outcome, run.plan.regions.len(), NOC_WINDOWS);
+            let pid = PID_SIM
+                + Policy::ALL
+                    .iter()
+                    .position(|&p| p == outcome.policy)
+                    .unwrap_or(0) as u32;
+            let first_policy = outcome.policy == run.outcomes[0].policy;
+            for (k, (w0, w1, fracs)) in windows.iter().enumerate() {
+                let mut class_load: [(&'static str, f64); 3] =
+                    [("local", 0.0), ("express", 0.0), ("wrap", 0.0)];
+                for ((_, pn), &frac) in maps.iter().zip(fracs.iter()) {
+                    for (slot, (_, total)) in pn.map.class_totals().iter().enumerate() {
+                        class_load[slot].1 += total * frac;
+                    }
+                }
+                emit_class_counters(obs, pid, w0 * 1e6, &class_load);
+                if !first_policy {
+                    continue;
+                }
+                // Windowed artifact entries only for the first policy —
+                // one drift timeline per scenario keeps the file bounded.
+                let parts: Vec<RegionMap> = maps
+                    .iter()
+                    .zip(fracs.iter())
+                    .map(|((a, pn), &frac)| RegionMap {
+                        label: a.task.clone(),
+                        map: pn.map.clone(),
+                        row0: a.region.row0,
+                        col0: a.region.col0,
+                        scale: frac,
+                    })
+                    .collect();
+                let threshold = maps
+                    .iter()
+                    .map(|(_, pn)| pn.threshold)
+                    .fold(f64::INFINITY, f64::min);
+                let e = entry_json(
+                    &format!("{}/{} w{}", run.scenario, outcome.policy.name(), k),
+                    "window",
+                    "composite",
+                    cfg.pe_rows,
+                    cfg.pe_cols,
+                    &parts,
+                    &idle,
+                    None,
+                    if threshold.is_finite() { threshold } else { 0.0 },
+                    Some((*w0, *w1)),
+                );
+                table.row(&[
+                    format!("{}/{} w{}", run.scenario, outcome.policy.name(), k),
+                    "window".to_string(),
+                    "composite".to_string(),
+                    fnum(e.get("max").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                    fnum(e.get("p50").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                    fnum(e.get("p95").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                ]);
+                entries.push(e);
+            }
+        }
+    }
+    Report {
+        name: "noc_serve",
+        table,
+        json: noc_document("serve", cfg.link_words_per_cycle, entries),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cosched::{scenario_by_name, CoschedConfig};
+    use crate::dse::{explore, DseConfig, EvalCache};
+    use crate::obs::heatmap::NOC_SCHEMA;
+    use crate::serve::{run_scenario, ServeConfig};
+    use crate::workloads::synthetic;
+
+    fn small_cfg() -> ArchConfig {
+        ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        }
+    }
+
+    fn entry_grid_max(e: &Json) -> f64 {
+        ["east", "west", "north", "south"]
+            .iter()
+            .flat_map(|d| {
+                e.get("grid")
+                    .and_then(|g| g.get(d))
+                    .and_then(|a| a.as_arr())
+                    .unwrap()
+                    .iter()
+            })
+            .filter_map(|v| v.as_f64())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn dse_noc_report_pins_scalar_and_compares_fabrics() {
+        let cfg = small_cfg();
+        let g = synthetic::pointwise_conv_segment(3);
+        let r = explore(&g, &cfg, &DseConfig::default(), &EvalCache::new(), 1);
+        let rep = dse_noc_report(&cfg, &[g], &[r]);
+        assert_eq!(rep.json.get("schema").and_then(|s| s.as_str()), Some(NOC_SCHEMA));
+        let entries = rep.json.get("entries").and_then(|e| e.as_arr()).unwrap();
+        // heuristic native + at least one retarget + tuned.
+        assert!(entries.len() >= 3, "{} entries", entries.len());
+        let topos: Vec<&str> = entries
+            .iter()
+            .filter_map(|e| e.get("topology").and_then(|t| t.as_str()))
+            .collect();
+        assert!(topos.contains(&"mesh") && topos.contains(&"amp"), "{topos:?}");
+        for e in entries {
+            // The headline invariant, via the JSON alone: grid max ==
+            // reported max == the plan scalar, all bit-exact.
+            let max = e.get("max").and_then(|v| v.as_f64()).unwrap();
+            assert_eq!(entry_grid_max(e), max);
+            assert_eq!(e.get("worst_channel_load").and_then(|v| v.as_f64()), Some(max));
+        }
+    }
+
+    #[test]
+    fn cosched_noc_report_composes_regions_bit_exactly() {
+        let cfg = small_cfg();
+        let scenario = scenario_by_name("xr-core").unwrap();
+        let r = crate::cosched::schedule(
+            &scenario,
+            &cfg,
+            &CoschedConfig::default(),
+            &EvalCache::new(),
+            2,
+        )
+        .unwrap();
+        let rep = cosched_noc_report(&cfg, &[scenario], &[r.clone()]);
+        let entries = rep.json.get("entries").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(entries.len(), r.cosched.assignments.len() + 1);
+        for (e, a) in entries.iter().zip(&r.cosched.assignments) {
+            let max = e.get("max").and_then(|v| v.as_f64()).unwrap();
+            assert_eq!(max, a.worst_channel_load, "{}", a.task);
+            assert_eq!(entry_grid_max(e), max);
+        }
+        // The composed entry's max is the fold of the region scalars.
+        let composed = entries.last().unwrap();
+        let worst = r
+            .cosched
+            .assignments
+            .iter()
+            .map(|a| a.worst_channel_load)
+            .fold(0.0, f64::max);
+        assert_eq!(composed.get("max").and_then(|v| v.as_f64()), Some(worst));
+        assert_eq!(entry_grid_max(composed), worst);
+        assert_eq!(composed.get("kind").and_then(|v| v.as_str()), Some("composed"));
+    }
+
+    #[test]
+    fn serve_noc_report_windows_and_counters() {
+        let cfg = small_cfg();
+        let scenario = scenario_by_name("xr-core").unwrap();
+        let sv = ServeConfig {
+            policies: vec![Policy::Fifo, Policy::Edf],
+            duration_s: 0.05,
+            obs: Obs::enabled(),
+            ..ServeConfig::default()
+        };
+        let run = run_scenario(&scenario, &cfg, &sv, &EvalCache::new(), 1).unwrap();
+        let rep = serve_noc_report(&cfg, &[scenario], &[run], &sv.obs);
+        assert_eq!(rep.json.get("source").and_then(|s| s.as_str()), Some("serve"));
+        let entries = rep.json.get("entries").and_then(|e| e.as_arr()).unwrap();
+        let windows: Vec<&Json> = entries
+            .iter()
+            .filter(|e| e.get("kind").and_then(|k| k.as_str()) == Some("window"))
+            .collect();
+        assert_eq!(windows.len(), NOC_WINDOWS, "first policy's drift timeline");
+        for w in &windows {
+            assert!(w.get("window").and_then(|x| x.get("t0_s")).is_some());
+            assert_eq!(entry_grid_max(w), w.get("max").and_then(|v| v.as_f64()).unwrap());
+        }
+        // Both policies emitted per-window class counters on their pids.
+        let noc_events: Vec<_> = sv
+            .obs
+            .events()
+            .into_iter()
+            .filter(|e| e.name == "noc_load")
+            .collect();
+        assert_eq!(noc_events.len(), 2 * NOC_WINDOWS);
+        let pids: std::collections::BTreeSet<u32> =
+            noc_events.iter().map(|e| e.pid).collect();
+        assert_eq!(pids.len(), 2, "one sim pid per policy");
+    }
+}

@@ -126,6 +126,62 @@ pub fn streams(
         .collect()
 }
 
+/// Parse a `--trace-file` body: one row per line, one whitespace- (or
+/// comma-) separated timestamp column per task, in seconds. Blank lines
+/// and `#` comments are skipped; `-` marks a missing cell, so columns may
+/// have different lengths. Every data row must have the same number of
+/// columns as the first.
+pub fn parse_trace_columns(text: &str) -> Result<Vec<Vec<f64>>, String> {
+    let mut columns: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line
+            .split(|c: char| c.is_whitespace() || c == ',')
+            .filter(|s| !s.is_empty())
+            .collect();
+        if columns.is_empty() {
+            columns = vec![Vec::new(); cells.len()];
+        } else if cells.len() != columns.len() {
+            return Err(format!(
+                "trace line {}: {} columns, expected {}",
+                lineno + 1,
+                cells.len(),
+                columns.len()
+            ));
+        }
+        for (col, cell) in columns.iter_mut().zip(cells) {
+            if cell == "-" {
+                continue;
+            }
+            let t: f64 = cell
+                .parse()
+                .map_err(|_| format!("trace line {}: bad timestamp {cell:?}", lineno + 1))?;
+            if !t.is_finite() {
+                return Err(format!("trace line {}: non-finite timestamp {cell:?}", lineno + 1));
+            }
+            col.push(t);
+        }
+    }
+    if columns.is_empty() {
+        return Err("trace file has no data rows".to_string());
+    }
+    Ok(columns)
+}
+
+/// One replay stream per trace column, through [`arrival_times`]'s
+/// `Trace` arm so the sort/window semantics (ascending, `[0, duration_s)`)
+/// are identical to API-driven replays.
+pub fn trace_streams(columns: &[Vec<f64>], duration_s: f64) -> Vec<Vec<f64>> {
+    let mut rng = SplitMix64::new(0); // Trace consumes no randomness.
+    columns
+        .iter()
+        .map(|ts| arrival_times(&ArrivalProcess::Trace(ts.clone()), 1.0, duration_s, &mut rng))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,6 +247,25 @@ mod tests {
         let dense = streams(&sc, &ArrivalProcess::Periodic, 4.0, 0.5, 7);
         let sparse = streams(&sc, &ArrivalProcess::Periodic, 1.0, 0.5, 7);
         assert!(dense[0].len() > sparse[0].len());
+    }
+
+    #[test]
+    fn trace_columns_parse_comments_ragged_and_commas() {
+        let text = "# device capture\n0.1 0.2\n0.3, -\n\n0.05 0.4 # tail\n";
+        let cols = parse_trace_columns(text).unwrap();
+        assert_eq!(cols, vec![vec![0.1, 0.3, 0.05], vec![0.2, 0.4]]);
+        // Streams come back sorted and windowed like any trace replay.
+        let streams = trace_streams(&cols, 0.35);
+        assert_eq!(streams, vec![vec![0.05, 0.1, 0.3], vec![0.2]]);
+    }
+
+    #[test]
+    fn trace_columns_reject_bad_shapes() {
+        assert!(parse_trace_columns("").is_err(), "no data rows");
+        assert!(parse_trace_columns("# only comments\n").is_err());
+        assert!(parse_trace_columns("0.1 0.2\n0.3\n").is_err(), "ragged row");
+        assert!(parse_trace_columns("0.1 oops\n").is_err(), "bad number");
+        assert!(parse_trace_columns("inf\n").is_err(), "non-finite");
     }
 
     #[test]

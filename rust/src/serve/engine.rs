@@ -1024,8 +1024,22 @@ pub fn run_scenario(
         },
         ..SimOptions::default()
     };
-    let arrivals =
-        super::arrivals::streams(scenario, &sv.arrivals, sv.rate_mult, sv.duration_s, sv.seed);
+    let arrivals = match &sv.trace {
+        Some(columns) => {
+            if columns.len() != scenario.tasks.len() {
+                return Err(format!(
+                    "trace file has {} columns but scenario `{}` has {} tasks",
+                    columns.len(),
+                    scenario.name,
+                    scenario.tasks.len()
+                ));
+            }
+            super::arrivals::trace_streams(columns, sv.duration_s)
+        }
+        None => {
+            super::arrivals::streams(scenario, &sv.arrivals, sv.rate_mult, sv.duration_s, sv.seed)
+        }
+    };
     let outcomes: Vec<ServeOutcome> = sv
         .policies
         .iter()

@@ -113,6 +113,62 @@ impl ServeOutcome {
     }
 }
 
+/// Per-region busy fractions in `windows` equal time windows over
+/// `[0, span_s]`, reconstructed from an outcome's `Start`/`Complete`
+/// trace events (a region is busy from a request's service start to its
+/// completion). Returns `(t0_s, t1_s, fraction per region)` per window —
+/// the time axis of serve's NoC heatmap sampling (`report::noc` scales
+/// each region's link-load map by its window fraction, so hotspot drift
+/// under load shows up window by window). Empty when the outcome carries
+/// no trace or the span is degenerate.
+pub fn busy_windows(
+    outcome: &ServeOutcome,
+    num_regions: usize,
+    windows: usize,
+) -> Vec<(f64, f64, Vec<f64>)> {
+    if outcome.trace.is_empty() || !(outcome.span_s > 0.0) || windows == 0 {
+        return Vec::new();
+    }
+    // Service intervals per region, from matched Start/Complete pairs.
+    let mut open: std::collections::BTreeMap<(usize, u64), (usize, f64)> =
+        std::collections::BTreeMap::new();
+    let mut intervals: Vec<Vec<(f64, f64)>> = vec![Vec::new(); num_regions];
+    for ev in &outcome.trace {
+        match ev.kind {
+            super::engine::TraceKind::Start { region } => {
+                open.insert((ev.task, ev.id), (region, ev.t_s));
+            }
+            super::engine::TraceKind::Complete { .. } => {
+                if let Some((region, t0)) = open.remove(&(ev.task, ev.id)) {
+                    if region < num_regions && ev.t_s > t0 {
+                        intervals[region].push((t0, ev.t_s));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let width = outcome.span_s / windows as f64;
+    (0..windows)
+        .map(|k| {
+            let (w0, w1) = (k as f64 * width, (k + 1) as f64 * width);
+            let fracs = intervals
+                .iter()
+                .map(|iv| {
+                    let busy: f64 = iv
+                        .iter()
+                        .map(|&(a, b)| (b.min(w1) - a.max(w0)).max(0.0))
+                        .sum();
+                    // A region serves one request at a time, but guard the
+                    // ratio anyway so a malformed trace can't exceed 1.
+                    (busy / width).min(1.0)
+                })
+                .collect();
+            (w0, w1, fracs)
+        })
+        .collect()
+}
+
 /// Upper bracket of the rate sweep: beyond 1024× the scenario's native
 /// rates the boundary is reported as "at least this".
 pub const SWEEP_MAX_MULT: f64 = 1024.0;
@@ -276,5 +332,28 @@ mod tests {
     fn pct_or_zero_guards_empty() {
         assert_eq!(pct_or_zero(&[], 99.0), 0.0);
         assert_eq!(pct_or_zero(&[5.0, 1.0, 3.0], 50.0), 3.0);
+    }
+
+    #[test]
+    fn busy_windows_integrate_service_intervals() {
+        use super::super::engine::{TraceEvent, TraceKind};
+        let mut o = outcome(vec![tm(2, 0)]);
+        // Region 0 busy over [0.0, 0.25] and [0.5, 0.75]; region 1 idle.
+        o.trace = vec![
+            TraceEvent { t_s: 0.0, task: 0, id: 1, kind: TraceKind::Arrive },
+            TraceEvent { t_s: 0.0, task: 0, id: 1, kind: TraceKind::Start { region: 0 } },
+            TraceEvent { t_s: 0.25, task: 0, id: 1, kind: TraceKind::Complete { region: 0 } },
+            TraceEvent { t_s: 0.5, task: 0, id: 2, kind: TraceKind::Start { region: 0 } },
+            TraceEvent { t_s: 0.75, task: 0, id: 2, kind: TraceKind::Complete { region: 0 } },
+        ];
+        let w = busy_windows(&o, 2, 2);
+        assert_eq!(w.len(), 2);
+        assert_eq!((w[0].0, w[0].1), (0.0, 0.5));
+        assert!((w[0].2[0] - 0.5).abs() < 1e-12, "{:?}", w[0].2);
+        assert!((w[1].2[0] - 0.5).abs() < 1e-12);
+        assert_eq!(w[0].2[1], 0.0, "idle region stays zero");
+        assert!(w.iter().all(|(_, _, f)| f.iter().all(|&x| (0.0..=1.0).contains(&x))));
+        // No trace → no windows.
+        assert!(busy_windows(&outcome(vec![tm(1, 0)]), 1, 4).is_empty());
     }
 }

@@ -34,7 +34,10 @@ mod metrics;
 
 use crate::cosched::PartitionKind;
 
-pub use arrivals::{arrival_times, streams, ArrivalProcess, DEFAULT_JITTER_FRAC};
+pub use arrivals::{
+    arrival_times, parse_trace_columns, streams, trace_streams, ArrivalProcess,
+    DEFAULT_JITTER_FRAC,
+};
 pub use dispatch::{select_next, Policy, Request};
 pub use engine::{
     plan_scenario, run_scenario, simulate, simulate_traced, simulate_with_scratch, ServePlan,
@@ -45,8 +48,8 @@ pub use interference::{
     BandwidthModel,
 };
 pub use metrics::{
-    pct_or_zero, sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics, SWEEP_MAX_MULT,
-    SWEEP_MIN_MULT,
+    busy_windows, pct_or_zero, sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics,
+    SWEEP_MAX_MULT, SWEEP_MIN_MULT,
 };
 
 /// Knobs of one serving run. CLI flags map 1:1 onto these (see
@@ -83,6 +86,10 @@ pub struct ServeConfig {
     /// a bounded ring of recent sim events frozen at the first deadline
     /// miss, dumped with the attribution table. Off by default.
     pub flight: bool,
+    /// Captured device trace (`--trace-file FILE`): one timestamp column
+    /// per task, replacing the synthetic arrival process. `None` (the
+    /// default) generates arrivals from `arrivals`/`rate_mult`/`seed`.
+    pub trace: Option<Vec<Vec<f64>>>,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +106,7 @@ impl Default for ServeConfig {
             seed: 42,
             obs: crate::obs::Obs::disabled(),
             flight: false,
+            trace: None,
         }
     }
 }
@@ -135,6 +143,25 @@ impl ServeConfig {
         let bandwidth = BandwidthModel::from_name(bandwidth_name).ok_or_else(|| {
             format!("unknown bandwidth model `{bandwidth_name}` (known: dynamic, static)")
         })?;
+        let trace = match args.get("trace-file") {
+            Some(path) => {
+                // A captured trace carries its own timing; a synthetic
+                // process or rate scaling alongside it would silently win
+                // or silently no-op, so both combinations are rejected.
+                if args.get("arrivals").is_some() {
+                    return Err("`--trace-file` replaces `--arrivals`; pass only one".into());
+                }
+                if args.get("rate-mult").is_some() {
+                    return Err(
+                        "`--rate-mult` does not rescale a `--trace-file` replay; drop it".into(),
+                    );
+                }
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| format!("cannot read trace file `{path}`: {e}"))?;
+                Some(arrivals::parse_trace_columns(&text).map_err(|e| format!("`{path}`: {e}"))?)
+            }
+            None => None,
+        };
         Ok(ServeConfig {
             policies,
             partition,
@@ -147,6 +174,7 @@ impl ServeConfig {
             seed,
             obs: crate::obs::Obs::from_cli(args),
             flight: args.get("flight-out").is_some(),
+            trace,
         })
     }
 }
@@ -189,12 +217,16 @@ fn parse_policies(spec: &str) -> Result<Vec<Policy>, String> {
 /// arms the flight recorder and writes its first-deadline-miss (or
 /// end-of-run) snapshot; neither implies `--obs` — attribution and the
 /// flight ring run independently of the trace handle
-/// (docs/OBSERVABILITY.md).
+/// (docs/OBSERVABILITY.md). `--trace-file FILE` replays a captured device
+/// trace (one timestamp column per task) instead of a synthetic arrival
+/// process, and `--noc-out FILE` writes the `pipeorgan-noc-v1` link-load
+/// heatmap artifact (docs/OBSERVABILITY.md §NoC telemetry).
 pub const SERVE_FLAGS: &[(&str, bool)] = &[
     ("scenario", true),
     ("partition", true),
     ("policy", true),
     ("arrivals", true),
+    ("trace-file", true),
     ("duration-s", true),
     ("rate-mult", true),
     ("borrow", false),
@@ -206,6 +238,7 @@ pub const SERVE_FLAGS: &[(&str, bool)] = &[
     ("trace-out", true),
     ("attr-out", true),
     ("flight-out", true),
+    ("noc-out", true),
 ];
 
 #[cfg(test)]
@@ -297,6 +330,20 @@ mod tests {
         // --attr-out parses but needs no config bit: attribution records
         // are on by default and the CLI only picks where to write them.
         assert!(parse_sv(&["serve", "--attr-out", "a.json"]).is_ok());
+    }
+
+    #[test]
+    fn trace_file_ingests_columns_and_excludes_synthetic_knobs() {
+        let path = std::env::temp_dir().join("pipeorgan_trace_file_test.txt");
+        std::fs::write(&path, "0.0 0.01\n0.5 -\n").unwrap();
+        let path = path.to_str().unwrap().to_string();
+        let sv = parse_sv(&["serve", "--trace-file", &path]).unwrap();
+        assert_eq!(sv.trace, Some(vec![vec![0.0, 0.5], vec![0.01]]));
+        // A trace replaces the synthetic process; mixing the knobs errors.
+        assert!(parse_sv(&["serve", "--trace-file", &path, "--arrivals", "poisson"]).is_err());
+        assert!(parse_sv(&["serve", "--trace-file", &path, "--rate-mult", "2"]).is_err());
+        assert!(parse_sv(&["serve", "--trace-file", "/nonexistent/t.txt"]).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

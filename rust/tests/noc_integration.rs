@@ -1,0 +1,172 @@
+//! Integration tests for the link-level NoC telemetry layer: the loadmap
+//! max equals the scalar worst-channel-load bit-exactly on every zoo
+//! workload × topology kind and on every canned cosched scenario, and the
+//! emitted `pipeorgan-noc-v1` artifacts satisfy the same structural
+//! checks `tools/trace_check.py` enforces.
+
+use pipeorgan::config::{ArchConfig, TopologyKind};
+use pipeorgan::cosched::{canned_scenarios, region_config, CoschedConfig};
+use pipeorgan::cost::{evaluate, plan_loadmap, segment_loadmap, Mapper};
+use pipeorgan::dse::EvalCache;
+use pipeorgan::mapper::PipeOrgan;
+use pipeorgan::noc::Topology;
+use pipeorgan::report;
+use pipeorgan::util::json::Json;
+use pipeorgan::workloads;
+
+const ALL_KINDS: [TopologyKind; 4] = [
+    TopologyKind::Mesh,
+    TopologyKind::Amp,
+    TopologyKind::Torus,
+    TopologyKind::FlattenedButterfly,
+];
+
+/// Every zoo workload, every topology kind: the merged plan loadmap's max
+/// is exactly the `f64::max` fold of the per-segment scalars the cost
+/// model reports — the same equality `report::noc` pins into artifacts.
+#[test]
+fn plan_loadmap_max_matches_scalar_on_every_zoo_workload_and_topology() {
+    for kind in ALL_KINDS {
+        let cfg = ArchConfig {
+            topology: kind,
+            ..ArchConfig::default()
+        };
+        for g in workloads::all_tasks() {
+            let plan = PipeOrgan::default().plan(&g, &cfg);
+            let cost = evaluate(&g, &plan, &cfg);
+            let scalar = cost
+                .per_segment
+                .iter()
+                .map(|s| s.worst_channel_load_per_interval)
+                .fold(0.0, f64::max);
+            let map = plan_loadmap(&g, &plan, &cfg);
+            assert_eq!(map.max(), scalar, "{} on {}", g.name, kind.name());
+            assert_eq!(
+                (map.topology().rows, map.topology().cols),
+                (cfg.pe_rows, cfg.pe_cols)
+            );
+        }
+    }
+}
+
+/// Every canned cosched scenario: each assignment's reported
+/// `worst_channel_load` equals the max of its region-local loadmap,
+/// re-derived segment by segment from the retained plan.
+#[test]
+fn cosched_assignment_scalars_match_region_loadmaps() {
+    let cfg = ArchConfig {
+        pe_rows: 16,
+        pe_cols: 16,
+        ..ArchConfig::default()
+    };
+    let cache = EvalCache::new();
+    for sc in canned_scenarios() {
+        let r = pipeorgan::cosched::schedule(&sc, &cfg, &CoschedConfig::default(), &cache, 2)
+            .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+        for a in &r.cosched.assignments {
+            let spec = sc.tasks.iter().find(|t| t.name() == a.task).unwrap();
+            let mut rcfg = region_config(&cfg, &a.region);
+            rcfg.topology = a.topology;
+            let topo = Topology::cached(a.plan.topology, rcfg.pe_rows, rcfg.pe_cols);
+            let mut max = 0.0f64;
+            for seg in &a.plan.segments {
+                max = max.max(segment_loadmap(&spec.graph, seg, &rcfg, &topo).max());
+            }
+            assert_eq!(
+                max, a.worst_channel_load,
+                "{}/{} on {}",
+                sc.name,
+                a.task,
+                a.topology.name()
+            );
+        }
+    }
+}
+
+/// Structural checks mirroring `tools/trace_check.py check_noc_report`:
+/// schema tag, four direction grids of exactly `rows × cols` cells,
+/// finite non-negative loads, grid max == entry max == scalar (when
+/// present), ordered distribution stats, and regions covering the grid.
+fn assert_noc_document(doc: &Json, source: &str) {
+    assert_eq!(
+        doc.get("schema").and_then(|s| s.as_str()),
+        Some("pipeorgan-noc-v1")
+    );
+    assert_eq!(doc.get("source").and_then(|s| s.as_str()), Some(source));
+    assert!(doc
+        .get("link_words_per_cycle")
+        .and_then(|v| v.as_f64())
+        .is_some());
+    let entries = doc.get("entries").and_then(|e| e.as_arr()).unwrap();
+    assert!(!entries.is_empty(), "{source}: no entries");
+    for e in entries {
+        let label = e.get("label").and_then(|l| l.as_str()).unwrap();
+        let rows = e.get("rows").and_then(|v| v.as_f64()).unwrap() as usize;
+        let cols = e.get("cols").and_then(|v| v.as_f64()).unwrap() as usize;
+        let mut grid_max = 0.0f64;
+        for dir in ["east", "west", "north", "south"] {
+            let cells = e
+                .get("grid")
+                .and_then(|g| g.get(dir))
+                .and_then(|a| a.as_arr())
+                .unwrap_or_else(|| panic!("{label}: missing {dir} grid"));
+            assert_eq!(cells.len(), rows * cols, "{label}: {dir} grid shape");
+            for c in cells {
+                let w = c.as_f64().unwrap();
+                assert!(w.is_finite() && w >= 0.0, "{label}: bad cell {w}");
+                grid_max = grid_max.max(w);
+            }
+        }
+        let max = e.get("max").and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(grid_max, max, "{label}: grid max vs reported max");
+        if let Some(scalar) = e.get("worst_channel_load").and_then(|v| v.as_f64()) {
+            assert_eq!(max, scalar, "{label}: map max vs cost scalar");
+        }
+        let p50 = e.get("p50").and_then(|v| v.as_f64()).unwrap();
+        let p95 = e.get("p95").and_then(|v| v.as_f64()).unwrap();
+        assert!(p50 <= p95 && p95 <= max, "{label}: unordered stats");
+        assert!(e.get("verify").and_then(|v| v.get("congestion_free")).is_some());
+        for region in e.get("regions").and_then(|r| r.as_arr()).unwrap() {
+            let r0 = region.get("row0").and_then(|v| v.as_f64()).unwrap() as usize;
+            let c0 = region.get("col0").and_then(|v| v.as_f64()).unwrap() as usize;
+            let rr = region.get("rows").and_then(|v| v.as_f64()).unwrap() as usize;
+            let rc = region.get("cols").and_then(|v| v.as_f64()).unwrap() as usize;
+            assert!(r0 + rr <= rows && c0 + rc <= cols, "{label}: region out of grid");
+        }
+    }
+}
+
+/// The three emitters produce schema-valid `pipeorgan-noc-v1` documents
+/// end to end (the same JSON `--noc-out` writes), on an XR scenario.
+#[test]
+fn noc_artifacts_from_all_three_subcommands_validate() {
+    let cfg = ArchConfig {
+        pe_rows: 16,
+        pe_cols: 16,
+        ..ArchConfig::default()
+    };
+    let cache = EvalCache::new();
+
+    let g = pipeorgan::workloads::synthetic::pointwise_conv_segment(3);
+    let dse = pipeorgan::dse::explore(&g, &cfg, &Default::default(), &cache, 1);
+    let rep = report::dse_noc_report(&cfg, &[g], &[dse]);
+    assert_noc_document(&rep.json, "dse");
+
+    let sc = pipeorgan::cosched::scenario_by_name("xr-core").unwrap();
+    let cos = pipeorgan::cosched::schedule(&sc, &cfg, &CoschedConfig::default(), &cache, 2).unwrap();
+    let rep = report::cosched_noc_report(&cfg, std::slice::from_ref(&sc), &[cos]);
+    assert_noc_document(&rep.json, "cosched");
+
+    let sv = pipeorgan::serve::ServeConfig {
+        duration_s: 0.05,
+        ..Default::default()
+    };
+    let run = pipeorgan::serve::run_scenario(&sc, &cfg, &sv, &cache, 1).unwrap();
+    let rep = report::serve_noc_report(&cfg, &[sc], &[run], &sv.obs);
+    assert_noc_document(&rep.json, "serve");
+
+    // The artifact round-trips through the JSON text path `--noc-out`
+    // uses (`to_pretty` → parse).
+    let reparsed = Json::parse(&rep.json.to_pretty()).unwrap();
+    assert_noc_document(&reparsed, "serve");
+}

@@ -196,6 +196,96 @@ fn channel_load_invariants_on_random_traffic() {
     });
 }
 
+/// The NoC telemetry invariant on *random* traffic: a [`LinkLoadMap`]
+/// built from the same analysis as the scalar cost metric has `max()`
+/// equal to `worst_channel_load / interval` bit-exactly (division by a
+/// positive constant is monotone, so max commutes with the scaling), the
+/// summed per-link load conserves total word-hops, the wire-weighted sum
+/// agrees with the routed wire length, and the verifier's distribution
+/// stats are ordered. All four topology kinds, random shapes/intervals.
+#[test]
+fn link_loadmap_max_matches_scalar_bit_exactly_on_random_traffic() {
+    use pipeorgan::noc::{percentile_of, verify_loads, LinkLoadMap, Topology};
+    use pipeorgan::sim::analyze;
+    use pipeorgan::traffic::{Flow, FlowClass};
+    proptest_lite::run(100, |rng| {
+        let kind = *rng.choose(&[
+            TopologyKind::Mesh,
+            TopologyKind::Amp,
+            TopologyKind::Torus,
+            TopologyKind::FlattenedButterfly,
+        ]);
+        let rows = rng.gen_usize(2, 17);
+        let cols = rng.gen_usize(2, 17);
+        let topo = Topology::cached(kind, rows, cols);
+        let mut flows = Vec::new();
+        for _ in 0..rng.gen_usize(1, 64) {
+            let src = rng.gen_usize(0, rows * cols) as u32;
+            let dst = rng.gen_usize(0, rows * cols) as u32;
+            if src == dst {
+                continue;
+            }
+            flows.push(Flow {
+                src,
+                dst,
+                words_per_interval: (rng.gen_range(100) + 1) as f64,
+                class: FlowClass::Pipeline {
+                    from_stage: 0,
+                    to_stage: 1,
+                },
+            });
+        }
+        let a = analyze(&topo, &flows);
+        let interval = (rng.gen_range(1000) + 1) as f64;
+        let map = LinkLoadMap::from_analysis(topo.clone(), &a, interval);
+
+        // The headline invariant, as an exact `==`, not a tolerance.
+        prop_assert!(
+            map.max() == a.worst_channel_load / interval,
+            "{kind:?} {rows}x{cols}: map max {} != scalar {}",
+            map.max(),
+            a.worst_channel_load / interval
+        );
+        // Conservation: summed per-link load is all flit-hops (and the
+        // wire-weighted sum is the routed wire length), up to the float
+        // association of re-summing scaled terms.
+        let hops = map.sum() * interval;
+        prop_assert!(
+            (hops - a.total_word_hops).abs() <= 1e-9 * a.total_word_hops.max(1.0),
+            "{kind:?}: conservation {hops} vs {}",
+            a.total_word_hops
+        );
+        let wire = map.wire_weighted_sum() * interval;
+        prop_assert!(
+            (wire - a.total_word_wire).abs() <= 1e-9 * a.total_word_wire.max(1.0),
+            "{kind:?}: wire {wire} vs {}",
+            a.total_word_wire
+        );
+        // Class totals partition every link exactly once.
+        let class_sum: f64 = map.class_totals().iter().map(|(_, w)| w).sum();
+        prop_assert!(
+            (class_sum - map.sum()).abs() <= 1e-9 * map.sum().max(1.0),
+            "{kind:?}: class partition {class_sum} vs {}",
+            map.sum()
+        );
+        // The verifier's distribution is ordered, and saturation flips
+        // exactly as the threshold crosses the max (strict comparison).
+        let v = verify_loads(map.loads(), map.max());
+        prop_assert!(v.p50 <= v.p95 && v.p95 <= v.max, "{kind:?}: unordered stats");
+        prop_assert!(v.saturated == 0 && v.congestion_free);
+        prop_assert!(percentile_of(map.loads(), 100.0) == map.max());
+        if map.max() > 0.0 {
+            let tight = verify_loads(map.loads(), map.max() * 0.5);
+            prop_assert!(tight.saturated >= 1 && !tight.congestion_free);
+        }
+        // Element-wise max-merge of the map with itself is a fixpoint.
+        let mut merged = map.clone();
+        merged.merge_max(&map).map_err(|e| e.to_string())?;
+        prop_assert!(merged.max() == map.max() && merged.sum() == map.sum());
+        Ok(())
+    });
+}
+
 /// Build a random feasible guillotine tree assigning tasks
 /// `task0..task0 + count` to a `rows × cols` rectangle: random axis/cut/
 /// split first, exhaustive fallback second (one always exists whenever

@@ -14,6 +14,12 @@ Produces PNG counterparts of the paper's evaluation figures:
   attr_breakdown.png     — stacked queue/compute/DRAM latency breakdown per
                            (scenario, policy, task), from the `attr` blocks
                            in reports/serve.json (see docs/OBSERVABILITY.md)
+  noc_heatmap_*.png      — per-link congestion heatmaps (one panel per wire
+                           direction, idle rectangles hatched) from any
+                           `pipeorgan-noc-v1` document in the reports dir
+                           (reports/noc_{dse,cosched,serve}.json or a
+                           --noc-out file; see docs/OBSERVABILITY.md §NoC
+                           telemetry)
 """
 
 import json
@@ -320,6 +326,70 @@ def plot_attr(reports, out):
     plt.close(fig)
 
 
+def plot_noc(reports, out):
+    """Congestion heatmaps from `pipeorgan-noc-v1` documents: for every
+    noc_*.json in the reports dir, the composed/plan entries render as a
+    2x2 grid of per-direction link-load heatmaps with idle rectangles
+    hatched out. Degrades gracefully: missing files, old reports without
+    the schema, or entries without grids all skip silently.
+    """
+    docs = []
+    try:
+        names = sorted(os.listdir(reports))
+    except OSError:
+        return
+    for fname in names:
+        if not (fname.startswith("noc") and fname.endswith(".json")):
+            continue
+        data = load(reports, fname[: -len(".json")])
+        if isinstance(data, dict) and data.get("schema") == "pipeorgan-noc-v1":
+            docs.append((fname[: -len(".json")], data))
+    for stem, doc in docs:
+        # One figure per non-window entry (plan/region/composed maps);
+        # window entries would multiply files without adding structure.
+        for e in doc.get("entries") or []:
+            if not isinstance(e, dict) or e.get("kind") == "window":
+                continue
+            rows, cols, grid = e.get("rows"), e.get("cols"), e.get("grid")
+            if not (isinstance(rows, int) and isinstance(cols, int) and isinstance(grid, dict)):
+                continue
+            dirs = ("east", "west", "north", "south")
+            if any(
+                not isinstance(grid.get(d), list) or len(grid[d]) != rows * cols for d in dirs
+            ):
+                continue
+            vmax = max(e.get("max", 0.0), 1e-12)
+            fig, axes = plt.subplots(2, 2, figsize=(8, 7), squeeze=False)
+            for ax, d in zip(axes.flat, dirs):
+                img = np.array(grid[d], dtype=float).reshape(rows, cols)
+                im = ax.imshow(img, origin="upper", cmap="magma", vmin=0.0, vmax=vmax)
+                for region in e.get("regions") or []:
+                    if not region.get("idle"):
+                        continue
+                    ax.add_patch(
+                        plt.Rectangle(
+                            (region["col0"] - 0.5, region["row0"] - 0.5),
+                            region["cols"],
+                            region["rows"],
+                            fill=False,
+                            hatch="//",
+                            edgecolor="gray",
+                            lw=0.5,
+                        )
+                    )
+                ax.set_title(d, fontsize=8)
+                ax.set_xticks([])
+                ax.set_yticks([])
+            fig.colorbar(im, ax=axes.ravel().tolist(), label="words/cycle per link")
+            label = e.get("label", "entry")
+            verdict = (e.get("verify") or {}).get("congestion_free")
+            suffix = {True: " — congestion-free", False: " — SATURATED"}.get(verdict, "")
+            fig.suptitle(f"NoC load — {label} ({e.get('topology', '?')}){suffix}", fontsize=10)
+            safe = "".join(c if c.isalnum() or c in "-_" else "_" for c in label)
+            fig.savefig(os.path.join(out, f"noc_heatmap_{stem}_{safe}.png"), dpi=150)
+            plt.close(fig)
+
+
 def main():
     reports = sys.argv[1] if len(sys.argv) > 1 else "reports"
     out = sys.argv[2] if len(sys.argv) > 2 else reports
@@ -333,6 +403,7 @@ def main():
         plot_cosched,
         plot_obs,
         plot_attr,
+        plot_noc,
     ):
         fn(reports, out)
         print(f"{fn.__name__} done")

@@ -31,6 +31,17 @@ Dispatches on document shape:
     span in order, burn-rate samples are time-ordered, and the worst-
     request rows conserve bit-exactly as above.
 
+  - NoC link-load reports (`"schema": "pipeorgan-noc-v1"` — `--noc-out`
+    on dse/cosched/serve; see docs/OBSERVABILITY.md §NoC telemetry):
+    every entry carries four direction grids of exactly rows × cols
+    finite non-negative cells; the maximum over all four grids is
+    recomputed in Python and must equal the entry's `max` *bit-exactly*
+    (and equal `worst_channel_load` when the entry carries the cost
+    scalar — the invariant the Rust tests pin); the p50/p95/max
+    distribution is ordered; the verify block is consistent (saturated
+    links iff not congestion-free against the threshold); and the listed
+    regions (idle rectangles included) stay inside the grid.
+
 Exit status 0 iff every file passes; failures are listed on stderr.
 """
 
@@ -40,6 +51,8 @@ import sys
 REQUIRED_FIELDS = ("ph", "ts", "pid", "tid")
 REQUIRED_COUNTERS = ("queue_depth", "dram_bw", "region_util", "worst_channel_load")
 ATTR_SCHEMA = "pipeorgan-attr-v1"
+NOC_SCHEMA = "pipeorgan-noc-v1"
+NOC_DIRECTIONS = ("east", "west", "north", "south")
 FLIGHT_KINDS = ("deadline_miss", "end_of_run")
 ATTR_BLOCK_KEYS = ("totals", "tasks", "regions", "windows", "burn", "worst")
 
@@ -184,12 +197,100 @@ def check_attr_report(doc):
     return errors
 
 
+def check_noc_report(doc):
+    errors = []
+    if doc.get("source") not in ("dse", "cosched", "serve"):
+        errors.append(f"noc report: unknown source {doc.get('source')!r}")
+    if not isinstance(doc.get("link_words_per_cycle"), (int, float)):
+        errors.append("noc report: link_words_per_cycle must be numeric")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        return errors + ["noc report: entries must be a non-empty list"]
+    for e in entries:
+        label = e.get("label", "?")
+        rows, cols = e.get("rows"), e.get("cols")
+        if not (isinstance(rows, int) and isinstance(cols, int) and rows > 0 and cols > 0):
+            errors.append(f"{label}: rows/cols must be positive integers")
+            continue
+        grid = e.get("grid")
+        if not isinstance(grid, dict):
+            errors.append(f"{label}: missing grid block")
+            continue
+        grid_max = 0.0
+        for d in NOC_DIRECTIONS:
+            cells = grid.get(d)
+            if not isinstance(cells, list) or len(cells) != rows * cols:
+                errors.append(f"{label}: {d} grid must have exactly {rows * cols} cells")
+                continue
+            bad = [w for w in cells if not isinstance(w, (int, float)) or w < 0]
+            if bad:
+                errors.append(f"{label}: {d} grid has non-numeric/negative cells")
+                continue
+            grid_max = max(grid_max, max(cells, default=0.0))
+        # The tentpole invariant, recomputed independently: the grids'
+        # max must equal the reported max — and the cost-model scalar
+        # when present — with no tolerance (every aggregation on the
+        # Rust side is an exact f64::max fold).
+        if grid_max != e.get("max"):
+            errors.append(f"{label}: grid max {grid_max!r} != reported max {e.get('max')!r}")
+        if "worst_channel_load" in e and e["worst_channel_load"] != e.get("max"):
+            errors.append(
+                f"{label}: worst_channel_load {e['worst_channel_load']!r} "
+                f"!= map max {e.get('max')!r}"
+            )
+        p50, p95 = e.get("p50"), e.get("p95")
+        if not (
+            isinstance(p50, (int, float))
+            and isinstance(p95, (int, float))
+            and p50 <= p95 <= e.get("max", float("-inf"))
+        ):
+            errors.append(f"{label}: p50/p95/max must be numeric and ordered")
+        verify = e.get("verify")
+        links = e.get("links")
+        if not isinstance(verify, dict) or not isinstance(links, dict):
+            errors.append(f"{label}: missing verify/links blocks")
+        else:
+            saturated = links.get("saturated")
+            free = verify.get("congestion_free")
+            if not isinstance(saturated, int) or not isinstance(free, bool):
+                errors.append(f"{label}: saturated/congestion_free have wrong types")
+            elif free != (saturated == 0):
+                errors.append(
+                    f"{label}: congestion_free={free} inconsistent with "
+                    f"{saturated} saturated links"
+                )
+        for i, region in enumerate(e.get("regions") or []):
+            try:
+                inside = (
+                    region["row0"] + region["rows"] <= rows
+                    and region["col0"] + region["cols"] <= cols
+                )
+            except (KeyError, TypeError):
+                errors.append(f"{label}: region {i} missing row0/col0/rows/cols")
+                continue
+            if not inside:
+                errors.append(f"{label}: region {i} ({region.get('label')}) exceeds the grid")
+        window = e.get("window")
+        if window is not None and not (
+            isinstance(window, dict)
+            and isinstance(window.get("t0_s"), (int, float))
+            and isinstance(window.get("t1_s"), (int, float))
+            and window["t0_s"] < window["t1_s"]
+        ):
+            errors.append(f"{label}: window must carry t0_s < t1_s")
+    return errors
+
+
 def check(doc):
     if isinstance(doc.get("traceEvents"), list):
         return check_trace(doc)
     if doc.get("schema") == ATTR_SCHEMA:
         return check_attr_report(doc)
-    return ["unrecognized document: neither a trace (traceEvents) nor an attr report (schema)"]
+    if doc.get("schema") == NOC_SCHEMA:
+        return check_noc_report(doc)
+    return [
+        "unrecognized document: not a trace (traceEvents), attr report, or noc report (schema)"
+    ]
 
 
 def describe(doc):
@@ -200,6 +301,17 @@ def describe(doc):
         if isinstance(doc.get("flight"), dict):
             suffix += f", flight trigger {doc['flight'].get('kind')}"
         return f"{len(events)} events{suffix}"
+    if doc.get("schema") == NOC_SCHEMA:
+        entries = doc.get("entries") or []
+        saturated = sum(
+            (e.get("links") or {}).get("saturated", 0)
+            for e in entries
+            if isinstance(e, dict)
+        )
+        return (
+            f"noc report ({doc.get('source')}), {len(entries)} entries, "
+            f"{saturated} saturated links"
+        )
     policies = sum(len(s.get("policies") or []) for s in doc.get("scenarios") or [])
     return f"attr report, {policies} policy blocks"
 
