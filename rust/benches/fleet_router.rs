@@ -1,0 +1,82 @@
+//! §Perf microbenchmark for the fleet layer: routed event-loop throughput
+//! on the canned `xr-core` scenario across a 3-chip fleet, per router
+//! policy, under one second of shared diurnal traffic. Planning runs once
+//! through the shared evaluation cache, so the timed region is the
+//! front-door routing plus the per-chip discrete-event simulation — the
+//! fleet serving hot path. The gate-watched name is
+//! `fleet_router_jsq_xr_core` (see BENCH_baseline.json).
+
+mod common;
+
+use pipeorgan::config::ArchConfig;
+use pipeorgan::cosched::{scenario_by_name, CoschedConfig};
+use pipeorgan::dse::EvalCache;
+use pipeorgan::obs::Obs;
+use pipeorgan::serve::{
+    plan_scenario, simulate_fleet, streams, ArrivalProcess, FleetConfig, Policy, RouterPolicy,
+    ServePlan, SimOptions,
+};
+
+fn main() {
+    let cfg = ArchConfig::default();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").expect("canned scenario");
+    let chips = 3;
+    // Identical chips; replans after the first are pure cache hits.
+    let plans: Vec<ServePlan> = (0..chips)
+        .map(|_| {
+            plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 4)
+                .expect("planning succeeds")
+        })
+        .collect();
+    println!(
+        "planned xr-core x{chips}: {} evaluations, {} cache hits (last chip)",
+        plans[chips - 1].evaluations,
+        plans[chips - 1].cache_hits
+    );
+
+    let fc = FleetConfig {
+        chips,
+        routers: RouterPolicy::ALL.to_vec(),
+        ..FleetConfig::default()
+    };
+    // One second of diurnal traffic at 3x native rates (the fleet has 3x
+    // the capacity of the single-array serve bench), shared by every
+    // timed router so the comparisons are apples to apples.
+    let arrivals = streams(
+        &sc,
+        &ArrivalProcess::Diurnal { period_s: 0.0, amp: 0.8 },
+        3.0,
+        1.0,
+        7,
+    );
+    let requests: usize = arrivals.iter().map(Vec::len).sum();
+    let obs = Obs::disabled();
+
+    for router in RouterPolicy::ALL {
+        // The JSQ run carries the gate-watched stable name; the others
+        // are informational comparisons.
+        let name = if router == RouterPolicy::Jsq {
+            "fleet_router_jsq_xr_core".to_string()
+        } else {
+            format!("fleet_router_{}", router.name())
+        };
+        let s = common::bench(&name, 1, 5, || {
+            simulate_fleet(
+                &sc,
+                &plans,
+                Policy::Fifo,
+                router,
+                &fc,
+                SimOptions::default(),
+                &arrivals,
+                &obs,
+            )
+            .total_requests()
+        });
+        println!(
+            "{name}: {:.0} requests/s simulated ({requests} requests across {chips} chips)",
+            requests as f64 / (s.mean_ns / 1e9)
+        );
+    }
+}

@@ -98,6 +98,65 @@ impl Args {
     pub fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
+
+    /// Closed-set string flag: the value must be one of `variants`
+    /// (`default` is returned when the flag is absent). Rejections carry
+    /// the full variant list and, for near-misses, a did-you-mean hint —
+    /// one uniform error shape for every enum-like flag (`--partition`,
+    /// `--arrivals`, `--bandwidth`, `--router`, ...).
+    pub fn get_enum<'a>(
+        &'a self,
+        name: &str,
+        default: &'a str,
+        variants: &[&str],
+    ) -> Result<&'a str, String> {
+        let v = self.get_or(name, default);
+        if variants.contains(&v) {
+            return Ok(v);
+        }
+        let mut msg = format!("unknown {name} `{v}` (known: {})", variants.join(", "));
+        if let Some(hint) = suggest(v, variants) {
+            msg.push_str(&format!("; did you mean `{hint}`?"));
+        }
+        Err(msg)
+    }
+
+    /// Path-valued flag (output files, cache files). Today a thin typed
+    /// wrapper over [`Args::get`]; it exists so every artifact path flows
+    /// through one accessor that can later grow validation.
+    pub fn get_path(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.get(name).map(std::path::PathBuf::from)
+    }
+}
+
+/// Nearest variant within Levenshtein distance 2 (ties break to the
+/// first-listed variant), for did-you-mean errors. `None` when everything
+/// is too far away — a hint worse than no hint.
+pub fn suggest<'a>(input: &str, variants: &'a [&'a str]) -> Option<&'a str> {
+    variants
+        .iter()
+        .map(|v| (levenshtein(input, v), *v))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, v)| v)
+}
+
+/// Classic two-row edit distance; inputs here are short flag values, so
+/// the O(|a|·|b|) cost is irrelevant.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -178,5 +237,42 @@ mod tests {
         assert!(
             Args::parse(&s(&["serve", "--workers", "1.0", "--workers", "2.0"]), FLAGS).is_err()
         );
+    }
+
+    #[test]
+    fn enum_flag_accepts_variants_and_defaults() {
+        let a = Args::parse(&s(&["serve", "--out", "static"]), FLAGS).unwrap();
+        assert_eq!(a.get_enum("out", "dynamic", &["dynamic", "static"]).unwrap(), "static");
+        // Absent flag -> default, even when the default is not itself
+        // checked against the variant list (callers own their defaults).
+        assert_eq!(a.get_enum("workers", "dynamic", &["dynamic", "static"]).unwrap(), "dynamic");
+    }
+
+    #[test]
+    fn enum_flag_rejects_with_did_you_mean() {
+        let a = Args::parse(&s(&["serve", "--out", "sttic"]), FLAGS).unwrap();
+        let err = a.get_enum("out", "dynamic", &["dynamic", "static"]).unwrap_err();
+        assert!(err.contains("unknown out `sttic`"), "{err}");
+        assert!(err.contains("known: dynamic, static"), "{err}");
+        assert!(err.contains("did you mean `static`?"), "{err}");
+        // Far-off garbage gets the list but no misleading hint.
+        let a = Args::parse(&s(&["serve", "--out", "zzzzzzz"]), FLAGS).unwrap();
+        let err = a.get_enum("out", "dynamic", &["dynamic", "static"]).unwrap_err();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn suggest_picks_nearest_within_two_edits() {
+        assert_eq!(suggest("bands", &["bands", "guillotine"]), Some("bands"));
+        assert_eq!(suggest("band", &["bands", "guillotine"]), Some("bands"));
+        assert_eq!(suggest("guilotine", &["bands", "guillotine"]), Some("guillotine"));
+        assert_eq!(suggest("xyzzy", &["bands", "guillotine"]), None);
+    }
+
+    #[test]
+    fn path_flag_wraps_get() {
+        let a = Args::parse(&s(&["serve", "--out", "reports/x.json"]), FLAGS).unwrap();
+        assert_eq!(a.get_path("out"), Some(std::path::PathBuf::from("reports/x.json")));
+        assert_eq!(a.get_path("workers"), None);
     }
 }

@@ -14,6 +14,7 @@
 //! pipeorgan dse                 # E16: design-space exploration (frontier + gap)
 //! pipeorgan cosched             # E17: multi-workload co-scheduling (XR scenarios)
 //! pipeorgan serve               # E18: online serving simulation (deadline-aware)
+//! pipeorgan fleet               # E19: fleet-scale serving (router + autoscaler)
 //! pipeorgan run-segment         # E15: functional pipelined execution (PJRT)
 //! pipeorgan all                 # everything above except dse/cosched/serve/run-segment
 //! ```
@@ -69,7 +70,25 @@
 //! (replay a captured device trace: one timestamp column per task,
 //! replacing the synthetic `--arrivals`/`--rate-mult` process),
 //! `--noc-out <file>` (link-load maps per home region plus time-windowed
-//! congestion heatmaps over the replay).
+//! congestion heatmaps over the replay), `--out-dir <dir>` (ask for every
+//! standalone artifact at once as `<dir>/<name>.json`; the per-artifact
+//! flags above stay as aliases and win for their artifact — see
+//! `report::sink`).
+//!
+//! `fleet`-only flags (on top of every `serve` flag): `--chips <n>`
+//! (array instances), `--chip-dims <RxC,..>` (heterogeneous chip
+//! geometries, cycled), `--router <round-robin|jsq|deadline|affinity|all>`
+//! (front-door routing policies, comma lists allowed), `--admission
+//! <all|deadline>` (reject requests no up chip could finish in time),
+//! `--autoscale` + `--min-chips/--spinup-s/--scale-high-s/--scale-low-s/
+//! --scale-interval-s` (backlog-watermark chip scaling with a spin-up
+//! delay), `--cold-frac`/`--warm-decay-s` (cold-start weight-load model).
+//! Arrivals default to the same processes as `serve`; `--arrivals
+//! diurnal` drives the autoscaler through a day-curve. Emits the
+//! `fleet`/`fleet_chips` reports (tails, miss + rejection rates, per-chip
+//! utilization spread, cost as PE-seconds per million completed) and
+//! reuses the serve noc/attr/flight emitters per chip. See
+//! docs/SERVING.md.
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -83,11 +102,11 @@ use pipeorgan::dse::{
     context_fingerprint, CacheLoadOutcome, DseConfig, EvalCache, CACHE_DEFAULT_CAP, DSE_FLAGS,
 };
 use pipeorgan::obs::Obs;
-use pipeorgan::report;
-use pipeorgan::serve::{self, ServeConfig, SERVE_FLAGS};
+use pipeorgan::report::{self, ArtifactSink};
+use pipeorgan::serve::{self, FleetConfig, ServeConfig, FLEET_FLAGS, SERVE_FLAGS};
 use pipeorgan::workloads;
 
-const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N --obs --trace-out FILE --noc-out FILE] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N --obs --trace-out FILE --noc-out FILE] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson --trace-file FILE --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N --obs --trace-out FILE --noc-out FILE --attr-out FILE --flight-out FILE]\ndocs: rust/DESIGN.md (architecture), docs/PERFORMANCE.md (bench gate, hot-path design, reading --obs output), docs/OBSERVABILITY.md (traces, latency attribution, NoC telemetry, flight recorder)";
+const USAGE: &str = "usage: pipeorgan <characterize|traffic|e2e|congestion|depth|granularity|validate-dataflow|ablate|dse|cosched|serve|fleet|run-segment|all> [--out DIR] [--workers N] [--config FILE] [--artifacts DIR] [--seed N] [e2e: --tuned --cache-file FILE --cache-cap N] [dse: --workload NAME|all --strategy beam|exhaustive --beam N --depth-cap N --rungs N --budget N --topologies LIST --channel-load-objective --cache-file FILE --cache-cap N --obs --trace-out FILE --noc-out FILE] [cosched: --scenario NAME|all --partition bands|guillotine --quantum N --tuned --budget N --cache-file FILE --cache-cap N --obs --trace-out FILE --noc-out FILE] [serve: --scenario NAME|all --partition bands|guillotine --policy fifo|edf|rm|all --arrivals periodic|jittered|poisson|diurnal --trace-file FILE --duration-s S --rate-mult X --borrow --bandwidth dynamic|static --sweep --cache-file FILE --cache-cap N --obs --trace-out FILE --noc-out FILE --attr-out FILE --flight-out FILE --out-dir DIR] [fleet: every serve flag plus --chips N --chip-dims RxC,.. --router round-robin|jsq|deadline|affinity|all --admission all|deadline --autoscale --min-chips N --spinup-s S --scale-high-s S --scale-low-s S --scale-interval-s S --cold-frac X --warm-decay-s S]\ndocs: rust/DESIGN.md (architecture), docs/SERVING.md (fleet operator guide), docs/PERFORMANCE.md (bench gate, hot-path design, reading --obs output), docs/OBSERVABILITY.md (traces, latency attribution, NoC telemetry, flight recorder)";
 
 const FLAGS: &[(&str, bool)] = &[
     ("out", true),
@@ -110,6 +129,10 @@ fn known_flags(subcommand: &str) -> Vec<(&'static str, bool)> {
     }
     if subcommand == "serve" {
         flags.extend_from_slice(SERVE_FLAGS);
+    }
+    if subcommand == "fleet" {
+        flags.extend_from_slice(SERVE_FLAGS);
+        flags.extend_from_slice(FLEET_FLAGS);
     }
     if subcommand == "e2e" {
         flags.push(("tuned", false));
@@ -232,13 +255,14 @@ fn with_obs(mut reports: Vec<report::Report>, obs: &Obs) -> Vec<report::Report> 
     reports
 }
 
-/// The post-emission `--obs` epilogue shared by `dse`, `cosched`, and
-/// `serve`: write the Perfetto trace when `--trace-out` was given and
-/// flush scoped `time.*` timings to the CI bench recorder
-/// (`PIPEORGAN_BENCH_JSON`).
-fn finish_obs(obs: &Obs, args: &Args) -> anyhow::Result<()> {
-    if let Some(path) = args.get("trace-out") {
-        obs.write_trace(path)
+/// The post-emission `--obs` epilogue shared by `dse`, `cosched`,
+/// `serve`, and `fleet`: write the Perfetto trace when the sink wants the
+/// `trace` artifact (`--trace-out` or `--out-dir`) and flush scoped
+/// `time.*` timings to the CI bench recorder (`PIPEORGAN_BENCH_JSON`).
+fn finish_obs(obs: &Obs, sink: &ArtifactSink) -> anyhow::Result<()> {
+    if let Some(path) = sink.path_for("trace") {
+        let path = path.display().to_string();
+        obs.write_trace(&path)
             .map_err(|e| anyhow::anyhow!("writing trace to {path}: {e}"))?;
         let dropped = obs.dropped_events();
         let suffix = if dropped > 0 {
@@ -260,16 +284,52 @@ fn finish_obs(obs: &Obs, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Write a standalone JSON document, creating parent directories as
-/// needed (the `--attr-out` / `--flight-out` sink).
-fn write_json_file(path: &str, json: &pipeorgan::util::json::Json) -> anyhow::Result<()> {
-    if let Some(dir) = std::path::Path::new(path).parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
+/// Write a named artifact through the sink when anything asked for it
+/// (its alias flag or `--out-dir`), logging where it went. Returns true
+/// when a file was written.
+fn sink_write(
+    sink: &ArtifactSink,
+    name: &str,
+    what: &str,
+    json: &pipeorgan::util::json::Json,
+) -> anyhow::Result<bool> {
+    match sink.write(name, json).map_err(|e| anyhow::anyhow!(e))? {
+        Some(p) => {
+            println!("{name}: wrote {what} to {}", p.display());
+            Ok(true)
         }
+        None => Ok(false),
     }
-    std::fs::write(path, json.to_pretty())
-        .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))
+}
+
+/// The `flight` artifact shared by `serve` and `fleet`: prefer the
+/// snapshot frozen at a deadline miss (the incident being diagnosed);
+/// otherwise the first end-of-run tail (nothing missed anywhere).
+fn write_flight(sink: &ArtifactSink, runs: &[serve::ServeRun]) -> anyhow::Result<()> {
+    if !sink.wants("flight") {
+        return Ok(());
+    }
+    let snaps: Vec<_> = runs
+        .iter()
+        .flat_map(|r| r.outcomes.iter())
+        .filter_map(|o| o.flight.as_ref().map(|f| (o, f)))
+        .collect();
+    match snaps.iter().find(|(_, f)| f.missed()).or_else(|| snaps.first()) {
+        Some((o, f)) => {
+            let doc = f.document(report::flight_table_json(o));
+            if let Some(p) = sink.write("flight", &doc).map_err(|e| anyhow::anyhow!(e))? {
+                println!(
+                    "flight: wrote {} snapshot ({} {}) to {}",
+                    f.trigger.kind(),
+                    o.scenario,
+                    o.policy.name(),
+                    p.display()
+                );
+            }
+        }
+        None => println!("flight: recorder armed but produced no snapshot"),
+    }
+    Ok(())
 }
 
 fn main() {
@@ -303,6 +363,11 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!(e))?;
     let artifacts = args.get_or("artifacts", "artifacts").to_string();
     let seed = args.get_usize("seed", 42).map_err(|e| anyhow::anyhow!(e))? as u64;
+    // Every standalone JSON artifact resolves through one named sink:
+    // the legacy `--trace-out`/`--attr-out`/`--flight-out`/`--noc-out`
+    // flags are aliases for their artifact name, and `--out-dir DIR`
+    // requests everything a subcommand produces as `DIR/<name>.json`.
+    let sink = ArtifactSink::from_cli(&args);
 
     let emit = |reports: Vec<report::Report>| -> anyhow::Result<()> {
         for r in reports {
@@ -372,16 +437,13 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
             // The link-load distribution rides the fourth Pareto axis (or
             // an explicit artifact request) — it re-evaluates each plan on
             // both fabrics, so it is opt-in.
-            if dse_cfg.channel_load_objective || args.has("noc-out") {
+            if dse_cfg.channel_load_objective || sink.wants("noc") {
                 let noc = report::dse_noc_report(&cfg, &tasks, &results);
-                if let Some(path) = args.get("noc-out") {
-                    write_json_file(path, &noc.json)?;
-                    println!("noc: wrote link-load report to {path}");
-                }
+                sink_write(&sink, "noc", "link-load report", &noc.json)?;
                 reports.push(noc);
             }
             emit(with_obs(reports, &dse_cfg.obs))?;
-            finish_obs(&dse_cfg.obs, &args)?;
+            finish_obs(&dse_cfg.obs, &sink)?;
             save_cache(&cache_file, &cache, || zoo_contexts(&cfg), cache_cap)
         }
         "cosched" => {
@@ -408,13 +470,10 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
             }
             let mut reports = vec![report::cosched_report(&cfg, &results)];
             let noc = report::cosched_noc_report(&cfg, &scenarios, &results);
-            if let Some(path) = args.get("noc-out") {
-                write_json_file(path, &noc.json)?;
-                println!("noc: wrote link-load report to {path}");
-            }
+            sink_write(&sink, "noc", "link-load report", &noc.json)?;
             reports.push(noc);
             emit(with_obs(reports, &cs.obs))?;
-            finish_obs(&cs.obs, &args)?;
+            finish_obs(&cs.obs, &sink)?;
             // Live contexts: the shared base plus every candidate region
             // config these scenarios actually reached (covers non-default
             // quanta and custom configs).
@@ -468,49 +527,22 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
             // Before `with_obs`/`finish_obs`: the windowed heatmaps also
             // emit per-policy `noc_load` counter samples into the handle.
             let noc = report::serve_noc_report(&cfg, &scenarios, &runs, &sv.obs);
-            if let Some(path) = args.get("noc-out") {
-                write_json_file(path, &noc.json)?;
-                println!("noc: wrote link-load report to {path}");
-            }
+            sink_write(&sink, "noc", "link-load report", &noc.json)?;
             reports.push(noc);
             match report::attr_report(&runs) {
                 Some(rep) => {
-                    if let Some(path) = args.get("attr-out") {
-                        write_json_file(path, &rep.json)?;
-                        println!("attr: wrote attribution report to {path}");
-                    }
+                    sink_write(&sink, "attr", "attribution report", &rep.json)?;
                     reports.push(rep);
                 }
                 None => {
-                    if args.has("attr-out") {
+                    if sink.wants("attr") {
                         println!("attr: no attribution records (nothing arrived?); skipping --attr-out");
                     }
                 }
             }
-            if let Some(path) = args.get("flight-out") {
-                // Prefer the snapshot frozen at a deadline miss (the
-                // incident being diagnosed); otherwise the first
-                // end-of-run tail (nothing missed anywhere).
-                let snaps: Vec<_> = runs
-                    .iter()
-                    .flat_map(|r| r.outcomes.iter())
-                    .filter_map(|o| o.flight.as_ref().map(|f| (o, f)))
-                    .collect();
-                match snaps.iter().find(|(_, f)| f.missed()).or_else(|| snaps.first()) {
-                    Some((o, f)) => {
-                        write_json_file(path, &f.document(report::flight_table_json(o)))?;
-                        println!(
-                            "flight: wrote {} snapshot ({} {}) to {path}",
-                            f.trigger.kind(),
-                            o.scenario,
-                            o.policy.name()
-                        );
-                    }
-                    None => println!("flight: recorder armed but produced no snapshot"),
-                }
-            }
+            write_flight(&sink, &runs)?;
             emit(with_obs(reports, &sv.obs))?;
-            finish_obs(&sv.obs, &args)?;
+            finish_obs(&sv.obs, &sink)?;
             // Live contexts: the shared base plus every region config the
             // underlying co-schedules reached (covers custom configs).
             save_cache(
@@ -525,6 +557,114 @@ fn run(raw: &[String]) -> anyhow::Result<()> {
                 },
                 cache_cap,
             )
+        }
+        "fleet" => {
+            let sv = ServeConfig::from_cli(&args, seed).map_err(|e| anyhow::anyhow!(e))?;
+            let fc = FleetConfig::from_cli(&args).map_err(|e| anyhow::anyhow!(e))?;
+            let chip_dims = match args.get("chip-dims") {
+                Some(spec) => serve::parse_chip_dims(spec).map_err(|e| anyhow::anyhow!(e))?,
+                None => Vec::new(),
+            };
+            let scenarios = resolve_scenarios(args.get_or("scenario", "all"))?;
+            let (cache_file, cache, cache_cap) = load_cache_with_cap(&args)?;
+            let mut runs = Vec::with_capacity(scenarios.len());
+            for sc in &scenarios {
+                runs.push(
+                    serve::run_fleet_scenario(sc, &cfg, &sv, &fc, &chip_dims, &cache, workers)
+                        .map_err(|e| anyhow::anyhow!(e))?,
+                );
+            }
+            for r in &runs {
+                for o in &r.outcomes {
+                    println!(
+                        "{}: {}+{} missed {}/{} requests ({:.2}% miss, {} rejected, \
+                         {} scale events, {:.3e} PE·s per M completed)",
+                        r.scenario,
+                        o.router.name(),
+                        o.policy.name(),
+                        o.total_missed(),
+                        o.total_requests(),
+                        100.0 * o.miss_rate(),
+                        o.rejected,
+                        o.scale_events,
+                        o.cost_pe_s_per_m,
+                    );
+                }
+            }
+            let mut reports = report::fleet_reports(&cfg, &sv, &fc, &runs);
+            // Live cache contexts, captured before the runs are consumed
+            // into per-chip pseudo-runs below.
+            let live: HashSet<u64> = {
+                let mut live = zoo_contexts(&cfg);
+                for r in &runs {
+                    for p in &r.plans {
+                        live.extend(p.cosched.contexts.iter().copied());
+                    }
+                }
+                live
+            };
+            // Per-chip reuse of the serve emitters: each chip's outcomes
+            // become one pseudo serve run against a renamed scenario
+            // clone (`<scenario>@chip<c>`), so the noc/attr/flight
+            // artifacts carry the same per-chip schemas `serve` emits
+            // for one array.
+            let mut chip_scenarios = Vec::new();
+            let mut chip_runs: Vec<serve::ServeRun> = Vec::new();
+            for (run, sc) in runs.into_iter().zip(&scenarios) {
+                let mut per_chip: Vec<Vec<serve::ServeOutcome>> =
+                    (0..run.plans.len()).map(|_| Vec::new()).collect();
+                for o in run.outcomes {
+                    for (c, oc) in o.chip_outcomes.into_iter().enumerate() {
+                        per_chip[c].push(oc);
+                    }
+                }
+                for (c, (plan, mut outcomes)) in
+                    run.plans.into_iter().zip(per_chip).enumerate()
+                {
+                    let name = format!("{}@chip{c}", run.scenario);
+                    for oc in &mut outcomes {
+                        oc.scenario = name.clone();
+                    }
+                    // The noc emitter draws region maps on the base
+                    // array dims, so only chips with the base geometry
+                    // get a scenario entry (heterogeneous chips still
+                    // reach the attr and flight paths).
+                    let dims = if chip_dims.is_empty() {
+                        (cfg.pe_rows, cfg.pe_cols)
+                    } else {
+                        chip_dims[c % chip_dims.len()]
+                    };
+                    if dims == (cfg.pe_rows, cfg.pe_cols) {
+                        let mut sc_c = sc.clone();
+                        sc_c.name = name.clone();
+                        chip_scenarios.push(sc_c);
+                    }
+                    chip_runs.push(serve::ServeRun {
+                        scenario: name,
+                        outcomes,
+                        sweeps: Vec::new(),
+                        plan,
+                    });
+                }
+            }
+            let noc = report::serve_noc_report(&cfg, &chip_scenarios, &chip_runs, &sv.obs);
+            sink_write(&sink, "noc", "per-chip link-load report", &noc.json)?;
+            reports.push(noc);
+            match report::attr_report(&chip_runs) {
+                Some(rep) => {
+                    sink_write(&sink, "attr", "per-chip attribution report", &rep.json)?;
+                    reports.push(rep);
+                }
+                None => {
+                    if sink.wants("attr") {
+                        println!("attr: no attribution records (nothing arrived?); skipping --attr-out");
+                    }
+                }
+            }
+            write_flight(&sink, &chip_runs)?;
+            emit(with_obs(reports, &sv.obs))?;
+            finish_obs(&sv.obs, &sink)?;
+            save_cache(&cache_file, &cache, || live, cache_cap)
         }
         "run-segment" => run_segment(&artifacts, seed),
         other => anyhow::bail!("unknown subcommand `{other}`\n{USAGE}"),

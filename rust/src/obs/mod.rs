@@ -143,10 +143,11 @@ impl Obs {
         }
     }
 
-    /// Enabled iff the subcommand was invoked with `--obs` or
-    /// `--trace-out` (both registered on `dse`/`cosched`/`serve`).
+    /// Enabled iff the subcommand was invoked with `--obs`, `--trace-out`,
+    /// or `--out-dir` (the write-everything artifact directory) — all
+    /// registered on `dse`/`cosched`/`serve`/`fleet`.
     pub fn from_cli(args: &Args) -> Self {
-        if args.has("obs") || args.get("trace-out").is_some() {
+        if args.has("obs") || args.get("trace-out").is_some() || args.get("out-dir").is_some() {
             Self::enabled()
         } else {
             Self::disabled()

@@ -1,0 +1,318 @@
+//! Fleet report: cluster-level tail latencies, miss/rejection accounting
+//! and cost per million requests for every router × dispatch policy pair,
+//! plus a per-chip utilization-spread table (the `pipeorgan fleet`
+//! artifacts; see docs/SERVING.md).
+
+use crate::config::ArchConfig;
+use crate::serve::{ChipStats, FleetConfig, FleetOutcome, FleetRun, ServeConfig};
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+use super::Report;
+
+fn chip_json(c: &ChipStats) -> Json {
+    let mut out = Json::obj();
+    out.set("chip", c.chip)
+        .set("pes", c.pes)
+        .set("routed", c.routed)
+        .set("completed", c.completed)
+        .set("missed", c.missed)
+        .set("mean_util", c.mean_util)
+        .set("up_s", c.up_s)
+        .set("cold_loads", c.cold_loads);
+    out
+}
+
+/// Max-minus-min mean utilization across chips: the router's load-balance
+/// quality in one number (0 = perfectly even).
+fn util_spread(o: &FleetOutcome) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for c in &o.chips {
+        lo = lo.min(c.mean_util);
+        hi = hi.max(c.mean_util);
+    }
+    if o.chips.is_empty() {
+        0.0
+    } else {
+        hi - lo
+    }
+}
+
+fn outcome_json(o: &FleetOutcome) -> Json {
+    let mut tasks = Json::Arr(vec![]);
+    for m in &o.tasks {
+        let mut t = Json::obj();
+        t.set("task", m.task.clone())
+            .set("rate_hz", m.rate_hz)
+            .set("deadline_ms", m.deadline_ms)
+            .set("requests", m.requests)
+            .set("completed", m.completed)
+            .set("dropped", m.dropped)
+            .set("missed", m.missed)
+            .set("miss_rate", m.miss_rate())
+            .set("p50_ms", m.p50_ms)
+            .set("p95_ms", m.p95_ms)
+            .set("p99_ms", m.p99_ms)
+            .set("mean_wait_ms", m.mean_wait_ms)
+            .set("max_queue_depth", m.max_queue_depth)
+            .set("utilization", m.utilization);
+        tasks.push(t);
+    }
+    let mut chips = Json::Arr(vec![]);
+    for c in &o.chips {
+        chips.push(chip_json(c));
+    }
+    let mut out = Json::obj();
+    out.set("router", o.router.name())
+        .set("policy", o.policy.name())
+        .set("span_s", o.span_s)
+        .set("miss_rate", o.miss_rate())
+        .set("rejected", o.rejected)
+        .set("scale_events", o.scale_events)
+        .set("cost_pe_s_per_m", o.cost_pe_s_per_m)
+        .set("util_spread", util_spread(o))
+        .set("tasks", tasks)
+        .set("chips", chips);
+    out
+}
+
+fn fleet_config_json(fc: &FleetConfig) -> Json {
+    let mut routers = Json::Arr(vec![]);
+    for r in &fc.routers {
+        routers.push(r.name());
+    }
+    let mut out = Json::obj();
+    out.set("chips", fc.chips)
+        .set("routers", routers)
+        .set("admission", fc.admission.name());
+    match fc.autoscale {
+        Some(a) => {
+            let mut aj = Json::obj();
+            aj.set("min_chips", a.min_chips)
+                .set("spinup_s", a.spinup_s)
+                .set("high_backlog_s", a.high_backlog_s)
+                .set("low_backlog_s", a.low_backlog_s)
+                .set("interval_s", a.interval_s);
+            out.set("autoscale", aj);
+        }
+        None => {
+            out.set("autoscale", Json::Null);
+        }
+    }
+    match fc.warm {
+        Some((cold_frac, decay_s)) => {
+            let mut wj = Json::obj();
+            wj.set("cold_frac", cold_frac).set("decay_s", decay_s);
+            out.set("warm", wj);
+        }
+        None => {
+            out.set("warm", Json::Null);
+        }
+    }
+    out
+}
+
+/// One row per (scenario, router, policy, task) plus a FLEET rollup row
+/// carrying the cluster-only numbers (rejections, utilization spread,
+/// cost per million completed); a second report tabulates per-chip stats
+/// so uneven routing is visible at a glance. JSON mirrors everything.
+pub fn fleet_reports(
+    cfg: &ArchConfig,
+    sv: &ServeConfig,
+    fc: &FleetConfig,
+    runs: &[FleetRun],
+) -> Vec<Report> {
+    let mut table = Table::new(
+        "Fleet — routed serving across array instances",
+        &[
+            "scenario",
+            "router",
+            "policy",
+            "task",
+            "requests",
+            "served",
+            "missed",
+            "rejected",
+            "miss %",
+            "p50 ms",
+            "p95 ms",
+            "p99 ms",
+            "util spread %",
+            "PE·s per M",
+        ],
+    );
+    let mut chip_table = Table::new(
+        "Fleet — per-chip routing and utilization",
+        &[
+            "scenario",
+            "router",
+            "policy",
+            "chip",
+            "PEs",
+            "routed",
+            "served",
+            "missed",
+            "util %",
+            "up s",
+            "cold loads",
+        ],
+    );
+    let mut arr = Json::Arr(vec![]);
+    for r in runs {
+        let mut outcomes = Json::Arr(vec![]);
+        for o in &r.outcomes {
+            for m in &o.tasks {
+                table.row(&[
+                    r.scenario.clone(),
+                    o.router.name().to_string(),
+                    o.policy.name().to_string(),
+                    m.task.clone(),
+                    m.requests.to_string(),
+                    m.completed.to_string(),
+                    m.missed.to_string(),
+                    "".into(),
+                    fnum(100.0 * m.miss_rate()),
+                    fnum(m.p50_ms),
+                    fnum(m.p95_ms),
+                    fnum(m.p99_ms),
+                    "".into(),
+                    "".into(),
+                ]);
+            }
+            table.row(&[
+                r.scenario.clone(),
+                o.router.name().to_string(),
+                o.policy.name().to_string(),
+                "FLEET".into(),
+                o.total_requests().to_string(),
+                "".into(),
+                o.total_missed().to_string(),
+                o.rejected.to_string(),
+                fnum(100.0 * o.miss_rate()),
+                "".into(),
+                "".into(),
+                "".into(),
+                fnum(100.0 * util_spread(o)),
+                fnum(o.cost_pe_s_per_m),
+            ]);
+            for c in &o.chips {
+                chip_table.row(&[
+                    r.scenario.clone(),
+                    o.router.name().to_string(),
+                    o.policy.name().to_string(),
+                    c.chip.to_string(),
+                    c.pes.to_string(),
+                    c.routed.to_string(),
+                    c.completed.to_string(),
+                    c.missed.to_string(),
+                    fnum(100.0 * c.mean_util),
+                    fnum(c.up_s),
+                    c.cold_loads.to_string(),
+                ]);
+            }
+            outcomes.push(outcome_json(o));
+        }
+        // Chip geometry: dims per chip are enough to reconstruct which
+        // plan each chip ran (full region detail lives in the serve
+        // report path; repeating it per chip would dwarf the document).
+        let mut chips = Json::Arr(vec![]);
+        for plan in &r.plans {
+            let pes: usize = plan.regions.iter().map(|g| g.num_pes()).sum();
+            let mut cj = Json::obj();
+            cj.set("regions", plan.regions.len())
+                .set("pes", pes)
+                .set("evaluations", plan.evaluations)
+                .set("cache_hits", plan.cache_hits);
+            chips.push(cj);
+        }
+        let mut s = Json::obj();
+        s.set("scenario", r.scenario.clone())
+            .set("chips", chips)
+            .set("outcomes", outcomes);
+        arr.push(s);
+    }
+    let mut json = Json::obj();
+    json.set("config", cfg.to_json())
+        .set("fleet", fleet_config_json(fc))
+        .set("arrivals", sv.arrivals.name())
+        .set("duration_s", sv.duration_s)
+        .set("rate_mult", sv.rate_mult)
+        .set("seed", sv.seed)
+        .set("borrow", sv.borrow)
+        .set("bandwidth", sv.bandwidth.name())
+        .set("scenarios", arr);
+    vec![
+        Report {
+            name: "fleet",
+            table,
+            json,
+        },
+        Report {
+            name: "fleet_chips",
+            table: chip_table,
+            json: Json::obj(),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cosched::{Scenario, TaskSpec};
+    use crate::dse::EvalCache;
+    use crate::serve::{run_fleet_scenario, Policy, RouterPolicy};
+    use crate::workloads::synthetic;
+
+    #[test]
+    fn fleet_reports_cover_every_router_policy_task_row() {
+        let cfg = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        let mut a = synthetic::aw_chain(2.0, 4);
+        a.name = "a".into();
+        let mut b = synthetic::pointwise_conv_segment(2);
+        b.name = "b".into();
+        let sc = Scenario::new("pair", vec![TaskSpec::new(a, 30.0), TaskSpec::new(b, 60.0)]);
+        let sv = ServeConfig {
+            policies: vec![Policy::Fifo],
+            duration_s: 0.05,
+            ..ServeConfig::default()
+        };
+        let fc = FleetConfig {
+            chips: 2,
+            routers: vec![RouterPolicy::RoundRobin, RouterPolicy::Jsq],
+            ..FleetConfig::default()
+        };
+        let cache = EvalCache::new();
+        let run = run_fleet_scenario(&sc, &cfg, &sv, &fc, &[], &cache, 1).unwrap();
+        let reports = fleet_reports(&cfg, &sv, &fc, &[run]);
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].name, "fleet");
+        assert_eq!(reports[1].name, "fleet_chips");
+
+        // 2 routers × 1 policy × (2 task rows + 1 FLEET row).
+        assert_eq!(reports[0].table.rows.len(), 2 * 3);
+        // 2 routers × 1 policy × 2 chips.
+        assert_eq!(reports[1].table.rows.len(), 2 * 2);
+
+        let doc = Json::parse(&reports[0].json.to_pretty()).unwrap();
+        let scenarios = doc.get("scenarios").and_then(Json::as_arr).unwrap();
+        assert_eq!(scenarios.len(), 1);
+        let outcomes = scenarios[0].get("outcomes").and_then(Json::as_arr).unwrap();
+        assert_eq!(outcomes.len(), 2);
+        for o in outcomes {
+            assert!(o.get("cost_pe_s_per_m").is_some());
+            assert!(o.get("util_spread").is_some());
+            let chips = o.get("chips").and_then(Json::as_arr).unwrap();
+            assert_eq!(chips.len(), 2);
+        }
+        let fleet = doc.get("fleet").unwrap();
+        assert_eq!(
+            fleet.get("routers").and_then(Json::as_arr).map(<[Json]>::len),
+            Some(2)
+        );
+    }
+}

@@ -7,17 +7,21 @@ mod attr;
 mod cosched;
 mod dse;
 mod figures;
+mod fleet;
 mod noc;
 mod obs;
 mod serve;
+pub mod sink;
 
 pub use ablations::{ablation_depth, ablation_organization, ablation_topology};
 pub use attr::{attr_report, flight_table_json, policy_attr_json, ATTR_SCHEMA};
 pub use cosched::cosched_report;
 pub use dse::{dse_frontier, dse_gap, explore_all, run_dse_reports};
+pub use fleet::fleet_reports;
 pub use noc::{cosched_noc_report, dse_noc_report, serve_noc_report, NOC_WINDOWS};
 pub use obs::obs_report;
 pub use serve::serve_reports;
+pub use sink::{ArtifactSink, ARTIFACT_ALIASES};
 pub use figures::{
     fig13_performance, fig13_with, fig14_dram, fig14_with, fig15_congestion, fig16_depth,
     fig17_granularity, fig5_aw_ratios, fig6_skips, fig8_12_traffic, table2_bottlenecks,

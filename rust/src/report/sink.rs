@@ -1,0 +1,148 @@
+//! The artifact sink: one named-artifact registry behind every
+//! standalone JSON export flag.
+//!
+//! Historically each artifact had its own scattered plumbing in
+//! `main.rs` (`--trace-out`, `--attr-out`, `--flight-out`, `--noc-out`,
+//! each with its own `if let Some(path)` and write call).
+//! [`ArtifactSink`] centralizes that: artifacts are *named* (`trace`,
+//! `attr`, `flight`, `noc`, `fleet`, ...), every legacy flag keeps
+//! working as an alias for its name, and `--out-dir DIR` asks for *every*
+//! artifact the subcommand produces, written as `DIR/<name>.json`.
+//! Explicit per-artifact flags win over `--out-dir` for their artifact.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::cli::Args;
+use crate::util::json::Json;
+
+/// The legacy flag aliases: `(artifact name, flag)`. Registered on every
+/// subcommand that can produce the artifact; `ArtifactSink` accepts any
+/// of them whether or not the subcommand ever writes the name.
+pub const ARTIFACT_ALIASES: &[(&str, &str)] = &[
+    ("trace", "trace-out"),
+    ("attr", "attr-out"),
+    ("flight", "flight-out"),
+    ("noc", "noc-out"),
+];
+
+/// Where standalone JSON artifacts go, resolved once from the CLI.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ArtifactSink {
+    out_dir: Option<PathBuf>,
+    explicit: BTreeMap<String, PathBuf>,
+}
+
+impl ArtifactSink {
+    /// Resolve `--out-dir` plus every [`ARTIFACT_ALIASES`] flag present.
+    pub fn from_cli(args: &Args) -> ArtifactSink {
+        let mut explicit = BTreeMap::new();
+        for &(name, flag) in ARTIFACT_ALIASES {
+            if let Some(p) = args.get_path(flag) {
+                explicit.insert(name.to_string(), p);
+            }
+        }
+        ArtifactSink {
+            out_dir: args.get_path("out-dir"),
+            explicit,
+        }
+    }
+
+    /// Should the producer of `name` bother building it? True when its
+    /// alias flag was passed or `--out-dir` wants everything.
+    pub fn wants(&self, name: &str) -> bool {
+        self.out_dir.is_some() || self.explicit.contains_key(name)
+    }
+
+    /// The path `name` would be written to, if wanted: the explicit alias
+    /// flag's path, else `out_dir/<name>.json`.
+    pub fn path_for(&self, name: &str) -> Option<PathBuf> {
+        self.explicit.get(name).cloned().or_else(|| {
+            self.out_dir
+                .as_ref()
+                .map(|d| d.join(format!("{name}.json")))
+        })
+    }
+
+    /// Write artifact `name` if anything asked for it; returns the path
+    /// written (`None` when the artifact was not requested).
+    pub fn write(&self, name: &str, json: &Json) -> Result<Option<PathBuf>, String> {
+        let Some(path) = self.path_for(name) else {
+            return Ok(None);
+        };
+        write_json_file(&path, json)?;
+        Ok(Some(path))
+    }
+}
+
+/// Write one standalone pretty-printed JSON document, creating parent
+/// directories as needed — the single write path every artifact export
+/// goes through (relocated from `main.rs`).
+pub fn write_json_file(path: &Path, json: &Json) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, json.to_pretty()).map_err(|e| format!("writing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FLAGS: &[(&str, bool)] = &[
+        ("trace-out", true),
+        ("attr-out", true),
+        ("flight-out", true),
+        ("noc-out", true),
+        ("out-dir", true),
+    ];
+
+    fn sink(v: &[&str]) -> ArtifactSink {
+        let raw: Vec<String> = std::iter::once("serve")
+            .chain(v.iter().copied())
+            .map(str::to_string)
+            .collect();
+        ArtifactSink::from_cli(&Args::parse(&raw, FLAGS).unwrap())
+    }
+
+    #[test]
+    fn alias_flags_name_their_artifacts() {
+        let s = sink(&["--attr-out", "x/a.json", "--noc-out", "n.json"]);
+        assert!(s.wants("attr") && s.wants("noc"));
+        assert!(!s.wants("trace") && !s.wants("flight"));
+        assert_eq!(s.path_for("attr"), Some(PathBuf::from("x/a.json")));
+        assert_eq!(s.path_for("noc"), Some(PathBuf::from("n.json")));
+        assert_eq!(s.path_for("trace"), None);
+    }
+
+    #[test]
+    fn out_dir_wants_everything_and_aliases_win() {
+        let s = sink(&["--out-dir", "arts", "--attr-out", "custom.json"]);
+        for name in ["trace", "attr", "flight", "noc", "fleet"] {
+            assert!(s.wants(name), "{name}");
+        }
+        assert_eq!(s.path_for("attr"), Some(PathBuf::from("custom.json")));
+        assert_eq!(s.path_for("noc"), Some(PathBuf::from("arts/noc.json")));
+        assert_eq!(s.path_for("fleet"), Some(PathBuf::from("arts/fleet.json")));
+    }
+
+    #[test]
+    fn write_creates_parents_and_skips_unrequested() {
+        let dir = std::env::temp_dir().join("pipeorgan_sink_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let target = dir.join("deep/nested/a.json");
+        let s = sink(&["--attr-out", target.to_str().unwrap()]);
+        let mut doc = Json::obj();
+        doc.set("ok", true);
+        let written = s.write("attr", &doc).unwrap();
+        assert_eq!(written, Some(target.clone()));
+        let text = std::fs::read_to_string(&target).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        // An artifact nobody asked for is a silent no-op.
+        assert_eq!(s.write("noc", &doc).unwrap(), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

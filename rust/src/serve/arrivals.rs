@@ -18,6 +18,11 @@ use crate::util::rng::SplitMix64;
 /// period, when selected by name on the CLI (`--arrivals jittered`).
 pub const DEFAULT_JITTER_FRAC: f64 = 0.1;
 
+/// Swing of [`ArrivalProcess::Diurnal`] when selected by name on the CLI
+/// (`--arrivals diurnal`): peak rate is `1 + amp` times the nominal rate,
+/// trough is `1 - amp` times (floored at 0.1% of nominal).
+pub const DEFAULT_DIURNAL_AMP: f64 = 0.8;
+
 /// How one task's requests arrive.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ArrivalProcess {
@@ -30,6 +35,13 @@ pub enum ArrivalProcess {
     /// Poisson: i.i.d. exponential gaps at `rate_hz` — open-loop traffic
     /// such as voice activity or network-fed requests.
     Poisson,
+    /// Deterministic diurnal load curve: instantaneous rate follows one
+    /// sinusoidal "day" of `period_s` seconds (the whole window when
+    /// `period_s <= 0`), starting at the trough and peaking mid-window.
+    /// `amp` is the swing as a fraction of the nominal rate. Consumes no
+    /// randomness, so the curve is seed-independent like `Periodic` —
+    /// the fleet autoscaler tests replay it exactly.
+    Diurnal { period_s: f64, amp: f64 },
     /// Replay of an externally captured timestamp trace (seconds).
     Trace(Vec<f64>),
 }
@@ -40,16 +52,23 @@ impl ArrivalProcess {
             ArrivalProcess::Periodic => "periodic",
             ArrivalProcess::Jittered(_) => "jittered",
             ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
             ArrivalProcess::Trace(_) => "trace",
         }
     }
 
-    /// CLI names. `Trace` is API-only (a trace has no flag syntax).
+    /// CLI names. `Trace` is API-only (a trace has no flag syntax). The
+    /// named diurnal curve spans the whole simulated window once
+    /// (`period_s <= 0`) at the default swing.
     pub fn from_name(s: &str) -> Option<ArrivalProcess> {
         match s {
             "periodic" => Some(ArrivalProcess::Periodic),
             "jittered" => Some(ArrivalProcess::Jittered(DEFAULT_JITTER_FRAC)),
             "poisson" => Some(ArrivalProcess::Poisson),
+            "diurnal" => Some(ArrivalProcess::Diurnal {
+                period_s: 0.0,
+                amp: DEFAULT_DIURNAL_AMP,
+            }),
             _ => None,
         }
     }
@@ -87,6 +106,27 @@ pub fn arrival_times(
                     break;
                 }
                 out.push(t);
+            }
+            out
+        }
+        ArrivalProcess::Diurnal { period_s, amp } => {
+            // Step the clock by the instantaneous period 1/r(t): a gap is
+            // long near the trough and short near the peak. The phase
+            // shift puts the trough at t = 0, so load ramps up, crests at
+            // half a day, and ebbs — the shape the fleet autoscaler
+            // chases. Rate is floored at 0.1% of nominal so amp >= 1
+            // cannot stall the generator.
+            let p = if *period_s > 0.0 { *period_s } else { duration_s };
+            let amp = amp.max(0.0);
+            let rate_at = |t: f64| {
+                let phase = std::f64::consts::TAU * t / p - std::f64::consts::FRAC_PI_2;
+                (rate_hz * (1.0 + amp * phase.sin())).max(1e-3 * rate_hz)
+            };
+            let mut out = Vec::new();
+            let mut t = 1.0 / rate_at(0.0);
+            while t < duration_s {
+                out.push(t);
+                t += 1.0 / rate_at(t);
             }
             out
         }
@@ -223,6 +263,27 @@ mod tests {
     }
 
     #[test]
+    fn diurnal_is_seed_independent_and_peaks_mid_window() {
+        let proc = ArrivalProcess::Diurnal { period_s: 0.0, amp: 0.8 };
+        let mut rng = SplitMix64::new(3);
+        let ts = arrival_times(&proc, 100.0, 1.0, &mut rng);
+        assert!(ts.windows(2).all(|p| p[0] <= p[1]));
+        assert!(ts.iter().all(|&t| (0.0..1.0).contains(&t)));
+        // No randomness consumed: any seed replays the same curve.
+        let mut other = SplitMix64::new(777);
+        assert_eq!(ts, arrival_times(&proc, 100.0, 1.0, &mut other));
+        // The middle third of the day (around the crest) carries more
+        // traffic than the first third (which starts at the trough).
+        let first = ts.iter().filter(|&&t| t < 1.0 / 3.0).count();
+        let mid = ts.iter().filter(|&&t| (1.0 / 3.0..2.0 / 3.0).contains(&t)).count();
+        assert!(mid > first, "mid={mid} first={first}");
+        // amp = 0 degenerates to (phase-shifted) periodic spacing.
+        let flat = ArrivalProcess::Diurnal { period_s: 0.0, amp: 0.0 };
+        let fts = arrival_times(&flat, 100.0, 1.0, &mut rng);
+        assert!(fts.windows(2).all(|p| (p[1] - p[0] - 0.01).abs() < 1e-9));
+    }
+
+    #[test]
     fn trace_replay_filters_and_sorts() {
         let mut rng = SplitMix64::new(0);
         let trace = ArrivalProcess::Trace(vec![0.5, 0.1, 2.0, -0.3, 0.1]);
@@ -270,7 +331,7 @@ mod tests {
 
     #[test]
     fn names_roundtrip() {
-        for name in ["periodic", "jittered", "poisson"] {
+        for name in ["periodic", "jittered", "poisson", "diurnal"] {
             let p = ArrivalProcess::from_name(name).unwrap();
             assert_eq!(p.name(), name);
         }

@@ -1,0 +1,246 @@
+//! The array-agnostic discrete-event core: a versioned binary-heap event
+//! loop shared by the single-array simulator ([`super::engine`]) and the
+//! fleet layer ([`super::fleet`]).
+//!
+//! The split is an API seam, not a behavior change: [`EventCore`] owns
+//! exactly the heap + sequence counter the engine's loop used to own
+//! inline, events order by `(t_s, seq)` with the same `total_cmp`
+//! tie-break, and [`drive`] replays the engine's loop skeleton —
+//! stale-version internal events are skipped *before* any model state
+//! (including its clock) advances, so cancelled completions can never
+//! stretch the reported span. Everything array-specific (queues, regions,
+//! bandwidth splits, tracing) lives behind [`ServiceModel`]; the
+//! single-array model is [`super::engine::ArrayModel`] and the fleet
+//! composes one `ArrayModel` per chip behind a front-door router.
+//!
+//! The model owns its own clock(s): [`drive`] hands each handler the
+//! event's absolute instant and the model drains elapsed work itself
+//! (lazily per chip, in the fleet's case — sound because a chip's drain
+//! rates only change at that chip's own events).
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use super::dispatch::Request;
+
+/// One event of the shared loop.
+///
+/// `Internal` is the versioned-completion mechanism: models schedule
+/// completions under a `(slot, version)` pair and cancel them wholesale by
+/// bumping the slot's version — [`drive`] asks [`ServiceModel::is_stale`]
+/// and discards stale events without touching the model. A *slot* is a
+/// model-defined service-station index; the single-array model uses its
+/// region index, the fleet offsets each chip's regions by a per-chip base.
+#[derive(Debug, Clone, Copy)]
+pub enum CoreEvent {
+    /// An external request entering the system.
+    Arrival(Request),
+    /// A model-scheduled (cancellable) internal event, e.g. a stage
+    /// completion on service station `slot`.
+    Internal { slot: usize, version: u64 },
+}
+
+struct Ev {
+    t_s: f64,
+    seq: u64,
+    kind: CoreEvent,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.t_s.total_cmp(&other.t_s).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// The reusable event loop: a min-heap of [`CoreEvent`]s ordered by
+/// `(t_s, seq)`. The sequence number makes simultaneous events replay in
+/// push order — the determinism tie-break the whole serve stack relies on.
+///
+/// [`EventCore::clear`] resets the counter but keeps the heap's buffer,
+/// so scratch reuse across rate-sweep probes stays allocation-free
+/// ([`super::SimScratch`]).
+#[derive(Default)]
+pub struct EventCore {
+    heap: BinaryHeap<Reverse<Ev>>,
+    seq: u64,
+}
+
+impl EventCore {
+    pub fn new() -> EventCore {
+        EventCore::default()
+    }
+
+    /// Schedule `kind` at `t_s`, tie-broken after everything already
+    /// pushed.
+    pub fn push(&mut self, t_s: f64, kind: CoreEvent) {
+        self.heap.push(Reverse(Ev {
+            t_s,
+            seq: self.seq,
+            kind,
+        }));
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event, if any.
+    pub fn pop(&mut self) -> Option<(f64, CoreEvent)> {
+        self.heap.pop().map(|Reverse(ev)| (ev.t_s, ev.kind))
+    }
+
+    /// Drop all pending events and restart the sequence counter; the
+    /// heap keeps its capacity.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// What an array (or a cluster of arrays) must implement to be driven by
+/// [`drive`]. Handlers receive the event's absolute instant and the core,
+/// so they can schedule further internal events; the model keeps its own
+/// clock(s) and drains elapsed in-flight work before mutating state.
+pub trait ServiceModel {
+    /// Is this `(slot, version)` internal event cancelled? Asked *before*
+    /// the model sees the event; stale events are discarded without
+    /// advancing any clock.
+    fn is_stale(&self, slot: usize, version: u64) -> bool;
+
+    /// An external request arrives at `t_s`.
+    fn on_arrival(&mut self, req: Request, t_s: f64, core: &mut EventCore);
+
+    /// A live internal event on `slot` fires at `t_s`.
+    fn on_internal(&mut self, slot: usize, t_s: f64, core: &mut EventCore);
+}
+
+/// Run the loop to quiescence and return the instant of the last *live*
+/// event (0.0 when nothing ran) — the served span. Stale internal events
+/// advance nothing, exactly like the pre-split engine loop.
+pub fn drive<M: ServiceModel>(model: &mut M, core: &mut EventCore) -> f64 {
+    let mut last_s = 0.0f64;
+    while let Some((t_s, kind)) = core.pop() {
+        match kind {
+            CoreEvent::Internal { slot, version } => {
+                if model.is_stale(slot, version) {
+                    continue;
+                }
+                last_s = t_s;
+                model.on_internal(slot, t_s, core);
+            }
+            CoreEvent::Arrival(req) => {
+                last_s = t_s;
+                model.on_arrival(req, t_s, core);
+            }
+        }
+    }
+    last_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_order_by_time_then_sequence() {
+        let mut core = EventCore::new();
+        core.push(2.0, CoreEvent::Internal { slot: 0, version: 1 });
+        core.push(1.0, CoreEvent::Internal { slot: 1, version: 1 });
+        core.push(1.0, CoreEvent::Internal { slot: 2, version: 1 });
+        let order: Vec<usize> = std::iter::from_fn(|| core.pop())
+            .map(|(_, k)| match k {
+                CoreEvent::Internal { slot, .. } => slot,
+                CoreEvent::Arrival(_) => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 0], "time first, then push order");
+        assert!(core.is_empty());
+    }
+
+    #[test]
+    fn clear_resets_the_sequence_counter() {
+        let mut core = EventCore::new();
+        core.push(1.0, CoreEvent::Internal { slot: 0, version: 0 });
+        core.clear();
+        assert_eq!(core.len(), 0);
+        // Two same-instant pushes after a clear replay in push order —
+        // the counter restarted, it did not keep climbing from before.
+        core.push(5.0, CoreEvent::Internal { slot: 7, version: 0 });
+        core.push(5.0, CoreEvent::Internal { slot: 8, version: 0 });
+        let (_, first) = core.pop().unwrap();
+        assert!(matches!(first, CoreEvent::Internal { slot: 7, .. }));
+    }
+
+    /// A minimal model: every arrival schedules one completion, half of
+    /// which get cancelled by a version bump; `drive` must skip the stale
+    /// ones without counting them into the span.
+    struct Toy {
+        versions: Vec<u64>,
+        arrivals: u64,
+        completions: u64,
+    }
+
+    impl ServiceModel for Toy {
+        fn is_stale(&self, slot: usize, version: u64) -> bool {
+            self.versions[slot] != version
+        }
+        fn on_arrival(&mut self, req: Request, t_s: f64, core: &mut EventCore) {
+            self.arrivals += 1;
+            let slot = req.task;
+            self.versions[slot] += 1;
+            core.push(
+                t_s + 1.0,
+                CoreEvent::Internal {
+                    slot,
+                    version: self.versions[slot],
+                },
+            );
+        }
+        fn on_internal(&mut self, _slot: usize, _t_s: f64, _core: &mut EventCore) {
+            self.completions += 1;
+        }
+    }
+
+    #[test]
+    fn drive_skips_stale_events_and_reports_the_live_span() {
+        let mut core = EventCore::new();
+        // Two arrivals on one slot: the second cancels the first's
+        // completion (version bump), so exactly one completion fires.
+        let req = |t| Request {
+            task: 0,
+            id: 0,
+            arrival_s: t,
+            deadline_s: t + 1.0,
+        };
+        core.push(0.0, CoreEvent::Arrival(req(0.0)));
+        core.push(0.5, CoreEvent::Arrival(req(0.5)));
+        let mut toy = Toy {
+            versions: vec![0],
+            arrivals: 0,
+            completions: 0,
+        };
+        let span = drive(&mut toy, &mut core);
+        assert_eq!(toy.arrivals, 2);
+        assert_eq!(toy.completions, 1, "stale completion skipped");
+        assert_eq!(span, 1.5, "span is the last live event, not the stale one");
+    }
+}

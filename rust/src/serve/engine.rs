@@ -13,16 +13,21 @@
 //! the bytes instead drain at whatever the epoch's contention split
 //! grants, so donated headroom shortens DRAM-bound stages online.
 //!
-//! [`simulate`] then replays pre-generated arrival streams: a binary-heap
-//! event loop over arrivals and (versioned, hence cancellable) stage
-//! completions. Between two events the in-flight work drains linearly at
-//! the epoch's rates; at every event the bandwidth split and each busy
-//! region's next completion are recomputed. Everything is indexed by task
-//! order and tie-broken by sequence number, so a run is a pure function of
-//! its inputs — the determinism the property tests assert.
+//! [`simulate`] then replays pre-generated arrival streams. The event
+//! loop itself lives in [`super::core`]: a binary-heap [`EventCore`] over
+//! arrivals and (versioned, hence cancellable) stage completions, driven
+//! against this module's [`ArrayModel`] — the per-array [`ServiceModel`]
+//! holding the queues, regions, bandwidth split, and recorders. Between
+//! two events the in-flight work drains linearly at the epoch's rates; at
+//! every event the bandwidth split and each busy region's next completion
+//! are recomputed. Everything is indexed by task order and tie-broken by
+//! sequence number, so a run is a pure function of its inputs — the
+//! determinism the property tests assert. The fleet layer
+//! ([`super::fleet`]) drives many `ArrayModel`s from one core, offsetting
+//! each chip's regions by a slot base; the single-array entry points
+//! below are unchanged by that split, bit for bit.
 
-use std::cmp::{Ordering, Reverse};
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::config::{ArchConfig, TopologyKind};
 use crate::cosched::{self, region_config, CoschedConfig, CoschedResult, Region, Scenario};
@@ -37,6 +42,7 @@ use crate::obs::flight::FlightRecorder;
 use crate::obs::{Obs, PID_SIM};
 use crate::util::stats::Histogram;
 
+use super::core::{drive, CoreEvent, EventCore, ServiceModel};
 use super::dispatch::{select_next, Policy, Request};
 use super::interference::{donated_bandwidth, donated_rate, BandwidthCache, BandwidthModel};
 use super::metrics::{sweep_max_rate, ServeOutcome, SweepResult, TaskMetrics};
@@ -313,43 +319,42 @@ struct RegionSt {
     busy_cycles: f64,
 }
 
+/// Completed-request record. `pub(super)` so the fleet layer can pool the
+/// raw per-chip samples into cluster-level percentiles before each chip
+/// model is finished into its own [`ServeOutcome`].
 #[derive(Debug, Clone, Copy)]
-enum EvKind {
-    Arrival(Request),
-    Completion { region: usize, version: u64 },
+pub(super) struct Rec {
+    pub(super) latency_s: f64,
+    pub(super) wait_s: f64,
+    pub(super) missed: bool,
 }
 
-struct Ev {
-    t_s: f64,
-    seq: u64,
-    kind: EvKind,
+/// Cold-start model of the fleet layer: a task whose weights have not
+/// touched a chip recently pays `cold_frac` of its total DRAM traffic
+/// again on its first stage (the weights reload), and a completion keeps
+/// the chip warm for that task for `decay_s`. Single-array runs pass
+/// `None` — the dispatch path then executes zero extra float operations,
+/// which is what keeps the pre-split engine output bit-identical. The
+/// penalty only ever *adds* service time, so the deadline-aware drop
+/// certificates (built from `best_case_cycles`) stay optimistic and sound.
+pub(super) struct Warmth {
+    cold_frac: f64,
+    decay_s: f64,
+    /// Per task: warm until this instant. Starts at `NEG_INFINITY` — the
+    /// first request of every task is always cold.
+    until_s: Vec<f64>,
+    cold_loads: u64,
 }
 
-impl PartialEq for Ev {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
+impl Warmth {
+    pub(super) fn new(cold_frac: f64, decay_s: f64, tasks: usize) -> Warmth {
+        Warmth {
+            cold_frac: cold_frac.max(0.0),
+            decay_s: decay_s.max(0.0),
+            until_s: vec![f64::NEG_INFINITY; tasks],
+            cold_loads: 0,
+        }
     }
-}
-
-impl Eq for Ev {}
-
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> Ordering {
-        self.t_s.total_cmp(&other.t_s).then(self.seq.cmp(&other.seq))
-    }
-}
-
-/// Completed-request record.
-struct Rec {
-    latency_s: f64,
-    wait_s: f64,
-    missed: bool,
 }
 
 /// Slack added to deadline comparisons so exact-boundary float residue
@@ -367,7 +372,7 @@ const DEADLINE_EPS_S: f64 = 1e-9;
 /// never change an outcome (the determinism tests replay both ways).
 #[derive(Default)]
 pub struct SimScratch {
-    heap: BinaryHeap<Reverse<Ev>>,
+    events: EventCore,
     demands: Vec<Option<f64>>,
     bw: BandwidthCache,
 }
@@ -444,267 +449,462 @@ pub fn simulate_with_scratch(
 ) -> ServeOutcome {
     let n = scenario.tasks.len();
     assert_eq!(arrivals.len(), n, "one arrival stream per task");
-    let clock = plan.clock_hz;
-
-    // All per-event emission below is guarded on `rec_on` (the obs
-    // handle, the flight recorder, or both are live), so an untraced run
-    // costs the hot loop one branch per site; the name tables are only
-    // materialized when some recorder is live. Every emission site
-    // formats its event name once and fans it out to both sinks — the
-    // flight recorder sees exactly the stream `--trace-out` would, which
-    // is why its frozen snippet passes the same schema checks.
-    let obs_on = obs.is_enabled();
-    let mut flight = opts.flight.map(FlightRecorder::new);
-    let rec_on = obs_on || flight.is_some();
-    let pid = PID_SIM + Policy::ALL.iter().position(|&p| p == policy).unwrap_or(0) as u32;
-    let mut task_names: Vec<String> = Vec::new();
-    let mut region_keys: Vec<String> = Vec::new();
-    let mut cprefix = String::new();
-    if rec_on {
-        task_names = scenario.tasks.iter().map(|t| t.name().to_string()).collect();
-        region_keys = (0..n).map(|r| format!("region{r}")).collect();
-        cprefix = format!("serve.{}", policy.name());
-        let pname = format!("serve-sim [{}]", policy.name());
-        obs.name_process(pid, &pname);
-        if let Some(f) = &flight {
-            f.name_process(pid, &pname);
-        }
-        for (r, name) in task_names.iter().enumerate() {
-            let tname = format!("region{r} ({name})");
-            obs.name_track(pid, r as u32, &tname);
-            if let Some(f) = &flight {
-                f.name_track(pid, r as u32, &tname);
-            }
-        }
-    }
-
-    // Split the scratch into disjoint &mut fields (heap for the event
+    // Split the scratch into disjoint fields (the event core for the
     // loop, demands + bw memo for `reallocate`) and reset what carries
     // state; the buffers keep their capacity, the memo keeps its entry
-    // (keyed on exact inputs, so staleness is impossible).
-    let SimScratch { heap, demands, bw } = scratch;
-    heap.clear();
-    let (bw_hits0, bw_misses0) = bw.stats();
-    let mut seq = 0u64;
+    // (keyed on exact inputs, so staleness is impossible). The demand
+    // vector and memo are lent to the model and recovered from
+    // `finish_parts`, so reuse across probes stays allocation-free.
+    let SimScratch { events, demands, bw } = scratch;
+    events.clear();
+    push_arrivals(events, plan, arrivals);
+    let mut model = ArrayModel::with_parts(
+        scenario,
+        plan,
+        policy,
+        opts,
+        obs,
+        None,
+        0,
+        std::mem::take(demands),
+        std::mem::take(bw),
+        None,
+    );
+    let last_s = drive(&mut model, events);
+    let (out, demands_back, bw_back) = model.finish_parts(last_s.max(1e-12));
+    *demands = demands_back;
+    *bw = bw_back;
+    out
+}
+
+/// Schedule every pre-generated arrival into the core, in task order with
+/// ascending ids — the exact push order (hence same-instant tie-break
+/// order) the pre-split engine used. The fleet front door pushes the same
+/// streams and routes each [`CoreEvent::Arrival`] as it fires.
+pub fn push_arrivals(events: &mut EventCore, plan: &ServePlan, arrivals: &[Vec<f64>]) {
     for (task, times) in arrivals.iter().enumerate() {
         for (k, &t) in times.iter().enumerate() {
-            let req = Request {
-                task,
-                id: k as u64,
-                arrival_s: t,
-                deadline_s: t + plan.deadlines_s[task],
+            events.push(
+                t,
+                CoreEvent::Arrival(Request {
+                    task,
+                    id: k as u64,
+                    arrival_s: t,
+                    deadline_s: t + plan.deadlines_s[task],
+                }),
+            );
+        }
+    }
+}
+
+/// The per-array [`ServiceModel`]: all the state the pre-split event loop
+/// held in locals — queues, region service slots, recorders, the epoch
+/// clock — behind the handler methods the shared core calls. A
+/// single-array run instantiates one (see [`ArrayModel::new`]); the fleet
+/// layer instantiates one per chip with a nonzero `slot_base` (so region
+/// slots stay globally unique in the shared core), a per-chip obs
+/// identity, and an optional cold-start model.
+///
+/// Each model keeps its own `now` and advances it lazily, only at its own
+/// events. That is exact, not an approximation: drain rates change only
+/// at the owning model's events, and the shared heap delivers events in
+/// global time order, so by the time a model reads its state at `t` every
+/// earlier event of its own has already been applied.
+pub struct ArrayModel<'a> {
+    scenario: &'a Scenario,
+    plan: &'a ServePlan,
+    policy: Policy,
+    opts: SimOptions,
+    obs: &'a Obs,
+    // All per-event emission is guarded on `rec_on` (the obs handle, the
+    // flight recorder, or both are live), so an untraced run costs the
+    // hot loop one branch per site; the name tables are only materialized
+    // when some recorder is live. Every emission site formats its event
+    // name once and fans it out to both sinks — the flight recorder sees
+    // exactly the stream `--trace-out` would, which is why its frozen
+    // snippet passes the same schema checks.
+    obs_on: bool,
+    rec_on: bool,
+    pid: u32,
+    task_names: Vec<String>,
+    region_keys: Vec<String>,
+    cprefix: String,
+    flight: Option<FlightRecorder>,
+    slot_base: usize,
+    queues: Vec<VecDeque<Request>>,
+    regions: Vec<RegionSt>,
+    recs: Vec<Vec<Rec>>,
+    attr: Vec<RequestAttr>,
+    drops: Vec<u64>,
+    max_depth: Vec<usize>,
+    trace: Vec<TraceEvent>,
+    /// A request is *doomed* when even the fastest region's best case
+    /// misses its deadline — the only condition under which a borrowing
+    /// dispatcher may drop it (some region might still save anything
+    /// less).
+    min_best_cycles: Vec<f64>,
+    now: f64,
+    /// Requests this model has accepted, per task — `requests` in the
+    /// finished metrics. Counted at arrival (not from the pre-generated
+    /// streams) because under a fleet router a chip only sees its share.
+    arrived: Vec<u64>,
+    demands: Vec<Option<f64>>,
+    bw: BandwidthCache,
+    bw_hits0: u64,
+    bw_misses0: u64,
+    warm: Option<Warmth>,
+}
+
+impl<'a> ArrayModel<'a> {
+    /// A fresh single-array model: chip-less obs identity, slot base 0,
+    /// fresh scratch buffers, no cold-start model — the configuration
+    /// under which [`push_arrivals`] + [`drive`] + [`ArrayModel::finish`]
+    /// reproduces [`simulate`] bit for bit (asserted by
+    /// `tests/fleet_integration.rs`).
+    pub fn new(
+        scenario: &'a Scenario,
+        plan: &'a ServePlan,
+        policy: Policy,
+        opts: SimOptions,
+        obs: &'a Obs,
+    ) -> ArrayModel<'a> {
+        ArrayModel::with_parts(
+            scenario,
+            plan,
+            policy,
+            opts,
+            obs,
+            None,
+            0,
+            Vec::new(),
+            BandwidthCache::new(),
+            None,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn with_parts(
+        scenario: &'a Scenario,
+        plan: &'a ServePlan,
+        policy: Policy,
+        opts: SimOptions,
+        obs: &'a Obs,
+        chip: Option<usize>,
+        slot_base: usize,
+        demands: Vec<Option<f64>>,
+        bw: BandwidthCache,
+        warm: Option<Warmth>,
+    ) -> ArrayModel<'a> {
+        let n = scenario.tasks.len();
+        let obs_on = obs.is_enabled();
+        let flight = opts.flight.map(FlightRecorder::new);
+        let rec_on = obs_on || flight.is_some();
+        let policy_idx = Policy::ALL.iter().position(|&p| p == policy).unwrap_or(0) as u32;
+        let pid = match chip {
+            None => PID_SIM + policy_idx,
+            // One Perfetto process per chip. Nine sim-domain pids are
+            // reserved, so very wide fleets wrap; tracks stay distinct
+            // per region within each pid.
+            Some(c) => PID_SIM + (c % 9) as u32,
+        };
+        let mut task_names: Vec<String> = Vec::new();
+        let mut region_keys: Vec<String> = Vec::new();
+        let mut cprefix = String::new();
+        if rec_on {
+            task_names = scenario.tasks.iter().map(|t| t.name().to_string()).collect();
+            region_keys = (0..n).map(|r| format!("region{r}")).collect();
+            let pname = match chip {
+                None => {
+                    cprefix = format!("serve.{}", policy.name());
+                    format!("serve-sim [{}]", policy.name())
+                }
+                Some(c) => {
+                    cprefix = format!("fleet.chip{c}.{}", policy.name());
+                    format!("fleet-chip{c} [{}]", policy.name())
+                }
             };
-            heap.push(Reverse(Ev {
-                t_s: t,
-                seq,
-                kind: EvKind::Arrival(req),
-            }));
-            seq += 1;
+            obs.name_process(pid, &pname);
+            if let Some(f) = &flight {
+                f.name_process(pid, &pname);
+            }
+            for (r, name) in task_names.iter().enumerate() {
+                let tname = format!("region{r} ({name})");
+                obs.name_track(pid, r as u32, &tname);
+                if let Some(f) = &flight {
+                    f.name_track(pid, r as u32, &tname);
+                }
+            }
+        }
+        let (bw_hits0, bw_misses0) = bw.stats();
+        let min_best_cycles: Vec<f64> = (0..n)
+            .map(|t| {
+                plan.costs[t]
+                    .iter()
+                    .map(|c| c.best_case_cycles)
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        ArrayModel {
+            scenario,
+            plan,
+            policy,
+            opts,
+            obs,
+            obs_on,
+            rec_on,
+            pid,
+            task_names,
+            region_keys,
+            cprefix,
+            flight,
+            slot_base,
+            queues: vec![VecDeque::new(); n],
+            regions: (0..n)
+                .map(|_| RegionSt {
+                    serving: None,
+                    version: 0,
+                    busy_cycles: 0.0,
+                })
+                .collect(),
+            recs: (0..n).map(|_| Vec::new()).collect(),
+            attr: Vec::new(),
+            drops: vec![0; n],
+            max_depth: vec![0; n],
+            trace: Vec::new(),
+            min_best_cycles,
+            now: 0.0,
+            arrived: vec![0; n],
+            demands,
+            bw,
+            bw_hits0,
+            bw_misses0,
+            warm,
         }
     }
 
-    let mut queues: Vec<VecDeque<Request>> = vec![VecDeque::new(); n];
-    let mut regions: Vec<RegionSt> = (0..n)
-        .map(|_| RegionSt {
-            serving: None,
-            version: 0,
-            busy_cycles: 0.0,
-        })
-        .collect();
-    let mut recs: Vec<Vec<Rec>> = (0..n).map(|_| Vec::new()).collect();
-    let mut attr: Vec<RequestAttr> = Vec::new();
-    let mut drops: Vec<u64> = vec![0; n];
-    let mut max_depth: Vec<usize> = vec![0; n];
-    let mut trace: Vec<TraceEvent> = Vec::new();
-    let mut now = 0.0f64;
+    // --- read-only views the fleet router and autoscaler consult ---
 
-    // A request is *doomed* when even the fastest region's best case
-    // misses its deadline — the only condition under which a borrowing
-    // dispatcher may drop it (some region might still save anything less).
-    let min_best_cycles: Vec<f64> = (0..n)
-        .map(|t| {
-            plan.costs[t]
-                .iter()
-                .map(|c| c.best_case_cycles)
-                .fold(f64::INFINITY, f64::min)
-        })
-        .collect();
+    /// Requests of `task` waiting in this model's queue.
+    pub(super) fn queue_len(&self, task: usize) -> usize {
+        self.queues[task].len()
+    }
 
-    while let Some(Reverse(ev)) = heap.pop() {
-        // Cancelled (stale-version) completions are skipped *before* time
-        // advances: they change no state, and letting them move `now`
-        // would stretch the reported span past the real last event.
-        // Rates are constant between real events, so draining across a
-        // skipped instant in one larger step is exactly equivalent.
-        if let EvKind::Completion { region, version } = ev.kind {
-            if regions[region].version != version {
-                continue;
-            }
-        }
+    /// Is `region` serving something right now (as of this model's last
+    /// event — exact at any global instant, see the lazy-clock note)?
+    pub(super) fn region_busy(&self, region: usize) -> bool {
+        self.regions[region].serving.is_some()
+    }
 
-        // Drain the epoch that just elapsed at its (constant) rates.
-        let dt = (ev.t_s - now).max(0.0);
+    /// Queued + in-service requests — the JSQ tie-break's whole-chip load.
+    pub(super) fn total_in_system(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum::<usize>()
+            + self.regions.iter().filter(|r| r.serving.is_some()).count()
+    }
+
+    /// Raw completed-request samples per task, for fleet-level pooled
+    /// percentiles (a chip's own [`ServeOutcome`] only keeps quantiles).
+    pub(super) fn records(&self) -> &[Vec<Rec>] {
+        &self.recs
+    }
+
+    /// Requests dropped as doomed by the dispatcher, per task.
+    pub(super) fn drop_counts(&self) -> &[u64] {
+        &self.drops
+    }
+
+    /// Cold-start weight reloads this chip paid (0 without a [`Warmth`]).
+    pub(super) fn cold_loads(&self) -> u64 {
+        self.warm.as_ref().map_or(0, |w| w.cold_loads)
+    }
+
+    // --- the event-loop body, relocated verbatim from the pre-split
+    //     engine; `drive` calls these through the `ServiceModel` impl ---
+
+    /// Drain the epoch that just elapsed at its (constant) rates and move
+    /// this model's clock to `t_s`.
+    fn advance_to(&mut self, t_s: f64) {
+        let dt = (t_s - self.now).max(0.0);
         if dt > 0.0 {
-            let dt_cycles = dt * clock;
-            for (ri, r) in regions.iter_mut().enumerate() {
+            let dt_cycles = dt * self.plan.clock_hz;
+            let record_attr = self.opts.record_attr;
+            let entitlements = &self.plan.entitlements;
+            for (ri, r) in self.regions.iter_mut().enumerate() {
                 if let Some(s) = r.serving.as_mut() {
                     s.floor_rem = (s.floor_rem - dt_cycles).max(0.0);
                     s.bytes_rem = (s.bytes_rem - dt_cycles * s.alloc).max(0.0);
                     r.busy_cycles += dt_cycles;
-                    if opts.record_attr {
-                        s.donated_bytes +=
-                            dt_cycles * donated_rate(plan.entitlements[ri], s.alloc);
+                    if record_attr {
+                        s.donated_bytes += dt_cycles * donated_rate(entitlements[ri], s.alloc);
                     }
                 }
             }
         }
-        now = ev.t_s;
+        self.now = t_s;
+    }
 
-        match ev.kind {
-            EvKind::Arrival(req) => {
-                if opts.record_trace {
-                    trace.push(TraceEvent {
-                        t_s: now,
-                        task: req.task,
-                        id: req.id,
-                        kind: TraceKind::Arrive,
-                    });
-                }
-                queues[req.task].push_back(req);
-                max_depth[req.task] = max_depth[req.task].max(queues[req.task].len());
-                if rec_on {
-                    let name = format!("arrive {}#{}", task_names[req.task], req.id);
-                    obs.instant(&name, pid, req.task as u32, now * 1e6);
-                    if let Some(f) = &flight {
-                        f.instant(&name, pid, req.task as u32, now * 1e6);
-                    }
-                    if obs_on {
-                        obs.count(&format!("{cprefix}.arrivals"), 1);
-                    }
+    fn handle_arrival(&mut self, req: Request) {
+        let now = self.now;
+        if self.opts.record_trace {
+            self.trace.push(TraceEvent {
+                t_s: now,
+                task: req.task,
+                id: req.id,
+                kind: TraceKind::Arrive,
+            });
+        }
+        self.arrived[req.task] += 1;
+        self.queues[req.task].push_back(req);
+        self.max_depth[req.task] = self.max_depth[req.task].max(self.queues[req.task].len());
+        if self.rec_on {
+            let name = format!("arrive {}#{}", self.task_names[req.task], req.id);
+            self.obs.instant(&name, self.pid, req.task as u32, now * 1e6);
+            if let Some(f) = &self.flight {
+                f.instant(&name, self.pid, req.task as u32, now * 1e6);
+            }
+            if self.obs_on {
+                self.obs.count(&format!("{}.arrivals", self.cprefix), 1);
+            }
+        }
+    }
+
+    fn handle_completion(&mut self, region: usize) {
+        let now = self.now;
+        let finished = {
+            let s = self.regions[region]
+                .serving
+                .as_mut()
+                .expect("completion fired on an idle region");
+            let stages = &self.plan.costs[s.req.task][region].stages;
+            if self.rec_on {
+                let name = format!("{} s{}", self.task_names[s.req.task], s.stage);
+                let ts = s.stage_start_s * 1e6;
+                self.obs.span(&name, self.pid, region as u32, ts, now * 1e6 - ts);
+                if let Some(f) = &self.flight {
+                    f.span(&name, self.pid, region as u32, ts, now * 1e6 - ts);
                 }
             }
-            EvKind::Completion { region, .. } => {
-                let finished = {
-                    let s = regions[region]
-                        .serving
-                        .as_mut()
-                        .expect("completion fired on an idle region");
-                    let stages = &plan.costs[s.req.task][region].stages;
-                    if rec_on {
-                        let name = format!("{} s{}", task_names[s.req.task], s.stage);
-                        let ts = s.stage_start_s * 1e6;
-                        obs.span(&name, pid, region as u32, ts, now * 1e6 - ts);
-                        if let Some(f) = &flight {
-                            f.span(&name, pid, region as u32, ts, now * 1e6 - ts);
-                        }
-                    }
-                    s.stage += 1;
-                    s.stage_start_s = now;
-                    if s.stage < stages.len() {
-                        s.floor_rem = stages[s.stage].floor_cycles;
-                        s.bytes_rem = stages[s.stage].dram_bytes;
-                        None
-                    } else {
-                        Some((s.req, s.start_s, s.donated_bytes))
-                    }
-                };
-                if let Some((req, start_s, donated_bytes)) = finished {
-                    regions[region].serving = None;
-                    let missed = now > req.deadline_s + DEADLINE_EPS_S;
-                    let latency_s = now - req.arrival_s;
-                    let queue_s = start_s - req.arrival_s;
-                    recs[req.task].push(Rec {
-                        latency_s,
-                        wait_s: queue_s,
-                        missed,
-                    });
-                    if opts.record_attr {
-                        // Canonical decomposition order — donation is the
-                        // closing term of this exact float expression, which
-                        // is what makes `RequestAttr::residual_s` bit-exactly
-                        // zero (see obs::attr's module docs).
-                        let cost = &plan.costs[req.task][region];
-                        let floor_s = cost.floor_cycles / clock;
-                        let stretch_s = (cost.nominal_cycles - cost.floor_cycles) / clock;
-                        let donation_s = stretch_s - ((latency_s - queue_s) - floor_s);
-                        attr.push(RequestAttr {
-                            task: req.task,
-                            id: req.id,
-                            region,
-                            arrival_s: req.arrival_s,
-                            latency_s,
-                            queue_s,
-                            floor_s,
-                            stretch_s,
-                            donation_s,
-                            donated_bytes,
-                            outcome: AttrOutcome::Completed { missed },
-                        });
-                    }
-                    if opts.record_trace {
-                        trace.push(TraceEvent {
-                            t_s: now,
-                            task: req.task,
-                            id: req.id,
-                            kind: TraceKind::Complete { region },
-                        });
-                    }
-                    if rec_on {
-                        let what = if missed { "miss" } else { "finish" };
-                        let name = format!("{what} {}#{}", task_names[req.task], req.id);
-                        obs.instant(&name, pid, region as u32, now * 1e6);
-                        if let Some(f) = &flight {
-                            f.instant(&name, pid, region as u32, now * 1e6);
-                        }
-                        if obs_on {
-                            obs.count(&format!("{cprefix}.completions"), 1);
-                            if missed {
-                                obs.count(&format!("{cprefix}.misses"), 1);
-                            }
-                            obs.observe(&format!("{cprefix}.latency_ms"), latency_s * 1e3);
-                        }
-                    }
+            s.stage += 1;
+            s.stage_start_s = now;
+            if s.stage < stages.len() {
+                s.floor_rem = stages[s.stage].floor_cycles;
+                s.bytes_rem = stages[s.stage].dram_bytes;
+                None
+            } else {
+                Some((s.req, s.start_s, s.donated_bytes))
+            }
+        };
+        if let Some((req, start_s, donated_bytes)) = finished {
+            self.regions[region].serving = None;
+            // A completion leaves the chip warm for this task (fleet-only;
+            // `warm` is None on a single array).
+            if let Some(w) = self.warm.as_mut() {
+                w.until_s[req.task] = now + w.decay_s;
+            }
+            let missed = now > req.deadline_s + DEADLINE_EPS_S;
+            let latency_s = now - req.arrival_s;
+            let queue_s = start_s - req.arrival_s;
+            self.recs[req.task].push(Rec {
+                latency_s,
+                wait_s: queue_s,
+                missed,
+            });
+            if self.opts.record_attr {
+                // Canonical decomposition order — donation is the
+                // closing term of this exact float expression, which
+                // is what makes `RequestAttr::residual_s` bit-exactly
+                // zero (see obs::attr's module docs).
+                let cost = &self.plan.costs[req.task][region];
+                let clock = self.plan.clock_hz;
+                let floor_s = cost.floor_cycles / clock;
+                let stretch_s = (cost.nominal_cycles - cost.floor_cycles) / clock;
+                let donation_s = stretch_s - ((latency_s - queue_s) - floor_s);
+                self.attr.push(RequestAttr {
+                    task: req.task,
+                    id: req.id,
+                    region,
+                    arrival_s: req.arrival_s,
+                    latency_s,
+                    queue_s,
+                    floor_s,
+                    stretch_s,
+                    donation_s,
+                    donated_bytes,
+                    outcome: AttrOutcome::Completed { missed },
+                });
+            }
+            if self.opts.record_trace {
+                self.trace.push(TraceEvent {
+                    t_s: now,
+                    task: req.task,
+                    id: req.id,
+                    kind: TraceKind::Complete { region },
+                });
+            }
+            if self.rec_on {
+                let what = if missed { "miss" } else { "finish" };
+                let name = format!("{what} {}#{}", self.task_names[req.task], req.id);
+                self.obs.instant(&name, self.pid, region as u32, now * 1e6);
+                if let Some(f) = &self.flight {
+                    f.instant(&name, self.pid, region as u32, now * 1e6);
+                }
+                if self.obs_on {
+                    self.obs.count(&format!("{}.completions", self.cprefix), 1);
                     if missed {
-                        // After the miss instant above, so the frozen snippet
-                        // ends on the event being diagnosed. Only the first
-                        // call freezes; later misses are no-ops.
-                        if let Some(f) = flight.as_mut() {
-                            f.trigger_miss(req.task, req.id, region, now);
-                        }
+                        self.obs.count(&format!("{}.misses", self.cprefix), 1);
                     }
+                    self.obs
+                        .observe(&format!("{}.latency_ms", self.cprefix), latency_s * 1e3);
+                }
+            }
+            if missed {
+                // After the miss instant above, so the frozen snippet
+                // ends on the event being diagnosed. Only the first
+                // call freezes; later misses are no-ops.
+                if let Some(f) = self.flight.as_mut() {
+                    f.trigger_miss(req.task, req.id, region, now);
                 }
             }
         }
+    }
 
+    /// The shared tail of every live event: put idle regions to work,
+    /// re-split bandwidth, reschedule completions under the fresh rates,
+    /// sample the epoch's counter tracks.
+    fn post_event(&mut self, core: &mut EventCore) {
+        let now = self.now;
+        let plan = self.plan;
+        let clock = plan.clock_hz;
+        let n = self.queues.len();
         // Put every idle region to work.
         for region in 0..n {
-            if regions[region].serving.is_some() {
+            if self.regions[region].serving.is_some() {
                 continue;
             }
             let hopeless_here = |r: &Request| -> bool {
                 now + plan.costs[r.task][region].best_case_cycles / clock
                     > r.deadline_s + DEADLINE_EPS_S
             };
+            let min_best_cycles = &self.min_best_cycles;
             let doomed = |r: &Request| -> bool {
                 now + min_best_cycles[r.task] / clock > r.deadline_s + DEADLINE_EPS_S
             };
             let (dropped, chosen) = select_next(
-                policy,
-                &mut queues,
+                self.policy,
+                &mut self.queues,
                 region,
-                opts.borrow,
+                self.opts.borrow,
                 &plan.rates_hz,
                 &hopeless_here,
                 &doomed,
             );
             for d in dropped {
-                drops[d.task] += 1;
-                if opts.record_attr {
+                self.drops[d.task] += 1;
+                if self.opts.record_attr {
                     // A drop's whole lifetime is queue wait; the compute
                     // components are zero, so conservation still holds and
                     // the dominant component reads "policy".
                     let waited_s = now - d.arrival_s;
-                    attr.push(RequestAttr {
+                    self.attr.push(RequestAttr {
                         task: d.task,
                         id: d.id,
                         region,
@@ -718,58 +918,74 @@ pub fn simulate_with_scratch(
                         outcome: AttrOutcome::Dropped,
                     });
                 }
-                if opts.record_trace {
-                    trace.push(TraceEvent {
+                if self.opts.record_trace {
+                    self.trace.push(TraceEvent {
                         t_s: now,
                         task: d.task,
                         id: d.id,
                         kind: TraceKind::Drop { region },
                     });
                 }
-                if rec_on {
-                    let name = format!("drop {}#{}", task_names[d.task], d.id);
-                    obs.instant(&name, pid, region as u32, now * 1e6);
-                    if let Some(f) = &flight {
-                        f.instant(&name, pid, region as u32, now * 1e6);
+                if self.rec_on {
+                    let name = format!("drop {}#{}", self.task_names[d.task], d.id);
+                    self.obs.instant(&name, self.pid, region as u32, now * 1e6);
+                    if let Some(f) = &self.flight {
+                        f.instant(&name, self.pid, region as u32, now * 1e6);
                     }
-                    if obs_on {
-                        obs.count(&format!("{cprefix}.drops"), 1);
+                    if self.obs_on {
+                        self.obs.count(&format!("{}.drops", self.cprefix), 1);
                     }
                 }
                 // A drop is a deadline miss by definition, so it freezes
                 // the flight recorder exactly like a late completion.
-                if let Some(f) = flight.as_mut() {
+                if let Some(f) = self.flight.as_mut() {
                     f.trigger_miss(d.task, d.id, region, now);
                 }
             }
             if let Some(req) = chosen {
                 let first = plan.costs[req.task][region].stages[0];
-                regions[region].serving = Some(Service {
+                let mut bytes0 = first.dram_bytes;
+                // Cold-start: a chip not warm for this task reloads
+                // `cold_frac` of the request's total DRAM traffic up
+                // front. None on a single array — this arm then costs
+                // zero float operations, preserving bit-identity.
+                if let Some(w) = self.warm.as_mut() {
+                    if now > w.until_s[req.task] {
+                        let total: f64 = plan.costs[req.task][region]
+                            .stages
+                            .iter()
+                            .map(|s| s.dram_bytes)
+                            .sum();
+                        bytes0 += w.cold_frac * total;
+                        w.cold_loads += 1;
+                    }
+                }
+                self.regions[region].serving = Some(Service {
                     req,
                     start_s: now,
                     stage: 0,
                     stage_start_s: now,
                     floor_rem: first.floor_cycles,
-                    bytes_rem: first.dram_bytes,
+                    bytes_rem: bytes0,
                     alloc: 0.0,
                     donated_bytes: 0.0,
                 });
-                if opts.record_trace {
-                    trace.push(TraceEvent {
+                if self.opts.record_trace {
+                    self.trace.push(TraceEvent {
                         t_s: now,
                         task: req.task,
                         id: req.id,
                         kind: TraceKind::Start { region },
                     });
                 }
-                if rec_on {
-                    let name = format!("dispatch {}#{}", task_names[req.task], req.id);
-                    obs.instant(&name, pid, region as u32, now * 1e6);
-                    if let Some(f) = &flight {
-                        f.instant(&name, pid, region as u32, now * 1e6);
+                if self.rec_on {
+                    let name = format!("dispatch {}#{}", self.task_names[req.task], req.id);
+                    self.obs.instant(&name, self.pid, region as u32, now * 1e6);
+                    if let Some(f) = &self.flight {
+                        f.instant(&name, self.pid, region as u32, now * 1e6);
                     }
-                    if obs_on {
-                        obs.count(&format!("{cprefix}.dispatches"), 1);
+                    if self.obs_on {
+                        self.obs.count(&format!("{}.dispatches", self.cprefix), 1);
                     }
                 }
             }
@@ -777,8 +993,15 @@ pub fn simulate_with_scratch(
 
         // New epoch: re-split bandwidth and reschedule every busy region's
         // completion under the fresh rates (older events go stale).
-        reallocate(&mut regions, plan, opts.bandwidth, demands, bw);
-        for (ri, r) in regions.iter_mut().enumerate() {
+        reallocate(
+            &mut self.regions,
+            plan,
+            self.opts.bandwidth,
+            &mut self.demands,
+            &mut self.bw,
+        );
+        let slot_base = self.slot_base;
+        for (ri, r) in self.regions.iter_mut().enumerate() {
             if let Some(s) = &r.serving {
                 r.version += 1;
                 let dram_t = if s.bytes_rem > 0.0 {
@@ -786,15 +1009,13 @@ pub fn simulate_with_scratch(
                 } else {
                     0.0
                 };
-                heap.push(Reverse(Ev {
-                    t_s: now + s.floor_rem.max(dram_t) / clock,
-                    seq,
-                    kind: EvKind::Completion {
-                        region: ri,
+                core.push(
+                    now + s.floor_rem.max(dram_t) / clock,
+                    CoreEvent::Internal {
+                        slot: slot_base + ri,
                         version: r.version,
                     },
-                }));
-                seq += 1;
+                );
             }
         }
 
@@ -803,22 +1024,27 @@ pub fn simulate_with_scratch(
         // event. The flight recorder gets every counter track too, so
         // its frozen snippet satisfies the same schema checks
         // (tools/trace_check.py) a full `--trace-out` export does.
-        if rec_on {
-            if obs_on {
-                obs.count(&format!("{cprefix}.epochs"), 1);
+        if self.rec_on {
+            let obs = self.obs;
+            let pid = self.pid;
+            if self.obs_on {
+                obs.count(&format!("{}.epochs", self.cprefix), 1);
             }
             let ts = now * 1e6;
-            let depths: Vec<(&str, f64)> = task_names
+            let depths: Vec<(&str, f64)> = self
+                .task_names
                 .iter()
                 .map(String::as_str)
-                .zip(queues.iter().map(|q| q.len() as f64))
+                .zip(self.queues.iter().map(|q| q.len() as f64))
                 .collect();
             obs.counter("queue_depth", pid, ts, &depths);
-            let granted: Vec<f64> = regions
+            let granted: Vec<f64> = self
+                .regions
                 .iter()
                 .map(|r| r.serving.as_ref().map_or(0.0, |s| s.alloc))
                 .collect();
-            let bw: Vec<(&str, f64)> = region_keys
+            let bw: Vec<(&str, f64)> = self
+                .region_keys
                 .iter()
                 .map(String::as_str)
                 .zip(granted.iter().copied())
@@ -828,24 +1054,26 @@ pub fn simulate_with_scratch(
             obs.counter("dram_bw_donated", pid, ts, &[("donated", donated)]);
             let mut util: Vec<(&str, f64)> = Vec::new();
             if now > 0.0 {
-                util = region_keys
+                util = self
+                    .region_keys
                     .iter()
                     .map(String::as_str)
                     .zip(
-                        regions
+                        self.regions
                             .iter()
                             .map(|r| (r.busy_cycles / (now * clock)).min(1.0)),
                     )
                     .collect();
                 obs.counter("region_util", pid, ts, &util);
             }
-            let worst = regions
+            let worst = self
+                .regions
                 .iter()
                 .filter_map(|r| r.serving.as_ref())
                 .map(|s| plan.cosched.cosched.assignments[s.req.task].worst_channel_load)
                 .fold(0.0f64, f64::max);
             obs.counter("worst_channel_load", pid, ts, &[("load", worst)]);
-            if let Some(f) = &flight {
+            if let Some(f) = &self.flight {
                 f.counter("queue_depth", pid, ts, &depths);
                 f.counter("dram_bw", pid, ts, &bw);
                 f.counter("dram_bw_donated", pid, ts, &[("donated", donated)]);
@@ -857,54 +1085,95 @@ pub fn simulate_with_scratch(
         }
     }
 
-    let span_s = now.max(1e-12);
-    if obs_on {
-        obs.gauge(&format!("{cprefix}.span_s"), span_s);
-        // This run's split-memo effectiveness, as deltas (the scratch —
-        // and so its lifetime totals — may be shared across runs).
-        let (bw_hits, bw_misses) = bw.stats();
-        obs.count(&format!("{cprefix}.bw_cache_hits"), bw_hits - bw_hits0);
-        obs.count(&format!("{cprefix}.bw_cache_misses"), bw_misses - bw_misses0);
+    /// Close the books at `span_s` (the driver's last live event time,
+    /// floored at 1e-12): emit the run-level obs summary, reduce the raw
+    /// records to [`TaskMetrics`], and hand back the scratch buffers the
+    /// model borrowed so `simulate_with_scratch` can restore them.
+    pub(super) fn finish_parts(
+        self,
+        span_s: f64,
+    ) -> (ServeOutcome, Vec<Option<f64>>, BandwidthCache) {
+        if self.obs_on {
+            self.obs.gauge(&format!("{}.span_s", self.cprefix), span_s);
+            // This run's split-memo effectiveness, as deltas (the scratch —
+            // and so its lifetime totals — may be shared across runs).
+            let (bw_hits, bw_misses) = self.bw.stats();
+            self.obs.count(
+                &format!("{}.bw_cache_hits", self.cprefix),
+                bw_hits - self.bw_hits0,
+            );
+            self.obs.count(
+                &format!("{}.bw_cache_misses", self.cprefix),
+                bw_misses - self.bw_misses0,
+            );
+        }
+        let clock = self.plan.clock_hz;
+        let tasks: Vec<TaskMetrics> = self
+            .scenario
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(t, spec)| {
+                let lat_ms: Vec<f64> = self.recs[t].iter().map(|r| r.latency_s * 1e3).collect();
+                let waits_ms: Vec<f64> = self.recs[t].iter().map(|r| r.wait_s * 1e3).collect();
+                let late = self.recs[t].iter().filter(|r| r.missed).count() as u64;
+                let lat = Histogram::from_samples(&lat_ms);
+                TaskMetrics {
+                    task: spec.name().to_string(),
+                    rate_hz: spec.rate_hz,
+                    deadline_ms: spec.deadline_ms,
+                    requests: self.arrived[t],
+                    completed: self.recs[t].len() as u64,
+                    dropped: self.drops[t],
+                    missed: late + self.drops[t],
+                    p50_ms: lat.percentile(50.0),
+                    p95_ms: lat.percentile(95.0),
+                    p99_ms: lat.percentile(99.0),
+                    mean_wait_ms: if waits_ms.is_empty() {
+                        0.0
+                    } else {
+                        waits_ms.iter().sum::<f64>() / waits_ms.len() as f64
+                    },
+                    max_queue_depth: self.max_depth[t],
+                    utilization: self.regions[t].busy_cycles / (span_s * clock),
+                }
+            })
+            .collect();
+        let out = ServeOutcome {
+            policy: self.policy,
+            scenario: self.scenario.name.clone(),
+            bandwidth: self.opts.bandwidth,
+            tasks,
+            span_s,
+            trace: self.trace,
+            attr: self.attr,
+            flight: self.flight.map(|f| f.finish(self.now)),
+        };
+        (out, self.demands, self.bw)
     }
-    let tasks: Vec<TaskMetrics> = scenario
-        .tasks
-        .iter()
-        .enumerate()
-        .map(|(t, spec)| {
-            let lat_ms: Vec<f64> = recs[t].iter().map(|r| r.latency_s * 1e3).collect();
-            let waits_ms: Vec<f64> = recs[t].iter().map(|r| r.wait_s * 1e3).collect();
-            let late = recs[t].iter().filter(|r| r.missed).count() as u64;
-            let lat = Histogram::from_samples(&lat_ms);
-            TaskMetrics {
-                task: spec.name().to_string(),
-                rate_hz: spec.rate_hz,
-                deadline_ms: spec.deadline_ms,
-                requests: arrivals[t].len() as u64,
-                completed: recs[t].len() as u64,
-                dropped: drops[t],
-                missed: late + drops[t],
-                p50_ms: lat.percentile(50.0),
-                p95_ms: lat.percentile(95.0),
-                p99_ms: lat.percentile(99.0),
-                mean_wait_ms: if waits_ms.is_empty() {
-                    0.0
-                } else {
-                    waits_ms.iter().sum::<f64>() / waits_ms.len() as f64
-                },
-                max_queue_depth: max_depth[t],
-                utilization: regions[t].busy_cycles / (span_s * clock),
-            }
-        })
-        .collect();
-    ServeOutcome {
-        policy,
-        scenario: scenario.name.clone(),
-        bandwidth: opts.bandwidth,
-        tasks,
-        span_s,
-        trace,
-        attr,
-        flight: flight.map(|f| f.finish(now)),
+
+    /// [`ArrayModel::finish_parts`] without the scratch hand-back — the
+    /// entry for callers that built the model with fresh buffers.
+    pub fn finish(self, span_s: f64) -> ServeOutcome {
+        self.finish_parts(span_s).0
+    }
+}
+
+impl ServiceModel for ArrayModel<'_> {
+    fn is_stale(&self, slot: usize, version: u64) -> bool {
+        self.regions[slot - self.slot_base].version != version
+    }
+
+    fn on_arrival(&mut self, req: Request, t_s: f64, core: &mut EventCore) {
+        self.advance_to(t_s);
+        self.handle_arrival(req);
+        self.post_event(core);
+    }
+
+    fn on_internal(&mut self, slot: usize, t_s: f64, core: &mut EventCore) {
+        self.advance_to(t_s);
+        self.handle_completion(slot - self.slot_base);
+        self.post_event(core);
     }
 }
 

@@ -1,0 +1,1130 @@
+//! Fleet-scale serving: N array instances behind a front-door router.
+//!
+//! A fleet is `Vec<ServePlan>` — one planned chip per entry, optionally
+//! heterogeneous (different array dims picked from the DSE frontier) —
+//! composed behind one [`EventCore`]. Each chip is the unmodified
+//! single-array [`ArrayModel`]; the fleet offsets chip `c`'s region slots
+//! by a per-chip base so completions route back to the owning chip, and
+//! the shared heap delivers events in global time order while each chip
+//! drains its in-flight work lazily against its own clock (sound because
+//! a chip's drain rates only change at that chip's own events).
+//!
+//! The front door stacks three decisions per arrival, in order:
+//!
+//! 1. **Autoscaling** ([`AutoscaleConfig`], optional): a rate-limited
+//!    control loop that spins chips up (after a warm-up delay) when mean
+//!    backlog crosses the high watermark and drains them down when it
+//!    falls below the low one. Down chips finish what they hold but
+//!    receive no new requests; up-time is integrated into the fleet's
+//!    cost-per-million-requests.
+//! 2. **Admission** ([`AdmissionPolicy`]): optionally reject a request
+//!    whose deadline no up chip can meet even at its best-case service
+//!    time — rejected requests count as missed but never occupy a chip.
+//! 3. **Routing** ([`RouterPolicy`]): round-robin baseline,
+//!    join-shortest-queue, deadline-aware earliest-finish, or scenario
+//!    affinity (a chip kept warm for a task keeps receiving it).
+//!
+//! With identical chips, static bandwidth, no borrowing and no cold-start
+//! penalty, every (chip, task) server has a constant deterministic
+//! service time, so greedy least-backlog routing keeps each task's sorted
+//! workload vector pointwise minimal — JSQ (and affinity, which differs
+//! from JSQ only in *which idle* chip it picks) can never miss a deadline
+//! round-robin meets. `tests/fleet_integration.rs` pins that dominance on
+//! every canned scenario under the diurnal curve.
+
+use crate::config::ArchConfig;
+use crate::cosched::{CoschedConfig, Scenario};
+use crate::dse::EvalCache;
+use crate::obs::Obs;
+use crate::util::stats::Histogram;
+
+use super::core::{drive, EventCore, ServiceModel};
+use super::dispatch::{Policy, Request};
+use super::engine::{plan_scenario, push_arrivals, ArrayModel, ServePlan, SimOptions, Warmth};
+use super::interference::BandwidthCache;
+use super::metrics::{ServeOutcome, TaskMetrics};
+use super::ServeConfig;
+
+/// Slack for admission's deadline comparison, mirroring the engine's
+/// dispatch epsilon so boundary float residue never flips a verdict.
+const ADMIT_EPS_S: f64 = 1e-9;
+
+/// Front-door routing policy: which up chip gets the next request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Cycle through up chips in index order — the baseline every other
+    /// policy is measured against.
+    RoundRobin,
+    /// Join-shortest-queue: least per-task backlog (queued + in-service,
+    /// in seconds at the chip's nominal service time), ties broken by
+    /// whole-chip load then chip index.
+    Jsq,
+    /// Earliest predicted finish: `now + backlog + nominal`, so a faster
+    /// heterogeneous chip wins even with a slightly longer queue.
+    Deadline,
+    /// Scenario affinity: task `t` sticks to its preferred chip while
+    /// that chip has no backlog for it, spilling to JSQ under load —
+    /// a chip warm for `xr-world` keeps receiving `xr-world`.
+    Affinity,
+}
+
+impl RouterPolicy {
+    pub const ALL: [RouterPolicy; 4] = [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::Jsq,
+        RouterPolicy::Deadline,
+        RouterPolicy::Affinity,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::Jsq => "jsq",
+            RouterPolicy::Deadline => "deadline",
+            RouterPolicy::Affinity => "affinity",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RouterPolicy> {
+        RouterPolicy::ALL.into_iter().find(|r| r.name() == s)
+    }
+}
+
+/// Parse `--router`: `all` or a comma-separated list, deduplicated,
+/// order preserved — the same grammar as `--policy`.
+pub fn parse_routers(s: &str) -> Result<Vec<RouterPolicy>, String> {
+    if s == "all" {
+        return Ok(RouterPolicy::ALL.to_vec());
+    }
+    let names: Vec<&str> = RouterPolicy::ALL.iter().map(|r| r.name()).collect();
+    let mut out = Vec::new();
+    for name in s.split(',').map(str::trim).filter(|x| !x.is_empty()) {
+        let r = RouterPolicy::from_name(name).ok_or_else(|| {
+            let mut msg = format!("unknown router `{name}` (known: {})", names.join(", "));
+            if let Some(hint) = crate::cli::suggest(name, &names) {
+                msg.push_str(&format!("; did you mean `{hint}`?"));
+            }
+            msg
+        })?;
+        if !out.contains(&r) {
+            out.push(r);
+        }
+    }
+    if out.is_empty() {
+        return Err("empty router list".to_string());
+    }
+    Ok(out)
+}
+
+/// Front-door admission control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit everything; overload shows up as queueing and misses.
+    All,
+    /// Reject a request no up chip can finish by its deadline even at
+    /// the best-case (full-bandwidth) service time. A rejection counts
+    /// as a miss but never occupies a chip — load shedding.
+    Deadline,
+}
+
+impl AdmissionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::All => "all",
+            AdmissionPolicy::Deadline => "deadline",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<AdmissionPolicy> {
+        match s {
+            "all" => Some(AdmissionPolicy::All),
+            "deadline" => Some(AdmissionPolicy::Deadline),
+            _ => None,
+        }
+    }
+}
+
+/// Autoscaler knobs. Watermarks are mean per-up-chip backlog seconds;
+/// the control loop runs at most once per `interval_s` and takes one
+/// action per tick (spin up one down chip, or drain one up chip).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Never drain below this many up chips.
+    pub min_chips: usize,
+    /// Spin-up delay: a woken chip serves only after this warm-up.
+    pub spinup_s: f64,
+    /// Mean backlog above which a down chip is woken.
+    pub high_backlog_s: f64,
+    /// Mean backlog below which a surplus chip is drained.
+    pub low_backlog_s: f64,
+    /// Minimum time between control actions.
+    pub interval_s: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_chips: 1,
+            spinup_s: 0.02,
+            high_backlog_s: 0.01,
+            low_backlog_s: 0.001,
+            interval_s: 0.005,
+        }
+    }
+}
+
+/// Lifecycle of one chip under the autoscaler. Without an autoscaler
+/// every chip is `Up` for the whole run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ChipState {
+    Up { since_s: f64 },
+    Warming { ready_s: f64 },
+    Down,
+}
+
+/// Fleet-level configuration parsed from the `pipeorgan fleet` CLI.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Number of array instances.
+    pub chips: usize,
+    /// Routers to simulate (each gets its own run over the same traffic).
+    pub routers: Vec<RouterPolicy>,
+    pub admission: AdmissionPolicy,
+    /// `None` keeps every chip up for the whole run.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Cold-start model `(cold_frac, decay_s)`: a chip not serving task
+    /// `t` within `decay_s` pays `cold_frac` of the request's DRAM bytes
+    /// again on its first stage (weights re-load). `None` = always warm.
+    pub warm: Option<(f64, f64)>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            chips: 3,
+            routers: RouterPolicy::ALL.to_vec(),
+            admission: AdmissionPolicy::All,
+            autoscale: None,
+            warm: None,
+        }
+    }
+}
+
+/// Flags of the `fleet` subcommand beyond the shared serve set:
+/// `(name, takes_value)` rows merged into `main::known_flags`.
+pub const FLEET_FLAGS: &[(&str, bool)] = &[
+    ("chips", true),
+    ("chip-dims", true),
+    ("router", true),
+    ("admission", true),
+    ("autoscale", false),
+    ("min-chips", true),
+    ("spinup-s", true),
+    ("scale-high-s", true),
+    ("scale-low-s", true),
+    ("scale-interval-s", true),
+    ("cold-frac", true),
+    ("warm-decay-s", true),
+];
+
+impl FleetConfig {
+    pub fn from_cli(args: &crate::cli::Args) -> Result<FleetConfig, String> {
+        let chips = args.get_usize("chips", 3)?;
+        if chips == 0 {
+            return Err("flag `--chips` must be at least 1".to_string());
+        }
+        let routers = parse_routers(args.get_or("router", "all"))?;
+        let admission = match args.get_enum("admission", "all", &["all", "deadline"])? {
+            "deadline" => AdmissionPolicy::Deadline,
+            _ => AdmissionPolicy::All,
+        };
+        let autoscale = if args.has("autoscale") {
+            let d = AutoscaleConfig::default();
+            let min_chips = args.get_usize("min-chips", d.min_chips)?;
+            if min_chips == 0 || min_chips > chips {
+                return Err(format!(
+                    "flag `--min-chips` must be in 1..={chips}, got `{min_chips}`"
+                ));
+            }
+            let spinup_s = args.get_f64("spinup-s", d.spinup_s)?;
+            let high_backlog_s = args.get_f64("scale-high-s", d.high_backlog_s)?;
+            let low_backlog_s = args.get_f64("scale-low-s", d.low_backlog_s)?;
+            let interval_s = args.get_f64("scale-interval-s", d.interval_s)?;
+            if spinup_s < 0.0 || high_backlog_s < 0.0 || low_backlog_s < 0.0 || interval_s < 0.0 {
+                return Err("autoscale durations and watermarks must be >= 0".to_string());
+            }
+            if low_backlog_s > high_backlog_s {
+                return Err(format!(
+                    "flag `--scale-low-s` ({low_backlog_s}) must not exceed `--scale-high-s` ({high_backlog_s})"
+                ));
+            }
+            Some(AutoscaleConfig {
+                min_chips,
+                spinup_s,
+                high_backlog_s,
+                low_backlog_s,
+                interval_s,
+            })
+        } else {
+            None
+        };
+        let cold_frac = args.get_f64("cold-frac", 0.0)?;
+        if cold_frac < 0.0 {
+            return Err(format!("flag `--cold-frac` must be >= 0, got `{cold_frac}`"));
+        }
+        let warm = if cold_frac > 0.0 {
+            let decay_s = args.get_f64("warm-decay-s", 0.05)?;
+            if decay_s < 0.0 {
+                return Err(format!("flag `--warm-decay-s` must be >= 0, got `{decay_s}`"));
+            }
+            Some((cold_frac, decay_s))
+        } else {
+            None
+        };
+        Ok(FleetConfig {
+            chips,
+            routers,
+            admission,
+            autoscale,
+            warm,
+        })
+    }
+}
+
+/// One chip's fleet-level accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipStats {
+    pub chip: usize,
+    /// PEs this chip contributes (regions summed) — the cost weight.
+    pub pes: usize,
+    /// Requests the router sent here.
+    pub routed: u64,
+    pub completed: u64,
+    pub missed: u64,
+    /// Mean home-region utilization across tasks over the fleet span —
+    /// the per-chip utilization spread the report surfaces.
+    pub mean_util: f64,
+    /// Integrated up-time (autoscaler-aware) over the fleet span.
+    pub up_s: f64,
+    /// Cold-start weight reloads paid (0 without a warm model).
+    pub cold_loads: u64,
+}
+
+/// One router's full fleet simulation result.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    pub router: RouterPolicy,
+    pub policy: Policy,
+    pub scenario: String,
+    pub span_s: f64,
+    /// Pooled per-task metrics across all chips: percentiles over the
+    /// union of raw completion samples (not averaged chip quantiles);
+    /// `requests`/`missed` include admission rejections.
+    pub tasks: Vec<TaskMetrics>,
+    pub chips: Vec<ChipStats>,
+    /// Requests shed by admission control (counted as missed).
+    pub rejected: u64,
+    /// PE-seconds of up-time per million completed requests — the
+    /// fleet's cost metric (0 when nothing completed).
+    pub cost_pe_s_per_m: f64,
+    /// Autoscaler actions taken (spin-ups + drains).
+    pub scale_events: u64,
+    /// Each chip's own [`ServeOutcome`] (trace, attr, flight), so the
+    /// obs/attr/noc machinery reuses the single-array report paths.
+    pub chip_outcomes: Vec<ServeOutcome>,
+}
+
+impl FleetOutcome {
+    pub fn total_requests(&self) -> u64 {
+        self.tasks.iter().map(|t| t.requests).sum()
+    }
+
+    pub fn total_missed(&self) -> u64 {
+        self.tasks.iter().map(|t| t.missed).sum()
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        let total = self.total_requests();
+        if total == 0 {
+            0.0
+        } else {
+            self.total_missed() as f64 / total as f64
+        }
+    }
+}
+
+/// The composite [`ServiceModel`]: front door + N chips on one core.
+struct FleetSim<'a> {
+    chips: Vec<ArrayModel<'a>>,
+    /// Chip `c` owns global slots `[slot_base[c], slot_base[c+1])`
+    /// (the last entry is the total slot count).
+    slot_base: Vec<usize>,
+    router: RouterPolicy,
+    admission: AdmissionPolicy,
+    autoscale: Option<AutoscaleConfig>,
+    states: Vec<ChipState>,
+    /// `nominal_s[c][t]`: task `t`'s home-region service seconds on chip
+    /// `c` at the static share — the backlog/ETA unit.
+    nominal_s: Vec<Vec<f64>>,
+    /// Best-case (full-bandwidth) service seconds — admission's bound.
+    best_s: Vec<Vec<f64>>,
+    rr: usize,
+    next_control_s: f64,
+    routed: Vec<u64>,
+    rejected_per_task: Vec<u64>,
+    up_s: Vec<f64>,
+    scale_events: u64,
+}
+
+impl FleetSim<'_> {
+    fn chip_of_slot(&self, slot: usize) -> usize {
+        // Few chips: a scan beats a binary search at this size.
+        (1..self.slot_base.len())
+            .find(|&c| slot < self.slot_base[c])
+            .map(|c| c - 1)
+            .expect("slot within fleet range")
+    }
+
+    fn up_chips(&self) -> Vec<usize> {
+        (0..self.chips.len())
+            .filter(|&c| matches!(self.states[c], ChipState::Up { .. }))
+            .collect()
+    }
+
+    /// Task `t`'s backlog on chip `c` in seconds: queued plus in-service
+    /// requests at the nominal rate. Queue lengths and serving flags only
+    /// change at the chip's own events, so this is exact at any global
+    /// instant even though the chip's clock may lag.
+    fn backlog_s(&self, c: usize, task: usize) -> f64 {
+        let inflight = self.chips[c].queue_len(task) + usize::from(self.chips[c].region_busy(task));
+        inflight as f64 * self.nominal_s[c][task]
+    }
+
+    fn total_backlog_s(&self, c: usize) -> f64 {
+        (0..self.nominal_s[c].len()).map(|t| self.backlog_s(c, t)).sum()
+    }
+
+    /// JSQ pick among `ups`: least per-task backlog, then least
+    /// whole-chip load, then lowest index. The whole-chip tie-break makes
+    /// JSQ prefer a fully idle chip among per-task-idle ties — the
+    /// spread round-robin gets by construction.
+    fn jsq_pick(&self, ups: &[usize], task: usize) -> usize {
+        let mut best = ups[0];
+        let mut best_backlog = self.backlog_s(best, task);
+        let mut best_load = self.chips[best].total_in_system();
+        for &c in &ups[1..] {
+            let backlog = self.backlog_s(c, task);
+            let load = self.chips[c].total_in_system();
+            if backlog < best_backlog || (backlog == best_backlog && load < best_load) {
+                best = c;
+                best_backlog = backlog;
+                best_load = load;
+            }
+        }
+        best
+    }
+
+    /// Deadline-aware pick: earliest predicted finish `now + backlog +
+    /// nominal`, so a faster chip can win with a longer queue.
+    fn deadline_pick(&self, ups: &[usize], task: usize, t_s: f64) -> usize {
+        let mut best = ups[0];
+        let mut best_eta = t_s + self.backlog_s(best, task) + self.nominal_s[best][task];
+        let mut best_load = self.chips[best].total_in_system();
+        for &c in &ups[1..] {
+            let eta = t_s + self.backlog_s(c, task) + self.nominal_s[c][task];
+            let load = self.chips[c].total_in_system();
+            if eta < best_eta || (eta == best_eta && load < best_load) {
+                best = c;
+                best_eta = eta;
+                best_load = load;
+            }
+        }
+        best
+    }
+
+    fn route(&mut self, task: usize, t_s: f64) -> usize {
+        let ups = self.up_chips();
+        debug_assert!(!ups.is_empty(), "autoscaler keeps >= min_chips up");
+        match self.router {
+            RouterPolicy::RoundRobin => {
+                let c = ups[self.rr % ups.len()];
+                self.rr += 1;
+                c
+            }
+            RouterPolicy::Jsq => self.jsq_pick(&ups, task),
+            RouterPolicy::Deadline => self.deadline_pick(&ups, task, t_s),
+            RouterPolicy::Affinity => {
+                let preferred = ups[task % ups.len()];
+                if self.backlog_s(preferred, task) > 0.0 {
+                    self.jsq_pick(&ups, task)
+                } else {
+                    preferred
+                }
+            }
+        }
+    }
+
+    fn admit(&self, req: &Request, t_s: f64) -> bool {
+        match self.admission {
+            AdmissionPolicy::All => true,
+            AdmissionPolicy::Deadline => self.up_chips().iter().any(|&c| {
+                t_s + self.backlog_s(c, req.task) + self.best_s[c][req.task]
+                    <= req.deadline_s + ADMIT_EPS_S
+            }),
+        }
+    }
+
+    /// Autoscaler tick: promote due warm-ups (always), then at most one
+    /// watermark action per `interval_s`.
+    fn control(&mut self, t_s: f64) {
+        let Some(cfg) = self.autoscale else { return };
+        for c in 0..self.states.len() {
+            if let ChipState::Warming { ready_s } = self.states[c] {
+                if ready_s <= t_s {
+                    self.states[c] = ChipState::Up { since_s: ready_s };
+                }
+            }
+        }
+        if t_s < self.next_control_s {
+            return;
+        }
+        self.next_control_s = t_s + cfg.interval_s;
+        let ups = self.up_chips();
+        if ups.is_empty() {
+            return;
+        }
+        let mean_backlog =
+            ups.iter().map(|&c| self.total_backlog_s(c)).sum::<f64>() / ups.len() as f64;
+        if mean_backlog > cfg.high_backlog_s {
+            if let Some(c) =
+                (0..self.states.len()).find(|&c| matches!(self.states[c], ChipState::Down))
+            {
+                self.states[c] = ChipState::Warming {
+                    ready_s: t_s + cfg.spinup_s,
+                };
+                self.scale_events += 1;
+            }
+        } else if mean_backlog < cfg.low_backlog_s && ups.len() > cfg.min_chips {
+            // Drain the highest-index up chip: it finishes what it holds
+            // (completions still fire) but receives no new requests.
+            let c = *ups.last().expect("non-empty");
+            if let ChipState::Up { since_s } = self.states[c] {
+                self.up_s[c] += (t_s - since_s).max(0.0);
+            }
+            self.states[c] = ChipState::Down;
+            self.scale_events += 1;
+        }
+    }
+}
+
+impl ServiceModel for FleetSim<'_> {
+    fn is_stale(&self, slot: usize, version: u64) -> bool {
+        let c = self.chip_of_slot(slot);
+        self.chips[c].is_stale(slot, version)
+    }
+
+    fn on_arrival(&mut self, req: Request, t_s: f64, core: &mut EventCore) {
+        self.control(t_s);
+        if !self.admit(&req, t_s) {
+            self.rejected_per_task[req.task] += 1;
+            return;
+        }
+        let c = self.route(req.task, t_s);
+        self.routed[c] += 1;
+        self.chips[c].on_arrival(req, t_s, core);
+    }
+
+    fn on_internal(&mut self, slot: usize, t_s: f64, core: &mut EventCore) {
+        let c = self.chip_of_slot(slot);
+        self.chips[c].on_internal(slot, t_s, core);
+    }
+}
+
+/// Simulate one router over `arrivals` against a fleet of `plans`.
+/// Deterministic: same inputs, same [`FleetOutcome`], bit for bit —
+/// traffic is routed at arrival instants from the shared heap, chips
+/// drain lazily, and every tie-break is total.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fleet(
+    scenario: &Scenario,
+    plans: &[ServePlan],
+    policy: Policy,
+    router: RouterPolicy,
+    fc: &FleetConfig,
+    opts: SimOptions,
+    arrivals: &[Vec<f64>],
+    obs: &Obs,
+) -> FleetOutcome {
+    assert!(!plans.is_empty(), "fleet needs at least one chip");
+    let n = scenario.tasks.len();
+    assert_eq!(arrivals.len(), n, "one arrival stream per task");
+
+    let mut chips = Vec::with_capacity(plans.len());
+    let mut slot_base = vec![0usize];
+    let mut nominal_s = Vec::with_capacity(plans.len());
+    let mut best_s = Vec::with_capacity(plans.len());
+    for (c, plan) in plans.iter().enumerate() {
+        let base = *slot_base.last().expect("seeded");
+        let warm = fc
+            .warm
+            .map(|(cold_frac, decay_s)| Warmth::new(cold_frac, decay_s, n));
+        chips.push(ArrayModel::with_parts(
+            scenario,
+            plan,
+            policy,
+            opts,
+            obs,
+            Some(c),
+            base,
+            Vec::new(),
+            BandwidthCache::new(),
+            warm,
+        ));
+        slot_base.push(base + plan.regions.len());
+        nominal_s.push((0..n).map(|t| plan.costs[t][t].nominal_cycles / plan.clock_hz).collect());
+        best_s.push((0..n).map(|t| plan.costs[t][t].best_case_cycles / plan.clock_hz).collect());
+    }
+
+    let mut events = EventCore::new();
+    // Deadlines are scenario properties, identical across chip plans.
+    push_arrivals(&mut events, &plans[0], arrivals);
+
+    let mut fleet = FleetSim {
+        states: vec![ChipState::Up { since_s: 0.0 }; chips.len()],
+        routed: vec![0; chips.len()],
+        rejected_per_task: vec![0; n],
+        up_s: vec![0.0; chips.len()],
+        chips,
+        slot_base,
+        router,
+        admission: fc.admission,
+        autoscale: fc.autoscale,
+        nominal_s,
+        best_s,
+        rr: 0,
+        next_control_s: 0.0,
+        scale_events: 0,
+    };
+    let last_s = drive(&mut fleet, &mut events);
+    let span_s = last_s.max(1e-12);
+
+    let FleetSim {
+        chips,
+        states,
+        routed,
+        rejected_per_task,
+        mut up_s,
+        scale_events,
+        ..
+    } = fleet;
+    for (c, st) in states.iter().enumerate() {
+        if let ChipState::Up { since_s } = st {
+            up_s[c] += (span_s - since_s).max(0.0);
+        }
+    }
+
+    // Pool raw completion samples before finish() consumes the models —
+    // fleet percentiles come from the union of samples, not from
+    // averaging per-chip quantiles.
+    let mut pooled_lat_ms: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut pooled_wait_ms: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut cold_loads: Vec<u64> = Vec::with_capacity(chips.len());
+    for chip in &chips {
+        cold_loads.push(chip.cold_loads());
+        for (t, recs) in chip.records().iter().enumerate() {
+            for r in recs {
+                pooled_lat_ms[t].push(r.latency_s * 1e3);
+                pooled_wait_ms[t].push(r.wait_s * 1e3);
+            }
+        }
+    }
+    let chip_outcomes: Vec<ServeOutcome> =
+        chips.into_iter().map(|m| m.finish(span_s)).collect();
+
+    let tasks: Vec<TaskMetrics> = (0..n)
+        .map(|t| {
+            let sum = |get: fn(&TaskMetrics) -> u64| -> u64 {
+                chip_outcomes.iter().map(|o| get(&o.tasks[t])).sum()
+            };
+            let requests = sum(|m| m.requests) + rejected_per_task[t];
+            let hist = Histogram::from_samples(&pooled_lat_ms[t]);
+            let mean_wait_ms = if pooled_wait_ms[t].is_empty() {
+                0.0
+            } else {
+                pooled_wait_ms[t].iter().sum::<f64>() / pooled_wait_ms[t].len() as f64
+            };
+            let proto = &chip_outcomes[0].tasks[t];
+            TaskMetrics {
+                task: proto.task.clone(),
+                rate_hz: proto.rate_hz,
+                deadline_ms: proto.deadline_ms,
+                requests,
+                completed: sum(|m| m.completed),
+                dropped: sum(|m| m.dropped),
+                missed: sum(|m| m.missed) + rejected_per_task[t],
+                p50_ms: hist.percentile(50.0),
+                p95_ms: hist.percentile(95.0),
+                p99_ms: hist.percentile(99.0),
+                mean_wait_ms,
+                max_queue_depth: chip_outcomes
+                    .iter()
+                    .map(|o| o.tasks[t].max_queue_depth)
+                    .max()
+                    .unwrap_or(0),
+                utilization: chip_outcomes
+                    .iter()
+                    .map(|o| o.tasks[t].utilization)
+                    .sum::<f64>()
+                    / chip_outcomes.len() as f64,
+            }
+        })
+        .collect();
+
+    let chip_stats: Vec<ChipStats> = chip_outcomes
+        .iter()
+        .enumerate()
+        .map(|(c, o)| ChipStats {
+            chip: c,
+            pes: plans[c].regions.iter().map(|r| r.num_pes()).sum(),
+            routed: routed[c],
+            completed: o.tasks.iter().map(|m| m.completed).sum(),
+            missed: o.tasks.iter().map(|m| m.missed).sum(),
+            mean_util: o.tasks.iter().map(|m| m.utilization).sum::<f64>()
+                / o.tasks.len().max(1) as f64,
+            up_s: up_s[c],
+            cold_loads: cold_loads[c],
+        })
+        .collect();
+
+    let completed_total: u64 = chip_stats.iter().map(|c| c.completed).sum();
+    let pe_s: f64 = chip_stats.iter().map(|c| c.up_s * c.pes as f64).sum();
+    let cost_pe_s_per_m = if completed_total > 0 {
+        pe_s / (completed_total as f64 / 1e6)
+    } else {
+        0.0
+    };
+
+    FleetOutcome {
+        router,
+        policy,
+        scenario: scenario.name.clone(),
+        span_s,
+        tasks,
+        chips: chip_stats,
+        rejected: rejected_per_task.iter().sum(),
+        cost_pe_s_per_m,
+        scale_events,
+        chip_outcomes,
+    }
+}
+
+/// Parse `--chip-dims "16x16,32x16"`: per-chip array dims for a
+/// heterogeneous fleet (e.g. picked from the DSE frontier), cycled when
+/// the list is shorter than `--chips`.
+pub fn parse_chip_dims(s: &str) -> Result<Vec<(usize, usize)>, String> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|x| !x.is_empty()) {
+        let (r, c) = part
+            .split_once('x')
+            .ok_or_else(|| format!("bad chip dims `{part}` (expected RxC, e.g. 16x16)"))?;
+        let rows: usize = r
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad chip rows in `{part}`"))?;
+        let cols: usize = c
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad chip cols in `{part}`"))?;
+        if rows == 0 || cols == 0 {
+            return Err(format!("chip dims must be positive in `{part}`"));
+        }
+        out.push((rows, cols));
+    }
+    if out.is_empty() {
+        return Err("flag `--chip-dims` lists no dims".to_string());
+    }
+    Ok(out)
+}
+
+/// One scenario's full fleet study: every configured router × dispatch
+/// policy replayed over the same arrival streams and chip plans.
+pub struct FleetRun {
+    pub scenario: String,
+    pub outcomes: Vec<FleetOutcome>,
+    /// One plan per chip (index = chip id), for geometry in reports and
+    /// cache-liveness accounting.
+    pub plans: Vec<ServePlan>,
+}
+
+/// Plan a fleet and serve one scenario end to end per the CLI-level
+/// configs, mirroring [`super::run_scenario`] one level up: chip plans
+/// come from the same `plan_scenario` path (heterogeneous dims via
+/// `chip_dims`, cycled), and every router × policy pair replays the same
+/// pre-generated traffic, so comparisons are apples to apples.
+pub fn run_fleet_scenario(
+    scenario: &Scenario,
+    cfg: &ArchConfig,
+    sv: &ServeConfig,
+    fc: &FleetConfig,
+    chip_dims: &[(usize, usize)],
+    cache: &EvalCache,
+    workers: usize,
+) -> Result<FleetRun, String> {
+    let cs = CoschedConfig {
+        partition: sv.partition,
+        obs: sv.obs.clone(),
+        ..CoschedConfig::default()
+    };
+    let mut plans = Vec::with_capacity(fc.chips);
+    for c in 0..fc.chips {
+        let cfg_c = if chip_dims.is_empty() {
+            cfg.clone()
+        } else {
+            let (rows, cols) = chip_dims[c % chip_dims.len()];
+            ArchConfig {
+                pe_rows: rows,
+                pe_cols: cols,
+                ..cfg.clone()
+            }
+        };
+        // Homogeneous fleets re-plan N times, but the shared cache turns
+        // repeats into pure hits.
+        plans.push(sv.obs.timed(&format!("fleet.plan_chip{c}"), || {
+            plan_scenario(scenario, &cfg_c, &cs, cache, workers)
+        })?);
+    }
+    let opts = SimOptions {
+        borrow: sv.borrow,
+        bandwidth: sv.bandwidth,
+        flight: if sv.flight {
+            Some(crate::obs::flight::DEFAULT_FLIGHT_CAP)
+        } else {
+            None
+        },
+        ..SimOptions::default()
+    };
+    let arrivals = match &sv.trace {
+        Some(columns) => {
+            if columns.len() != scenario.tasks.len() {
+                return Err(format!(
+                    "trace file has {} columns but scenario `{}` has {} tasks",
+                    columns.len(),
+                    scenario.name,
+                    scenario.tasks.len()
+                ));
+            }
+            super::arrivals::trace_streams(columns, sv.duration_s)
+        }
+        None => {
+            super::arrivals::streams(scenario, &sv.arrivals, sv.rate_mult, sv.duration_s, sv.seed)
+        }
+    };
+    let mut outcomes = Vec::with_capacity(fc.routers.len() * sv.policies.len());
+    for &router in &fc.routers {
+        for &policy in &sv.policies {
+            outcomes.push(sv.obs.timed(
+                &format!("fleet.simulate.{}.{}", router.name(), policy.name()),
+                || simulate_fleet(scenario, &plans, policy, router, fc, opts, &arrivals, &sv.obs),
+            ));
+        }
+    }
+    Ok(FleetRun {
+        scenario: scenario.name.clone(),
+        outcomes,
+        plans,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cosched::TaskSpec;
+    use crate::workloads::synthetic;
+
+    use super::super::arrivals::{streams, ArrivalProcess};
+    use super::super::interference::BandwidthModel;
+
+    #[test]
+    fn router_and_admission_names_roundtrip() {
+        for r in RouterPolicy::ALL {
+            assert_eq!(RouterPolicy::from_name(r.name()), Some(r));
+        }
+        assert_eq!(RouterPolicy::from_name("lru"), None);
+        for a in [AdmissionPolicy::All, AdmissionPolicy::Deadline] {
+            assert_eq!(AdmissionPolicy::from_name(a.name()), Some(a));
+        }
+        assert_eq!(AdmissionPolicy::from_name("open"), None);
+    }
+
+    #[test]
+    fn parse_routers_grammar() {
+        assert_eq!(parse_routers("all").unwrap(), RouterPolicy::ALL.to_vec());
+        assert_eq!(
+            parse_routers("jsq, round-robin, jsq").unwrap(),
+            vec![RouterPolicy::Jsq, RouterPolicy::RoundRobin],
+            "deduped, order kept"
+        );
+        let err = parse_routers("jqs").unwrap_err();
+        assert!(err.contains("unknown router `jqs`"), "{err}");
+        assert!(err.contains("did you mean `jsq`?"), "{err}");
+        assert!(parse_routers(" , ").is_err());
+    }
+
+    #[test]
+    fn chip_dims_parse_and_reject() {
+        assert_eq!(parse_chip_dims("16x16").unwrap(), vec![(16, 16)]);
+        assert_eq!(
+            parse_chip_dims(" 32x16 , 8x24 ").unwrap(),
+            vec![(32, 16), (8, 24)]
+        );
+        assert!(parse_chip_dims("16").is_err());
+        assert!(parse_chip_dims("0x16").is_err());
+        assert!(parse_chip_dims("axb").is_err());
+        assert!(parse_chip_dims("").is_err());
+    }
+
+    #[test]
+    fn run_fleet_scenario_covers_routers_and_policies() {
+        let cfg = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        let sv = ServeConfig {
+            policies: vec![Policy::Edf],
+            duration_s: 0.05,
+            ..ServeConfig::default()
+        };
+        let fc = FleetConfig {
+            chips: 2,
+            routers: vec![RouterPolicy::RoundRobin, RouterPolicy::Jsq],
+            ..FleetConfig::default()
+        };
+        // Heterogeneous dims cycle over the chip count.
+        let run = run_fleet_scenario(
+            &tiny_scenario(),
+            &cfg,
+            &sv,
+            &fc,
+            &[(16, 16), (16, 8)],
+            &EvalCache::new(),
+            1,
+        )
+        .unwrap();
+        assert_eq!(run.plans.len(), 2);
+        assert_eq!(run.outcomes.len(), 2, "2 routers x 1 policy");
+        assert!(run.outcomes.iter().all(|o| o.policy == Policy::Edf));
+        // The second chip was planned on the narrower 16x8 array: its
+        // regions must fit inside 8 columns.
+        assert!(run.plans[1].regions.iter().all(|r| r.col_end() <= 8));
+    }
+
+    #[test]
+    fn fleet_config_from_cli_parses_and_rejects() {
+        let parse = |v: &[&str]| {
+            let mut raw = vec!["fleet".to_string()];
+            raw.extend(v.iter().map(|x| x.to_string()));
+            let known: Vec<(&str, bool)> = FLEET_FLAGS.to_vec();
+            crate::cli::Args::parse(&raw, &known).unwrap()
+        };
+        let fc = FleetConfig::from_cli(&parse(&[])).unwrap();
+        assert_eq!(fc, FleetConfig::default());
+        let fc = FleetConfig::from_cli(&parse(&[
+            "--chips", "5", "--router", "jsq", "--admission", "deadline", "--autoscale",
+            "--min-chips", "2", "--cold-frac", "0.5",
+        ]))
+        .unwrap();
+        assert_eq!(fc.chips, 5);
+        assert_eq!(fc.routers, vec![RouterPolicy::Jsq]);
+        assert_eq!(fc.admission, AdmissionPolicy::Deadline);
+        assert_eq!(fc.autoscale.unwrap().min_chips, 2);
+        assert_eq!(fc.warm, Some((0.5, 0.05)));
+        assert!(FleetConfig::from_cli(&parse(&["--chips", "0"])).is_err());
+        let err = FleetConfig::from_cli(&parse(&["--admission", "deadlnie"])).unwrap_err();
+        assert!(err.contains("did you mean `deadline`?"), "{err}");
+        assert!(FleetConfig::from_cli(&parse(&["--autoscale", "--min-chips", "9"])).is_err());
+        assert!(FleetConfig::from_cli(&parse(&["--cold-frac", "-1"])).is_err());
+    }
+
+    fn tiny_scenario() -> crate::cosched::Scenario {
+        let mut a = synthetic::aw_chain(3.0, 4);
+        a.name = "chain_a".into();
+        let mut b = synthetic::pointwise_conv_segment(3);
+        b.name = "chain_b".into();
+        crate::cosched::Scenario::new(
+            "tiny",
+            vec![TaskSpec::new(a, 30.0), TaskSpec::new(b, 60.0)],
+        )
+    }
+
+    fn tiny_fleet() -> (crate::cosched::Scenario, Vec<ServePlan>) {
+        let cfg = ArchConfig {
+            pe_rows: 16,
+            pe_cols: 16,
+            ..ArchConfig::default()
+        };
+        let cache = EvalCache::new();
+        let sc = tiny_scenario();
+        let plans: Vec<ServePlan> = (0..3)
+            .map(|_| plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 1).unwrap())
+            .collect();
+        (sc, plans)
+    }
+
+    #[test]
+    fn fleet_accounting_and_determinism() {
+        let (sc, plans) = tiny_fleet();
+        let arrivals = streams(
+            &sc,
+            &ArrivalProcess::Diurnal { period_s: 0.0, amp: 0.8 },
+            4.0,
+            0.2,
+            7,
+        );
+        let fc = FleetConfig::default();
+        let opts = SimOptions {
+            bandwidth: BandwidthModel::Static,
+            ..SimOptions::default()
+        };
+        for router in RouterPolicy::ALL {
+            let out = simulate_fleet(
+                &sc,
+                &plans,
+                Policy::Edf,
+                router,
+                &fc,
+                opts,
+                &arrivals,
+                &Obs::disabled(),
+            );
+            let arrived: u64 = arrivals.iter().map(|a| a.len() as u64).sum();
+            assert_eq!(out.total_requests(), arrived, "{}", router.name());
+            // Conservation: every arrival completed, was dropped, or was
+            // rejected at the front door — nothing vanishes.
+            let served: u64 = out.tasks.iter().map(|m| m.completed + m.dropped).sum();
+            assert_eq!(served + out.rejected, arrived, "{}", router.name());
+            // Every request the router placed landed on some chip.
+            let routed: u64 = out.chips.iter().map(|c| c.routed).sum();
+            assert_eq!(routed + out.rejected, arrived);
+            assert!(out.span_s > 0.0);
+            assert!(out.cost_pe_s_per_m > 0.0, "completed work has a cost");
+            // Same inputs, same outcome — the determinism contract.
+            let again = simulate_fleet(
+                &sc,
+                &plans,
+                Policy::Edf,
+                router,
+                &fc,
+                opts,
+                &arrivals,
+                &Obs::disabled(),
+            );
+            assert_eq!(out.tasks, again.tasks);
+            assert_eq!(out.chips, again.chips);
+            assert_eq!(out.span_s, again.span_s);
+        }
+    }
+
+    #[test]
+    fn warm_model_counts_cold_loads() {
+        let (sc, plans) = tiny_fleet();
+        let arrivals = streams(&sc, &ArrivalProcess::Periodic, 1.0, 0.2, 0);
+        let fc = FleetConfig {
+            warm: Some((0.5, 0.001)),
+            ..FleetConfig::default()
+        };
+        let out = simulate_fleet(
+            &sc,
+            &plans,
+            Policy::Fifo,
+            RouterPolicy::RoundRobin,
+            &fc,
+            SimOptions::default(),
+            &arrivals,
+            &Obs::disabled(),
+        );
+        let completed: u64 = out.chips.iter().map(|c| c.completed).sum();
+        let cold: u64 = out.chips.iter().map(|c| c.cold_loads).sum();
+        assert!(completed > 0);
+        assert!(cold >= 1, "a fresh fleet pays at least one cold load");
+        // Cold loads only ever slow things down: the always-warm fleet
+        // serves every task at least as fast at every percentile.
+        let warm_free = simulate_fleet(
+            &sc,
+            &plans,
+            Policy::Fifo,
+            RouterPolicy::RoundRobin,
+            &FleetConfig::default(),
+            SimOptions::default(),
+            &arrivals,
+            &Obs::disabled(),
+        );
+        for (m_cold, m_warm) in out.tasks.iter().zip(&warm_free.tasks) {
+            assert!(m_warm.p99_ms <= m_cold.p99_ms + 1e-9);
+        }
+    }
+
+    #[test]
+    fn autoscaler_drains_surplus_chips() {
+        let (sc, plans) = tiny_fleet();
+        // Light load: backlog stays near zero, so the scaler drains down
+        // to min_chips and the drained chips stop accruing up-time.
+        let arrivals = streams(&sc, &ArrivalProcess::Periodic, 1.0, 0.2, 0);
+        let fc = FleetConfig {
+            autoscale: Some(AutoscaleConfig {
+                min_chips: 1,
+                spinup_s: 0.01,
+                high_backlog_s: 1e6,
+                low_backlog_s: 1e6, // always below: drain at every tick
+                interval_s: 0.001,
+            }),
+            ..FleetConfig::default()
+        };
+        let out = simulate_fleet(
+            &sc,
+            &plans,
+            Policy::Edf,
+            RouterPolicy::Jsq,
+            &fc,
+            SimOptions::default(),
+            &arrivals,
+            &Obs::disabled(),
+        );
+        assert!(out.scale_events >= 2, "two surplus chips drained");
+        let up: Vec<f64> = out.chips.iter().map(|c| c.up_s).collect();
+        assert!(up[0] >= up[2], "highest-index chips drain first: {up:?}");
+        assert!(up.iter().all(|&u| u <= out.span_s + 1e-9));
+        // All traffic still accounted for.
+        let arrived: u64 = arrivals.iter().map(|a| a.len() as u64).sum();
+        assert_eq!(out.total_requests(), arrived);
+    }
+
+    #[test]
+    fn deadline_admission_sheds_hopeless_load() {
+        let (sc, plans) = tiny_fleet();
+        // Extreme overload: far more work than three chips can serve, so
+        // deadline admission must shed some of it.
+        let arrivals = streams(&sc, &ArrivalProcess::Periodic, 64.0, 0.05, 0);
+        let fc = FleetConfig {
+            admission: AdmissionPolicy::Deadline,
+            ..FleetConfig::default()
+        };
+        let out = simulate_fleet(
+            &sc,
+            &plans,
+            Policy::Edf,
+            RouterPolicy::Jsq,
+            &fc,
+            SimOptions::default(),
+            &arrivals,
+            &Obs::disabled(),
+        );
+        assert!(out.rejected > 0, "overload must trigger shedding");
+        assert!(
+            out.total_missed() >= out.rejected,
+            "every rejection counts as a miss"
+        );
+        let arrived: u64 = arrivals.iter().map(|a| a.len() as u64).sum();
+        assert_eq!(out.total_requests(), arrived);
+    }
+}

@@ -21,14 +21,24 @@
 //! land in `metrics`, and `pipeorgan serve` + `report::serve` emit it
 //! all.
 //!
+//! The event loop itself is array-agnostic (`core`): a versioned
+//! binary-heap [`EventCore`] driving any [`ServiceModel`]. The
+//! single-array simulator implements the trait once (`engine`'s
+//! [`ArrayModel`]); `fleet` composes N of them behind a front-door
+//! router with admission control and an autoscaler — fleet-scale serving
+//! over the same deterministic core (`pipeorgan fleet` +
+//! `report::fleet`).
+//!
 //! Everything is a pure function of `(scenario, config, seed)`: arrivals
 //! are pre-materialized, events tie-break on sequence numbers, and all
 //! state lives in task-indexed vectors, so two runs with one seed are
 //! bit-identical and policy comparisons share one arrival replay.
 
 mod arrivals;
+mod core;
 mod dispatch;
 mod engine;
+mod fleet;
 mod interference;
 mod metrics;
 
@@ -36,13 +46,20 @@ use crate::cosched::PartitionKind;
 
 pub use arrivals::{
     arrival_times, parse_trace_columns, streams, trace_streams, ArrivalProcess,
-    DEFAULT_JITTER_FRAC,
+    DEFAULT_DIURNAL_AMP, DEFAULT_JITTER_FRAC,
 };
 pub use dispatch::{select_next, Policy, Request};
 pub use engine::{
-    plan_scenario, run_scenario, simulate, simulate_traced, simulate_with_scratch, ServePlan,
-    ServeRun, ServedCost, ServiceStage, SimOptions, SimScratch, TraceEvent, TraceKind,
+    plan_scenario, push_arrivals, run_scenario, simulate, simulate_traced, simulate_with_scratch,
+    ArrayModel, ServePlan, ServeRun, ServedCost, ServiceStage, SimOptions, SimScratch, TraceEvent,
+    TraceKind,
 };
+pub use fleet::{
+    parse_chip_dims, parse_routers, run_fleet_scenario, simulate_fleet, AdmissionPolicy,
+    AutoscaleConfig, ChipStats, FleetConfig, FleetOutcome, FleetRun, RouterPolicy, FLEET_FLAGS,
+};
+// `self::` disambiguates from the `core` builtin crate in use paths.
+pub use self::core::{drive, CoreEvent, EventCore, ServiceModel};
 pub use interference::{
     allocate_bandwidth, allocate_bandwidth_into, donated_bandwidth, donated_rate, BandwidthCache,
     BandwidthModel,
@@ -117,16 +134,17 @@ impl ServeConfig {
     pub fn from_cli(args: &crate::cli::Args, seed: u64) -> Result<ServeConfig, String> {
         let defaults = ServeConfig::default();
         let policies = parse_policies(args.get_or("policy", "all"))?;
-        let partition_name = args.get_or("partition", defaults.partition.name());
-        let partition = PartitionKind::from_name(partition_name).ok_or_else(|| {
-            format!("unknown partition kind `{partition_name}` (known: bands, guillotine)")
-        })?;
-        let arrivals_name = args.get_or("arrivals", "periodic");
-        let arrivals = ArrivalProcess::from_name(arrivals_name).ok_or_else(|| {
-            format!(
-                "unknown arrival process `{arrivals_name}` (known: periodic, jittered, poisson)"
-            )
-        })?;
+        // Closed-set flags go through `cli::Args::get_enum` for uniform
+        // rejection messages (full variant list + did-you-mean).
+        let partition_name =
+            args.get_enum("partition", defaults.partition.name(), &["bands", "guillotine"])?;
+        let partition = PartitionKind::from_name(partition_name).expect("validated variant");
+        let arrivals_name = args.get_enum(
+            "arrivals",
+            "periodic",
+            &["periodic", "jittered", "poisson", "diurnal"],
+        )?;
+        let arrivals = ArrivalProcess::from_name(arrivals_name).expect("validated variant");
         let duration_s = args.get_f64("duration-s", defaults.duration_s)?;
         if !(duration_s > 0.0 && duration_s.is_finite()) {
             return Err(format!(
@@ -139,10 +157,8 @@ impl ServeConfig {
                 "flag `--rate-mult` must be a positive finite multiplier, got `{rate_mult}`"
             ));
         }
-        let bandwidth_name = args.get_or("bandwidth", "dynamic");
-        let bandwidth = BandwidthModel::from_name(bandwidth_name).ok_or_else(|| {
-            format!("unknown bandwidth model `{bandwidth_name}` (known: dynamic, static)")
-        })?;
+        let bandwidth_name = args.get_enum("bandwidth", "dynamic", &["dynamic", "static"])?;
+        let bandwidth = BandwidthModel::from_name(bandwidth_name).expect("validated variant");
         let trace = match args.get("trace-file") {
             Some(path) => {
                 // A captured trace carries its own timing; a synthetic
@@ -173,7 +189,9 @@ impl ServeConfig {
             sweep: args.has("sweep"),
             seed,
             obs: crate::obs::Obs::from_cli(args),
-            flight: args.get("flight-out").is_some(),
+            // `--out-dir` means "write every artifact", so it arms the
+            // flight recorder exactly like an explicit `--flight-out`.
+            flight: args.get("flight-out").is_some() || args.get("out-dir").is_some(),
             trace,
         })
     }
@@ -187,14 +205,12 @@ fn parse_policies(spec: &str) -> Result<Vec<Policy>, String> {
     let mut out = Vec::new();
     for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let p = Policy::from_name(name).ok_or_else(|| {
-            format!(
-                "unknown policy `{name}` (known: {})",
-                Policy::ALL
-                    .iter()
-                    .map(|p| p.name())
-                    .collect::<Vec<_>>()
-                    .join(", ")
-            )
+            let names: Vec<&str> = Policy::ALL.iter().map(|p| p.name()).collect();
+            let mut msg = format!("unknown policy `{name}` (known: {})", names.join(", "));
+            if let Some(hint) = crate::cli::suggest(name, &names) {
+                msg.push_str(&format!("; did you mean `{hint}`?"));
+            }
+            msg
         })?;
         if !out.contains(&p) {
             out.push(p);
@@ -239,6 +255,7 @@ pub const SERVE_FLAGS: &[(&str, bool)] = &[
     ("attr-out", true),
     ("flight-out", true),
     ("noc-out", true),
+    ("out-dir", true),
 ];
 
 #[cfg(test)]
@@ -295,6 +312,32 @@ mod tests {
         assert!(sv.borrow && sv.sweep);
         assert_eq!(sv.bandwidth, BandwidthModel::Static);
         assert_eq!(sv.seed, 7, "the global seed threads through");
+    }
+
+    #[test]
+    fn diurnal_arrivals_parse_by_name() {
+        let sv = parse_sv(&["serve", "--arrivals", "diurnal"]).unwrap();
+        assert_eq!(
+            sv.arrivals,
+            ArrivalProcess::Diurnal { period_s: 0.0, amp: DEFAULT_DIURNAL_AMP }
+        );
+    }
+
+    #[test]
+    fn enum_flag_errors_carry_did_you_mean_hints() {
+        let err = parse_sv(&["serve", "--partition", "bnads"]).unwrap_err();
+        assert!(err.contains("did you mean `bands`?"), "{err}");
+        let err = parse_sv(&["serve", "--arrivals", "diurnl"]).unwrap_err();
+        assert!(err.contains("did you mean `diurnal`?"), "{err}");
+        let err = parse_sv(&["serve", "--policy", "edv"]).unwrap_err();
+        assert!(err.contains("did you mean `edf`?"), "{err}");
+    }
+
+    #[test]
+    fn out_dir_arms_flight_and_obs() {
+        let sv = parse_sv(&["serve", "--out-dir", "reports/artifacts"]).unwrap();
+        assert!(sv.flight, "--out-dir writes the flight snapshot");
+        assert!(sv.obs.is_enabled(), "--out-dir writes the Perfetto trace");
     }
 
     #[test]

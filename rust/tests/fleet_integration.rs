@@ -1,0 +1,231 @@
+//! Integration tests for the fleet layer and the event-core split it
+//! rides on: the single-array pipeline (`push_arrivals` + `drive` +
+//! `finish`) reproduces `simulate` bit for bit, load-aware routers never
+//! miss more than round-robin on any canned scenario under the diurnal
+//! curve (the acceptance criterion), fleet metrics are bit-identical
+//! across planner worker counts and across reruns, accounting closes at
+//! the fleet level, and the autoscaler/admission controller behave under
+//! overload.
+
+use pipeorgan::config::ArchConfig;
+use pipeorgan::cosched::{canned_scenarios, scenario_by_name, CoschedConfig};
+use pipeorgan::dse::EvalCache;
+use pipeorgan::obs::Obs;
+use pipeorgan::serve::{
+    drive, plan_scenario, push_arrivals, run_fleet_scenario, simulate, simulate_fleet,
+    AdmissionPolicy, ArrayModel, ArrivalProcess, AutoscaleConfig, BandwidthModel, EventCore,
+    FleetConfig, Policy, RouterPolicy, ServeConfig, ServePlan, SimOptions,
+};
+
+fn small_cfg() -> ArchConfig {
+    ArchConfig {
+        pe_rows: 16,
+        pe_cols: 16,
+        ..ArchConfig::default()
+    }
+}
+
+const DIURNAL: ArrivalProcess = ArrivalProcess::Diurnal {
+    period_s: 0.0,
+    amp: 0.8,
+};
+
+fn identical_plans(
+    sc: &pipeorgan::cosched::Scenario,
+    cfg: &ArchConfig,
+    cache: &EvalCache,
+    n: usize,
+) -> Vec<ServePlan> {
+    (0..n)
+        .map(|_| plan_scenario(sc, cfg, &CoschedConfig::default(), cache, 2).unwrap())
+        .collect()
+}
+
+/// The API-split regression gate: driving a fresh [`ArrayModel`] through
+/// the shared event core by hand must reproduce [`simulate`] bit for bit
+/// — trace, metrics, and span — for every policy.
+#[test]
+fn single_array_run_is_bit_identical_through_the_event_core() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let plan = plan_scenario(&sc, &cfg, &CoschedConfig::default(), &cache, 2).unwrap();
+    let arrivals = pipeorgan::serve::streams(&sc, &ArrivalProcess::Poisson, 2.0, 0.05, 7);
+    for &policy in Policy::ALL.iter() {
+        let reference = simulate(&sc, &plan, policy, &arrivals, SimOptions::default());
+        let obs = Obs::disabled();
+        let mut events = EventCore::new();
+        push_arrivals(&mut events, &plan, &arrivals);
+        let mut model = ArrayModel::new(&sc, &plan, policy, SimOptions::default(), &obs);
+        let last_s = drive(&mut model, &mut events);
+        let manual = model.finish(last_s.max(1e-12));
+        assert_eq!(manual.trace, reference.trace, "{}", policy.name());
+        assert_eq!(manual.tasks, reference.tasks, "{}", policy.name());
+        assert_eq!(manual.span_s, reference.span_s, "{}", policy.name());
+    }
+}
+
+/// The acceptance criterion: on every canned scenario, at the same
+/// diurnal arrival replay over identical chips, the load-aware routers
+/// (JSQ, and affinity which spills to JSQ under backlog) never miss more
+/// than blind round-robin. With the static bandwidth split and per-task
+/// home regions, service times are constant per (chip, task), so routing
+/// to the least-backlogged chip keeps every queue pointwise no longer
+/// than round-robin's — the miss set can only shrink.
+#[test]
+fn jsq_and_affinity_never_worse_than_round_robin_on_every_canned_scenario() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let fc = FleetConfig {
+        chips: 3,
+        routers: RouterPolicy::ALL.to_vec(),
+        ..FleetConfig::default()
+    };
+    let opts = SimOptions {
+        bandwidth: BandwidthModel::Static,
+        ..SimOptions::default()
+    };
+    let obs = Obs::disabled();
+    for sc in canned_scenarios() {
+        let plans = identical_plans(&sc, &cfg, &cache, fc.chips);
+        for mult in [1.0, 8.0] {
+            let arrivals = pipeorgan::serve::streams(&sc, &DIURNAL, mult, 0.05, 0);
+            let run = |router| {
+                simulate_fleet(&sc, &plans, Policy::Fifo, router, &fc, opts, &arrivals, &obs)
+            };
+            let rr = run(RouterPolicy::RoundRobin);
+            for router in [RouterPolicy::Jsq, RouterPolicy::Affinity] {
+                let out = run(router);
+                assert!(
+                    out.miss_rate() <= rr.miss_rate() + 1e-12,
+                    "{} @ {mult}x: {} miss rate {} > round-robin {}",
+                    sc.name,
+                    router.name(),
+                    out.miss_rate(),
+                    rr.miss_rate()
+                );
+            }
+        }
+    }
+}
+
+/// Planner worker counts parallelize the search without changing its
+/// result, and the serving replay downstream is a pure function of the
+/// plan — so the whole fleet study is bit-identical across 1/2/4 workers
+/// and across reruns at the same seed.
+#[test]
+fn fleet_metrics_bit_identical_across_worker_counts_and_reruns() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let sv = ServeConfig {
+        policies: vec![Policy::Edf],
+        arrivals: DIURNAL,
+        duration_s: 0.05,
+        rate_mult: 2.0,
+        seed: 11,
+        ..ServeConfig::default()
+    };
+    let fc = FleetConfig {
+        chips: 2,
+        routers: vec![RouterPolicy::Jsq],
+        ..FleetConfig::default()
+    };
+    let runs: Vec<_> = [1usize, 2, 4, 2]
+        .iter()
+        .map(|&w| run_fleet_scenario(&sc, &cfg, &sv, &fc, &[], &cache, w).unwrap())
+        .collect();
+    let base = &runs[0].outcomes[0];
+    assert!(base.total_requests() > 0);
+    for run in &runs[1..] {
+        let o = &run.outcomes[0];
+        assert_eq!(o.tasks, base.tasks);
+        assert_eq!(o.chips, base.chips);
+        assert_eq!(o.span_s, base.span_s);
+        assert_eq!(o.rejected, base.rejected);
+        assert_eq!(o.cost_pe_s_per_m, base.cost_pe_s_per_m);
+    }
+}
+
+/// Fleet-level accounting closes on every canned scenario and router:
+/// everything that arrived was completed, dropped, or rejected at the
+/// front door, and per-chip routed counts sum to the admitted total.
+#[test]
+fn fleet_accounting_closes_on_every_canned_scenario() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sv = ServeConfig {
+        policies: vec![Policy::Fifo],
+        arrivals: DIURNAL,
+        duration_s: 0.05,
+        rate_mult: 4.0,
+        seed: 3,
+        ..ServeConfig::default()
+    };
+    let fc = FleetConfig {
+        chips: 3,
+        routers: RouterPolicy::ALL.to_vec(),
+        ..FleetConfig::default()
+    };
+    for sc in canned_scenarios() {
+        let run = run_fleet_scenario(&sc, &cfg, &sv, &fc, &[], &cache, 2).unwrap();
+        assert_eq!(run.outcomes.len(), RouterPolicy::ALL.len());
+        assert_eq!(run.plans.len(), fc.chips);
+        for o in &run.outcomes {
+            let arrived = o.total_requests();
+            let served: u64 = o.tasks.iter().map(|m| m.completed + m.dropped).sum();
+            assert_eq!(
+                served + o.rejected,
+                arrived,
+                "{} {}: accounting leak",
+                sc.name,
+                o.router.name()
+            );
+            let routed: u64 = o.chips.iter().map(|c| c.routed).sum();
+            assert_eq!(routed + o.rejected, arrived);
+            assert_eq!(o.chips.len(), fc.chips);
+            for c in &o.chips {
+                assert!(c.up_s <= o.span_s + 1e-9, "{}: chip {} up too long", sc.name, c.chip);
+            }
+            assert!(o.cost_pe_s_per_m > 0.0);
+        }
+    }
+}
+
+/// Under heavy overload with deadline admission and the autoscaler armed,
+/// the front door sheds load it provably cannot serve (every rejection is
+/// also counted as a miss) and chip up-time never exceeds the span; a
+/// heterogeneous chip list must produce chips of different sizes.
+#[test]
+fn admission_autoscale_and_heterogeneous_chips_under_overload() {
+    let cfg = small_cfg();
+    let cache = EvalCache::new();
+    let sc = scenario_by_name("xr-core").unwrap();
+    let sv = ServeConfig {
+        policies: vec![Policy::Edf],
+        arrivals: DIURNAL,
+        duration_s: 0.05,
+        rate_mult: 64.0,
+        seed: 5,
+        ..ServeConfig::default()
+    };
+    let fc = FleetConfig {
+        chips: 3,
+        routers: vec![RouterPolicy::Jsq],
+        admission: AdmissionPolicy::Deadline,
+        autoscale: Some(AutoscaleConfig::default()),
+        ..FleetConfig::default()
+    };
+    let dims = [(16usize, 16usize), (16, 8)];
+    let run = run_fleet_scenario(&sc, &cfg, &sv, &fc, &dims, &cache, 2).unwrap();
+    let o = &run.outcomes[0];
+    assert!(o.rejected > 0, "64x overload must trip deadline admission");
+    assert!(o.total_missed() >= o.rejected, "rejections count as misses");
+    for c in &o.chips {
+        assert!(c.up_s <= o.span_s + 1e-9);
+    }
+    // Dims cycle across chips: 0 and 2 are full arrays, 1 is half-width.
+    let pes: Vec<usize> = o.chips.iter().map(|c| c.pes).collect();
+    assert_eq!(pes[0], pes[2]);
+    assert!(pes[1] < pes[0], "chip 1 should be the 16x8 instance: {pes:?}");
+}
